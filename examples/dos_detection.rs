@@ -1,0 +1,23 @@
+//! Synthesized DoS-attack detection on AS router graphs (Table 3 / S2).
+//!
+//! ```bash
+//! cargo run --release --offline --example dos_detection [-- --nodes 2000 --trials 50 --extended]
+//! ```
+
+use finger::cli::Args;
+use finger::coordinator::{experiments, report};
+use finger::datasets::OregonConfig;
+
+fn main() {
+    let args = Args::from_env();
+    let cfg = OregonConfig { nodes: args.get_parsed("nodes", 2000usize), ..Default::default() };
+    let trials = args.get_parsed("trials", 25usize);
+    let extended = args.flag("extended");
+    let xs = [0.01, 0.03, 0.05, 0.10];
+    println!(
+        "Oregon-like snapshots: n={} snapshots={} | {} trials per X | top-2 ranking\n",
+        cfg.nodes, cfg.snapshots, trials
+    );
+    let rows = experiments::run_dos(&cfg, &xs, trials, extended, 7);
+    println!("{}", report::dos_table(&rows, &xs));
+}

@@ -1,0 +1,58 @@
+//! Quickstart: exact vs FINGER entropies and JS distances on small graphs.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use finger::distance::{jsdist_exact, jsdist_fast, jsdist_incremental};
+use finger::entropy::{exact_vnge, finger_hhat, finger_htilde, FingerState};
+use finger::graph::DeltaGraph;
+use finger::util::{fmt, timer::time_it, Pcg64};
+
+fn main() {
+    let mut rng = Pcg64::new(7);
+    let n = 1000;
+    let g = finger::generators::erdos_renyi_avg_degree(n, 20.0, &mut rng);
+    println!("ER graph: n={} m={}", g.num_nodes(), g.num_edges());
+
+    let (h, t_h) = time_it(|| exact_vnge(&g));
+    let (hhat, t_hat) = time_it(|| finger_hhat(&g));
+    let (htil, t_til) = time_it(|| finger_htilde(&g));
+    println!("exact H    = {h:.6}  ({})", fmt::secs(t_h));
+    println!("FINGER-Ĥ  = {hhat:.6}  ({}, CTRR {})", fmt::secs(t_hat),
+             fmt::pct(finger::util::timer::ctrr(t_h, t_hat)));
+    println!("FINGER-H̃ = {htil:.6}  ({}, CTRR {})", fmt::secs(t_til),
+             fmt::pct(finger::util::timer::ctrr(t_h, t_til)));
+    assert!(htil <= hhat + 1e-9 && hhat <= h + 1e-6, "H̃ ≤ Ĥ ≤ H violated");
+
+    // --- JS distance between two perturbed snapshots (Algorithm 1) ---
+    let mut g2 = g.clone();
+    let edges: Vec<_> = g.edges().take(200).collect();
+    for (i, j, _) in edges {
+        g2.remove_edge(i, j);
+    }
+    let (d_fast, t_fast) = time_it(|| jsdist_fast(&g, &g2));
+    let (d_exact, t_exact) = time_it(|| jsdist_exact(&g, &g2));
+    println!("\nJSdist fast  = {d_fast:.6} ({})", fmt::secs(t_fast));
+    println!("JSdist exact = {d_exact:.6} ({})", fmt::secs(t_exact));
+
+    // --- incremental JS distance over a delta stream (Algorithm 2) ---
+    let mut state = FingerState::new(g.clone());
+    let mut total = 0.0;
+    let (_, t_inc) = time_it(|| {
+        for step in 0..50 {
+            let mut d = DeltaGraph::new();
+            for _ in 0..20 {
+                let i = rng.below(n) as u32;
+                let j = (i + 1 + rng.below(n - 1) as u32) % n as u32;
+                if i != j {
+                    d.add(i, j, rng.uniform(0.2, 1.0));
+                }
+            }
+            total += jsdist_incremental(&mut state, &d.coalesced());
+            let _ = step;
+        }
+    });
+    println!("\n50 incremental JSdist windows in {} (Σ = {total:.4})", fmt::secs(t_inc));
+    println!("final H̃ after stream: {:.6}", state.htilde());
+}

@@ -1,0 +1,57 @@
+//! XLA offload check: run Q / Ĥ / JSdist through the AOT artifacts (L2 JAX
+//! graphs + L1 Pallas kernels compiled to HLO, executed via PJRT) and
+//! cross-check against the native Rust implementations.
+//!
+//! Requires `make artifacts` first.
+//!
+//! ```bash
+//! cargo run --release --offline --example xla_offload [-- --artifacts artifacts]
+//! ```
+
+use finger::cli::Args;
+use finger::entropy::{finger_hhat, quadratic_q};
+use finger::runtime::{Runtime, XlaEntropy};
+use finger::util::{fmt, timer::time_it, Pcg64};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+    let rt = Runtime::load(&dir)?;
+    println!("PJRT platform: {} | artifacts: {:?}", rt.platform(), rt.manifest().sizes("hhat_dense"));
+    let x = XlaEntropy::new(&rt);
+
+    let mut rng = Pcg64::new(11);
+    let mut worst_q = 0.0f64;
+    let mut worst_h = 0.0f64;
+    for &n in &[40usize, 100, 200] {
+        let g = finger::generators::erdos_renyi_avg_degree(n, 12.0, &mut rng);
+        let q_native = quadratic_q(&g);
+        let (q_xla, tq) = time_it(|| x.q(&g).expect("q offload"));
+        let h_native = finger_hhat(&g);
+        let (h_xla, th) = time_it(|| x.hhat(&g).expect("hhat offload"));
+        worst_q = worst_q.max((q_native - q_xla).abs());
+        worst_h = worst_h.max((h_native - h_xla).abs());
+        println!(
+            "n={n:<4} Q: native={q_native:.6} xla={q_xla:.6} ({}) | Ĥ: native={h_native:.6} xla={h_xla:.6} ({})",
+            fmt::secs(tq),
+            fmt::secs(th)
+        );
+    }
+
+    // JS distance offload on a perturbed pair
+    let a = finger::generators::erdos_renyi_avg_degree(200, 10.0, &mut rng);
+    let mut b = a.clone();
+    let edges: Vec<_> = a.edges().take(60).collect();
+    for (i, j, _) in edges {
+        b.remove_edge(i, j);
+    }
+    let native = finger::distance::jsdist_fast(&a, &b);
+    let (xla, t) = time_it(|| x.jsdist(&a, &b).expect("jsdist offload"));
+    println!("JSdist: native={native:.6} xla={xla:.6} |Δ|={:.2e} ({})", (native - xla).abs(), fmt::secs(t));
+
+    println!("\nworst |Δ|: Q={worst_q:.2e}  Ĥ={worst_h:.2e}");
+    println!("compile cache holds {} executables", rt.cached_count());
+    anyhow::ensure!(worst_q < 1e-4 && worst_h < 5e-3, "offload deviates from native");
+    println!("offload OK");
+    Ok(())
+}

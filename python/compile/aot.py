@@ -1,0 +1,62 @@
+"""AOT lowering: every L2 entry point × every artifact size → HLO **text**
+(+ manifest) under artifacts/.
+
+HLO text (not the serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--sizes 64,128,256]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DEFAULT_SIZES = (64, 128, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str, fn, arity: int, n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n, n), jax.numpy.float32)
+    lowered = jax.jit(fn).lower(*([spec] * arity))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default=",".join(str(s) for s in DEFAULT_SIZES))
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_lines = ["# name n arity path — written by compile/aot.py"]
+    for name, (fn, arity) in model.ENTRY_POINTS.items():
+        for n in sizes:
+            text = lower_entry(name, fn, arity, n)
+            fname = f"{name}_n{n}.hlo.txt"
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            manifest_lines.append(f"{name} {n} {arity} {fname}")
+            print(f"lowered {name} n={n} arity={arity} -> {fname} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(manifest_lines) - 1} artifacts")
+
+
+if __name__ == "__main__":
+    main()

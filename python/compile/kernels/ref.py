@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the L1 kernels and L2 graphs — the build-time
+correctness signal (pytest compares kernels and models against these)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def q_stats_ref(w):
+    """(row_sums, total Σ W²) of a symmetric weight matrix."""
+    return jnp.sum(w, axis=1), jnp.sum(w * w)
+
+
+def matvec_ref(w, x):
+    return w @ x
+
+
+def entropy_ref(lam):
+    safe = jnp.where(lam > 1e-12, lam, 1.0)
+    return jnp.sum(jnp.where(lam > 1e-12, -lam * jnp.log(safe), 0.0))
+
+
+def quadratic_q_ref(w):
+    """Q = 1 − c²(Σ s² + Σ_ij W²), the Lemma-1 proxy (note Σ_ij W² counts each
+    undirected edge twice, matching 2Σ_{(i,j)∈E} w²)."""
+    s = jnp.sum(w, axis=1)
+    total = jnp.sum(s)
+    c = jnp.where(total > 0, 1.0 / total, 0.0)
+    return jnp.where(total > 0, 1.0 - c * c * (jnp.sum(s * s) + jnp.sum(w * w)), 0.0)
+
+
+def lambda_max_ref(w):
+    """λ_max of L_N by dense eigendecomposition (float64-capable oracle)."""
+    s = jnp.sum(w, axis=1)
+    lap = jnp.diag(s) - w
+    total = jnp.sum(s)
+    ln = jnp.where(total > 0, lap / total, lap)
+    return jnp.linalg.eigvalsh(ln)[-1]
+
+
+def hhat_ref(w):
+    """FINGER-Ĥ = −Q ln λ_max via the dense eigensolver oracle."""
+    q = quadratic_q_ref(w)
+    lam = lambda_max_ref(w)
+    return jnp.where(lam > 1e-12, jnp.maximum(-q * jnp.log(lam), 0.0), 0.0)
+
+
+def jsdist_ref(wa, wb):
+    """FINGER-JSdist (Fast) with the oracle Ĥ."""
+    h_avg = hhat_ref((wa + wb) / 2.0)
+    div = h_avg - 0.5 * (hhat_ref(wa) + hhat_ref(wb))
+    return jnp.sqrt(jnp.maximum(div, 0.0))

@@ -1,0 +1,103 @@
+"""L1 — Pallas kernels for the FINGER dense compute path.
+
+Two kernels cover the hot spots of the L2 graphs:
+
+* ``q_stats_tiled``   — fused per-row-block reduction producing the row sums
+  (nodal strengths s_i) and the per-block Σ W² partials that the quadratic
+  proxy Q (Lemma 1) needs. One pass over W, VPU-bound.
+* ``matvec_tiled``    — blocked dense mat-vec y = W·x, the inner step of the
+  power iteration for λ_max (FINGER-Ĥ).
+
+TPU-shaped tiling (DESIGN.md §5): W is consumed in (TILE, n) row slabs via
+BlockSpec so each grid step's working set fits VMEM; on real TPU the row-slab
+matvec feeds the MXU with 128-aligned tiles. Kernels are lowered with
+``interpret=True`` — the CPU PJRT plugin cannot execute Mosaic custom-calls —
+so the artifact path runs them as plain fused HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-slab height. 128 matches the TPU lane width; callers pass n that is a
+# multiple of TILE or TILE is clamped to n.
+TILE = 128
+
+
+def _tile(n: int) -> int:
+    """Largest tile ≤ TILE that divides n (n is a power of two in artifacts)."""
+    t = min(TILE, n)
+    while n % t != 0:
+        t //= 2
+    return max(t, 1)
+
+
+def _qstats_kernel(w_ref, rows_ref, sq_ref):
+    blk = w_ref[...]                       # (T, n) row slab in VMEM
+    rows_ref[...] = jnp.sum(blk, axis=1)   # nodal strengths of this slab
+    sq_ref[...] = jnp.sum(blk * blk).reshape((1,))
+
+
+def q_stats_tiled(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Return (row_sums (n,), sumsq_partials (n/T,)) for symmetric W."""
+    n = w.shape[0]
+    t = _tile(n)
+    grid = (n // t,)
+    return pl.pallas_call(
+        _qstats_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((t, n), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), w.dtype),
+            jax.ShapeDtypeStruct((n // t,), w.dtype),
+        ],
+        interpret=True,
+    )(w)
+
+
+def _matvec_kernel(w_ref, x_ref, y_ref):
+    # (T, n) @ (n,) -> (T,), MXU-bound on real TPU
+    y_ref[...] = w_ref[...] @ x_ref[...]
+
+
+def matvec_tiled(w: jax.Array, x: jax.Array) -> jax.Array:
+    """Blocked dense mat-vec y = W·x."""
+    n = w.shape[0]
+    t = _tile(n)
+    grid = (n // t,)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), w.dtype),
+        interpret=True,
+    )(w, x)
+
+
+def _entropy_kernel(lam_ref, out_ref):
+    lam = lam_ref[...]
+    safe = jnp.where(lam > 1e-12, lam, 1.0)  # 0·ln0 := 0
+    out_ref[...] = jnp.sum(jnp.where(lam > 1e-12, -lam * jnp.log(safe), 0.0)).reshape((1,))
+
+
+def entropy_reduce(lam: jax.Array) -> jax.Array:
+    """−Σ λ ln λ over an eigenvalue vector (single-block reduction kernel)."""
+    n = lam.shape[0]
+    return pl.pallas_call(
+        _entropy_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), lam.dtype),
+        interpret=True,
+    )(lam)[0]

@@ -1,0 +1,93 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle, swept over
+shapes and weight distributions with hypothesis."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ref, vnge
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def random_symmetric(n: int, seed: int, density: float = 0.3) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0.0, 2.0, size=(n, n)) * (rng.uniform(size=(n, n)) < density)
+    w = np.triu(a, k=1)
+    w = w + w.T
+    return w.astype(np.float32)
+
+
+SIZES = st.sampled_from([2, 3, 4, 8, 16, 31, 64, 128])
+
+
+@given(n=SIZES, seed=st.integers(0, 10_000))
+def test_qstats_matches_ref(n, seed):
+    w = random_symmetric(n, seed)
+    rows, sq_part = vnge.q_stats_tiled(jnp.asarray(w))
+    rows_ref, sq_ref = ref.q_stats_ref(jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(rows), np.asarray(rows_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(jnp.sum(sq_part)), float(sq_ref), rtol=1e-5, atol=1e-5)
+
+
+@given(n=SIZES, seed=st.integers(0, 10_000))
+def test_matvec_matches_ref(n, seed):
+    w = random_symmetric(n, seed)
+    rng = np.random.default_rng(seed + 1)
+    x = rng.normal(size=n).astype(np.float32)
+    y = vnge.matvec_tiled(jnp.asarray(w), jnp.asarray(x))
+    y_ref = ref.matvec_ref(jnp.asarray(w), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+
+
+@given(n=st.sampled_from([1, 2, 5, 17, 64]), seed=st.integers(0, 10_000))
+def test_entropy_reduce_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    lam = rng.uniform(0.0, 1.0, size=n).astype(np.float32)
+    lam[rng.uniform(size=n) < 0.3] = 0.0  # exercise the 0·ln0 mask
+    got = float(vnge.entropy_reduce(jnp.asarray(lam)))
+    want = float(ref.entropy_ref(jnp.asarray(lam)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_qstats_zero_matrix():
+    w = jnp.zeros((8, 8), jnp.float32)
+    rows, sq = vnge.q_stats_tiled(w)
+    assert float(jnp.sum(rows)) == 0.0
+    assert float(jnp.sum(sq)) == 0.0
+
+
+def test_matvec_identity_like():
+    n = 16
+    w = jnp.eye(n, dtype=jnp.float32)  # not a graph, but checks the kernel math
+    x = jnp.arange(n, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(vnge.matvec_tiled(w, x)), np.asarray(x), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [8, 64, 128])
+def test_tile_divides(n):
+    t = vnge._tile(n)
+    assert n % t == 0 and 1 <= t <= vnge.TILE
+
+
+def test_tile_odd_sizes():
+    # t starts at min(TILE, n); halves until it divides n
+    assert vnge._tile(31) == 31       # 31 divides itself
+    assert vnge._tile(192) == 64      # 128 ∤ 192, halve once: 64 | 192
+    assert 96 % vnge._tile(96) == 0
+
+
+def test_kernels_jittable():
+    # kernels must lower inside jit (the artifact path requirement)
+    w = jnp.asarray(random_symmetric(16, 0))
+    f = jax.jit(lambda w: vnge.q_stats_tiled(w)[0])
+    np.testing.assert_allclose(
+        np.asarray(f(w)), np.asarray(ref.q_stats_ref(w)[0]), rtol=1e-5
+    )

@@ -1,0 +1,97 @@
+"""L2 model correctness: the kernel-backed graphs vs the dense-eigensolver
+oracle, plus AOT lowering smoke (the exact path `make artifacts` exercises)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def er_graph(n: int, p: float, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = (rng.uniform(size=(n, n)) < p).astype(np.float32)
+    w = np.triu(a, k=1)
+    return (w + w.T).astype(np.float32)
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=10, deadline=None, derandomize=True)
+def test_q_stats_matches_oracle(seed):
+    w = jnp.asarray(er_graph(64, 0.1, seed))
+    (q,) = model.q_stats(w)
+    q_ref = ref.quadratic_q_ref(w)
+    np.testing.assert_allclose(float(q), float(q_ref), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,p", [(32, 0.2), (64, 0.1), (128, 0.05)])
+def test_hhat_matches_eig_oracle(n, p):
+    w = jnp.asarray(er_graph(n, p, 7))
+    (hhat,) = model.hhat_dense(w)
+    want = float(ref.hhat_ref(w))
+    # f32 fixed-iteration power iteration vs f32 eigh oracle
+    np.testing.assert_allclose(float(hhat), want, rtol=2e-3, atol=2e-3)
+
+
+def test_hhat_empty_graph_zero():
+    w = jnp.zeros((32, 32), jnp.float32)
+    (hhat,) = model.hhat_dense(w)
+    assert float(hhat) == 0.0
+
+
+def test_jsdist_identical_zero():
+    w = jnp.asarray(er_graph(64, 0.1, 3))
+    (d,) = model.jsdist_dense(w, w)
+    assert abs(float(d)) < 1e-3
+
+
+def test_jsdist_matches_oracle():
+    wa = jnp.asarray(er_graph(64, 0.10, 11))
+    wb = jnp.asarray(er_graph(64, 0.14, 12))
+    (d,) = model.jsdist_dense(wa, wb)
+    want = float(ref.jsdist_ref(wa, wb))
+    np.testing.assert_allclose(float(d), want, rtol=5e-2, atol=5e-3)
+
+
+def test_jsdist_symmetry():
+    wa = jnp.asarray(er_graph(64, 0.1, 21))
+    wb = jnp.asarray(er_graph(64, 0.12, 22))
+    (d1,) = model.jsdist_dense(wa, wb)
+    (d2,) = model.jsdist_dense(wb, wa)
+    np.testing.assert_allclose(float(d1), float(d2), rtol=1e-5, atol=1e-6)
+
+
+def test_entry_points_table():
+    assert set(model.ENTRY_POINTS) == {"q_stats", "hhat_dense", "jsdist_dense"}
+    for _, (fn, arity) in model.ENTRY_POINTS.items():
+        assert callable(fn) and arity in (1, 2)
+
+
+@pytest.mark.parametrize("name", sorted(model.ENTRY_POINTS))
+def test_aot_lowering_produces_hlo_text(name):
+    fn, arity = model.ENTRY_POINTS[name]
+    text = aot.lower_entry(name, fn, arity, 64)
+    assert "HloModule" in text
+    assert len(text) > 200
+
+
+def test_aot_lowered_computation_is_executable():
+    # compile+run the lowered module through XLA — the compiled-artifact
+    # numerics check on the Python side (the Rust runtime_integration tests
+    # exercise the HLO-text file path itself).
+    fn, _arity = model.ENTRY_POINTS["q_stats"]
+    w = er_graph(64, 0.1, 5)
+    compiled = jax.jit(fn).lower(jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    (q,) = compiled(jnp.asarray(w))
+    q_ref = float(ref.quadratic_q_ref(jnp.asarray(w)))
+    np.testing.assert_allclose(float(q), q_ref, rtol=1e-4)
+
+
+def test_aot_hlo_text_mentions_entry_shapes():
+    # the HLO text must pin the lowered shapes (f32[64,64] inputs)
+    text = aot.lower_entry("q_stats", *model.ENTRY_POINTS["q_stats"], 64)
+    assert "f32[64,64]" in text

@@ -1,0 +1,34 @@
+//! Figure 1 (+ S1): approximation error and CTRR of Ĥ/H̃ vs exact H under
+//! varying average degree (ER, BA) and rewiring probability (WS).
+//!
+//! `cargo bench --bench fig1_approx_error [-- --full | -- --quick]`
+//! Paper shape to reproduce: AE decays as d̄ grows or p_ws shrinks; CTRR of
+//! both approximations ≥ 97%.
+
+use finger::bench::{bench_mode, BenchMode};
+use finger::coordinator::experiments::{fig1_degree_sweep, fig1_ws_sweep, GraphModel};
+use finger::coordinator::report::approx_table;
+
+fn main() {
+    let mode = bench_mode();
+    let (n, trials) = match mode {
+        BenchMode::Quick => (300, 1),
+        BenchMode::Default => (800, 3),
+        BenchMode::Full => (2000, 10), // the paper's n and trial count
+    };
+    println!("=== Fig 1 — n={n}, trials={trials} ({mode:?}) ===\n");
+
+    let degrees = [6.0, 10.0, 20.0, 50.0];
+    println!("--- Fig 1(a): ER, varying average degree ---");
+    println!("{}", approx_table(&fig1_degree_sweep(GraphModel::Er, n, &degrees, trials, 0xF161), "d̄"));
+
+    println!("--- Fig 1(b): BA, varying average degree ---");
+    println!("{}", approx_table(&fig1_degree_sweep(GraphModel::Ba, n, &degrees, trials, 0xF162), "d̄"));
+
+    println!("--- Fig 1(c) + S1: WS, varying p_ws per average degree ---");
+    let p_list = [0.01, 0.05, 0.1, 0.3, 0.6, 1.0];
+    for d in [6.0, 10.0, 20.0, 50.0] {
+        println!("WS d̄={d}");
+        println!("{}", approx_table(&fig1_ws_sweep(n, d, &p_list, trials, 0xF163), "p_ws"));
+    }
+}

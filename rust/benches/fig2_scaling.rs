@@ -1,0 +1,40 @@
+//! Figure 2 (+ S2, S3): scaled approximation error (SAE) and CTRR of Ĥ and
+//! H̃ under varying graph size n for ER/BA/WS.
+//!
+//! `cargo bench --bench fig2_scaling [-- --full | -- --quick]`
+//! Paper shape: SAE → 0 with n for ER/WS (balanced spectra, Corollaries 2–3);
+//! SAE grows ~log n for BA; CTRR → ~100% for moderate n.
+
+use finger::bench::{bench_mode, BenchMode};
+use finger::coordinator::experiments::{fig2_size_sweep, mean_ctrr, sae_trend, GraphModel};
+use finger::coordinator::report::approx_table;
+
+fn main() {
+    let mode = bench_mode();
+    let (ns, trials): (Vec<usize>, usize) = match mode {
+        BenchMode::Quick => (vec![100, 200, 400], 1),
+        BenchMode::Default => (vec![200, 400, 800, 1400], 2),
+        BenchMode::Full => (vec![500, 1000, 2000, 3000, 4000], 5),
+    };
+    println!("=== Fig 2 / S2 / S3 — ns={ns:?}, trials={trials} ({mode:?}) ===\n");
+
+    for (model, d) in [(GraphModel::Er, 20.0), (GraphModel::Ba, 20.0), (GraphModel::Ws, 20.0)] {
+        println!("--- {} (d̄={d}) ---", model.name());
+        let rows = fig2_size_sweep(model, &ns, d, 0.1, trials, 0xF200);
+        println!("{}", approx_table(&rows, "n"));
+        let (first, last) = sae_trend(&rows);
+        let (c_hat, c_til) = mean_ctrr(&rows);
+        println!(
+            "SAE(Ĥ) first→last: {first:.5} → {last:.5} ({})  |  mean CTRR: Ĥ {:.1}%  H̃ {:.1}%\n",
+            if last < first { "decaying ✓" } else { "growing (expected for BA)" },
+            100.0 * c_hat,
+            100.0 * c_til
+        );
+    }
+
+    println!("--- S2: WS at two more degrees ---");
+    for d in [6.0, 10.0] {
+        let rows = fig2_size_sweep(GraphModel::Ws, &ns, d, 0.1, trials, 0xF202);
+        println!("WS d̄={d}\n{}", approx_table(&rows, "n"));
+    }
+}

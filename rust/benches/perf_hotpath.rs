@@ -1,0 +1,138 @@
+//! §Perf: layer-by-layer hot-path microbenchmarks.
+//!
+//! `cargo bench --bench perf_hotpath [-- --full | -- --quick]`
+//!
+//! L3 native: incremental update throughput (events/s), power iteration,
+//! exact eigensolver, CSR mat-vec, streaming pipeline end-to-end.
+//! Runtime: XLA offload latency (compile-cached execute) and the
+//! native-vs-offload crossover ablation — skipped if artifacts are missing.
+
+use finger::bench::{bench_mode, BenchMode, Bencher};
+use finger::entropy::FingerState;
+use finger::graph::{Csr, DeltaGraph};
+use finger::linalg::{power_iteration, PowerOpts, SymMatrix};
+use finger::stream::{event, Pipeline, PipelineConfig};
+use finger::util::Pcg64;
+
+fn main() {
+    let mode = bench_mode();
+    let bencher = match mode {
+        BenchMode::Quick => Bencher::quick(),
+        _ => Bencher::default(),
+    };
+    let n = match mode {
+        BenchMode::Quick => 2_000,
+        BenchMode::Default => 20_000,
+        BenchMode::Full => 200_000,
+    };
+    println!("=== §Perf hot paths (n={n}, {mode:?}) ===\n");
+
+    let mut rng = Pcg64::new(0xBE9C);
+    let g = finger::generators::barabasi_albert(n, 5, &mut rng);
+    let csr = Csr::from_graph(&g);
+    println!("workload: BA n={} m={}", g.num_nodes(), g.num_edges());
+
+    // -- L3: FINGER from-scratch --
+    println!("{}", bencher.run("finger_hhat (from scratch, O(n+m))", || {
+        finger::entropy::finger_hhat(&g)
+    }).report());
+    println!("{}", bencher.run("finger_htilde (from scratch, O(n+m))", || {
+        finger::entropy::finger_htilde(&g)
+    }).report());
+
+    // -- L3: incremental update throughput --
+    let mut state = FingerState::new(g.clone());
+    let mut deltas = Vec::new();
+    let mut drng = Pcg64::new(0xD311A);
+    for _ in 0..1000 {
+        let mut d = DeltaGraph::new();
+        for _ in 0..10 {
+            let i = drng.below(n) as u32;
+            let j = (i + 1 + drng.below(n - 1) as u32) % n as u32;
+            if i != j {
+                d.add(i, j, drng.uniform(0.1, 1.0));
+            }
+        }
+        deltas.push(d.coalesced());
+    }
+    let mut k = 0usize;
+    let r = bencher.run("FingerState::apply (10-edge ΔG)", || {
+        state.apply(&deltas[k % deltas.len()]);
+        k += 1;
+    });
+    println!("{}", r.report());
+    println!(
+        "  → incremental throughput ≈ {:.2e} edge-events/s",
+        10.0 / r.mean_secs
+    );
+    let mut state2 = FingerState::new(g.clone());
+    let mut k2 = 0usize;
+    let r2 = bencher.run("jsdist_incremental (Algorithm 2, 10-edge ΔG)", || {
+        let d = &deltas[k2 % deltas.len()];
+        k2 += 1;
+        finger::distance::jsdist_incremental(&mut state2, d)
+    });
+    println!("{}", r2.report());
+
+    // -- L3: spectral substrates --
+    let x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+    let mut y = vec![0.0; n];
+    println!("{}", bencher.run("CSR matvec_laplacian", || {
+        csr.matvec_laplacian(&x, &mut y);
+        y[0]
+    }).report());
+    println!("{}", bencher.run("power_iteration λ_max", || {
+        power_iteration(&csr, &PowerOpts::default())
+    }).report());
+
+    let n_eig = match mode {
+        BenchMode::Quick => 200,
+        BenchMode::Default => 600,
+        BenchMode::Full => 2000,
+    };
+    let ge = finger::generators::erdos_renyi_avg_degree(n_eig, 20.0, &mut rng);
+    println!("{}", bencher.run(
+        &format!("exact eigensolver (tred+tql, n={n_eig}) [the O(n³) baseline]"),
+        || SymMatrix::laplacian_normalized(&ge).eigenvalues().len(),
+    ).report());
+
+    // -- L3: pipeline end-to-end --
+    let wiki = finger::datasets::wiki_stream(&finger::datasets::WikiConfig {
+        months: 24,
+        initial_nodes: 1000,
+        growth_per_month: 200,
+        ..Default::default()
+    });
+    let events = event::events_from_deltas(&wiki.deltas);
+    let n_events = events.len();
+    let res = Pipeline::new(wiki.initial.clone(), PipelineConfig::default()).run(events);
+    println!(
+        "pipeline end-to-end: {} events in {:.3}s → {:.2e} events/s (p99 window latency {:.1}µs)",
+        n_events, res.wall_secs, res.throughput, res.p99_latency * 1e6
+    );
+
+    // -- runtime: XLA offload (needs artifacts) --
+    match finger::runtime::Runtime::load("artifacts") {
+        Ok(rt) => {
+            let xe = finger::runtime::XlaEntropy::new(&rt);
+            for &gn in &[60usize, 120, 250] {
+                let sg = finger::generators::erdos_renyi_avg_degree(gn, 12.0, &mut rng);
+                let _ = xe.hhat(&sg); // warm the compile cache
+                let rx = bencher.run(&format!("XLA offload Ĥ (n={gn}, padded artifact)"), || {
+                    xe.hhat(&sg).unwrap()
+                });
+                println!("{}", rx.report());
+                let rn = bencher.run(&format!("native Ĥ (n={gn})"), || {
+                    finger::entropy::finger_hhat(&sg)
+                });
+                println!("{}", rn.report());
+                println!(
+                    "  → crossover: native is {:.1}× {} at n={gn}",
+                    (rx.mean_secs / rn.mean_secs).max(rn.mean_secs / rx.mean_secs),
+                    if rn.mean_secs < rx.mean_secs { "faster" } else { "slower" }
+                );
+            }
+        }
+        Err(e) => println!("(XLA offload skipped: {e})"),
+    }
+}

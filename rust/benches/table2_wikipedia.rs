@@ -1,0 +1,51 @@
+//! Table 2 + Table S1 + Fig 3/S4: anomaly detection in evolving wiki-like
+//! hyperlink networks — PCC/SRCC of each method against the VEO proxy plus
+//! wall-clock scoring time per dataset.
+//!
+//! `cargo bench --bench table2_wikipedia [-- --full | -- --quick]`
+//! Paper shape: FINGER-JS (Fast) best PCC and SRCC everywhere; Incremental
+//! fastest with second-best correlation.
+
+use finger::bench::{bench_mode, BenchMode};
+use finger::coordinator::experiments::run_wiki;
+use finger::coordinator::report::{series_dump, wiki_table};
+use finger::datasets::WikiConfig;
+use finger::util::fmt::Table;
+
+fn main() {
+    let mode = bench_mode();
+    let scale = match mode {
+        BenchMode::Quick => 0.4,
+        BenchMode::Default => 1.0,
+        BenchMode::Full => 6.0,
+    };
+    println!("=== Table 2 / S1 — synthetic wiki streams (scale={scale}, {mode:?}) ===\n");
+
+    let mut summary = Table::new(&["dataset", "best PCC method", "PCC", "best SRCC", "fastest"]);
+    for name in ["sen", "en", "fr", "ge"] {
+        let cfg = WikiConfig::preset(name, scale);
+        let run = run_wiki(name, &cfg);
+        println!("{}", wiki_table(&run));
+        let best_pcc =
+            run.rows.iter().max_by(|a, b| a.pcc.partial_cmp(&b.pcc).unwrap()).unwrap();
+        let best_srcc =
+            run.rows.iter().max_by(|a, b| a.srcc.partial_cmp(&b.srcc).unwrap()).unwrap();
+        let fastest = run
+            .rows
+            .iter()
+            .min_by(|a, b| a.seconds.partial_cmp(&b.seconds).unwrap())
+            .unwrap();
+        summary.row(vec![
+            name.to_string(),
+            best_pcc.method.clone(),
+            format!("{:+.4}", best_pcc.pcc),
+            best_srcc.method.clone(),
+            fastest.method.clone(),
+        ]);
+        if name == "en" {
+            println!("--- Fig 3 analog: dissimilarity series (en) ---");
+            println!("{}", series_dump(&run));
+        }
+    }
+    println!("=== summary ===\n{}", summary.render());
+}

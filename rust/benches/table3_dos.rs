@@ -1,0 +1,33 @@
+//! Table 3 + Table S2: detection rate of synthesized DoS events in dynamic
+//! AS router networks, X ∈ {1,3,5,10}% over randomized trials, top-2 ranking.
+//!
+//! `cargo bench --bench table3_dos [-- --full | -- --quick]`
+//! Paper shape: FINGER-JS (Fast) dominates at every X; all methods converge
+//! near X=10%; VEO/degree-distribution columns (S2) are not competitive.
+
+use finger::bench::{bench_mode, BenchMode};
+use finger::coordinator::experiments::run_dos;
+use finger::coordinator::report::dos_table;
+use finger::datasets::OregonConfig;
+
+fn main() {
+    let mode = bench_mode();
+    let (nodes, trials) = match mode {
+        BenchMode::Quick => (400, 8),
+        BenchMode::Default => (1200, 25),
+        BenchMode::Full => (5000, 100), // paper: 100 random instances
+    };
+    let cfg = OregonConfig { nodes, ..Default::default() };
+    let xs = [0.01, 0.03, 0.05, 0.10];
+    println!(
+        "=== Table 3 / S2 — DoS detection (n={nodes}, trials={trials}, {mode:?}) ===\n"
+    );
+    let rows = run_dos(&cfg, &xs, trials, true, 0x7AB3);
+    println!("{}", dos_table(&rows, &xs));
+
+    let finger = &rows[0];
+    println!(
+        "FINGER-JS (Fast) rates: {:?}",
+        finger.rates.iter().map(|r| format!("{:.0}%", r * 100.0)).collect::<Vec<_>>()
+    );
+}

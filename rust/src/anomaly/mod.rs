@@ -1,0 +1,139 @@
+//! Anomaly and bifurcation evaluation: consecutive-pair dissimilarity series,
+//! the temporal difference score (TDS) with its local-minimum bifurcation
+//! detector (Liu et al. 2018a), and the top-k detection-rate evaluator used
+//! by the DoS experiment (Table 3).
+
+use crate::graph::GraphSequence;
+
+/// Dissimilarity series θ_{t,t+1} between consecutive snapshots; length T−1.
+pub fn consecutive_scores(
+    seq: &GraphSequence,
+    mut dissim: impl FnMut(&crate::graph::Graph, &crate::graph::Graph) -> f64,
+) -> Vec<f64> {
+    seq.pairs().map(|(a, b)| dissim(a, b)).collect()
+}
+
+/// Temporal difference score (TDS) over a consecutive-pair series θ of
+/// length T−1:
+///   TDS(1)   = θ_{1,2}
+///   TDS(t)   = ½(θ_{t−1,t} + θ_{t,t+1})   for 2 ≤ t ≤ T−1
+///   TDS(T)   = θ_{T−1,T}
+/// Returned vector has length T (1-based t maps to index t−1).
+pub fn temporal_difference_score(theta: &[f64]) -> Vec<f64> {
+    let t_pairs = theta.len();
+    if t_pairs == 0 {
+        return Vec::new();
+    }
+    let t_total = t_pairs + 1;
+    let mut tds = Vec::with_capacity(t_total);
+    tds.push(theta[0]);
+    for t in 1..t_pairs {
+        tds.push(0.5 * (theta[t - 1] + theta[t]));
+    }
+    tds.push(theta[t_pairs - 1]);
+    tds
+}
+
+/// Bifurcation instances: indices (0-based) of strict local minima of the TDS
+/// curve, excluding the first and last measurements (supplement §L).
+pub fn detect_bifurcations(tds: &[f64]) -> Vec<usize> {
+    let n = tds.len();
+    if n < 3 {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for t in 1..n - 1 {
+        if tds[t] < tds[t - 1] && tds[t] <= tds[t + 1] {
+            out.push(t);
+        }
+    }
+    out
+}
+
+/// Top-k detection: does the anomalous pair index land in the k largest
+/// scores? (Table 3 uses k = 2 over the 8 consecutive-pair scores.)
+pub fn detected_top_k(scores: &[f64], anomaly_idx: usize, k: usize) -> bool {
+    crate::util::stats::top_k_indices(scores, k).contains(&anomaly_idx)
+}
+
+/// Detection rate over a set of trials: fraction where `detected_top_k`.
+pub struct DetectionTrial {
+    pub scores: Vec<f64>,
+    pub anomaly_idx: usize,
+}
+
+pub fn detection_rate(trials: &[DetectionTrial], k: usize) -> f64 {
+    if trials.is_empty() {
+        return 0.0;
+    }
+    let hits = trials.iter().filter(|t| detected_top_k(&t.scores, t.anomaly_idx, k)).count();
+    hits as f64 / trials.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tds_endpoints_and_interior() {
+        let theta = [1.0, 3.0, 5.0];
+        let tds = temporal_difference_score(&theta);
+        assert_eq!(tds, vec![1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(tds.len(), theta.len() + 1);
+    }
+
+    #[test]
+    fn tds_empty() {
+        assert!(temporal_difference_score(&[]).is_empty());
+    }
+
+    #[test]
+    fn bifurcation_local_min() {
+        //                      0    1    2    3    4    5
+        let tds = [3.0, 2.0, 0.5, 1.5, 1.0, 2.0];
+        let b = detect_bifurcations(&tds);
+        assert_eq!(b, vec![2, 4]);
+    }
+
+    #[test]
+    fn bifurcation_excludes_endpoints() {
+        let tds = [0.1, 5.0, 0.2]; // min at ends not counted
+        assert!(detect_bifurcations(&tds).is_empty());
+    }
+
+    #[test]
+    fn bifurcation_plateau_counts_left_edge() {
+        let tds = [3.0, 1.0, 1.0, 3.0];
+        assert_eq!(detect_bifurcations(&tds), vec![1]);
+    }
+
+    #[test]
+    fn top_k_detection() {
+        let scores = [0.1, 0.9, 0.3, 0.8];
+        assert!(detected_top_k(&scores, 1, 2));
+        assert!(detected_top_k(&scores, 3, 2));
+        assert!(!detected_top_k(&scores, 0, 2));
+    }
+
+    #[test]
+    fn detection_rate_counts() {
+        let trials = vec![
+            DetectionTrial { scores: vec![0.9, 0.1], anomaly_idx: 0 },
+            DetectionTrial { scores: vec![0.1, 0.9], anomaly_idx: 0 },
+        ];
+        assert_eq!(detection_rate(&trials, 1), 0.5);
+        assert_eq!(detection_rate(&[], 1), 0.0);
+    }
+
+    #[test]
+    fn consecutive_scores_length() {
+        use crate::graph::Graph;
+        let seq = crate::graph::GraphSequence::from_snapshots(vec![
+            Graph::new(3),
+            Graph::new(3),
+            Graph::new(3),
+        ]);
+        let s = consecutive_scores(&seq, |_, _| 1.0);
+        assert_eq!(s, vec![1.0, 1.0]);
+    }
+}

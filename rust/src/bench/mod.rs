@@ -1,0 +1,124 @@
+//! Minimal micro-benchmark harness (criterion is unavailable offline):
+//! warmup + timed iterations, reporting mean/p50/p99 and throughput. Used by
+//! every target in `rust/benches/`.
+
+use crate::util::stats::percentile;
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub p50_secs: f64,
+    pub p99_secs: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} iters={:<5} mean={:<10} p50={:<10} p99={}",
+            self.name,
+            self.iters,
+            crate::util::fmt::secs(self.mean_secs),
+            crate::util::fmt::secs(self.p50_secs),
+            crate::util::fmt::secs(self.p99_secs),
+        )
+    }
+}
+
+/// Benchmark runner with a time budget per case.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Soft time budget per case (seconds).
+    pub budget_secs: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup_iters: 2, min_iters: 5, max_iters: 200, budget_secs: 2.0 }
+    }
+}
+
+impl Bencher {
+    /// Fast settings for CI-ish runs.
+    pub fn quick() -> Self {
+        Self { warmup_iters: 1, min_iters: 3, max_iters: 30, budget_secs: 0.5 }
+    }
+
+    /// Time `f`, preventing dead-code elimination via the returned value.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::new();
+        let budget_start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters
+                && budget_start.elapsed().as_secs_f64() < self.budget_secs)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_secs: mean,
+            p50_secs: percentile(&samples, 50.0),
+            p99_secs: percentile(&samples, 99.0),
+        }
+    }
+}
+
+/// Shared CLI convention for bench targets: `--full` switches paper scale,
+/// `--quick` shrinks budgets (also honored via env FINGER_BENCH=quick|full).
+pub fn bench_mode() -> BenchMode {
+    let args: Vec<String> = std::env::args().collect();
+    let env = std::env::var("FINGER_BENCH").unwrap_or_default();
+    if args.iter().any(|a| a == "--full") || env == "full" {
+        BenchMode::Full
+    } else if args.iter().any(|a| a == "--quick") || env == "quick" {
+        BenchMode::Quick
+    } else {
+        BenchMode::Default
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BenchMode {
+    Quick,
+    Default,
+    Full,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_at_least_min_iters() {
+        let b = Bencher { warmup_iters: 0, min_iters: 7, max_iters: 10, budget_secs: 0.0 };
+        let r = b.run("noop", || 1 + 1);
+        assert_eq!(r.iters, 7);
+        assert!(r.mean_secs >= 0.0);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let b = Bencher { warmup_iters: 0, min_iters: 1, max_iters: 3, budget_secs: 100.0 };
+        let r = b.run("noop", || ());
+        assert!(r.iters <= 3);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let r = Bencher::quick().run("my-case", || 42);
+        assert!(r.report().contains("my-case"));
+    }
+}

@@ -1,0 +1,105 @@
+//! Tiny flag parser: `prog subcommand --key value --flag positional`.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = program name skipped
+    /// by `from_env`). Tokens starting with `--` become options when followed
+    /// by a non-`--` token, otherwise boolean flags.
+    pub fn parse(tokens: &[String]) -> Self {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&tokens)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        // `--key value` binds greedily, so boolean flags go last (or use
+        // --flag=true); this matches how the CLI documents itself.
+        let a = Args::parse(&toks("entropy --n 500 --model er input.edges --quick"));
+        assert_eq!(a.subcommand.as_deref(), Some("entropy"));
+        assert_eq!(a.get("n"), Some("500"));
+        assert_eq!(a.get("model"), Some("er"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional, vec!["input.edges"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse(&toks("run --seed=42"));
+        assert_eq!(a.get_parsed("seed", 0u64), 42);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(&toks("x --verbose"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn default_on_missing_or_bad() {
+        let a = Args::parse(&toks("x --n abc"));
+        assert_eq!(a.get_parsed("n", 7usize), 7);
+        assert_eq!(a.get_parsed("missing", 3.5f64), 3.5);
+    }
+
+    #[test]
+    fn empty() {
+        let a = Args::parse(&[]);
+        assert!(a.subcommand.is_none());
+    }
+}

@@ -1,0 +1,129 @@
+//! TOML-subset config parser: `[section]` headers, `key = value` pairs with
+//! string/number/bool values, `#` comments. Enough to express every knob the
+//! coordinator exposes without a serde dependency.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Parsed configuration: `section.key -> raw string value`.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: HashMap<String, String>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let v = v.trim();
+            let v = v.strip_prefix('"').and_then(|s| s.strip_suffix('"')).unwrap_or(v);
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            values.insert(key, v.to_string());
+        }
+        Ok(Self { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            _ => default,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# pipeline settings
+[stream]
+channel_capacity = 128
+anomaly_sigma = 2.5
+enabled = true
+name = "wiki run"
+
+[wiki]
+months = 48
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_or("stream.channel_capacity", 0usize), 128);
+        assert!((c.get_or("stream.anomaly_sigma", 0.0f64) - 2.5).abs() < 1e-12);
+        assert!(c.get_bool("stream.enabled", false));
+        assert_eq!(c.get("stream.name"), Some("wiki run"));
+        assert_eq!(c.get_or("wiki.months", 0usize), 48);
+    }
+
+    #[test]
+    fn missing_keys_fall_back() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_or("x.y", 9usize), 9);
+        assert!(!c.get_bool("x.z", false));
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("[s]\njust a line\n").is_err());
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let c = Config::parse("a = 1 # trailing\n").unwrap();
+        assert_eq!(c.get_or("a", 0u32), 1);
+    }
+
+    #[test]
+    fn sectionless_keys() {
+        let c = Config::parse("top = 5\n").unwrap();
+        assert_eq!(c.get_or("top", 0u32), 5);
+    }
+}

@@ -1,0 +1,8 @@
+//! Command-line and configuration substrate (clap/serde are unavailable
+//! offline): a small flag parser and a typed TOML-subset config loader.
+
+pub mod args;
+pub mod config;
+
+pub use args::Args;
+pub use config::Config;

@@ -1,0 +1,370 @@
+//! Experiment drivers regenerating the paper's tables and figures. Each
+//! driver returns structured rows; the benches and examples render them via
+//! `coordinator::report`. Scales default to laptop size; every driver takes
+//! explicit parameters so `--full` runs can approach paper scale.
+
+use crate::anomaly;
+use crate::coordinator::methods::{all_methods, core_methods, Method};
+use crate::datasets::{dos_inject, hic_sequence, oregon_snapshots, wiki_stream};
+use crate::datasets::{HicConfig, OregonConfig, WikiConfig};
+use crate::distance::veo_score;
+use crate::entropy::{exact_vnge, finger_hhat, finger_htilde};
+use crate::graph::{Graph, GraphSequence};
+use crate::util::stats::{mean, pearson, spearman};
+use crate::util::timer::{ctrr, time_it};
+use crate::util::Pcg64;
+
+/// Random-graph families used by Figures 1–2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphModel {
+    Er,
+    Ba,
+    Ws,
+}
+
+impl GraphModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GraphModel::Er => "ER",
+            GraphModel::Ba => "BA",
+            GraphModel::Ws => "WS",
+        }
+    }
+
+    /// Sample a graph with target average degree d̄ (and WS rewiring p_ws).
+    pub fn sample(&self, n: usize, avg_degree: f64, p_ws: f64, rng: &mut Pcg64) -> Graph {
+        match self {
+            GraphModel::Er => crate::generators::erdos_renyi_avg_degree(n, avg_degree, rng),
+            GraphModel::Ba => {
+                let m = ((avg_degree / 2.0).round() as usize).max(1);
+                crate::generators::barabasi_albert(n, m, rng)
+            }
+            GraphModel::Ws => {
+                let k = ((avg_degree / 2.0).round() as usize).max(1) * 2;
+                crate::generators::watts_strogatz(n, k.min(n - 1 - (n % 2)), p_ws, rng)
+            }
+        }
+    }
+}
+
+/// One row of the Fig 1 / Fig 2 style entropy-approximation comparison,
+/// averaged over trials.
+#[derive(Debug, Clone)]
+pub struct ApproxRow {
+    pub model: &'static str,
+    pub n: usize,
+    pub avg_degree: f64,
+    pub p_ws: f64,
+    pub h: f64,
+    pub hhat: f64,
+    pub htilde: f64,
+    /// approximation errors H − Ĥ, H − H̃
+    pub ae_hat: f64,
+    pub ae_tilde: f64,
+    /// scaled approximation errors AE/ln n
+    pub sae_hat: f64,
+    pub sae_tilde: f64,
+    /// computation-time reduction ratios vs exact H
+    pub ctrr_hat: f64,
+    pub ctrr_tilde: f64,
+    pub time_h: f64,
+    pub time_hat: f64,
+    pub time_tilde: f64,
+}
+
+/// Measure H, Ĥ, H̃ (values + times) on graphs drawn from `model`,
+/// averaged over `trials`.
+pub fn approx_comparison(
+    model: GraphModel,
+    n: usize,
+    avg_degree: f64,
+    p_ws: f64,
+    trials: usize,
+    seed: u64,
+) -> ApproxRow {
+    let mut acc = ApproxRow {
+        model: model.name(),
+        n,
+        avg_degree,
+        p_ws,
+        h: 0.0,
+        hhat: 0.0,
+        htilde: 0.0,
+        ae_hat: 0.0,
+        ae_tilde: 0.0,
+        sae_hat: 0.0,
+        sae_tilde: 0.0,
+        ctrr_hat: 0.0,
+        ctrr_tilde: 0.0,
+        time_h: 0.0,
+        time_hat: 0.0,
+        time_tilde: 0.0,
+    };
+    for t in 0..trials {
+        let mut rng = Pcg64::new(seed.wrapping_add(t as u64));
+        let g = model.sample(n, avg_degree, p_ws, &mut rng);
+        let (h, th) = time_it(|| exact_vnge(&g));
+        let (hh, tha) = time_it(|| finger_hhat(&g));
+        let (ht, tti) = time_it(|| finger_htilde(&g));
+        acc.h += h;
+        acc.hhat += hh;
+        acc.htilde += ht;
+        acc.time_h += th;
+        acc.time_hat += tha;
+        acc.time_tilde += tti;
+    }
+    let k = trials.max(1) as f64;
+    acc.h /= k;
+    acc.hhat /= k;
+    acc.htilde /= k;
+    acc.time_h /= k;
+    acc.time_hat /= k;
+    acc.time_tilde /= k;
+    acc.ae_hat = acc.h - acc.hhat;
+    acc.ae_tilde = acc.h - acc.htilde;
+    let ln_n = (n as f64).ln();
+    acc.sae_hat = acc.ae_hat / ln_n;
+    acc.sae_tilde = acc.ae_tilde / ln_n;
+    acc.ctrr_hat = ctrr(acc.time_h, acc.time_hat);
+    acc.ctrr_tilde = ctrr(acc.time_h, acc.time_tilde);
+    acc
+}
+
+/// Fig 1(a,b): sweep average degree for ER/BA at fixed n.
+pub fn fig1_degree_sweep(
+    model: GraphModel,
+    n: usize,
+    degrees: &[f64],
+    trials: usize,
+    seed: u64,
+) -> Vec<ApproxRow> {
+    degrees
+        .iter()
+        .map(|&d| approx_comparison(model, n, d, 0.0, trials, seed ^ (d as u64)))
+        .collect()
+}
+
+/// Fig 1(c)/S1: sweep WS rewiring probability at fixed n and degree.
+pub fn fig1_ws_sweep(
+    n: usize,
+    avg_degree: f64,
+    p_list: &[f64],
+    trials: usize,
+    seed: u64,
+) -> Vec<ApproxRow> {
+    p_list
+        .iter()
+        .map(|&p| {
+            approx_comparison(GraphModel::Ws, n, avg_degree, p, trials, seed ^ ((p * 1e4) as u64))
+        })
+        .collect()
+}
+
+/// Fig 2/S2/S3: sweep graph size n.
+pub fn fig2_size_sweep(
+    model: GraphModel,
+    ns: &[usize],
+    avg_degree: f64,
+    p_ws: f64,
+    trials: usize,
+    seed: u64,
+) -> Vec<ApproxRow> {
+    ns.iter()
+        .map(|&n| approx_comparison(model, n, avg_degree, p_ws, trials, seed ^ n as u64))
+        .collect()
+}
+
+/// One Table 2 row: a method's correlation with the VEO anomaly proxy plus
+/// its total scoring time over the sequence.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub method: String,
+    pub pcc: f64,
+    pub srcc: f64,
+    pub seconds: f64,
+    pub series: Vec<f64>,
+}
+
+/// Summary of one wiki dataset run (Table 1 stats + Table 2/S1 rows + the
+/// proxy series for Fig 3).
+#[derive(Debug)]
+pub struct WikiRun {
+    pub dataset: String,
+    pub max_nodes: usize,
+    pub max_edges: usize,
+    pub num_graphs: usize,
+    pub proxy: Vec<f64>,
+    pub rows: Vec<Table2Row>,
+}
+
+/// Table 2 / Table S1 / Fig 3 driver on one synthetic wiki stream.
+pub fn run_wiki(dataset: &str, cfg: &WikiConfig) -> WikiRun {
+    let stream = wiki_stream(cfg);
+    let seq = GraphSequence::from_deltas(stream.initial.clone(), &stream.deltas);
+    let proxy: Vec<f64> = seq.pairs().map(|(a, b)| veo_score(a, b)).collect();
+    let max_nodes = seq.iter().map(|g| g.num_nodes()).max().unwrap_or(0);
+    let max_edges = seq.iter().map(|g| g.num_edges()).max().unwrap_or(0);
+    let mut rows = Vec::new();
+    for m in core_methods() {
+        let (series, secs) = time_it(|| m.score_sequence(&seq));
+        rows.push(Table2Row {
+            method: m.name.to_string(),
+            pcc: pearson(&series, &proxy),
+            srcc: spearman(&series, &proxy),
+            seconds: secs,
+            series,
+        });
+    }
+    WikiRun {
+        dataset: dataset.to_string(),
+        max_nodes,
+        max_edges,
+        num_graphs: seq.len(),
+        proxy,
+        rows,
+    }
+}
+
+/// One Fig 4 row: a method's TDS curve and detected bifurcation instants
+/// (1-based measurement indices).
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub method: String,
+    pub tds: Vec<f64>,
+    pub detected: Vec<usize>,
+    pub correct: bool,
+}
+
+/// Fig 4 driver: bifurcation detection on the Hi-C-like sequence.
+pub fn run_bifurcation(cfg: &HicConfig) -> Vec<Fig4Row> {
+    let seq = hic_sequence(cfg);
+    let mut rows = Vec::new();
+    for m in core_methods() {
+        let theta = m.score_sequence(&seq);
+        let tds = anomaly::temporal_difference_score(&theta);
+        let detected: Vec<usize> =
+            anomaly::detect_bifurcations(&tds).iter().map(|&i| i + 1).collect(); // 1-based
+        let correct = detected.contains(&cfg.bifurcation) && detected.len() == 1;
+        rows.push(Fig4Row { method: m.name.to_string(), tds, detected, correct });
+    }
+    rows
+}
+
+/// One Table 3 row: detection rates per DoS fraction for one method.
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub method: String,
+    /// detection rate per X value, aligned with the input `xs`.
+    pub rates: Vec<f64>,
+}
+
+/// Table 3 / S2 driver: synthesized DoS detection rates.
+/// `xs` are attack fractions (e.g. [0.01, 0.03, 0.05, 0.10]);
+/// `extended` includes the supplement's VEO/degree-distribution columns.
+pub fn run_dos(
+    cfg: &OregonConfig,
+    xs: &[f64],
+    trials: usize,
+    extended: bool,
+    seed: u64,
+) -> Vec<Table3Row> {
+    let base = oregon_snapshots(cfg);
+    let methods: Vec<Method> = if extended { all_methods() } else { core_methods() };
+    let mut rows: Vec<Table3Row> =
+        methods.iter().map(|m| Table3Row { method: m.name.to_string(), rates: Vec::new() }).collect();
+    for &x in xs {
+        let mut hits = vec![0usize; methods.len()];
+        for trial in 0..trials {
+            let mut rng = Pcg64::new(seed ^ ((x * 1e4) as u64) ^ ((trial as u64) << 20));
+            let event = dos_inject(&base, x, &mut rng);
+            for (mi, m) in methods.iter().enumerate() {
+                let scores = m.score_sequence(&event.seq);
+                let top2 = crate::util::stats::top_k_indices(&scores, 2);
+                if event.affected_pairs.iter().any(|p| top2.contains(p)) {
+                    hits[mi] += 1;
+                }
+            }
+        }
+        for (mi, h) in hits.iter().enumerate() {
+            rows[mi].rates.push(*h as f64 / trials.max(1) as f64);
+        }
+    }
+    rows
+}
+
+/// Mean scaled approximation error over a size sweep — convergence summary
+/// used in tests and EXPERIMENTS.md.
+pub fn sae_trend(rows: &[ApproxRow]) -> (f64, f64) {
+    let first = rows.first().map(|r| r.sae_hat).unwrap_or(0.0);
+    let last = rows.last().map(|r| r.sae_hat).unwrap_or(0.0);
+    (first, last)
+}
+
+/// Average CTRR across rows.
+pub fn mean_ctrr(rows: &[ApproxRow]) -> (f64, f64) {
+    (
+        mean(&rows.iter().map(|r| r.ctrr_hat).collect::<Vec<_>>()),
+        mean(&rows.iter().map(|r| r.ctrr_tilde).collect::<Vec<_>>()),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_comparison_orders_entropies() {
+        let row = approx_comparison(GraphModel::Er, 150, 12.0, 0.0, 2, 42);
+        assert!(row.htilde <= row.hhat + 1e-9);
+        assert!(row.hhat <= row.h + 1e-6);
+        assert!(row.ae_hat >= -1e-9 && row.ae_tilde >= row.ae_hat - 1e-9);
+    }
+
+    #[test]
+    fn fig1_ae_decays_with_degree() {
+        let rows = fig1_degree_sweep(GraphModel::Er, 200, &[6.0, 40.0], 2, 7);
+        assert!(rows[1].ae_hat < rows[0].ae_hat);
+    }
+
+    #[test]
+    fn ws_more_regular_less_error() {
+        let rows = fig1_ws_sweep(200, 10.0, &[0.01, 0.9], 2, 9);
+        assert!(rows[0].ae_hat <= rows[1].ae_hat + 1e-9, "{rows:?}");
+    }
+
+    #[test]
+    fn wiki_run_produces_all_rows() {
+        let cfg = WikiConfig {
+            months: 8,
+            initial_nodes: 60,
+            growth_per_month: 15,
+            ..Default::default()
+        };
+        let run = run_wiki("test", &cfg);
+        assert_eq!(run.rows.len(), 9);
+        assert_eq!(run.proxy.len(), 7);
+        for r in &run.rows {
+            assert_eq!(r.series.len(), 7);
+            assert!(r.pcc.abs() <= 1.0 + 1e-9);
+            assert!(r.srcc.abs() <= 1.0 + 1e-9);
+        }
+        assert!(run.max_nodes >= 60 + 7 * 15);
+    }
+
+    #[test]
+    fn bifurcation_finger_correct() {
+        let cfg = HicConfig { dim: 100, band: 12, ..Default::default() };
+        let rows = run_bifurcation(&cfg);
+        let finger = rows.iter().find(|r| r.method.contains("Fast")).unwrap();
+        assert!(finger.detected.contains(&6), "detected {:?}", finger.detected);
+    }
+
+    #[test]
+    fn dos_rates_increase_with_x() {
+        let cfg = OregonConfig { nodes: 250, ..Default::default() };
+        let rows = run_dos(&cfg, &[0.01, 0.10], 6, false, 3);
+        let finger = &rows[0];
+        assert_eq!(finger.method, "FINGER-JS (Fast)");
+        assert!(finger.rates[1] >= finger.rates[0], "{:?}", finger.rates);
+    }
+}

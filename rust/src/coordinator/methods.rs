@@ -1,0 +1,192 @@
+//! The dissimilarity-method registry: every method the paper evaluates
+//! (Tables 2/3, Fig 4) behind a single sequence-scoring interface, so the
+//! experiment drivers iterate methods uniformly.
+//!
+//! A method consumes a `GraphSequence` and emits one score per consecutive
+//! pair. Pairwise metrics adapt trivially; FINGER-JS (Incremental) threads a
+//! `FingerState` through the delta stream; VNGE-NL/GL use the paper's
+//! supplement-J scoring (absolute consecutive entropy difference).
+
+use crate::distance::{self, DeltaConOpts, LambdaMatrix};
+use crate::entropy::{self, FingerState};
+use crate::graph::{Graph, GraphSequence};
+
+/// Method category (used for reporting and for choosing applicable methods
+/// per experiment, e.g. VEO is excluded from weighted-graph tasks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MethodKind {
+    FingerFast,
+    FingerIncremental,
+    Baseline,
+    SupportOnly,
+    DegreeDistribution,
+}
+
+/// A registered dissimilarity method.
+pub struct Method {
+    pub name: &'static str,
+    pub kind: MethodKind,
+    score: Box<dyn Fn(&GraphSequence) -> Vec<f64> + Send + Sync>,
+}
+
+impl Method {
+    /// Score every consecutive pair of the sequence (length T−1).
+    pub fn score_sequence(&self, seq: &GraphSequence) -> Vec<f64> {
+        (self.score)(seq)
+    }
+
+    fn pairwise(
+        name: &'static str,
+        kind: MethodKind,
+        f: impl Fn(&Graph, &Graph) -> f64 + Send + Sync + 'static,
+    ) -> Self {
+        Self {
+            name,
+            kind,
+            score: Box::new(move |seq| seq.pairs().map(|(a, b)| f(a, b)).collect()),
+        }
+    }
+
+    /// Per-snapshot scalar scored as |x_{t+1} − x_t| (supplement §J).
+    fn snapshot_diff(
+        name: &'static str,
+        kind: MethodKind,
+        f: impl Fn(&Graph) -> f64 + Send + Sync + 'static,
+    ) -> Self {
+        Self {
+            name,
+            kind,
+            score: Box::new(move |seq| {
+                let vals: Vec<f64> = seq.iter().map(&f).collect();
+                vals.windows(2).map(|w| (w[1] - w[0]).abs()).collect()
+            }),
+        }
+    }
+}
+
+/// FINGER-JS (Incremental): Algorithm 2 over the recovered delta stream.
+fn finger_incremental() -> Method {
+    Method {
+        name: "FINGER-JS (Inc.)",
+        kind: MethodKind::FingerIncremental,
+        score: Box::new(|seq| {
+            if seq.is_empty() {
+                return Vec::new();
+            }
+            let mut state = FingerState::new(seq.get(0).clone());
+            let mut out = Vec::with_capacity(seq.len().saturating_sub(1));
+            for t in 1..seq.len() {
+                let delta = crate::graph::DeltaGraph::diff(state.graph(), seq.get(t));
+                out.push(distance::jsdist_incremental(&mut state, &delta));
+            }
+            out
+        }),
+    }
+}
+
+/// The full registry in the paper's Table 2/3 column order, plus the
+/// supplement-S2 extras (VEO and degree-distribution distances).
+pub fn all_methods() -> Vec<Method> {
+    let mut v = core_methods();
+    v.push(Method::pairwise("VEO", MethodKind::SupportOnly, distance::veo_score));
+    v.push(Method::pairwise("Cosine dist.", MethodKind::DegreeDistribution, distance::cosine_distance));
+    v.push(Method::pairwise(
+        "Bhattacharyya",
+        MethodKind::DegreeDistribution,
+        distance::bhattacharyya_distance,
+    ));
+    v.push(Method::pairwise(
+        "Hellinger",
+        MethodKind::DegreeDistribution,
+        distance::hellinger_distance,
+    ));
+    v
+}
+
+/// The nine methods of Table 2 / Fig 4.
+pub fn core_methods() -> Vec<Method> {
+    vec![
+        Method::pairwise("FINGER-JS (Fast)", MethodKind::FingerFast, distance::jsdist_fast),
+        finger_incremental(),
+        Method::pairwise("DeltaCon", MethodKind::Baseline, |a, b| {
+            1.0 - distance::deltacon_similarity(a, b, &DeltaConOpts::default())
+        }),
+        Method::pairwise("RMD", MethodKind::Baseline, |a, b| {
+            distance::rmd_distance(a, b, &DeltaConOpts::default())
+        }),
+        Method::pairwise("λ dist. (Adj.)", MethodKind::Baseline, |a, b| {
+            distance::lambda_distance(a, b, 6, LambdaMatrix::Adjacency)
+        }),
+        Method::pairwise("λ dist. (Lap.)", MethodKind::Baseline, |a, b| {
+            distance::lambda_distance(a, b, 6, LambdaMatrix::Laplacian)
+        }),
+        Method::pairwise("GED", MethodKind::SupportOnly, distance::graph_edit_distance),
+        Method::snapshot_diff("VNGE-NL", MethodKind::Baseline, entropy::baselines::vnge_nl),
+        Method::snapshot_diff("VNGE-GL", MethodKind::Baseline, entropy::baselines::vnge_gl),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators;
+    use crate::util::Pcg64;
+
+    fn small_seq() -> GraphSequence {
+        let mut rng = Pcg64::new(1);
+        let g0 = generators::erdos_renyi(40, 0.1, &mut rng);
+        let g1 = generators::erdos_renyi(40, 0.12, &mut rng);
+        let g2 = generators::erdos_renyi(40, 0.14, &mut rng);
+        GraphSequence::from_snapshots(vec![g0, g1, g2])
+    }
+
+    #[test]
+    fn registry_sizes() {
+        assert_eq!(core_methods().len(), 9);
+        assert_eq!(all_methods().len(), 13); // + VEO + 3 degree distances
+    }
+
+    #[test]
+    fn every_method_scores_every_pair() {
+        let seq = small_seq();
+        for m in all_methods() {
+            let s = m.score_sequence(&seq);
+            assert_eq!(s.len(), 2, "{} returned {} scores", m.name, s.len());
+            assert!(s.iter().all(|v| v.is_finite()), "{} non-finite", m.name);
+            assert!(s.iter().all(|&v| v >= 0.0), "{} negative score", m.name);
+        }
+    }
+
+    #[test]
+    fn identical_sequence_scores_zero() {
+        let mut rng = Pcg64::new(2);
+        let g = generators::erdos_renyi(30, 0.15, &mut rng);
+        let seq = GraphSequence::from_snapshots(vec![g.clone(), g.clone(), g]);
+        for m in all_methods() {
+            let s = m.score_sequence(&seq);
+            for v in s {
+                assert!(v.abs() < 1e-6, "{} scored {v} on identical graphs", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_close_to_batch_htilde() {
+        let seq = small_seq();
+        let inc = finger_incremental().score_sequence(&seq);
+        let batch: Vec<f64> = seq
+            .pairs()
+            .map(|(a, b)| distance::jsdist_with(a, b, entropy::finger_htilde))
+            .collect();
+        for (x, y) in inc.iter().zip(&batch) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let names: Vec<_> = all_methods().iter().map(|m| m.name).collect();
+        let set: std::collections::HashSet<_> = names.iter().collect();
+        assert_eq!(set.len(), names.len());
+    }
+}

@@ -1,0 +1,9 @@
+//! L3 coordination: the unified method registry (FINGER + all baselines
+//! behind one trait) and the experiment drivers that regenerate every table
+//! and figure of the paper (shared by `rust/benches/*` and `examples/*`).
+
+pub mod experiments;
+pub mod methods;
+pub mod report;
+
+pub use methods::{all_methods, core_methods, Method, MethodKind};

@@ -1,0 +1,130 @@
+//! Render experiment results as paper-style text tables (used by benches,
+//! examples and the CLI).
+
+use crate::coordinator::experiments::{ApproxRow, Fig4Row, Table3Row, WikiRun};
+use crate::util::fmt::{pct, secs, Table};
+
+/// Fig 1 / Fig 2 style table of entropy approximations.
+pub fn approx_table(rows: &[ApproxRow], sweep_label: &str) -> String {
+    let mut t = Table::new(&[
+        sweep_label, "n", "H", "Ĥ", "H̃", "AE(Ĥ)", "AE(H̃)", "SAE(Ĥ)", "CTRR(Ĥ)", "CTRR(H̃)",
+        "t(H)", "t(Ĥ)",
+    ]);
+    for r in rows {
+        let param = if sweep_label.contains("p_ws") {
+            format!("{:.3}", r.p_ws)
+        } else if sweep_label == "n" {
+            format!("{}", r.n)
+        } else {
+            format!("{:.1}", r.avg_degree)
+        };
+        t.row(vec![
+            param,
+            r.n.to_string(),
+            format!("{:.4}", r.h),
+            format!("{:.4}", r.hhat),
+            format!("{:.4}", r.htilde),
+            format!("{:.4}", r.ae_hat),
+            format!("{:.4}", r.ae_tilde),
+            format!("{:.5}", r.sae_hat),
+            pct(r.ctrr_hat),
+            pct(r.ctrr_tilde),
+            secs(r.time_h),
+            secs(r.time_hat),
+        ]);
+    }
+    t.render()
+}
+
+/// Table 2 / S1 per-dataset block.
+pub fn wiki_table(run: &WikiRun) -> String {
+    let mut out = format!(
+        "dataset={} | graphs={} | max nodes={} | max edges={}\n",
+        run.dataset, run.num_graphs, run.max_nodes, run.max_edges
+    );
+    let mut t = Table::new(&["method", "PCC", "SRCC", "time"]);
+    for r in &run.rows {
+        t.row(vec![
+            r.method.clone(),
+            format!("{:+.4}", r.pcc),
+            format!("{:+.4}", r.srcc),
+            secs(r.seconds),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+/// Fig 3-style series dump (proxy + each method, one line per pair).
+pub fn series_dump(run: &WikiRun) -> String {
+    let mut out = String::from("pair proxy");
+    for r in &run.rows {
+        out.push(' ');
+        out.push_str(&r.method.replace(' ', "_"));
+    }
+    out.push('\n');
+    for t in 0..run.proxy.len() {
+        out.push_str(&format!("{t} {:.5}", run.proxy[t]));
+        for r in &run.rows {
+            out.push_str(&format!(" {:.5}", r.series[t]));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Fig 4 block: TDS curves + detections.
+pub fn bifurcation_table(rows: &[Fig4Row], ground_truth: usize) -> String {
+    let mut t = Table::new(&["method", "detected (1-based)", "correct", "TDS"]);
+    for r in rows {
+        let tds: Vec<String> = r.tds.iter().map(|v| format!("{v:.3}")).collect();
+        t.row(vec![
+            r.method.clone(),
+            format!("{:?}", r.detected),
+            if r.correct { "YES".into() } else { "no".into() },
+            tds.join(","),
+        ]);
+    }
+    format!("ground-truth bifurcation at measurement {ground_truth}\n{}", t.render())
+}
+
+/// Table 3 / S2 block.
+pub fn dos_table(rows: &[Table3Row], xs: &[f64]) -> String {
+    let mut header: Vec<String> = vec!["method".into()];
+    header.extend(xs.iter().map(|x| format!("X={:.0}%", x * 100.0)));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    for r in rows {
+        let mut cells = vec![r.method.clone()];
+        cells.extend(r.rates.iter().map(|v| pct(*v)));
+        t.row(cells);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dos_table_renders() {
+        let rows = vec![Table3Row { method: "m".into(), rates: vec![0.5, 1.0] }];
+        let s = dos_table(&rows, &[0.01, 0.1]);
+        assert!(s.contains("X=1%"));
+        assert!(s.contains("50.0%"));
+        assert!(s.contains("100.0%"));
+    }
+
+    #[test]
+    fn bifurcation_table_renders() {
+        let rows = vec![Fig4Row {
+            method: "m".into(),
+            tds: vec![1.0, 0.5, 1.0],
+            detected: vec![2],
+            correct: true,
+        }];
+        let s = bifurcation_table(&rows, 2);
+        assert!(s.contains("YES"));
+        assert!(s.contains("ground-truth bifurcation at measurement 2"));
+    }
+}

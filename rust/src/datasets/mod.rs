@@ -1,0 +1,14 @@
+//! Synthetic workload generators standing in for the paper's proprietary /
+//! controlled-access datasets (DESIGN.md §2 documents each substitution):
+//!
+//! * `wiki`   — evolving hyperlink networks (Table 1/2, Fig 3/S4 analog)
+//! * `hic`    — dynamic genomic contact maps (Fig 4 analog)
+//! * `oregon` — AS router snapshots + DoS injection (Table 3/S2 analog)
+
+pub mod hic;
+pub mod oregon;
+pub mod wiki;
+
+pub use hic::{hic_sequence, HicConfig};
+pub use oregon::{dos_inject, oregon_snapshots, OregonConfig};
+pub use wiki::{wiki_stream, WikiConfig, WikiStream};

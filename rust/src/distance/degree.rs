@@ -1,0 +1,105 @@
+//! Degree-distribution distances (supplement §N): cosine, Bhattacharyya and
+//! Hellinger distances on the two graphs' (unweighted) degree distributions.
+//! KL is excluded for the paper's reason — supports rarely coincide.
+
+use crate::graph::Graph;
+
+fn padded_dists(a: &Graph, b: &Graph) -> (Vec<f64>, Vec<f64>) {
+    let mut p = a.degree_distribution();
+    let mut q = b.degree_distribution();
+    let len = p.len().max(q.len());
+    p.resize(len, 0.0);
+    q.resize(len, 0.0);
+    (p, q)
+}
+
+/// Cosine distance = 1 − p·q / (‖p‖‖q‖). 0 when either is degenerate-empty.
+pub fn cosine_distance(a: &Graph, b: &Graph) -> f64 {
+    let (p, q) = padded_dists(a, b);
+    let dot: f64 = p.iter().zip(&q).map(|(x, y)| x * y).sum();
+    let np: f64 = p.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let nq: f64 = q.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if np == 0.0 || nq == 0.0 {
+        return 0.0;
+    }
+    (1.0 - dot / (np * nq)).max(0.0)
+}
+
+/// Bhattacharyya coefficient BC = Σ √(pᵢqᵢ).
+fn bc(a: &Graph, b: &Graph) -> f64 {
+    let (p, q) = padded_dists(a, b);
+    p.iter().zip(&q).map(|(x, y)| (x * y).sqrt()).sum()
+}
+
+/// Bhattacharyya distance = −ln BC (∞-safe: returns a large finite value for
+/// disjoint supports).
+pub fn bhattacharyya_distance(a: &Graph, b: &Graph) -> f64 {
+    let c = bc(a, b);
+    if c <= 1e-300 {
+        700.0 // −ln of smallest positive double; finite sentinel
+    } else {
+        (-c.ln()).max(0.0)
+    }
+}
+
+/// Hellinger distance = √(1 − BC) ∈ [0, 1].
+pub fn hellinger_distance(a: &Graph, b: &Graph) -> f64 {
+    (1.0 - bc(a, b)).max(0.0).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators;
+
+    #[test]
+    fn identical_zero() {
+        let g = generators::ring(10);
+        assert!(cosine_distance(&g, &g) < 1e-12);
+        assert!(bhattacharyya_distance(&g, &g) < 1e-12);
+        assert!(hellinger_distance(&g, &g) < 1e-9);
+    }
+
+    #[test]
+    fn hellinger_in_unit_interval() {
+        let a = generators::ring(10);
+        let b = generators::star(10);
+        let h = hellinger_distance(&a, &b);
+        assert!((0.0..=1.0).contains(&h));
+        assert!(h > 0.0);
+    }
+
+    #[test]
+    fn disjoint_supports() {
+        // ring: all degree 2; complete K5: all degree 4 — disjoint histograms
+        let a = generators::ring(5);
+        let b = generators::complete(5, 1.0);
+        assert!((hellinger_distance(&a, &b) - 1.0).abs() < 1e-9);
+        assert!(bhattacharyya_distance(&a, &b) > 100.0);
+        assert!((cosine_distance(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn symmetry() {
+        let a = generators::star(8);
+        let b = generators::path(8);
+        assert!((cosine_distance(&a, &b) - cosine_distance(&b, &a)).abs() < 1e-12);
+        assert!((hellinger_distance(&a, &b) - hellinger_distance(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn monotone_in_perturbation() {
+        let mut rng = crate::util::Pcg64::new(1);
+        let g = generators::erdos_renyi_avg_degree(200, 10.0, &mut rng);
+        let edges: Vec<_> = g.edges().collect();
+        let mut small = g.clone();
+        let mut big = g.clone();
+        for &(i, j, _) in edges.iter().take(5) {
+            small.remove_edge(i, j);
+        }
+        for &(i, j, _) in edges.iter().take(200) {
+            big.remove_edge(i, j);
+        }
+        assert!(hellinger_distance(&g, &big) > hellinger_distance(&g, &small));
+    }
+}

@@ -1,0 +1,69 @@
+//! Graph edit distance for graphs with known node correspondence (Bunke et
+//! al. 2007): the number of node/edge additions and removals converting G_t
+//! into G_{t+1}. With aligned ids this is |n − n′| plus the size of the edge
+//! symmetric difference (unweighted — GED is support-only, which is exactly
+//! why it misses weight-borne signal in the genome experiment).
+
+use crate::graph::Graph;
+
+/// GED(G, G′) = |n − n′| + |E Δ E′| (edge symmetric difference on supports).
+pub fn graph_edit_distance(a: &Graph, b: &Graph) -> f64 {
+    let node_edits = a.num_nodes().abs_diff(b.num_nodes());
+    let mut edge_edits = 0usize;
+    for (i, j, _) in a.edges() {
+        let present =
+            (i as usize) < b.num_nodes() && (j as usize) < b.num_nodes() && b.has_edge(i, j);
+        if !present {
+            edge_edits += 1;
+        }
+    }
+    for (i, j, _) in b.edges() {
+        let present =
+            (i as usize) < a.num_nodes() && (j as usize) < a.num_nodes() && a.has_edge(i, j);
+        if !present {
+            edge_edits += 1;
+        }
+    }
+    (node_edits + edge_edits) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_zero() {
+        let g = Graph::from_pairs(4, &[(0, 1), (2, 3)]);
+        assert_eq!(graph_edit_distance(&g, &g), 0.0);
+    }
+
+    #[test]
+    fn counts_edge_edits() {
+        let a = Graph::from_pairs(4, &[(0, 1), (1, 2)]);
+        let b = Graph::from_pairs(4, &[(0, 1), (2, 3)]);
+        // (1,2) removed + (2,3) added = 2
+        assert_eq!(graph_edit_distance(&a, &b), 2.0);
+    }
+
+    #[test]
+    fn counts_node_edits() {
+        let a = Graph::from_pairs(3, &[(0, 1)]);
+        let b = Graph::from_pairs(5, &[(0, 1)]);
+        assert_eq!(graph_edit_distance(&a, &b), 2.0);
+    }
+
+    #[test]
+    fn weight_changes_invisible() {
+        // GED is support-only — the genome experiment's failure mode
+        let a = Graph::from_edges(3, &[(0, 1, 1.0)]);
+        let b = Graph::from_edges(3, &[(0, 1, 100.0)]);
+        assert_eq!(graph_edit_distance(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn symmetry() {
+        let a = Graph::from_pairs(4, &[(0, 1), (1, 2)]);
+        let b = Graph::from_pairs(6, &[(0, 3), (4, 5)]);
+        assert_eq!(graph_edit_distance(&a, &b), graph_edit_distance(&b, &a));
+    }
+}

@@ -1,0 +1,142 @@
+//! Jensen–Shannon distance between graphs (§2.5).
+//!
+//! JSdiv(G,G′) = H(Ḡ) − ½[H(G) + H(G′)] with Ḡ = (G ⊕ G′)/2;
+//! JSdist = √JSdiv — a valid metric for the exact entropy
+//! (Endres–Schindelin). FINGER substitutes Ĥ (Algorithm 1, fast) or H̃
+//! (Algorithm 2, incremental); approximation error can push the divergence
+//! slightly negative, so it is clamped at 0 before the square root.
+
+use crate::entropy::{exact_vnge, finger_hhat, FingerState};
+use crate::graph::{ops, DeltaGraph, Graph};
+
+/// JS distance with an arbitrary entropy functional (the common core of
+/// Algorithm 1 and the exact computation).
+pub fn jsdist_with(a: &Graph, b: &Graph, entropy: impl Fn(&Graph) -> f64) -> f64 {
+    let avg = ops::average_graph(a, b);
+    let div = entropy(&avg) - 0.5 * (entropy(a) + entropy(b));
+    div.max(0.0).sqrt()
+}
+
+/// FINGER-JSdist (Fast) — Algorithm 1: JS distance via Ĥ. O(n+m).
+pub fn jsdist_fast(a: &Graph, b: &Graph) -> f64 {
+    jsdist_with(a, b, finger_hhat)
+}
+
+/// Exact JS distance via the O(n³) VNGE (test/reference path).
+pub fn jsdist_exact(a: &Graph, b: &Graph) -> f64 {
+    jsdist_with(a, b, exact_vnge)
+}
+
+/// FINGER-JSdist (Incremental) — Algorithm 2: JSdist(G, G ⊕ ΔG) from a live
+/// `FingerState`, advancing the state to G ⊕ ΔG. O(Δn + Δm).
+///
+/// Line 1 computes H̃(G ⊕ ΔG/2) and H̃(G ⊕ ΔG) by Theorem 2 previews;
+/// line 2 combines them with the state's current H̃(G).
+pub fn jsdist_incremental(state: &mut FingerState, delta: &DeltaGraph) -> f64 {
+    let h_g = state.htilde();
+    let h_mid = state.htilde_after(&delta.half());
+    let p_next = state.preview(delta);
+    let h_next = p_next.htilde();
+    state.apply_previewed(delta, p_next); // reuse the ΔG preview for commit
+    let div = h_mid - 0.5 * (h_g + h_next);
+    div.max(0.0).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn identical_graphs_zero_distance() {
+        let mut rng = Pcg64::new(1);
+        let g = generators::erdos_renyi(50, 0.1, &mut rng);
+        assert!(jsdist_fast(&g, &g) < 1e-9);
+        assert!(jsdist_exact(&g, &g) < 1e-9);
+    }
+
+    #[test]
+    fn symmetry() {
+        let mut rng = Pcg64::new(2);
+        let a = generators::erdos_renyi(40, 0.1, &mut rng);
+        let b = generators::erdos_renyi(40, 0.15, &mut rng);
+        assert!((jsdist_fast(&a, &b) - jsdist_fast(&b, &a)).abs() < 1e-12);
+        assert!((jsdist_exact(&a, &b) - jsdist_exact(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_satisfies_triangle_inequality_samples() {
+        let mut rng = Pcg64::new(3);
+        for _ in 0..3 {
+            let a = generators::erdos_renyi(25, 0.15, &mut rng);
+            let b = generators::erdos_renyi(25, 0.2, &mut rng);
+            let c = generators::erdos_renyi(25, 0.25, &mut rng);
+            let ab = jsdist_exact(&a, &b);
+            let bc = jsdist_exact(&b, &c);
+            let ac = jsdist_exact(&a, &c);
+            assert!(ac <= ab + bc + 1e-9, "{ac} > {ab}+{bc}");
+        }
+    }
+
+    #[test]
+    fn fast_tracks_exact() {
+        // on dense-ish ER graphs the approximation should be close in shape
+        let mut rng = Pcg64::new(4);
+        let a = generators::erdos_renyi_avg_degree(100, 30.0, &mut rng);
+        let b = generators::erdos_renyi_avg_degree(100, 30.0, &mut rng);
+        let fast = jsdist_fast(&a, &b);
+        let exact = jsdist_exact(&a, &b);
+        assert!((fast - exact).abs() < 0.2, "fast={fast} exact={exact}");
+    }
+
+    #[test]
+    fn incremental_matches_batch_htilde_distance() {
+        // Algorithm 2 == Algorithm-1-with-H̃ on the same pair
+        let mut rng = Pcg64::new(5);
+        let g = generators::erdos_renyi(60, 0.08, &mut rng);
+        let mut delta = DeltaGraph::new();
+        for _ in 0..20 {
+            let i = rng.below(60) as u32;
+            let j = (i + 1 + rng.below(59) as u32) % 60;
+            if i != j {
+                delta.add(i, j, rng.uniform(0.2, 1.0));
+            }
+        }
+        let delta = delta.coalesced();
+        let g_next = ops::compose(&g, &delta);
+        let batch = jsdist_with(&g, &g_next, crate::entropy::finger_htilde);
+        let mut state = FingerState::new(g);
+        let inc = jsdist_incremental(&mut state, &delta);
+        assert!((inc - batch).abs() < 1e-9, "inc={inc} batch={batch}");
+        // state advanced to G ⊕ ΔG
+        assert_eq!(state.graph().num_edges(), g_next.num_edges());
+    }
+
+    #[test]
+    fn incremental_empty_delta_zero() {
+        let mut rng = Pcg64::new(6);
+        let g = generators::erdos_renyi(30, 0.2, &mut rng);
+        let mut state = FingerState::new(g);
+        let d = DeltaGraph::new();
+        assert!(jsdist_incremental(&mut state, &d) < 1e-12);
+    }
+
+    #[test]
+    fn bigger_change_bigger_distance() {
+        let mut rng = Pcg64::new(7);
+        let g = generators::erdos_renyi_avg_degree(80, 10.0, &mut rng);
+        let mut small = g.clone();
+        let mut big = g.clone();
+        // perturb 2 edges vs 40 edges
+        let edges: Vec<_> = g.edges().collect();
+        for &(i, j, _) in edges.iter().take(2) {
+            small.remove_edge(i, j);
+        }
+        for &(i, j, _) in edges.iter().take(40) {
+            big.remove_edge(i, j);
+        }
+        assert!(jsdist_fast(&g, &big) > jsdist_fast(&g, &small));
+        assert!(jsdist_exact(&g, &big) > jsdist_exact(&g, &small));
+    }
+}

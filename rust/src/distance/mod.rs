@@ -1,0 +1,17 @@
+//! Graph dissimilarity methods: the paper's FINGER Jensen–Shannon distances
+//! (Algorithms 1 & 2) and every baseline it compares against — DeltaCon, RMD,
+//! λ-distance (Adj./Lap.), GED, VEO, and degree-distribution distances.
+
+pub mod deltacon;
+pub mod degree;
+pub mod ged;
+pub mod jsdist;
+pub mod lambda;
+pub mod veo;
+
+pub use deltacon::{deltacon_similarity, rmd_distance, DeltaConOpts};
+pub use degree::{bhattacharyya_distance, cosine_distance, hellinger_distance};
+pub use ged::graph_edit_distance;
+pub use jsdist::{jsdist_exact, jsdist_fast, jsdist_incremental, jsdist_with};
+pub use lambda::{lambda_distance, LambdaMatrix};
+pub use veo::veo_score;

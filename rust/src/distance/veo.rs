@@ -1,0 +1,73 @@
+//! Vertex/edge overlap (VEO) score (Papadimitriou et al. 2010) — the paper's
+//! *anomaly proxy* for the Wikipedia experiments:
+//!
+//!   VEO = 1 − 2(|V∩V′| + |E∩E′|) / (|V| + |V′| + |E| + |E′|)
+//!
+//! ∈ [0,1], related to the Sørensen–Dice coefficient. Support-only: edge
+//! weight changes are invisible (why it is *not* used in the genome case).
+
+use crate::graph::Graph;
+
+/// VEO dissimilarity between two snapshots with aligned node ids.
+pub fn veo_score(a: &Graph, b: &Graph) -> f64 {
+    let va = a.num_nodes();
+    let vb = b.num_nodes();
+    let v_common = va.min(vb);
+    let mut e_common = 0usize;
+    for (i, j, _) in a.edges() {
+        if (i as usize) < vb && (j as usize) < vb && b.has_edge(i, j) {
+            e_common += 1;
+        }
+    }
+    let denom = (va + vb + a.num_edges() + b.num_edges()) as f64;
+    if denom == 0.0 {
+        return 0.0;
+    }
+    1.0 - 2.0 * (v_common + e_common) as f64 / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_zero() {
+        let g = Graph::from_pairs(5, &[(0, 1), (2, 3)]);
+        assert!(veo_score(&g, &g).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_edges_positive() {
+        let a = Graph::from_pairs(4, &[(0, 1)]);
+        let b = Graph::from_pairs(4, &[(2, 3)]);
+        // common: 4 nodes, 0 edges; denom = 4+4+1+1 = 10 -> 1 - 8/10
+        assert!((veo_score(&a, &b) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn in_unit_interval() {
+        let a = Graph::from_pairs(3, &[(0, 1), (1, 2)]);
+        let b = Graph::from_pairs(6, &[(3, 4), (4, 5)]);
+        let v = veo_score(&a, &b);
+        assert!((0.0..=1.0).contains(&v), "v={v}");
+    }
+
+    #[test]
+    fn weight_changes_invisible() {
+        let a = Graph::from_edges(3, &[(0, 1, 1.0)]);
+        let b = Graph::from_edges(3, &[(0, 1, 9.0)]);
+        assert!(veo_score(&a, &b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_graphs() {
+        assert_eq!(veo_score(&Graph::new(0), &Graph::new(0)), 0.0);
+    }
+
+    #[test]
+    fn symmetry() {
+        let a = Graph::from_pairs(4, &[(0, 1), (1, 2)]);
+        let b = Graph::from_pairs(5, &[(0, 1), (3, 4)]);
+        assert_eq!(veo_score(&a, &b), veo_score(&b, &a));
+    }
+}

@@ -1,0 +1,144 @@
+//! The two approximate-VNGE heuristics the paper compares against (Table 2,
+//! Table 3, Fig 4): VNGE-NL (Han et al. 2012, normalized Laplacian) and
+//! VNGE-GL (Ye et al. 2014, generalized Laplacian of directed graphs).
+//! Both are O(n+m) quadratic-approximation formulas *without* an
+//! approximation guarantee — that absence is the paper's point.
+
+use crate::graph::Graph;
+use crate::linalg::SymMatrix;
+
+/// VNGE-NL (Han et al. 2012): quadratic approximation of the von Neumann
+/// entropy computed from the symmetric normalized Laplacian with density
+/// matrix 𝓛/n:
+///
+///   H_NL ≈ 1 − 1/n − (1/n²)·Σ_{(u,v)∈E} w_uv² / (s_u·s_v)
+///
+/// (for unweighted graphs this is the published 1 − 1/n − (1/n²)Σ 1/(d_u d_v)).
+pub fn vnge_nl(g: &Graph) -> f64 {
+    let n = g.num_nodes() as f64;
+    if n < 1.0 || g.num_edges() == 0 {
+        return 0.0;
+    }
+    let mut sum = 0.0;
+    for (u, v, w) in g.edges() {
+        let su = g.strength(u);
+        let sv = g.strength(v);
+        if su > 0.0 && sv > 0.0 {
+            sum += (w * w) / (su * sv);
+        }
+    }
+    1.0 - 1.0 / n - sum / (n * n)
+}
+
+/// VNGE-GL (Ye et al. 2014): quadratic approximation for the generalized
+/// (directed) Laplacian. An undirected edge is treated as two opposite arcs,
+/// so in-strength = out-strength = s; Ye et al.'s two-term arc sum then
+/// reduces to the NL kernel plus an out-degree self term:
+///
+///   H_GL ≈ 1 − 1/n − (1/(2n²))·Σ_{arcs (u→v)} [ w²/(s_u s_v) + w²/s_u² ]
+///        = 1 − 1/n − (1/n²)·[ Σ_{(u,v)∈E} w²/(s_u s_v)
+///                             + ½·Σ_{(u,v)∈E} w²·(1/s_u² + 1/s_v²) ]
+///
+/// Documented adaptation (DESIGN.md §2): the original is defined on digraphs;
+/// this is its exact value on the bidirected version of an undirected graph.
+pub fn vnge_gl(g: &Graph) -> f64 {
+    let n = g.num_nodes() as f64;
+    if n < 1.0 || g.num_edges() == 0 {
+        return 0.0;
+    }
+    let mut cross = 0.0;
+    let mut self_term = 0.0;
+    for (u, v, w) in g.edges() {
+        let su = g.strength(u);
+        let sv = g.strength(v);
+        if su > 0.0 && sv > 0.0 {
+            cross += (w * w) / (su * sv);
+            self_term += 0.5 * w * w * (1.0 / (su * su) + 1.0 / (sv * sv));
+        }
+    }
+    1.0 - 1.0 / n - (cross + self_term) / (n * n)
+}
+
+/// Exact entropy of the symmetric normalized Laplacian scaled to unit trace —
+/// the "what NL approximates" reference, used in tests and ablations. O(n³).
+pub fn vnge_nl_exact(g: &Graph) -> f64 {
+    if g.num_edges() == 0 {
+        return 0.0;
+    }
+    let m = SymMatrix::laplacian_sym_normalized(g);
+    let tr = m.trace();
+    if tr <= 0.0 {
+        return 0.0;
+    }
+    let eigs: Vec<f64> = m.eigenvalues().into_iter().map(|l| l / tr).collect();
+    crate::entropy::entropy_from_eigenvalues(&eigs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn nl_unweighted_matches_published_form() {
+        // star S_4: hub degree 3, leaves 1; edges hub-leaf: 1/(3·1) each
+        let g = generators::star(4);
+        let n = 4.0;
+        let expected = 1.0 - 1.0 / n - (3.0 * (1.0 / 3.0)) / (n * n);
+        assert!((vnge_nl(&g) - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nl_in_unit_range() {
+        let mut rng = Pcg64::new(1);
+        for seed in 0..5 {
+            let mut r = Pcg64::new(seed);
+            let g = generators::erdos_renyi(50, 0.1, &mut r);
+            let v = vnge_nl(&g);
+            assert!((0.0..=1.0).contains(&v), "v={v}");
+            let _ = &mut rng;
+        }
+    }
+
+    #[test]
+    fn gl_le_nl_shape() {
+        // the extra positive self term makes GL ≤ NL on the same graph
+        let mut rng = Pcg64::new(2);
+        let g = generators::barabasi_albert(80, 3, &mut rng);
+        assert!(vnge_gl(&g) <= vnge_nl(&g));
+    }
+
+    #[test]
+    fn empty_graph_zero() {
+        let g = crate::graph::Graph::new(4);
+        assert_eq!(vnge_nl(&g), 0.0);
+        assert_eq!(vnge_gl(&g), 0.0);
+        assert_eq!(vnge_nl_exact(&g), 0.0);
+    }
+
+    #[test]
+    fn nl_sensitive_to_weights() {
+        let g1 = crate::graph::Graph::from_edges(4, &[(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)]);
+        let g2 = crate::graph::Graph::from_edges(4, &[(0, 1, 5.0), (1, 2, 1.0), (2, 3, 1.0)]);
+        assert!((vnge_nl(&g1) - vnge_nl(&g2)).abs() > 1e-6);
+    }
+
+    #[test]
+    fn nl_exact_bounded_by_ln_n() {
+        let mut rng = Pcg64::new(3);
+        let g = generators::erdos_renyi(30, 0.2, &mut rng);
+        let h = vnge_nl_exact(&g);
+        assert!(h >= 0.0 && h <= 30f64.ln() + 1e-9, "h={h}");
+    }
+
+    #[test]
+    fn approximations_track_density_direction() {
+        // both heuristics should rise with graph regularity/density like Q
+        let mut rng = Pcg64::new(4);
+        let sparse = generators::erdos_renyi_avg_degree(100, 4.0, &mut rng);
+        let dense = generators::erdos_renyi_avg_degree(100, 40.0, &mut rng);
+        assert!(vnge_nl(&dense) > vnge_nl(&sparse));
+        assert!(vnge_gl(&dense) > vnge_gl(&sparse));
+    }
+}

@@ -1,0 +1,518 @@
+//! `FingerState` — the O(Δn+Δm) incremental VNGE engine (Theorem 2 + Eq. 3).
+//!
+//! The state tracks (Q, c, s_max) plus the underlying graph (whose per-node
+//! strengths and per-edge weights the ΔQ formula reads). `preview` evaluates
+//! H̃(G ⊕ ΔG) without committing — Algorithm 2 needs H̃ at G ⊕ ΔG/2 and
+//! G ⊕ ΔG from the same base state.
+//!
+//! Two s_max policies:
+//! * **Exact** (default): a strength multiset keeps s_max exact under weight
+//!   decreases/deletions too, at O(log n) per touched node. The paper's
+//!   Δs_max = max(0, max_{i∈Δ𝒱}(sᵢ+Δsᵢ) − s_max) rule never decreases s_max,
+//!   which drifts on deletion-heavy streams.
+//! * **PaperFaithful**: the paper's monotone rule, O(1) per touched node.
+
+use crate::graph::{DeltaGraph, Graph};
+use std::collections::BTreeMap;
+
+/// s_max maintenance policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SmaxPolicy {
+    /// Exact s_max via a strength multiset (handles deletions).
+    #[default]
+    Exact,
+    /// The paper's monotone update rule (Eq. after Theorem 2).
+    PaperFaithful,
+}
+
+/// Incrementally-maintained FINGER quantities for a single evolving graph.
+#[derive(Debug, Clone)]
+pub struct FingerState {
+    graph: Graph,
+    /// Quadratic proxy Q of the current graph.
+    q: f64,
+    /// Trace normalization c = 1/S (f64::INFINITY when S = 0).
+    s_total: f64,
+    s_max: f64,
+    policy: SmaxPolicy,
+    /// Multiset of positive strengths (bit-packed keys; strengths are ≥ 0 so
+    /// `f64::to_bits` is order-preserving). Only kept for `Exact`.
+    strengths: BTreeMap<u64, u32>,
+    /// Number of committed deltas (for observability).
+    steps: u64,
+}
+
+impl FingerState {
+    /// Build from an initial graph. O(n+m).
+    pub fn new(graph: Graph) -> Self {
+        Self::with_policy(graph, SmaxPolicy::default())
+    }
+
+    pub fn with_policy(graph: Graph, policy: SmaxPolicy) -> Self {
+        let q = crate::entropy::quadratic_q(&graph);
+        let s_total = graph.total_weight();
+        let s_max = graph.s_max();
+        let mut strengths = BTreeMap::new();
+        if policy == SmaxPolicy::Exact {
+            for &s in graph.strengths() {
+                if s > 0.0 {
+                    *strengths.entry(s.to_bits()).or_insert(0) += 1;
+                }
+            }
+        }
+        Self { graph, q, s_total, s_max, policy, strengths, steps: 0 }
+    }
+
+    /// The current graph (read-only).
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn q(&self) -> f64 {
+        self.q
+    }
+
+    pub fn s_total(&self) -> f64 {
+        self.s_total
+    }
+
+    pub fn c(&self) -> f64 {
+        if self.s_total > 0.0 {
+            1.0 / self.s_total
+        } else {
+            0.0
+        }
+    }
+
+    pub fn s_max(&self) -> f64 {
+        self.s_max
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Current H̃(G) (Eq. 2) from the maintained parts. O(1).
+    pub fn htilde(&self) -> f64 {
+        crate::entropy::htilde_from_parts(self.q, self.c(), self.s_max)
+    }
+
+    /// Theorem 2: compute (Q′, c′, s_max′) for G ⊕ ΔG **without committing**.
+    /// O(Δn + Δm). The preview s_max uses the paper's monotone rule (exact
+    /// recomputation without commit would be O(n)); on commit the `Exact`
+    /// policy corrects it.
+    pub fn preview(&self, delta: &DeltaGraph) -> PreviewedState {
+        self.preview_impl(delta, true)
+    }
+
+    fn preview_impl(&self, delta: &DeltaGraph, want_smax: bool) -> PreviewedState {
+        let delta_s = delta.delta_total_weight();
+        // ΔQ = 2Σ sᵢΔsᵢ + Σ Δsᵢ² + 4Σ wᵢⱼΔwᵢⱼ + 2Σ Δwᵢⱼ²  (Theorem 2),
+        // where sᵢ, wᵢⱼ are values in G and Δsᵢ the *net* strength change.
+        // Per-node net strength changes, accumulated by push + sort + merge:
+        // O(Δ log Δ), no hashing, cache-friendly for both the 10-edge
+        // streaming windows and the thousands-edge monthly batches.
+        let mut pushes: Vec<(u32, f64)> = Vec::with_capacity(delta.edge_deltas().len() * 2);
+        let mut edge_terms = 0.0;
+        for &(i, j, dw) in delta.edge_deltas() {
+            let w_old = if (i as usize) < self.graph.num_nodes()
+                && (j as usize) < self.graph.num_nodes()
+            {
+                self.graph.weight(i, j)
+            } else {
+                0.0
+            };
+            // Clamp like Graph::add_weight does: weights cannot go negative.
+            let dw_eff = if w_old + dw < 0.0 { -w_old } else { dw };
+            edge_terms += 4.0 * w_old * dw_eff + 2.0 * dw_eff * dw_eff;
+            pushes.push((i, dw_eff));
+            pushes.push((j, dw_eff));
+        }
+        pushes.sort_unstable_by_key(|&(node, _)| node);
+        let mut dstrength: Vec<(u32, f64)> = Vec::with_capacity(pushes.len());
+        for (node, ds) in pushes {
+            match dstrength.last_mut() {
+                Some((last, acc)) if *last == node => *acc += ds,
+                _ => dstrength.push((node, ds)),
+            }
+        }
+        let mut node_terms = 0.0;
+        let mut smax_candidate = 0.0f64;
+        let mut delta_s_eff = 0.0;
+        for &(i, ds) in &dstrength {
+            let s_old =
+                if (i as usize) < self.graph.num_nodes() { self.graph.strength(i) } else { 0.0 };
+            node_terms += 2.0 * s_old * ds + ds * ds;
+            smax_candidate = smax_candidate.max(s_old + ds);
+            delta_s_eff += ds;
+        }
+        let dq = node_terms + edge_terms;
+        let (q_new, s_new) = if self.s_total > 0.0 {
+            let c = 1.0 / self.s_total;
+            // Use the effective (clamp-aware) ΔS for consistency with dq.
+            let s_new = self.s_total + delta_s_eff;
+            let denom = 1.0 + c * delta_s_eff;
+            if denom <= 0.0 || s_new <= 0.0 {
+                (0.0, 0.0) // graph emptied
+            } else {
+                let q = (self.q - 1.0) / (denom * denom) - (c / denom).powi(2) * dq + 1.0;
+                (q, s_new)
+            }
+        } else {
+            // starting from an empty graph: compute Q′ from scratch terms
+            let _ = delta_s;
+            let s_new = delta_s_eff;
+            if s_new <= 0.0 {
+                (0.0, 0.0)
+            } else {
+                let c_new = 1.0 / s_new;
+                // Q′ = 1 − c′²(Σ s′² + 2Σ w′²); from empty graph dq collects
+                // exactly Σ Δs² + 2Σ Δw².
+                (1.0 - c_new * c_new * dq, s_new)
+            }
+        };
+        // s_max′: the paper's monotone rule, or an exact O(Δ log n)
+        // adjustment scan over the strength multiset under `Exact`.
+        let s_max_new = match self.policy {
+            _ if !want_smax => 0.0, // caller recomputes (apply's Exact path)
+            SmaxPolicy::PaperFaithful => self.s_max.max(smax_candidate),
+            SmaxPolicy::Exact => {
+                let mut adj_pushes: Vec<(u64, i64)> = Vec::with_capacity(dstrength.len() * 2);
+                for &(i, ds) in &dstrength {
+                    let s_old = if (i as usize) < self.graph.num_nodes() {
+                        self.graph.strength(i)
+                    } else {
+                        0.0
+                    };
+                    if s_old > 0.0 {
+                        adj_pushes.push((s_old.to_bits(), -1));
+                    }
+                    let s_new_i = s_old + ds;
+                    if s_new_i > 0.0 {
+                        adj_pushes.push((s_new_i.to_bits(), 1));
+                    }
+                }
+                adj_pushes.sort_unstable_by_key(|&(k, _)| k);
+                let mut adj: Vec<(u64, i64)> = Vec::with_capacity(adj_pushes.len());
+                for (k, d) in adj_pushes {
+                    match adj.last_mut() {
+                        Some((last, acc)) if *last == k => *acc += d,
+                        _ => adj.push((k, d)),
+                    }
+                }
+                let mut best = 0.0f64;
+                // candidates introduced (or still positive) among touched keys
+                for &(bits, d) in &adj {
+                    let eff = self.strengths.get(&bits).map(|&c| c as i64).unwrap_or(0) + d;
+                    if eff > 0 {
+                        best = best.max(f64::from_bits(bits));
+                    }
+                }
+                // top of the untouched multiset
+                for (&bits, &cnt) in self.strengths.iter().rev() {
+                    let eff = cnt as i64
+                        + adj
+                            .binary_search_by_key(&bits, |&(k, _)| k)
+                            .map(|idx| adj[idx].1)
+                            .unwrap_or(0);
+                    if eff > 0 {
+                        best = best.max(f64::from_bits(bits));
+                        break;
+                    }
+                }
+                best
+            }
+        };
+        PreviewedState { q: q_new, s_total: s_new, s_max: s_max_new }
+    }
+
+    /// H̃(G ⊕ ΔG) without committing (Algorithm 2 line 1). O(Δn + Δm).
+    pub fn htilde_after(&self, delta: &DeltaGraph) -> f64 {
+        let p = self.preview(delta);
+        p.htilde()
+    }
+
+    /// Commit ΔG: G ← G ⊕ ΔG, updating Q via Theorem 2 and s_max per policy.
+    /// O(Δn + Δm) (Exact policy adds O(log n) per touched node).
+    pub fn apply(&mut self, delta: &DeltaGraph) {
+        // Exact policy recomputes s_max from the multiset below, so skip the
+        // preview's O(Δ log n) s_max adjustment scan on that path.
+        let preview = self.preview_impl(delta, self.policy == SmaxPolicy::PaperFaithful);
+        self.apply_previewed(delta, preview);
+    }
+
+    /// Commit ΔG reusing an already-computed `preview(delta)` result
+    /// (Algorithm 2 previews ΔG for its score anyway — one preview saved).
+    pub fn apply_previewed(&mut self, delta: &DeltaGraph, preview: PreviewedState) {
+        // capture strengths of touched nodes before mutation (Exact policy)
+        let mut touched: Vec<u32> = Vec::new();
+        if self.policy == SmaxPolicy::Exact {
+            let mut seen = std::collections::HashSet::new();
+            for &(i, j, _) in delta.edge_deltas() {
+                if seen.insert(i) {
+                    touched.push(i);
+                }
+                if seen.insert(j) {
+                    touched.push(j);
+                }
+            }
+            for &i in &touched {
+                if (i as usize) < self.graph.num_nodes() {
+                    self.remove_strength(self.graph.strength(i));
+                }
+            }
+        }
+        delta.apply_to(&mut self.graph);
+        self.q = preview.q;
+        self.s_total = preview.s_total;
+        match self.policy {
+            SmaxPolicy::PaperFaithful => {
+                self.s_max = preview.s_max;
+            }
+            SmaxPolicy::Exact => {
+                for &i in &touched {
+                    self.insert_strength(self.graph.strength(i));
+                }
+                self.s_max = self
+                    .strengths
+                    .keys()
+                    .next_back()
+                    .map(|&b| f64::from_bits(b))
+                    .unwrap_or(0.0);
+            }
+        }
+        self.steps += 1;
+    }
+
+    fn remove_strength(&mut self, s: f64) {
+        if s <= 0.0 {
+            return;
+        }
+        let key = s.to_bits();
+        if let Some(cnt) = self.strengths.get_mut(&key) {
+            *cnt -= 1;
+            if *cnt == 0 {
+                self.strengths.remove(&key);
+            }
+        }
+    }
+
+    fn insert_strength(&mut self, s: f64) {
+        if s > 0.0 {
+            *self.strengths.entry(s.to_bits()).or_insert(0) += 1;
+        }
+    }
+
+    /// Rebuild Q/c/s_max from the stored graph (O(n+m)) — drift correction
+    /// hook for long streams; returns the |ΔQ| correction applied.
+    pub fn resync(&mut self) -> f64 {
+        let q_fresh = crate::entropy::quadratic_q(&self.graph);
+        let drift = (q_fresh - self.q).abs();
+        *self = Self::with_policy(std::mem::take(&mut self.graph), self.policy);
+        drift
+    }
+}
+
+/// Previewed (Q′, c′, s_max′) for a hypothetical G ⊕ ΔG.
+#[derive(Debug, Clone, Copy)]
+pub struct PreviewedState {
+    pub q: f64,
+    pub s_total: f64,
+    pub s_max: f64,
+}
+
+impl PreviewedState {
+    pub fn c(&self) -> f64 {
+        if self.s_total > 0.0 {
+            1.0 / self.s_total
+        } else {
+            0.0
+        }
+    }
+
+    /// H̃ from the previewed parts (Eq. 3).
+    pub fn htilde(&self) -> f64 {
+        crate::entropy::htilde_from_parts(self.q, self.c(), self.s_max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::entropy::{finger_htilde, quadratic_q};
+    use crate::generators;
+    use crate::graph::ops;
+    use crate::util::Pcg64;
+
+    fn random_delta(g: &Graph, rng: &mut Pcg64, ops_count: usize) -> DeltaGraph {
+        let n = g.num_nodes() as u32;
+        let mut d = DeltaGraph::new();
+        for _ in 0..ops_count {
+            let i = rng.below(n as usize) as u32;
+            let mut j = rng.below(n as usize) as u32;
+            if i == j {
+                j = (j + 1) % n;
+            }
+            match rng.below(3) {
+                0 => d.add(i, j, rng.uniform(0.1, 2.0)),            // add/increase
+                1 => d.add(i, j, -g.weight(i.min(j), i.max(j))),    // delete
+                _ => d.add(i, j, rng.uniform(-0.5, 0.5)),           // perturb
+            };
+        }
+        d.coalesced()
+    }
+
+    #[test]
+    fn q_update_matches_scratch_single_delta() {
+        let mut rng = Pcg64::new(1);
+        let g = generators::erdos_renyi(60, 0.1, &mut rng);
+        let mut state = FingerState::new(g.clone());
+        let d = random_delta(&g, &mut rng, 15);
+        state.apply(&d);
+        let composed = ops::compose(&g, &d);
+        let q_scratch = quadratic_q(&composed);
+        assert!((state.q() - q_scratch).abs() < 1e-10, "{} vs {q_scratch}", state.q());
+    }
+
+    #[test]
+    fn q_update_stable_over_long_stream() {
+        let mut rng = Pcg64::new(2);
+        let g = generators::erdos_renyi(50, 0.1, &mut rng);
+        let mut state = FingerState::new(g);
+        for _ in 0..500 {
+            let d = random_delta(state.graph(), &mut rng, 5);
+            state.apply(&d);
+        }
+        let q_scratch = quadratic_q(state.graph());
+        assert!((state.q() - q_scratch).abs() < 1e-8, "{} vs {q_scratch}", state.q());
+        state.graph().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn exact_policy_tracks_smax_under_deletions() {
+        let mut g = Graph::new(4);
+        g.set_weight(0, 1, 10.0);
+        g.set_weight(2, 3, 1.0);
+        let mut state = FingerState::new(g);
+        assert_eq!(state.s_max(), 10.0);
+        let mut d = DeltaGraph::new();
+        d.add(0, 1, -10.0); // delete heavy edge
+        state.apply(&d);
+        assert_eq!(state.s_max(), 1.0); // exact policy decreases
+        assert!((state.htilde() - finger_htilde(state.graph())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_policy_never_decreases_smax() {
+        let mut g = Graph::new(4);
+        g.set_weight(0, 1, 10.0);
+        g.set_weight(2, 3, 1.0);
+        let mut state = FingerState::with_policy(g, SmaxPolicy::PaperFaithful);
+        let mut d = DeltaGraph::new();
+        d.add(0, 1, -10.0);
+        state.apply(&d);
+        assert_eq!(state.s_max(), 10.0); // monotone rule keeps the stale max
+    }
+
+    #[test]
+    fn htilde_matches_from_scratch_on_growth_stream() {
+        // additions only: both policies should equal the from-scratch H̃
+        let mut rng = Pcg64::new(3);
+        let g = generators::erdos_renyi(40, 0.05, &mut rng);
+        let mut state = FingerState::new(g);
+        for _ in 0..50 {
+            let n = state.graph().num_nodes() as u32;
+            let mut d = DeltaGraph::new();
+            let i = rng.below(n as usize) as u32;
+            let j = (i + 1 + rng.below(n as usize - 1) as u32) % n;
+            if i != j {
+                d.add(i, j, rng.uniform(0.2, 1.5));
+            }
+            state.apply(&d);
+            let fresh = finger_htilde(state.graph());
+            assert!((state.htilde() - fresh).abs() < 1e-9, "{} vs {fresh}", state.htilde());
+        }
+    }
+
+    #[test]
+    fn preview_does_not_mutate() {
+        let mut rng = Pcg64::new(4);
+        let g = generators::erdos_renyi(30, 0.2, &mut rng);
+        let state = FingerState::new(g.clone());
+        let d = random_delta(&g, &mut rng, 10);
+        let _ = state.preview(&d);
+        assert_eq!(state.graph().num_edges(), g.num_edges());
+        assert!((state.q() - quadratic_q(&g)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn preview_halved_matches_average_graph() {
+        // Algorithm 2's G ⊕ ΔG/2 equals the averaged graph (G + G')/2
+        let mut rng = Pcg64::new(5);
+        let g = generators::erdos_renyi(40, 0.1, &mut rng);
+        let d = random_delta(&g, &mut rng, 12);
+        // use only additive part to avoid clamping asymmetries in this check
+        let d = DeltaGraph::diff(&g, &ops::compose(&g, &d));
+        let state = FingerState::new(g.clone());
+        let p_half = state.preview(&d.half());
+        let avg = crate::graph::ops::average_graph(&g, &ops::compose(&g, &d));
+        assert!((p_half.q - quadratic_q(&avg)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn growth_from_empty_graph() {
+        let mut state = FingerState::new(Graph::new(0));
+        let mut d = DeltaGraph::new();
+        d.grow_nodes(3).add(0, 1, 1.0).add(1, 2, 1.0);
+        state.apply(&d);
+        assert_eq!(state.graph().num_nodes(), 3);
+        let q_scratch = quadratic_q(state.graph());
+        assert!((state.q() - q_scratch).abs() < 1e-12, "{} vs {q_scratch}", state.q());
+    }
+
+    #[test]
+    fn emptying_the_graph_resets() {
+        let g = Graph::from_edges(3, &[(0, 1, 1.0), (1, 2, 1.0)]);
+        let mut state = FingerState::new(g.clone());
+        let mut d = DeltaGraph::new();
+        d.add(0, 1, -1.0).add(1, 2, -1.0);
+        state.apply(&d);
+        assert_eq!(state.s_total(), 0.0);
+        assert_eq!(state.htilde(), 0.0);
+    }
+
+    #[test]
+    fn clamped_deletion_matches_graph_semantics() {
+        // deleting more weight than exists must agree with Graph::add_weight
+        let g = Graph::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0)]);
+        let mut state = FingerState::new(g.clone());
+        let mut d = DeltaGraph::new();
+        d.add(0, 1, -5.0); // over-delete
+        state.apply(&d);
+        let q_scratch = quadratic_q(state.graph());
+        assert!((state.q() - q_scratch).abs() < 1e-12);
+        assert_eq!(state.graph().num_edges(), 1);
+    }
+
+    #[test]
+    fn resync_reports_zero_drift_after_exact_updates() {
+        let mut rng = Pcg64::new(6);
+        let g = generators::erdos_renyi(30, 0.15, &mut rng);
+        let mut state = FingerState::new(g);
+        for _ in 0..20 {
+            let d = random_delta(state.graph(), &mut rng, 4);
+            state.apply(&d);
+        }
+        let drift = state.resync();
+        assert!(drift < 1e-9, "drift={drift}");
+    }
+
+    #[test]
+    fn steps_counter() {
+        let mut state = FingerState::new(Graph::new(2));
+        let mut d = DeltaGraph::new();
+        d.add(0, 1, 1.0);
+        state.apply(&d);
+        assert_eq!(state.steps(), 1);
+    }
+}

@@ -1,0 +1,241 @@
+//! Von Neumann graph entropy (VNGE): the exact O(n³) definition, the paper's
+//! two linear-time FINGER approximations (Ĥ, H̃), the O(Δn+Δm) incremental
+//! state (Theorem 2), and the two heuristic baselines (VNGE-NL, VNGE-GL).
+
+pub mod baselines;
+pub mod incremental;
+
+pub use incremental::FingerState;
+
+use crate::graph::{Csr, Graph};
+use crate::linalg::{power_iteration, PowerOpts, SymMatrix};
+
+/// Shannon entropy of an eigenspectrum: −Σ λᵢ ln λᵢ with the 0·ln0 = 0
+/// convention. Negative eigenvalues within −tol are clamped (numerical noise
+/// from the eigensolver); anything below that is a caller bug.
+pub fn entropy_from_eigenvalues(eigs: &[f64]) -> f64 {
+    const TOL: f64 = 1e-12;
+    let mut h = 0.0;
+    for &l in eigs {
+        debug_assert!(l > -1e-8, "significantly negative eigenvalue {l}");
+        if l > TOL {
+            h -= l * l.ln();
+        }
+    }
+    h
+}
+
+/// Exact VNGE `H(G) = −Σ λᵢ ln λᵢ` over the eigenspectrum of
+/// L_N = L/trace(L). O(n³) via the dense eigensolver — this is the baseline
+/// FINGER's CTRR is measured against. Returns 0 for edgeless graphs.
+pub fn exact_vnge(g: &Graph) -> f64 {
+    if g.total_weight() <= 0.0 {
+        return 0.0;
+    }
+    let eigs = SymMatrix::laplacian_normalized(g).eigenvalues();
+    entropy_from_eigenvalues(&eigs)
+}
+
+/// The quadratic proxy Q of Lemma 1:
+/// `Q = 1 − c²(Σᵢ sᵢ² + 2·Σ_{(i,j)∈E} wᵢⱼ²)`, c = 1/trace(L). O(n+m).
+/// Equals `1 − Σ λᵢ²` exactly (an identity, not an approximation).
+pub fn quadratic_q(g: &Graph) -> f64 {
+    let s = g.total_weight();
+    if s <= 0.0 {
+        return 0.0;
+    }
+    let c = 1.0 / s;
+    let (s2, w2) = g.q_moments();
+    1.0 - c * c * (s2 + 2.0 * w2)
+}
+
+/// FINGER-Ĥ (Eq. 1): `Ĥ = −Q·ln λ_max`, λ_max via power iteration on the CSR
+/// view. O(n+m). Lower-bounds H for λ_max < 1 (any graph with a ≥3-node
+/// connected component).
+pub fn finger_hhat(g: &Graph) -> f64 {
+    finger_hhat_opts(g, &PowerOpts::default())
+}
+
+/// FINGER-Ĥ with explicit power-iteration options.
+pub fn finger_hhat_opts(g: &Graph, opts: &PowerOpts) -> f64 {
+    if g.total_weight() <= 0.0 {
+        return 0.0;
+    }
+    let q = quadratic_q(g);
+    let lam = power_iteration(&Csr::from_graph(g), opts);
+    hhat_from_parts(q, lam)
+}
+
+/// Ĥ from precomputed parts (used by the XLA offload path too).
+pub fn hhat_from_parts(q: f64, lambda_max: f64) -> f64 {
+    if lambda_max <= 0.0 {
+        return 0.0;
+    }
+    // λ_max ≤ 1 by trace normalization; ln(λ_max) ≤ 0 and Q ≥ 0.
+    (-q * lambda_max.ln()).max(0.0)
+}
+
+/// FINGER-H̃ (Eq. 2): `H̃ = −Q·ln(2c·s_max)` — replaces λ_max by the
+/// Anderson–Morley bound, enabling the O(Δ) incremental update. O(n+m) from
+/// scratch. Satisfies H̃ ≤ Ĥ ≤ H.
+pub fn finger_htilde(g: &Graph) -> f64 {
+    if g.total_weight() <= 0.0 {
+        return 0.0;
+    }
+    let q = quadratic_q(g);
+    let c = 1.0 / g.total_weight();
+    htilde_from_parts(q, c, g.s_max())
+}
+
+/// H̃ from precomputed parts (Q, c, s_max) — the incremental state's formula.
+pub fn htilde_from_parts(q: f64, c: f64, s_max: f64) -> f64 {
+    let arg = 2.0 * c * s_max;
+    if arg <= 0.0 {
+        return 0.0;
+    }
+    // 2c·s_max ≥ λ_max can exceed 1 on K_2-like graphs (λ_max = 1 exactly);
+    // clamp so the entropy surrogate stays nonnegative.
+    let arg = arg.min(1.0);
+    (-q * arg.ln()).max(0.0)
+}
+
+/// Theorem 1 bounds on H given Q and the extreme positive eigenvalues of L_N:
+/// `−Q·ln(λ_max)/(1−λ_min) ≤ H ≤ −Q·ln(λ_min)/(1−λ_max)` (requires λ_max<1).
+pub fn theorem1_bounds(q: f64, lambda_min: f64, lambda_max: f64) -> Option<(f64, f64)> {
+    if !(0.0 < lambda_min && lambda_min <= lambda_max && lambda_max < 1.0) {
+        return None;
+    }
+    let lower = -q * lambda_max.ln() / (1.0 - lambda_min);
+    let upper = -q * lambda_min.ln() / (1.0 - lambda_max);
+    Some((lower, upper))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn entropy_of_uniform_spectrum() {
+        // k equal eigenvalues 1/k -> ln k
+        let eigs = vec![0.25; 4];
+        assert!((entropy_from_eigenvalues(&eigs) - 4f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_ignores_zeros() {
+        let eigs = vec![0.5, 0.5, 0.0, 0.0];
+        assert!((entropy_from_eigenvalues(&eigs) - 2f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn complete_graph_exact_equals_ln_n_minus_1() {
+        // Theorem 1 equality case: H(K_n) = ln(n−1)
+        for n in [4, 8, 16] {
+            let g = generators::complete(n, 1.0);
+            let h = exact_vnge(&g);
+            assert!((h - ((n - 1) as f64).ln()).abs() < 1e-9, "n={n} h={h}");
+        }
+    }
+
+    #[test]
+    fn complete_graph_weighted_invariant() {
+        // identical edge weight x doesn't change H (trace normalization)
+        let h1 = exact_vnge(&generators::complete(10, 1.0));
+        let h2 = exact_vnge(&generators::complete(10, 3.7));
+        assert!((h1 - h2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn q_matches_eigen_identity() {
+        // Q = 1 − Σλ² exactly (eq. S1)
+        let mut rng = Pcg64::new(5);
+        let g = generators::erdos_renyi(60, 0.1, &mut rng);
+        let q = quadratic_q(&g);
+        let eigs = SymMatrix::laplacian_normalized(&g).eigenvalues();
+        let q_eig = 1.0 - eigs.iter().map(|l| l * l).sum::<f64>();
+        assert!((q - q_eig).abs() < 1e-9, "{q} vs {q_eig}");
+    }
+
+    #[test]
+    fn ordering_htilde_le_hhat_le_h() {
+        for seed in 0..6 {
+            let mut rng = Pcg64::new(seed);
+            let g = generators::erdos_renyi(80, 0.08, &mut rng);
+            if g.num_edges() < 3 {
+                continue;
+            }
+            let h = exact_vnge(&g);
+            let hhat = finger_hhat(&g);
+            let htil = finger_htilde(&g);
+            assert!(htil <= hhat + 1e-9, "seed={seed}: {htil} > {hhat}");
+            assert!(hhat <= h + 1e-6, "seed={seed}: {hhat} > {h}");
+        }
+    }
+
+    #[test]
+    fn single_edge_graph_zero_entropy() {
+        // K_2: spectrum of L_N is {0, 1} -> H = 0; Q = 0 so Ĥ = H̃ = 0 too
+        let g = Graph::from_edges(2, &[(0, 1, 3.0)]);
+        assert!(exact_vnge(&g).abs() < 1e-12);
+        assert!(finger_hhat(&g).abs() < 1e-12);
+        assert!(finger_htilde(&g).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_graph_zero() {
+        let g = Graph::new(5);
+        assert_eq!(exact_vnge(&g), 0.0);
+        assert_eq!(finger_hhat(&g), 0.0);
+        assert_eq!(finger_htilde(&g), 0.0);
+        assert_eq!(quadratic_q(&g), 0.0);
+    }
+
+    #[test]
+    fn theorem1_bounds_contain_h() {
+        let mut rng = Pcg64::new(17);
+        let g = generators::erdos_renyi(50, 0.15, &mut rng);
+        let h = exact_vnge(&g);
+        let q = quadratic_q(&g);
+        let eigs = SymMatrix::laplacian_normalized(&g).eigenvalues();
+        let pos: Vec<f64> = eigs.iter().copied().filter(|&l| l > 1e-10).collect();
+        let (lmin, lmax) = (pos[0], *pos.last().unwrap());
+        let (lo, hi) = theorem1_bounds(q, lmin, lmax).unwrap();
+        assert!(lo <= h + 1e-9 && h <= hi + 1e-9, "{lo} <= {h} <= {hi}");
+    }
+
+    #[test]
+    fn theorem1_rejects_degenerate() {
+        assert!(theorem1_bounds(0.5, 0.0, 0.5).is_none());
+        assert!(theorem1_bounds(0.5, 0.2, 1.0).is_none());
+        assert!(theorem1_bounds(0.5, 0.6, 0.5).is_none());
+    }
+
+    #[test]
+    fn h_upper_bound_ln_n_minus_1() {
+        // H(G) ≤ ln(n−1) for any G (Passerini–Severini)
+        for seed in 0..4 {
+            let mut rng = Pcg64::new(seed + 100);
+            let g = generators::barabasi_albert(60, 3, &mut rng);
+            assert!(exact_vnge(&g) <= (59f64).ln() + 1e-9);
+        }
+    }
+
+    #[test]
+    fn approximation_error_decays_with_density() {
+        // Fig 1 behaviour: AE = H − Ĥ shrinks as average degree grows
+        let mut rng = Pcg64::new(23);
+        let sparse = generators::erdos_renyi_avg_degree(150, 4.0, &mut rng);
+        let dense = generators::erdos_renyi_avg_degree(150, 60.0, &mut rng);
+        let ae_sparse = exact_vnge(&sparse) - finger_hhat(&sparse);
+        let ae_dense = exact_vnge(&dense) - finger_hhat(&dense);
+        assert!(ae_dense < ae_sparse, "{ae_dense} !< {ae_sparse}");
+    }
+
+    #[test]
+    fn hhat_from_parts_clamps() {
+        assert_eq!(hhat_from_parts(0.5, 0.0), 0.0);
+        assert_eq!(hhat_from_parts(-1e-18, 0.5), 0.0); // tiny negative Q noise
+    }
+}

@@ -1,0 +1,268 @@
+//! Random and deterministic graph generators used across the paper's
+//! experiments: Erdős–Rényi (ER), Barabási–Albert (BA), Watts–Strogatz (WS),
+//! plus closed-form families (complete, ring, star, path) used as eigensolver
+//! ground truth.
+
+use crate::graph::Graph;
+use crate::util::rng::Pcg64;
+
+/// Erdős–Rényi G(n, p): every node pair connected independently with
+/// probability p. Uses geometric skipping, O(n + m) expected, so sparse
+/// graphs at n ≥ 10⁵ are fine.
+pub fn erdos_renyi(n: usize, p: f64, rng: &mut Pcg64) -> Graph {
+    assert!((0.0..=1.0).contains(&p), "p out of range");
+    let mut g = Graph::new(n);
+    if p <= 0.0 || n < 2 {
+        return g;
+    }
+    if p >= 1.0 {
+        return complete(n, 1.0);
+    }
+    // Batagelj–Brandes geometric skipping over lower-triangular pairs
+    // (v, w) with w < v: O(n + m) expected.
+    let lq = (1.0 - p).ln();
+    let mut v: usize = 1;
+    let mut w: i64 = -1;
+    while v < n {
+        let r = 1.0 - rng.f64();
+        w += 1 + (r.ln() / lq).floor() as i64;
+        while w >= v as i64 && v < n {
+            w -= v as i64;
+            v += 1;
+        }
+        if v < n {
+            g.set_weight(v as u32, w as u32, 1.0);
+        }
+    }
+    g
+}
+
+/// ER with a target average degree d̄ (p = d̄/(n−1)).
+pub fn erdos_renyi_avg_degree(n: usize, avg_degree: f64, rng: &mut Pcg64) -> Graph {
+    let p = (avg_degree / (n.max(2) - 1) as f64).clamp(0.0, 1.0);
+    erdos_renyi(n, p, rng)
+}
+
+/// Barabási–Albert preferential attachment: start from a small clique of
+/// `m0 = m_attach` nodes, each new node attaches to `m_attach` distinct
+/// existing nodes with probability ∝ degree. Degree distribution is
+/// power-law; eigenspectrum imbalanced (the paper's SAE-growth case).
+pub fn barabasi_albert(n: usize, m_attach: usize, rng: &mut Pcg64) -> Graph {
+    assert!(m_attach >= 1 && n > m_attach, "need n > m_attach >= 1");
+    let mut g = Graph::new(n);
+    // Repeated-node list trick: sampling uniformly from `targets` is
+    // sampling proportional to degree.
+    let mut targets: Vec<u32> = Vec::with_capacity(2 * n * m_attach);
+    // seed clique
+    for i in 0..m_attach as u32 {
+        for j in (i + 1)..m_attach as u32 {
+            g.set_weight(i, j, 1.0);
+            targets.push(i);
+            targets.push(j);
+        }
+    }
+    if m_attach == 1 {
+        targets.push(0); // lone seed node must be attachable
+    }
+    for v in m_attach..n {
+        // small Vec instead of HashSet: m_attach is tiny and std HashSet's
+        // salted iteration order would break cross-run determinism
+        let mut chosen: Vec<u32> = Vec::with_capacity(m_attach);
+        while chosen.len() < m_attach.min(v) {
+            let t = targets[rng.below(targets.len())];
+            if !chosen.contains(&t) {
+                chosen.push(t);
+            }
+        }
+        for &t in &chosen {
+            g.set_weight(v as u32, t, 1.0);
+            targets.push(v as u32);
+            targets.push(t);
+        }
+    }
+    g
+}
+
+/// Watts–Strogatz small world: ring lattice with k nearest neighbors per
+/// side... (k even, k/2 per side), then each edge rewired with probability
+/// p_ws to a uniform non-duplicate target. Smaller p_ws → more regular graph.
+pub fn watts_strogatz(n: usize, k: usize, p_ws: f64, rng: &mut Pcg64) -> Graph {
+    assert!(k % 2 == 0 && k < n, "WS needs even k < n");
+    assert!((0.0..=1.0).contains(&p_ws));
+    let mut g = Graph::new(n);
+    for i in 0..n {
+        for d in 1..=(k / 2) {
+            let j = (i + d) % n;
+            g.set_weight(i as u32, j as u32, 1.0);
+        }
+    }
+    // Rewire each original lattice edge (i, i+d) with probability p_ws.
+    for i in 0..n {
+        for d in 1..=(k / 2) {
+            let j = (i + d) % n;
+            if !g.has_edge(i as u32, j as u32) {
+                continue; // already rewired away
+            }
+            if rng.bernoulli(p_ws) {
+                // pick a new target avoiding self and duplicates
+                let mut tries = 0;
+                loop {
+                    let t = rng.below(n) as u32;
+                    if t != i as u32 && !g.has_edge(i as u32, t) {
+                        g.remove_edge(i as u32, j as u32);
+                        g.set_weight(i as u32, t, 1.0);
+                        break;
+                    }
+                    tries += 1;
+                    if tries > 64 {
+                        break; // node saturated; keep lattice edge
+                    }
+                }
+            }
+        }
+    }
+    g
+}
+
+/// Complete graph K_n with identical edge weight (VNGE ground truth:
+/// H = ln(n−1), Theorem 1 equality case).
+pub fn complete(n: usize, weight: f64) -> Graph {
+    let mut g = Graph::new(n);
+    for i in 0..n as u32 {
+        for j in (i + 1)..n as u32 {
+            g.set_weight(i, j, weight);
+        }
+    }
+    g
+}
+
+/// Ring (cycle) C_n — Laplacian eigenvalues 2−2cos(2πk/n).
+pub fn ring(n: usize) -> Graph {
+    let mut g = Graph::new(n);
+    for i in 0..n {
+        g.set_weight(i as u32, ((i + 1) % n) as u32, 1.0);
+    }
+    g
+}
+
+/// Star S_n (one hub, n−1 leaves) — Laplacian eigenvalues {0, 1×(n−2), n}.
+pub fn star(n: usize) -> Graph {
+    let mut g = Graph::new(n);
+    for i in 1..n {
+        g.set_weight(0, i as u32, 1.0);
+    }
+    g
+}
+
+/// Path P_n — Laplacian eigenvalues 2−2cos(πk/n).
+pub fn path(n: usize) -> Graph {
+    let mut g = Graph::new(n);
+    for i in 0..n.saturating_sub(1) {
+        g.set_weight(i as u32, (i + 1) as u32, 1.0);
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn er_edge_count_near_expectation() {
+        let mut rng = Pcg64::new(1);
+        let (n, p) = (500, 0.02);
+        let g = erdos_renyi(n, p, &mut rng);
+        let expected = p * (n * (n - 1) / 2) as f64;
+        let m = g.num_edges() as f64;
+        assert!((m - expected).abs() < 4.0 * expected.sqrt() + 10.0, "m={m} expected={expected}");
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn er_p_zero_and_one() {
+        let mut rng = Pcg64::new(2);
+        assert_eq!(erdos_renyi(50, 0.0, &mut rng).num_edges(), 0);
+        assert_eq!(erdos_renyi(10, 1.0, &mut rng).num_edges(), 45);
+    }
+
+    #[test]
+    fn er_avg_degree_matches() {
+        let mut rng = Pcg64::new(3);
+        let g = erdos_renyi_avg_degree(1000, 10.0, &mut rng);
+        let avg = 2.0 * g.num_edges() as f64 / 1000.0;
+        assert!((avg - 10.0).abs() < 1.5, "avg={avg}");
+    }
+
+    #[test]
+    fn ba_edge_count_exact() {
+        let mut rng = Pcg64::new(4);
+        let (n, m) = (200, 3);
+        let g = barabasi_albert(n, m, &mut rng);
+        // clique(3)=3 edges + (n-3)*3
+        assert_eq!(g.num_edges(), 3 + (n - m) * m);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn ba_is_connected_and_heavy_tailed() {
+        let mut rng = Pcg64::new(5);
+        let g = barabasi_albert(500, 2, &mut rng);
+        assert_eq!(g.connected_components(), 1);
+        let max_deg = (0..500).map(|i| g.degree(i)).max().unwrap();
+        assert!(max_deg > 20, "max_deg={max_deg}"); // hubs exist
+    }
+
+    #[test]
+    fn ws_p_zero_is_regular_lattice() {
+        let mut rng = Pcg64::new(6);
+        let g = watts_strogatz(100, 6, 0.0, &mut rng);
+        for i in 0..100 {
+            assert_eq!(g.degree(i), 6);
+        }
+        assert_eq!(g.num_edges(), 300);
+    }
+
+    #[test]
+    fn ws_rewiring_preserves_edge_count() {
+        let mut rng = Pcg64::new(7);
+        let g = watts_strogatz(200, 8, 0.5, &mut rng);
+        assert_eq!(g.num_edges(), 800);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn ws_high_p_breaks_regularity() {
+        let mut rng = Pcg64::new(8);
+        let g = watts_strogatz(200, 6, 0.9, &mut rng);
+        let degs: Vec<usize> = (0..200).map(|i| g.degree(i)).collect();
+        assert!(degs.iter().any(|&d| d != 6));
+    }
+
+    #[test]
+    fn complete_structure() {
+        let g = complete(5, 2.0);
+        assert_eq!(g.num_edges(), 10);
+        assert_eq!(g.strength(0), 8.0);
+    }
+
+    #[test]
+    fn ring_star_path_degrees() {
+        assert!(ring(6).strengths().iter().all(|&s| s == 2.0));
+        let s = star(6);
+        assert_eq!(s.strength(0), 5.0);
+        assert_eq!(s.strength(3), 1.0);
+        let p = path(5);
+        assert_eq!(p.strength(0), 1.0);
+        assert_eq!(p.strength(2), 2.0);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let g1 = erdos_renyi(100, 0.05, &mut Pcg64::new(9));
+        let g2 = erdos_renyi(100, 0.05, &mut Pcg64::new(9));
+        assert_eq!(g1.num_edges(), g2.num_edges());
+        for (i, j, w) in g1.edges() {
+            assert_eq!(g2.weight(i, j), w);
+        }
+    }
+}

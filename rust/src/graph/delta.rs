@@ -1,0 +1,214 @@
+//! ΔG — the paper's incremental graph-change object (§2.4, Theorem 2).
+//!
+//! A `DeltaGraph` records signed edge-weight deltas Δw_ij plus the number of
+//! new nodes appended, so that `G' = G ⊕ ΔG` and the FINGER state can be
+//! advanced in O(Δn + Δm).
+
+use super::Graph;
+
+/// A batch of incremental changes converting G into G' = G ⊕ ΔG.
+///
+/// `edges[(i,j)] = Δw_ij` may be negative (weight decrease / deletion). Node
+/// additions are expressed by `new_nodes` (appended ids) — deletions of nodes
+/// are modeled as deletion of all their incident edges, matching the paper's
+/// common-node-set convention (footnote 4: 𝒱_c = 𝒱 ∪ 𝒱').
+#[derive(Debug, Clone, Default)]
+pub struct DeltaGraph {
+    edges: Vec<(u32, u32, f64)>,
+    new_nodes: usize,
+}
+
+impl DeltaGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record Δw on edge (i,j); i != j, order-normalized to i < j.
+    pub fn add(&mut self, i: u32, j: u32, dw: f64) -> &mut Self {
+        assert!(i != j, "self-loops are not representable");
+        let (a, b) = if i < j { (i, j) } else { (j, i) };
+        self.edges.push((a, b, dw));
+        self
+    }
+
+    /// Append `k` fresh nodes to the graph.
+    pub fn grow_nodes(&mut self, k: usize) -> &mut Self {
+        self.new_nodes += k;
+        self
+    }
+
+    pub fn edge_deltas(&self) -> &[(u32, u32, f64)] {
+        &self.edges
+    }
+
+    pub fn new_nodes(&self) -> usize {
+        self.new_nodes
+    }
+
+    /// Δm — number of touched edges.
+    pub fn num_changes(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty() && self.new_nodes == 0
+    }
+
+    /// ΔS = 2·Σ Δw_ij (the trace change of L).
+    pub fn delta_total_weight(&self) -> f64 {
+        2.0 * self.edges.iter().map(|&(_, _, dw)| dw).sum::<f64>()
+    }
+
+    /// ΔG/2 — halve every weight delta (used by Algorithm 2's mid-point graph
+    /// G ⊕ ΔG/2). Node growth is preserved.
+    pub fn half(&self) -> Self {
+        Self {
+            edges: self.edges.iter().map(|&(i, j, dw)| (i, j, dw / 2.0)).collect(),
+            new_nodes: self.new_nodes,
+        }
+    }
+
+    /// Scale every weight delta by `f`.
+    pub fn scaled(&self, f: f64) -> Self {
+        Self {
+            edges: self.edges.iter().map(|&(i, j, dw)| (i, j, dw * f)).collect(),
+            new_nodes: self.new_nodes,
+        }
+    }
+
+    /// Coalesce duplicate (i,j) entries into a single summed delta (keeps
+    /// apply/‌incremental costs proportional to distinct touched edges).
+    pub fn coalesced(&self) -> Self {
+        let mut map: crate::util::hash::DetHashMap<(u32, u32), f64> = Default::default();
+        for &(i, j, dw) in &self.edges {
+            *map.entry((i, j)).or_insert(0.0) += dw;
+        }
+        let mut edges: Vec<_> =
+            map.into_iter().filter(|&(_, dw)| dw != 0.0).map(|((i, j), dw)| (i, j, dw)).collect();
+        edges.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        Self { edges, new_nodes: self.new_nodes }
+    }
+
+    /// The largest node id referenced (for sizing), if any.
+    pub fn max_node(&self) -> Option<u32> {
+        self.edges.iter().map(|&(i, j, _)| i.max(j)).max()
+    }
+
+    /// Apply to a graph in place: G ← G ⊕ ΔG. Grows the node set as needed.
+    /// Weight deltas that would drive a weight below zero clamp to edge
+    /// removal (the class 𝒢 has nonnegative weights).
+    pub fn apply_to(&self, g: &mut Graph) {
+        let need = self
+            .max_node()
+            .map(|mx| mx as usize + 1)
+            .unwrap_or(0)
+            .max(g.num_nodes() + self.new_nodes);
+        g.ensure_nodes(need);
+        for &(i, j, dw) in &self.edges {
+            g.add_weight(i, j, dw);
+        }
+    }
+
+    /// Build the ΔG that converts `from` into `to` (both on a common node
+    /// set; `to` may be larger). Inverse of `apply_to` up to clamping.
+    pub fn diff(from: &Graph, to: &Graph) -> Self {
+        let mut d = Self::new();
+        if to.num_nodes() > from.num_nodes() {
+            d.grow_nodes(to.num_nodes() - from.num_nodes());
+        }
+        for (i, j, w) in to.edges() {
+            let old = if (i as usize) < from.num_nodes() && (j as usize) < from.num_nodes() {
+                from.weight(i, j)
+            } else {
+                0.0
+            };
+            if (w - old).abs() > 0.0 {
+                d.add(i, j, w - old);
+            }
+        }
+        for (i, j, w) in from.edges() {
+            if !to.has_edge(i, j)
+                || (i as usize) >= to.num_nodes()
+                || (j as usize) >= to.num_nodes()
+            {
+                let _ = w;
+                if to.weight(i, j) == 0.0 {
+                    d.add(i, j, -w);
+                }
+            }
+        }
+        d.coalesced()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_adds_edges_and_nodes() {
+        let mut g = Graph::new(2);
+        let mut d = DeltaGraph::new();
+        d.grow_nodes(1).add(0, 2, 1.5).add(0, 1, 2.0);
+        d.apply_to(&mut g);
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.weight(0, 2), 1.5);
+        assert_eq!(g.weight(0, 1), 2.0);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn apply_negative_removes() {
+        let mut g = Graph::from_edges(3, &[(0, 1, 2.0)]);
+        let mut d = DeltaGraph::new();
+        d.add(0, 1, -2.0);
+        d.apply_to(&mut g);
+        assert_eq!(g.num_edges(), 0);
+    }
+
+    #[test]
+    fn half_scales_deltas() {
+        let mut d = DeltaGraph::new();
+        d.add(0, 1, 4.0).add(1, 2, -2.0);
+        let h = d.half();
+        assert_eq!(h.edge_deltas(), &[(0, 1, 2.0), (1, 2, -1.0)]);
+        assert_eq!(h.delta_total_weight(), d.delta_total_weight() / 2.0);
+    }
+
+    #[test]
+    fn coalesce_merges_duplicates() {
+        let mut d = DeltaGraph::new();
+        d.add(0, 1, 1.0).add(1, 0, 2.0).add(2, 3, 1.0).add(2, 3, -1.0);
+        let c = d.coalesced();
+        assert_eq!(c.edge_deltas(), &[(0, 1, 3.0)]);
+    }
+
+    #[test]
+    fn diff_roundtrip() {
+        let a = Graph::from_edges(4, &[(0, 1, 1.0), (1, 2, 2.0)]);
+        let b = Graph::from_edges(5, &[(0, 1, 3.0), (2, 3, 1.0)]);
+        let d = DeltaGraph::diff(&a, &b);
+        let mut g = a.clone();
+        d.apply_to(&mut g);
+        assert_eq!(g.num_nodes(), 5);
+        for (i, j, w) in b.edges() {
+            assert!((g.weight(i, j) - w).abs() < 1e-12, "({i},{j})");
+        }
+        assert_eq!(g.num_edges(), b.num_edges());
+    }
+
+    #[test]
+    fn delta_total_weight_is_trace_change() {
+        let a = Graph::from_edges(3, &[(0, 1, 1.0)]);
+        let b = Graph::from_edges(3, &[(0, 1, 1.0), (1, 2, 4.0)]);
+        let d = DeltaGraph::diff(&a, &b);
+        assert!((d.delta_total_weight() - (b.total_weight() - a.total_weight())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn order_normalized() {
+        let mut d = DeltaGraph::new();
+        d.add(5, 2, 1.0);
+        assert_eq!(d.edge_deltas(), &[(2, 5, 1.0)]);
+    }
+}

@@ -1,0 +1,166 @@
+//! Text I/O: weighted edge lists for snapshots and a timestamped delta-stream
+//! format for incremental workloads (mirrors how the Wikipedia datasets are
+//! distributed — rows of node/edge additions and deletions with timestamps).
+//!
+//! Edge list line:      `i j w`          (undirected, one line per edge)
+//! Delta stream line:   `t i j dw`       (signed weight delta at step t)
+//! Comment lines start with `#`, blank lines ignored.
+
+use super::{DeltaGraph, Graph};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Parse an edge list from a reader. `n_hint` sizes the node set (grown as
+/// needed when ids exceed it).
+pub fn read_edge_list<R: std::io::Read>(r: R, n_hint: usize) -> Result<Graph> {
+    let mut g = Graph::new(n_hint);
+    for (lineno, line) in BufReader::new(r).lines().enumerate() {
+        let line = line.context("read line")?;
+        let s = line.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        let mut it = s.split_whitespace();
+        let i: u32 = parse(it.next(), lineno, "i")?;
+        let j: u32 = parse(it.next(), lineno, "j")?;
+        let w: f64 = match it.next() {
+            Some(tok) => tok.parse().with_context(|| format!("line {}: bad weight", lineno + 1))?,
+            None => 1.0,
+        };
+        if i == j {
+            bail!("line {}: self-loop {i}", lineno + 1);
+        }
+        g.ensure_nodes(i.max(j) as usize + 1);
+        g.set_weight(i, j, w);
+    }
+    Ok(g)
+}
+
+fn parse<T: std::str::FromStr>(tok: Option<&str>, lineno: usize, what: &str) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    let tok = tok.with_context(|| format!("line {}: missing {what}", lineno + 1))?;
+    tok.parse::<T>().map_err(|e| anyhow::anyhow!("line {}: bad {what}: {e}", lineno + 1))
+}
+
+/// Write a graph as an edge list.
+pub fn write_edge_list<W: Write>(g: &Graph, mut w: W) -> Result<()> {
+    writeln!(w, "# n={} m={}", g.num_nodes(), g.num_edges())?;
+    let mut edges: Vec<_> = g.edges().collect();
+    edges.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    for (i, j, wt) in edges {
+        writeln!(w, "{i} {j} {wt}")?;
+    }
+    Ok(())
+}
+
+/// Load an edge-list file.
+pub fn load_graph(path: impl AsRef<Path>) -> Result<Graph> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    read_edge_list(f, 0)
+}
+
+/// Save an edge-list file.
+pub fn save_graph(g: &Graph, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())?;
+    write_edge_list(g, std::io::BufWriter::new(f))
+}
+
+/// Parse a delta stream: returns deltas grouped by consecutive step index t
+/// (0-based, dense; missing steps become empty deltas).
+pub fn read_delta_stream<R: std::io::Read>(r: R) -> Result<Vec<DeltaGraph>> {
+    let mut by_t: Vec<DeltaGraph> = Vec::new();
+    for (lineno, line) in BufReader::new(r).lines().enumerate() {
+        let line = line.context("read line")?;
+        let s = line.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        let mut it = s.split_whitespace();
+        let t: usize = parse(it.next(), lineno, "t")?;
+        let i: u32 = parse(it.next(), lineno, "i")?;
+        let j: u32 = parse(it.next(), lineno, "j")?;
+        let dw: f64 = parse(it.next(), lineno, "dw")?;
+        if t >= by_t.len() {
+            by_t.resize_with(t + 1, DeltaGraph::new);
+        }
+        by_t[t].add(i, j, dw);
+    }
+    Ok(by_t)
+}
+
+/// Write a delta stream.
+pub fn write_delta_stream<W: Write>(deltas: &[DeltaGraph], mut w: W) -> Result<()> {
+    writeln!(w, "# steps={}", deltas.len())?;
+    for (t, d) in deltas.iter().enumerate() {
+        for &(i, j, dw) in d.edge_deltas() {
+            writeln!(w, "{t} {i} {j} {dw}")?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = Graph::from_edges(4, &[(0, 1, 1.5), (2, 3, 2.0)]);
+        let mut buf = Vec::new();
+        write_edge_list(&g, &mut buf).unwrap();
+        let g2 = read_edge_list(&buf[..], 0).unwrap();
+        assert_eq!(g2.num_nodes(), 4);
+        assert_eq!(g2.weight(0, 1), 1.5);
+        assert_eq!(g2.weight(2, 3), 2.0);
+    }
+
+    #[test]
+    fn edge_list_default_weight_and_comments() {
+        let text = "# comment\n0 1\n\n1 2 3.5\n";
+        let g = read_edge_list(text.as_bytes(), 0).unwrap();
+        assert_eq!(g.weight(0, 1), 1.0);
+        assert_eq!(g.weight(1, 2), 3.5);
+    }
+
+    #[test]
+    fn edge_list_rejects_self_loop() {
+        assert!(read_edge_list("3 3 1.0\n".as_bytes(), 0).is_err());
+    }
+
+    #[test]
+    fn edge_list_rejects_garbage() {
+        assert!(read_edge_list("a b c\n".as_bytes(), 0).is_err());
+    }
+
+    #[test]
+    fn delta_stream_roundtrip() {
+        let mut d0 = DeltaGraph::new();
+        d0.add(0, 1, 1.0);
+        let mut d2 = DeltaGraph::new();
+        d2.add(1, 2, -0.5);
+        let deltas = vec![d0, DeltaGraph::new(), d2];
+        let mut buf = Vec::new();
+        write_delta_stream(&deltas, &mut buf).unwrap();
+        let back = read_delta_stream(&buf[..]).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[0].edge_deltas(), &[(0, 1, 1.0)]);
+        assert!(back[1].is_empty());
+        assert_eq!(back[2].edge_deltas(), &[(1, 2, -0.5)]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("finger_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.edges");
+        let g = Graph::from_edges(3, &[(0, 2, 4.0)]);
+        save_graph(&g, &path).unwrap();
+        let g2 = load_graph(&path).unwrap();
+        assert_eq!(g2.weight(0, 2), 4.0);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,418 @@
+//! Graph substrate: undirected weighted simple graphs (the paper's class 𝒢),
+//! delta graphs (ΔG) for incremental updates, graph sequences, a CSR view for
+//! spectral kernels, composition operators (⊕, averaged graph), and text I/O.
+
+pub mod csr;
+pub mod delta;
+pub mod io;
+pub mod ops;
+pub mod sequence;
+
+pub use csr::Csr;
+pub use delta::DeltaGraph;
+pub use sequence::GraphSequence;
+
+use crate::util::hash::DetHashMap;
+
+/// Undirected weighted simple graph with nonnegative edge weights.
+///
+/// Invariants maintained by every mutator:
+/// * symmetry: `weight(i,j) == weight(j,i)`;
+/// * no self-loops, no zero-weight stored edges;
+/// * `strength(i) == Σ_j weight(i,j)` cached;
+/// * `total_weight() == Σ_i strength(i) == 2·Σ_{(i,j)∈E} w_ij` cached.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    adj: Vec<DetHashMap<u32, f64>>,
+    strengths: Vec<f64>,
+    m: usize,
+    total_weight: f64,
+}
+
+impl Graph {
+    /// Empty graph on `n` nodes.
+    pub fn new(n: usize) -> Self {
+        Self {
+            adj: vec![DetHashMap::default(); n],
+            strengths: vec![0.0; n],
+            m: 0,
+            total_weight: 0.0,
+        }
+    }
+
+    /// Build from an undirected edge list; duplicate (i,j)/(j,i) pairs keep
+    /// the last weight. Panics on out-of-range endpoints or self-loops.
+    pub fn from_edges(n: usize, edges: &[(u32, u32, f64)]) -> Self {
+        let mut g = Self::new(n);
+        for &(i, j, w) in edges {
+            g.set_weight(i, j, w);
+        }
+        g
+    }
+
+    /// Unweighted convenience constructor (all weights 1.0).
+    pub fn from_pairs(n: usize, pairs: &[(u32, u32)]) -> Self {
+        let mut g = Self::new(n);
+        for &(i, j) in pairs {
+            g.set_weight(i, j, 1.0);
+        }
+        g
+    }
+
+    /// Number of nodes n = |𝒱|.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Number of edges m = |ℰ|.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.m
+    }
+
+    /// S = trace(L) = Σ_i s_i = 2·Σ w_ij.
+    #[inline]
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    /// Nodal strength (weighted degree) s_i.
+    #[inline]
+    pub fn strength(&self, i: u32) -> f64 {
+        self.strengths[i as usize]
+    }
+
+    /// All nodal strengths.
+    #[inline]
+    pub fn strengths(&self) -> &[f64] {
+        &self.strengths
+    }
+
+    /// Largest nodal strength s_max (0 for empty graphs).
+    pub fn s_max(&self) -> f64 {
+        self.strengths.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Edge weight, or 0.0 if absent.
+    #[inline]
+    pub fn weight(&self, i: u32, j: u32) -> f64 {
+        self.adj[i as usize].get(&j).copied().unwrap_or(0.0)
+    }
+
+    /// Whether edge (i,j) exists.
+    #[inline]
+    pub fn has_edge(&self, i: u32, j: u32) -> bool {
+        self.adj[i as usize].contains_key(&j)
+    }
+
+    /// Unweighted degree of node i.
+    #[inline]
+    pub fn degree(&self, i: u32) -> usize {
+        self.adj[i as usize].len()
+    }
+
+    /// Grow the node set to at least `n` nodes.
+    pub fn ensure_nodes(&mut self, n: usize) {
+        if n > self.adj.len() {
+            self.adj.resize_with(n, DetHashMap::default);
+            self.strengths.resize(n, 0.0);
+        }
+    }
+
+    /// Set edge weight (w <= 0 removes the edge). Keeps all invariants.
+    pub fn set_weight(&mut self, i: u32, j: u32, w: f64) {
+        assert!(i != j, "self-loops are not in the graph class 𝒢");
+        let n = self.adj.len();
+        assert!((i as usize) < n && (j as usize) < n, "endpoint out of range");
+        let old = self.weight(i, j);
+        if w <= 0.0 {
+            if old > 0.0 {
+                self.adj[i as usize].remove(&j);
+                self.adj[j as usize].remove(&i);
+                self.m -= 1;
+                self.strengths[i as usize] -= old;
+                self.strengths[j as usize] -= old;
+                self.total_weight -= 2.0 * old;
+            }
+            return;
+        }
+        if old == 0.0 {
+            self.m += 1;
+        }
+        self.adj[i as usize].insert(j, w);
+        self.adj[j as usize].insert(i, w);
+        let dw = w - old;
+        self.strengths[i as usize] += dw;
+        self.strengths[j as usize] += dw;
+        self.total_weight += 2.0 * dw;
+    }
+
+    /// Add `dw` (possibly negative) to edge (i,j); removes the edge when the
+    /// result drops to <= 0.
+    pub fn add_weight(&mut self, i: u32, j: u32, dw: f64) {
+        let w = self.weight(i, j) + dw;
+        self.set_weight(i, j, w);
+    }
+
+    /// Remove an edge; returns its previous weight.
+    pub fn remove_edge(&mut self, i: u32, j: u32) -> f64 {
+        let old = self.weight(i, j);
+        if old > 0.0 {
+            self.set_weight(i, j, 0.0);
+        }
+        old
+    }
+
+    /// Neighbors (and weights) of node i.
+    pub fn neighbors(&self, i: u32) -> impl Iterator<Item = (u32, f64)> + '_ {
+        self.adj[i as usize].iter().map(|(&j, &w)| (j, w))
+    }
+
+    /// Iterate each undirected edge once as (i, j, w) with i < j.
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32, f64)> + '_ {
+        self.adj.iter().enumerate().flat_map(|(i, nbrs)| {
+            nbrs.iter().filter_map(move |(&j, &w)| {
+                if (i as u32) < j {
+                    Some((i as u32, j, w))
+                } else {
+                    None
+                }
+            })
+        })
+    }
+
+    /// Σ_i s_i² and Σ_{(i,j)∈E} w_ij² — the two reductions behind the
+    /// quadratic proxy Q (Lemma 1). O(n+m).
+    pub fn q_moments(&self) -> (f64, f64) {
+        let s2: f64 = self.strengths.iter().map(|s| s * s).sum();
+        let w2: f64 = self.edges().map(|(_, _, w)| w * w).sum();
+        (s2, w2)
+    }
+
+    /// Number of connected components (BFS over the edge support).
+    pub fn connected_components(&self) -> usize {
+        let n = self.num_nodes();
+        let mut seen = vec![false; n];
+        let mut comps = 0;
+        let mut queue = std::collections::VecDeque::new();
+        for start in 0..n {
+            if seen[start] {
+                continue;
+            }
+            comps += 1;
+            seen[start] = true;
+            queue.push_back(start as u32);
+            while let Some(u) = queue.pop_front() {
+                for (v, _) in self.neighbors(u) {
+                    if !seen[v as usize] {
+                        seen[v as usize] = true;
+                        queue.push_back(v);
+                    }
+                }
+            }
+        }
+        comps
+    }
+
+    /// Unweighted degree histogram normalized to a distribution, padded to
+    /// `max_deg + 1` bins (used by the degree-distribution baselines).
+    pub fn degree_distribution(&self) -> Vec<f64> {
+        let n = self.num_nodes();
+        if n == 0 {
+            return Vec::new();
+        }
+        let max_deg = (0..n).map(|i| self.degree(i as u32)).max().unwrap_or(0);
+        let mut hist = vec![0.0; max_deg + 1];
+        for i in 0..n {
+            hist[self.degree(i as u32)] += 1.0;
+        }
+        for h in &mut hist {
+            *h /= n as f64;
+        }
+        hist
+    }
+
+    /// Dense weight matrix (row-major n×n), for the XLA offload path and the
+    /// exact eigensolver.
+    pub fn dense_weights(&self) -> Vec<f64> {
+        let n = self.num_nodes();
+        let mut w = vec![0.0; n * n];
+        for (i, j, wij) in self.edges() {
+            w[i as usize * n + j as usize] = wij;
+            w[j as usize * n + i as usize] = wij;
+        }
+        w
+    }
+
+    /// Validate all cached invariants from scratch (test/debug helper).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let n = self.num_nodes();
+        let mut m = 0usize;
+        let mut total = 0.0;
+        for i in 0..n {
+            let mut s = 0.0;
+            for (&j, &w) in &self.adj[i] {
+                if j as usize >= n {
+                    return Err(format!("neighbor {j} out of range"));
+                }
+                if i as u32 == j {
+                    return Err(format!("self-loop at {i}"));
+                }
+                if w <= 0.0 {
+                    return Err(format!("nonpositive stored weight at ({i},{j})"));
+                }
+                if (self.weight(j, i as u32) - w).abs() > 1e-12 {
+                    return Err(format!("asymmetric edge ({i},{j})"));
+                }
+                s += w;
+                if (i as u32) < j {
+                    m += 1;
+                }
+            }
+            if (s - self.strengths[i]).abs() > 1e-9 * (1.0 + s.abs()) {
+                return Err(format!("strength cache stale at {i}: {} vs {s}", self.strengths[i]));
+            }
+            total += s;
+        }
+        if m != self.m {
+            return Err(format!("edge count stale: {} vs {m}", self.m));
+        }
+        if (total - self.total_weight).abs() > 1e-9 * (1.0 + total.abs()) {
+            return Err(format!("total weight stale: {} vs {total}", self.total_weight));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::new(5);
+        assert_eq!(g.num_nodes(), 5);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.total_weight(), 0.0);
+        assert_eq!(g.s_max(), 0.0);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn set_weight_symmetric() {
+        let mut g = Graph::new(3);
+        g.set_weight(0, 1, 2.5);
+        assert_eq!(g.weight(0, 1), 2.5);
+        assert_eq!(g.weight(1, 0), 2.5);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.strength(0), 2.5);
+        assert_eq!(g.strength(1), 2.5);
+        assert_eq!(g.total_weight(), 5.0);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn overwrite_weight_updates_caches() {
+        let mut g = Graph::new(3);
+        g.set_weight(0, 1, 2.0);
+        g.set_weight(0, 1, 5.0);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.strength(0), 5.0);
+        assert_eq!(g.total_weight(), 10.0);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_via_zero_weight() {
+        let mut g = Graph::new(3);
+        g.set_weight(0, 1, 2.0);
+        g.set_weight(0, 2, 3.0);
+        g.set_weight(0, 1, 0.0);
+        assert_eq!(g.num_edges(), 1);
+        assert!(!g.has_edge(0, 1));
+        assert_eq!(g.strength(0), 3.0);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn add_weight_accumulates_and_deletes() {
+        let mut g = Graph::new(2);
+        g.add_weight(0, 1, 1.5);
+        g.add_weight(0, 1, 0.5);
+        assert_eq!(g.weight(0, 1), 2.0);
+        g.add_weight(0, 1, -2.0);
+        assert!(!g.has_edge(0, 1));
+        assert_eq!(g.total_weight(), 0.0);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loops")]
+    fn rejects_self_loop() {
+        Graph::new(2).set_weight(1, 1, 1.0);
+    }
+
+    #[test]
+    fn edges_iterates_once_per_edge() {
+        let g = Graph::from_edges(4, &[(0, 1, 1.0), (1, 2, 2.0), (2, 3, 3.0)]);
+        let mut es: Vec<_> = g.edges().collect();
+        es.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(es, vec![(0, 1, 1.0), (1, 2, 2.0), (2, 3, 3.0)]);
+    }
+
+    #[test]
+    fn q_moments_match_manual() {
+        // path 0-1-2 with weights 1, 2: s = [1, 3, 2]
+        let g = Graph::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0)]);
+        let (s2, w2) = g.q_moments();
+        assert_eq!(s2, 1.0 + 9.0 + 4.0);
+        assert_eq!(w2, 1.0 + 4.0);
+    }
+
+    #[test]
+    fn connected_components_counts() {
+        let g = Graph::from_pairs(6, &[(0, 1), (1, 2), (3, 4)]);
+        assert_eq!(g.connected_components(), 3); // {0,1,2}, {3,4}, {5}
+    }
+
+    #[test]
+    fn degree_distribution_sums_to_one() {
+        let g = Graph::from_pairs(4, &[(0, 1), (1, 2), (2, 3)]);
+        let d = g.degree_distribution();
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(d.len(), 3); // max degree 2
+        assert!((d[1] - 0.5).abs() < 1e-12); // nodes 0,3
+        assert!((d[2] - 0.5).abs() < 1e-12); // nodes 1,2
+    }
+
+    #[test]
+    fn ensure_nodes_grows() {
+        let mut g = Graph::new(2);
+        g.ensure_nodes(5);
+        assert_eq!(g.num_nodes(), 5);
+        g.set_weight(0, 4, 1.0);
+        g.check_invariants().unwrap();
+        g.ensure_nodes(3); // no shrink
+        assert_eq!(g.num_nodes(), 5);
+    }
+
+    #[test]
+    fn dense_weights_symmetric() {
+        let g = Graph::from_edges(3, &[(0, 2, 1.5)]);
+        let w = g.dense_weights();
+        assert_eq!(w[0 * 3 + 2], 1.5);
+        assert_eq!(w[2 * 3 + 0], 1.5);
+        assert_eq!(w[0 * 3 + 1], 0.0);
+    }
+
+    #[test]
+    fn s_max_tracks_updates() {
+        let mut g = Graph::new(3);
+        g.set_weight(0, 1, 4.0);
+        g.set_weight(1, 2, 3.0);
+        assert_eq!(g.s_max(), 7.0); // node 1
+        g.remove_edge(0, 1);
+        assert_eq!(g.s_max(), 3.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Graph composition operators used by the JS-distance algorithms:
+//! the averaged graph Ḡ = (G ⊕ G′)/2 (Algorithm 1) and helpers.
+
+use super::{DeltaGraph, Graph};
+
+/// Averaged graph Ḡ with W̄ = (W + W′)/2 on the common node set 𝒱_c = 𝒱 ∪ 𝒱′.
+pub fn average_graph(a: &Graph, b: &Graph) -> Graph {
+    let n = a.num_nodes().max(b.num_nodes());
+    let mut g = Graph::new(n);
+    for (i, j, w) in a.edges() {
+        g.set_weight(i, j, w / 2.0);
+    }
+    for (i, j, w) in b.edges() {
+        g.add_weight(i, j, w / 2.0);
+    }
+    g
+}
+
+/// G ⊕ ΔG as a new graph (non-destructive apply).
+pub fn compose(g: &Graph, delta: &DeltaGraph) -> Graph {
+    let mut out = g.clone();
+    delta.apply_to(&mut out);
+    out
+}
+
+/// Uniformly scale all edge weights.
+pub fn scale(g: &Graph, f: f64) -> Graph {
+    let mut out = Graph::new(g.num_nodes());
+    for (i, j, w) in g.edges() {
+        out.set_weight(i, j, w * f);
+    }
+    out
+}
+
+/// Union of edge supports, with weights from `pick`.
+pub fn union_support(a: &Graph, b: &Graph, pick: impl Fn(f64, f64) -> f64) -> Graph {
+    let n = a.num_nodes().max(b.num_nodes());
+    let mut g = Graph::new(n);
+    for (i, j, wa) in a.edges() {
+        g.set_weight(i, j, pick(wa, b_weight(b, i, j)));
+    }
+    for (i, j, wb) in b.edges() {
+        if !g.has_edge(i, j) {
+            g.set_weight(i, j, pick(0.0, wb));
+        }
+    }
+    g
+}
+
+fn b_weight(b: &Graph, i: u32, j: u32) -> f64 {
+    if (i as usize) < b.num_nodes() && (j as usize) < b.num_nodes() {
+        b.weight(i, j)
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_graph_weights() {
+        let a = Graph::from_edges(3, &[(0, 1, 2.0)]);
+        let b = Graph::from_edges(3, &[(0, 1, 4.0), (1, 2, 2.0)]);
+        let m = average_graph(&a, &b);
+        assert_eq!(m.weight(0, 1), 3.0);
+        assert_eq!(m.weight(1, 2), 1.0);
+        assert!((m.total_weight() - (a.total_weight() + b.total_weight()) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn average_graph_handles_size_mismatch() {
+        let a = Graph::from_edges(2, &[(0, 1, 2.0)]);
+        let b = Graph::from_edges(4, &[(2, 3, 2.0)]);
+        let m = average_graph(&a, &b);
+        assert_eq!(m.num_nodes(), 4);
+        assert_eq!(m.weight(0, 1), 1.0);
+        assert_eq!(m.weight(2, 3), 1.0);
+    }
+
+    #[test]
+    fn compose_is_non_destructive() {
+        let g = Graph::from_edges(2, &[(0, 1, 1.0)]);
+        let mut d = DeltaGraph::new();
+        d.add(0, 1, 1.0);
+        let g2 = compose(&g, &d);
+        assert_eq!(g.weight(0, 1), 1.0);
+        assert_eq!(g2.weight(0, 1), 2.0);
+    }
+
+    #[test]
+    fn scale_preserves_support() {
+        let g = Graph::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0)]);
+        let s = scale(&g, 0.5);
+        assert_eq!(s.num_edges(), 2);
+        assert_eq!(s.weight(1, 2), 1.0);
+    }
+
+    #[test]
+    fn union_support_max() {
+        let a = Graph::from_edges(3, &[(0, 1, 5.0)]);
+        let b = Graph::from_edges(3, &[(0, 1, 2.0), (1, 2, 7.0)]);
+        let u = union_support(&a, &b, f64::max);
+        assert_eq!(u.weight(0, 1), 5.0);
+        assert_eq!(u.weight(1, 2), 7.0);
+    }
+
+    #[test]
+    fn average_identity() {
+        let a = Graph::from_edges(3, &[(0, 1, 2.0), (1, 2, 4.0)]);
+        let m = average_graph(&a, &a);
+        for (i, j, w) in a.edges() {
+            assert_eq!(m.weight(i, j), w);
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Graph sequences {G_t} — either materialized snapshots or an initial graph
+//! plus a delta stream {ΔG_t} (the two presentations the paper's Algorithms 1
+//! and 2 consume).
+
+use super::{DeltaGraph, Graph};
+
+/// A sequence of graph snapshots with known node correspondence.
+#[derive(Debug, Clone, Default)]
+pub struct GraphSequence {
+    snapshots: Vec<Graph>,
+}
+
+impl GraphSequence {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_snapshots(snapshots: Vec<Graph>) -> Self {
+        Self { snapshots }
+    }
+
+    /// Materialize from an initial graph and deltas: G_{t+1} = G_t ⊕ ΔG_t.
+    pub fn from_deltas(initial: Graph, deltas: &[DeltaGraph]) -> Self {
+        let mut snapshots = Vec::with_capacity(deltas.len() + 1);
+        let mut g = initial;
+        snapshots.push(g.clone());
+        for d in deltas {
+            d.apply_to(&mut g);
+            snapshots.push(g.clone());
+        }
+        Self { snapshots }
+    }
+
+    pub fn push(&mut self, g: Graph) {
+        self.snapshots.push(g);
+    }
+
+    pub fn len(&self) -> usize {
+        self.snapshots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.snapshots.is_empty()
+    }
+
+    pub fn get(&self, t: usize) -> &Graph {
+        &self.snapshots[t]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Graph> {
+        self.snapshots.iter()
+    }
+
+    /// Consecutive pairs (G_t, G_{t+1}).
+    pub fn pairs(&self) -> impl Iterator<Item = (&Graph, &Graph)> {
+        self.snapshots.windows(2).map(|w| (&w[0], &w[1]))
+    }
+
+    /// Recover the delta stream between consecutive snapshots.
+    pub fn to_deltas(&self) -> Vec<DeltaGraph> {
+        self.pairs().map(|(a, b)| DeltaGraph::diff(a, b)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_deltas_materializes() {
+        let g0 = Graph::from_edges(3, &[(0, 1, 1.0)]);
+        let mut d1 = DeltaGraph::new();
+        d1.add(1, 2, 2.0);
+        let mut d2 = DeltaGraph::new();
+        d2.add(0, 1, -1.0);
+        let seq = GraphSequence::from_deltas(g0, &[d1, d2]);
+        assert_eq!(seq.len(), 3);
+        assert_eq!(seq.get(1).weight(1, 2), 2.0);
+        assert_eq!(seq.get(2).num_edges(), 1);
+    }
+
+    #[test]
+    fn pairs_count() {
+        let seq = GraphSequence::from_snapshots(vec![Graph::new(2), Graph::new(2), Graph::new(2)]);
+        assert_eq!(seq.pairs().count(), 2);
+    }
+
+    #[test]
+    fn to_deltas_roundtrip() {
+        let a = Graph::from_edges(3, &[(0, 1, 1.0)]);
+        let b = Graph::from_edges(3, &[(0, 1, 3.0), (1, 2, 1.0)]);
+        let c = Graph::from_edges(3, &[(1, 2, 1.0)]);
+        let seq = GraphSequence::from_snapshots(vec![a.clone(), b, c]);
+        let deltas = seq.to_deltas();
+        let rebuilt = GraphSequence::from_deltas(a, &deltas);
+        for t in 0..3 {
+            let (x, y) = (seq.get(t), rebuilt.get(t));
+            assert_eq!(x.num_edges(), y.num_edges(), "t={t}");
+            for (i, j, w) in x.edges() {
+                assert!((y.weight(i, j) - w).abs() < 1e-12);
+            }
+        }
+    }
+}

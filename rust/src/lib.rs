@@ -1,0 +1,49 @@
+//! # FINGER — Fast Incremental von Neumann Graph Entropy
+//!
+//! Production-grade reproduction of *Chen, Wu, Liu, Rajapakse — "Fast
+//! Incremental von Neumann Graph Entropy Computation: Theory, Algorithm, and
+//! Applications" (ICML 2019)* as a three-layer Rust + JAX + Pallas stack.
+//!
+//! * **L3 (this crate)** — the streaming graph-sequence coordinator: graph
+//!   substrate, exact and approximate VNGE, Jensen–Shannon graph distance,
+//!   eleven baseline dissimilarity methods, anomaly/bifurcation evaluation,
+//!   a threaded streaming pipeline, and a PJRT runtime that executes
+//!   AOT-compiled XLA artifacts (built once by `make artifacts`).
+//! * **L2 (python/compile/model.py)** — dense JAX compute graphs (Q-statistics,
+//!   FINGER-Ĥ, JS distance) lowered to HLO text at fixed sizes.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (tiled mat-vec and
+//!   fused Q-statistics reduction) called from the L2 graphs.
+//!
+//! Python never runs on the request path; the binary is self-contained after
+//! `make artifacts`.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use finger::entropy::{exact_vnge, finger_hhat, finger_htilde};
+//! use finger::generators;
+//! use finger::util::Pcg64;
+//!
+//! let mut rng = Pcg64::new(7);
+//! let g = generators::erdos_renyi(200, 0.05, &mut rng);
+//! let h = exact_vnge(&g);          // O(n³) baseline
+//! let h_hat = finger_hhat(&g);     // O(n+m), Eq. (1)
+//! let h_til = finger_htilde(&g);   // O(n+m), Eq. (2), incremental-friendly
+//! assert!(h_til <= h_hat + 1e-12 && h_hat <= h + 1e-9);
+//! ```
+
+pub mod anomaly;
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod datasets;
+pub mod distance;
+pub mod entropy;
+pub mod generators;
+pub mod graph;
+pub mod linalg;
+pub mod runtime;
+pub mod stream;
+pub mod util;
+
+pub use graph::{DeltaGraph, Graph, GraphSequence};

@@ -1,0 +1,376 @@
+//! Dense symmetric eigenvalue solver: Householder tridiagonalization followed
+//! by the implicit-shift QL algorithm (EISPACK tred1/tql1 lineage, eigenvalue
+//! only). O(n³), numerically robust, validated against closed-form spectra.
+
+use crate::graph::Graph;
+
+/// Dense symmetric matrix, row-major full storage.
+#[derive(Debug, Clone)]
+pub struct SymMatrix {
+    n: usize,
+    a: Vec<f64>,
+}
+
+impl SymMatrix {
+    pub fn zeros(n: usize) -> Self {
+        Self { n, a: vec![0.0; n * n] }
+    }
+
+    pub fn from_rows(n: usize, a: Vec<f64>) -> Self {
+        assert_eq!(a.len(), n * n);
+        Self { n, a }
+    }
+
+    /// Combinatorial Laplacian L = S − W of a graph.
+    pub fn laplacian(g: &Graph) -> Self {
+        let n = g.num_nodes();
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            m.set(i, i, g.strength(i as u32));
+        }
+        for (i, j, w) in g.edges() {
+            m.set(i as usize, j as usize, -w);
+            m.set(j as usize, i as usize, -w);
+        }
+        m
+    }
+
+    /// Trace-normalized Laplacian L_N = L / trace(L) (the paper's density
+    /// matrix). Zero matrix when the graph has no edges.
+    pub fn laplacian_normalized(g: &Graph) -> Self {
+        let mut m = Self::laplacian(g);
+        let tr = g.total_weight();
+        if tr > 0.0 {
+            for v in &mut m.a {
+                *v /= tr;
+            }
+        }
+        m
+    }
+
+    /// Symmetric normalized Laplacian 𝓛 = I − S^{-1/2} W S^{-1/2}
+    /// (Shi–Malik), used by the VNGE-NL baseline. Isolated nodes get a zero
+    /// row/column.
+    pub fn laplacian_sym_normalized(g: &Graph) -> Self {
+        let n = g.num_nodes();
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            if g.strength(i as u32) > 0.0 {
+                m.set(i, i, 1.0);
+            }
+        }
+        for (i, j, w) in g.edges() {
+            let si = g.strength(i);
+            let sj = g.strength(j);
+            let v = -w / (si * sj).sqrt();
+            m.set(i as usize, j as usize, v);
+            m.set(j as usize, i as usize, v);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.n + j] = v;
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.n).map(|i| self.get(i, i)).sum()
+    }
+
+    /// All eigenvalues, ascending. Consumes a working copy; O(n³).
+    pub fn eigenvalues(&self) -> Vec<f64> {
+        let n = self.n;
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut a = self.a.clone();
+        let mut d = vec![0.0; n];
+        let mut e = vec![0.0; n];
+        tridiagonalize(&mut a, n, &mut d, &mut e);
+        tql(&mut d, &mut e).expect("QL iteration failed to converge");
+        d.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        d
+    }
+}
+
+/// Householder reduction of a symmetric matrix (row-major `a`, n×n) to
+/// tridiagonal form: diagonal in `d`, sub-diagonal in `e[1..]` (e[0]=0).
+/// Eigenvalue-only variant (no eigenvector accumulation).
+fn tridiagonalize(a: &mut [f64], n: usize, d: &mut [f64], e: &mut [f64]) {
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += a[i * n + k].abs();
+            }
+            if scale == 0.0 {
+                e[i] = a[i * n + l];
+            } else {
+                for k in 0..=l {
+                    a[i * n + k] /= scale;
+                    h += a[i * n + k] * a[i * n + k];
+                }
+                let f = a[i * n + l];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                a[i * n + l] = f - g;
+                let mut f_acc = 0.0;
+                for j in 0..=l {
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += a[j * n + k] * a[i * n + k];
+                    }
+                    for k in (j + 1)..=l {
+                        g += a[k * n + j] * a[i * n + k];
+                    }
+                    e[j] = g / h;
+                    f_acc += e[j] * a[i * n + j];
+                }
+                let hh = f_acc / (h + h);
+                for j in 0..=l {
+                    let f = a[i * n + j];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        a[j * n + k] -= f * e[k] + g * a[i * n + k];
+                    }
+                }
+            }
+        } else {
+            e[i] = a[i * n + l];
+        }
+        d[i] = h;
+    }
+    e[0] = 0.0;
+    for i in 0..n {
+        d[i] = a[i * n + i];
+    }
+}
+
+/// Implicit-shift QL on a tridiagonal matrix (d diagonal, e sub-diagonal with
+/// e[0] unused). Eigenvalues land in `d` (unsorted). Errors if any eigenvalue
+/// needs more than 50 QL sweeps.
+fn tql(d: &mut [f64], e: &mut [f64]) -> Result<(), String> {
+    let n = d.len();
+    if n == 0 {
+        return Ok(());
+    }
+    // shift sub-diagonal down for 0-based convenience: e[i] couples d[i], d[i+1]
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find the first decoupled block boundary m >= l
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                return Err(format!("tql: no convergence at eigenvalue {l}"));
+            }
+            // form implicit shift
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = hypot(g, 1.0);
+            g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r } else { -r });
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            let mut i = m;
+            let mut underflow = false;
+            while i > l {
+                i -= 1;
+                let f = s * e[i];
+                let b = c * e[i];
+                r = hypot(f, g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+#[inline]
+fn hypot(a: f64, b: f64) -> f64 {
+    a.hypot(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators;
+
+    fn assert_spectrum(actual: &[f64], expected: &mut Vec<f64>, tol: f64) {
+        expected.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(actual.len(), expected.len());
+        for (a, e) in actual.iter().zip(expected.iter()) {
+            assert!((a - e).abs() < tol, "eig {a} vs expected {e}");
+        }
+    }
+
+    #[test]
+    fn diag_matrix_spectrum() {
+        let mut m = SymMatrix::zeros(4);
+        for (i, v) in [3.0, -1.0, 7.0, 0.5].iter().enumerate() {
+            m.set(i, i, *v);
+        }
+        let eig = m.eigenvalues();
+        assert_spectrum(&eig, &mut vec![3.0, -1.0, 7.0, 0.5], 1e-12);
+    }
+
+    #[test]
+    fn two_by_two_known() {
+        // [[2,1],[1,2]] -> {1, 3}
+        let m = SymMatrix::from_rows(2, vec![2.0, 1.0, 1.0, 2.0]);
+        assert_spectrum(&m.eigenvalues(), &mut vec![1.0, 3.0], 1e-12);
+    }
+
+    #[test]
+    fn complete_graph_laplacian_spectrum() {
+        // K_n: eigenvalues {0, n×(n−1 times)}
+        let n = 8;
+        let g = generators::complete(n, 1.0);
+        let eig = SymMatrix::laplacian(&g).eigenvalues();
+        let mut expected = vec![n as f64; n - 1];
+        expected.push(0.0);
+        assert_spectrum(&eig, &mut expected, 1e-9);
+    }
+
+    #[test]
+    fn star_graph_laplacian_spectrum() {
+        // S_n: {0, 1 (n−2 times), n}
+        let n = 10;
+        let g = generators::star(n);
+        let eig = SymMatrix::laplacian(&g).eigenvalues();
+        let mut expected = vec![1.0; n - 2];
+        expected.push(0.0);
+        expected.push(n as f64);
+        assert_spectrum(&eig, &mut expected, 1e-9);
+    }
+
+    #[test]
+    fn ring_graph_laplacian_spectrum() {
+        // C_n: 2 − 2cos(2πk/n)
+        let n = 12;
+        let g = generators::ring(n);
+        let eig = SymMatrix::laplacian(&g).eigenvalues();
+        let mut expected: Vec<f64> = (0..n)
+            .map(|k| 2.0 - 2.0 * (2.0 * std::f64::consts::PI * k as f64 / n as f64).cos())
+            .collect();
+        assert_spectrum(&eig, &mut expected, 1e-9);
+    }
+
+    #[test]
+    fn path_graph_laplacian_spectrum() {
+        // P_n: 2 − 2cos(πk/n), k = 0..n−1
+        let n = 9;
+        let g = generators::path(n);
+        let eig = SymMatrix::laplacian(&g).eigenvalues();
+        let mut expected: Vec<f64> =
+            (0..n).map(|k| 2.0 - 2.0 * (std::f64::consts::PI * k as f64 / n as f64).cos()).collect();
+        assert_spectrum(&eig, &mut expected, 1e-9);
+    }
+
+    #[test]
+    fn normalized_laplacian_trace_one() {
+        let mut rng = crate::util::Pcg64::new(42);
+        let g = generators::erdos_renyi(60, 0.1, &mut rng);
+        let eig = SymMatrix::laplacian_normalized(&g).eigenvalues();
+        let sum: f64 = eig.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "sum={sum}");
+        assert!(eig.iter().all(|&l| l > -1e-9), "PSD violated");
+    }
+
+    #[test]
+    fn eigenvalue_sum_equals_trace_random() {
+        let mut rng = crate::util::Pcg64::new(7);
+        let n = 30;
+        let mut m = SymMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.normal();
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        let eig = m.eigenvalues();
+        let sum: f64 = eig.iter().sum();
+        assert!((sum - m.trace()).abs() < 1e-8 * (1.0 + m.trace().abs()), "{sum} vs {}", m.trace());
+    }
+
+    #[test]
+    fn eigenvalue_sumsq_equals_frobenius_random() {
+        let mut rng = crate::util::Pcg64::new(8);
+        let n = 25;
+        let mut m = SymMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.uniform(-1.0, 1.0);
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        let eig = m.eigenvalues();
+        let sumsq: f64 = eig.iter().map(|l| l * l).sum();
+        let frob: f64 = (0..n).flat_map(|i| (0..n).map(move |j| (i, j))).map(|(i, j)| m.get(i, j) * m.get(i, j)).sum();
+        assert!((sumsq - frob).abs() < 1e-8 * (1.0 + frob), "{sumsq} vs {frob}");
+    }
+
+    #[test]
+    fn sym_normalized_laplacian_in_zero_two() {
+        let mut rng = crate::util::Pcg64::new(9);
+        let g = generators::erdos_renyi(40, 0.15, &mut rng);
+        let eig = SymMatrix::laplacian_sym_normalized(&g).eigenvalues();
+        assert!(eig.iter().all(|&l| (-1e-9..=2.0 + 1e-9).contains(&l)), "{eig:?}");
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(SymMatrix::zeros(0).eigenvalues().is_empty());
+        let mut m = SymMatrix::zeros(1);
+        m.set(0, 0, 5.0);
+        assert_eq!(m.eigenvalues(), vec![5.0]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Dense and sparse symmetric eigen-solvers built from scratch (no LAPACK in
+//! this environment): Householder tridiagonalization + implicit-shift QL for
+//! the full spectrum (the exact-VNGE baseline the paper times against), power
+//! iteration for λ_max (FINGER-Ĥ's O(n+m) path), and Lanczos for the top-k
+//! eigenvalues (the λ-distance baseline).
+
+pub mod dense;
+pub mod lanczos;
+pub mod power;
+
+pub use dense::SymMatrix;
+pub use lanczos::lanczos_top_k;
+pub use power::{power_iteration, PowerOpts};

@@ -1,0 +1,249 @@
+//! `finger` — CLI for the FINGER reproduction.
+//!
+//! Subcommands:
+//!   entropy      compute H / Ĥ / H̃ of a generated or loaded graph
+//!   jsdist       JS distance between two edge-list files
+//!   stream       run the streaming pipeline over a delta-stream file or a
+//!                generated wiki workload
+//!   wiki         Table 2 / S1 experiment on synthetic wiki streams
+//!   bifurcation  Fig 4 experiment on the Hi-C-like sequence
+//!   dos          Table 3 / S2 experiment (DoS detection rates)
+//!   sweep        Fig 1 / Fig 2 approximation sweeps
+//!   offload      cross-check the XLA artifact path against native Rust
+
+use anyhow::{bail, Context, Result};
+use finger::cli::Args;
+use finger::coordinator::experiments::{self, GraphModel};
+use finger::coordinator::report;
+use finger::datasets::{HicConfig, OregonConfig, WikiConfig};
+use finger::entropy::{exact_vnge, finger_hhat, finger_htilde};
+use finger::graph::{io as gio, Graph};
+use finger::stream::{event, Pipeline, PipelineConfig};
+use finger::util::Pcg64;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("entropy") => cmd_entropy(args),
+        Some("jsdist") => cmd_jsdist(args),
+        Some("stream") => cmd_stream(args),
+        Some("wiki") => cmd_wiki(args),
+        Some("bifurcation") => cmd_bifurcation(args),
+        Some("dos") => cmd_dos(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("offload") => cmd_offload(args),
+        Some(other) => bail!("unknown subcommand `{other}` (try --help)"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "finger — Fast Incremental von Neumann Graph Entropy (ICML 2019 reproduction)\n\
+         \n\
+         usage: finger <subcommand> [options]\n\
+         \n\
+         subcommands:\n\
+           entropy     --model er|ba|ws --n N --degree D [--pws P] [--exact] | <edges-file>\n\
+           jsdist      <a.edges> <b.edges> [--exact]\n\
+           stream      [--file deltas.txt | --months M] [--capacity C]\n\
+           wiki        [--dataset sen|en|fr|ge] [--scale S]\n\
+           bifurcation [--dim N]\n\
+           dos         [--nodes N] [--trials T] [--extended]\n\
+           sweep       --kind fig1-er|fig1-ba|fig1-ws|fig2 [--n N] [--trials T]\n\
+           offload     [--artifacts DIR]"
+    );
+}
+
+fn gen_graph(args: &Args) -> Result<Graph> {
+    if let Some(path) = args.positional.first() {
+        return gio::load_graph(path);
+    }
+    let n = args.get_parsed("n", 500usize);
+    let degree = args.get_parsed("degree", 10.0f64);
+    let p_ws = args.get_parsed("pws", 0.1f64);
+    let seed = args.get_parsed("seed", 42u64);
+    let mut rng = Pcg64::new(seed);
+    let model = match args.get("model").unwrap_or("er") {
+        "er" => GraphModel::Er,
+        "ba" => GraphModel::Ba,
+        "ws" => GraphModel::Ws,
+        m => bail!("unknown model {m}"),
+    };
+    Ok(model.sample(n, degree, p_ws, &mut rng))
+}
+
+fn cmd_entropy(args: &Args) -> Result<()> {
+    let g = gen_graph(args)?;
+    println!("graph: n={} m={} S={:.4}", g.num_nodes(), g.num_edges(), g.total_weight());
+    let (hhat, t1) = finger::util::timer::time_it(|| finger_hhat(&g));
+    let (htil, t2) = finger::util::timer::time_it(|| finger_htilde(&g));
+    println!("FINGER-Ĥ  = {hhat:.6}   ({})", finger::util::fmt::secs(t1));
+    println!("FINGER-H̃ = {htil:.6}   ({})", finger::util::fmt::secs(t2));
+    if args.flag("exact") {
+        let (h, t0) = finger::util::timer::time_it(|| exact_vnge(&g));
+        println!("exact H   = {h:.6}   ({})", finger::util::fmt::secs(t0));
+        println!(
+            "AE(Ĥ)={:.6} AE(H̃)={:.6} CTRR(Ĥ)={} CTRR(H̃)={}",
+            h - hhat,
+            h - htil,
+            finger::util::fmt::pct(finger::util::timer::ctrr(t0, t1)),
+            finger::util::fmt::pct(finger::util::timer::ctrr(t0, t2)),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_jsdist(args: &Args) -> Result<()> {
+    let a = gio::load_graph(args.positional.first().context("need two edge-list files")?)?;
+    let b = gio::load_graph(args.positional.get(1).context("need two edge-list files")?)?;
+    let (fast, t) = finger::util::timer::time_it(|| finger::distance::jsdist_fast(&a, &b));
+    println!("JSdist (FINGER fast) = {fast:.6}  ({})", finger::util::fmt::secs(t));
+    if args.flag("exact") {
+        let (ex, t) = finger::util::timer::time_it(|| finger::distance::jsdist_exact(&a, &b));
+        println!("JSdist (exact)       = {ex:.6}  ({})", finger::util::fmt::secs(t));
+    }
+    Ok(())
+}
+
+fn cmd_stream(args: &Args) -> Result<()> {
+    let cfg = PipelineConfig {
+        channel_capacity: args.get_parsed("capacity", 64usize),
+        ..Default::default()
+    };
+    let (initial, events) = if let Some(path) = args.get("file") {
+        let f = std::fs::File::open(path)?;
+        let deltas = gio::read_delta_stream(f)?;
+        (Graph::new(0), event::events_from_deltas(&deltas))
+    } else {
+        let months = args.get_parsed("months", 24usize);
+        let wiki =
+            finger::datasets::wiki_stream(&WikiConfig { months, ..WikiConfig::default() });
+        (wiki.initial, event::events_from_deltas(&wiki.deltas))
+    };
+    let res = Pipeline::new(initial, cfg).run(events);
+    println!(
+        "windows={} events={} wall={} throughput={:.0} ev/s p50={} p99={}",
+        res.records.len(),
+        res.total_events,
+        finger::util::fmt::secs(res.wall_secs),
+        res.throughput,
+        finger::util::fmt::secs(res.p50_latency),
+        finger::util::fmt::secs(res.p99_latency),
+    );
+    for r in &res.records {
+        println!(
+            "window={:<4} jsdist={:.6} H̃={:.4} n={} m={}{}",
+            r.window,
+            r.jsdist,
+            r.htilde,
+            r.nodes,
+            r.edges,
+            if r.anomalous { "  << ANOMALY" } else { "" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_wiki(args: &Args) -> Result<()> {
+    let dataset = args.get("dataset").unwrap_or("sen").to_string();
+    let scale = args.get_parsed("scale", 1.0f64);
+    let cfg = WikiConfig::preset(&dataset, scale);
+    let run = experiments::run_wiki(&dataset, &cfg);
+    println!("{}", report::wiki_table(&run));
+    if args.flag("series") {
+        println!("{}", report::series_dump(&run));
+    }
+    Ok(())
+}
+
+fn cmd_bifurcation(args: &Args) -> Result<()> {
+    let cfg = HicConfig { dim: args.get_parsed("dim", 240usize), ..Default::default() };
+    let rows = experiments::run_bifurcation(&cfg);
+    println!("{}", report::bifurcation_table(&rows, cfg.bifurcation));
+    Ok(())
+}
+
+fn cmd_dos(args: &Args) -> Result<()> {
+    let cfg = OregonConfig { nodes: args.get_parsed("nodes", 2000usize), ..Default::default() };
+    let trials = args.get_parsed("trials", 20usize);
+    let xs = [0.01, 0.03, 0.05, 0.10];
+    let rows = experiments::run_dos(&cfg, &xs, trials, args.flag("extended"), 7);
+    println!("{}", report::dos_table(&rows, &xs));
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let trials = args.get_parsed("trials", 3usize);
+    let n = args.get_parsed("n", 800usize);
+    match args.get("kind").unwrap_or("fig1-er") {
+        "fig1-er" => {
+            let rows = experiments::fig1_degree_sweep(
+                GraphModel::Er,
+                n,
+                &[6.0, 10.0, 20.0, 50.0],
+                trials,
+                1,
+            );
+            println!("{}", report::approx_table(&rows, "d̄"));
+        }
+        "fig1-ba" => {
+            let rows = experiments::fig1_degree_sweep(
+                GraphModel::Ba,
+                n,
+                &[6.0, 10.0, 20.0, 50.0],
+                trials,
+                2,
+            );
+            println!("{}", report::approx_table(&rows, "d̄"));
+        }
+        "fig1-ws" => {
+            let rows = experiments::fig1_ws_sweep(n, 20.0, &[0.01, 0.1, 0.3, 0.6, 1.0], trials, 3);
+            println!("{}", report::approx_table(&rows, "p_ws"));
+        }
+        "fig2" => {
+            for model in [GraphModel::Er, GraphModel::Ba, GraphModel::Ws] {
+                let rows = experiments::fig2_size_sweep(
+                    model,
+                    &[200, 400, 800, n.max(1200)],
+                    20.0,
+                    0.1,
+                    trials,
+                    4,
+                );
+                println!("model={}\n{}", model.name(), report::approx_table(&rows, "n"));
+            }
+        }
+        k => bail!("unknown sweep kind {k}"),
+    }
+    Ok(())
+}
+
+fn cmd_offload(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let rt = finger::runtime::Runtime::load(dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let x = finger::runtime::XlaEntropy::new(&rt);
+    let mut rng = Pcg64::new(9);
+    let g = finger::generators::erdos_renyi(60, 0.15, &mut rng);
+    let q_native = finger::entropy::quadratic_q(&g);
+    let q_xla = x.q(&g)?;
+    let hhat_native = finger_hhat(&g);
+    let hhat_xla = x.hhat(&g)?;
+    println!("Q     native={q_native:.6} xla={q_xla:.6} |Δ|={:.2e}", (q_native - q_xla).abs());
+    println!(
+        "Ĥ     native={hhat_native:.6} xla={hhat_xla:.6} |Δ|={:.2e}",
+        (hhat_native - hhat_xla).abs()
+    );
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! Artifact manifest: `artifacts/manifest.txt` lists every lowered HLO module
+//! as `name n arity path` (one per line, `#` comments), written by
+//! `python/compile/aot.py`.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled entry point at a fixed size.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    /// Entry-point name (e.g. "hhat_dense").
+    pub name: String,
+    /// Matrix dimension n this module was lowered for.
+    pub n: usize,
+    /// Number of dense n×n inputs it takes.
+    pub arity: usize,
+    /// HLO text file, relative to the manifest directory.
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let s = line.trim();
+            if s.is_empty() || s.starts_with('#') {
+                continue;
+            }
+            let mut it = s.split_whitespace();
+            let name = it.next().context("name")?.to_string();
+            let n: usize = it
+                .next()
+                .with_context(|| format!("line {}: n", lineno + 1))?
+                .parse()
+                .with_context(|| format!("line {}: bad n", lineno + 1))?;
+            let arity: usize = it
+                .next()
+                .with_context(|| format!("line {}: arity", lineno + 1))?
+                .parse()
+                .with_context(|| format!("line {}: bad arity", lineno + 1))?;
+            let rel = it.next().with_context(|| format!("line {}: path", lineno + 1))?;
+            artifacts.push(Artifact { name, n, arity, path: dir.join(rel) });
+        }
+        Ok(Self { artifacts, dir })
+    }
+
+    /// Smallest artifact of `name` whose size fits a graph of `n` nodes.
+    pub fn best_fit(&self, name: &str, n: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.name == name && a.n >= n)
+            .min_by_key(|a| a.n)
+    }
+
+    /// All distinct sizes available for `name`.
+    pub fn sizes(&self, name: &str) -> Vec<usize> {
+        let mut v: Vec<usize> =
+            self.artifacts.iter().filter(|a| a.name == name).map(|a| a.n).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(lines: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("finger_manifest_{}", lines.len()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), lines).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_lines() {
+        let dir = write_manifest("# c\nhhat_dense 128 1 hhat_128.hlo.txt\nq_stats 64 1 q_64.hlo.txt\n");
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifacts[0].name, "hhat_dense");
+        assert_eq!(m.artifacts[0].n, 128);
+        assert_eq!(m.artifacts[0].arity, 1);
+        assert!(m.artifacts[0].path.ends_with("hhat_128.hlo.txt"));
+    }
+
+    #[test]
+    fn best_fit_picks_smallest_sufficient() {
+        let dir =
+            write_manifest("f 64 1 a\nf 128 1 b\nf 256 1 c\n");
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.best_fit("f", 65).unwrap().n, 128);
+        assert_eq!(m.best_fit("f", 64).unwrap().n, 64);
+        assert!(m.best_fit("f", 500).is_none());
+        assert!(m.best_fit("g", 1).is_none());
+    }
+
+    #[test]
+    fn sizes_sorted() {
+        let dir = write_manifest("f 256 1 a\nf 64 1 b\n");
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.sizes("f"), vec![64, 256]);
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(Manifest::load("/nonexistent/dir").is_err());
+    }
+}

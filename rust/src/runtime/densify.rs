@@ -1,0 +1,60 @@
+//! Graph → padded dense f32 weight matrix for the fixed-size XLA artifacts.
+//! Zero padding appends isolated nodes, which leaves every quantity the
+//! artifacts compute invariant: trace(L), Q, λ_max and the positive
+//! eigenspectrum are all unchanged (padding only adds zero eigenvalues).
+
+use crate::graph::Graph;
+use anyhow::{ensure, Result};
+
+/// Row-major n×n f32 weight matrix padded with zeros to `size`.
+pub fn padded_weights_f32(g: &Graph, size: usize) -> Result<Vec<f32>> {
+    let n = g.num_nodes();
+    ensure!(n <= size, "graph has {n} nodes, artifact only fits {size}");
+    let mut w = vec![0.0f32; size * size];
+    for (i, j, wij) in g.edges() {
+        w[i as usize * size + j as usize] = wij as f32;
+        w[j as usize * size + i as usize] = wij as f32;
+    }
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pads_with_zeros() {
+        let g = Graph::from_edges(2, &[(0, 1, 2.0)]);
+        let w = padded_weights_f32(&g, 4).unwrap();
+        assert_eq!(w.len(), 16);
+        assert_eq!(w[0 * 4 + 1], 2.0);
+        assert_eq!(w[1 * 4 + 0], 2.0);
+        assert_eq!(w.iter().filter(|&&x| x != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn rejects_too_small() {
+        let g = Graph::new(5);
+        assert!(padded_weights_f32(&g, 4).is_err());
+    }
+
+    #[test]
+    fn padding_preserves_q() {
+        // Q computed on padded graph equals Q on the original
+        let mut rng = crate::util::Pcg64::new(1);
+        let g = crate::generators::erdos_renyi(20, 0.2, &mut rng);
+        let w = padded_weights_f32(&g, 32).unwrap();
+        let mut padded = Graph::new(32);
+        for i in 0..32 {
+            for j in (i + 1)..32 {
+                let v = w[i * 32 + j] as f64;
+                if v > 0.0 {
+                    padded.set_weight(i as u32, j as u32, v);
+                }
+            }
+        }
+        let q1 = crate::entropy::quadratic_q(&g);
+        let q2 = crate::entropy::quadratic_q(&padded);
+        assert!((q1 - q2).abs() < 1e-6, "{q1} vs {q2}");
+    }
+}

@@ -1,0 +1,91 @@
+//! PJRT executor: compiles HLO-text artifacts once (cached) and executes them
+//! with dense f32 inputs. Wraps the `xla` crate exactly as the reference
+//! wiring in /opt/xla-example/load_hlo does: HLO **text** → HloModuleProto →
+//! XlaComputation → PjRtLoadedExecutable.
+
+use super::artifact::{Artifact, Manifest};
+use anyhow::{ensure, Context, Result};
+use std::collections::HashMap;
+
+/// A loaded PJRT runtime with a compile cache keyed by (name, n).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: std::sync::Mutex<HashMap<(String, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the artifact manifest from `dir`
+    /// (typically `artifacts/`).
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client, manifest, cache: std::sync::Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compiled(&self, art: &Artifact) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = (art.name.clone(), art.n);
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            art.path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", art.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compile {}", art.name))?,
+        );
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute artifact `name` (size-fitted to `n`) on dense row-major n×n
+    /// f32 inputs (`inputs[k].len() == fit*fit`, already padded by the
+    /// caller via `densify::padded_weights_f32`). Returns the scalar f32
+    /// output. All L2 entry points return a single f32 scalar in a 1-tuple.
+    pub fn run_scalar(&self, art: &Artifact, inputs: &[Vec<f32>]) -> Result<f64> {
+        ensure!(inputs.len() == art.arity, "{} expects {} inputs", art.name, art.arity);
+        let exe = self.compiled(art)?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for buf in inputs {
+            ensure!(
+                buf.len() == art.n * art.n,
+                "input length {} != {}²",
+                buf.len(),
+                art.n
+            );
+            let lit = xla::Literal::vec1(buf).reshape(&[art.n as i64, art.n as i64])?;
+            lits.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        ensure!(!values.is_empty(), "empty output from {}", art.name);
+        Ok(values[0] as f64)
+    }
+
+    /// Look up the best-fitting artifact for (name, n).
+    pub fn artifact(&self, name: &str, n: usize) -> Result<Artifact> {
+        self.manifest
+            .best_fit(name, n)
+            .cloned()
+            .with_context(|| format!("no artifact `{name}` fits n={n} (sizes: {:?})", self.manifest.sizes(name)))
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+// Tests that need real artifacts live in rust/tests/runtime_integration.rs
+// and skip gracefully when `make artifacts` hasn't been run.

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT-compiled XLA artifacts produced by
+//! `make artifacts` (L2 JAX graphs wrapping L1 Pallas kernels, lowered to HLO
+//! text) and executes them from the Rust request path. Compilation happens
+//! once per artifact and is cached; the hot path is execute-only.
+
+pub mod artifact;
+pub mod densify;
+pub mod executor;
+pub mod offload;
+
+pub use artifact::{Artifact, Manifest};
+pub use executor::Runtime;
+pub use offload::XlaEntropy;

@@ -1,0 +1,45 @@
+//! High-level offload API: compute FINGER quantities through the AOT XLA
+//! artifacts (dense path) instead of the native sparse implementation. The
+//! crossover ablation in `benches/perf_hotpath.rs` quantifies when this pays
+//! off (dense contact-map workloads like Hi-C; never for very sparse graphs).
+
+use super::densify::padded_weights_f32;
+use super::executor::Runtime;
+use crate::graph::Graph;
+use anyhow::Result;
+
+/// Entropy computations backed by the XLA runtime.
+pub struct XlaEntropy<'a> {
+    rt: &'a Runtime,
+}
+
+impl<'a> XlaEntropy<'a> {
+    pub fn new(rt: &'a Runtime) -> Self {
+        Self { rt }
+    }
+
+    fn run1(&self, name: &str, g: &Graph) -> Result<f64> {
+        let art = self.rt.artifact(name, g.num_nodes())?;
+        let w = padded_weights_f32(g, art.n)?;
+        self.rt.run_scalar(&art, &[w])
+    }
+
+    /// Q via the L1 Pallas q-stats kernel.
+    pub fn q(&self, g: &Graph) -> Result<f64> {
+        self.run1("q_stats", g)
+    }
+
+    /// FINGER-Ĥ via the L2 dense graph (Q kernel + on-device power iteration).
+    pub fn hhat(&self, g: &Graph) -> Result<f64> {
+        self.run1("hhat_dense", g)
+    }
+
+    /// FINGER-JSdist (Fast) between two graphs via the L2 dense graph.
+    pub fn jsdist(&self, a: &Graph, b: &Graph) -> Result<f64> {
+        let n = a.num_nodes().max(b.num_nodes());
+        let art = self.rt.artifact("jsdist_dense", n)?;
+        let wa = padded_weights_f32(a, art.n)?;
+        let wb = padded_weights_f32(b, art.n)?;
+        self.rt.run_scalar(&art, &[wa, wb])
+    }
+}

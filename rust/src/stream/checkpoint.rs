@@ -1,0 +1,121 @@
+//! Checkpoint/restore for the incremental scorer state: the graph is saved
+//! as an edge list plus a small header (steps), and the `FingerState` is
+//! rebuilt exactly on restore (Q/c/s_max are derived, so no drift can be
+//! persisted).
+
+use crate::entropy::FingerState;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Save a state checkpoint.
+pub fn save(state: &FingerState, path: impl AsRef<Path>) -> Result<()> {
+    let f = std::fs::File::create(path.as_ref())
+        .with_context(|| format!("create {}", path.as_ref().display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "finger-checkpoint v1")?;
+    writeln!(w, "steps {}", state.steps())?;
+    writeln!(w, "nodes {}", state.graph().num_nodes())?;
+    crate::graph::io::write_edge_list(state.graph(), &mut w)?;
+    Ok(())
+}
+
+/// Restore a state checkpoint.
+pub fn load(path: impl AsRef<Path>) -> Result<FingerState> {
+    let f = std::fs::File::open(path.as_ref())
+        .with_context(|| format!("open {}", path.as_ref().display()))?;
+    let mut r = BufReader::new(f);
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    anyhow::ensure!(line.trim() == "finger-checkpoint v1", "bad checkpoint header: {line:?}");
+    line.clear();
+    r.read_line(&mut line)?;
+    let _steps: u64 = line
+        .trim()
+        .strip_prefix("steps ")
+        .context("missing steps")?
+        .parse()
+        .context("bad steps")?;
+    line.clear();
+    r.read_line(&mut line)?;
+    let nodes: usize = line
+        .trim()
+        .strip_prefix("nodes ")
+        .context("missing nodes")?
+        .parse()
+        .context("bad nodes")?;
+    let mut g = crate::graph::io::read_edge_list(r, nodes)?;
+    g.ensure_nodes(nodes);
+    Ok(FingerState::new(g))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DeltaGraph;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip_preserves_state() {
+        let g = crate::generators::erdos_renyi(30, 0.2, &mut Pcg64::new(1));
+        let mut state = FingerState::new(g);
+        let mut d = DeltaGraph::new();
+        d.add(0, 5, 2.0).add(1, 6, -0.1);
+        state.apply(&d);
+
+        let dir = std::env::temp_dir().join("finger_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ckpt");
+        save(&state, &path).unwrap();
+        let restored = load(&path).unwrap();
+        assert!((restored.q() - state.q()).abs() < 1e-12);
+        assert!((restored.s_max() - state.s_max()).abs() < 1e-12);
+        assert!((restored.htilde() - state.htilde()).abs() < 1e-12);
+        assert_eq!(restored.graph().num_nodes(), state.graph().num_nodes());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn restore_then_continue_matches_uninterrupted() {
+        let g = crate::generators::erdos_renyi(25, 0.2, &mut Pcg64::new(2));
+        let mut full = FingerState::new(g.clone());
+        let mut first = FingerState::new(g);
+        let mut rng = Pcg64::new(3);
+        let deltas: Vec<DeltaGraph> = (0..10)
+            .map(|_| {
+                let mut d = DeltaGraph::new();
+                let i = rng.below(25) as u32;
+                let j = (i + 1 + rng.below(24) as u32) % 25;
+                if i != j {
+                    d.add(i, j, rng.uniform(0.1, 1.0));
+                }
+                d
+            })
+            .collect();
+        for d in &deltas[..5] {
+            full.apply(d);
+            first.apply(d);
+        }
+        let dir = std::env::temp_dir().join("finger_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mid.ckpt");
+        save(&first, &path).unwrap();
+        let mut resumed = load(&path).unwrap();
+        for d in &deltas[5..] {
+            full.apply(d);
+            resumed.apply(d);
+        }
+        assert!((full.htilde() - resumed.htilde()).abs() < 1e-12);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("finger_ckpt_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, "not a checkpoint\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,95 @@
+//! Typed events of the delta stream.
+
+/// One event in a streaming graph workload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamEvent {
+    /// Signed edge-weight delta (addition, strengthening, weakening or
+    /// deletion of edge (i, j)).
+    EdgeDelta { i: u32, j: u32, dw: f64 },
+    /// Append `count` fresh nodes.
+    GrowNodes { count: usize },
+    /// Window boundary: everything since the previous tick forms one ΔG_t.
+    Tick,
+}
+
+impl StreamEvent {
+    /// Parse from a text line: `e i j dw` | `n count` | `t`.
+    pub fn parse(line: &str) -> Option<Self> {
+        let mut it = line.split_whitespace();
+        match it.next()? {
+            "e" => {
+                let i = it.next()?.parse().ok()?;
+                let j = it.next()?.parse().ok()?;
+                let dw = it.next()?.parse().ok()?;
+                Some(StreamEvent::EdgeDelta { i, j, dw })
+            }
+            "n" => Some(StreamEvent::GrowNodes { count: it.next()?.parse().ok()? }),
+            "t" => Some(StreamEvent::Tick),
+            _ => None,
+        }
+    }
+
+    /// Serialize to the same text format.
+    pub fn to_line(&self) -> String {
+        match self {
+            StreamEvent::EdgeDelta { i, j, dw } => format!("e {i} {j} {dw}"),
+            StreamEvent::GrowNodes { count } => format!("n {count}"),
+            StreamEvent::Tick => "t".to_string(),
+        }
+    }
+}
+
+/// Flatten a sequence of `DeltaGraph`s into a tick-separated event stream.
+pub fn events_from_deltas(deltas: &[crate::graph::DeltaGraph]) -> Vec<StreamEvent> {
+    let mut out = Vec::new();
+    for d in deltas {
+        if d.new_nodes() > 0 {
+            out.push(StreamEvent::GrowNodes { count: d.new_nodes() });
+        }
+        for &(i, j, dw) in d.edge_deltas() {
+            out.push(StreamEvent::EdgeDelta { i, j, dw });
+        }
+        out.push(StreamEvent::Tick);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for ev in [
+            StreamEvent::EdgeDelta { i: 3, j: 7, dw: -1.5 },
+            StreamEvent::GrowNodes { count: 4 },
+            StreamEvent::Tick,
+        ] {
+            assert_eq!(StreamEvent::parse(&ev.to_line()), Some(ev));
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert_eq!(StreamEvent::parse("x 1 2"), None);
+        assert_eq!(StreamEvent::parse("e 1"), None);
+        assert_eq!(StreamEvent::parse(""), None);
+    }
+
+    #[test]
+    fn events_from_deltas_tick_separated() {
+        let mut d1 = crate::graph::DeltaGraph::new();
+        d1.grow_nodes(2).add(0, 1, 1.0);
+        let d2 = crate::graph::DeltaGraph::new();
+        let evs = events_from_deltas(&[d1, d2]);
+        assert_eq!(
+            evs,
+            vec![
+                StreamEvent::GrowNodes { count: 2 },
+                StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 },
+                StreamEvent::Tick,
+                StreamEvent::Tick,
+            ]
+        );
+    }
+}

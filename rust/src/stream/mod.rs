@@ -1,0 +1,24 @@
+//! The streaming coordinator — L3's system contribution.
+//!
+//! A multi-threaded pipeline consuming an edge-delta event stream:
+//!
+//! ```text
+//! source ──(bounded ch)──► batcher ──(bounded ch)──► scorer ──► sink
+//!              events        windows ΔG_t        Algorithm 2      records
+//! ```
+//!
+//! * **batcher** groups events into window deltas (ΔG_t) on `Tick` events;
+//! * **scorer** owns the incremental `FingerState` and emits the JS distance
+//!   of every window in O(Δ) (Algorithm 2) plus the running H̃;
+//! * **sink** flags anomalies online (score > μ + kσ over a trailing window)
+//!   and aggregates per-stage metrics.
+//!
+//! Bounded channels give backpressure: a slow scorer stalls the source
+//! instead of growing memory. Checkpoint/restore lets a stream resume.
+
+pub mod checkpoint;
+pub mod event;
+pub mod pipeline;
+
+pub use event::StreamEvent;
+pub use pipeline::{Pipeline, PipelineConfig, PipelineResult, ScoreRecord};

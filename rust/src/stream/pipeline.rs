@@ -1,0 +1,307 @@
+//! The threaded streaming pipeline (source → batcher → scorer → sink) with
+//! bounded-channel backpressure and per-stage metrics.
+
+use super::event::StreamEvent;
+use crate::entropy::FingerState;
+use crate::graph::{DeltaGraph, Graph};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::time::Instant;
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Bounded channel capacity between stages (backpressure knob).
+    pub channel_capacity: usize,
+    /// Online anomaly threshold: score > μ + k·σ over the trailing window.
+    pub anomaly_sigma: f64,
+    /// Trailing window length for the running anomaly statistics.
+    pub anomaly_window: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self { channel_capacity: 64, anomaly_sigma: 3.0, anomaly_window: 24 }
+    }
+}
+
+/// One scored window.
+#[derive(Debug, Clone)]
+pub struct ScoreRecord {
+    pub window: usize,
+    /// FINGER-JSdist (Incremental) between the pre- and post-window graphs.
+    pub jsdist: f64,
+    /// H̃ of the post-window graph.
+    pub htilde: f64,
+    pub nodes: usize,
+    pub edges: usize,
+    /// Events folded into this window.
+    pub events: usize,
+    /// Scoring latency (seconds) for this window.
+    pub latency: f64,
+    /// Online anomaly flag.
+    pub anomalous: bool,
+}
+
+/// Aggregated pipeline outcome.
+#[derive(Debug)]
+pub struct PipelineResult {
+    pub records: Vec<ScoreRecord>,
+    pub total_events: usize,
+    pub wall_secs: f64,
+    /// Events per second through the whole pipeline.
+    pub throughput: f64,
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    pub anomalies: Vec<usize>,
+}
+
+/// The pipeline itself. Construct with an initial graph, then `run` an event
+/// iterator to completion.
+pub struct Pipeline {
+    cfg: PipelineConfig,
+    initial: Graph,
+}
+
+impl Pipeline {
+    pub fn new(initial: Graph, cfg: PipelineConfig) -> Self {
+        Self { cfg, initial }
+    }
+
+    /// Run the pipeline over `events` (consumed on a source thread). Returns
+    /// when the stream ends and all stages have drained.
+    pub fn run<I>(&self, events: I) -> PipelineResult
+    where
+        I: IntoIterator<Item = StreamEvent> + Send + 'static,
+        I::IntoIter: Send,
+    {
+        let start = Instant::now();
+        let (ev_tx, ev_rx): (SyncSender<StreamEvent>, Receiver<StreamEvent>) =
+            sync_channel(self.cfg.channel_capacity);
+        let (win_tx, win_rx): (SyncSender<(DeltaGraph, usize)>, Receiver<(DeltaGraph, usize)>) =
+            sync_channel(self.cfg.channel_capacity);
+
+        // -- source --
+        let source = std::thread::spawn(move || {
+            let mut count = 0usize;
+            for ev in events {
+                count += 1;
+                if ev_tx.send(ev).is_err() {
+                    break; // downstream gone: stop producing
+                }
+            }
+            count
+        });
+
+        // -- batcher --
+        let batcher = std::thread::spawn(move || {
+            let mut current = DeltaGraph::new();
+            let mut events_in_window = 0usize;
+            for ev in ev_rx {
+                match ev {
+                    StreamEvent::EdgeDelta { i, j, dw } => {
+                        if i != j {
+                            current.add(i, j, dw);
+                        }
+                        events_in_window += 1;
+                    }
+                    StreamEvent::GrowNodes { count } => {
+                        current.grow_nodes(count);
+                        events_in_window += 1;
+                    }
+                    StreamEvent::Tick => {
+                        let d = std::mem::take(&mut current).coalesced();
+                        if win_tx.send((d, events_in_window + 1)).is_err() {
+                            return;
+                        }
+                        events_in_window = 0;
+                    }
+                }
+            }
+            // flush a trailing partial window
+            if events_in_window > 0 {
+                let d = std::mem::take(&mut current).coalesced();
+                let _ = win_tx.send((d, events_in_window));
+            }
+        });
+
+        // -- scorer + sink (inline on this thread) --
+        let mut state = FingerState::new(self.initial.clone());
+        let mut records: Vec<ScoreRecord> = Vec::new();
+        let mut trailing: std::collections::VecDeque<f64> = Default::default();
+        let mut window = 0usize;
+        for (delta, n_events) in win_rx {
+            let t0 = Instant::now();
+            let js = crate::distance::jsdist_incremental(&mut state, &delta);
+            let latency = t0.elapsed().as_secs_f64();
+            // online anomaly decision from the trailing window
+            let anomalous = if trailing.len() >= 4 {
+                let xs: Vec<f64> = trailing.iter().copied().collect();
+                let mu = crate::util::stats::mean(&xs);
+                let sd = crate::util::stats::std_dev(&xs);
+                js > mu + self.cfg.anomaly_sigma * sd.max(1e-12)
+            } else {
+                false
+            };
+            trailing.push_back(js);
+            if trailing.len() > self.cfg.anomaly_window {
+                trailing.pop_front();
+            }
+            records.push(ScoreRecord {
+                window,
+                jsdist: js,
+                htilde: state.htilde(),
+                nodes: state.graph().num_nodes(),
+                edges: state.graph().num_edges(),
+                events: n_events,
+                latency,
+                anomalous,
+            });
+            window += 1;
+        }
+        batcher.join().expect("batcher panicked");
+        let total_events = source.join().expect("source panicked");
+
+        let wall = start.elapsed().as_secs_f64();
+        let lats: Vec<f64> = records.iter().map(|r| r.latency).collect();
+        PipelineResult {
+            throughput: total_events as f64 / wall.max(1e-12),
+            total_events,
+            wall_secs: wall,
+            p50_latency: crate::util::stats::percentile(&lats, 50.0),
+            p99_latency: crate::util::stats::percentile(&lats, 99.0),
+            anomalies: records
+                .iter()
+                .filter(|r| r.anomalous)
+                .map(|r| r.window)
+                .collect(),
+            records,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::event::events_from_deltas;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn pipeline_scores_each_window() {
+        let g = crate::generators::erdos_renyi(50, 0.1, &mut Pcg64::new(1));
+        let mut deltas = Vec::new();
+        let mut rng = Pcg64::new(2);
+        for _ in 0..10 {
+            let mut d = DeltaGraph::new();
+            for _ in 0..5 {
+                let i = rng.below(50) as u32;
+                let j = (i + 1 + rng.below(49) as u32) % 50;
+                if i != j {
+                    d.add(i, j, rng.uniform(0.1, 1.0));
+                }
+            }
+            deltas.push(d);
+        }
+        let events = events_from_deltas(&deltas);
+        let res = Pipeline::new(g, PipelineConfig::default()).run(events);
+        assert_eq!(res.records.len(), 10);
+        assert!(res.records.iter().all(|r| r.jsdist.is_finite() && r.jsdist >= 0.0));
+        assert!(res.throughput > 0.0);
+    }
+
+    #[test]
+    fn pipeline_matches_offline_incremental() {
+        // streaming result == direct Algorithm-2 loop over the same deltas
+        let g = crate::generators::erdos_renyi(40, 0.1, &mut Pcg64::new(3));
+        let mut deltas = Vec::new();
+        let mut rng = Pcg64::new(4);
+        for _ in 0..6 {
+            let mut d = DeltaGraph::new();
+            let i = rng.below(40) as u32;
+            let j = (i + 1 + rng.below(39) as u32) % 40;
+            if i != j {
+                d.add(i, j, 1.0);
+            }
+            deltas.push(d.coalesced());
+        }
+        let events = events_from_deltas(&deltas);
+        let res = Pipeline::new(g.clone(), PipelineConfig::default()).run(events);
+        let mut state = FingerState::new(g);
+        for (t, d) in deltas.iter().enumerate() {
+            let js = crate::distance::jsdist_incremental(&mut state, d);
+            assert!((res.records[t].jsdist - js).abs() < 1e-12, "window {t}");
+        }
+    }
+
+    #[test]
+    fn no_event_loss_under_tiny_channels() {
+        // capacity 1 forces constant backpressure; everything still arrives
+        let g = Graph::new(20);
+        let mut events = Vec::new();
+        for k in 0..200u32 {
+            events.push(StreamEvent::EdgeDelta { i: k % 20, j: (k + 1) % 20, dw: 0.1 });
+            if k % 10 == 9 {
+                events.push(StreamEvent::Tick);
+            }
+        }
+        let total = events.len();
+        let cfg = PipelineConfig { channel_capacity: 1, ..Default::default() };
+        let res = Pipeline::new(g, cfg).run(events);
+        assert_eq!(res.total_events, total);
+        assert_eq!(res.records.len(), 20);
+        let ev_sum: usize = res.records.iter().map(|r| r.events).sum();
+        assert_eq!(ev_sum, total);
+    }
+
+    #[test]
+    fn trailing_partial_window_flushed() {
+        let g = Graph::new(5);
+        let events = vec![
+            StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 },
+            StreamEvent::Tick,
+            StreamEvent::EdgeDelta { i: 1, j: 2, dw: 1.0 }, // no trailing tick
+        ];
+        let res = Pipeline::new(g, PipelineConfig::default()).run(events);
+        assert_eq!(res.records.len(), 2);
+        assert_eq!(res.records[1].edges, 2);
+    }
+
+    #[test]
+    fn anomaly_flagging_fires_on_burst() {
+        let g = crate::generators::erdos_renyi(100, 0.05, &mut Pcg64::new(5));
+        let mut deltas = Vec::new();
+        let mut rng = Pcg64::new(6);
+        for t in 0..30 {
+            let mut d = DeltaGraph::new();
+            let count = if t == 25 { 400 } else { 3 }; // burst at window 25
+            for _ in 0..count {
+                let i = rng.below(100) as u32;
+                let j = (i + 1 + rng.below(99) as u32) % 100;
+                if i != j {
+                    d.add(i, j, 1.0);
+                }
+            }
+            deltas.push(d.coalesced());
+        }
+        let res = Pipeline::new(g, PipelineConfig::default()).run(events_from_deltas(&deltas));
+        assert!(res.anomalies.contains(&25), "anomalies={:?}", res.anomalies);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let res = Pipeline::new(Graph::new(3), PipelineConfig::default()).run(Vec::new());
+        assert!(res.records.is_empty());
+        assert_eq!(res.total_events, 0);
+    }
+
+    #[test]
+    fn self_loop_events_ignored() {
+        let g = Graph::new(4);
+        let events = vec![
+            StreamEvent::EdgeDelta { i: 2, j: 2, dw: 1.0 }, // ignored
+            StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 },
+            StreamEvent::Tick,
+        ];
+        let res = Pipeline::new(g, PipelineConfig::default()).run(events);
+        assert_eq!(res.records[0].edges, 1);
+    }
+}

@@ -1,0 +1,87 @@
+//! Deterministic hashing (FxHash-style). std's default `RandomState` salts
+//! per process, which makes adjacency-map iteration order — and therefore
+//! every seeded experiment that consumes RNG draws while iterating edges —
+//! irreproducible across runs. All graph-internal maps use this instead.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// The Firefox/rustc multiply-rotate hasher; deterministic, fast for small
+/// integer keys (our node ids).
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, i: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ i).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add_to_hash(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+/// Deterministic hash map / set aliases.
+pub type DetHashMap<K, V> = std::collections::HashMap<K, V, BuildHasherDefault<FxHasher>>;
+pub type DetHashSet<K> = std::collections::HashSet<K, BuildHasherDefault<FxHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut m1: DetHashMap<u32, u32> = DetHashMap::default();
+        let mut m2: DetHashMap<u32, u32> = DetHashMap::default();
+        for k in 0..1000u32 {
+            m1.insert(k * 7, k);
+            m2.insert(k * 7, k);
+        }
+        let o1: Vec<_> = m1.iter().collect();
+        let o2: Vec<_> = m2.iter().collect();
+        assert_eq!(o1, o2, "iteration order must be deterministic");
+    }
+
+    #[test]
+    fn hashes_differ_for_different_keys() {
+        use std::hash::Hash;
+        let h = |x: u32| {
+            let mut hasher = FxHasher::default();
+            x.hash(&mut hasher);
+            hasher.finish()
+        };
+        assert_ne!(h(1), h(2));
+        assert_eq!(h(42), h(42));
+    }
+}

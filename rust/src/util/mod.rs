@@ -1,0 +1,13 @@
+//! Foundation utilities built in-tree (the offline registry only carries the
+//! `xla` crate closure, so PRNG, statistics, timing, table formatting and the
+//! property-testing harness are all implemented here).
+
+pub mod fmt;
+pub mod hash;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Pcg64;
+pub use timer::Timer;

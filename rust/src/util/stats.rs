@@ -1,0 +1,208 @@
+//! Statistics used by the evaluation harness: summary moments, Pearson and
+//! Spearman correlation (the paper reports PCC in Table 2 and SRCC in
+//! Table S1), and fractional ranking with tie handling.
+
+/// Arithmetic mean. Returns 0.0 on empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance. Returns 0.0 on inputs shorter than 2.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Pearson correlation coefficient. Returns 0.0 when either side is
+/// degenerate (constant) or lengths mismatch — callers treat "no linear
+/// relationship measurable" as zero correlation, matching how the paper's
+/// tables would render a flat metric.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    if xs.len() != ys.len() || xs.len() < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut num = 0.0;
+    let mut dx2 = 0.0;
+    let mut dy2 = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        let dx = x - mx;
+        let dy = y - my;
+        num += dx * dy;
+        dx2 += dx * dx;
+        dy2 += dy * dy;
+    }
+    if dx2 <= 0.0 || dy2 <= 0.0 {
+        return 0.0;
+    }
+    num / (dx2.sqrt() * dy2.sqrt())
+}
+
+/// Fractional ranks (1-based, ties get the average of their positions),
+/// the standard ranking for Spearman's rho.
+pub fn fractional_ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut ranks = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        // positions i..=j (0-based) share the average rank.
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Spearman's rank correlation coefficient (Pearson on fractional ranks,
+/// which handles ties correctly).
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    if xs.len() != ys.len() || xs.len() < 2 {
+        return 0.0;
+    }
+    pearson(&fractional_ranks(xs), &fractional_ranks(ys))
+}
+
+/// Indices of the top-k largest values, descending. Ties broken by index.
+pub fn top_k_indices(xs: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+/// Percentile (nearest-rank) of a sample; p in [0,100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize - 1;
+    v[rank.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-12
+    }
+
+    #[test]
+    fn mean_variance_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!(close(mean(&xs), 2.5));
+        assert!(close(variance(&xs), 1.25));
+    }
+
+    #[test]
+    fn mean_empty_is_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn pearson_perfect_positive() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [10.0, 20.0, 30.0];
+        assert!(close(pearson(&xs, &ys), 1.0));
+    }
+
+    #[test]
+    fn pearson_perfect_negative() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [3.0, 2.0, 1.0];
+        assert!(close(pearson(&xs, &ys), -1.0));
+    }
+
+    #[test]
+    fn pearson_constant_is_zero() {
+        assert_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+    }
+
+    #[test]
+    fn pearson_known_value() {
+        // Hand-computed: Σdxdy = 15, Σdx² = 10, Σdy² = 22.8 ⇒ r = 15/√228
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let ys = [2.0, 3.0, 5.0, 6.0, 8.0];
+        let r = pearson(&xs, &ys);
+        assert!((r - 15.0 / 228f64.sqrt()).abs() < 1e-12, "r={r}");
+    }
+
+    #[test]
+    fn ranks_no_ties() {
+        let r = fractional_ranks(&[30.0, 10.0, 20.0]);
+        assert_eq!(r, vec![3.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn ranks_with_ties_average() {
+        let r = fractional_ranks(&[10.0, 20.0, 20.0, 30.0]);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear_is_one() {
+        let xs = [1.0f64, 2.0, 3.0, 4.0, 5.0];
+        let ys: Vec<f64> = xs.iter().map(|x| x.exp()).collect();
+        assert!(close(spearman(&xs, &ys), 1.0));
+    }
+
+    #[test]
+    fn spearman_reversed_is_minus_one() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [9.0, 7.0, 5.0, 1.0];
+        assert!(close(spearman(&xs, &ys), -1.0));
+    }
+
+    #[test]
+    fn spearman_ties_known() {
+        // xs ranks: [1.5, 1.5, 3, 4]; ys ranks: [1, 2, 3, 4]
+        let xs = [5.0, 5.0, 7.0, 9.0];
+        let ys = [1.0, 2.0, 3.0, 4.0];
+        let rho = spearman(&xs, &ys);
+        assert!((rho - 0.9486832980505138).abs() < 1e-12, "rho={rho}");
+    }
+
+    #[test]
+    fn top_k_descending() {
+        let xs = [0.1, 5.0, 3.0, 4.0];
+        assert_eq!(top_k_indices(&xs, 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn top_k_truncates_at_len() {
+        assert_eq!(top_k_indices(&[1.0], 5), vec![0]);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!(close(percentile(&xs, 50.0), 3.0));
+        assert!(close(percentile(&xs, 100.0), 5.0));
+        assert!(close(percentile(&xs, 1.0), 1.0));
+    }
+}

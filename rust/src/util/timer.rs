@@ -1,0 +1,82 @@
+//! Wall-clock timing helpers for the CTRR (computation-time reduction ratio)
+//! measurements and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Simple start/elapsed timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+/// Computation-time reduction ratio, the paper's CTRR:
+/// `(Time(H) - Time(X)) / Time(H)`. Clamped to [-inf, 1]; returns 0 when the
+/// baseline time is not positive.
+pub fn ctrr(baseline_secs: f64, approx_secs: f64) -> f64 {
+    if baseline_secs <= 0.0 {
+        return 0.0;
+    }
+    (baseline_secs - approx_secs) / baseline_secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_sleep() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(t.elapsed_secs() >= 0.009);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn ctrr_basic() {
+        assert!((ctrr(10.0, 0.1) - 0.99).abs() < 1e-12);
+        assert_eq!(ctrr(0.0, 1.0), 0.0);
+        assert!((ctrr(2.0, 2.0) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn restart_resets() {
+        let mut t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        let first = t.restart();
+        assert!(first.as_secs_f64() >= 0.004);
+        assert!(t.elapsed_secs() < first.as_secs_f64());
+    }
+}

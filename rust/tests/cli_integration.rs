@@ -1,0 +1,80 @@
+//! CLI + config integration: exercise the binary's argument surface through
+//! the library-level entry points, plus config file parsing end to end.
+
+use finger::cli::{Args, Config};
+
+fn toks(s: &str) -> Vec<String> {
+    s.split_whitespace().map(|t| t.to_string()).collect()
+}
+
+#[test]
+fn full_cli_surface_parses() {
+    let a = Args::parse(&toks(
+        "wiki --dataset en --scale 2.5 --series",
+    ));
+    assert_eq!(a.subcommand.as_deref(), Some("wiki"));
+    assert_eq!(a.get("dataset"), Some("en"));
+    assert!((a.get_parsed("scale", 0.0f64) - 2.5).abs() < 1e-12);
+    assert!(a.flag("series"));
+}
+
+#[test]
+fn sweep_args() {
+    let a = Args::parse(&toks("sweep --kind fig1-ws --n 1200 --trials 5"));
+    assert_eq!(a.get("kind"), Some("fig1-ws"));
+    assert_eq!(a.get_parsed("n", 0usize), 1200);
+    assert_eq!(a.get_parsed("trials", 0usize), 5);
+}
+
+#[test]
+fn config_round_trip_through_file() {
+    let dir = std::env::temp_dir().join("finger_cli_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.toml");
+    std::fs::write(
+        &path,
+        "[wiki]\nmonths = 36\n[stream]\ncapacity = 32\nanomaly_sigma = 2.0\n",
+    )
+    .unwrap();
+    let c = Config::load(&path).unwrap();
+    assert_eq!(c.get_or("wiki.months", 0usize), 36);
+    assert_eq!(c.get_or("stream.capacity", 0usize), 32);
+    assert!((c.get_or("stream.anomaly_sigma", 0.0f64) - 2.0).abs() < 1e-12);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn graph_file_workflow() {
+    // save a graph, reload it, and compute entropies — the `finger entropy
+    // file.edges` path without spawning a process
+    let dir = std::env::temp_dir().join("finger_cli_it2");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("g.edges");
+    let mut rng = finger::util::Pcg64::new(5);
+    let g = finger::generators::erdos_renyi(80, 0.1, &mut rng);
+    finger::graph::io::save_graph(&g, &path).unwrap();
+    let loaded = finger::graph::io::load_graph(&path).unwrap();
+    assert!((finger::entropy::finger_hhat(&g) - finger::entropy::finger_hhat(&loaded)).abs() < 1e-12);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn delta_stream_file_workflow() {
+    let dir = std::env::temp_dir().join("finger_cli_it3");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("deltas.txt");
+    std::fs::write(&path, "0 0 1 1.0\n0 1 2 1.0\n1 0 1 -1.0\n").unwrap();
+    let f = std::fs::File::open(&path).unwrap();
+    let deltas = finger::graph::io::read_delta_stream(f).unwrap();
+    assert_eq!(deltas.len(), 2);
+    assert_eq!(deltas[0].num_changes(), 2);
+    let events = finger::stream::event::events_from_deltas(&deltas);
+    let res = finger::stream::Pipeline::new(
+        finger::graph::Graph::new(3),
+        finger::stream::PipelineConfig::default(),
+    )
+    .run(events);
+    assert_eq!(res.records.len(), 2);
+    assert_eq!(res.records[1].edges, 1); // edge (0,1) deleted again
+    std::fs::remove_file(path).ok();
+}

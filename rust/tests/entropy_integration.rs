@@ -1,0 +1,160 @@
+//! Cross-module entropy integration: exact eigensolver ↔ FINGER
+//! approximations ↔ incremental state, on realistic generator workloads.
+
+use finger::entropy::{
+    entropy_from_eigenvalues, exact_vnge, finger_hhat, finger_htilde, quadratic_q, FingerState,
+};
+use finger::graph::{DeltaGraph, Graph, GraphSequence};
+use finger::linalg::SymMatrix;
+use finger::util::Pcg64;
+
+#[test]
+fn ordering_holds_across_models_and_densities() {
+    let mut rng = Pcg64::new(100);
+    let graphs: Vec<Graph> = vec![
+        finger::generators::erdos_renyi_avg_degree(150, 8.0, &mut rng),
+        finger::generators::erdos_renyi_avg_degree(150, 40.0, &mut rng),
+        finger::generators::barabasi_albert(150, 3, &mut rng),
+        finger::generators::watts_strogatz(150, 10, 0.05, &mut rng),
+        finger::generators::watts_strogatz(150, 10, 0.8, &mut rng),
+        finger::generators::complete(40, 2.5),
+        finger::generators::star(100),
+        finger::generators::ring(120),
+    ];
+    for (k, g) in graphs.iter().enumerate() {
+        let h = exact_vnge(g);
+        let hhat = finger_hhat(g);
+        let htil = finger_htilde(g);
+        assert!(htil <= hhat + 1e-9, "graph {k}: H̃={htil} > Ĥ={hhat}");
+        assert!(hhat <= h + 1e-6, "graph {k}: Ĥ={hhat} > H={h}");
+        assert!(h <= ((g.num_nodes() - 1) as f64).ln() + 1e-9, "graph {k}: H > ln(n-1)");
+    }
+}
+
+#[test]
+fn scaled_error_decays_for_er_and_grows_for_ba() {
+    // Corollary 2 validation at test scale (the fig2 bench does it bigger)
+    let sae = |g: &Graph| (exact_vnge(g) - finger_hhat(g)) / (g.num_nodes() as f64).ln();
+    let mut rng = Pcg64::new(5);
+    let er_small = finger::generators::erdos_renyi_avg_degree(150, 20.0, &mut rng);
+    let er_large = finger::generators::erdos_renyi_avg_degree(900, 20.0, &mut rng);
+    assert!(
+        sae(&er_large) < sae(&er_small),
+        "ER SAE must decay: {} vs {}",
+        sae(&er_large),
+        sae(&er_small)
+    );
+}
+
+#[test]
+fn incremental_state_tracks_sequence_exactly() {
+    // drive a FingerState through a 60-step mixed stream and compare with
+    // from-scratch H̃ at every step
+    let mut rng = Pcg64::new(7);
+    let g0 = finger::generators::erdos_renyi(120, 0.05, &mut rng);
+    let mut state = FingerState::new(g0.clone());
+    let mut reference = g0;
+    for step in 0..60 {
+        let mut d = DeltaGraph::new();
+        for _ in 0..8 {
+            let i = rng.below(120) as u32;
+            let j = (i + 1 + rng.below(119) as u32) % 120;
+            if i == j {
+                continue;
+            }
+            match rng.below(3) {
+                0 => {
+                    d.add(i, j, rng.uniform(0.1, 2.0));
+                }
+                1 => {
+                    let w = reference.weight(i.min(j), i.max(j));
+                    if w > 0.0 {
+                        d.add(i, j, -w);
+                    }
+                }
+                _ => {
+                    d.add(i, j, rng.uniform(-0.3, 0.3));
+                }
+            }
+        }
+        let d = d.coalesced();
+        state.apply(&d);
+        d.apply_to(&mut reference);
+        let fresh = finger_htilde(&reference);
+        assert!(
+            (state.htilde() - fresh).abs() < 1e-8,
+            "step {step}: {} vs {fresh}",
+            state.htilde()
+        );
+        let q_fresh = quadratic_q(&reference);
+        assert!((state.q() - q_fresh).abs() < 1e-8, "step {step} Q drift");
+    }
+}
+
+#[test]
+fn q_is_one_minus_purity_on_every_model() {
+    let mut rng = Pcg64::new(9);
+    for g in [
+        finger::generators::barabasi_albert(80, 2, &mut rng),
+        finger::generators::watts_strogatz(80, 6, 0.2, &mut rng),
+    ] {
+        let eigs = SymMatrix::laplacian_normalized(&g).eigenvalues();
+        let purity: f64 = eigs.iter().map(|l| l * l).sum();
+        assert!((quadratic_q(&g) - (1.0 - purity)).abs() < 1e-9);
+        // and exact H reproduces entropy_from_eigenvalues
+        assert!((exact_vnge(&g) - entropy_from_eigenvalues(&eigs)).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn complete_graph_anchor_values() {
+    // Theorem 1 equality case across sizes, both entropy and bounds
+    for n in [5usize, 20, 60] {
+        let g = finger::generators::complete(n, 1.0);
+        let h = exact_vnge(&g);
+        assert!((h - ((n - 1) as f64).ln()).abs() < 1e-8);
+        // Ĥ on complete graphs: λ_max = 1/(n−1), Q = 1 − 1/(n−1)
+        let hhat = finger_hhat(&g);
+        let expected = (1.0 - 1.0 / (n as f64 - 1.0)) * ((n as f64) - 1.0).ln();
+        assert!((hhat - expected).abs() < 1e-6, "n={n}: {hhat} vs {expected}");
+    }
+}
+
+#[test]
+fn disconnected_graphs_sum_structure() {
+    // entropy of disjoint union is well-defined and FINGER stays ordered
+    let mut g = Graph::new(60);
+    for base in [0u32, 20, 40] {
+        for i in 0..19 {
+            g.set_weight(base + i, base + i + 1, 1.0);
+        }
+    }
+    assert_eq!(g.connected_components(), 3);
+    let h = exact_vnge(&g);
+    let hhat = finger_hhat(&g);
+    let htil = finger_htilde(&g);
+    assert!(htil <= hhat + 1e-9 && hhat <= h + 1e-6);
+}
+
+#[test]
+fn sequence_entropies_stable_under_materialization() {
+    // computing over GraphSequence::from_deltas equals direct composition
+    let mut rng = Pcg64::new(21);
+    let g0 = finger::generators::erdos_renyi(60, 0.08, &mut rng);
+    let mut deltas = Vec::new();
+    for _ in 0..10 {
+        let mut d = DeltaGraph::new();
+        let i = rng.below(60) as u32;
+        let j = (i + 7) % 60;
+        if i != j {
+            d.add(i, j, 1.0);
+        }
+        deltas.push(d);
+    }
+    let seq = GraphSequence::from_deltas(g0.clone(), &deltas);
+    let mut g = g0;
+    for (t, d) in deltas.iter().enumerate() {
+        d.apply_to(&mut g);
+        assert!((finger_hhat(seq.get(t + 1)) - finger_hhat(&g)).abs() < 1e-12);
+    }
+}

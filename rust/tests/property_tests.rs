@@ -1,0 +1,204 @@
+//! Property-based tests over the paper's invariants, using the in-tree
+//! mini-proptest harness (seeded, size-ramped, reproducible failures).
+
+use finger::entropy::{exact_vnge, finger_hhat, finger_htilde, quadratic_q, FingerState};
+use finger::graph::{DeltaGraph, Graph};
+use finger::util::proptest::{check, run, Config};
+use finger::util::Pcg64;
+
+/// Strategy: random weighted graph with size-scaled node count.
+fn arb_graph(rng: &mut Pcg64, size: usize) -> Graph {
+    let n = (size + 3).min(120);
+    let p = rng.uniform(0.02, 0.3);
+    let mut g = finger::generators::erdos_renyi(n, p, rng);
+    // random positive weights on a subset
+    let edges: Vec<_> = g.edges().collect();
+    for (i, j, _) in edges {
+        if rng.bernoulli(0.5) {
+            g.set_weight(i, j, rng.uniform(0.1, 5.0));
+        }
+    }
+    g
+}
+
+/// Strategy: (graph, delta) pair with mixed add/remove/perturb operations.
+fn arb_graph_delta(rng: &mut Pcg64, size: usize) -> (Graph, DeltaGraph) {
+    let g = arb_graph(rng, size);
+    let n = g.num_nodes() as u32;
+    let mut d = DeltaGraph::new();
+    let ops = rng.range(1, size.max(2));
+    for _ in 0..ops {
+        let i = rng.below(n as usize) as u32;
+        let j = (i + 1 + rng.below(n as usize - 1) as u32) % n;
+        if i == j {
+            continue;
+        }
+        match rng.below(4) {
+            0 => {
+                d.add(i, j, rng.uniform(0.1, 3.0));
+            }
+            1 => {
+                d.add(i, j, -g.weight(i.min(j), i.max(j)));
+            }
+            2 => {
+                d.add(i, j, rng.uniform(-1.0, 1.0));
+            }
+            _ => {
+                d.grow_nodes(1);
+            }
+        }
+    }
+    (g, d.coalesced())
+}
+
+#[test]
+fn prop_entropy_ordering() {
+    check(arb_graph, |g| {
+        let h = exact_vnge(g);
+        let hhat = finger_hhat(g);
+        let htil = finger_htilde(g);
+        if htil > hhat + 1e-9 {
+            return Err(format!("H̃={htil} > Ĥ={hhat}"));
+        }
+        if hhat > h + 1e-6 {
+            return Err(format!("Ĥ={hhat} > H={h}"));
+        }
+        if h > ((g.num_nodes().max(2) - 1) as f64).ln() + 1e-9 {
+            return Err(format!("H={h} exceeds ln(n-1)"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_q_in_unit_interval_and_matches_eigen() {
+    check(arb_graph, |g| {
+        if g.num_edges() == 0 {
+            return Ok(()); // density matrix undefined; Q := 0 by convention
+        }
+        let q = quadratic_q(g);
+        if !(-1e-12..=1.0 + 1e-12).contains(&q) {
+            return Err(format!("Q={q} outside [0,1]"));
+        }
+        let eigs = finger::linalg::SymMatrix::laplacian_normalized(g).eigenvalues();
+        let purity: f64 = eigs.iter().map(|l| l * l).sum();
+        if (q - (1.0 - purity)).abs() > 1e-8 {
+            return Err(format!("Q={q} vs 1-purity={}", 1.0 - purity));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_incremental_q_equals_scratch() {
+    run(&Config { cases: 80, ..Default::default() }, arb_graph_delta, |(g, d)| {
+        let mut state = FingerState::new(g.clone());
+        state.apply(d);
+        let composed = finger::graph::ops::compose(g, d);
+        let q_scratch = quadratic_q(&composed);
+        if (state.q() - q_scratch).abs() > 1e-8 {
+            return Err(format!("Q drift: {} vs {q_scratch}", state.q()));
+        }
+        if (state.htilde() - finger_htilde(&composed)).abs() > 1e-8 {
+            return Err(format!("H̃ drift: {} vs {}", state.htilde(), finger_htilde(&composed)));
+        }
+        state.graph().check_invariants()?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_jsdist_metric_axioms() {
+    check(
+        |rng: &mut Pcg64, size: usize| (arb_graph(rng, size), arb_graph(rng, size)),
+        |(a, b)| {
+            let dab = finger::distance::jsdist_fast(a, b);
+            let dba = finger::distance::jsdist_fast(b, a);
+            if (dab - dba).abs() > 1e-9 {
+                return Err(format!("asymmetric: {dab} vs {dba}"));
+            }
+            if dab < 0.0 {
+                return Err(format!("negative distance {dab}"));
+            }
+            // √ of an ~1e-16 rounding residue in the divergence is ~1e-8
+            let daa = finger::distance::jsdist_fast(a, a);
+            if daa > 1e-6 {
+                return Err(format!("d(a,a)={daa}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_veo_in_unit_interval() {
+    check(
+        |rng: &mut Pcg64, size: usize| (arb_graph(rng, size), arb_graph(rng, size)),
+        |(a, b)| {
+            let v = finger::distance::veo_score(a, b);
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("VEO={v}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_delta_diff_apply_roundtrip() {
+    check(
+        |rng: &mut Pcg64, size: usize| (arb_graph(rng, size), arb_graph(rng, size + 1)),
+        |(a, b)| {
+            let d = DeltaGraph::diff(a, b);
+            let rebuilt = finger::graph::ops::compose(a, &d);
+            if rebuilt.num_edges() != b.num_edges() {
+                return Err(format!(
+                    "edge count {} vs {}",
+                    rebuilt.num_edges(),
+                    b.num_edges()
+                ));
+            }
+            for (i, j, w) in b.edges() {
+                if (rebuilt.weight(i, j) - w).abs() > 1e-9 {
+                    return Err(format!("weight mismatch at ({i},{j})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_power_iteration_within_anderson_morley() {
+    check(arb_graph, |g| {
+        if g.total_weight() <= 0.0 {
+            return Ok(());
+        }
+        let lam = finger::linalg::power_iteration(
+            &finger::graph::Csr::from_graph(g),
+            &finger::linalg::PowerOpts::default(),
+        );
+        let bound = 2.0 * g.s_max() / g.total_weight();
+        if lam > bound + 1e-9 {
+            return Err(format!("λ={lam} > 2c·s_max={bound}"));
+        }
+        if lam > 1.0 + 1e-9 {
+            return Err(format!("λ={lam} > 1"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_graph_invariants_after_random_mutation() {
+    run(&Config { cases: 60, ..Default::default() }, arb_graph_delta, |(g, d)| {
+        let mut g = g.clone();
+        d.apply_to(&mut g);
+        g.check_invariants()?;
+        let (s2, w2) = g.q_moments();
+        if s2 < 0.0 || w2 < 0.0 {
+            return Err("negative moments".into());
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,99 @@
+//! XLA runtime integration: load the AOT artifacts, execute the L2 graphs
+//! via PJRT and cross-check numerics against the native Rust path.
+//!
+//! These tests require `make artifacts`; they SKIP (pass trivially with a
+//! note) when artifacts/ is absent so `cargo test` works pre-build.
+
+use finger::entropy::{finger_hhat, quadratic_q};
+use finger::runtime::{Runtime, XlaEntropy};
+use finger::util::Pcg64;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Runtime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP runtime tests (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_all_entry_points() {
+    let Some(rt) = runtime() else { return };
+    for name in ["q_stats", "hhat_dense", "jsdist_dense"] {
+        let sizes = rt.manifest().sizes(name);
+        assert!(!sizes.is_empty(), "no artifacts for {name}");
+        assert!(sizes.contains(&64), "{name} missing n=64");
+    }
+}
+
+#[test]
+fn q_offload_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let xe = XlaEntropy::new(&rt);
+    let mut rng = Pcg64::new(1);
+    for &n in &[20usize, 63, 64, 120] {
+        let g = finger::generators::erdos_renyi_avg_degree(n, 8.0, &mut rng);
+        let native = quadratic_q(&g);
+        let xla = xe.q(&g).expect("offload q");
+        assert!((native - xla).abs() < 1e-4, "n={n}: {native} vs {xla}");
+    }
+}
+
+#[test]
+fn hhat_offload_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let xe = XlaEntropy::new(&rt);
+    let mut rng = Pcg64::new(2);
+    for &n in &[30usize, 100, 250] {
+        let g = finger::generators::erdos_renyi_avg_degree(n, 10.0, &mut rng);
+        let native = finger_hhat(&g);
+        let xla = xe.hhat(&g).expect("offload hhat");
+        assert!(
+            (native - xla).abs() < 5e-3 * (1.0 + native),
+            "n={n}: {native} vs {xla}"
+        );
+    }
+}
+
+#[test]
+fn jsdist_offload_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let xe = XlaEntropy::new(&rt);
+    let mut rng = Pcg64::new(3);
+    let a = finger::generators::erdos_renyi_avg_degree(100, 10.0, &mut rng);
+    let mut b = a.clone();
+    let edges: Vec<_> = a.edges().take(40).collect();
+    for (i, j, _) in edges {
+        b.remove_edge(i, j);
+    }
+    let native = finger::distance::jsdist_fast(&a, &b);
+    let xla = xe.jsdist(&a, &b).expect("offload jsdist");
+    assert!((native - xla).abs() < 2e-2, "{native} vs {xla}");
+}
+
+#[test]
+fn executor_caches_compiles() {
+    let Some(rt) = runtime() else { return };
+    let xe = XlaEntropy::new(&rt);
+    let mut rng = Pcg64::new(4);
+    let g = finger::generators::erdos_renyi(50, 0.1, &mut rng);
+    let before = rt.cached_count();
+    let _ = xe.q(&g).unwrap();
+    let after_first = rt.cached_count();
+    let _ = xe.q(&g).unwrap();
+    let after_second = rt.cached_count();
+    assert_eq!(after_first, before + 1);
+    assert_eq!(after_second, after_first, "second call must hit the cache");
+}
+
+#[test]
+fn oversize_graph_rejected_cleanly() {
+    let Some(rt) = runtime() else { return };
+    let xe = XlaEntropy::new(&rt);
+    let biggest = *rt.manifest().sizes("q_stats").last().unwrap();
+    let g = finger::graph::Graph::new(biggest + 1);
+    assert!(xe.q(&g).is_err());
+}

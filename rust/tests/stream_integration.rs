@@ -1,0 +1,151 @@
+//! Streaming pipeline integration: realistic workloads, backpressure,
+//! checkpoint/restore mid-stream, and failure injection (malformed events
+//! are dropped at parse, self-loops ignored, empty windows are fine).
+
+use finger::datasets::{wiki_stream, WikiConfig};
+use finger::stream::checkpoint;
+use finger::stream::event::{events_from_deltas, StreamEvent};
+use finger::stream::{Pipeline, PipelineConfig};
+use finger::entropy::FingerState;
+use finger::util::Pcg64;
+
+#[test]
+fn wiki_workload_end_to_end() {
+    let cfg = WikiConfig {
+        months: 18,
+        initial_nodes: 150,
+        growth_per_month: 40,
+        burst_months: 2,
+        burst_factor: 10.0,
+        ..Default::default()
+    };
+    let stream = wiki_stream(&cfg);
+    let events = events_from_deltas(&stream.deltas);
+    let total = events.len();
+    let res = Pipeline::new(stream.initial.clone(), PipelineConfig::default()).run(events);
+    assert_eq!(res.records.len(), 17);
+    assert_eq!(res.total_events, total);
+    // node growth visible in the records
+    assert!(res.records.last().unwrap().nodes > stream.initial.num_nodes());
+    // bursts produce the largest JS scores
+    let mut scored: Vec<(usize, f64)> =
+        res.records.iter().map(|r| (r.window + 1, r.jsdist)).collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let top_months: Vec<usize> = scored.iter().take(4).map(|(m, _)| *m).collect();
+    let hits = stream.burst_months.iter().filter(|m| top_months.contains(m)).count();
+    assert!(hits >= 1, "bursts {:?} not among top windows {top_months:?}", stream.burst_months);
+}
+
+#[test]
+fn pipeline_result_independent_of_channel_capacity() {
+    let cfg = WikiConfig { months: 8, initial_nodes: 80, growth_per_month: 20, ..Default::default() };
+    let stream = wiki_stream(&cfg);
+    let mut baseline: Option<Vec<f64>> = None;
+    for cap in [1usize, 4, 256] {
+        let events = events_from_deltas(&stream.deltas);
+        let res = Pipeline::new(
+            stream.initial.clone(),
+            PipelineConfig { channel_capacity: cap, ..Default::default() },
+        )
+        .run(events);
+        let scores: Vec<f64> = res.records.iter().map(|r| r.jsdist).collect();
+        match &baseline {
+            None => baseline = Some(scores),
+            Some(b) => {
+                assert_eq!(b.len(), scores.len());
+                for (x, y) in b.iter().zip(&scores) {
+                    assert!((x - y).abs() < 1e-12, "capacity {cap} changed scores");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn checkpoint_mid_stream_resume_equivalence() {
+    let mut rng = Pcg64::new(11);
+    let g = finger::generators::erdos_renyi(60, 0.1, &mut rng);
+    let mut deltas = Vec::new();
+    for _ in 0..12 {
+        let mut d = finger::graph::DeltaGraph::new();
+        for _ in 0..6 {
+            let i = rng.below(60) as u32;
+            let j = (i + 1 + rng.below(59) as u32) % 60;
+            if i != j {
+                d.add(i, j, rng.uniform(-0.5, 1.0));
+            }
+        }
+        deltas.push(d.coalesced());
+    }
+    // uninterrupted
+    let mut full = FingerState::new(g.clone());
+    for d in &deltas {
+        full.apply(d);
+    }
+    // interrupted at step 6 with checkpoint
+    let mut part = FingerState::new(g);
+    for d in &deltas[..6] {
+        part.apply(d);
+    }
+    let path = std::env::temp_dir().join("finger_stream_it.ckpt");
+    checkpoint::save(&part, &path).unwrap();
+    let mut resumed = checkpoint::load(&path).unwrap();
+    for d in &deltas[6..] {
+        resumed.apply(d);
+    }
+    assert!((full.htilde() - resumed.htilde()).abs() < 1e-10);
+    assert!((full.q() - resumed.q()).abs() < 1e-10);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn malformed_event_lines_are_rejected_not_crashing() {
+    for bad in ["e 1", "e a b c", "n", "q 1 2 3", "e 1 1 nanx"] {
+        assert!(StreamEvent::parse(bad).is_none(), "{bad:?} should not parse");
+    }
+}
+
+#[test]
+fn burst_flagged_online_with_default_sigma() {
+    // deterministic burst detection through the full pipeline
+    let g = finger::generators::erdos_renyi(200, 0.05, &mut Pcg64::new(21));
+    let mut deltas = Vec::new();
+    let mut rng = Pcg64::new(22);
+    for t in 0..40 {
+        let mut d = finger::graph::DeltaGraph::new();
+        let k = if t == 30 { 600 } else { 4 };
+        for _ in 0..k {
+            let i = rng.below(200) as u32;
+            let j = (i + 1 + rng.below(199) as u32) % 200;
+            if i != j {
+                d.add(i, j, 1.0);
+            }
+        }
+        deltas.push(d.coalesced());
+    }
+    let res = Pipeline::new(g, PipelineConfig::default()).run(events_from_deltas(&deltas));
+    assert!(res.anomalies.contains(&30), "{:?}", res.anomalies);
+    // steady-state windows mostly unflagged
+    assert!(res.anomalies.len() <= 5, "{:?}", res.anomalies);
+}
+
+#[test]
+fn throughput_is_reported_positive() {
+    let g = finger::generators::erdos_renyi(100, 0.1, &mut Pcg64::new(31));
+    let events: Vec<StreamEvent> = (0..500)
+        .flat_map(|k: u32| {
+            let mut v = vec![StreamEvent::EdgeDelta {
+                i: k % 100,
+                j: (k * 7 + 1) % 100,
+                dw: 0.5,
+            }];
+            if k % 25 == 24 {
+                v.push(StreamEvent::Tick);
+            }
+            v
+        })
+        .collect();
+    let res = Pipeline::new(g, PipelineConfig::default()).run(events);
+    assert!(res.throughput > 1000.0, "throughput={}", res.throughput);
+    assert!(res.p99_latency >= res.p50_latency);
+}
