@@ -3,16 +3,28 @@
 //! `cargo bench --bench perf_hotpath [-- --full | -- --quick]`
 //!
 //! L3 native: incremental update throughput (events/s), power iteration,
-//! exact eigensolver, CSR mat-vec, streaming pipeline end-to-end.
-//! Runtime: XLA offload latency (compile-cached execute) and the
-//! native-vs-offload crossover ablation — skipped if artifacts are missing.
+//! exact eigensolver, CSR mat-vec, streaming pipeline end-to-end, and the
+//! sharded scoring service. Runtime: XLA offload latency (compile-cached
+//! execute) and the native-vs-offload crossover ablation — skipped if
+//! artifacts are missing.
+//!
+//! Every case is also written to `BENCH_service.json` (override the path
+//! with `FINGER_BENCH_JSON`) so the perf trajectory is machine-readable
+//! across PRs.
 
-use finger::bench::{bench_mode, BenchMode, Bencher};
+use finger::bench::{bench_mode, write_json_report, BenchMode, BenchRecord, BenchResult, Bencher};
 use finger::entropy::FingerState;
 use finger::graph::{Csr, DeltaGraph};
 use finger::linalg::{power_iteration, PowerOpts, SymMatrix};
+use finger::service::{workload, ServiceConfig, TenantWorkloadConfig};
 use finger::stream::{event, Pipeline, PipelineConfig};
 use finger::util::Pcg64;
+
+fn show(records: &mut Vec<BenchRecord>, r: BenchResult) -> BenchResult {
+    println!("{}", r.report());
+    records.push(BenchRecord::from(&r));
+    r
+}
 
 fn main() {
     let mode = bench_mode();
@@ -26,6 +38,7 @@ fn main() {
         BenchMode::Full => 200_000,
     };
     println!("=== §Perf hot paths (n={n}, {mode:?}) ===\n");
+    let mut records: Vec<BenchRecord> = Vec::new();
 
     let mut rng = Pcg64::new(0xBE9C);
     let g = finger::generators::barabasi_albert(n, 5, &mut rng);
@@ -33,12 +46,12 @@ fn main() {
     println!("workload: BA n={} m={}", g.num_nodes(), g.num_edges());
 
     // -- L3: FINGER from-scratch --
-    println!("{}", bencher.run("finger_hhat (from scratch, O(n+m))", || {
+    show(&mut records, bencher.run("finger_hhat (from scratch, O(n+m))", || {
         finger::entropy::finger_hhat(&g)
-    }).report());
-    println!("{}", bencher.run("finger_htilde (from scratch, O(n+m))", || {
+    }));
+    show(&mut records, bencher.run("finger_htilde (from scratch, O(n+m))", || {
         finger::entropy::finger_htilde(&g)
-    }).report());
+    }));
 
     // -- L3: incremental update throughput --
     let mut state = FingerState::new(g.clone());
@@ -56,34 +69,31 @@ fn main() {
         deltas.push(d.coalesced());
     }
     let mut k = 0usize;
-    let r = bencher.run("FingerState::apply (10-edge ΔG)", || {
+    let r = show(&mut records, bencher.run("FingerState::apply (10-edge ΔG)", || {
         state.apply(&deltas[k % deltas.len()]);
         k += 1;
-    });
-    println!("{}", r.report());
-    println!(
-        "  → incremental throughput ≈ {:.2e} edge-events/s",
-        10.0 / r.mean_secs
-    );
+    }));
+    let inc_tput = 10.0 / r.mean_secs;
+    println!("  → incremental throughput ≈ {inc_tput:.2e} edge-events/s");
+    records.push(BenchRecord::metric("incremental_throughput", inc_tput, "edge_events_per_sec"));
     let mut state2 = FingerState::new(g.clone());
     let mut k2 = 0usize;
-    let r2 = bencher.run("jsdist_incremental (Algorithm 2, 10-edge ΔG)", || {
+    show(&mut records, bencher.run("jsdist_incremental (Algorithm 2, 10-edge ΔG)", || {
         let d = &deltas[k2 % deltas.len()];
         k2 += 1;
         finger::distance::jsdist_incremental(&mut state2, d)
-    });
-    println!("{}", r2.report());
+    }));
 
     // -- L3: spectral substrates --
     let x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
     let mut y = vec![0.0; n];
-    println!("{}", bencher.run("CSR matvec_laplacian", || {
+    show(&mut records, bencher.run("CSR matvec_laplacian", || {
         csr.matvec_laplacian(&x, &mut y);
         y[0]
-    }).report());
-    println!("{}", bencher.run("power_iteration λ_max", || {
+    }));
+    show(&mut records, bencher.run("power_iteration λ_max", || {
         power_iteration(&csr, &PowerOpts::default())
-    }).report());
+    }));
 
     let n_eig = match mode {
         BenchMode::Quick => 200,
@@ -91,10 +101,10 @@ fn main() {
         BenchMode::Full => 2000,
     };
     let ge = finger::generators::erdos_renyi_avg_degree(n_eig, 20.0, &mut rng);
-    println!("{}", bencher.run(
+    show(&mut records, bencher.run(
         &format!("exact eigensolver (tred+tql, n={n_eig}) [the O(n³) baseline]"),
         || SymMatrix::laplacian_normalized(&ge).eigenvalues().len(),
-    ).report());
+    ));
 
     // -- L3: pipeline end-to-end --
     let wiki = finger::datasets::wiki_stream(&finger::datasets::WikiConfig {
@@ -110,6 +120,33 @@ fn main() {
         "pipeline end-to-end: {} events in {:.3}s → {:.2e} events/s (p99 window latency {:.1}µs)",
         n_events, res.wall_secs, res.throughput, res.p99_latency * 1e6
     );
+    records.push(BenchRecord::metric("pipeline_throughput", res.throughput, "events_per_sec"));
+    records.push(BenchRecord::metric("pipeline_p99_latency", res.p99_latency, "secs"));
+
+    // -- L3: sharded scoring service (small fixed workload; the full shard
+    // sweep lives in benches/service_throughput.rs) --
+    let svc_sessions = match mode {
+        BenchMode::Quick => 64,
+        _ => 256,
+    };
+    let svc_workload = workload::tenant_streams(&TenantWorkloadConfig {
+        sessions: svc_sessions,
+        windows: 8,
+        events_per_window: 40,
+        nodes_per_session: 48,
+        ..Default::default()
+    });
+    let svc_cfg = ServiceConfig { shards: 4, ..Default::default() };
+    let report = workload::drive(&svc_cfg, &svc_workload, 4, true);
+    println!(
+        "service (4 shards, {svc_sessions} sessions): {} events in {:.3}s → {:.2e} events/s",
+        report.total_events, report.wall_secs, report.throughput
+    );
+    records.push(BenchRecord::metric(
+        "service_throughput_4shards",
+        report.throughput,
+        "events_per_sec",
+    ));
 
     // -- runtime: XLA offload (needs artifacts) --
     match finger::runtime::Runtime::load("artifacts") {
@@ -118,14 +155,18 @@ fn main() {
             for &gn in &[60usize, 120, 250] {
                 let sg = finger::generators::erdos_renyi_avg_degree(gn, 12.0, &mut rng);
                 let _ = xe.hhat(&sg); // warm the compile cache
-                let rx = bencher.run(&format!("XLA offload Ĥ (n={gn}, padded artifact)"), || {
-                    xe.hhat(&sg).unwrap()
-                });
-                println!("{}", rx.report());
-                let rn = bencher.run(&format!("native Ĥ (n={gn})"), || {
-                    finger::entropy::finger_hhat(&sg)
-                });
-                println!("{}", rn.report());
+                let rx = show(
+                    &mut records,
+                    bencher.run(&format!("XLA offload Ĥ (n={gn}, padded artifact)"), || {
+                        xe.hhat(&sg).unwrap()
+                    }),
+                );
+                let rn = show(
+                    &mut records,
+                    bencher.run(&format!("native Ĥ (n={gn})"), || {
+                        finger::entropy::finger_hhat(&sg)
+                    }),
+                );
                 println!(
                     "  → crossover: native is {:.1}× {} at n={gn}",
                     (rx.mean_secs / rn.mean_secs).max(rn.mean_secs / rx.mean_secs),
@@ -134,5 +175,12 @@ fn main() {
             }
         }
         Err(e) => println!("(XLA offload skipped: {e})"),
+    }
+
+    let json_path =
+        std::env::var("FINGER_BENCH_JSON").unwrap_or_else(|_| "BENCH_service.json".to_string());
+    match write_json_report(&json_path, "perf_hotpath", &records) {
+        Ok(()) => println!("\nwrote {} records to {json_path}", records.len()),
+        Err(e) => eprintln!("failed to write {json_path}: {e}"),
     }
 }

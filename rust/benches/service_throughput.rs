@@ -1,0 +1,75 @@
+//! §Service: aggregate scoring throughput vs shard count.
+//!
+//! `cargo bench --bench service_throughput [-- --quick | -- --full]`
+//!
+//! Drives the same prebuilt multi-tenant workload (≥256 concurrent sessions
+//! by default) through the sharded scoring service at increasing shard
+//! counts and reports aggregate events/sec plus the speedup over the
+//! 1-shard baseline. Scaling comes from shard workers scoring disjoint
+//! session sets in parallel; expect ≥2× from 1→4 shards on a ≥4-core
+//! machine. Results are written to `BENCH_service_throughput.json`.
+
+use finger::bench::{bench_mode, write_json_report, BenchMode, BenchRecord};
+use finger::service::{workload, ServiceConfig, TenantWorkloadConfig};
+
+fn main() {
+    let mode = bench_mode();
+    let (sessions, windows, events_per_window) = match mode {
+        BenchMode::Quick => (64, 8, 40),
+        BenchMode::Default => (256, 16, 60),
+        BenchMode::Full => (1024, 24, 80),
+    };
+    let wl_cfg = TenantWorkloadConfig {
+        sessions,
+        windows,
+        events_per_window,
+        nodes_per_session: 64,
+        ..Default::default()
+    };
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!(
+        "=== service throughput vs shards ({sessions} sessions × {windows} windows × \
+         {events_per_window} events, {cores} cores, {mode:?}) ===\n"
+    );
+    let workload_data = workload::tenant_streams(&wl_cfg);
+    let total = workload::workload_events(&workload_data);
+
+    let shard_counts: Vec<usize> =
+        [1usize, 2, 4, 8].into_iter().filter(|&s| s == 1 || s <= cores * 2).collect();
+    let mut records = Vec::new();
+    let mut baseline: Option<f64> = None;
+    println!(
+        "{:<8} {:>12} {:>12} {:>14} {:>10}",
+        "shards", "events", "wall(s)", "events/s", "speedup"
+    );
+    for &shards in &shard_counts {
+        let cfg = ServiceConfig { shards, ..Default::default() };
+        let report = workload::drive(&cfg, &workload_data, 4, true);
+        assert_eq!(report.total_events, total, "event loss at {shards} shards");
+        let speedup = report.throughput / *baseline.get_or_insert(report.throughput);
+        println!(
+            "{:<8} {:>12} {:>12.3} {:>14.0} {:>9.2}x",
+            shards, report.total_events, report.wall_secs, report.throughput, speedup
+        );
+        records.push(BenchRecord::metric(
+            format!("service_throughput_shards_{shards}"),
+            report.throughput,
+            "events_per_sec",
+        ));
+        records.push(BenchRecord::metric(
+            format!("service_speedup_shards_{shards}"),
+            speedup,
+            "ratio_vs_1_shard",
+        ));
+    }
+    if cores < 4 {
+        println!("\n(note: only {cores} cores available — shard scaling is capped by hardware)");
+    }
+
+    let json_path = std::env::var("FINGER_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_service_throughput.json".to_string());
+    match write_json_report(&json_path, "service_throughput", &records) {
+        Ok(()) => println!("\nwrote {} records to {json_path}", records.len()),
+        Err(e) => eprintln!("failed to write {json_path}: {e}"),
+    }
+}

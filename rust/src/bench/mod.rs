@@ -97,6 +97,96 @@ pub enum BenchMode {
     Full,
 }
 
+/// One entry of a machine-readable bench report (`BENCH_*.json`): either a
+/// timed case (from a [`BenchResult`]) or a free-standing metric such as an
+/// aggregate throughput.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    /// Metric value (seconds for timed cases, unit given by `unit`).
+    pub value: f64,
+    pub unit: String,
+    /// Optional p50/p99 for timed cases.
+    pub p50_secs: Option<f64>,
+    pub p99_secs: Option<f64>,
+}
+
+impl BenchRecord {
+    /// A free-standing metric (e.g. `events_per_sec`).
+    pub fn metric(name: impl Into<String>, value: f64, unit: impl Into<String>) -> Self {
+        Self { name: name.into(), value, unit: unit.into(), p50_secs: None, p99_secs: None }
+    }
+}
+
+impl From<&BenchResult> for BenchRecord {
+    fn from(r: &BenchResult) -> Self {
+        Self {
+            name: r.name.clone(),
+            value: r.mean_secs,
+            unit: "secs_mean".to_string(),
+            p50_secs: Some(r.p50_secs),
+            p99_secs: Some(r.p99_secs),
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Write records as a `BENCH_*.json` file (hand-rolled JSON — no serde in
+/// the offline registry) so the perf trajectory can be tracked across PRs.
+pub fn write_json_report(
+    path: impl AsRef<std::path::Path>,
+    bench: &str,
+    records: &[BenchRecord],
+) -> std::io::Result<()> {
+    use std::io::Write as _;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"{}\",", json_escape(bench))?;
+    writeln!(f, "  \"records\": [")?;
+    for (k, r) in records.iter().enumerate() {
+        let comma = if k + 1 < records.len() { "," } else { "" };
+        let mut extra = String::new();
+        if let Some(p50) = r.p50_secs {
+            extra.push_str(&format!(", \"p50_secs\": {}", json_num(p50)));
+        }
+        if let Some(p99) = r.p99_secs {
+            extra.push_str(&format!(", \"p99_secs\": {}", json_num(p99)));
+        }
+        writeln!(
+            f,
+            "    {{\"name\": \"{}\", \"value\": {}, \"unit\": \"{}\"{extra}}}{comma}",
+            json_escape(&r.name),
+            json_num(r.value),
+            json_escape(&r.unit),
+        )?;
+    }
+    writeln!(f, "  ]")?;
+    writeln!(f, "}}")?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,5 +210,21 @@ mod tests {
     fn report_contains_name() {
         let r = Bencher::quick().run("my-case", || 42);
         assert!(r.report().contains("my-case"));
+    }
+
+    #[test]
+    fn json_report_roundtrips_structure() {
+        let r = Bencher::quick().run("timed \"case\"", || 42);
+        let records =
+            vec![BenchRecord::from(&r), BenchRecord::metric("throughput", 1.5e6, "events_per_sec")];
+        let path = std::env::temp_dir().join("finger_bench_report_test.json");
+        write_json_report(&path, "unit-test", &records).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"bench\": \"unit-test\""));
+        assert!(text.contains("timed \\\"case\\\""), "{text}");
+        assert!(text.contains("events_per_sec"));
+        assert!(text.contains("p99_secs"));
+        assert_eq!(text.matches("{\"name\"").count(), 2);
+        std::fs::remove_file(path).ok();
     }
 }

@@ -55,6 +55,26 @@ impl Args {
     pub fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
         self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+
+    /// Parse a comma-separated option (`--shards 1,2,4`) into a list,
+    /// falling back to `default` when the option is missing or any element
+    /// fails to parse (consistent with `get_parsed`'s forgiving contract).
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.get(name) {
+            Some(raw) => {
+                let parsed: Option<Vec<T>> =
+                    raw.split(',').map(|t| t.trim().parse().ok()).collect();
+                match parsed {
+                    Some(v) if !v.is_empty() => v,
+                    _ => default.to_vec(),
+                }
+            }
+            None => default.to_vec(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -101,5 +121,14 @@ mod tests {
     fn empty() {
         let a = Args::parse(&[]);
         assert!(a.subcommand.is_none());
+    }
+
+    #[test]
+    fn comma_separated_lists() {
+        let a = Args::parse(&toks("serve-bench --shards 1,2,4"));
+        assert_eq!(a.get_list("shards", &[8usize]), vec![1, 2, 4]);
+        assert_eq!(a.get_list("missing", &[8usize]), vec![8]);
+        let b = Args::parse(&toks("serve-bench --shards 1,x"));
+        assert_eq!(b.get_list("shards", &[8usize]), vec![8], "bad element falls back whole");
     }
 }

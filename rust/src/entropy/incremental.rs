@@ -52,15 +52,12 @@ impl FingerState {
         let q = crate::entropy::quadratic_q(&graph);
         let s_total = graph.total_weight();
         let s_max = graph.s_max();
-        let mut strengths = BTreeMap::new();
+        let mut state =
+            Self { graph, q, s_total, s_max, policy, strengths: BTreeMap::new(), steps: 0 };
         if policy == SmaxPolicy::Exact {
-            for &s in graph.strengths() {
-                if s > 0.0 {
-                    *strengths.entry(s.to_bits()).or_insert(0) += 1;
-                }
-            }
+            state.rebuild_strength_multiset();
         }
-        Self { graph, q, s_total, s_max, policy, strengths, steps: 0 }
+        state
     }
 
     /// The current graph (read-only).
@@ -92,6 +89,17 @@ impl FingerState {
         self.steps
     }
 
+    pub fn policy(&self) -> SmaxPolicy {
+        self.policy
+    }
+
+    /// Total multiplicity stored in the strength multiset (Exact policy
+    /// only; always 0 under PaperFaithful). When the state is consistent this
+    /// equals the number of positive-strength nodes in the graph.
+    pub fn strength_multiset_len(&self) -> usize {
+        self.strengths.values().map(|&c| c as usize).sum()
+    }
+
     /// Current H̃(G) (Eq. 2) from the maintained parts. O(1).
     pub fn htilde(&self) -> f64 {
         crate::entropy::htilde_from_parts(self.q, self.c(), self.s_max)
@@ -107,14 +115,38 @@ impl FingerState {
 
     fn preview_impl(&self, delta: &DeltaGraph, want_smax: bool) -> PreviewedState {
         let delta_s = delta.delta_total_weight();
+        // Coalesce duplicate (i,j) entries before anything clamps: the clamp
+        // below must see the *net* per-edge delta, matching what
+        // `coalesced().apply_to(..)` / a single `Graph::add_weight` call
+        // does. Clamping each duplicate independently against the same w_old
+        // diverges whenever a delta over-deletes and then re-adds an edge.
+        // Deltas already in coalesced normal form (the pipeline/service hot
+        // path) are used in place — O(Δ) check, no copy; anything else gets
+        // an O(Δ log Δ) sort + merge.
+        let coalesced_entries;
+        let edges: &[(u32, u32, f64)] = if delta.is_sorted_unique() {
+            delta.edge_deltas()
+        } else {
+            let mut entries: Vec<(u32, u32, f64)> = delta.edge_deltas().to_vec();
+            entries.sort_unstable_by_key(|&(i, j, _)| (i, j));
+            let mut merged: Vec<(u32, u32, f64)> = Vec::with_capacity(entries.len());
+            for (i, j, dw) in entries {
+                match merged.last_mut() {
+                    Some((li, lj, acc)) if *li == i && *lj == j => *acc += dw,
+                    _ => merged.push((i, j, dw)),
+                }
+            }
+            coalesced_entries = merged;
+            &coalesced_entries
+        };
         // ΔQ = 2Σ sᵢΔsᵢ + Σ Δsᵢ² + 4Σ wᵢⱼΔwᵢⱼ + 2Σ Δwᵢⱼ²  (Theorem 2),
         // where sᵢ, wᵢⱼ are values in G and Δsᵢ the *net* strength change.
         // Per-node net strength changes, accumulated by push + sort + merge:
-        // O(Δ log Δ), no hashing, cache-friendly for both the 10-edge
-        // streaming windows and the thousands-edge monthly batches.
-        let mut pushes: Vec<(u32, f64)> = Vec::with_capacity(delta.edge_deltas().len() * 2);
+        // O(Δ log Δ), cache-friendly for both the 10-edge streaming windows
+        // and the thousands-edge monthly batches.
+        let mut pushes: Vec<(u32, f64)> = Vec::with_capacity(edges.len() * 2);
         let mut edge_terms = 0.0;
-        for &(i, j, dw) in delta.edge_deltas() {
+        for &(i, j, dw) in edges {
             let w_old = if (i as usize) < self.graph.num_nodes()
                 && (j as usize) < self.graph.num_nodes()
             {
@@ -244,8 +276,22 @@ impl FingerState {
     /// Commit ΔG reusing an already-computed `preview(delta)` result
     /// (Algorithm 2 previews ΔG for its score anyway — one preview saved).
     pub fn apply_previewed(&mut self, delta: &DeltaGraph, preview: PreviewedState) {
+        // The preview coalesces duplicate (i,j) entries internally; mutate
+        // the graph through the same coalesced view. Sequential re-clamping
+        // of an over-deleting duplicate would disagree with the previewed Q.
+        // The O(Δ) normal-form check suffices: coalescing a delta that is
+        // merely unsorted (but duplicate-free) is semantically a no-op, so
+        // over-triggering on such deltas costs a copy, never correctness.
+        let coalesced;
+        let delta = if delta.is_sorted_unique() {
+            delta
+        } else {
+            coalesced = delta.coalesced();
+            &coalesced
+        };
         // capture strengths of touched nodes before mutation (Exact policy)
         let mut touched: Vec<u32> = Vec::new();
+        let mut multiset_miss = false;
         if self.policy == SmaxPolicy::Exact {
             let mut seen = std::collections::HashSet::new();
             for &(i, j, _) in delta.edge_deltas() {
@@ -258,7 +304,7 @@ impl FingerState {
             }
             for &i in &touched {
                 if (i as usize) < self.graph.num_nodes() {
-                    self.remove_strength(self.graph.strength(i));
+                    multiset_miss |= !self.remove_strength(self.graph.strength(i));
                 }
             }
         }
@@ -273,6 +319,13 @@ impl FingerState {
                 for &i in &touched {
                     self.insert_strength(self.graph.strength(i));
                 }
+                if multiset_miss {
+                    // A removal found no usable key: the multiset has drifted
+                    // from the graph's strength cache, and a stale key would
+                    // inflate s_max forever. Rebuild wholesale — O(n), but
+                    // only on detected drift.
+                    self.rebuild_strength_multiset();
+                }
                 self.s_max = self
                     .strengths
                     .keys()
@@ -284,22 +337,65 @@ impl FingerState {
         self.steps += 1;
     }
 
-    fn remove_strength(&mut self, s: f64) {
+    /// Remove one occurrence of strength `s` from the multiset. Returns
+    /// false when `s` is positive but neither its exact bit-key nor a
+    /// drift-close neighbor is stored — the caller must then resync the
+    /// multiset, since a silent no-op would leave a stale key behind.
+    fn remove_strength(&mut self, s: f64) -> bool {
         if s <= 0.0 {
-            return;
+            return true;
         }
         let key = s.to_bits();
+        if self.decrement_strength_key(key) {
+            return true;
+        }
+        // Exact-key miss (accumulated float drift between the graph's
+        // strength cache and the multiset): fall back to the nearest stored
+        // key, but only if it is close enough to plausibly be this strength.
+        let below = self.strengths.range(..key).next_back().map(|(&k, _)| k);
+        let above = self.strengths.range(key..).next().map(|(&k, _)| k);
+        let nearest = match (below, above) {
+            (Some(b), Some(a)) => {
+                if (f64::from_bits(a) - s).abs() < (s - f64::from_bits(b)).abs() {
+                    Some(a)
+                } else {
+                    Some(b)
+                }
+            }
+            (b, a) => b.or(a),
+        };
+        match nearest {
+            Some(k) if (f64::from_bits(k) - s).abs() <= 1e-9 * s.max(1.0) => {
+                self.decrement_strength_key(k)
+            }
+            _ => false,
+        }
+    }
+
+    fn decrement_strength_key(&mut self, key: u64) -> bool {
         if let Some(cnt) = self.strengths.get_mut(&key) {
             *cnt -= 1;
             if *cnt == 0 {
                 self.strengths.remove(&key);
             }
+            true
+        } else {
+            false
         }
     }
 
     fn insert_strength(&mut self, s: f64) {
         if s > 0.0 {
             *self.strengths.entry(s.to_bits()).or_insert(0) += 1;
+        }
+    }
+
+    fn rebuild_strength_multiset(&mut self) {
+        self.strengths.clear();
+        for &s in self.graph.strengths() {
+            if s > 0.0 {
+                *self.strengths.entry(s.to_bits()).or_insert(0) += 1;
+            }
         }
     }
 
@@ -514,5 +610,158 @@ mod tests {
         d.add(0, 1, 1.0);
         state.apply(&d);
         assert_eq!(state.steps(), 1);
+    }
+
+    #[test]
+    fn uncoalesced_overdeleting_duplicates_match_coalesced_semantics() {
+        // Regression: per-entry clamping against the same w_old used to
+        // diverge from DeltaGraph::apply_to/Graph::add_weight semantics when
+        // a delta contained duplicate (i,j) entries. Net delta here is -2.0
+        // on an edge of weight 1.0 (clamped to removal); entry-wise clamping
+        // would have computed -1.0 then +3.0 instead.
+        for policy in [SmaxPolicy::Exact, SmaxPolicy::PaperFaithful] {
+            let g = Graph::from_edges(4, &[(0, 1, 1.0), (2, 3, 2.0)]);
+            let mut state = FingerState::with_policy(g.clone(), policy);
+            let mut d = DeltaGraph::new();
+            d.add(0, 1, -5.0).add(0, 1, 3.0);
+            state.apply(&d);
+            let mut expect = g.clone();
+            d.coalesced().apply_to(&mut expect);
+            assert_eq!(state.graph().num_edges(), expect.num_edges(), "{policy:?}");
+            assert!((state.graph().weight(0, 1) - expect.weight(0, 1)).abs() < 1e-15);
+            let q_scratch = quadratic_q(state.graph());
+            assert!(
+                (state.q() - q_scratch).abs() < 1e-12,
+                "{policy:?}: {} vs {q_scratch}",
+                state.q()
+            );
+            assert!((state.s_total() - state.graph().total_weight()).abs() < 1e-12);
+            if policy == SmaxPolicy::Exact {
+                assert!((state.htilde() - finger_htilde(state.graph())).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn uncoalesced_delta_equals_precoalesced_apply_and_preview() {
+        let mut rng = Pcg64::new(8);
+        let g = generators::erdos_renyi(30, 0.15, &mut rng);
+        let mut raw = DeltaGraph::new();
+        for _ in 0..40 {
+            let i = rng.below(30) as u32;
+            let mut j = rng.below(30) as u32;
+            if i == j {
+                j = (j + 1) % 30;
+            }
+            raw.add(i, j, rng.uniform(-1.5, 1.0));
+        }
+        // guarantee an over-delete/re-add duplicate pair is present
+        raw.add(0, 1, -10.0).add(0, 1, 0.7);
+        assert!(raw.has_duplicate_edges());
+
+        let base = FingerState::new(g.clone());
+        let p_raw = base.preview(&raw);
+        let p_coal = base.preview(&raw.coalesced());
+        assert!((p_raw.q - p_coal.q).abs() < 1e-12);
+        assert!((p_raw.s_total - p_coal.s_total).abs() < 1e-12);
+        assert!((p_raw.s_max - p_coal.s_max).abs() < 1e-12);
+
+        let mut a = FingerState::new(g.clone());
+        a.apply(&raw);
+        let mut b = FingerState::new(g);
+        b.apply(&raw.coalesced());
+        assert_eq!(a.graph().num_edges(), b.graph().num_edges());
+        assert!((a.q() - b.q()).abs() < 1e-12);
+        assert!((a.htilde() - b.htilde()).abs() < 1e-12);
+        let q_scratch = quadratic_q(a.graph());
+        assert!((a.q() - q_scratch).abs() < 1e-10, "{} vs {q_scratch}", a.q());
+    }
+
+    #[test]
+    fn adversarial_add_remove_stream_keeps_multiset_consistent() {
+        // Long adversarial stream of exact deletions, over-deletions and
+        // re-adds, applied uncoalesced: under the Exact policy the strength
+        // multiset must keep mirroring the graph (size == number of
+        // positive-strength nodes, s_max exact) at every step.
+        for policy in [SmaxPolicy::Exact, SmaxPolicy::PaperFaithful] {
+            let mut rng = Pcg64::new(0xADD);
+            let g = generators::erdos_renyi(12, 0.3, &mut rng);
+            let mut state = FingerState::with_policy(g, policy);
+            for step in 0..2000 {
+                let n = state.graph().num_nodes();
+                let mut d = DeltaGraph::new();
+                for _ in 0..3 {
+                    let i = rng.below(n) as u32;
+                    let mut j = rng.below(n) as u32;
+                    if i == j {
+                        j = (j + 1) % n as u32;
+                    }
+                    let w_cur = state.graph().weight(i.min(j), i.max(j));
+                    match rng.below(4) {
+                        0 => d.add(i, j, rng.uniform(0.1, 2.0)),
+                        1 => d.add(i, j, -w_cur),                 // exact delete
+                        2 => d.add(i, j, -rng.uniform(0.5, 3.0)), // over-delete
+                        _ => d.add(i, j, rng.uniform(-0.5, 0.5)),
+                    };
+                }
+                state.apply(&d);
+                if policy == SmaxPolicy::Exact {
+                    let positive =
+                        state.graph().strengths().iter().filter(|&&s| s > 0.0).count();
+                    assert_eq!(state.strength_multiset_len(), positive, "step {step}");
+                    assert!(
+                        (state.s_max() - state.graph().s_max()).abs() < 1e-12,
+                        "step {step}: {} vs {}",
+                        state.s_max(),
+                        state.graph().s_max()
+                    );
+                } else {
+                    // the paper's monotone rule upper-bounds the true s_max
+                    assert!(state.s_max() >= state.graph().s_max() - 1e-12, "step {step}");
+                }
+            }
+            let q_scratch = quadratic_q(state.graph());
+            assert!(
+                (state.q() - q_scratch).abs() < 1e-6,
+                "{policy:?}: {} vs {q_scratch}",
+                state.q()
+            );
+        }
+    }
+
+    #[test]
+    fn multiset_drift_uses_nearest_key_fallback() {
+        // Simulate accumulated float drift: nudge a stored key by one ulp so
+        // the recomputed strength's bit-key misses. The removal must fall
+        // back to the neighboring key instead of silently no-opping.
+        let g = Graph::from_edges(4, &[(0, 1, 1.5), (2, 3, 0.5)]);
+        let mut state = FingerState::new(g);
+        let bits = 1.5f64.to_bits();
+        let cnt = state.strengths.remove(&bits).unwrap();
+        state.strengths.insert(bits + 1, cnt); // 1.5 + 1 ulp
+        let mut d = DeltaGraph::new();
+        d.add(0, 1, -1.5); // delete the heavy edge: removes strength 1.5 twice
+        state.apply(&d);
+        assert_eq!(state.strength_multiset_len(), 2); // nodes 2 and 3
+        assert_eq!(state.s_max(), 0.5);
+        assert!((state.htilde() - finger_htilde(state.graph())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multiset_hard_miss_triggers_rebuild() {
+        // A far-off stale key cannot be matched by the nearest-key fallback;
+        // the miss must trigger a full multiset rebuild so the stale key
+        // stops inflating s_max.
+        let g = Graph::from_edges(4, &[(0, 1, 2.0), (2, 3, 1.0)]);
+        let mut state = FingerState::new(g);
+        state.strengths.remove(&2.0f64.to_bits());
+        state.strengths.insert(100.0f64.to_bits(), 2); // stale keys
+        assert_eq!(state.s_max(), 2.0); // cached s_max still sane pre-apply
+        let mut d = DeltaGraph::new();
+        d.add(0, 1, 1.0);
+        state.apply(&d);
+        let positive = state.graph().strengths().iter().filter(|&&s| s > 0.0).count();
+        assert_eq!(state.strength_multiset_len(), positive);
+        assert_eq!(state.s_max(), state.graph().s_max()); // 3.0, stale 100 purged
     }
 }

@@ -5,7 +5,7 @@
 pub mod baselines;
 pub mod incremental;
 
-pub use incremental::FingerState;
+pub use incremental::{FingerState, SmaxPolicy};
 
 use crate::graph::{Csr, Graph};
 use crate::linalg::{power_iteration, PowerOpts, SymMatrix};

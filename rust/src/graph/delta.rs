@@ -89,6 +89,26 @@ impl DeltaGraph {
         Self { edges, new_nodes: self.new_nodes }
     }
 
+    /// Entries strictly ascending by (i, j) — the normal form `coalesced()`
+    /// emits, which implies no duplicates. O(Δ), allocation-free; the
+    /// incremental hot path uses it to skip re-coalescing entirely.
+    pub fn is_sorted_unique(&self) -> bool {
+        self.edges.windows(2).all(|w| (w[0].0, w[0].1) < (w[1].0, w[1].1))
+    }
+
+    /// Whether some (i,j) pair appears more than once. Such deltas must be
+    /// coalesced before clamping-sensitive incremental math (`FingerState`
+    /// routes them through a coalesced view so that over-deleting duplicates
+    /// see the *net* delta, exactly like `coalesced().apply_to(..)`).
+    pub fn has_duplicate_edges(&self) -> bool {
+        if self.edges.len() < 2 || self.is_sorted_unique() {
+            return false;
+        }
+        let mut pairs: Vec<(u32, u32)> = self.edges.iter().map(|&(i, j, _)| (i, j)).collect();
+        pairs.sort_unstable();
+        pairs.windows(2).any(|w| w[0] == w[1])
+    }
+
     /// The largest node id referenced (for sizing), if any.
     pub fn max_node(&self) -> Option<u32> {
         self.edges.iter().map(|&(i, j, _)| i.max(j)).max()
@@ -203,6 +223,24 @@ mod tests {
         let b = Graph::from_edges(3, &[(0, 1, 1.0), (1, 2, 4.0)]);
         let d = DeltaGraph::diff(&a, &b);
         assert!((d.delta_total_weight() - (b.total_weight() - a.total_weight())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_detection() {
+        let mut d = DeltaGraph::new();
+        d.add(0, 1, 1.0).add(2, 3, 1.0);
+        assert!(d.is_sorted_unique());
+        assert!(!d.has_duplicate_edges());
+        d.add(1, 0, -0.5); // same pair, order-normalized
+        assert!(!d.is_sorted_unique());
+        assert!(d.has_duplicate_edges());
+        assert!(d.coalesced().is_sorted_unique());
+        assert!(!DeltaGraph::new().has_duplicate_edges());
+        // unsorted but duplicate-free: not normal form, yet no duplicates
+        let mut u = DeltaGraph::new();
+        u.add(2, 3, 1.0).add(0, 1, 1.0);
+        assert!(!u.is_sorted_unique());
+        assert!(!u.has_duplicate_edges());
     }
 
     #[test]

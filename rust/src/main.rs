@@ -9,15 +9,18 @@
 //!   bifurcation  Fig 4 experiment on the Hi-C-like sequence
 //!   dos          Table 3 / S2 experiment (DoS detection rates)
 //!   sweep        Fig 1 / Fig 2 approximation sweeps
+//!   serve-bench  drive a synthetic multi-tenant workload through the
+//!                sharded scoring service across shard counts
 //!   offload      cross-check the XLA artifact path against native Rust
 
 use anyhow::{bail, Context, Result};
-use finger::cli::Args;
+use finger::cli::{Args, Config};
 use finger::coordinator::experiments::{self, GraphModel};
 use finger::coordinator::report;
 use finger::datasets::{HicConfig, OregonConfig, WikiConfig};
 use finger::entropy::{exact_vnge, finger_hhat, finger_htilde};
 use finger::graph::{io as gio, Graph};
+use finger::service::{workload, ServiceConfig, TenantWorkloadConfig};
 use finger::stream::{event, Pipeline, PipelineConfig};
 use finger::util::Pcg64;
 
@@ -38,6 +41,7 @@ fn run(args: &Args) -> Result<()> {
         Some("bifurcation") => cmd_bifurcation(args),
         Some("dos") => cmd_dos(args),
         Some("sweep") => cmd_sweep(args),
+        Some("serve-bench") => cmd_serve_bench(args),
         Some("offload") => cmd_offload(args),
         Some(other) => bail!("unknown subcommand `{other}` (try --help)"),
         None => {
@@ -61,6 +65,9 @@ fn print_help() {
            bifurcation [--dim N]\n\
            dos         [--nodes N] [--trials T] [--extended]\n\
            sweep       --kind fig1-er|fig1-ba|fig1-ws|fig2 [--n N] [--trials T]\n\
+           serve-bench [--sessions N] [--shards 1,2,4] [--windows W] [--events E]\n\
+                       [--nodes N] [--capacity C] [--producers P] [--seed S]\n\
+                       [--config run.toml] [--per-event]\n\
            offload     [--artifacts DIR]"
     );
 }
@@ -225,6 +232,56 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             }
         }
         k => bail!("unknown sweep kind {k}"),
+    }
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let base = match args.get("config") {
+        Some(path) => ServiceConfig::from_config(&Config::load(path)?),
+        None => ServiceConfig::default(),
+    };
+    let wl_cfg = TenantWorkloadConfig {
+        sessions: args.get_parsed("sessions", 256usize).max(1),
+        windows: args.get_parsed("windows", 16usize).max(1),
+        events_per_window: args.get_parsed("events", 60usize).max(1),
+        nodes_per_session: args.get_parsed("nodes", 64usize).max(2),
+        seed: args.get_parsed("seed", 0x5E55u64),
+    };
+    let shard_counts = args.get_list("shards", &[1usize, 2, 4]);
+    let capacity = args.get_parsed("capacity", base.channel_capacity);
+    let producers = args.get_parsed("producers", 4usize).max(1);
+    let batched = !args.flag("per-event");
+    println!(
+        "serve-bench: {} sessions × {} windows × {} events (n={} per session), \
+         {} producers, {} ingest",
+        wl_cfg.sessions,
+        wl_cfg.windows,
+        wl_cfg.events_per_window,
+        wl_cfg.nodes_per_session,
+        producers,
+        if batched { "batched" } else { "per-event" },
+    );
+    let workload_data = workload::tenant_streams(&wl_cfg);
+    let total = workload::workload_events(&workload_data);
+    println!(
+        "{:<8} {:>12} {:>12} {:>14} {:>10}",
+        "shards", "events", "wall", "events/s", "speedup"
+    );
+    let mut baseline: Option<f64> = None;
+    for &shards in &shard_counts {
+        let cfg = ServiceConfig { shards, channel_capacity: capacity, ..base.clone() };
+        let report = workload::drive(&cfg, &workload_data, producers, batched);
+        assert_eq!(report.total_events, total, "event loss in serve-bench");
+        let speedup = report.throughput / baseline.get_or_insert(report.throughput).max(1e-12);
+        println!(
+            "{:<8} {:>12} {:>12} {:>14.0} {:>9.2}x",
+            shards,
+            report.total_events,
+            finger::util::fmt::secs(report.wall_secs),
+            report.throughput,
+            speedup,
+        );
     }
     Ok(())
 }

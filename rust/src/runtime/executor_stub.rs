@@ -1,0 +1,44 @@
+//! Stub executor compiled when the `xla` cargo feature is disabled (the
+//! default — offline registries without the `xla` crate closure). Mirrors the
+//! public API of `executor.rs` exactly; `Runtime::load` always fails, which
+//! callers already handle as "offload unavailable, skip".
+
+use super::artifact::{Artifact, Manifest};
+use anyhow::{bail, Result};
+
+/// Placeholder runtime: never constructible, so the remaining methods exist
+/// only to satisfy the shared API surface.
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Always fails: the crate was built without the `xla` feature.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let _ = dir;
+        bail!("XLA offload unavailable: built without the `xla` cargo feature");
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Unreachable in practice (`load` never succeeds); kept for API parity.
+    pub fn run_scalar(&self, art: &Artifact, inputs: &[Vec<f32>]) -> Result<f64> {
+        let _ = (art, inputs);
+        bail!("XLA offload unavailable: built without the `xla` cargo feature");
+    }
+
+    pub fn artifact(&self, name: &str, n: usize) -> Result<Artifact> {
+        let _ = (name, n);
+        bail!("XLA offload unavailable: built without the `xla` cargo feature");
+    }
+
+    pub fn cached_count(&self) -> usize {
+        0
+    }
+}

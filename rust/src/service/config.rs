@@ -1,0 +1,102 @@
+//! Service configuration, constructible programmatically or from the
+//! `[service]` section of a config file (`cli::Config`).
+
+use crate::cli::Config;
+use crate::entropy::SmaxPolicy;
+use crate::stream::ResyncPolicy;
+use std::path::PathBuf;
+
+/// Knobs for the sharded scoring engine.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Shard worker count (sessions are hash-partitioned across these).
+    pub shards: usize,
+    /// Bounded queue depth per shard (backpressure knob: `submit` blocks
+    /// when the target shard's queue is full).
+    pub channel_capacity: usize,
+    /// Online anomaly threshold: score > μ + k·σ over the trailing window.
+    pub anomaly_sigma: f64,
+    /// Trailing window length for the running anomaly statistics.
+    pub anomaly_window: usize,
+    /// s_max maintenance policy for every session's `FingerState`.
+    pub policy: SmaxPolicy,
+    /// Drift-bounded auto-resync schedule for long-lived sessions.
+    pub resync: ResyncPolicy,
+    /// Create a session (empty initial graph) on first event for an unknown
+    /// id; when false such events are dropped and counted.
+    pub auto_create_sessions: bool,
+    /// Snapshot every session here on `finish` (one `<id>.ckpt` per session).
+    pub checkpoint_dir: Option<PathBuf>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            shards: 4,
+            channel_capacity: 256,
+            anomaly_sigma: 3.0,
+            anomaly_window: 24,
+            policy: SmaxPolicy::default(),
+            resync: ResyncPolicy::default(),
+            auto_create_sessions: true,
+            checkpoint_dir: None,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Read the `[service]` section of a parsed config file; missing keys
+    /// fall back to the defaults above. Recognized keys: `shards`,
+    /// `channel_capacity`, `anomaly_sigma`, `anomaly_window`, `smax_policy`
+    /// (`exact` | `paper`), `resync_interval` (windows, 0 disables),
+    /// `auto_create_sessions`, `checkpoint_dir`.
+    pub fn from_config(c: &Config) -> Self {
+        let d = Self::default();
+        Self {
+            shards: c.get_or("service.shards", d.shards).max(1),
+            channel_capacity: c.get_or("service.channel_capacity", d.channel_capacity).max(1),
+            anomaly_sigma: c.get_or("service.anomaly_sigma", d.anomaly_sigma),
+            anomaly_window: c.get_or("service.anomaly_window", d.anomaly_window).max(1),
+            policy: match c.get("service.smax_policy") {
+                Some("paper") | Some("paper-faithful") => SmaxPolicy::PaperFaithful,
+                _ => SmaxPolicy::Exact,
+            },
+            resync: ResyncPolicy::every(
+                c.get_or("service.resync_interval", d.resync.initial_interval),
+            ),
+            auto_create_sessions: c
+                .get_bool("service.auto_create_sessions", d.auto_create_sessions),
+            checkpoint_dir: c.get("service.checkpoint_dir").map(PathBuf::from),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_config_reads_service_section() {
+        let c = Config::parse(
+            "[service]\nshards = 8\nchannel_capacity = 2\nsmax_policy = \"paper\"\n\
+             resync_interval = 0\nauto_create_sessions = false\ncheckpoint_dir = \"/tmp/x\"\n",
+        )
+        .unwrap();
+        let s = ServiceConfig::from_config(&c);
+        assert_eq!(s.shards, 8);
+        assert_eq!(s.channel_capacity, 2);
+        assert_eq!(s.policy, SmaxPolicy::PaperFaithful);
+        assert_eq!(s.resync.initial_interval, 0);
+        assert!(!s.auto_create_sessions);
+        assert_eq!(s.checkpoint_dir.as_deref(), Some(std::path::Path::new("/tmp/x")));
+    }
+
+    #[test]
+    fn from_config_defaults_on_empty() {
+        let s = ServiceConfig::from_config(&Config::parse("").unwrap());
+        let d = ServiceConfig::default();
+        assert_eq!(s.shards, d.shards);
+        assert_eq!(s.policy, SmaxPolicy::Exact);
+        assert!(s.checkpoint_dir.is_none());
+    }
+}

@@ -1,0 +1,324 @@
+//! The sharded scoring engine: N shard workers, each owning a
+//! `SessionRegistry` and fed by a bounded channel. `submit` hashes the
+//! session id to a shard and blocks when that shard's queue is full
+//! (backpressure); `finish` drains the workers and aggregates per-session
+//! reports. See the module docs in `service/mod.rs` for the full model.
+
+use super::config::ServiceConfig;
+use super::registry::{shard_of, SessionRegistry};
+use super::session::{SessionReport, SessionState};
+use crate::entropy::FingerState;
+use crate::graph::Graph;
+use crate::stream::{checkpoint, StreamEvent};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Message routed to a shard worker. Per-session ordering is guaranteed by
+/// the single FIFO channel each shard consumes.
+enum ShardMsg {
+    /// (Re)open a session with an explicit state.
+    Open { id: String, state: FingerState },
+    /// One stream event for a session.
+    Event { id: String, ev: StreamEvent },
+    /// A batch of events for one session (amortizes the per-message routing
+    /// and channel cost on the ingest path).
+    Batch { id: String, events: Vec<StreamEvent> },
+}
+
+/// Submission failure: the target shard's worker is gone (it panicked —
+/// workers otherwise outlive every sender).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SubmitError {
+    pub shard: usize,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "shard {} is no longer accepting events", self.shard)
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// The running service. `submit` may be called from any number of threads
+/// (`&self`, channels are `Sync`); `finish` consumes the service, joins the
+/// workers and returns the aggregate report.
+pub struct ScoringService {
+    cfg: ServiceConfig,
+    senders: Vec<SyncSender<ShardMsg>>,
+    workers: Vec<JoinHandle<ShardOutcome>>,
+    submitted: AtomicUsize,
+    start: Instant,
+}
+
+struct ShardOutcome {
+    reports: Vec<SessionReport>,
+    dropped: usize,
+}
+
+impl ScoringService {
+    /// Spawn the shard workers and start accepting events.
+    pub fn start(cfg: ServiceConfig) -> Self {
+        let shards = cfg.shards.max(1);
+        let mut senders = Vec::with_capacity(shards);
+        let mut workers = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (tx, rx) = sync_channel::<ShardMsg>(cfg.channel_capacity.max(1));
+            let worker_cfg = cfg.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("finger-shard-{shard}"))
+                .spawn(move || shard_worker(rx, worker_cfg))
+                .expect("spawn shard worker");
+            senders.push(tx);
+            workers.push(handle);
+        }
+        Self { cfg, senders, workers, submitted: AtomicUsize::new(0), start: Instant::now() }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.senders.len()
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Deterministic shard a session's events flow through.
+    pub fn shard_for(&self, session_id: &str) -> usize {
+        shard_of(session_id, self.senders.len())
+    }
+
+    /// (Re)open a session with an initial graph. Ordered with respect to
+    /// subsequent `submit`s for the same id (same FIFO shard channel).
+    pub fn open_session(&self, id: &str, initial: Graph) -> Result<(), SubmitError> {
+        self.open_session_state(id, FingerState::with_policy(initial, self.cfg.policy))
+    }
+
+    /// (Re)open a session resuming from an existing incremental state.
+    pub fn open_session_state(&self, id: &str, state: FingerState) -> Result<(), SubmitError> {
+        self.send(ShardMsg::Open { id: id.to_string(), state })
+    }
+
+    /// Route one event to `id`'s shard. Blocks while that shard's bounded
+    /// queue is full (backpressure) — it never drops.
+    pub fn submit(&self, id: &str, ev: StreamEvent) -> Result<(), SubmitError> {
+        self.send(ShardMsg::Event { id: id.to_string(), ev })?;
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Route a whole event stream to one session; returns the event count.
+    pub fn submit_all<I>(&self, id: &str, events: I) -> Result<usize, SubmitError>
+    where
+        I: IntoIterator<Item = StreamEvent>,
+    {
+        let mut n = 0;
+        for ev in events {
+            self.submit(id, ev)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Route a batch of events to `id`'s shard as a single message —
+    /// identical semantics to submitting each event in order, at a fraction
+    /// of the routing/channel overhead. Returns the batch size.
+    pub fn submit_batch(&self, id: &str, events: Vec<StreamEvent>) -> Result<usize, SubmitError> {
+        let n = events.len();
+        if n == 0 {
+            return Ok(0);
+        }
+        self.send(ShardMsg::Batch { id: id.to_string(), events })?;
+        self.submitted.fetch_add(n, Ordering::Relaxed);
+        Ok(n)
+    }
+
+    /// Re-open every `<id>.ckpt` session found in `dir` (written by a prior
+    /// run's `finish` with `checkpoint_dir` set). Returns how many sessions
+    /// were restored.
+    pub fn restore_sessions(&self, dir: impl AsRef<Path>) -> anyhow::Result<usize> {
+        let mut restored = 0;
+        let mut entries: Vec<_> =
+            std::fs::read_dir(dir.as_ref())?.collect::<Result<Vec<_>, _>>()?;
+        entries.sort_by_key(|e| e.path());
+        for entry in entries {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("ckpt") {
+                continue;
+            }
+            let id = match path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .and_then(super::session::decode_session_id)
+            {
+                Some(s) => s,
+                None => continue, // not written by our encoder
+            };
+            let state = checkpoint::load_with_policy(&path, self.cfg.policy)?;
+            self.open_session_state(&id, state)
+                .map_err(|e| anyhow::anyhow!("restore {id}: {e}"))?;
+            restored += 1;
+        }
+        Ok(restored)
+    }
+
+    fn send(&self, msg: ShardMsg) -> Result<(), SubmitError> {
+        let shard = match &msg {
+            ShardMsg::Open { id, .. }
+            | ShardMsg::Event { id, .. }
+            | ShardMsg::Batch { id, .. } => shard_of(id, self.senders.len()),
+        };
+        self.senders[shard].send(msg).map_err(|_| SubmitError { shard })
+    }
+
+    /// Close the ingest side, drain every shard (flushing partial windows,
+    /// checkpointing when configured) and aggregate the results.
+    pub fn finish(self) -> ServiceReport {
+        let Self { cfg, senders, workers, submitted, start } = self;
+        drop(senders); // workers' receive loops end once the queues drain
+        let mut sessions = Vec::new();
+        let mut dropped_events = 0;
+        for worker in workers {
+            let outcome = worker.join().expect("shard worker panicked");
+            sessions.extend(outcome.reports);
+            dropped_events += outcome.dropped;
+        }
+        sessions.sort_by(|a, b| a.id.cmp(&b.id));
+        let wall_secs = start.elapsed().as_secs_f64();
+        let total_events = submitted.into_inner();
+        ServiceReport {
+            throughput: total_events as f64 / wall_secs.max(1e-12),
+            total_events,
+            dropped_events,
+            wall_secs,
+            shards: cfg.shards.max(1),
+            sessions,
+        }
+    }
+}
+
+fn shard_worker(rx: Receiver<ShardMsg>, cfg: ServiceConfig) -> ShardOutcome {
+    let mut registry = SessionRegistry::new();
+    let mut dropped = 0;
+    let route = |registry: &mut SessionRegistry,
+                     dropped: &mut usize,
+                     id: String,
+                     events: &mut dyn Iterator<Item = StreamEvent>| {
+        if !registry.contains(&id) {
+            if cfg.auto_create_sessions {
+                registry.insert(SessionState::new(id.clone(), Graph::new(0), &cfg));
+            } else {
+                *dropped += events.count();
+                return;
+            }
+        }
+        let session = registry.get_mut(&id).expect("session just ensured");
+        for ev in events {
+            session.on_event(ev);
+        }
+    };
+    for msg in rx {
+        match msg {
+            ShardMsg::Open { id, state } => {
+                registry.insert(SessionState::from_finger_state(id, state, &cfg));
+            }
+            ShardMsg::Event { id, ev } => {
+                route(&mut registry, &mut dropped, id, &mut std::iter::once(ev));
+            }
+            ShardMsg::Batch { id, events } => {
+                route(&mut registry, &mut dropped, id, &mut events.into_iter());
+            }
+        }
+    }
+    // ingest closed: flush, checkpoint, report
+    let mut reports = Vec::new();
+    for mut session in registry.into_sessions() {
+        session.flush();
+        if let Some(dir) = &cfg.checkpoint_dir {
+            if let Err(e) = session.checkpoint_into(dir) {
+                eprintln!("checkpoint session {}: {e:#}", session.id());
+            }
+        }
+        reports.push(session.into_report());
+    }
+    ShardOutcome { reports, dropped }
+}
+
+/// Aggregate outcome across all shards and sessions.
+#[derive(Debug)]
+pub struct ServiceReport {
+    /// Per-session reports, sorted by session id.
+    pub sessions: Vec<SessionReport>,
+    /// Events accepted through `submit` across all sessions.
+    pub total_events: usize,
+    /// Events for unknown sessions dropped because `auto_create_sessions`
+    /// was off.
+    pub dropped_events: usize,
+    pub wall_secs: f64,
+    /// Accepted events per second, aggregated over the whole run.
+    pub throughput: f64,
+    pub shards: usize,
+}
+
+impl ServiceReport {
+    pub fn session(&self, id: &str) -> Option<&SessionReport> {
+        self.sessions.iter().find(|s| s.id == id)
+    }
+
+    pub fn total_windows(&self) -> usize {
+        self.sessions.iter().map(|s| s.records.len()).sum()
+    }
+
+    pub fn total_anomalies(&self) -> usize {
+        self.sessions.iter().map(|s| s.anomalies.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_session_basic_flow() {
+        let svc = ScoringService::start(ServiceConfig { shards: 2, ..Default::default() });
+        svc.open_session("a", Graph::new(4)).unwrap();
+        svc.submit("a", StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 }).unwrap();
+        svc.submit("a", StreamEvent::Tick).unwrap();
+        let report = svc.finish();
+        assert_eq!(report.total_events, 2);
+        assert_eq!(report.dropped_events, 0);
+        let s = report.session("a").unwrap();
+        assert_eq!(s.records.len(), 1);
+        assert_eq!(s.edges, 1);
+    }
+
+    #[test]
+    fn auto_create_off_drops_and_counts() {
+        let cfg = ServiceConfig { shards: 1, auto_create_sessions: false, ..Default::default() };
+        let svc = ScoringService::start(cfg);
+        svc.open_session("known", Graph::new(2)).unwrap();
+        svc.submit("known", StreamEvent::Tick).unwrap();
+        svc.submit("unknown", StreamEvent::Tick).unwrap();
+        let report = svc.finish();
+        assert_eq!(report.sessions.len(), 1);
+        assert_eq!(report.dropped_events, 1);
+        assert_eq!(report.total_events, 2);
+    }
+
+    #[test]
+    fn reopening_a_session_resets_it() {
+        let svc = ScoringService::start(ServiceConfig { shards: 1, ..Default::default() });
+        svc.open_session("a", Graph::new(2)).unwrap();
+        svc.submit("a", StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 }).unwrap();
+        svc.submit("a", StreamEvent::Tick).unwrap();
+        svc.open_session("a", Graph::new(2)).unwrap(); // reset
+        svc.submit("a", StreamEvent::Tick).unwrap();
+        let report = svc.finish();
+        let s = report.session("a").unwrap();
+        assert_eq!(s.records.len(), 1, "reset session only saw the final empty window");
+        assert_eq!(s.edges, 0);
+    }
+}

@@ -1,0 +1,68 @@
+//! Sharded multi-session scoring service — the serving backbone that turns
+//! the single-stream demo pipeline into a multi-tenant engine tracking many
+//! evolving graphs at once (FINGER's per-update cheapness, Theorem 2, is
+//! what makes per-session incremental scoring affordable at this scale).
+//!
+//! # Architecture
+//!
+//! ```text
+//!                    ┌───────────────► shard 0 worker ──► SessionRegistry {id → SessionState}
+//! submit(id, event) ─┤  hash(id) % N   (bounded ch)            batcher → scorer → anomaly
+//!                    ├───────────────► shard 1 worker ──► ...
+//!                    └───────────────► shard N-1 worker
+//! ```
+//!
+//! * **Sharding** — sessions are hash-partitioned by id ([`shard_of`], a
+//!   deterministic FxHash), so every event of a session flows through one
+//!   worker in submission order: per-session processing is sequential and
+//!   deterministic while distinct sessions score in parallel across N
+//!   workers. No locks are taken on the scoring path — each worker owns its
+//!   shard's [`SessionRegistry`] outright.
+//! * **Backpressure** — each shard worker is fed by a bounded
+//!   `sync_channel` of [`ServiceConfig::channel_capacity`] messages;
+//!   [`ScoringService::submit`] blocks when a shard's queue is full, so a
+//!   slow shard stalls its producers instead of growing memory without
+//!   bound. Events are never dropped on the submit path (only events for
+//!   unknown sessions when `auto_create_sessions` is off, which are counted
+//!   in [`ServiceReport::dropped_events`]).
+//! * **Per-session state** — every [`SessionState`] bundles the reusable
+//!   stream components: a `WindowBatcher` folding events into ΔG_t windows,
+//!   a `WindowScorer` owning the incremental `FingerState` (Algorithm 2 per
+//!   window), an online μ + kσ `AnomalyDetector`, and a drift-bounded
+//!   `ResyncPolicy` that periodically rebuilds Q/c/s_max from the graph for
+//!   long-lived sessions (interval adapts to the measured |ΔQ| drift).
+//! * **Checkpoint/restore** — on [`ScoringService::finish`] every session
+//!   can be snapshotted to `checkpoint_dir` via `stream::checkpoint`;
+//!   [`ScoringService::restore_sessions`] re-opens them (Q/c/s_max are
+//!   derived from the saved graph, so no drift survives a restore).
+//!
+//! # Example
+//!
+//! ```
+//! use finger::service::{ScoringService, ServiceConfig};
+//! use finger::stream::StreamEvent;
+//!
+//! let svc = ScoringService::start(ServiceConfig { shards: 2, ..Default::default() });
+//! for session in ["alice", "bob"] {
+//!     svc.open_session(session, finger::graph::Graph::new(8)).unwrap();
+//!     for k in 0..4u32 {
+//!         svc.submit(session, StreamEvent::EdgeDelta { i: k, j: k + 1, dw: 1.0 }).unwrap();
+//!     }
+//!     svc.submit(session, StreamEvent::Tick).unwrap();
+//! }
+//! let report = svc.finish();
+//! assert_eq!(report.sessions.len(), 2);
+//! assert_eq!(report.total_events, 10);
+//! ```
+
+pub mod config;
+pub mod engine;
+pub mod registry;
+pub mod session;
+pub mod workload;
+
+pub use config::ServiceConfig;
+pub use engine::{ScoringService, ServiceReport, SubmitError};
+pub use registry::{shard_of, SessionRegistry};
+pub use session::{decode_session_id, encode_session_id, SessionReport, SessionState};
+pub use workload::{tenant_streams, TenantWorkloadConfig};

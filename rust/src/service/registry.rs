@@ -1,0 +1,84 @@
+//! Session bookkeeping: the deterministic session→shard hash and the
+//! per-shard registry of live sessions (each shard worker owns one
+//! `SessionRegistry` outright — no locks on the scoring path).
+
+use super::session::SessionState;
+use crate::util::hash::{DetHashMap, FxHasher};
+use std::hash::{Hash, Hasher};
+
+/// Deterministic shard assignment for a session id: FxHash of the id bytes
+/// modulo the shard count. Stable across runs, platforms and submission
+/// orders, so tests (and operators) can predict event routing.
+pub fn shard_of(session_id: &str, shards: usize) -> usize {
+    let mut h = FxHasher::default();
+    session_id.hash(&mut h);
+    (h.finish() % shards.max(1) as u64) as usize
+}
+
+/// The sessions owned by one shard worker, keyed by session id.
+#[derive(Debug, Default)]
+pub struct SessionRegistry {
+    sessions: DetHashMap<String, SessionState>,
+}
+
+impl SessionRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.sessions.contains_key(id)
+    }
+
+    /// Register a session, replacing any previous one under the same id.
+    pub fn insert(&mut self, session: SessionState) {
+        self.sessions.insert(session.id().to_string(), session);
+    }
+
+    pub fn get(&self, id: &str) -> Option<&SessionState> {
+        self.sessions.get(id)
+    }
+
+    pub fn get_mut(&mut self, id: &str) -> Option<&mut SessionState> {
+        self.sessions.get_mut(id)
+    }
+
+    /// Drain all sessions (finish path).
+    pub fn into_sessions(self) -> impl Iterator<Item = SessionState> {
+        self.sessions.into_values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_assignment_is_deterministic_and_in_range() {
+        for shards in [1usize, 2, 3, 8, 64] {
+            for id in ["alice", "bob", "session-12345", ""] {
+                let s = shard_of(id, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_of(id, shards), "same id must re-hash identically");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_assignment_spreads_sessions() {
+        let shards = 8;
+        let mut seen = vec![false; shards];
+        for k in 0..256 {
+            seen[shard_of(&format!("session-{k}"), shards)] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "256 sessions must cover all 8 shards");
+    }
+}

@@ -1,0 +1,247 @@
+//! One tenant's scoring state: the reusable stream components (batcher,
+//! scorer, anomaly detector, resync schedule) bundled behind a session id,
+//! plus the per-session report extracted when the service finishes.
+
+use super::config::ServiceConfig;
+use crate::entropy::FingerState;
+use crate::graph::Graph;
+use crate::stream::window::{AnomalyDetector, ScoreRecord, WindowBatcher, WindowScorer};
+use crate::stream::{checkpoint, StreamEvent};
+use std::path::{Path, PathBuf};
+
+/// A live session inside a shard worker.
+#[derive(Debug)]
+pub struct SessionState {
+    id: String,
+    batcher: WindowBatcher,
+    scorer: WindowScorer,
+    records: Vec<ScoreRecord>,
+    events: usize,
+}
+
+impl SessionState {
+    /// Fresh session starting from `initial` under the service's policy.
+    pub fn new(id: impl Into<String>, initial: Graph, cfg: &ServiceConfig) -> Self {
+        Self::from_finger_state(id, FingerState::with_policy(initial, cfg.policy), cfg)
+    }
+
+    /// Session resuming from an existing state (checkpoint restore).
+    pub fn from_finger_state(
+        id: impl Into<String>,
+        state: FingerState,
+        cfg: &ServiceConfig,
+    ) -> Self {
+        Self {
+            id: id.into(),
+            batcher: WindowBatcher::new(),
+            scorer: WindowScorer::new(
+                state,
+                AnomalyDetector::new(cfg.anomaly_sigma, cfg.anomaly_window),
+                cfg.resync.clone(),
+            ),
+            records: Vec::new(),
+            events: 0,
+        }
+    }
+
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// Feed one event; scores a window when `ev` closes one.
+    pub fn on_event(&mut self, ev: StreamEvent) {
+        self.events += 1;
+        if let Some((delta, n_events)) = self.batcher.push(ev) {
+            let record = self.scorer.score(&delta, n_events);
+            self.records.push(record);
+        }
+    }
+
+    /// Score any trailing partial window (stream ended without a tick).
+    pub fn flush(&mut self) {
+        if let Some((delta, n_events)) = self.batcher.flush() {
+            let record = self.scorer.score(&delta, n_events);
+            self.records.push(record);
+        }
+    }
+
+    pub fn state(&self) -> &FingerState {
+        self.scorer.state()
+    }
+
+    pub fn records(&self) -> &[ScoreRecord] {
+        &self.records
+    }
+
+    /// Events routed to this session so far (including ticks).
+    pub fn events(&self) -> usize {
+        self.events
+    }
+
+    /// Snapshot this session's state to `dir/<encoded-id>.ckpt`.
+    pub fn checkpoint_into(&self, dir: &Path) -> anyhow::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{}.ckpt", encode_session_id(&self.id)));
+        checkpoint::save(self.state(), &path)?;
+        Ok(path)
+    }
+
+    /// Finalize into a report (flushes any open window first).
+    pub fn into_report(mut self) -> SessionReport {
+        self.flush();
+        let anomalies =
+            self.records.iter().filter(|r| r.anomalous).map(|r| r.window).collect();
+        SessionReport {
+            htilde: self.scorer.state().htilde(),
+            nodes: self.scorer.state().graph().num_nodes(),
+            edges: self.scorer.state().graph().num_edges(),
+            resyncs: self.scorer.resyncs(),
+            max_resync_drift: self.scorer.max_drift(),
+            anomalies,
+            id: self.id,
+            records: self.records,
+            events: self.events,
+        }
+    }
+}
+
+/// Filesystem-safe checkpoint stem. The encoding is injective (distinct ids
+/// never collide on disk) and reversible, so ids round-trip exactly through
+/// `restore_sessions`: bytes outside `[A-Za-z0-9._-]` — and `%` itself —
+/// become `%XX` hex escapes.
+pub fn encode_session_id(id: &str) -> String {
+    let mut out = String::with_capacity(id.len());
+    for &b in id.as_bytes() {
+        let c = b as char;
+        if b.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') {
+            out.push(c);
+        } else {
+            out.push_str(&format!("%{b:02X}"));
+        }
+    }
+    out
+}
+
+/// Inverse of [`encode_session_id`]; `None` on malformed escapes (a file not
+/// written by this encoder).
+pub fn decode_session_id(stem: &str) -> Option<String> {
+    let bytes = stem.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut k = 0;
+    while k < bytes.len() {
+        if bytes[k] == b'%' {
+            let hex = bytes.get(k + 1..k + 3)?;
+            let hi = (hex[0] as char).to_digit(16)?;
+            let lo = (hex[1] as char).to_digit(16)?;
+            out.push((hi * 16 + lo) as u8);
+            k += 3;
+        } else {
+            out.push(bytes[k]);
+            k += 1;
+        }
+    }
+    String::from_utf8(out).ok()
+}
+
+/// Everything the service knows about one session at finish time.
+#[derive(Debug, Clone)]
+pub struct SessionReport {
+    pub id: String,
+    pub records: Vec<ScoreRecord>,
+    /// Events routed to this session (including ticks).
+    pub events: usize,
+    /// H̃ of the session's final graph.
+    pub htilde: f64,
+    pub nodes: usize,
+    pub edges: usize,
+    /// Window indices flagged anomalous.
+    pub anomalies: Vec<usize>,
+    /// Drift-bounded resyncs performed over the session's lifetime.
+    pub resyncs: u64,
+    /// Largest |ΔQ| correction any resync applied.
+    pub max_resync_drift: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::jsdist_incremental;
+    use crate::graph::DeltaGraph;
+    use crate::util::Pcg64;
+
+    fn cfg() -> ServiceConfig {
+        ServiceConfig::default()
+    }
+
+    #[test]
+    fn session_scores_windows_like_direct_loop() {
+        let mut rng = Pcg64::new(41);
+        let g = crate::generators::erdos_renyi(30, 0.1, &mut rng);
+        let mut deltas = Vec::new();
+        for _ in 0..6 {
+            let mut d = DeltaGraph::new();
+            for _ in 0..4 {
+                let i = rng.below(30) as u32;
+                let j = (i + 1 + rng.below(29) as u32) % 30;
+                if i != j {
+                    d.add(i, j, rng.uniform(0.1, 1.0));
+                }
+            }
+            deltas.push(d.coalesced());
+        }
+        let mut session = SessionState::new("s", g.clone(), &cfg());
+        for ev in crate::stream::event::events_from_deltas(&deltas) {
+            session.on_event(ev);
+        }
+        let mut state = FingerState::new(g);
+        for (t, d) in deltas.iter().enumerate() {
+            let js = jsdist_incremental(&mut state, d);
+            assert!(
+                (session.records()[t].jsdist - js).abs() < 1e-12,
+                "window {t}: {} vs {js}",
+                session.records()[t].jsdist
+            );
+        }
+        let report = session.into_report();
+        assert_eq!(report.records.len(), 6);
+        assert!((report.htilde - state.htilde()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trailing_partial_window_flushed_in_report() {
+        let mut session = SessionState::new("s", Graph::new(4), &cfg());
+        session.on_event(StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 });
+        session.on_event(StreamEvent::Tick);
+        session.on_event(StreamEvent::EdgeDelta { i: 1, j: 2, dw: 1.0 }); // no tick
+        let report = session.into_report();
+        assert_eq!(report.records.len(), 2);
+        assert_eq!(report.events, 3);
+        assert_eq!(report.edges, 2);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_preserves_htilde() {
+        let mut session = SessionState::new("tenant-1", Graph::new(6), &cfg());
+        for k in 0..5u32 {
+            session.on_event(StreamEvent::EdgeDelta { i: k, j: k + 1, dw: 1.0 + k as f64 });
+        }
+        session.on_event(StreamEvent::Tick);
+        let dir = std::env::temp_dir().join("finger_session_ckpt");
+        let path = session.checkpoint_into(&dir).unwrap();
+        let restored = checkpoint::load(&path).unwrap();
+        assert!((restored.htilde() - session.state().htilde()).abs() < 1e-12);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn id_encoding_is_path_safe_injective_and_reversible() {
+        assert_eq!(encode_session_id("plain-id_1.2"), "plain-id_1.2");
+        assert_eq!(encode_session_id("user/42:a"), "user%2F42%3Aa");
+        // distinct ids that a lossy sanitizer would collapse stay distinct
+        assert_ne!(encode_session_id("a/b"), encode_session_id("a_b"));
+        for id in ["a/b", "a_b", "100% métrics", "s%2F", "plain"] {
+            assert_eq!(decode_session_id(&encode_session_id(id)).as_deref(), Some(id));
+        }
+        assert_eq!(decode_session_id("bad%zz"), None);
+    }
+}

@@ -1,0 +1,176 @@
+//! Deterministic synthetic multi-tenant workloads plus a driver that pushes
+//! them through a `ScoringService` from concurrent producer threads. Shared
+//! by `finger serve-bench`, `benches/service_throughput.rs`,
+//! `examples/multi_tenant.rs` and the service integration tests.
+
+use super::config::ServiceConfig;
+use super::engine::{ScoringService, ServiceReport};
+use crate::graph::Graph;
+use crate::stream::StreamEvent;
+use crate::util::Pcg64;
+
+/// Shape of one synthetic multi-tenant workload.
+#[derive(Debug, Clone)]
+pub struct TenantWorkloadConfig {
+    /// Concurrent sessions (tenants).
+    pub sessions: usize,
+    /// Tick-separated windows per session.
+    pub windows: usize,
+    /// Edge events per window.
+    pub events_per_window: usize,
+    /// Nodes in each session's initial graph.
+    pub nodes_per_session: usize,
+    pub seed: u64,
+}
+
+impl Default for TenantWorkloadConfig {
+    fn default() -> Self {
+        Self {
+            sessions: 256,
+            windows: 16,
+            events_per_window: 60,
+            nodes_per_session: 64,
+            seed: 0x5E55,
+        }
+    }
+}
+
+/// One tenant's prebuilt stream: `(session id, initial graph, events)`.
+pub type TenantStream = (String, Graph, Vec<StreamEvent>);
+
+/// Generate per-session event streams. Each session gets its own RNG stream
+/// (`Pcg64::with_stream`), so the workload is reproducible and independent
+/// of how sessions are later interleaved.
+pub fn tenant_streams(cfg: &TenantWorkloadConfig) -> Vec<TenantStream> {
+    let n = cfg.nodes_per_session.max(2);
+    (0..cfg.sessions)
+        .map(|s| {
+            let mut rng = Pcg64::with_stream(cfg.seed, s as u64);
+            let initial = crate::generators::erdos_renyi_avg_degree(n, 6.0, &mut rng);
+            let mut events =
+                Vec::with_capacity(cfg.windows * (cfg.events_per_window + 1));
+            for _ in 0..cfg.windows {
+                for _ in 0..cfg.events_per_window {
+                    let i = rng.below(n) as u32;
+                    let j = (i + 1 + rng.below(n - 1) as u32) % n as u32;
+                    let dw = if rng.bernoulli(0.25) {
+                        -rng.uniform(0.1, 1.0) // weaken/delete
+                    } else {
+                        rng.uniform(0.1, 1.0)
+                    };
+                    events.push(StreamEvent::EdgeDelta { i, j, dw });
+                }
+                events.push(StreamEvent::Tick);
+            }
+            (format!("session-{s:05}"), initial, events)
+        })
+        .collect()
+}
+
+/// Total event count of a prebuilt workload.
+pub fn workload_events(workload: &[TenantStream]) -> usize {
+    workload.iter().map(|(_, _, evs)| evs.len()).sum()
+}
+
+/// Drive a prebuilt workload through a fresh service: open every session,
+/// submit from `producers` threads (sessions round-robin-partitioned across
+/// producers; each producer interleaves its sessions window by window so all
+/// shards stay busy), then `finish`. When `batched`, each tick-delimited
+/// window goes through `submit_batch` as one message; otherwise events are
+/// submitted one by one.
+pub fn drive(
+    cfg: &ServiceConfig,
+    workload: &[TenantStream],
+    producers: usize,
+    batched: bool,
+) -> ServiceReport {
+    let service = ScoringService::start(cfg.clone());
+    for (id, initial, _) in workload {
+        service.open_session(id, initial.clone()).expect("open session");
+    }
+    let producers = producers.clamp(1, workload.len().max(1));
+    std::thread::scope(|scope| {
+        for p in 0..producers {
+            let service = &service;
+            let chunk: Vec<&TenantStream> =
+                workload.iter().skip(p).step_by(producers).collect();
+            scope.spawn(move || {
+                if batched {
+                    // window-major round-robin of per-window batches
+                    let windows: Vec<Vec<&[StreamEvent]>> = chunk
+                        .iter()
+                        .map(|(_, _, evs)| {
+                            evs.split_inclusive(|e| matches!(e, StreamEvent::Tick))
+                                .collect()
+                        })
+                        .collect();
+                    let max_windows =
+                        windows.iter().map(|w| w.len()).max().unwrap_or(0);
+                    for w in 0..max_windows {
+                        for (k, (id, _, _)) in chunk.iter().enumerate() {
+                            if let Some(win) = windows[k].get(w) {
+                                service
+                                    .submit_batch(id, win.to_vec())
+                                    .expect("submit batch");
+                            }
+                        }
+                    }
+                } else {
+                    // event-major round-robin keeps every session live
+                    let max_events =
+                        chunk.iter().map(|(_, _, evs)| evs.len()).max().unwrap_or(0);
+                    for t in 0..max_events {
+                        for (id, _, evs) in &chunk {
+                            if let Some(ev) = evs.get(t) {
+                                service.submit(id, ev.clone()).expect("submit");
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    service.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_is_deterministic() {
+        let cfg = TenantWorkloadConfig { sessions: 3, windows: 2, ..Default::default() };
+        let a = tenant_streams(&cfg);
+        let b = tenant_streams(&cfg);
+        assert_eq!(a.len(), 3);
+        for ((ia, ga, ea), (ib, gb, eb)) in a.iter().zip(&b) {
+            assert_eq!(ia, ib);
+            assert_eq!(ga.num_edges(), gb.num_edges());
+            assert_eq!(ea, eb);
+        }
+    }
+
+    #[test]
+    fn batched_and_unbatched_drives_agree() {
+        let wl_cfg = TenantWorkloadConfig {
+            sessions: 6,
+            windows: 3,
+            events_per_window: 10,
+            nodes_per_session: 16,
+            seed: 9,
+        };
+        let workload = tenant_streams(&wl_cfg);
+        let svc_cfg = ServiceConfig { shards: 2, ..Default::default() };
+        let a = drive(&svc_cfg, &workload, 2, false);
+        let b = drive(&svc_cfg, &workload, 3, true);
+        assert_eq!(a.total_events, workload_events(&workload));
+        assert_eq!(a.total_events, b.total_events);
+        for (ra, rb) in a.sessions.iter().zip(&b.sessions) {
+            assert_eq!(ra.id, rb.id);
+            assert_eq!(ra.records.len(), rb.records.len());
+            for (x, y) in ra.records.iter().zip(&rb.records) {
+                assert!((x.jsdist - y.jsdist).abs() < 1e-12, "{}", ra.id);
+            }
+        }
+    }
+}

@@ -3,7 +3,7 @@
 //! rebuilt exactly on restore (Q/c/s_max are derived, so no drift can be
 //! persisted).
 
-use crate::entropy::FingerState;
+use crate::entropy::{FingerState, SmaxPolicy};
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
@@ -20,8 +20,16 @@ pub fn save(state: &FingerState, path: impl AsRef<Path>) -> Result<()> {
     Ok(())
 }
 
-/// Restore a state checkpoint.
+/// Restore a state checkpoint (default s_max policy).
 pub fn load(path: impl AsRef<Path>) -> Result<FingerState> {
+    load_with_policy(path, SmaxPolicy::default())
+}
+
+/// Restore a state checkpoint, rebuilding the `FingerState` under an
+/// explicit s_max policy (the service restores sessions under whatever
+/// policy its config selects; the checkpoint format itself is
+/// policy-agnostic since Q/c/s_max are derived from the saved graph).
+pub fn load_with_policy(path: impl AsRef<Path>, policy: SmaxPolicy) -> Result<FingerState> {
     let f = std::fs::File::open(path.as_ref())
         .with_context(|| format!("open {}", path.as_ref().display()))?;
     let mut r = BufReader::new(f);
@@ -46,7 +54,7 @@ pub fn load(path: impl AsRef<Path>) -> Result<FingerState> {
         .context("bad nodes")?;
     let mut g = crate::graph::io::read_edge_list(r, nodes)?;
     g.ensure_nodes(nodes);
-    Ok(FingerState::new(g))
+    Ok(FingerState::with_policy(g, policy))
 }
 
 #[cfg(test)]

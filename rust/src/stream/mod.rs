@@ -15,10 +15,17 @@
 //!
 //! Bounded channels give backpressure: a slow scorer stalls the source
 //! instead of growing memory. Checkpoint/restore lets a stream resume.
+//!
+//! The per-window pieces (batching, scoring, anomaly flagging, drift-bounded
+//! resync) live in [`window`] as standalone components; [`Pipeline`] wires
+//! them into the single-stream thread harness above, and [`crate::service`]
+//! runs one set per session across sharded workers.
 
 pub mod checkpoint;
 pub mod event;
 pub mod pipeline;
+pub mod window;
 
 pub use event::StreamEvent;
 pub use pipeline::{Pipeline, PipelineConfig, PipelineResult, ScoreRecord};
+pub use window::{AnomalyDetector, ResyncPolicy, WindowBatcher, WindowScorer};

@@ -1,11 +1,19 @@
 //! The threaded streaming pipeline (source → batcher → scorer → sink) with
 //! bounded-channel backpressure and per-stage metrics.
+//!
+//! The per-window logic (event batching, Algorithm-2 scoring, online anomaly
+//! flagging) lives in `super::window` as reusable components shared with the
+//! sharded multi-session service (`crate::service`); this module supplies
+//! the single-stream threading harness around them.
 
 use super::event::StreamEvent;
+use super::window::{AnomalyDetector, ResyncPolicy, WindowBatcher, WindowScorer};
 use crate::entropy::FingerState;
 use crate::graph::{DeltaGraph, Graph};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::Instant;
+
+pub use super::window::ScoreRecord;
 
 /// Pipeline configuration.
 #[derive(Debug, Clone)]
@@ -22,24 +30,6 @@ impl Default for PipelineConfig {
     fn default() -> Self {
         Self { channel_capacity: 64, anomaly_sigma: 3.0, anomaly_window: 24 }
     }
-}
-
-/// One scored window.
-#[derive(Debug, Clone)]
-pub struct ScoreRecord {
-    pub window: usize,
-    /// FINGER-JSdist (Incremental) between the pre- and post-window graphs.
-    pub jsdist: f64,
-    /// H̃ of the post-window graph.
-    pub htilde: f64,
-    pub nodes: usize,
-    pub edges: usize,
-    /// Events folded into this window.
-    pub events: usize,
-    /// Scoring latency (seconds) for this window.
-    pub latency: f64,
-    /// Online anomaly flag.
-    pub anomalous: bool,
 }
 
 /// Aggregated pipeline outcome.
@@ -94,69 +84,31 @@ impl Pipeline {
 
         // -- batcher --
         let batcher = std::thread::spawn(move || {
-            let mut current = DeltaGraph::new();
-            let mut events_in_window = 0usize;
+            let mut batcher = WindowBatcher::new();
             for ev in ev_rx {
-                match ev {
-                    StreamEvent::EdgeDelta { i, j, dw } => {
-                        if i != j {
-                            current.add(i, j, dw);
-                        }
-                        events_in_window += 1;
-                    }
-                    StreamEvent::GrowNodes { count } => {
-                        current.grow_nodes(count);
-                        events_in_window += 1;
-                    }
-                    StreamEvent::Tick => {
-                        let d = std::mem::take(&mut current).coalesced();
-                        if win_tx.send((d, events_in_window + 1)).is_err() {
-                            return;
-                        }
-                        events_in_window = 0;
+                if let Some(win) = batcher.push(ev) {
+                    if win_tx.send(win).is_err() {
+                        return;
                     }
                 }
             }
             // flush a trailing partial window
-            if events_in_window > 0 {
-                let d = std::mem::take(&mut current).coalesced();
-                let _ = win_tx.send((d, events_in_window));
+            if let Some(win) = batcher.flush() {
+                let _ = win_tx.send(win);
             }
         });
 
         // -- scorer + sink (inline on this thread) --
-        let mut state = FingerState::new(self.initial.clone());
+        // Resync disabled: the single-stream pipeline stays bit-identical to
+        // the direct Algorithm-2 loop (the service enables it per session).
+        let mut scorer = WindowScorer::new(
+            FingerState::new(self.initial.clone()),
+            AnomalyDetector::new(self.cfg.anomaly_sigma, self.cfg.anomaly_window),
+            ResyncPolicy::disabled(),
+        );
         let mut records: Vec<ScoreRecord> = Vec::new();
-        let mut trailing: std::collections::VecDeque<f64> = Default::default();
-        let mut window = 0usize;
         for (delta, n_events) in win_rx {
-            let t0 = Instant::now();
-            let js = crate::distance::jsdist_incremental(&mut state, &delta);
-            let latency = t0.elapsed().as_secs_f64();
-            // online anomaly decision from the trailing window
-            let anomalous = if trailing.len() >= 4 {
-                let xs: Vec<f64> = trailing.iter().copied().collect();
-                let mu = crate::util::stats::mean(&xs);
-                let sd = crate::util::stats::std_dev(&xs);
-                js > mu + self.cfg.anomaly_sigma * sd.max(1e-12)
-            } else {
-                false
-            };
-            trailing.push_back(js);
-            if trailing.len() > self.cfg.anomaly_window {
-                trailing.pop_front();
-            }
-            records.push(ScoreRecord {
-                window,
-                jsdist: js,
-                htilde: state.htilde(),
-                nodes: state.graph().num_nodes(),
-                edges: state.graph().num_edges(),
-                events: n_events,
-                latency,
-                anomalous,
-            });
-            window += 1;
+            records.push(scorer.score(&delta, n_events));
         }
         batcher.join().expect("batcher panicked");
         let total_events = source.join().expect("source panicked");

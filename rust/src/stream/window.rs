@@ -1,0 +1,333 @@
+//! Per-stream scoring components, factored out of the single-stream
+//! `Pipeline` so the sharded multi-session service (`crate::service`) can run
+//! the same batcher → scorer → anomaly logic once per session:
+//!
+//! * [`WindowBatcher`] folds raw [`StreamEvent`]s into window deltas ΔG_t,
+//!   emitting a coalesced `DeltaGraph` on every `Tick`;
+//! * [`WindowScorer`] owns the incremental `FingerState`, scores each window
+//!   with Algorithm 2 (`jsdist_incremental`), flags anomalies online through
+//!   an [`AnomalyDetector`], and schedules drift-bounded [`resyncs`] for
+//!   long-lived streams;
+//! * [`AnomalyDetector`] is the trailing-window μ + kσ rule.
+//!
+//! [`resyncs`]: crate::entropy::FingerState::resync
+
+use super::event::StreamEvent;
+use crate::entropy::FingerState;
+use crate::graph::DeltaGraph;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// One scored window.
+#[derive(Debug, Clone)]
+pub struct ScoreRecord {
+    pub window: usize,
+    /// FINGER-JSdist (Incremental) between the pre- and post-window graphs.
+    pub jsdist: f64,
+    /// H̃ of the post-window graph.
+    pub htilde: f64,
+    pub nodes: usize,
+    pub edges: usize,
+    /// Events folded into this window.
+    pub events: usize,
+    /// Scoring latency (seconds) for this window.
+    pub latency: f64,
+    /// Online anomaly flag.
+    pub anomalous: bool,
+}
+
+/// Folds events into window deltas: edge/node events accumulate into the
+/// current `DeltaGraph`; a `Tick` closes the window and yields it coalesced.
+#[derive(Debug, Default)]
+pub struct WindowBatcher {
+    current: DeltaGraph,
+    events_in_window: usize,
+}
+
+impl WindowBatcher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one event; returns the closed window `(ΔG, events)` on `Tick`
+    /// (the tick itself counts as one event, matching the pipeline's
+    /// historical accounting).
+    pub fn push(&mut self, ev: StreamEvent) -> Option<(DeltaGraph, usize)> {
+        match ev {
+            StreamEvent::EdgeDelta { i, j, dw } => {
+                if i != j {
+                    self.current.add(i, j, dw);
+                }
+                self.events_in_window += 1;
+                None
+            }
+            StreamEvent::GrowNodes { count } => {
+                self.current.grow_nodes(count);
+                self.events_in_window += 1;
+                None
+            }
+            StreamEvent::Tick => {
+                let d = std::mem::take(&mut self.current).coalesced();
+                let n = self.events_in_window + 1;
+                self.events_in_window = 0;
+                Some((d, n))
+            }
+        }
+    }
+
+    /// Close a trailing partial window (stream ended without a final tick).
+    pub fn flush(&mut self) -> Option<(DeltaGraph, usize)> {
+        if self.events_in_window == 0 {
+            return None;
+        }
+        let d = std::mem::take(&mut self.current).coalesced();
+        let n = self.events_in_window;
+        self.events_in_window = 0;
+        Some((d, n))
+    }
+
+    /// Events accumulated in the currently-open window.
+    pub fn pending_events(&self) -> usize {
+        self.events_in_window
+    }
+}
+
+/// Online anomaly rule: a score is anomalous when it exceeds μ + kσ of the
+/// trailing window of *previous* scores (the current score is added after
+/// the decision, and no decision is made until 4 scores have been seen).
+#[derive(Debug, Clone)]
+pub struct AnomalyDetector {
+    sigma: f64,
+    window: usize,
+    trailing: VecDeque<f64>,
+}
+
+impl AnomalyDetector {
+    /// `window` is clamped to ≥ 4: a decision needs 4 trailing samples, so a
+    /// smaller window would silently disable detection forever.
+    pub fn new(sigma: f64, window: usize) -> Self {
+        Self { sigma, window: window.max(4), trailing: VecDeque::new() }
+    }
+
+    /// Judge `score` against the trailing statistics, then fold it in.
+    pub fn observe(&mut self, score: f64) -> bool {
+        let anomalous = if self.trailing.len() >= 4 {
+            let xs: Vec<f64> = self.trailing.iter().copied().collect();
+            let mu = crate::util::stats::mean(&xs);
+            let sd = crate::util::stats::std_dev(&xs);
+            score > mu + self.sigma * sd.max(1e-12)
+        } else {
+            false
+        };
+        self.trailing.push_back(score);
+        if self.trailing.len() > self.window {
+            self.trailing.pop_front();
+        }
+        anomalous
+    }
+}
+
+/// Drift-bounded auto-resync schedule for long-lived streams: resync every
+/// `interval` windows, halving the interval (down to `min_interval`) when the
+/// measured |ΔQ| drift exceeds `drift_tolerance` and doubling it (up to
+/// `max_interval`) while updates stay clean. `initial_interval == 0`
+/// disables resyncing entirely (the single-stream `Pipeline` default, which
+/// keeps its output bit-identical to the direct Algorithm-2 loop).
+#[derive(Debug, Clone)]
+pub struct ResyncPolicy {
+    pub initial_interval: u64,
+    pub min_interval: u64,
+    pub max_interval: u64,
+    pub drift_tolerance: f64,
+}
+
+impl Default for ResyncPolicy {
+    fn default() -> Self {
+        Self { initial_interval: 256, min_interval: 16, max_interval: 8192, drift_tolerance: 1e-9 }
+    }
+}
+
+impl ResyncPolicy {
+    /// Never resync (exact-replay semantics).
+    pub fn disabled() -> Self {
+        Self { initial_interval: 0, ..Self::default() }
+    }
+
+    /// Adaptive schedule starting at `interval` windows.
+    pub fn every(interval: u64) -> Self {
+        Self { initial_interval: interval, ..Self::default() }
+    }
+}
+
+/// Scores window deltas against an owned incremental `FingerState`:
+/// Algorithm 2 per window, online anomaly flagging, per-window latency, and
+/// scheduled drift correction.
+#[derive(Debug)]
+pub struct WindowScorer {
+    state: FingerState,
+    detector: AnomalyDetector,
+    resync: ResyncPolicy,
+    interval: u64,
+    since_resync: u64,
+    window: usize,
+    resyncs: u64,
+    max_drift: f64,
+}
+
+impl WindowScorer {
+    pub fn new(state: FingerState, detector: AnomalyDetector, resync: ResyncPolicy) -> Self {
+        let interval = resync.initial_interval;
+        Self {
+            state,
+            detector,
+            resync,
+            interval,
+            since_resync: 0,
+            window: 0,
+            resyncs: 0,
+            max_drift: 0.0,
+        }
+    }
+
+    /// Score one window delta and advance the state (Algorithm 2 commits ΔG).
+    pub fn score(&mut self, delta: &DeltaGraph, n_events: usize) -> ScoreRecord {
+        let t0 = Instant::now();
+        let js = crate::distance::jsdist_incremental(&mut self.state, delta);
+        let latency = t0.elapsed().as_secs_f64();
+        let anomalous = self.detector.observe(js);
+        let record = ScoreRecord {
+            window: self.window,
+            jsdist: js,
+            htilde: self.state.htilde(),
+            nodes: self.state.graph().num_nodes(),
+            edges: self.state.graph().num_edges(),
+            events: n_events,
+            latency,
+            anomalous,
+        };
+        self.window += 1;
+        self.maybe_resync();
+        record
+    }
+
+    fn maybe_resync(&mut self) {
+        if self.interval == 0 {
+            return;
+        }
+        self.since_resync += 1;
+        if self.since_resync < self.interval {
+            return;
+        }
+        self.since_resync = 0;
+        let drift = self.state.resync();
+        self.resyncs += 1;
+        if drift > self.max_drift {
+            self.max_drift = drift;
+        }
+        self.interval = if drift > self.resync.drift_tolerance {
+            (self.interval / 2).max(self.resync.min_interval)
+        } else {
+            self.interval.saturating_mul(2).min(self.resync.max_interval)
+        };
+    }
+
+    pub fn state(&self) -> &FingerState {
+        &self.state
+    }
+
+    pub fn into_state(self) -> FingerState {
+        self.state
+    }
+
+    /// Windows scored so far.
+    pub fn windows(&self) -> usize {
+        self.window
+    }
+
+    /// Resyncs performed by the drift-bounded schedule.
+    pub fn resyncs(&self) -> u64 {
+        self.resyncs
+    }
+
+    /// Largest |ΔQ| drift any resync corrected.
+    pub fn max_drift(&self) -> f64 {
+        self.max_drift
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::generators;
+    use crate::stream::event::StreamEvent as Ev;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn batcher_groups_and_flushes() {
+        let mut b = WindowBatcher::new();
+        assert!(b.push(Ev::EdgeDelta { i: 0, j: 1, dw: 1.0 }).is_none());
+        assert!(b.push(Ev::EdgeDelta { i: 2, j: 2, dw: 1.0 }).is_none()); // self-loop skipped
+        let (d, n) = b.push(Ev::Tick).unwrap();
+        assert_eq!(n, 3); // two edge events + the tick
+        assert_eq!(d.edge_deltas(), &[(0, 1, 1.0)]);
+        assert!(b.flush().is_none()); // nothing pending after a tick
+        b.push(Ev::GrowNodes { count: 2 });
+        let (d, n) = b.flush().unwrap();
+        assert_eq!((d.new_nodes(), n), (2, 1));
+    }
+
+    #[test]
+    fn detector_matches_trailing_rule() {
+        let mut det = AnomalyDetector::new(3.0, 8);
+        for _ in 0..6 {
+            assert!(!det.observe(1.0));
+        }
+        assert!(det.observe(100.0)); // huge spike vs σ≈0 trailing window
+        assert!(!det.observe(1.0));
+    }
+
+    #[test]
+    fn detector_window_clamped_so_it_can_still_fire() {
+        // window < 4 would otherwise never accumulate the 4 samples a
+        // decision requires — the constructor clamps it
+        let mut det = AnomalyDetector::new(3.0, 1);
+        for _ in 0..5 {
+            assert!(!det.observe(1.0));
+        }
+        assert!(det.observe(100.0));
+    }
+
+    #[test]
+    fn scorer_resyncs_on_schedule_without_changing_scores() {
+        let g = generators::erdos_renyi(40, 0.1, &mut Pcg64::new(9));
+        let mut rng = Pcg64::new(10);
+        let mut deltas = Vec::new();
+        for _ in 0..24 {
+            let mut d = DeltaGraph::new();
+            let i = rng.below(40) as u32;
+            let j = (i + 1 + rng.below(39) as u32) % 40;
+            if i != j {
+                d.add(i, j, rng.uniform(0.1, 1.0));
+            }
+            deltas.push(d.coalesced());
+        }
+        let mk = |resync: ResyncPolicy| {
+            WindowScorer::new(
+                FingerState::new(g.clone()),
+                AnomalyDetector::new(3.0, 24),
+                resync,
+            )
+        };
+        let mut with = mk(ResyncPolicy::every(4));
+        let mut without = mk(ResyncPolicy::disabled());
+        for d in &deltas {
+            let a = with.score(d, 1);
+            let b = without.score(d, 1);
+            // resync corrects float drift only; scores agree to tight tol
+            assert!((a.jsdist - b.jsdist).abs() < 1e-9);
+        }
+        assert!(with.resyncs() >= 2);
+        assert_eq!(without.resyncs(), 0);
+        assert!(with.max_drift() < 1e-8, "drift={}", with.max_drift());
+    }
+}

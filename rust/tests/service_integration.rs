@@ -1,0 +1,242 @@
+//! Sharded scoring service integration: deterministic cross-shard routing,
+//! no event loss under maximal backpressure (capacity-1 channels, many
+//! sessions), per-session scoring equivalence with the offline Algorithm-2
+//! loop, and checkpoint/restore round-trips through the service.
+
+use finger::distance::jsdist_incremental;
+use finger::entropy::FingerState;
+use finger::graph::Graph;
+use finger::service::{
+    shard_of, workload, ScoringService, ServiceConfig, TenantWorkloadConfig,
+};
+use finger::stream::{event::events_from_deltas, StreamEvent};
+use finger::util::Pcg64;
+
+fn small_workload(sessions: usize, windows: usize) -> Vec<workload::TenantStream> {
+    workload::tenant_streams(&TenantWorkloadConfig {
+        sessions,
+        windows,
+        events_per_window: 12,
+        nodes_per_session: 20,
+        seed: 0x7E57,
+    })
+}
+
+#[test]
+fn routing_is_deterministic_and_stable() {
+    // shard_for must agree with the free function, be stable across service
+    // instances, and be independent of submission order.
+    let cfg = ServiceConfig { shards: 4, ..Default::default() };
+    let a = ScoringService::start(cfg.clone());
+    let b = ScoringService::start(cfg);
+    for k in 0..64 {
+        let id = format!("tenant-{k}");
+        assert_eq!(a.shard_for(&id), shard_of(&id, 4));
+        assert_eq!(a.shard_for(&id), b.shard_for(&id));
+    }
+    a.finish();
+    b.finish();
+}
+
+#[test]
+fn no_event_loss_under_capacity_one_channels() {
+    // capacity-1 shard queues with many sessions and several producer
+    // threads: constant backpressure, yet every event must arrive.
+    let workload_data = small_workload(48, 6);
+    let total = workload::workload_events(&workload_data);
+    let cfg = ServiceConfig { shards: 3, channel_capacity: 1, ..Default::default() };
+    let report = workload::drive(&cfg, &workload_data, 6, false);
+    assert_eq!(report.total_events, total);
+    assert_eq!(report.dropped_events, 0);
+    assert_eq!(report.sessions.len(), 48);
+    let per_session: usize = report.sessions.iter().map(|s| s.events).sum();
+    assert_eq!(per_session, total, "every submitted event reaches its session");
+    for s in &report.sessions {
+        assert_eq!(s.records.len(), 6, "{}: every tick closes a window", s.id);
+    }
+}
+
+#[test]
+fn batched_ingest_loses_nothing_either() {
+    let workload_data = small_workload(32, 5);
+    let total = workload::workload_events(&workload_data);
+    let cfg = ServiceConfig { shards: 4, channel_capacity: 1, ..Default::default() };
+    let report = workload::drive(&cfg, &workload_data, 4, true);
+    assert_eq!(report.total_events, total);
+    assert_eq!(report.sessions.iter().map(|s| s.events).sum::<usize>(), total);
+}
+
+#[test]
+fn per_session_scores_match_offline_loop() {
+    // Whatever the interleaving across shards and producers, each session's
+    // scores must equal the direct single-threaded Algorithm-2 loop.
+    let workload_data = small_workload(12, 5);
+    let cfg = ServiceConfig { shards: 3, ..Default::default() };
+    let report = workload::drive(&cfg, &workload_data, 4, false);
+    for (id, initial, events) in &workload_data {
+        let session = report.session(id).expect("session scored");
+        // replay offline
+        let mut state = FingerState::new(initial.clone());
+        let mut batcher = finger::stream::WindowBatcher::new();
+        let mut offline = Vec::new();
+        for ev in events.iter().cloned() {
+            if let Some((delta, _)) = batcher.push(ev) {
+                offline.push(jsdist_incremental(&mut state, &delta));
+            }
+        }
+        assert_eq!(session.records.len(), offline.len(), "{id}");
+        for (r, js) in session.records.iter().zip(&offline) {
+            assert!((r.jsdist - js).abs() < 1e-12, "{id} window {}", r.window);
+        }
+        assert!((session.htilde - state.htilde()).abs() < 1e-12, "{id}");
+    }
+}
+
+#[test]
+fn service_matches_single_stream_pipeline() {
+    // one session through the service == the same stream through Pipeline
+    let g = finger::generators::erdos_renyi(40, 0.1, &mut Pcg64::new(3));
+    let mut deltas = Vec::new();
+    let mut rng = Pcg64::new(4);
+    for _ in 0..8 {
+        let mut d = finger::graph::DeltaGraph::new();
+        for _ in 0..5 {
+            let i = rng.below(40) as u32;
+            let j = (i + 1 + rng.below(39) as u32) % 40;
+            if i != j {
+                d.add(i, j, rng.uniform(0.1, 1.0));
+            }
+        }
+        deltas.push(d.coalesced());
+    }
+    let events = events_from_deltas(&deltas);
+    let pipeline_res = finger::stream::Pipeline::new(
+        g.clone(),
+        finger::stream::PipelineConfig::default(),
+    )
+    .run(events.clone());
+
+    let svc = ScoringService::start(ServiceConfig { shards: 2, ..Default::default() });
+    svc.open_session("solo", g).unwrap();
+    svc.submit_all("solo", events).unwrap();
+    let report = svc.finish();
+    let session = report.session("solo").unwrap();
+    assert_eq!(session.records.len(), pipeline_res.records.len());
+    for (a, b) in session.records.iter().zip(&pipeline_res.records) {
+        assert!((a.jsdist - b.jsdist).abs() < 1e-12);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.anomalous, b.anomalous);
+    }
+}
+
+#[test]
+fn checkpoint_restore_roundtrip_preserves_htilde_per_session() {
+    let dir = std::env::temp_dir().join("finger_service_ckpt_it");
+    std::fs::remove_dir_all(&dir).ok();
+    let workload_data = small_workload(10, 4);
+    let cfg = ServiceConfig {
+        shards: 2,
+        checkpoint_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let first = workload::drive(&cfg, &workload_data, 2, true);
+    assert_eq!(first.sessions.len(), 10);
+
+    // restore into a fresh service and finish immediately: states must match
+    let svc = ScoringService::start(ServiceConfig { shards: 3, ..Default::default() });
+    let restored = svc.restore_sessions(&dir).unwrap();
+    assert_eq!(restored, 10);
+    let resumed = svc.finish();
+    assert_eq!(resumed.sessions.len(), 10);
+    for s in &resumed.sessions {
+        let orig = first.session(&s.id).expect("restored id matches checkpointed id");
+        assert!(
+            (s.htilde - orig.htilde).abs() < 1e-12,
+            "{}: {} vs {}",
+            s.id,
+            s.htilde,
+            orig.htilde
+        );
+        assert_eq!(s.nodes, orig.nodes);
+        assert_eq!(s.edges, orig.edges);
+    }
+
+    // restore then continue == run uninterrupted (per session)
+    let extra: Vec<StreamEvent> = vec![
+        StreamEvent::EdgeDelta { i: 0, j: 1, dw: 0.7 },
+        StreamEvent::EdgeDelta { i: 1, j: 2, dw: 0.3 },
+        StreamEvent::Tick,
+    ];
+    let svc = ScoringService::start(ServiceConfig { shards: 2, ..Default::default() });
+    svc.restore_sessions(&dir).unwrap();
+    for (id, _, _) in &workload_data {
+        svc.submit_all(id, extra.clone()).unwrap();
+    }
+    let continued = svc.finish();
+    for (id, initial, events) in &workload_data {
+        let mut state = FingerState::new(initial.clone());
+        let mut batcher = finger::stream::WindowBatcher::new();
+        for ev in events.iter().cloned().chain(extra.iter().cloned()) {
+            if let Some((delta, _)) = batcher.push(ev) {
+                jsdist_incremental(&mut state, &delta);
+            }
+        }
+        let s = continued.session(id).unwrap();
+        assert!(
+            (s.htilde - state.htilde()).abs() < 1e-10,
+            "{id}: {} vs {}",
+            s.htilde,
+            state.htilde()
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn growing_sessions_route_and_score() {
+    // sessions that grow their node set mid-stream (GrowNodes) work through
+    // the service exactly as through a direct state
+    let svc = ScoringService::start(ServiceConfig { shards: 2, ..Default::default() });
+    svc.open_session("grow", Graph::new(2)).unwrap();
+    svc.submit("grow", StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 }).unwrap();
+    svc.submit("grow", StreamEvent::Tick).unwrap();
+    svc.submit("grow", StreamEvent::GrowNodes { count: 3 }).unwrap();
+    svc.submit("grow", StreamEvent::EdgeDelta { i: 3, j: 4, dw: 2.0 }).unwrap();
+    svc.submit("grow", StreamEvent::Tick).unwrap();
+    let report = svc.finish();
+    let s = report.session("grow").unwrap();
+    assert_eq!(s.nodes, 5);
+    assert_eq!(s.edges, 2);
+    assert_eq!(s.records.len(), 2);
+}
+
+#[test]
+fn per_session_anomalies_are_isolated() {
+    // a burst in one session must not flag the others
+    let quiet: Vec<StreamEvent> = (0..10)
+        .flat_map(|_| {
+            vec![StreamEvent::EdgeDelta { i: 0, j: 1, dw: 0.01 }, StreamEvent::Tick]
+        })
+        .collect();
+    let mut noisy = quiet.clone();
+    // burst in the final window
+    noisy.pop();
+    for k in 0..400u32 {
+        noisy.push(StreamEvent::EdgeDelta { i: k % 20, j: (k * 3 + 1) % 20, dw: 1.0 });
+    }
+    noisy.push(StreamEvent::Tick);
+
+    let svc = ScoringService::start(ServiceConfig { shards: 2, ..Default::default() });
+    let base = finger::generators::erdos_renyi(20, 0.2, &mut Pcg64::new(17));
+    svc.open_session("quiet", base.clone()).unwrap();
+    svc.open_session("noisy", base).unwrap();
+    svc.submit_all("quiet", quiet).unwrap();
+    svc.submit_all("noisy", noisy).unwrap();
+    let report = svc.finish();
+    assert!(report.session("quiet").unwrap().anomalies.is_empty());
+    assert!(
+        report.session("noisy").unwrap().anomalies.contains(&9),
+        "burst window flagged: {:?}",
+        report.session("noisy").unwrap().anomalies
+    );
+}

@@ -1,0 +1,204 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The offline registry used to build this repo carries no general crate
+//! closure, so the small API subset `finger` relies on is implemented here:
+//! [`Error`] (message + context chain), [`Result`], the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros, and the [`Context`] extension trait for
+//! `Result` and `Option`. Like the real crate, `Error` deliberately does NOT
+//! implement `std::error::Error`, which is what lets the blanket
+//! `From<E: std::error::Error>` impl coexist with `?` conversions.
+
+use std::fmt;
+
+/// Error: a boxed cause (or plain message) plus a stack of context strings.
+pub struct Error {
+    /// Context messages, outermost last (pushed by [`Context`] adapters).
+    context: Vec<String>,
+    /// The root cause, if this error wraps a std error.
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+    /// The root message when constructed from a string (`anyhow!`/`bail!`).
+    message: Option<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { context: Vec::new(), source: None, message: Some(message.to_string()) }
+    }
+
+    /// Construct from a std error, preserving it as the root cause.
+    pub fn new<E>(error: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Self { context: Vec::new(), source: Some(Box::new(error)), message: None }
+    }
+
+    /// Push an outer context message (innermost cause stays last in `{:#}`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.context.push(context.to_string());
+        self
+    }
+
+    fn root(&self) -> String {
+        match (&self.message, &self.source) {
+            (Some(m), _) => m.clone(),
+            (None, Some(s)) => s.to_string(),
+            (None, None) => "unknown error".to_string(),
+        }
+    }
+
+    /// The chain outermost-first: contexts in reverse push order, then root.
+    fn chain_strings(&self) -> Vec<String> {
+        let mut out: Vec<String> = self.context.iter().rev().cloned().collect();
+        out.push(self.root());
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_strings();
+        if f.alternate() {
+            // `{:#}` — the full chain, anyhow's "error: cause: cause" style.
+            write!(f, "{}", chain.join(": "))
+        } else {
+            write!(f, "{}", chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let chain = self.chain_strings();
+        write!(f, "{}", chain[0])?;
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `Result` with a defaulted error type, as in the real crate.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from format args.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format args.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/finger")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_chains_format() {
+        let e: Result<()> = io_fail().context("reading config");
+        let err = e.unwrap_err();
+        let full = format!("{err:#}");
+        assert!(full.starts_with("reading config: "), "{full}");
+        let brief = format!("{err}");
+        assert_eq!(brief, "reading config");
+    }
+
+    #[test]
+    fn option_context() {
+        let x: Option<u32> = None;
+        let e = x.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(v: i32) -> Result<i32> {
+            ensure!(v >= 0, "negative: {v}");
+            if v == 3 {
+                bail!("three is right out");
+            }
+            Ok(v)
+        }
+        assert!(f(-1).is_err());
+        assert!(f(3).is_err());
+        assert_eq!(f(2).unwrap(), 2);
+        let e = anyhow!("n={}", 7);
+        assert_eq!(format!("{e}"), "n=7");
+    }
+}
