@@ -19,6 +19,7 @@ fn main() {
         events_per_window: args.get_parsed("events", 50usize).max(1),
         nodes_per_session: args.get_parsed("nodes", 48usize).max(2),
         seed: args.get_parsed("seed", 0xABCDu64),
+        ..Default::default()
     };
     let svc_cfg = ServiceConfig {
         shards: args.get_parsed("shards", 8usize).max(1),

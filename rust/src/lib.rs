@@ -8,9 +8,10 @@
 //!   substrate, exact and approximate VNGE, Jensen–Shannon graph distance,
 //!   eleven baseline dissimilarity methods, anomaly/bifurcation evaluation,
 //!   a threaded streaming pipeline, a sharded multi-session scoring service
-//!   (`service`), and a PJRT runtime that executes AOT-compiled XLA
-//!   artifacts (built once by `make artifacts`; gated behind the `xla`
-//!   cargo feature).
+//!   (`service`), a line-protocol TCP front end + load driver putting that
+//!   service on a socket (`net`), and a PJRT runtime that executes
+//!   AOT-compiled XLA artifacts (built once by `make artifacts`; gated
+//!   behind the `xla` cargo feature).
 //! * **L2 (python/compile/model.py)** — dense JAX compute graphs (Q-statistics,
 //!   FINGER-Ĥ, JS distance) lowered to HLO text at fixed sizes.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (tiled mat-vec and
@@ -44,6 +45,7 @@ pub mod entropy;
 pub mod generators;
 pub mod graph;
 pub mod linalg;
+pub mod net;
 pub mod runtime;
 pub mod service;
 pub mod stream;

@@ -11,16 +11,22 @@
 //!   sweep        Fig 1 / Fig 2 approximation sweeps
 //!   serve-bench  drive a synthetic multi-tenant workload through the
 //!                sharded scoring service across shard counts
+//!   serve        put the scoring service on a TCP socket (line protocol,
+//!                see docs/PROTOCOL.md); runs until a SHUTDOWN request
+//!   load         replay a multi-tenant workload (dataset presets included)
+//!                against a running `serve` over N concurrent connections
 //!   offload      cross-check the XLA artifact path against native Rust
 
 use anyhow::{bail, Context, Result};
+use finger::bench::{self, BenchRecord};
 use finger::cli::{Args, Config};
 use finger::coordinator::experiments::{self, GraphModel};
 use finger::coordinator::report;
 use finger::datasets::{HicConfig, OregonConfig, WikiConfig};
 use finger::entropy::{exact_vnge, finger_hhat, finger_htilde};
 use finger::graph::{io as gio, Graph};
-use finger::service::{workload, ServiceConfig, TenantWorkloadConfig};
+use finger::net::{traffic, NetClient, NetConfig, NetServer, TrafficConfig};
+use finger::service::{workload, ServiceConfig, TenantPreset, TenantWorkloadConfig};
 use finger::stream::{event, Pipeline, PipelineConfig};
 use finger::util::Pcg64;
 
@@ -42,6 +48,8 @@ fn run(args: &Args) -> Result<()> {
         Some("dos") => cmd_dos(args),
         Some("sweep") => cmd_sweep(args),
         Some("serve-bench") => cmd_serve_bench(args),
+        Some("serve") => cmd_serve(args),
+        Some("load") => cmd_load(args),
         Some("offload") => cmd_offload(args),
         Some(other) => bail!("unknown subcommand `{other}` (try --help)"),
         None => {
@@ -68,6 +76,12 @@ fn print_help() {
            serve-bench [--sessions N] [--shards 1,2,4] [--windows W] [--events E]\n\
                        [--nodes N] [--capacity C] [--producers P] [--seed S]\n\
                        [--config run.toml] [--per-event]\n\
+           serve       [--addr 127.0.0.1:7341] [--shards N] [--capacity C]\n\
+                       [--config run.toml]   (config sections: [service], [net])\n\
+           load        [--addr 127.0.0.1:7341] [--connections 1,2,4,8]\n\
+                       [--sessions N] [--windows W] [--events E] [--nodes N]\n\
+                       [--presets wiki,dos,hic,synthetic] [--seed S]\n\
+                       [--bench-out BENCH_net.json] [--config run.toml] [--shutdown]\n\
            offload     [--artifacts DIR]"
     );
 }
@@ -247,6 +261,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         events_per_window: args.get_parsed("events", 60usize).max(1),
         nodes_per_session: args.get_parsed("nodes", 64usize).max(2),
         seed: args.get_parsed("seed", 0x5E55u64),
+        ..Default::default()
     };
     let shard_counts = args.get_list("shards", &[1usize, 2, 4]);
     let capacity = args.get_parsed("capacity", base.channel_capacity);
@@ -282,6 +297,127 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
             report.throughput,
             speedup,
         );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let config = match args.get("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::default(),
+    };
+    let mut service_cfg = ServiceConfig::from_config(&config);
+    service_cfg.shards = args.get_parsed("shards", service_cfg.shards).max(1);
+    service_cfg.channel_capacity =
+        args.get_parsed("capacity", service_cfg.channel_capacity).max(1);
+    let mut net_cfg = NetConfig::from_config(&config);
+    if let Some(addr) = args.get("addr") {
+        net_cfg.addr = addr.to_string();
+    }
+    let server = NetServer::bind(service_cfg.clone(), net_cfg)?;
+    println!(
+        "serve: listening on {} ({} shards, capacity {}); send SHUTDOWN to stop",
+        server.local_addr(),
+        service_cfg.shards,
+        service_cfg.channel_capacity,
+    );
+    let report = server.run()?;
+    println!(
+        "serve: drained — {} sessions, {} events ({} dropped), {} windows, \
+         {} anomalies, {:.0} events/s over {}",
+        report.sessions.len(),
+        report.total_events,
+        report.dropped_events,
+        report.total_windows(),
+        report.total_anomalies(),
+        report.throughput,
+        finger::util::fmt::secs(report.wall_secs),
+    );
+    Ok(())
+}
+
+fn cmd_load(args: &Args) -> Result<()> {
+    let config = match args.get("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::default(),
+    };
+    let mut net_cfg = NetConfig::from_config(&config);
+    if let Some(addr) = args.get("addr") {
+        net_cfg.addr = addr.to_string();
+    }
+    let presets = match args.get("presets") {
+        None => Vec::new(),
+        Some(raw) => TenantPreset::parse_list(raw)
+            .with_context(|| format!("unknown preset in {raw:?} (want synthetic|wiki|dos|hic)"))?,
+    };
+    let workload = TenantWorkloadConfig {
+        sessions: args.get_parsed("sessions", 64usize).max(1),
+        windows: args.get_parsed("windows", 8usize).max(1),
+        events_per_window: args.get_parsed("events", 40usize).max(1),
+        nodes_per_session: args.get_parsed("nodes", 48usize).max(2),
+        presets,
+        seed: args.get_parsed("seed", 0x5E55u64),
+    };
+    let connection_counts = args.get_list("connections", &[1usize, 2, 4, 8]);
+    println!(
+        "load: {} sessions ({} presets) × {} windows against {} — \
+         connection sweep {:?}",
+        workload.sessions,
+        traffic::preset_summary(&workload),
+        workload.windows,
+        net_cfg.addr,
+        connection_counts,
+    );
+    println!(
+        "{:<12} {:>12} {:>12} {:>12} {:>14}",
+        "connections", "events", "windows", "wall", "events/s"
+    );
+    let mut records = Vec::new();
+    let mut total_windows = 0usize;
+    for &connections in &connection_counts {
+        let report = traffic::run_load(&TrafficConfig {
+            addr: net_cfg.addr.clone(),
+            connections,
+            workload: workload.clone(),
+            query_sessions: true,
+            shutdown_after: false,
+        })?;
+        total_windows += report.windows;
+        println!(
+            "{:<12} {:>12} {:>12} {:>12} {:>14.0}",
+            report.connections,
+            report.events_sent,
+            report.windows,
+            finger::util::fmt::secs(report.wall_secs),
+            report.events_per_sec,
+        );
+        // label records with the connection count that actually ran —
+        // replay() clamps the request to the tenant count
+        let conns = report.connections;
+        if conns != connections {
+            println!("  (requested {connections} connections, clamped to {conns})");
+        }
+        records.push(BenchRecord::metric(
+            format!("net_throughput_conns_{conns}"),
+            report.events_per_sec,
+            "events_per_sec",
+        ));
+        records.push(BenchRecord::metric(
+            format!("net_windows_conns_{conns}"),
+            report.windows as f64,
+            "windows",
+        ));
+    }
+    if args.flag("shutdown") {
+        NetClient::connect(net_cfg.addr.as_str())?.shutdown_server()?;
+        println!("load: sent SHUTDOWN to {}", net_cfg.addr);
+    }
+    let out = args.get("bench-out").unwrap_or("BENCH_net.json");
+    bench::write_json_report(out, "net_load", &records)
+        .with_context(|| format!("write {out}"))?;
+    println!("load: wrote {} records to {out}", records.len());
+    if total_windows == 0 {
+        bail!("load drove zero windows — server scored nothing");
     }
     Ok(())
 }

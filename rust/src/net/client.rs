@@ -1,0 +1,146 @@
+//! Small blocking client for the line protocol — used by the load driver
+//! (`net::traffic`), the integration tests and `examples/tcp_traffic.rs`.
+//!
+//! One request, one reply: every helper writes a line (a `BATCH` writes the
+//! header plus its body in a single buffered syscall) and blocks on the
+//! one-line response. Protocol-level failures surface as `anyhow` errors
+//! carrying the server's `ERR` reason.
+
+use super::proto::{snapshot_from_response, Request, Response};
+use crate::service::SessionSnapshot;
+use crate::stream::StreamEvent;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// Per-shard queue depths and service totals from the `STATS` verb.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetStats {
+    pub shards: usize,
+    /// Messages in flight per shard (queued + being processed).
+    pub depths: Vec<usize>,
+    /// Events the service accepted so far.
+    pub submitted: usize,
+}
+
+/// A blocking connection to a `finger serve` instance.
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl NetClient {
+    pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<Self> {
+        let stream =
+            TcpStream::connect(&addr).with_context(|| format!("connect {addr:?}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone().context("clone stream")?);
+        Ok(Self { reader, writer: stream })
+    }
+
+    /// Send raw bytes (already newline-terminated) and read one reply line.
+    /// Exposed for protocol tests; normal callers use the typed helpers.
+    pub fn roundtrip_raw(&mut self, payload: &str) -> Result<Response> {
+        self.writer.write_all(payload.as_bytes()).context("send")?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).context("read reply")?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        Response::parse(&line).map_err(anyhow::Error::msg)
+    }
+
+    fn roundtrip(&mut self, req: &Request) -> Result<Response> {
+        let mut line = req.to_line();
+        line.push('\n');
+        self.roundtrip_raw(&line)
+    }
+
+    /// Like `roundtrip`, but converts `ERR` replies into errors.
+    fn expect_ok(&mut self, req: &Request) -> Result<Response> {
+        match self.roundtrip(req)? {
+            Response::Err(reason) => bail!("server: {reason}"),
+            ok => Ok(ok),
+        }
+    }
+
+    /// (Re)open `id` with a fresh `nodes`-node empty graph.
+    pub fn open(&mut self, id: &str, nodes: usize) -> Result<()> {
+        self.expect_ok(&Request::Open { id: id.to_string(), nodes })?;
+        Ok(())
+    }
+
+    /// Submit one event.
+    pub fn send_event(&mut self, id: &str, ev: &StreamEvent) -> Result<()> {
+        self.expect_ok(&Request::Event { id: id.to_string(), ev: ev.clone() })?;
+        Ok(())
+    }
+
+    /// Submit a whole batch as one header + body write and one reply read.
+    /// Returns the number of events the server accepted.
+    pub fn send_batch(&mut self, id: &str, events: &[StreamEvent]) -> Result<usize> {
+        if events.is_empty() {
+            return Ok(0);
+        }
+        let header = Request::Batch { id: id.to_string(), count: events.len() };
+        let mut payload = header.to_line();
+        payload.push('\n');
+        for ev in events {
+            payload.push_str(&ev.to_line());
+            payload.push('\n');
+        }
+        let resp = self.roundtrip_raw(&payload)?;
+        match resp {
+            Response::Err(reason) => bail!("server: {reason}"),
+            ok => ok
+                .get_parsed("accepted")
+                .context("BATCH reply missing accepted count"),
+        }
+    }
+
+    /// Point-in-time stats of `id`; `None` if the server knows no such
+    /// session.
+    pub fn query(&mut self, id: &str) -> Result<Option<SessionSnapshot>> {
+        match self.roundtrip(&Request::Query { id: id.to_string() })? {
+            Response::Err(reason) if reason == "unknown-session" => Ok(None),
+            Response::Err(reason) => bail!("server: {reason}"),
+            ok => Ok(Some(
+                snapshot_from_response(id, &ok).context("malformed QUERY reply")?,
+            )),
+        }
+    }
+
+    /// Per-shard queue depths and totals.
+    pub fn stats(&mut self) -> Result<NetStats> {
+        let resp = self.expect_ok(&Request::Stats)?;
+        let depths_raw = resp.get("depths").context("STATS reply missing depths")?;
+        let depths: Vec<usize> = if depths_raw.is_empty() {
+            Vec::new()
+        } else {
+            depths_raw
+                .split(',')
+                .map(|d| d.parse().map_err(|_| anyhow::anyhow!("bad depth {d:?}")))
+                .collect::<Result<_>>()?
+        };
+        Ok(NetStats {
+            shards: resp.get_parsed("shards").context("STATS reply missing shards")?,
+            depths,
+            submitted: resp
+                .get_parsed("submitted")
+                .context("STATS reply missing submitted")?,
+        })
+    }
+
+    /// Close this connection politely (the server keeps running).
+    pub fn quit(mut self) -> Result<()> {
+        self.expect_ok(&Request::Quit)?;
+        Ok(())
+    }
+
+    /// Ask the server to drain and stop. The connection is closed by the
+    /// server after the `OK`.
+    pub fn shutdown_server(mut self) -> Result<()> {
+        self.expect_ok(&Request::Shutdown)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,54 @@
+//! Network front end — the scoring service on a socket.
+//!
+//! FINGER's per-update cheapness (Theorem 2 / Algorithm 2) is what makes a
+//! *per-event network service* viable: each arriving delta costs O(|ΔG|),
+//! so events can be scored as they arrive from outside the process instead
+//! of in post-hoc batch jobs. This module turns the in-process sharded
+//! [`ScoringService`](crate::service::ScoringService) into exactly that — a
+//! line-protocol TCP server plus the client and load-driver tooling around
+//! it. Everything is `std::net` + threads: no async runtime dependency.
+//!
+//! # Architecture
+//!
+//! ```text
+//!            TCP (line protocol, one reply per request)
+//!  client ──────────────┐
+//!  client ────────────┐ │        ┌────────────────────────────────────┐
+//!  finger load ─────┐ │ │        │              NetServer             │
+//!   (N connections) │ │ │        │                                    │
+//!                   ▼ ▼ ▼        │  accept loop ──► conn thread 0 ──┐ │
+//!               OPEN/EV/BATCH ──►│                  conn thread 1 ──┤ │
+//!               QUERY/STATS      │                  conn thread k ──┤ │
+//!               QUIT/SHUTDOWN    │   parse → try_submit (backoff)   │ │
+//!                                └──────────────────────────────────┼─┘
+//!                                                                   ▼
+//!                                   ScoringService  hash(id) % shards
+//!                                   shard 0 │ shard 1 │ … │ shard N-1
+//!                                   (bounded queues, SessionRegistry,
+//!                                    batcher → scorer → anomaly)
+//! ```
+//!
+//! * [`proto`] — the session-scoped wire protocol: `OPEN`/`EV`/`BATCH`/
+//!   `QUERY`/`STATS`/`QUIT`/`SHUTDOWN`, one-line `OK`/`ERR` replies, event
+//!   payloads in the [`StreamEvent`](crate::stream::StreamEvent) text
+//!   format. Spec: `docs/PROTOCOL.md`.
+//! * [`server`] — [`NetServer`]: thread-per-connection readers feeding the
+//!   shared service through the non-blocking submit API, per-connection
+//!   error isolation, graceful drain returning the final
+//!   [`ServiceReport`](crate::service::ServiceReport).
+//! * [`client`] — [`NetClient`]: small blocking client (tests, tooling).
+//! * [`traffic`] — the load driver: replays multi-tenant workloads
+//!   (including wiki/DoS/Hi-C dataset presets) over N concurrent
+//!   connections and reports end-to-end events/s.
+
+pub mod client;
+pub mod proto;
+pub mod server;
+pub mod traffic;
+
+pub use client::{NetClient, NetStats};
+pub use proto::{
+    parse_wire_event, Request, Response, DEFAULT_ADDR, MAX_BATCH, MAX_LINE, MAX_OPEN_NODES,
+};
+pub use server::{NetConfig, NetServer, ShutdownHandle};
+pub use traffic::{replay, run_load, TrafficConfig, TrafficReport};

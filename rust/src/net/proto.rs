@@ -1,0 +1,363 @@
+//! The session-scoped line protocol (see `docs/PROTOCOL.md` for the spec).
+//!
+//! Every request and every reply is exactly one `\n`-terminated UTF-8 line.
+//! Event payloads reuse the [`StreamEvent`] text format (`e i j dw` |
+//! `n count` | `t`), so a delta-stream file can be replayed over the wire
+//! verbatim. Session ids travel in their [`encode_session_id`] form — the
+//! encoding is injective and produces no whitespace, so ids containing
+//! spaces or arbitrary bytes survive tokenization exactly.
+//!
+//! Parsing is strict: unknown verbs, arity mismatches, malformed ids and
+//! semantically poisonous events (non-finite `dw`, self-loops — rejected by
+//! the hardened [`StreamEvent::parse`]) all yield a one-line `ERR <reason>`
+//! and nothing else, so one bad line never desynchronizes the connection.
+
+use crate::service::{decode_session_id, encode_session_id, SessionSnapshot};
+use crate::stream::StreamEvent;
+
+/// Upper bound on the `BATCH` event count: a hostile header can not make the
+/// server buffer unbounded memory. Generous — the in-process driver batches
+/// one window (tens to thousands of events) per message.
+pub const MAX_BATCH: usize = 1 << 20;
+
+/// Upper bound on one request line's byte length (a `BATCH` body line is a
+/// plain event line, far below this).
+pub const MAX_LINE: usize = 64 * 1024;
+
+/// Upper bound on `OPEN`'s node count: a hostile header can not make the
+/// server allocate an arbitrarily large initial graph.
+pub const MAX_OPEN_NODES: usize = 1 << 24;
+
+/// Default listen address of `finger serve`.
+pub const DEFAULT_ADDR: &str = "127.0.0.1:7341";
+
+/// One parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// `OPEN <id> <n>` — (re)open `id` with a fresh `n`-node empty graph.
+    Open { id: String, nodes: usize },
+    /// `EV <id> <event-line>` — one stream event for `id`.
+    Event { id: String, ev: StreamEvent },
+    /// `BATCH <id> <k>` — header announcing `k` raw event lines that follow.
+    Batch { id: String, count: usize },
+    /// `QUERY <id>` — point-in-time stats of a live session.
+    Query { id: String },
+    /// `STATS` — per-shard queue depths and service totals.
+    Stats,
+    /// `QUIT` — close this connection (the server keeps running).
+    Quit,
+    /// `SHUTDOWN` — gracefully stop the whole server: drain every shard and
+    /// produce the final `ServiceReport`.
+    Shutdown,
+}
+
+fn wire_id(token: Option<&str>, verb: &str) -> Result<String, String> {
+    let tok = token.ok_or_else(|| format!("{verb}: missing <id>"))?;
+    decode_session_id(tok).ok_or_else(|| format!("{verb}: malformed <id> encoding"))
+}
+
+fn wire_usize(token: Option<&str>, verb: &str, what: &str) -> Result<usize, String> {
+    token
+        .ok_or_else(|| format!("{verb}: missing <{what}>"))?
+        .parse()
+        .map_err(|_| format!("{verb}: invalid <{what}>"))
+}
+
+fn no_more(mut it: std::str::SplitWhitespace<'_>, verb: &str) -> Result<(), String> {
+    match it.next() {
+        Some(_) => Err(format!("{verb}: unexpected trailing tokens")),
+        None => Ok(()),
+    }
+}
+
+/// Parse one event line from untrusted wire input: syntactic validity
+/// (via the hardened [`StreamEvent::parse`]) plus resource bounds — node
+/// endpoints and grow counts share `OPEN`'s [`MAX_OPEN_NODES`] cap, so no
+/// single valid-syntax line can make a shard worker allocate an absurd
+/// graph (an `e 0 4294967295 0.5` would otherwise grow the node set to the
+/// max id on the next tick). Used by the `EV` verb and `BATCH` body lines.
+pub fn parse_wire_event(line: &str) -> Result<StreamEvent, &'static str> {
+    let ev = StreamEvent::parse(line)
+        .ok_or("bad event (want `e i j dw` | `n count` | `t`; dw finite, i != j)")?;
+    match ev {
+        StreamEvent::EdgeDelta { i, j, .. }
+            if i as usize >= MAX_OPEN_NODES || j as usize >= MAX_OPEN_NODES =>
+        {
+            Err("node id exceeds maximum")
+        }
+        StreamEvent::GrowNodes { count } if count > MAX_OPEN_NODES => {
+            Err("grow count exceeds maximum")
+        }
+        ev => Ok(ev),
+    }
+}
+
+impl Request {
+    /// Parse one request line. The error string is the `ERR` reason sent
+    /// back to the client (always a single line).
+    pub fn parse(line: &str) -> Result<Self, String> {
+        if line.len() > MAX_LINE {
+            return Err("line too long".to_string());
+        }
+        let mut it = line.split_whitespace();
+        let verb = it.next().ok_or("empty line")?;
+        match verb {
+            "OPEN" => {
+                let id = wire_id(it.next(), verb)?;
+                let nodes = wire_usize(it.next(), verb, "n")?;
+                no_more(it, verb)?;
+                if nodes > MAX_OPEN_NODES {
+                    return Err(format!("OPEN: n exceeds maximum {MAX_OPEN_NODES}"));
+                }
+                Ok(Request::Open { id, nodes })
+            }
+            "EV" => {
+                let id = wire_id(it.next(), verb)?;
+                let ev_line: Vec<&str> = it.collect();
+                let ev = parse_wire_event(&ev_line.join(" "))
+                    .map_err(|e| format!("EV: {e}"))?;
+                Ok(Request::Event { id, ev })
+            }
+            "BATCH" => {
+                let id = wire_id(it.next(), verb)?;
+                let count = wire_usize(it.next(), verb, "k")?;
+                no_more(it, verb)?;
+                if count > MAX_BATCH {
+                    return Err(format!("BATCH: k exceeds maximum {MAX_BATCH}"));
+                }
+                Ok(Request::Batch { id, count })
+            }
+            "QUERY" => {
+                let id = wire_id(it.next(), verb)?;
+                no_more(it, verb)?;
+                Ok(Request::Query { id })
+            }
+            "STATS" => no_more(it, verb).map(|()| Request::Stats),
+            "QUIT" => no_more(it, verb).map(|()| Request::Quit),
+            "SHUTDOWN" => no_more(it, verb).map(|()| Request::Shutdown),
+            other => Err(format!("unknown verb `{other}`")),
+        }
+    }
+
+    /// Serialize to the wire line (no trailing newline). For
+    /// [`Request::Batch`] this is only the header — the `count` event lines
+    /// follow separately via [`StreamEvent::to_line`].
+    pub fn to_line(&self) -> String {
+        match self {
+            Request::Open { id, nodes } => {
+                format!("OPEN {} {nodes}", encode_session_id(id))
+            }
+            Request::Event { id, ev } => {
+                format!("EV {} {}", encode_session_id(id), ev.to_line())
+            }
+            Request::Batch { id, count } => {
+                format!("BATCH {} {count}", encode_session_id(id))
+            }
+            Request::Query { id } => format!("QUERY {}", encode_session_id(id)),
+            Request::Stats => "STATS".to_string(),
+            Request::Quit => "QUIT".to_string(),
+            Request::Shutdown => "SHUTDOWN".to_string(),
+        }
+    }
+}
+
+/// One server reply line: `OK [key=value ...]` or `ERR <reason>`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Success, with ordered `key=value` detail pairs (possibly none).
+    Ok(Vec<(String, String)>),
+    /// Failure; the reason is free text on the rest of the line.
+    Err(String),
+}
+
+impl Response {
+    pub fn ok() -> Self {
+        Response::Ok(Vec::new())
+    }
+
+    /// Parse one reply line.
+    pub fn parse(line: &str) -> Result<Self, String> {
+        let line = line.trim_end_matches(['\r', '\n']);
+        if let Some(rest) = line.strip_prefix("ERR") {
+            return Ok(Response::Err(rest.trim().to_string()));
+        }
+        let rest = match line.strip_prefix("OK") {
+            Some(r) => r,
+            None => return Err(format!("malformed reply: {line:?}")),
+        };
+        let mut pairs = Vec::new();
+        for tok in rest.split_whitespace() {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("malformed OK pair: {tok:?}"))?;
+            pairs.push((k.to_string(), v.to_string()));
+        }
+        Ok(Response::Ok(pairs))
+    }
+
+    /// Serialize to the wire line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        match self {
+            Response::Ok(pairs) if pairs.is_empty() => "OK".to_string(),
+            Response::Ok(pairs) => {
+                let body: Vec<String> =
+                    pairs.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                format!("OK {}", body.join(" "))
+            }
+            Response::Err(reason) => format!("ERR {reason}"),
+        }
+    }
+
+    /// Value of `key` in an `OK` reply.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        match self {
+            Response::Ok(pairs) => {
+                pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+            }
+            Response::Err(_) => None,
+        }
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// Encode a session snapshot as `QUERY`'s `OK` reply. Floats use Rust's
+/// shortest-roundtrip `Display`, so the client re-parses them bit-for-bit.
+pub fn snapshot_response(s: &SessionSnapshot) -> Response {
+    let mut pairs = vec![
+        ("windows".to_string(), s.windows.to_string()),
+        ("events".to_string(), s.events.to_string()),
+        ("htilde".to_string(), s.htilde.to_string()),
+        ("nodes".to_string(), s.nodes.to_string()),
+        ("edges".to_string(), s.edges.to_string()),
+        ("anomalies".to_string(), s.anomalies.to_string()),
+        ("pending".to_string(), s.pending_events.to_string()),
+        ("anomalous".to_string(), (s.last_anomalous as u8).to_string()),
+    ];
+    if let Some(js) = s.last_jsdist {
+        pairs.push(("jsdist".to_string(), js.to_string()));
+    }
+    Response::Ok(pairs)
+}
+
+/// Decode `QUERY`'s `OK` reply back into a snapshot (the id is supplied by
+/// the caller — it does not travel in the reply).
+pub fn snapshot_from_response(id: &str, r: &Response) -> Option<SessionSnapshot> {
+    Some(SessionSnapshot {
+        id: id.to_string(),
+        windows: r.get_parsed("windows")?,
+        events: r.get_parsed("events")?,
+        last_jsdist: r.get_parsed::<f64>("jsdist"),
+        last_anomalous: r.get_parsed::<u8>("anomalous")? != 0,
+        htilde: r.get_parsed("htilde")?,
+        nodes: r.get_parsed("nodes")?,
+        edges: r.get_parsed("edges")?,
+        anomalies: r.get_parsed("anomalies")?,
+        pending_events: r.get_parsed("pending")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        for req in [
+            Request::Open { id: "tenant/1 x".to_string(), nodes: 64 },
+            Request::Event {
+                id: "a".to_string(),
+                ev: StreamEvent::EdgeDelta { i: 3, j: 7, dw: -1.25 },
+            },
+            Request::Event { id: "a".to_string(), ev: StreamEvent::Tick },
+            Request::Batch { id: "b".to_string(), count: 12 },
+            Request::Query { id: "a".to_string() },
+            Request::Stats,
+            Request::Quit,
+            Request::Shutdown,
+        ] {
+            assert_eq!(Request::parse(&req.to_line()), Ok(req));
+        }
+    }
+
+    #[test]
+    fn request_rejects_malformed_lines() {
+        for bad in [
+            "",
+            "NOPE",
+            "OPEN",
+            "OPEN a",
+            "OPEN a x",
+            "OPEN a 4 extra",
+            "EV a",
+            "EV a e 1 1 0.5",     // self-loop
+            "EV a e 1 2 NaN",     // poisonous delta
+            "EV a e 1 2 0.5 0.7", // fused events (trailing tokens)
+            "EV a x 1 2",
+            "BATCH a",
+            "BATCH a -1",
+            "QUERY",
+            "STATS extra",
+            "QUIT now",
+            "OPEN bad%zz 4", // invalid id escape
+        ] {
+            assert!(Request::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+        assert!(Request::parse(&format!("BATCH a {}", MAX_BATCH + 1)).is_err());
+        assert!(Request::parse(&format!("OPEN a {}", MAX_OPEN_NODES + 1)).is_err());
+        // resource bounds on event payloads (EV and BATCH bodies both go
+        // through parse_wire_event)
+        assert!(Request::parse("EV a e 0 4294967295 0.5").is_err());
+        assert!(Request::parse(&format!("EV a n {}", MAX_OPEN_NODES + 1)).is_err());
+        assert!(parse_wire_event("e 0 4294967295 0.5").is_err());
+        assert!(parse_wire_event("e 0 1 0.5").is_ok());
+        assert!(parse_wire_event(&format!("n {}", MAX_OPEN_NODES)).is_ok());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        for resp in [
+            Response::ok(),
+            Response::Ok(vec![
+                ("windows".to_string(), "3".to_string()),
+                ("jsdist".to_string(), "0.12345".to_string()),
+            ]),
+            Response::Err("unknown-session".to_string()),
+        ] {
+            assert_eq!(Response::parse(&resp.to_line()), Ok(resp));
+        }
+        assert!(Response::parse("WAT 1").is_err());
+        assert!(Response::parse("OK novalue").is_err());
+    }
+
+    #[test]
+    fn snapshot_roundtrips_floats_bit_for_bit() {
+        let snap = crate::service::SessionSnapshot {
+            id: "s/1".to_string(),
+            windows: 7,
+            events: 420,
+            last_jsdist: Some(0.123456789012345678), // not representable; rounds
+            last_anomalous: true,
+            htilde: std::f64::consts::LN_2 * 3.7,
+            nodes: 100,
+            edges: 321,
+            anomalies: 2,
+            pending_events: 5,
+        };
+        let resp = snapshot_response(&snap);
+        let line = resp.to_line();
+        let back = snapshot_from_response("s/1", &Response::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, snap, "wire round-trip must be bit-for-bit");
+
+        let no_window = crate::service::SessionSnapshot {
+            last_jsdist: None,
+            windows: 0,
+            ..snap.clone()
+        };
+        let back =
+            snapshot_from_response("s/1", &snapshot_response(&no_window)).unwrap();
+        assert_eq!(back.last_jsdist, None);
+    }
+}

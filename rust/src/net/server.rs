@@ -1,0 +1,497 @@
+//! Thread-per-connection TCP server putting a [`ScoringService`] on a
+//! socket. Pure `std::net` — no async runtime dependency.
+//!
+//! * **Connection isolation** — every accepted connection gets its own
+//!   reader thread; a malformed line yields a one-line `ERR` and the
+//!   connection keeps going; an I/O error or panic-free protocol failure
+//!   kills only that connection, never the server.
+//! * **Backpressure without wedging** — submissions go through the
+//!   service's non-blocking [`ScoringService::try_submit`] /
+//!   [`ScoringService::try_submit_batch`] in a bounded-sleep retry loop
+//!   that also watches the shutdown flag, so one stalled shard can slow a
+//!   connection but can neither wedge it past shutdown nor drop events.
+//! * **Graceful shutdown** — the `SHUTDOWN` verb (or
+//!   [`ShutdownHandle::signal`]) stops the accept loop, joins every
+//!   connection thread, drains all shards via [`ScoringService::finish`]
+//!   and returns the final [`ServiceReport`] from [`NetServer::run`].
+
+use super::proto::{snapshot_response, Request, Response, DEFAULT_ADDR, MAX_LINE};
+use crate::cli::Config;
+use crate::entropy::FingerState;
+use crate::graph::Graph;
+use crate::service::{ScoringService, ServiceConfig, ServiceReport, SubmitError};
+use crate::stream::StreamEvent;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Knobs of the network front end, readable from the `[net]` config section.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Listen address (`host:port`; port 0 binds an ephemeral port).
+    pub addr: String,
+    /// Sleep between non-blocking submit retries while a shard queue is
+    /// full (microseconds).
+    pub backoff_us: u64,
+    /// Socket read timeout used to poll the shutdown flag (milliseconds);
+    /// bounds how long a drained connection outlives a shutdown request.
+    pub poll_ms: u64,
+    /// Socket write timeout (milliseconds): a client that stops reading its
+    /// replies gets its connection dropped instead of wedging the thread
+    /// (and the shutdown join) in `write_all` forever.
+    pub write_timeout_ms: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            addr: DEFAULT_ADDR.to_string(),
+            backoff_us: 200,
+            poll_ms: 25,
+            write_timeout_ms: 5000,
+        }
+    }
+}
+
+impl NetConfig {
+    /// Read the `[net]` section of a parsed config file; missing keys fall
+    /// back to the defaults. Recognized keys: `addr`, `backoff_us`,
+    /// `poll_ms`, `write_timeout_ms`.
+    pub fn from_config(c: &Config) -> Self {
+        let d = Self::default();
+        Self {
+            addr: c.get("net.addr").unwrap_or(&d.addr).to_string(),
+            backoff_us: c.get_or("net.backoff_us", d.backoff_us).max(1),
+            poll_ms: c.get_or("net.poll_ms", d.poll_ms).max(1),
+            write_timeout_ms: c.get_or("net.write_timeout_ms", d.write_timeout_ms).max(1),
+        }
+    }
+}
+
+/// Signals a running [`NetServer`] to stop from another thread (tests, a
+/// CLI signal handler). Protocol clients use the `SHUTDOWN` verb instead.
+#[derive(Clone)]
+pub struct ShutdownHandle {
+    flag: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl ShutdownHandle {
+    pub fn signal(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+        // wake the blocking accept with a throwaway connection; a wildcard
+        // bind address (0.0.0.0 / ::) is not connectable on every platform,
+        // so target loopback on the bound port instead
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match self.addr {
+                SocketAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                SocketAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect(wake);
+    }
+
+    pub fn is_signaled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+/// The bound, not-yet-running server.
+pub struct NetServer {
+    listener: TcpListener,
+    service: Arc<ScoringService>,
+    net: NetConfig,
+    shutdown: ShutdownHandle,
+}
+
+impl NetServer {
+    /// Bind the listen socket and start the scoring service's shard workers.
+    pub fn bind(service_cfg: ServiceConfig, net: NetConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&net.addr)
+            .with_context(|| format!("bind {}", net.addr))?;
+        let addr = listener.local_addr().context("local_addr")?;
+        let shutdown = ShutdownHandle { flag: Arc::new(AtomicBool::new(false)), addr };
+        Ok(Self {
+            listener,
+            service: Arc::new(ScoringService::start(service_cfg)),
+            net,
+            shutdown,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shutdown.addr
+    }
+
+    /// Handle for programmatic shutdown from another thread.
+    pub fn shutdown_handle(&self) -> ShutdownHandle {
+        self.shutdown.clone()
+    }
+
+    /// Accept connections until a `SHUTDOWN` request (or
+    /// [`ShutdownHandle::signal`]) arrives, then join every connection
+    /// thread, drain the shards and return the final report.
+    pub fn run(self) -> Result<ServiceReport> {
+        let Self { listener, service, net, shutdown } = self;
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        for (conn_id, incoming) in listener.incoming().enumerate() {
+            if shutdown.is_signaled() {
+                break;
+            }
+            let stream = match incoming {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("net: accept failed: {e}");
+                    continue;
+                }
+            };
+            let service = Arc::clone(&service);
+            let net = net.clone();
+            let shutdown = shutdown.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("finger-conn-{conn_id}"))
+                .spawn(move || {
+                    if let Err(e) = handle_conn(stream, &service, &net, &shutdown) {
+                        // per-connection isolation: log and move on
+                        eprintln!("net: connection {conn_id}: {e}");
+                    }
+                })
+                .context("spawn connection thread")?;
+            conns.push(handle);
+            // opportunistically reap finished connection threads
+            conns = conns
+                .into_iter()
+                .filter_map(|h| {
+                    if h.is_finished() {
+                        let _ = h.join();
+                        None
+                    } else {
+                        Some(h)
+                    }
+                })
+                .collect();
+        }
+        for h in conns {
+            let _ = h.join();
+        }
+        let service = Arc::try_unwrap(service)
+            .map_err(|_| anyhow::anyhow!("connection thread leaked a service handle"))?;
+        Ok(service.finish())
+    }
+}
+
+/// Outcome of one polled line read.
+enum LineRead {
+    /// A complete line (without the trailing newline).
+    Line,
+    /// Clean end of stream.
+    Eof,
+    /// The server is shutting down.
+    Shutdown,
+}
+
+/// Read one `\n`-terminated line, polling the shutdown flag on read
+/// timeouts. Bytes are accumulated with `read_until` (not `read_line`),
+/// so a timeout landing mid multi-byte UTF-8 character cannot discard
+/// already-received bytes — invalid UTF-8 is surfaced lossily and rejected
+/// by the parser rather than silently dropped.
+///
+/// The line is capped at just over [`MAX_LINE`] bytes: the prefix of an
+/// oversized line is returned (and rejected by `Request::parse`) while its
+/// remaining bytes are *discarded through the newline* in bounded chunks —
+/// the buffer never grows past the cap and the tail is never misparsed as
+/// further requests, preserving one-reply-per-request framing.
+fn read_line_polled(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut String,
+    shutdown: &ShutdownHandle,
+) -> std::io::Result<LineRead> {
+    buf.clear();
+    let mut bytes: Vec<u8> = Vec::new();
+    let mut discard: Vec<u8> = Vec::new();
+    let outcome = loop {
+        // phase 1 accumulates into `bytes` until the cap; phase 2
+        // (oversized) drains the rest of the physical line into a bounded
+        // scratch so the tail is never misparsed as further requests
+        let oversized = bytes.len() > MAX_LINE;
+        let (target, budget) = if oversized {
+            discard.clear();
+            (&mut discard, MAX_LINE as u64)
+        } else {
+            let budget = (MAX_LINE + 2 - bytes.len()) as u64;
+            (&mut bytes, budget)
+        };
+        let mut limited = (&mut *reader).take(budget);
+        match limited.read_until(b'\n', target) {
+            Ok(0) => {
+                // budget is always > 0, so 0 bytes means real EOF
+                break if bytes.is_empty() { LineRead::Eof } else { LineRead::Line };
+            }
+            Ok(n) => {
+                if target.last() == Some(&b'\n') {
+                    break LineRead::Line;
+                }
+                // no newline: the cap was hit (n == budget → keep draining)
+                // or the stream ended mid-line (surface what arrived)
+                if (n as u64) < budget {
+                    break LineRead::Line;
+                }
+            }
+            Err(e) => match e.kind() {
+                ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted => {
+                    if shutdown.is_signaled() {
+                        break LineRead::Shutdown;
+                    }
+                }
+                _ => return Err(e),
+            },
+        }
+    };
+    if matches!(outcome, LineRead::Line) {
+        while matches!(bytes.last(), Some(b'\n') | Some(b'\r')) {
+            bytes.pop();
+        }
+        buf.push_str(&String::from_utf8_lossy(&bytes));
+    }
+    Ok(outcome)
+}
+
+/// One attempt of a non-blocking service call inside [`retry_backoff`].
+enum Backoff<T> {
+    /// The call went through.
+    Done(T),
+    /// The shard queue was full — sleep and try again.
+    Retry,
+    /// Terminal failure (shard closed); the `ERR` reason.
+    Fail(String),
+}
+
+/// The shared full-queue retry discipline of every service call on a
+/// connection thread: retry `attempt` with `backoff_us` sleeps while the
+/// target shard's queue is full, honoring a shutdown request so one
+/// stalled shard can't wedge the thread past a drain. `Err` carries the
+/// `ERR` response to send instead.
+fn retry_backoff<T>(
+    net: &NetConfig,
+    shutdown: &ShutdownHandle,
+    mut attempt: impl FnMut() -> Backoff<T>,
+) -> Result<T, Response> {
+    loop {
+        match attempt() {
+            Backoff::Done(v) => return Ok(v),
+            Backoff::Fail(reason) => return Err(Response::Err(reason)),
+            Backoff::Retry => {
+                if shutdown.is_signaled() {
+                    return Err(Response::Err("shutting-down".to_string()));
+                }
+                std::thread::sleep(Duration::from_micros(net.backoff_us));
+            }
+        }
+    }
+}
+
+/// Submit a batch through the non-blocking path; returns the accepted
+/// event count. Rejected batches are handed back by the service, so
+/// retries never clone the events.
+fn submit_batch_backoff(
+    service: &ScoringService,
+    net: &NetConfig,
+    shutdown: &ShutdownHandle,
+    id: &str,
+    events: Vec<StreamEvent>,
+) -> Result<usize, Response> {
+    let mut pending = Some(events);
+    retry_backoff(net, shutdown, || {
+        match service.try_submit_batch(id, pending.take().expect("pending batch")) {
+            Ok(n) => Backoff::Done(n),
+            Err((back, SubmitError::WouldBlock { .. })) => {
+                pending = Some(back);
+                Backoff::Retry
+            }
+            Err((_, e)) => Backoff::Fail(e.to_string()),
+        }
+    })
+}
+
+/// Open a session through the non-blocking path; the initial state is
+/// built once and handed back on every retry.
+fn open_backoff(
+    service: &ScoringService,
+    net: &NetConfig,
+    shutdown: &ShutdownHandle,
+    id: &str,
+    nodes: usize,
+) -> Result<(), Response> {
+    let mut state =
+        Some(FingerState::with_policy(Graph::new(nodes), service.config().policy));
+    retry_backoff(net, shutdown, || {
+        match service.try_open_session_state(id, state.take().expect("pending state")) {
+            Ok(()) => Backoff::Done(()),
+            Err((back, SubmitError::WouldBlock { .. })) => {
+                state = Some(back);
+                Backoff::Retry
+            }
+            Err((_, e)) => Backoff::Fail(e.to_string()),
+        }
+    })
+}
+
+/// Query through the non-blocking path.
+fn query_backoff(
+    service: &ScoringService,
+    net: &NetConfig,
+    shutdown: &ShutdownHandle,
+    id: &str,
+) -> Result<Option<crate::service::SessionSnapshot>, Response> {
+    retry_backoff(net, shutdown, || match service.try_query(id) {
+        Ok(snap) => Backoff::Done(snap),
+        Err(SubmitError::WouldBlock { .. }) => Backoff::Retry,
+        Err(e) => Backoff::Fail(e.to_string()),
+    })
+}
+
+fn stats_response(service: &ScoringService) -> Response {
+    let depths: Vec<String> =
+        service.queue_depths().iter().map(|d| d.to_string()).collect();
+    Response::Ok(vec![
+        ("shards".to_string(), service.shards().to_string()),
+        ("depths".to_string(), depths.join(",")),
+        ("submitted".to_string(), service.events_submitted().to_string()),
+    ])
+}
+
+/// Serve one connection until `QUIT`, EOF, `SHUTDOWN` or an I/O error.
+fn handle_conn(
+    stream: TcpStream,
+    service: &ScoringService,
+    net: &NetConfig,
+    shutdown: &ShutdownHandle,
+) -> Result<()> {
+    stream.set_nodelay(true).ok(); // request/reply latency over throughput
+    stream
+        .set_read_timeout(Some(Duration::from_millis(net.poll_ms)))
+        .context("set_read_timeout")?;
+    // a client that stops reading replies must not wedge this thread (and
+    // the shutdown join) in write_all — time the write out and drop it
+    stream
+        .set_write_timeout(Some(Duration::from_millis(net.write_timeout_ms)))
+        .context("set_write_timeout")?;
+    let mut writer = stream.try_clone().context("clone stream")?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let reply = |w: &mut TcpStream, resp: &Response| -> std::io::Result<()> {
+        let mut out = resp.to_line();
+        out.push('\n');
+        w.write_all(out.as_bytes())
+    };
+    loop {
+        match read_line_polled(&mut reader, &mut line, shutdown)? {
+            LineRead::Eof | LineRead::Shutdown => return Ok(()),
+            LineRead::Line => {}
+        }
+        if line.trim().is_empty() {
+            continue; // blank lines are keep-alive noise, not errors
+        }
+        let resp = match Request::parse(&line) {
+            Err(reason) => Response::Err(reason),
+            Ok(Request::Open { id, nodes }) => {
+                match open_backoff(service, net, shutdown, &id, nodes) {
+                    Ok(()) => Response::ok(),
+                    Err(err) => err,
+                }
+            }
+            Ok(Request::Event { id, ev }) => {
+                match submit_batch_backoff(service, net, shutdown, &id, vec![ev]) {
+                    Ok(_) => Response::ok(),
+                    Err(err) => err,
+                }
+            }
+            Ok(Request::Batch { id, count }) => {
+                match read_batch(&mut reader, &mut line, shutdown, count)? {
+                    BatchRead::Events(events) => {
+                        match submit_batch_backoff(service, net, shutdown, &id, events) {
+                            Ok(n) => Response::Ok(vec![(
+                                "accepted".to_string(),
+                                n.to_string(),
+                            )]),
+                            Err(err) => err,
+                        }
+                    }
+                    BatchRead::Malformed { at, reason } => {
+                        Response::Err(format!("batch line {at}: {reason}"))
+                    }
+                    BatchRead::Interrupted => return Ok(()),
+                }
+            }
+            Ok(Request::Query { id }) => match query_backoff(service, net, shutdown, &id) {
+                Ok(Some(snap)) => snapshot_response(&snap),
+                Ok(None) => Response::Err("unknown-session".to_string()),
+                Err(err) => err,
+            },
+            Ok(Request::Stats) => stats_response(service),
+            Ok(Request::Quit) => {
+                reply(&mut writer, &Response::ok())?;
+                return Ok(());
+            }
+            Ok(Request::Shutdown) => {
+                reply(&mut writer, &Response::ok())?;
+                shutdown.signal();
+                return Ok(());
+            }
+        };
+        reply(&mut writer, &resp)?;
+        // during a drain, finish the in-flight request but take no new ones:
+        // a connection that never pauses must not stall the shutdown join
+        if shutdown.is_signaled() {
+            return Ok(());
+        }
+    }
+}
+
+enum BatchRead {
+    Events(Vec<StreamEvent>),
+    /// Some body line failed to parse (1-based index); the whole batch is
+    /// consumed and rejected so the stream stays in sync.
+    Malformed {
+        at: usize,
+        reason: &'static str,
+    },
+    /// EOF or shutdown arrived mid-batch.
+    Interrupted,
+}
+
+/// Consume exactly `count` event lines after a `BATCH` header. All `count`
+/// lines are read even when one is malformed — the protocol stays line-
+/// synchronized and only the batch is rejected.
+fn read_batch(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+    shutdown: &ShutdownHandle,
+    count: usize,
+) -> std::io::Result<BatchRead> {
+    // cap the prealloc: the header's count is attacker-controlled, and a
+    // bare `BATCH a 1048576` must not pin ~24 MB per idle connection
+    let mut events = Vec::with_capacity(count.min(4096));
+    let mut bad: Option<(usize, &'static str)> = None;
+    for k in 1..=count {
+        match read_line_polled(reader, line, shutdown)? {
+            LineRead::Line => {}
+            LineRead::Eof | LineRead::Shutdown => return Ok(BatchRead::Interrupted),
+        }
+        match super::proto::parse_wire_event(line) {
+            Ok(ev) => events.push(ev),
+            Err(reason) => {
+                bad.get_or_insert((k, reason));
+            }
+        }
+    }
+    Ok(match bad {
+        Some((at, reason)) => BatchRead::Malformed { at, reason },
+        None => BatchRead::Events(events),
+    })
+}

@@ -1,0 +1,192 @@
+//! Load driver: replays a multi-tenant workload (including wiki/DoS/Hi-C
+//! dataset-preset tenants, see [`TenantPreset`]) against a running
+//! `finger serve` instance over N concurrent client connections and reports
+//! end-to-end events/s.
+//!
+//! Tenants are round-robin partitioned across connections; each connection
+//! opens its tenants, then replays them window-major (one tick-delimited
+//! window per `BATCH` message, interleaved across its tenants so every
+//! shard stays busy — the same discipline as the in-process
+//! [`workload::drive`]), and finally `QUERY`s each tenant so callers can
+//! cross-check the scores against an in-process run of the same workload.
+//!
+//! [`workload::drive`]: crate::service::workload::drive
+
+use super::client::NetClient;
+use crate::service::workload::{
+    tenant_streams, TenantPreset, TenantStream, TenantWorkloadConfig,
+};
+use crate::service::SessionSnapshot;
+use crate::stream::StreamEvent;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// Shape of one load-driver run.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Concurrent client connections (clamped to the tenant count).
+    pub connections: usize,
+    /// The tenant workload to replay (presets included).
+    pub workload: TenantWorkloadConfig,
+    /// `QUERY` every tenant after its replay and collect the snapshots.
+    pub query_sessions: bool,
+    /// Send `SHUTDOWN` after the run (from the first connection).
+    pub shutdown_after: bool,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        Self {
+            addr: super::proto::DEFAULT_ADDR.to_string(),
+            connections: 4,
+            workload: TenantWorkloadConfig::default(),
+            query_sessions: true,
+            shutdown_after: false,
+        }
+    }
+}
+
+/// Aggregate outcome of one load-driver run.
+#[derive(Debug)]
+pub struct TrafficReport {
+    /// Connections actually used.
+    pub connections: usize,
+    pub sessions: usize,
+    /// Events sent (and acknowledged) across all connections.
+    pub events_sent: usize,
+    /// Wall-clock of the replay, connect to last acknowledgment.
+    pub wall_secs: f64,
+    /// End-to-end acknowledged events per second, aggregated.
+    pub events_per_sec: f64,
+    /// Windows scored server-side, summed over `QUERY` snapshots (0 when
+    /// `query_sessions` is off).
+    pub windows: usize,
+    /// Anomalous windows, summed over `QUERY` snapshots.
+    pub anomalies: usize,
+    /// One snapshot per tenant (empty when `query_sessions` is off),
+    /// sorted by session id.
+    pub snapshots: Vec<SessionSnapshot>,
+}
+
+/// Replay `cfg.workload` against `cfg.addr`. Builds the tenant streams,
+/// drives them over `cfg.connections` concurrent connections and returns
+/// the aggregate report. Fails on the first protocol or I/O error.
+pub fn run_load(cfg: &TrafficConfig) -> Result<TrafficReport> {
+    let streams = tenant_streams(&cfg.workload);
+    let report = replay(&cfg.addr, cfg.connections, cfg.query_sessions, &streams)?;
+    if cfg.shutdown_after {
+        NetClient::connect(cfg.addr.as_str())?.shutdown_server()?;
+    }
+    Ok(report)
+}
+
+/// Replay prebuilt tenant streams over `connections` concurrent client
+/// connections (exposed so tests can drive the exact same streams through
+/// the wire and through the in-process service).
+pub fn replay(
+    addr: &str,
+    connections: usize,
+    query_sessions: bool,
+    streams: &[TenantStream],
+) -> Result<TrafficReport> {
+    let connections = connections.clamp(1, streams.len().max(1));
+    let start = Instant::now();
+    let mut outcomes: Vec<Result<(usize, Vec<SessionSnapshot>)>> =
+        Vec::with_capacity(connections);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(connections);
+        for c in 0..connections {
+            let chunk: Vec<&TenantStream> =
+                streams.iter().skip(c).step_by(connections).collect();
+            handles
+                .push(scope.spawn(move || drive_connection(addr, &chunk, query_sessions)));
+        }
+        for h in handles {
+            outcomes.push(h.join().expect("load connection thread panicked"));
+        }
+    });
+    let mut events_sent = 0;
+    let mut snapshots = Vec::new();
+    for outcome in outcomes {
+        let (sent, snaps) = outcome?;
+        events_sent += sent;
+        snapshots.extend(snaps);
+    }
+    let wall_secs = start.elapsed().as_secs_f64();
+    snapshots.sort_by(|a, b| a.id.cmp(&b.id));
+    Ok(TrafficReport {
+        connections,
+        sessions: streams.len(),
+        events_sent,
+        wall_secs,
+        events_per_sec: events_sent as f64 / wall_secs.max(1e-12),
+        windows: snapshots.iter().map(|s| s.windows).sum(),
+        anomalies: snapshots.iter().map(|s| s.anomalies).sum(),
+        snapshots,
+    })
+}
+
+/// One connection's share: open every tenant, replay window-major, then
+/// optionally query each tenant.
+fn drive_connection(
+    addr: &str,
+    chunk: &[&TenantStream],
+    query: bool,
+) -> Result<(usize, Vec<SessionSnapshot>)> {
+    let mut client = NetClient::connect(addr)?;
+    let mut sent = 0;
+    for (id, initial, _) in chunk {
+        client
+            .open(id, initial.num_nodes())
+            .with_context(|| format!("open {id}"))?;
+        // the wire opens an *empty* graph; replay the initial edges as a
+        // window-0 batch so the server-side state matches the local graph
+        let seed_events: Vec<StreamEvent> = initial
+            .edges()
+            .map(|(i, j, w)| StreamEvent::EdgeDelta { i, j, dw: w })
+            .chain(std::iter::once(StreamEvent::Tick))
+            .collect();
+        sent += client
+            .send_batch(id, &seed_events)
+            .with_context(|| format!("seed {id}"))?;
+    }
+    let windows: Vec<Vec<&[StreamEvent]>> = chunk
+        .iter()
+        .map(|(_, _, evs)| {
+            evs.split_inclusive(|e| matches!(e, StreamEvent::Tick)).collect()
+        })
+        .collect();
+    let max_windows = windows.iter().map(|w| w.len()).max().unwrap_or(0);
+    for w in 0..max_windows {
+        for (k, (id, _, _)) in chunk.iter().enumerate() {
+            if let Some(win) = windows[k].get(w) {
+                sent += client
+                    .send_batch(id, win)
+                    .with_context(|| format!("batch {w} for {id}"))?;
+            }
+        }
+    }
+    let mut snaps = Vec::new();
+    if query {
+        for (id, _, _) in chunk {
+            let snap = client
+                .query(id)
+                .with_context(|| format!("query {id}"))?
+                .with_context(|| format!("session {id} vanished server-side"))?;
+            snaps.push(snap);
+        }
+    }
+    client.quit()?;
+    Ok((sent, snaps))
+}
+
+/// Human-readable preset mix of a workload (for logs and reports).
+pub fn preset_summary(workload: &TenantWorkloadConfig) -> String {
+    if workload.presets.is_empty() {
+        return "synthetic".to_string();
+    }
+    let names: Vec<&str> = workload.presets.iter().map(TenantPreset::name).collect();
+    names.join(",")
+}

@@ -6,13 +6,14 @@
 
 use super::config::ServiceConfig;
 use super::registry::{shard_of, SessionRegistry};
-use super::session::{SessionReport, SessionState};
+use super::session::{SessionReport, SessionSnapshot, SessionState};
 use crate::entropy::FingerState;
 use crate::graph::Graph;
 use crate::stream::{checkpoint, StreamEvent};
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -26,18 +27,33 @@ enum ShardMsg {
     /// A batch of events for one session (amortizes the per-message routing
     /// and channel cost on the ingest path).
     Batch { id: String, events: Vec<StreamEvent> },
+    /// Point-in-time read of a session's live stats. Flows through the same
+    /// FIFO channel as events, so a query observes everything the caller
+    /// submitted before it.
+    Query { id: String, reply: Sender<Option<SessionSnapshot>> },
 }
 
-/// Submission failure: the target shard's worker is gone (it panicked —
-/// workers otherwise outlive every sender).
+/// Submission failure.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub struct SubmitError {
-    pub shard: usize,
+pub enum SubmitError {
+    /// The target shard's worker is gone (it panicked — workers otherwise
+    /// outlive every sender).
+    Closed { shard: usize },
+    /// Non-blocking submission (`try_submit*`) found the shard's bounded
+    /// queue full; the blocking `submit` path waits instead of failing.
+    WouldBlock { shard: usize },
 }
 
 impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "shard {} is no longer accepting events", self.shard)
+        match self {
+            SubmitError::Closed { shard } => {
+                write!(f, "shard {shard} is no longer accepting events")
+            }
+            SubmitError::WouldBlock { shard } => {
+                write!(f, "shard {shard}'s queue is full (would block)")
+            }
+        }
     }
 }
 
@@ -50,6 +66,9 @@ pub struct ScoringService {
     cfg: ServiceConfig,
     senders: Vec<SyncSender<ShardMsg>>,
     workers: Vec<JoinHandle<ShardOutcome>>,
+    /// Messages in flight per shard (queued + the one being processed);
+    /// incremented on send, decremented by the worker as it picks each up.
+    depths: Vec<Arc<AtomicUsize>>,
     submitted: AtomicUsize,
     start: Instant,
 }
@@ -65,17 +84,28 @@ impl ScoringService {
         let shards = cfg.shards.max(1);
         let mut senders = Vec::with_capacity(shards);
         let mut workers = Vec::with_capacity(shards);
+        let mut depths = Vec::with_capacity(shards);
         for shard in 0..shards {
             let (tx, rx) = sync_channel::<ShardMsg>(cfg.channel_capacity.max(1));
             let worker_cfg = cfg.clone();
+            let depth = Arc::new(AtomicUsize::new(0));
+            let worker_depth = Arc::clone(&depth);
             let handle = std::thread::Builder::new()
                 .name(format!("finger-shard-{shard}"))
-                .spawn(move || shard_worker(rx, worker_cfg))
+                .spawn(move || shard_worker(rx, worker_cfg, worker_depth))
                 .expect("spawn shard worker");
             senders.push(tx);
             workers.push(handle);
+            depths.push(depth);
         }
-        Self { cfg, senders, workers, submitted: AtomicUsize::new(0), start: Instant::now() }
+        Self {
+            cfg,
+            senders,
+            workers,
+            depths,
+            submitted: AtomicUsize::new(0),
+            start: Instant::now(),
+        }
     }
 
     pub fn shards(&self) -> usize {
@@ -136,6 +166,86 @@ impl ScoringService {
         Ok(n)
     }
 
+    /// Non-blocking [`submit`](Self::submit): fails with
+    /// [`SubmitError::WouldBlock`] instead of waiting when `id`'s shard
+    /// queue is full, so an ingest thread multiplexing many sessions (e.g. a
+    /// network connection reader) is never wedged by one stalled shard.
+    pub fn try_submit(&self, id: &str, ev: StreamEvent) -> Result<(), SubmitError> {
+        self.try_send(ShardMsg::Event { id: id.to_string(), ev }).map_err(|(_, e)| e)?;
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Non-blocking [`submit_batch`](Self::submit_batch). On failure the
+    /// events are handed back so the caller can retry without cloning.
+    pub fn try_submit_batch(
+        &self,
+        id: &str,
+        events: Vec<StreamEvent>,
+    ) -> Result<usize, (Vec<StreamEvent>, SubmitError)> {
+        let n = events.len();
+        if n == 0 {
+            return Ok(0);
+        }
+        match self.try_send(ShardMsg::Batch { id: id.to_string(), events }) {
+            Ok(()) => {
+                self.submitted.fetch_add(n, Ordering::Relaxed);
+                Ok(n)
+            }
+            Err((ShardMsg::Batch { events, .. }, e)) => Err((events, e)),
+            Err((_, e)) => Err((Vec::new(), e)), // try_send echoes the variant
+        }
+    }
+
+    /// Non-blocking [`open_session_state`](Self::open_session_state): fails
+    /// with [`SubmitError::WouldBlock`] when the shard's queue is full,
+    /// handing the state back so the caller can retry without rebuilding it.
+    pub fn try_open_session_state(
+        &self,
+        id: &str,
+        state: FingerState,
+    ) -> Result<(), (FingerState, SubmitError)> {
+        match self.try_send(ShardMsg::Open { id: id.to_string(), state }) {
+            Ok(()) => Ok(()),
+            Err((ShardMsg::Open { state, .. }, e)) => Err((state, e)),
+            Err(_) => unreachable!("try_send echoes the sent message variant"),
+        }
+    }
+
+    /// Point-in-time stats for a live session (windows scored, latest
+    /// JSdist, H̃, anomaly count, pending events). `Ok(None)` when the shard
+    /// has no such session. The query rides the same FIFO channel as events,
+    /// so it reflects every event this caller submitted before it. Blocks
+    /// while the shard's queue is full, like `submit`.
+    pub fn query(&self, id: &str) -> Result<Option<SessionSnapshot>, SubmitError> {
+        let (tx, rx) = channel();
+        self.send(ShardMsg::Query { id: id.to_string(), reply: tx })?;
+        rx.recv().map_err(|_| SubmitError::Closed { shard: self.shard_for(id) })
+    }
+
+    /// Non-blocking [`query`](Self::query): fails with
+    /// [`SubmitError::WouldBlock`] instead of waiting when the shard's queue
+    /// is full. Once enqueued, the reply wait is bounded by the work already
+    /// queued (shard workers never block on anything themselves).
+    pub fn try_query(&self, id: &str) -> Result<Option<SessionSnapshot>, SubmitError> {
+        let (tx, rx) = channel();
+        self.try_send(ShardMsg::Query { id: id.to_string(), reply: tx })
+            .map_err(|(_, e)| e)?;
+        rx.recv().map_err(|_| SubmitError::Closed { shard: self.shard_for(id) })
+    }
+
+    /// Messages currently in flight per shard (queued plus being processed).
+    /// A persistently deep shard signals a hot session set; the `STATS`
+    /// protocol verb surfaces this to operators.
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.depths.iter().map(|d| d.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Events accepted so far across all sessions.
+    pub fn events_submitted(&self) -> usize {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
     /// Re-open every `<id>.ckpt` session found in `dir` (written by a prior
     /// run's `finish` with `checkpoint_dir` set). Returns how many sessions
     /// were restored.
@@ -165,19 +275,42 @@ impl ScoringService {
         Ok(restored)
     }
 
-    fn send(&self, msg: ShardMsg) -> Result<(), SubmitError> {
-        let shard = match &msg {
+    fn shard_of_msg(&self, msg: &ShardMsg) -> usize {
+        let id = match msg {
             ShardMsg::Open { id, .. }
             | ShardMsg::Event { id, .. }
-            | ShardMsg::Batch { id, .. } => shard_of(id, self.senders.len()),
+            | ShardMsg::Batch { id, .. }
+            | ShardMsg::Query { id, .. } => id,
         };
-        self.senders[shard].send(msg).map_err(|_| SubmitError { shard })
+        shard_of(id, self.senders.len())
+    }
+
+    fn send(&self, msg: ShardMsg) -> Result<(), SubmitError> {
+        let shard = self.shard_of_msg(&msg);
+        // count before sending so a blocked send is visible as queue depth
+        self.depths[shard].fetch_add(1, Ordering::Relaxed);
+        self.senders[shard].send(msg).map_err(|_| {
+            self.depths[shard].fetch_sub(1, Ordering::Relaxed);
+            SubmitError::Closed { shard }
+        })
+    }
+
+    fn try_send(&self, msg: ShardMsg) -> Result<(), (ShardMsg, SubmitError)> {
+        let shard = self.shard_of_msg(&msg);
+        self.depths[shard].fetch_add(1, Ordering::Relaxed);
+        self.senders[shard].try_send(msg).map_err(|e| {
+            self.depths[shard].fetch_sub(1, Ordering::Relaxed);
+            match e {
+                TrySendError::Full(m) => (m, SubmitError::WouldBlock { shard }),
+                TrySendError::Disconnected(m) => (m, SubmitError::Closed { shard }),
+            }
+        })
     }
 
     /// Close the ingest side, drain every shard (flushing partial windows,
     /// checkpointing when configured) and aggregate the results.
     pub fn finish(self) -> ServiceReport {
-        let Self { cfg, senders, workers, submitted, start } = self;
+        let Self { cfg, senders, workers, submitted, start, depths: _ } = self;
         drop(senders); // workers' receive loops end once the queues drain
         let mut sessions = Vec::new();
         let mut dropped_events = 0;
@@ -200,7 +333,11 @@ impl ScoringService {
     }
 }
 
-fn shard_worker(rx: Receiver<ShardMsg>, cfg: ServiceConfig) -> ShardOutcome {
+fn shard_worker(
+    rx: Receiver<ShardMsg>,
+    cfg: ServiceConfig,
+    depth: Arc<AtomicUsize>,
+) -> ShardOutcome {
     let mut registry = SessionRegistry::new();
     let mut dropped = 0;
     let route = |registry: &mut SessionRegistry,
@@ -231,7 +368,15 @@ fn shard_worker(rx: Receiver<ShardMsg>, cfg: ServiceConfig) -> ShardOutcome {
             ShardMsg::Batch { id, events } => {
                 route(&mut registry, &mut dropped, id, &mut events.into_iter());
             }
+            ShardMsg::Query { id, reply } => {
+                // the querying side may have hung up; that's its business
+                let _ = reply.send(registry.get(&id).map(SessionState::snapshot));
+            }
         }
+        // decrement only after the message is fully processed, so depth
+        // really is "queued + being processed": a shard grinding through a
+        // huge batch must not look idle to STATS / rebalancing heuristics
+        depth.fetch_sub(1, Ordering::Relaxed);
     }
     // ingest closed: flush, checkpoint, report
     let mut reports = Vec::new();
@@ -306,6 +451,85 @@ mod tests {
         assert_eq!(report.sessions.len(), 1);
         assert_eq!(report.dropped_events, 1);
         assert_eq!(report.total_events, 2);
+    }
+
+    #[test]
+    fn try_submit_reports_would_block_and_recovers() {
+        // capacity-1 queue, no consumer progress guaranteed: fill it with a
+        // blocking submit, then try_submit must fail fast with WouldBlock
+        // once the queue is full (never hang), and a blocking submit after
+        // the worker drains must still succeed.
+        let cfg = ServiceConfig { shards: 1, channel_capacity: 1, ..Default::default() };
+        let svc = ScoringService::start(cfg);
+        svc.open_session("a", Graph::new(4)).unwrap();
+        // occupy the worker with one long batch so the queue stays full
+        let busy: Vec<StreamEvent> = (0..200_000u32)
+            .map(|k| StreamEvent::EdgeDelta { i: k % 4, j: (k + 1) % 4, dw: 1e-6 })
+            .collect();
+        svc.submit_batch("a", busy).unwrap();
+        let mut saw_would_block = false;
+        for _ in 0..10_000 {
+            match svc.try_submit("a", StreamEvent::EdgeDelta { i: 0, j: 1, dw: 0.01 }) {
+                Ok(()) => {}
+                Err(SubmitError::WouldBlock { shard }) => {
+                    assert_eq!(shard, 0);
+                    saw_would_block = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(saw_would_block, "a capacity-1 queue must eventually refuse");
+        // batch variant hands the events back for a clone-free retry
+        let mut evs = vec![StreamEvent::Tick];
+        loop {
+            match svc.try_submit_batch("a", evs) {
+                Ok(n) => {
+                    assert_eq!(n, 1);
+                    break;
+                }
+                Err((back, SubmitError::WouldBlock { .. })) => {
+                    assert_eq!(back.len(), 1);
+                    evs = back;
+                    std::thread::yield_now();
+                }
+                Err((_, e)) => panic!("unexpected {e}"),
+            }
+        }
+        let report = svc.finish();
+        assert_eq!(report.total_events, report.session("a").unwrap().events);
+    }
+
+    #[test]
+    fn queue_depths_drain_to_zero_and_query_sees_prior_events() {
+        let svc = ScoringService::start(ServiceConfig { shards: 2, ..Default::default() });
+        svc.open_session("a", Graph::new(4)).unwrap();
+        svc.submit("a", StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 }).unwrap();
+        svc.submit("a", StreamEvent::Tick).unwrap();
+        // query is FIFO-ordered behind the events above
+        let snap = svc.query("a").unwrap().expect("session exists");
+        assert_eq!(snap.id, "a");
+        assert_eq!(snap.windows, 1);
+        assert_eq!(snap.events, 2);
+        assert!(snap.last_jsdist.is_some());
+        assert_eq!(snap.edges, 1);
+        assert_eq!(snap.pending_events, 0);
+        assert_eq!(svc.query("missing").unwrap(), None);
+        assert_eq!(svc.queue_depths().len(), 2);
+        // the query round-trip means everything queued ahead of it was
+        // consumed; the query message's own depth decrement lands just
+        // after the reply, so poll briefly instead of asserting instantly
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let depths = svc.queue_depths();
+            if depths[svc.shard_for("a")] == 0 {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "depth never drained: {depths:?}");
+            std::thread::yield_now();
+        }
+        assert_eq!(svc.events_submitted(), 2);
+        svc.finish();
     }
 
     #[test]

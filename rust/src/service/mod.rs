@@ -64,5 +64,7 @@ pub mod workload;
 pub use config::ServiceConfig;
 pub use engine::{ScoringService, ServiceReport, SubmitError};
 pub use registry::{shard_of, SessionRegistry};
-pub use session::{decode_session_id, encode_session_id, SessionReport, SessionState};
-pub use workload::{tenant_streams, TenantWorkloadConfig};
+pub use session::{
+    decode_session_id, encode_session_id, SessionReport, SessionSnapshot, SessionState,
+};
+pub use workload::{tenant_streams, TenantPreset, TenantWorkloadConfig};

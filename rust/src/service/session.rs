@@ -78,6 +78,25 @@ impl SessionState {
         self.events
     }
 
+    /// Point-in-time view of the live session (served by
+    /// [`crate::service::ScoringService::query`] and the net front end's
+    /// `QUERY` verb). Cheap: no scoring work, no graph copies.
+    pub fn snapshot(&self) -> SessionSnapshot {
+        let last = self.records.last();
+        SessionSnapshot {
+            id: self.id.clone(),
+            windows: self.records.len(),
+            events: self.events,
+            last_jsdist: last.map(|r| r.jsdist),
+            last_anomalous: last.map(|r| r.anomalous).unwrap_or(false),
+            htilde: self.scorer.state().htilde(),
+            nodes: self.scorer.state().graph().num_nodes(),
+            edges: self.scorer.state().graph().num_edges(),
+            anomalies: self.records.iter().filter(|r| r.anomalous).count(),
+            pending_events: self.batcher.pending_events(),
+        }
+    }
+
     /// Snapshot this session's state to `dir/<encoded-id>.ckpt`.
     pub fn checkpoint_into(&self, dir: &Path) -> anyhow::Result<PathBuf> {
         std::fs::create_dir_all(dir)?;
@@ -141,6 +160,29 @@ pub fn decode_session_id(stem: &str) -> Option<String> {
         }
     }
     String::from_utf8(out).ok()
+}
+
+/// Point-in-time stats of a live session, readable while the service runs
+/// (unlike [`SessionReport`], which is extracted at `finish`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionSnapshot {
+    pub id: String,
+    /// Windows scored so far.
+    pub windows: usize,
+    /// Events routed to this session so far (including ticks).
+    pub events: usize,
+    /// JSdist of the most recently scored window (`None` before any tick).
+    pub last_jsdist: Option<f64>,
+    /// Whether that window was flagged anomalous.
+    pub last_anomalous: bool,
+    /// H̃ of the session's current graph.
+    pub htilde: f64,
+    pub nodes: usize,
+    pub edges: usize,
+    /// Windows flagged anomalous so far.
+    pub anomalies: usize,
+    /// Events accumulated in the currently-open (not yet scored) window.
+    pub pending_events: usize,
 }
 
 /// Everything the service knows about one session at finish time.

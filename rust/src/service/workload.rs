@@ -1,25 +1,79 @@
 //! Deterministic synthetic multi-tenant workloads plus a driver that pushes
 //! them through a `ScoringService` from concurrent producer threads. Shared
-//! by `finger serve-bench`, `benches/service_throughput.rs`,
-//! `examples/multi_tenant.rs` and the service integration tests.
+//! by `finger serve-bench`, `finger load`, `benches/service_throughput.rs`,
+//! `examples/multi_tenant.rs` and the service/net integration tests.
+//!
+//! Besides the uniform Erdős–Rényi churn tenants, a workload can mix in
+//! *dataset-preset* tenants backed by the paper's application generators
+//! (`crate::datasets`): evolving wiki hyperlink streams (Table 2), DoS-
+//! attacked AS-router snapshots (Table 3), and Hi-C contact-map sequences
+//! (Fig 4) — so a multi-tenant run exercises the service with the same
+//! traffic shapes the paper evaluates.
 
 use super::config::ServiceConfig;
 use super::engine::{ScoringService, ServiceReport};
-use crate::graph::Graph;
-use crate::stream::StreamEvent;
+use crate::datasets::{dos_inject, hic_sequence, oregon_snapshots, wiki_stream};
+use crate::datasets::{HicConfig, OregonConfig, WikiConfig};
+use crate::graph::{DeltaGraph, Graph, GraphSequence};
+use crate::stream::{event, StreamEvent};
 use crate::util::Pcg64;
+
+/// Traffic shape of one tenant in a mixed workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TenantPreset {
+    /// Uniform Erdős–Rényi churn (the original synthetic tenant).
+    Synthetic,
+    /// Evolving hyperlink network with bursty edit storms (Table 2 analog).
+    Wiki,
+    /// AS-router snapshots with an injected star-burst DoS (Table 3 analog).
+    Dos,
+    /// Genomic contact-map sequence with a bifurcation (Fig 4 analog).
+    HiC,
+}
+
+impl TenantPreset {
+    /// Parse a preset name (`synthetic` | `wiki` | `dos` | `hic`).
+    pub fn parse(name: &str) -> Option<Self> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "synthetic" | "er" => Some(Self::Synthetic),
+            "wiki" => Some(Self::Wiki),
+            "dos" => Some(Self::Dos),
+            "hic" | "hi-c" => Some(Self::HiC),
+            _ => None,
+        }
+    }
+
+    /// Parse a comma-separated preset list; `None` if any element is unknown.
+    pub fn parse_list(raw: &str) -> Option<Vec<Self>> {
+        raw.split(',').map(Self::parse).collect()
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Synthetic => "synthetic",
+            Self::Wiki => "wiki",
+            Self::Dos => "dos",
+            Self::HiC => "hic",
+        }
+    }
+}
 
 /// Shape of one synthetic multi-tenant workload.
 #[derive(Debug, Clone)]
 pub struct TenantWorkloadConfig {
     /// Concurrent sessions (tenants).
     pub sessions: usize,
-    /// Tick-separated windows per session.
+    /// Tick-separated windows per session (dataset presets may emit a
+    /// slightly different count, set by their own sequence lengths).
     pub windows: usize,
-    /// Edge events per window.
+    /// Edge events per window (synthetic tenants; dataset presets derive
+    /// their event counts from the generated deltas).
     pub events_per_window: usize,
-    /// Nodes in each session's initial graph.
+    /// Nodes in each session's initial graph (dataset presets scale their
+    /// generator dimensions from this).
     pub nodes_per_session: usize,
+    /// Presets assigned to sessions round-robin; empty means all synthetic.
+    pub presets: Vec<TenantPreset>,
     pub seed: u64,
 }
 
@@ -30,6 +84,7 @@ impl Default for TenantWorkloadConfig {
             windows: 16,
             events_per_window: 60,
             nodes_per_session: 64,
+            presets: Vec::new(),
             seed: 0x5E55,
         }
     }
@@ -39,32 +94,109 @@ impl Default for TenantWorkloadConfig {
 pub type TenantStream = (String, Graph, Vec<StreamEvent>);
 
 /// Generate per-session event streams. Each session gets its own RNG stream
-/// (`Pcg64::with_stream`), so the workload is reproducible and independent
-/// of how sessions are later interleaved.
+/// (`Pcg64::with_stream`) or generator seed, so the workload is reproducible
+/// and independent of how sessions are later interleaved. With a non-empty
+/// `presets` list, session `s` gets `presets[s % len]` and its id is
+/// prefixed with the preset name (`wiki-00003`).
 pub fn tenant_streams(cfg: &TenantWorkloadConfig) -> Vec<TenantStream> {
-    let n = cfg.nodes_per_session.max(2);
     (0..cfg.sessions)
         .map(|s| {
-            let mut rng = Pcg64::with_stream(cfg.seed, s as u64);
-            let initial = crate::generators::erdos_renyi_avg_degree(n, 6.0, &mut rng);
-            let mut events =
-                Vec::with_capacity(cfg.windows * (cfg.events_per_window + 1));
-            for _ in 0..cfg.windows {
-                for _ in 0..cfg.events_per_window {
-                    let i = rng.below(n) as u32;
-                    let j = (i + 1 + rng.below(n - 1) as u32) % n as u32;
-                    let dw = if rng.bernoulli(0.25) {
-                        -rng.uniform(0.1, 1.0) // weaken/delete
-                    } else {
-                        rng.uniform(0.1, 1.0)
-                    };
-                    events.push(StreamEvent::EdgeDelta { i, j, dw });
-                }
-                events.push(StreamEvent::Tick);
-            }
-            (format!("session-{s:05}"), initial, events)
+            let preset = cfg
+                .presets
+                .get(s % cfg.presets.len().max(1))
+                .copied()
+                .unwrap_or(TenantPreset::Synthetic);
+            let (initial, events) = match preset {
+                TenantPreset::Synthetic => synthetic_stream(cfg, s),
+                TenantPreset::Wiki => wiki_tenant(cfg, s),
+                TenantPreset::Dos => dos_tenant(cfg, s),
+                TenantPreset::HiC => hic_tenant(cfg, s),
+            };
+            let id = if cfg.presets.is_empty() {
+                format!("session-{s:05}")
+            } else {
+                format!("{}-{s:05}", preset.name())
+            };
+            (id, initial, events)
         })
         .collect()
+}
+
+fn synthetic_stream(cfg: &TenantWorkloadConfig, s: usize) -> (Graph, Vec<StreamEvent>) {
+    let n = cfg.nodes_per_session.max(2);
+    let mut rng = Pcg64::with_stream(cfg.seed, s as u64);
+    let initial = crate::generators::erdos_renyi_avg_degree(n, 6.0, &mut rng);
+    let mut events = Vec::with_capacity(cfg.windows * (cfg.events_per_window + 1));
+    for _ in 0..cfg.windows {
+        for _ in 0..cfg.events_per_window {
+            let i = rng.below(n) as u32;
+            let j = (i + 1 + rng.below(n - 1) as u32) % n as u32;
+            let dw = if rng.bernoulli(0.25) {
+                -rng.uniform(0.1, 1.0) // weaken/delete
+            } else {
+                rng.uniform(0.1, 1.0)
+            };
+            events.push(StreamEvent::EdgeDelta { i, j, dw });
+        }
+        events.push(StreamEvent::Tick);
+    }
+    (initial, events)
+}
+
+/// Per-tenant generator seed: decorrelates tenants sharing a preset.
+fn tenant_seed(cfg: &TenantWorkloadConfig, s: usize) -> u64 {
+    cfg.seed.wrapping_add((s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+fn wiki_tenant(cfg: &TenantWorkloadConfig, s: usize) -> (Graph, Vec<StreamEvent>) {
+    let n = cfg.nodes_per_session.max(24);
+    let ws = wiki_stream(&WikiConfig {
+        months: cfg.windows.max(2),
+        initial_nodes: n,
+        growth_per_month: (n / 8).max(2),
+        attach: 3,
+        churn_frac: 0.02,
+        burst_months: (cfg.windows / 6).min(3),
+        burst_factor: 6.0,
+        seed: tenant_seed(cfg, s),
+    });
+    (ws.initial, event::events_from_deltas(&ws.deltas))
+}
+
+fn dos_tenant(cfg: &TenantWorkloadConfig, s: usize) -> (Graph, Vec<StreamEvent>) {
+    let seed = tenant_seed(cfg, s);
+    let snaps = oregon_snapshots(&OregonConfig {
+        nodes: cfg.nodes_per_session.max(64),
+        snapshots: cfg.windows.max(2) + 1,
+        attach: 2,
+        drift: 0.02,
+        seed,
+    });
+    // star-burst DoS spliced into one snapshot: 5% of all nodes hit a target
+    let attacked = dos_inject(&snaps, 0.05, &mut Pcg64::with_stream(seed, 1));
+    sequence_stream(&attacked.seq)
+}
+
+fn hic_tenant(cfg: &TenantWorkloadConfig, s: usize) -> (Graph, Vec<StreamEvent>) {
+    let samples = cfg.windows.max(2) + 1;
+    let dim = cfg.nodes_per_session.clamp(24, 480);
+    let seq = hic_sequence(&HicConfig {
+        dim,
+        samples,
+        bifurcation: (samples / 2).max(1),
+        band: (dim / 10).max(4),
+        support_dip: (samples * 2 / 3).max(1),
+        hub_dip: (samples / 4).max(1),
+        seed: tenant_seed(cfg, s),
+    });
+    sequence_stream(&seq)
+}
+
+/// Turn a snapshot sequence into `(initial, tick-separated delta events)`.
+fn sequence_stream(seq: &GraphSequence) -> (Graph, Vec<StreamEvent>) {
+    let deltas: Vec<DeltaGraph> =
+        seq.pairs().map(|(a, b)| DeltaGraph::diff(a, b)).collect();
+    (seq.get(0).clone(), event::events_from_deltas(&deltas))
 }
 
 /// Total event count of a prebuilt workload.
@@ -151,6 +283,60 @@ mod tests {
     }
 
     #[test]
+    fn preset_mix_builds_wire_safe_streams() {
+        let cfg = TenantWorkloadConfig {
+            sessions: 4,
+            windows: 4,
+            events_per_window: 8,
+            nodes_per_session: 32,
+            presets: vec![
+                TenantPreset::Synthetic,
+                TenantPreset::Wiki,
+                TenantPreset::Dos,
+                TenantPreset::HiC,
+            ],
+            seed: 77,
+        };
+        let streams = tenant_streams(&cfg);
+        assert_eq!(streams.len(), 4);
+        for (k, name) in ["synthetic", "wiki", "dos", "hic"].iter().enumerate() {
+            let (id, initial, events) = &streams[k];
+            assert!(id.starts_with(name), "{id} should carry its preset name");
+            assert!(initial.num_nodes() > 0);
+            assert!(events.iter().filter(|e| matches!(e, StreamEvent::Tick)).count() >= 2);
+            // every event must survive the hardened wire parse round-trip
+            // (the net front end serializes exactly these lines)
+            for ev in events {
+                assert_eq!(
+                    StreamEvent::parse(&ev.to_line()).as_ref(),
+                    Some(ev),
+                    "{name} emitted a wire-unsafe event: {ev:?}"
+                );
+            }
+        }
+        // determinism: same config → identical streams
+        let again = tenant_streams(&cfg);
+        for ((ia, _, ea), (ib, _, eb)) in streams.iter().zip(&again) {
+            assert_eq!(ia, ib);
+            assert_eq!(ea, eb);
+        }
+    }
+
+    #[test]
+    fn preset_parse_list() {
+        assert_eq!(
+            TenantPreset::parse_list("wiki, dos,hic,synthetic"),
+            Some(vec![
+                TenantPreset::Wiki,
+                TenantPreset::Dos,
+                TenantPreset::HiC,
+                TenantPreset::Synthetic,
+            ])
+        );
+        assert_eq!(TenantPreset::parse_list("wiki,unknown"), None);
+    }
+
+    #[test]
     fn batched_and_unbatched_drives_agree() {
         let wl_cfg = TenantWorkloadConfig {
             sessions: 6,
@@ -158,6 +344,7 @@ mod tests {
             events_per_window: 10,
             nodes_per_session: 16,
             seed: 9,
+            ..Default::default()
         };
         let workload = tenant_streams(&wl_cfg);
         let svc_cfg = ServiceConfig { shards: 2, ..Default::default() };

@@ -14,18 +14,35 @@ pub enum StreamEvent {
 
 impl StreamEvent {
     /// Parse from a text line: `e i j dw` | `n count` | `t`.
+    ///
+    /// Built for untrusted input (this is the wire format of the net front
+    /// end), so semantically poisonous values are rejected, not just
+    /// syntactic garbage: a non-finite `dw` (NaN/±inf would propagate
+    /// through every Theorem-2 quantity in `FingerState` and stick there)
+    /// and `i == j` self-loop deltas (undefined for the Laplacian model;
+    /// downstream batchers silently skip them, but a reject at the parse
+    /// boundary gives the sender an error instead of silent data loss).
     pub fn parse(line: &str) -> Option<Self> {
         let mut it = line.split_whitespace();
-        match it.next()? {
+        let ev = match it.next()? {
             "e" => {
-                let i = it.next()?.parse().ok()?;
-                let j = it.next()?.parse().ok()?;
-                let dw = it.next()?.parse().ok()?;
-                Some(StreamEvent::EdgeDelta { i, j, dw })
+                let i: u32 = it.next()?.parse().ok()?;
+                let j: u32 = it.next()?.parse().ok()?;
+                let dw: f64 = it.next()?.parse().ok()?;
+                if i == j || !dw.is_finite() {
+                    return None;
+                }
+                StreamEvent::EdgeDelta { i, j, dw }
             }
-            "n" => Some(StreamEvent::GrowNodes { count: it.next()?.parse().ok()? }),
-            "t" => Some(StreamEvent::Tick),
-            _ => None,
+            "n" => StreamEvent::GrowNodes { count: it.next()?.parse().ok()? },
+            "t" => StreamEvent::Tick,
+            _ => return None,
+        };
+        // strict arity: trailing tokens mean a malformed line (e.g. two
+        // events fused by a sender bug) — reject rather than half-apply
+        match it.next() {
+            Some(_) => None,
+            None => Some(ev),
         }
     }
 
@@ -74,6 +91,27 @@ mod tests {
         assert_eq!(StreamEvent::parse("x 1 2"), None);
         assert_eq!(StreamEvent::parse("e 1"), None);
         assert_eq!(StreamEvent::parse(""), None);
+    }
+
+    #[test]
+    fn parse_rejects_poisonous_wire_values() {
+        // non-finite deltas would permanently corrupt FingerState entropy
+        assert_eq!(StreamEvent::parse("e 1 2 NaN"), None);
+        assert_eq!(StreamEvent::parse("e 1 2 nan"), None);
+        assert_eq!(StreamEvent::parse("e 1 2 inf"), None);
+        assert_eq!(StreamEvent::parse("e 1 2 -inf"), None);
+        assert_eq!(StreamEvent::parse("e 1 2 infinity"), None);
+        // self-loop deltas are undefined for the Laplacian model
+        assert_eq!(StreamEvent::parse("e 7 7 1.0"), None);
+        // trailing tokens (two events fused by a sender bug) are rejected
+        assert_eq!(StreamEvent::parse("e 1 2 0.5 0.7"), None);
+        assert_eq!(StreamEvent::parse("n 3 4"), None);
+        assert_eq!(StreamEvent::parse("t t"), None);
+        // ...but ordinary negative deltas (deletions) still parse
+        assert_eq!(
+            StreamEvent::parse("e 1 2 -0.5"),
+            Some(StreamEvent::EdgeDelta { i: 1, j: 2, dw: -0.5 })
+        );
     }
 
     #[test]

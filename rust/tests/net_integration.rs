@@ -1,0 +1,246 @@
+//! Loopback integration tests for the TCP front end: wire scores must match
+//! the in-process pipeline bit-for-bit, malformed lines must be isolated to
+//! one `ERR`, and a graceful shutdown must account for every event sent.
+
+use finger::graph::Graph;
+use finger::net::{run_load, NetClient, NetConfig, NetServer, TrafficConfig};
+use finger::net::{traffic, Response};
+use finger::service::workload::{tenant_streams, TenantStream};
+use finger::service::{
+    ScoringService, ServiceConfig, ServiceReport, TenantPreset, TenantWorkloadConfig,
+};
+use finger::stream::StreamEvent;
+
+/// Boot a server on an ephemeral loopback port; returns its address and the
+/// thread that will yield the final `ServiceReport` after shutdown.
+fn spawn_server(
+    service_cfg: ServiceConfig,
+) -> (String, std::thread::JoinHandle<anyhow::Result<ServiceReport>>) {
+    let net_cfg = NetConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() };
+    let server = NetServer::bind(service_cfg, net_cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().to_string();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn small_workload() -> Vec<TenantStream> {
+    tenant_streams(&TenantWorkloadConfig {
+        sessions: 6,
+        windows: 4,
+        events_per_window: 12,
+        nodes_per_session: 24,
+        presets: vec![TenantPreset::Synthetic, TenantPreset::Wiki],
+        seed: 0x7E57_0BEE,
+    })
+}
+
+/// Mirror of the load driver's per-tenant replay, through the in-process
+/// API: open an empty graph, seed it with the initial edges as window 0,
+/// then submit each tick-delimited window as one batch.
+fn run_in_process(streams: &[TenantStream], shards: usize) -> ServiceReport {
+    let svc = ScoringService::start(ServiceConfig { shards, ..Default::default() });
+    for (id, initial, events) in streams {
+        svc.open_session(id, Graph::new(initial.num_nodes())).unwrap();
+        let seed: Vec<StreamEvent> = initial
+            .edges()
+            .map(|(i, j, w)| StreamEvent::EdgeDelta { i, j, dw: w })
+            .chain(std::iter::once(StreamEvent::Tick))
+            .collect();
+        svc.submit_batch(id, seed).unwrap();
+        for win in events.split_inclusive(|e| matches!(e, StreamEvent::Tick)) {
+            svc.submit_batch(id, win.to_vec()).unwrap();
+        }
+    }
+    svc.finish()
+}
+
+#[test]
+fn concurrent_wire_sessions_match_in_process_scores_bit_for_bit() {
+    let streams = small_workload();
+    let reference = run_in_process(&streams, 3);
+
+    let (addr, server) = spawn_server(ServiceConfig { shards: 3, ..Default::default() });
+    let report = traffic::replay(&addr, 3, true, &streams).expect("load run");
+    NetClient::connect(addr.as_str()).expect("connect").shutdown_server().expect("shutdown");
+    let service_report = server.join().expect("server thread").expect("server run");
+
+    assert_eq!(report.sessions, streams.len());
+    assert_eq!(report.snapshots.len(), streams.len());
+    for snap in &report.snapshots {
+        let reference_session =
+            reference.session(&snap.id).expect("session in reference run");
+        assert_eq!(snap.windows, reference_session.records.len(), "{}", snap.id);
+        assert_eq!(snap.events, reference_session.events, "{}", snap.id);
+        let wire_js = snap.last_jsdist.expect("scored at least one window");
+        let reference_js = reference_session.records.last().unwrap().jsdist;
+        assert_eq!(
+            wire_js.to_bits(),
+            reference_js.to_bits(),
+            "{}: wire jsdist {wire_js} != in-process {reference_js}",
+            snap.id
+        );
+        assert_eq!(
+            snap.htilde.to_bits(),
+            reference_session.htilde.to_bits(),
+            "{}: wire H̃ {} != in-process {}",
+            snap.id,
+            snap.htilde,
+            reference_session.htilde
+        );
+        assert_eq!(
+            snap.anomalies,
+            reference_session.anomalies.len(),
+            "{}: anomaly flags must replay identically",
+            snap.id
+        );
+    }
+    // the drained server saw exactly what the clients acknowledged
+    assert_eq!(service_report.total_events, report.events_sent);
+    assert_eq!(service_report.total_events, reference.total_events);
+    assert_eq!(service_report.dropped_events, 0);
+}
+
+#[test]
+fn malformed_lines_err_without_killing_connection_or_server() {
+    let (addr, server) = spawn_server(ServiceConfig { shards: 2, ..Default::default() });
+    let mut client = NetClient::connect(addr.as_str()).expect("connect");
+
+    for bad in [
+        "GARBAGE 1 2\n",
+        "OPEN onlyid\n",
+        "EV s e 1 1 0.5\n",      // self-loop
+        "EV s e 1 2 NaN\n",      // poisonous delta
+        "EV s e 1 2 inf\n",
+        "BATCH s nope\n",
+        "QUERY bad%zz\n",        // malformed id encoding
+        "STATS andmore\n",
+    ] {
+        match client.roundtrip_raw(bad).expect("connection must survive") {
+            Response::Err(reason) => assert!(!reason.is_empty(), "{bad:?}"),
+            ok => panic!("{bad:?} should ERR, got {ok:?}"),
+        }
+    }
+
+    // a batch with one bad body line is consumed fully, rejected atomically,
+    // and the stream stays line-synchronized
+    client.open("s", 4).expect("open after errors");
+    let batch = "BATCH s 3\ne 0 1 1.0\ne 2 2 1.0\nt\n";
+    match client.roundtrip_raw(batch).expect("batch round-trip") {
+        Response::Err(reason) => {
+            assert!(reason.contains("batch line 2"), "got {reason:?}")
+        }
+        ok => panic!("bad batch should ERR, got {ok:?}"),
+    }
+    // rejected batch left no partial state behind
+    let snap = client.query("s").expect("query").expect("session exists");
+    assert_eq!(snap.events, 0);
+    assert_eq!(snap.pending_events, 0);
+
+    // the same connection still works end to end
+    client
+        .send_batch(
+            "s",
+            &[
+                StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 },
+                StreamEvent::EdgeDelta { i: 1, j: 2, dw: 2.0 },
+                StreamEvent::Tick,
+            ],
+        )
+        .expect("good batch after bad one");
+    let snap = client.query("s").expect("query").expect("session exists");
+    assert_eq!(snap.windows, 1);
+    assert_eq!(snap.edges, 2);
+    assert!(snap.last_jsdist.is_some());
+
+    // a second client is unaffected by the first one's garbage
+    let mut other = NetClient::connect(addr.as_str()).expect("second connect");
+    let stats = other.stats().expect("stats");
+    assert_eq!(stats.shards, 2);
+    assert_eq!(stats.depths.len(), 2);
+    assert_eq!(stats.submitted, 3);
+    other.quit().expect("quit");
+
+    client.shutdown_server().expect("shutdown");
+    let report = server.join().expect("server thread").expect("server run");
+    assert_eq!(report.total_events, 3, "only the good batch was counted");
+    assert_eq!(report.sessions.len(), 1);
+}
+
+#[test]
+fn shutdown_drains_and_accounts_for_every_event_sent() {
+    let (addr, server) = spawn_server(ServiceConfig { shards: 2, ..Default::default() });
+
+    let mut sent = 0usize;
+    let mut clients: Vec<NetClient> = (0..2)
+        .map(|_| NetClient::connect(addr.as_str()).expect("connect"))
+        .collect();
+    for (c, client) in clients.iter_mut().enumerate() {
+        let id = format!("tenant-{c}");
+        client.open(&id, 8).expect("open");
+        for w in 0..3u32 {
+            let mut events: Vec<StreamEvent> = (0..5u32)
+                .map(|k| StreamEvent::EdgeDelta {
+                    i: (w + k) % 8,
+                    j: (w + k + 1) % 8,
+                    dw: 0.5 + k as f64,
+                })
+                .collect();
+            events.push(StreamEvent::Tick);
+            sent += client.send_batch(&id, &events).expect("batch");
+        }
+        // one single-event submit exercises the EV verb too
+        client.send_event(&id, &StreamEvent::Tick).expect("event");
+        sent += 1;
+    }
+    for client in clients {
+        client.quit().expect("quit");
+    }
+
+    NetClient::connect(addr.as_str()).expect("connect").shutdown_server().expect("shutdown");
+    let report = server.join().expect("server thread").expect("server run");
+    assert_eq!(report.total_events, sent);
+    assert_eq!(report.dropped_events, 0);
+    assert_eq!(report.sessions.len(), 2);
+    assert_eq!(report.total_windows(), 8, "3 batched + 1 bare-tick window per tenant");
+    for session in &report.sessions {
+        assert_eq!(session.events, sent / 2);
+    }
+}
+
+#[test]
+fn run_load_presets_round_trip_over_the_wire() {
+    let (addr, server) = spawn_server(ServiceConfig { shards: 4, ..Default::default() });
+    let report = run_load(&TrafficConfig {
+        addr,
+        connections: 4,
+        workload: TenantWorkloadConfig {
+            sessions: 4,
+            windows: 3,
+            events_per_window: 8,
+            nodes_per_session: 24,
+            presets: vec![
+                TenantPreset::Synthetic,
+                TenantPreset::Wiki,
+                TenantPreset::Dos,
+                TenantPreset::HiC,
+            ],
+            seed: 11,
+        },
+        query_sessions: true,
+        shutdown_after: true,
+    })
+    .expect("load");
+    let service_report = server.join().expect("server thread").expect("server run");
+
+    assert_eq!(report.sessions, 4);
+    assert!(report.windows > 0, "every preset must score windows");
+    assert_eq!(service_report.total_events, report.events_sent);
+    // snapshots are sorted by session id, hence alphabetical preset order
+    for (preset, snap) in
+        ["dos", "hic", "synthetic", "wiki"].iter().zip(&report.snapshots)
+    {
+        assert!(snap.id.starts_with(preset), "{}", snap.id);
+        assert!(snap.windows >= 2, "{}: too few windows", snap.id);
+        assert!(snap.htilde.is_finite());
+    }
+    assert!(report.events_per_sec > 0.0);
+}

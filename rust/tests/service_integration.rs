@@ -19,6 +19,7 @@ fn small_workload(sessions: usize, windows: usize) -> Vec<workload::TenantStream
         events_per_window: 12,
         nodes_per_session: 20,
         seed: 0x7E57,
+        ..Default::default()
     })
 }
 
