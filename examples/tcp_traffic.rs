@@ -1,7 +1,10 @@
 //! End-to-end TCP traffic demo: boot the network front end on an ephemeral
-//! loopback port, replay a mixed dataset-preset workload (wiki + DoS + Hi-C
-//! + synthetic tenants) over concurrent connections, query live stats, then
-//! shut the server down gracefully and print its final report.
+//! loopback port, then replay the same mixed dataset-preset workload (wiki
+//! + DoS + Hi-C + synthetic tenants) twice against that one server — once
+//! on the text wire, once on the binary wire (the server negotiates the
+//! codec per connection on its first byte) — print the throughput ratio,
+//! query live stats, retire one session with `CLOSE`, and shut the server
+//! down gracefully.
 //!
 //! ```bash
 //! cargo run --release --offline --example tcp_traffic \
@@ -9,7 +12,7 @@
 //! ```
 
 use finger::cli::Args;
-use finger::net::{NetClient, NetConfig, NetServer, TrafficConfig};
+use finger::net::{NetClient, NetConfig, NetServer, TrafficConfig, TrafficReport, Wire};
 use finger::service::{ServiceConfig, TenantPreset, TenantWorkloadConfig};
 
 fn main() -> anyhow::Result<()> {
@@ -19,9 +22,10 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let net_cfg = NetConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() };
+    let client_timeout = net_cfg.client_timeout();
     let server = NetServer::bind(service_cfg, net_cfg)?;
     let addr = server.local_addr().to_string();
-    println!("server listening on {addr}");
+    println!("server listening on {addr} (wire negotiated per connection)");
     let server_thread = std::thread::spawn(move || server.run());
 
     let workload = TenantWorkloadConfig {
@@ -37,34 +41,63 @@ fn main() -> anyhow::Result<()> {
         ],
         seed: args.get_parsed("seed", 0x7C9u64),
     };
-    let report = finger::net::run_load(&TrafficConfig {
-        addr: addr.clone(),
-        connections: args.get_parsed("connections", 4usize).max(1),
-        workload,
-        query_sessions: true,
-        shutdown_after: false,
-    })?;
+    let connections = args.get_parsed("connections", 4usize).max(1);
+
+    // same workload, same server, both wires — OPEN resets each session, so
+    // the second replay starts from scratch and the runs are comparable
+    let mut reports: Vec<TrafficReport> = Vec::new();
+    for wire in [Wire::Text, Wire::Binary] {
+        let report = finger::net::run_load(&TrafficConfig {
+            addr: addr.clone(),
+            wire,
+            client_timeout,
+            connections,
+            workload: workload.clone(),
+            query_sessions: true,
+            shutdown_after: false,
+        })?;
+        println!(
+            "{:>6} wire: {} events for {} sessions over {} connections in {:.3}s \
+             → {:.0} events/s end-to-end ({} windows, {} anomalous)",
+            wire.name(),
+            report.events_sent,
+            report.sessions,
+            report.connections,
+            report.wall_secs,
+            report.events_per_sec,
+            report.windows,
+            report.anomalies,
+        );
+        reports.push(report);
+    }
+    let (text, binary) = (&reports[0], &reports[1]);
     println!(
-        "replayed {} events for {} sessions over {} connections in {:.3}s \
-         → {:.0} events/s end-to-end",
-        report.events_sent,
-        report.sessions,
-        report.connections,
-        report.wall_secs,
-        report.events_per_sec,
+        "binary/text throughput ratio: {:.2}x",
+        binary.events_per_sec / text.events_per_sec.max(1e-12)
     );
-    println!("server-side: {} windows scored, {} anomalous", report.windows, report.anomalies);
-    for snap in report.snapshots.iter().take(4) {
+    // both wires replayed identical streams → identical scores, bit for bit
+    for (t, b) in text.snapshots.iter().zip(&binary.snapshots) {
+        assert_eq!(t.htilde.to_bits(), b.htilde.to_bits(), "{}: wires disagree", t.id);
+    }
+    for snap in binary.snapshots.iter().take(4) {
         println!(
             "  {:<16} windows={:<3} H̃={:.4} n={} m={} anomalies={}",
             snap.id, snap.windows, snap.htilde, snap.nodes, snap.edges, snap.anomalies
         );
     }
 
-    // live operator view before shutdown
-    let mut probe = NetClient::connect(addr.as_str())?;
+    // live operator view, then retire one session with CLOSE
+    let mut probe = NetClient::connect_with(addr.as_str(), Wire::Binary, client_timeout)?;
     let stats = probe.stats()?;
     println!("queue depths at idle: {:?} ({} events accepted)", stats.depths, stats.submitted);
+    if let Some(first) = binary.snapshots.first() {
+        let closed = probe.close(&first.id)?.expect("session is live");
+        println!(
+            "closed {:<16} final: windows={} events={} H̃={:.4}",
+            closed.id, closed.windows, closed.events, closed.htilde
+        );
+        assert!(probe.query(&first.id)?.is_none(), "closed session must be gone");
+    }
     probe.quit()?;
 
     NetClient::connect(addr.as_str())?.shutdown_server()?;

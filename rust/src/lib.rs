@@ -8,8 +8,11 @@
 //!   substrate, exact and approximate VNGE, Jensen–Shannon graph distance,
 //!   eleven baseline dissimilarity methods, anomaly/bifurcation evaluation,
 //!   a threaded streaming pipeline, a sharded multi-session scoring service
-//!   (`service`), a line-protocol TCP front end + load driver putting that
-//!   service on a socket (`net`), and a PJRT runtime that executes
+//!   (`service`), a TCP front end + load driver putting that service on a
+//!   socket (`net` — a typed `Command`/`Reply` core with two pluggable wire
+//!   codecs negotiated per connection: the `nc`-friendly text line protocol
+//!   and a length-prefixed binary framing for high-rate feeds, see
+//!   `docs/PROTOCOL.md`), and a PJRT runtime that executes
 //!   AOT-compiled XLA artifacts (built once by `make artifacts`; gated
 //!   behind the `xla` cargo feature).
 //! * **L2 (python/compile/model.py)** — dense JAX compute graphs (Q-statistics,

@@ -25,7 +25,7 @@ use finger::coordinator::report;
 use finger::datasets::{HicConfig, OregonConfig, WikiConfig};
 use finger::entropy::{exact_vnge, finger_hhat, finger_htilde};
 use finger::graph::{io as gio, Graph};
-use finger::net::{traffic, NetClient, NetConfig, NetServer, TrafficConfig};
+use finger::net::{traffic, NetClient, NetConfig, NetServer, TrafficConfig, Wire, WireMode};
 use finger::service::{workload, ServiceConfig, TenantPreset, TenantWorkloadConfig};
 use finger::stream::{event, Pipeline, PipelineConfig};
 use finger::util::Pcg64;
@@ -77,9 +77,11 @@ fn print_help() {
                        [--nodes N] [--capacity C] [--producers P] [--seed S]\n\
                        [--config run.toml] [--per-event]\n\
            serve       [--addr 127.0.0.1:7341] [--shards N] [--capacity C]\n\
-                       [--config run.toml]   (config sections: [service], [net])\n\
+                       [--wire auto|text|binary] [--config run.toml]\n\
+                       (config sections: [service], [net])\n\
            load        [--addr 127.0.0.1:7341] [--connections 1,2,4,8]\n\
-                       [--sessions N] [--windows W] [--events E] [--nodes N]\n\
+                       [--wire text,binary] [--sessions N] [--windows W]\n\
+                       [--events E] [--nodes N] [--timeout-ms T]\n\
                        [--presets wiki,dos,hic,synthetic] [--seed S]\n\
                        [--bench-out BENCH_net.json] [--config run.toml] [--shutdown]\n\
            offload     [--artifacts DIR]"
@@ -314,12 +316,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(addr) = args.get("addr") {
         net_cfg.addr = addr.to_string();
     }
+    if let Some(raw) = args.get("wire") {
+        net_cfg.wire = WireMode::parse(raw)
+            .with_context(|| format!("unknown wire {raw:?} (want auto|text|binary)"))?;
+    }
+    let wire_mode = net_cfg.wire;
     let server = NetServer::bind(service_cfg.clone(), net_cfg)?;
     println!(
-        "serve: listening on {} ({} shards, capacity {}); send SHUTDOWN to stop",
+        "serve: listening on {} ({} shards, capacity {}, wire {}); send SHUTDOWN to stop",
         server.local_addr(),
         service_cfg.shards,
         service_cfg.channel_capacity,
+        wire_mode.name(),
     );
     let report = server.run()?;
     println!(
@@ -359,57 +367,79 @@ fn cmd_load(args: &Args) -> Result<()> {
         seed: args.get_parsed("seed", 0x5E55u64),
     };
     let connection_counts = args.get_list("connections", &[1usize, 2, 4, 8]);
+    let wires: Vec<Wire> = match args.get("wire") {
+        None => vec![net_cfg.wire.client_wire()],
+        Some(raw) => raw
+            .split(',')
+            .map(|t| {
+                Wire::parse(t.trim())
+                    .with_context(|| format!("unknown wire {t:?} (want text|binary)"))
+            })
+            .collect::<Result<_>>()?,
+    };
+    let timeout_ms = args.get_parsed("timeout-ms", net_cfg.client_timeout_ms);
+    let client_timeout =
+        (timeout_ms > 0).then(|| std::time::Duration::from_millis(timeout_ms));
     println!(
         "load: {} sessions ({} presets) × {} windows against {} — \
-         connection sweep {:?}",
+         connection sweep {:?} on {:?} wire(s)",
         workload.sessions,
         traffic::preset_summary(&workload),
         workload.windows,
         net_cfg.addr,
         connection_counts,
+        wires.iter().map(|w| w.name()).collect::<Vec<_>>(),
     );
     println!(
-        "{:<12} {:>12} {:>12} {:>12} {:>14}",
-        "connections", "events", "windows", "wall", "events/s"
+        "{:<8} {:<12} {:>12} {:>12} {:>12} {:>14}",
+        "wire", "connections", "events", "windows", "wall", "events/s"
     );
     let mut records = Vec::new();
     let mut total_windows = 0usize;
-    for &connections in &connection_counts {
-        let report = traffic::run_load(&TrafficConfig {
-            addr: net_cfg.addr.clone(),
-            connections,
-            workload: workload.clone(),
-            query_sessions: true,
-            shutdown_after: false,
-        })?;
-        total_windows += report.windows;
-        println!(
-            "{:<12} {:>12} {:>12} {:>12} {:>14.0}",
-            report.connections,
-            report.events_sent,
-            report.windows,
-            finger::util::fmt::secs(report.wall_secs),
-            report.events_per_sec,
-        );
-        // label records with the connection count that actually ran —
-        // replay() clamps the request to the tenant count
-        let conns = report.connections;
-        if conns != connections {
-            println!("  (requested {connections} connections, clamped to {conns})");
+    for &wire in &wires {
+        for &connections in &connection_counts {
+            let report = traffic::run_load(&TrafficConfig {
+                addr: net_cfg.addr.clone(),
+                wire,
+                client_timeout,
+                connections,
+                workload: workload.clone(),
+                query_sessions: true,
+                shutdown_after: false,
+            })?;
+            total_windows += report.windows;
+            println!(
+                "{:<8} {:<12} {:>12} {:>12} {:>12} {:>14.0}",
+                wire.name(),
+                report.connections,
+                report.events_sent,
+                report.windows,
+                finger::util::fmt::secs(report.wall_secs),
+                report.events_per_sec,
+            );
+            // label records with the connection count that actually ran —
+            // replay() clamps the request to the tenant count
+            let conns = report.connections;
+            if conns != connections {
+                println!("  (requested {connections} connections, clamped to {conns})");
+            }
+            records.push(BenchRecord::metric(
+                format!("net_throughput_{}_conns_{conns}", wire.name()),
+                report.events_per_sec,
+                "events_per_sec",
+            ));
+            records.push(BenchRecord::metric(
+                format!("net_windows_{}_conns_{conns}", wire.name()),
+                report.windows as f64,
+                "windows",
+            ));
         }
-        records.push(BenchRecord::metric(
-            format!("net_throughput_conns_{conns}"),
-            report.events_per_sec,
-            "events_per_sec",
-        ));
-        records.push(BenchRecord::metric(
-            format!("net_windows_conns_{conns}"),
-            report.windows as f64,
-            "windows",
-        ));
     }
     if args.flag("shutdown") {
-        NetClient::connect(net_cfg.addr.as_str())?.shutdown_server()?;
+        // speak a wire the sweep just used — a `serve --wire binary` server
+        // refuses a text connection, and the records must still be written
+        NetClient::connect_with(net_cfg.addr.as_str(), wires[0], client_timeout)?
+            .shutdown_server()?;
         println!("load: sent SHUTDOWN to {}", net_cfg.addr);
     }
     let out = args.get("bench-out").unwrap_or("BENCH_net.json");

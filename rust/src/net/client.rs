@@ -1,19 +1,24 @@
-//! Small blocking client for the line protocol — used by the load driver
-//! (`net::traffic`), the integration tests and `examples/tcp_traffic.rs`.
+//! Small blocking client, generic over the wire codec — used by the load
+//! driver (`net::traffic`), the integration tests and
+//! `examples/tcp_traffic.rs`.
 //!
-//! One request, one reply: every helper writes a line (a `BATCH` writes the
-//! header plus its body in a single buffered syscall) and blocks on the
-//! one-line response. Protocol-level failures surface as `anyhow` errors
-//! carrying the server's `ERR` reason.
+//! One command, one reply: every helper writes one complete frame (a
+//! `BATCH` is its header plus body in a single buffered syscall) and blocks
+//! on the one-frame response. Protocol-level failures surface as `anyhow`
+//! errors carrying the server's `Err` reason; a configured read timeout
+//! turns a hung server into a clean timeout error instead of blocking
+//! forever.
 
-use super::proto::{snapshot_from_response, Request, Response};
+use super::codec::{write_binary_preamble, Codec, Wire};
+use super::command::{Command, Reply};
 use crate::service::SessionSnapshot;
 use crate::stream::StreamEvent;
 use anyhow::{bail, Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
 
-/// Per-shard queue depths and service totals from the `STATS` verb.
+/// Per-shard queue depths and service totals from the `Stats` command.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NetStats {
     pub shards: usize,
@@ -23,96 +28,143 @@ pub struct NetStats {
     pub submitted: usize,
 }
 
-/// A blocking connection to a `finger serve` instance.
+/// A blocking connection to a `finger serve` instance, speaking either wire.
 pub struct NetClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    codec: Box<dyn Codec>,
+    /// Reply-read deadline, for error messages.
+    timeout: Option<Duration>,
+    /// Write-side frame buffer: one frame, one syscall.
+    wbuf: Vec<u8>,
 }
 
 impl NetClient {
+    /// Connect on the text wire with no read deadline (the conservative
+    /// default — matches the v1 client).
     pub fn connect(addr: impl ToSocketAddrs + std::fmt::Debug) -> Result<Self> {
+        Self::connect_with(addr, Wire::Text, None)
+    }
+
+    /// Connect speaking `wire`, optionally bounding every reply read by
+    /// `timeout` (`[net] client_timeout_ms`). A binary connection sends its
+    /// two-byte preamble immediately, so the server can negotiate on the
+    /// first byte.
+    pub fn connect_with(
+        addr: impl ToSocketAddrs + std::fmt::Debug,
+        wire: Wire,
+        timeout: Option<Duration>,
+    ) -> Result<Self> {
         let stream =
             TcpStream::connect(&addr).with_context(|| format!("connect {addr:?}"))?;
         stream.set_nodelay(true).ok();
-        let reader = BufReader::new(stream.try_clone().context("clone stream")?);
-        Ok(Self { reader, writer: stream })
-    }
-
-    /// Send raw bytes (already newline-terminated) and read one reply line.
-    /// Exposed for protocol tests; normal callers use the typed helpers.
-    pub fn roundtrip_raw(&mut self, payload: &str) -> Result<Response> {
-        self.writer.write_all(payload.as_bytes()).context("send")?;
-        let mut line = String::new();
-        let n = self.reader.read_line(&mut line).context("read reply")?;
-        if n == 0 {
-            bail!("server closed the connection");
+        stream.set_read_timeout(timeout).context("set_read_timeout")?;
+        let mut writer = stream.try_clone().context("clone stream")?;
+        if wire == Wire::Binary {
+            write_binary_preamble(&mut writer).context("send binary preamble")?;
         }
-        Response::parse(&line).map_err(anyhow::Error::msg)
+        let reader = BufReader::new(stream);
+        Ok(Self { reader, writer, codec: wire.codec(), timeout, wbuf: Vec::new() })
     }
 
-    fn roundtrip(&mut self, req: &Request) -> Result<Response> {
-        let mut line = req.to_line();
-        line.push('\n');
-        self.roundtrip_raw(&line)
+    /// The wire this connection speaks.
+    pub fn wire(&self) -> Wire {
+        self.codec.wire()
     }
 
-    /// Like `roundtrip`, but converts `ERR` replies into errors.
-    fn expect_ok(&mut self, req: &Request) -> Result<Response> {
-        match self.roundtrip(req)? {
-            Response::Err(reason) => bail!("server: {reason}"),
+    /// Read one reply frame, mapping EOF and read deadlines to clean errors.
+    fn read_reply(&mut self) -> Result<Reply> {
+        match self.codec.read_reply(&mut self.reader as &mut dyn BufRead) {
+            Ok(Some(reply)) => Ok(reply),
+            Ok(None) => bail!("server closed the connection"),
+            Err(e)
+                if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) =>
+            {
+                bail!(
+                    "read timed out after {:?}: server unresponsive",
+                    self.timeout.unwrap_or_default()
+                )
+            }
+            Err(e) => Err(anyhow::Error::new(e).context("read reply")),
+        }
+    }
+
+    /// Send raw pre-framed bytes and read one reply. Exposed for protocol
+    /// tests that speak `nc`-style text; the bytes must be one complete
+    /// frame in this connection's wire format.
+    pub fn roundtrip_raw(&mut self, payload: &[u8]) -> Result<Reply> {
+        self.writer.write_all(payload).context("send")?;
+        self.read_reply()
+    }
+
+    /// One command, one reply.
+    pub fn roundtrip(&mut self, cmd: &Command) -> Result<Reply> {
+        self.wbuf.clear();
+        self.codec.write_command(&mut self.wbuf, cmd).context("encode command")?;
+        self.writer.write_all(&self.wbuf).context("send")?;
+        self.read_reply()
+    }
+
+    /// Like `roundtrip`, but converts `Err` replies into errors.
+    fn expect_ok(&mut self, cmd: &Command) -> Result<Reply> {
+        match self.roundtrip(cmd)? {
+            Reply::Err(reason) => bail!("server: {reason}"),
             ok => Ok(ok),
         }
     }
 
     /// (Re)open `id` with a fresh `nodes`-node empty graph.
     pub fn open(&mut self, id: &str, nodes: usize) -> Result<()> {
-        self.expect_ok(&Request::Open { id: id.to_string(), nodes })?;
+        self.expect_ok(&Command::Open { id: id.to_string(), nodes })?;
         Ok(())
     }
 
     /// Submit one event.
     pub fn send_event(&mut self, id: &str, ev: &StreamEvent) -> Result<()> {
-        self.expect_ok(&Request::Event { id: id.to_string(), ev: ev.clone() })?;
+        self.expect_ok(&Command::Event { id: id.to_string(), ev: ev.clone() })?;
         Ok(())
     }
 
-    /// Submit a whole batch as one header + body write and one reply read.
-    /// Returns the number of events the server accepted.
+    /// Submit a whole batch as one frame write and one reply read. Returns
+    /// the number of events the server accepted. Encodes straight from the
+    /// borrowed slice (`Codec::write_batch`) — the load driver sends one
+    /// window per call and must not clone it into a `Command` first.
     pub fn send_batch(&mut self, id: &str, events: &[StreamEvent]) -> Result<usize> {
         if events.is_empty() {
             return Ok(0);
         }
-        let header = Request::Batch { id: id.to_string(), count: events.len() };
-        let mut payload = header.to_line();
-        payload.push('\n');
-        for ev in events {
-            payload.push_str(&ev.to_line());
-            payload.push('\n');
-        }
-        let resp = self.roundtrip_raw(&payload)?;
-        match resp {
-            Response::Err(reason) => bail!("server: {reason}"),
-            ok => ok
-                .get_parsed("accepted")
-                .context("BATCH reply missing accepted count"),
+        self.wbuf.clear();
+        self.codec.write_batch(&mut self.wbuf, id, events).context("encode batch")?;
+        self.writer.write_all(&self.wbuf).context("send")?;
+        match self.read_reply()? {
+            Reply::Err(reason) => bail!("server: {reason}"),
+            ok => ok.get_parsed("accepted").context("BATCH reply missing accepted count"),
         }
     }
 
     /// Point-in-time stats of `id`; `None` if the server knows no such
     /// session.
     pub fn query(&mut self, id: &str) -> Result<Option<SessionSnapshot>> {
-        match self.roundtrip(&Request::Query { id: id.to_string() })? {
-            Response::Err(reason) if reason == "unknown-session" => Ok(None),
-            Response::Err(reason) => bail!("server: {reason}"),
-            ok => Ok(Some(
-                snapshot_from_response(id, &ok).context("malformed QUERY reply")?,
-            )),
+        match self.roundtrip(&Command::Query { id: id.to_string() })? {
+            Reply::Err(reason) if reason == "unknown-session" => Ok(None),
+            Reply::Err(reason) => bail!("server: {reason}"),
+            ok => Ok(Some(ok.into_snapshot(id).context("malformed QUERY reply")?)),
+        }
+    }
+
+    /// Retire session `id`, returning its final snapshot (trailing partial
+    /// window flushed); `None` if the server knows no such session.
+    pub fn close(&mut self, id: &str) -> Result<Option<SessionSnapshot>> {
+        match self.roundtrip(&Command::Close { id: id.to_string() })? {
+            Reply::Err(reason) if reason == "unknown-session" => Ok(None),
+            Reply::Err(reason) => bail!("server: {reason}"),
+            ok => Ok(Some(ok.into_snapshot(id).context("malformed CLOSE reply")?)),
         }
     }
 
     /// Per-shard queue depths and totals.
     pub fn stats(&mut self) -> Result<NetStats> {
-        let resp = self.expect_ok(&Request::Stats)?;
+        let resp = self.expect_ok(&Command::Stats)?;
         let depths_raw = resp.get("depths").context("STATS reply missing depths")?;
         let depths: Vec<usize> = if depths_raw.is_empty() {
             Vec::new()
@@ -133,14 +185,14 @@ impl NetClient {
 
     /// Close this connection politely (the server keeps running).
     pub fn quit(mut self) -> Result<()> {
-        self.expect_ok(&Request::Quit)?;
+        self.expect_ok(&Command::Quit)?;
         Ok(())
     }
 
     /// Ask the server to drain and stop. The connection is closed by the
-    /// server after the `OK`.
+    /// server after the `Ok`.
     pub fn shutdown_server(mut self) -> Result<()> {
-        self.expect_ok(&Request::Shutdown)?;
+        self.expect_ok(&Command::Shutdown)?;
         Ok(())
     }
 }

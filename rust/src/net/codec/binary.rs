@@ -1,0 +1,745 @@
+//! [`BinaryCodec`] — length-prefixed binary framing (wire v2).
+//!
+//! A binary connection opens with the two-byte preamble
+//! ([`BINARY_MAGIC`](super::BINARY_MAGIC),
+//! [`BINARY_VERSION`](super::BINARY_VERSION)); after that, every command and
+//! every reply is one self-delimiting frame:
+//!
+//! ```text
+//! frame   := opcode:u8 payload
+//! varint  := LEB128 unsigned (≤ 10 bytes, strict: overflow past u64 is
+//!            rejected, never truncated)
+//! string  := varint byte-length, then that many UTF-8 bytes (no escaping —
+//!            ids travel raw, unlike the text wire's %XX form)
+//! f64     := 8 bytes, little-endian IEEE-754 bits (scores and event
+//!            weights stay bit-for-bit across the wire)
+//! event   := 0x00 varint(i) varint(j) f64(dw)   — edge delta
+//!          | 0x01 varint(count)                 — grow nodes
+//!          | 0x02                               — tick
+//! ```
+//!
+//! Command opcodes: `0x01 OPEN(id, varint nodes)`, `0x02 EV(id, event)`,
+//! `0x03 BATCH(id, varint k, k×event)`, `0x04 QUERY(id)`, `0x05 CLOSE(id)`,
+//! `0x06 STATS`, `0x07 QUIT`, `0x08 SHUTDOWN`.
+//! Reply opcodes: `0x80 OK`, `0x81 OKKV(varint n, n×(string,string))`,
+//! `0x82 SNAPSHOT(varint windows, varint events, varint nodes, varint
+//! edges, varint anomalies, varint pending, u8 anomalous, f64 htilde, u8
+//! has_jsdist [, f64 jsdist])`, `0x83 ERR(string)`.
+//!
+//! Error handling splits by whether framing survives: *semantic* failures
+//! on a fully-read frame (self-loop, non-finite `dw`, `OPEN`/grow counts
+//! over [`MAX_OPEN_NODES`]) are recoverable `Malformed` reads — the server
+//! replies `ERR` and the connection continues, mirroring the text wire.
+//! *Syntactic* failures (unknown opcode or tag, oversized length prefix,
+//! invalid UTF-8) mean the stream position can no longer be trusted, so
+//! they are fatal `InvalidData` errors and the connection closes.
+
+use super::super::command::{
+    validate_wire_event, Command, Reply, MAX_BATCH, MAX_LINE, MAX_OPEN_NODES,
+};
+use super::{read_exact_deadline, read_exact_polled, Codec, CommandRead, ReadExact, Wire};
+use crate::service::SessionSnapshot;
+use crate::stream::StreamEvent;
+use std::io::{BufRead, Error, ErrorKind, Result, Write};
+
+// Command opcodes.
+const OP_OPEN: u8 = 0x01;
+const OP_EV: u8 = 0x02;
+const OP_BATCH: u8 = 0x03;
+const OP_QUERY: u8 = 0x04;
+const OP_CLOSE: u8 = 0x05;
+const OP_STATS: u8 = 0x06;
+const OP_QUIT: u8 = 0x07;
+const OP_SHUTDOWN: u8 = 0x08;
+
+// Reply opcodes.
+const OP_OK: u8 = 0x80;
+const OP_OKKV: u8 = 0x81;
+const OP_SNAPSHOT: u8 = 0x82;
+const OP_ERR: u8 = 0x83;
+
+// Event tags.
+const EV_EDGE: u8 = 0x00;
+const EV_GROW: u8 = 0x01;
+const EV_TICK: u8 = 0x02;
+
+/// Upper bound on `OKKV` pair counts — far above any real reply, low enough
+/// that a corrupt length prefix can't make a client allocate unboundedly.
+const MAX_KV_PAIRS: usize = 1 << 12;
+
+fn bad(msg: impl Into<String>) -> Error {
+    Error::new(ErrorKind::InvalidData, msg.into())
+}
+
+/// The binary codec. Stateless apart from a reusable frame buffer.
+#[derive(Debug, Default)]
+pub struct BinaryCodec {
+    buf: Vec<u8>,
+}
+
+impl BinaryCodec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Encode one command frame into `out` (exposed for tests and sizing).
+    pub fn encode_command(out: &mut Vec<u8>, cmd: &Command) {
+        match cmd {
+            Command::Open { id, nodes } => {
+                out.push(OP_OPEN);
+                put_string(out, id);
+                put_varint(out, *nodes as u64);
+            }
+            Command::Event { id, ev } => {
+                out.push(OP_EV);
+                put_string(out, id);
+                put_event(out, ev);
+            }
+            Command::Batch { id, events } => Self::encode_batch(out, id, events),
+            Command::Query { id } => {
+                out.push(OP_QUERY);
+                put_string(out, id);
+            }
+            Command::Close { id } => {
+                out.push(OP_CLOSE);
+                put_string(out, id);
+            }
+            Command::Stats => out.push(OP_STATS),
+            Command::Quit => out.push(OP_QUIT),
+            Command::Shutdown => out.push(OP_SHUTDOWN),
+        }
+    }
+
+    /// Encode a `BATCH` frame from a borrowed event slice.
+    fn encode_batch(out: &mut Vec<u8>, id: &str, events: &[StreamEvent]) {
+        out.push(OP_BATCH);
+        put_string(out, id);
+        put_varint(out, events.len() as u64);
+        for ev in events {
+            put_event(out, ev);
+        }
+    }
+
+    /// Encode one reply frame into `out`.
+    pub fn encode_reply(out: &mut Vec<u8>, reply: &Reply) {
+        match reply {
+            Reply::Ok => out.push(OP_OK),
+            Reply::OkKv(pairs) => {
+                out.push(OP_OKKV);
+                put_varint(out, pairs.len() as u64);
+                for (k, v) in pairs {
+                    put_string(out, k);
+                    put_string(out, v);
+                }
+            }
+            Reply::Snapshot(s) => {
+                out.push(OP_SNAPSHOT);
+                put_varint(out, s.windows as u64);
+                put_varint(out, s.events as u64);
+                put_varint(out, s.nodes as u64);
+                put_varint(out, s.edges as u64);
+                put_varint(out, s.anomalies as u64);
+                put_varint(out, s.pending_events as u64);
+                out.push(s.last_anomalous as u8);
+                out.extend_from_slice(&s.htilde.to_bits().to_le_bytes());
+                match s.last_jsdist {
+                    Some(js) => {
+                        out.push(1);
+                        out.extend_from_slice(&js.to_bits().to_le_bytes());
+                    }
+                    None => out.push(0),
+                }
+            }
+            Reply::Err(reason) => {
+                out.push(OP_ERR);
+                put_string(out, reason);
+            }
+        }
+    }
+}
+
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+fn put_string(out: &mut Vec<u8>, s: &str) {
+    put_varint(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_event(out: &mut Vec<u8>, ev: &StreamEvent) {
+    match *ev {
+        StreamEvent::EdgeDelta { i, j, dw } => {
+            out.push(EV_EDGE);
+            put_varint(out, i as u64);
+            put_varint(out, j as u64);
+            out.extend_from_slice(&dw.to_bits().to_le_bytes());
+        }
+        StreamEvent::GrowNodes { count } => {
+            out.push(EV_GROW);
+            put_varint(out, count as u64);
+        }
+        StreamEvent::Tick => out.push(EV_TICK),
+    }
+}
+
+/// How a frame read treats a socket read timeout: the server polls its
+/// shutdown flag and keeps waiting; the client treats the timeout as its
+/// reply deadline and fails the read (a hung server must surface as an
+/// error, never a wedge).
+#[derive(Clone, Copy)]
+enum ReadMode<'a> {
+    Poll(&'a dyn Fn() -> bool),
+    Deadline,
+}
+
+/// A byte reader over one frame: every primitive read either completes,
+/// interrupts (shutdown observed in `Poll` mode), or fails fatally. EOF
+/// inside a frame is `UnexpectedEof`; EOF before the opcode is the clean
+/// kind.
+struct FrameReader<'a> {
+    r: &'a mut dyn BufRead,
+    mode: ReadMode<'a>,
+}
+
+/// A primitive read either yields a value or observes the stop flag.
+enum P<T> {
+    Val(T),
+    Interrupted,
+}
+
+macro_rules! prim {
+    ($e:expr) => {
+        match $e {
+            P::Val(v) => v,
+            P::Interrupted => return Ok(None),
+        }
+    };
+}
+
+impl FrameReader<'_> {
+    fn read_exact(&mut self, buf: &mut [u8]) -> Result<ReadExact> {
+        match self.mode {
+            ReadMode::Poll(stop) => read_exact_polled(self.r, buf, stop),
+            ReadMode::Deadline => read_exact_deadline(self.r, buf),
+        }
+    }
+
+    fn u8(&mut self) -> Result<P<u8>> {
+        let mut b = [0u8; 1];
+        match self.read_exact(&mut b)? {
+            ReadExact::Done => Ok(P::Val(b[0])),
+            ReadExact::Eof => Err(Error::new(
+                ErrorKind::UnexpectedEof,
+                "connection closed mid-frame",
+            )),
+            ReadExact::Interrupted => Ok(P::Interrupted),
+        }
+    }
+
+    fn varint(&mut self) -> Result<P<u64>> {
+        let mut v: u64 = 0;
+        for shift in (0..64).step_by(7) {
+            let byte = match self.u8()? {
+                P::Val(b) => b,
+                P::Interrupted => return Ok(P::Interrupted),
+            };
+            // the 10th byte lands at shift 63 and may only carry one bit;
+            // anything more would silently truncate — reject, or a crafted
+            // length prefix decodes small and the rest of its payload gets
+            // misparsed as fresh frames
+            if shift == 63 && byte & 0x7E != 0 {
+                return Err(bad("varint overflows u64"));
+            }
+            v |= u64::from(byte & 0x7F) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(P::Val(v));
+            }
+        }
+        Err(bad("varint longer than 10 bytes"))
+    }
+
+    fn usize_bounded(&mut self, max: usize, what: &str) -> Result<P<usize>> {
+        match self.varint()? {
+            P::Val(v) if v <= max as u64 => Ok(P::Val(v as usize)),
+            P::Val(v) => Err(bad(format!("{what} {v} exceeds maximum {max}"))),
+            P::Interrupted => Ok(P::Interrupted),
+        }
+    }
+
+    fn f64(&mut self) -> Result<P<f64>> {
+        let mut b = [0u8; 8];
+        match self.read_exact(&mut b)? {
+            ReadExact::Done => Ok(P::Val(f64::from_bits(u64::from_le_bytes(b)))),
+            ReadExact::Eof => Err(Error::new(
+                ErrorKind::UnexpectedEof,
+                "connection closed mid-frame",
+            )),
+            ReadExact::Interrupted => Ok(P::Interrupted),
+        }
+    }
+
+    fn string(&mut self) -> Result<P<String>> {
+        let len = match self.usize_bounded(MAX_LINE, "string length")? {
+            P::Val(v) => v,
+            P::Interrupted => return Ok(P::Interrupted),
+        };
+        let mut bytes = vec![0u8; len];
+        match self.read_exact(&mut bytes)? {
+            ReadExact::Done => {}
+            ReadExact::Eof => {
+                return Err(Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "connection closed mid-frame",
+                ))
+            }
+            ReadExact::Interrupted => return Ok(P::Interrupted),
+        }
+        String::from_utf8(bytes)
+            .map(P::Val)
+            .map_err(|_| bad("string is not valid UTF-8"))
+    }
+
+    /// Decode one event. Syntactic only — semantic validation
+    /// ([`validate_wire_event`]) runs on the completed frame so the whole
+    /// message is consumed either way.
+    fn event(&mut self) -> Result<P<StreamEvent>> {
+        let tag = match self.u8()? {
+            P::Val(t) => t,
+            P::Interrupted => return Ok(P::Interrupted),
+        };
+        let ev = match tag {
+            EV_EDGE => {
+                let i = match self.varint()? {
+                    P::Val(v) if v <= u32::MAX as u64 => v as u32,
+                    P::Val(v) => return Err(bad(format!("node id {v} exceeds u32"))),
+                    P::Interrupted => return Ok(P::Interrupted),
+                };
+                let j = match self.varint()? {
+                    P::Val(v) if v <= u32::MAX as u64 => v as u32,
+                    P::Val(v) => return Err(bad(format!("node id {v} exceeds u32"))),
+                    P::Interrupted => return Ok(P::Interrupted),
+                };
+                let dw = match self.f64()? {
+                    P::Val(v) => v,
+                    P::Interrupted => return Ok(P::Interrupted),
+                };
+                StreamEvent::EdgeDelta { i, j, dw }
+            }
+            EV_GROW => match self.varint()? {
+                P::Val(v) => match usize::try_from(v) {
+                    Ok(count) => StreamEvent::GrowNodes { count },
+                    Err(_) => return Err(bad(format!("grow count {v} overflows"))),
+                },
+                P::Interrupted => return Ok(P::Interrupted),
+            },
+            EV_TICK => StreamEvent::Tick,
+            other => return Err(bad(format!("unknown event tag {other:#04x}"))),
+        };
+        Ok(P::Val(ev))
+    }
+}
+
+impl Codec for BinaryCodec {
+    fn wire(&self) -> Wire {
+        Wire::Binary
+    }
+
+    fn read_command(
+        &mut self,
+        r: &mut dyn BufRead,
+        stop: &dyn Fn() -> bool,
+    ) -> Result<CommandRead> {
+        // the opcode read is the only place where EOF is clean (between
+        // frames); every later primitive treats EOF as a truncated frame
+        let mut op = [0u8; 1];
+        let opcode = match read_exact_polled(r, &mut op, stop)? {
+            ReadExact::Done => op[0],
+            ReadExact::Eof => return Ok(CommandRead::Eof),
+            ReadExact::Interrupted => return Ok(CommandRead::Interrupted),
+        };
+        let mut fr = FrameReader { r, mode: ReadMode::Poll(stop) };
+        // `prim!` early-returns Ok(None) on interruption; wrap so the macro
+        // shape stays uniform across the arms below
+        let decoded: Option<CommandRead> = (|| -> Result<Option<CommandRead>> {
+            let out = match opcode {
+                OP_OPEN => {
+                    let id = prim!(fr.string()?);
+                    let nodes = prim!(fr.varint()?);
+                    if nodes > MAX_OPEN_NODES as u64 {
+                        CommandRead::Malformed(format!(
+                            "OPEN: n exceeds maximum {MAX_OPEN_NODES}"
+                        ))
+                    } else {
+                        CommandRead::Cmd(Command::Open { id, nodes: nodes as usize })
+                    }
+                }
+                OP_EV => {
+                    let id = prim!(fr.string()?);
+                    let ev = prim!(fr.event()?);
+                    match validate_wire_event(&ev) {
+                        Ok(()) => CommandRead::Cmd(Command::Event { id, ev }),
+                        Err(reason) => CommandRead::Malformed(format!("EV: {reason}")),
+                    }
+                }
+                OP_BATCH => {
+                    let id = prim!(fr.string()?);
+                    let count = prim!(fr.usize_bounded(MAX_BATCH, "BATCH count")?);
+                    // decode all `count` events even past a semantic error,
+                    // so the frame is consumed and framing stays intact —
+                    // the same atomic-reject discipline as the text wire
+                    let mut events = Vec::with_capacity(count.min(4096));
+                    let mut badev: Option<(usize, &'static str)> = None;
+                    for k in 1..=count {
+                        let ev = prim!(fr.event()?);
+                        match validate_wire_event(&ev) {
+                            Ok(()) => events.push(ev),
+                            Err(reason) => {
+                                badev.get_or_insert((k, reason));
+                            }
+                        }
+                    }
+                    match badev {
+                        Some((at, reason)) => CommandRead::Malformed(format!(
+                            "batch event {at}: {reason}"
+                        )),
+                        None => CommandRead::Cmd(Command::Batch { id, events }),
+                    }
+                }
+                OP_QUERY => CommandRead::Cmd(Command::Query { id: prim!(fr.string()?) }),
+                OP_CLOSE => CommandRead::Cmd(Command::Close { id: prim!(fr.string()?) }),
+                OP_STATS => CommandRead::Cmd(Command::Stats),
+                OP_QUIT => CommandRead::Cmd(Command::Quit),
+                OP_SHUTDOWN => CommandRead::Cmd(Command::Shutdown),
+                other => return Err(bad(format!("unknown command opcode {other:#04x}"))),
+            };
+            Ok(Some(out))
+        })()?;
+        Ok(decoded.unwrap_or(CommandRead::Interrupted))
+    }
+
+    fn write_reply(&mut self, w: &mut dyn Write, reply: &Reply) -> Result<()> {
+        self.buf.clear();
+        BinaryCodec::encode_reply(&mut self.buf, reply);
+        w.write_all(&self.buf)
+    }
+
+    fn write_command(&mut self, w: &mut dyn Write, cmd: &Command) -> Result<()> {
+        self.buf.clear();
+        BinaryCodec::encode_command(&mut self.buf, cmd);
+        w.write_all(&self.buf)
+    }
+
+    fn write_batch(
+        &mut self,
+        w: &mut dyn Write,
+        id: &str,
+        events: &[StreamEvent],
+    ) -> Result<()> {
+        self.buf.clear();
+        BinaryCodec::encode_batch(&mut self.buf, id, events);
+        w.write_all(&self.buf)
+    }
+
+    fn read_reply(&mut self, r: &mut dyn BufRead) -> Result<Option<Reply>> {
+        // client side: a socket read timeout is the reply deadline and must
+        // surface as the error the client maps to "read timed out"
+        let mut op = [0u8; 1];
+        let opcode = match read_exact_deadline(r, &mut op)? {
+            ReadExact::Done => op[0],
+            ReadExact::Eof => return Ok(None),
+            ReadExact::Interrupted => unreachable!("deadline reads never interrupt"),
+        };
+        let mut fr = FrameReader { r, mode: ReadMode::Deadline };
+        let reply = match opcode {
+            OP_OK => Reply::Ok,
+            OP_OKKV => {
+                let n = prim!(fr.usize_bounded(MAX_KV_PAIRS, "kv pair count")?);
+                let mut pairs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let k = prim!(fr.string()?);
+                    let v = prim!(fr.string()?);
+                    pairs.push((k, v));
+                }
+                Reply::OkKv(pairs)
+            }
+            OP_SNAPSHOT => {
+                let windows = prim!(fr.varint()?) as usize;
+                let events = prim!(fr.varint()?) as usize;
+                let nodes = prim!(fr.varint()?) as usize;
+                let edges = prim!(fr.varint()?) as usize;
+                let anomalies = prim!(fr.varint()?) as usize;
+                let pending_events = prim!(fr.varint()?) as usize;
+                let last_anomalous = prim!(fr.u8()?) != 0;
+                let htilde = prim!(fr.f64()?);
+                let last_jsdist = match prim!(fr.u8()?) {
+                    0 => None,
+                    1 => Some(prim!(fr.f64()?)),
+                    other => return Err(bad(format!("bad jsdist flag {other}"))),
+                };
+                Reply::Snapshot(SessionSnapshot {
+                    id: String::new(),
+                    windows,
+                    events,
+                    last_jsdist,
+                    last_anomalous,
+                    htilde,
+                    nodes,
+                    edges,
+                    anomalies,
+                    pending_events,
+                })
+            }
+            OP_ERR => Reply::Err(prim!(fr.string()?)),
+            other => return Err(bad(format!("unknown reply opcode {other:#04x}"))),
+        };
+        Ok(Some(reply))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip_command(cmd: &Command) -> CommandRead {
+        let mut buf = Vec::new();
+        BinaryCodec::encode_command(&mut buf, cmd);
+        BinaryCodec::new().read_command(&mut Cursor::new(buf), &|| false).unwrap()
+    }
+
+    fn roundtrip_reply(reply: &Reply) -> Reply {
+        let mut buf = Vec::new();
+        BinaryCodec::encode_reply(&mut buf, reply);
+        BinaryCodec::new().read_reply(&mut Cursor::new(buf)).unwrap().unwrap()
+    }
+
+    #[test]
+    fn commands_roundtrip_exactly() {
+        for cmd in [
+            Command::Open { id: "raw id / no escaping % needed".into(), nodes: 1 << 20 },
+            Command::Event {
+                id: "a".into(),
+                ev: StreamEvent::EdgeDelta { i: 3, j: 7, dw: -1.25e300 },
+            },
+            Command::Batch {
+                id: "b".into(),
+                events: vec![
+                    StreamEvent::EdgeDelta { i: 0, j: 1, dw: f64::MIN_POSITIVE },
+                    StreamEvent::GrowNodes { count: 5 },
+                    StreamEvent::Tick,
+                ],
+            },
+            Command::Query { id: String::new() },
+            Command::Close { id: "tenant/1".into() },
+            Command::Stats,
+            Command::Quit,
+            Command::Shutdown,
+        ] {
+            assert_eq!(roundtrip_command(&cmd), CommandRead::Cmd(cmd));
+        }
+    }
+
+    #[test]
+    fn replies_roundtrip_with_raw_f64_bits() {
+        let snap = SessionSnapshot {
+            id: String::new(),
+            windows: 3,
+            events: 1_000_000,
+            last_jsdist: Some(0.1 + 0.2), // a value decimal formatting mangles
+            last_anomalous: true,
+            htilde: -0.0,
+            nodes: 1 << 24,
+            edges: 0,
+            anomalies: 2,
+            pending_events: 7,
+        };
+        for reply in [
+            Reply::Ok,
+            Reply::OkKv(vec![("depths".into(), "0,1,2".into())]),
+            Reply::Snapshot(snap),
+            Reply::Err("unknown-session".into()),
+        ] {
+            let back = roundtrip_reply(&reply);
+            assert_eq!(back, reply);
+            if let (Reply::Snapshot(a), Reply::Snapshot(b)) = (&back, &reply) {
+                assert_eq!(a.htilde.to_bits(), b.htilde.to_bits());
+                assert_eq!(
+                    a.last_jsdist.unwrap().to_bits(),
+                    b.last_jsdist.unwrap().to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn semantic_errors_are_recoverable_and_consume_the_frame() {
+        // self-loop event, then a valid STATS in the same stream
+        let mut buf = Vec::new();
+        BinaryCodec::encode_command(
+            &mut buf,
+            &Command::Event {
+                id: "a".into(),
+                ev: StreamEvent::EdgeDelta { i: 4, j: 4, dw: 1.0 },
+            },
+        );
+        BinaryCodec::encode_command(&mut buf, &Command::Stats);
+        let mut codec = BinaryCodec::new();
+        let mut r = Cursor::new(buf);
+        assert!(matches!(
+            codec.read_command(&mut r, &|| false).unwrap(),
+            CommandRead::Malformed(reason) if reason.contains("self-loop")
+        ));
+        assert_eq!(
+            codec.read_command(&mut r, &|| false).unwrap(),
+            CommandRead::Cmd(Command::Stats)
+        );
+
+        // batch with one poisonous event is rejected atomically, framing holds
+        let mut buf = Vec::new();
+        BinaryCodec::encode_command(
+            &mut buf,
+            &Command::Batch {
+                id: "b".into(),
+                events: vec![
+                    StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 },
+                    StreamEvent::EdgeDelta { i: 1, j: 2, dw: f64::NAN },
+                    StreamEvent::Tick,
+                ],
+            },
+        );
+        BinaryCodec::encode_command(&mut buf, &Command::Quit);
+        let mut r = Cursor::new(buf);
+        assert!(matches!(
+            codec.read_command(&mut r, &|| false).unwrap(),
+            CommandRead::Malformed(reason) if reason.contains("batch event 2")
+        ));
+        assert_eq!(
+            codec.read_command(&mut r, &|| false).unwrap(),
+            CommandRead::Cmd(Command::Quit)
+        );
+    }
+
+    #[test]
+    fn resource_bounds_are_enforced() {
+        // OPEN over the node cap: recoverable (frame fully read)
+        let mut buf = Vec::new();
+        BinaryCodec::encode_command(
+            &mut buf,
+            &Command::Open { id: "a".into(), nodes: MAX_OPEN_NODES + 1 },
+        );
+        assert!(matches!(
+            BinaryCodec::new()
+                .read_command(&mut Cursor::new(buf), &|| false)
+                .unwrap(),
+            CommandRead::Malformed(reason) if reason.contains("exceeds maximum")
+        ));
+
+        // BATCH over the count cap: fatal (cannot affordably skip the body)
+        let mut buf = vec![OP_BATCH];
+        put_string(&mut buf, "a");
+        put_varint(&mut buf, (MAX_BATCH + 1) as u64);
+        assert!(BinaryCodec::new()
+            .read_command(&mut Cursor::new(buf), &|| false)
+            .is_err());
+
+        // string length over the cap: fatal
+        let mut buf = vec![OP_QUERY];
+        put_varint(&mut buf, (MAX_LINE + 1) as u64);
+        assert!(BinaryCodec::new()
+            .read_command(&mut Cursor::new(buf), &|| false)
+            .is_err());
+    }
+
+    #[test]
+    fn garbage_is_fatal_not_misparsed() {
+        for payload in [
+            vec![0x7Fu8],             // unknown opcode
+            vec![OP_EV, 1, b'a', 9],  // unknown event tag
+            vec![OP_OPEN, 1, 0xFF],   // invalid UTF-8 id
+        ] {
+            assert!(
+                BinaryCodec::new()
+                    .read_command(&mut Cursor::new(payload.clone()), &|| false)
+                    .is_err(),
+                "{payload:?}"
+            );
+        }
+        // truncated frame: UnexpectedEof, not a clean Eof
+        let mut buf = Vec::new();
+        BinaryCodec::encode_command(&mut buf, &Command::Query { id: "abcdef".into() });
+        buf.truncate(buf.len() - 2);
+        let err = BinaryCodec::new()
+            .read_command(&mut Cursor::new(buf), &|| false)
+            .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::UnexpectedEof);
+    }
+
+    /// Yields its bytes, then `WouldBlock` forever — a hung server as seen
+    /// through a socket with a read timeout.
+    struct HungAfter(Cursor<Vec<u8>>);
+
+    impl std::io::Read for HungAfter {
+        fn read(&mut self, buf: &mut [u8]) -> Result<usize> {
+            use std::io::Read;
+            let n = self.0.read(buf)?;
+            if n == 0 {
+                return Err(Error::new(ErrorKind::WouldBlock, "read timeout"));
+            }
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn client_reads_fail_on_timeout_instead_of_spinning() {
+        // a frame that promises more bytes than the server ever sends: the
+        // client-side deadline read must surface the timeout as an error
+        // (NetClient maps it to a clean "read timed out"), never retry
+        // forever the way the server's shutdown-polling reads do
+        let mut buf = vec![OP_ERR];
+        put_varint(&mut buf, 5); // 5 payload bytes promised, none delivered
+        let mut r = std::io::BufReader::new(HungAfter(Cursor::new(buf)));
+        let err = BinaryCodec::new().read_reply(&mut r).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::WouldBlock);
+
+        // ...and a timeout before any frame starts is surfaced the same way
+        let mut r = std::io::BufReader::new(HungAfter(Cursor::new(Vec::new())));
+        let err = BinaryCodec::new().read_reply(&mut r).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::WouldBlock);
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        let never = || false;
+        for v in [0u64, 1, 127, 128, 16_383, 16_384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            put_varint(&mut buf, v);
+            let mut r = Cursor::new(buf);
+            let mut fr = FrameReader { r: &mut r, mode: ReadMode::Poll(&never) };
+            match fr.varint().unwrap() {
+                P::Val(got) => assert_eq!(got, v),
+                P::Interrupted => unreachable!(),
+            }
+        }
+        // an 11-byte continuation run is rejected
+        let mut r = Cursor::new(vec![0x80u8; 11]);
+        let mut fr = FrameReader { r: &mut r, mode: ReadMode::Deadline };
+        assert!(fr.varint().is_err());
+        // a 10th byte carrying bits past u64 would silently truncate (e.g.
+        // 0x02<<63 wraps to 0, turning a huge length prefix into a small
+        // one and desynchronizing the frame) — must be rejected, not wrapped
+        let mut overflow = vec![0x80u8; 9];
+        overflow.push(0x02);
+        let mut r = Cursor::new(overflow);
+        let mut fr = FrameReader { r: &mut r, mode: ReadMode::Deadline };
+        assert!(fr.varint().is_err());
+    }
+}

@@ -1,0 +1,347 @@
+//! Pluggable wire codecs over the typed [`Command`] / [`Reply`] core.
+//!
+//! A [`Codec`] owns *all* framing and encoding knowledge for one wire
+//! format; the server and client are generic over it. Two codecs exist:
+//!
+//! * [`TextCodec`] — the original newline-delimited line protocol (v1),
+//!   byte-for-byte identical to the pre-split wire format, so `nc`-style
+//!   clients and recorded fixtures keep working unchanged.
+//! * [`BinaryCodec`] — length-prefixed binary framing (v2): one opcode byte
+//!   per frame, LEB128 varint lengths, and f64 event weights / scores as
+//!   raw little-endian bits so scores stay bit-for-bit across the wire.
+//!
+//! Both wires share one listening port: a binary connection announces
+//! itself with a two-byte preamble ([`BINARY_MAGIC`], [`BINARY_VERSION`])
+//! whose magic byte can never begin a text request (text verbs are ASCII),
+//! so the server [`negotiate`]s the codec on the first byte it sees without
+//! consuming any text data.
+
+use super::command::{Command, Reply};
+use std::io::{BufRead, ErrorKind, Read, Write};
+
+mod binary;
+mod text;
+
+pub use binary::BinaryCodec;
+pub use text::TextCodec;
+
+/// First byte of a binary connection. Any value ≥ 0x80 is safe (text
+/// requests are ASCII); 0xB2 reads as "Binary, v2".
+pub const BINARY_MAGIC: u8 = 0xB2;
+
+/// Wire-format version sent after the magic byte. The text protocol is v1;
+/// this binary framing is v2.
+pub const BINARY_VERSION: u8 = 2;
+
+/// The wire formats a connection can speak.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Wire {
+    Text,
+    Binary,
+}
+
+impl Wire {
+    pub fn name(self) -> &'static str {
+        match self {
+            Wire::Text => "text",
+            Wire::Binary => "binary",
+        }
+    }
+
+    /// Parse a `--wire` / `[net] wire` value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "text" => Some(Wire::Text),
+            "binary" => Some(Wire::Binary),
+            _ => None,
+        }
+    }
+
+    /// A fresh codec instance for this wire.
+    pub fn codec(self) -> Box<dyn Codec> {
+        match self {
+            Wire::Text => Box::new(TextCodec::new()),
+            Wire::Binary => Box::new(BinaryCodec::new()),
+        }
+    }
+}
+
+impl std::fmt::Display for Wire {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Which wires a server accepts (`[net] wire`, `finger serve --wire`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WireMode {
+    /// Negotiate per connection: both wires on one port.
+    #[default]
+    Auto,
+    /// Only the named wire; the other is refused at negotiation.
+    Only(Wire),
+}
+
+impl WireMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(WireMode::Auto),
+            other => Wire::parse(other).map(WireMode::Only),
+        }
+    }
+
+    pub fn allows(self, wire: Wire) -> bool {
+        match self {
+            WireMode::Auto => true,
+            WireMode::Only(w) => w == wire,
+        }
+    }
+
+    /// The client-side wire this mode implies (`Auto` defaults to text).
+    pub fn client_wire(self) -> Wire {
+        match self {
+            WireMode::Auto => Wire::Text,
+            WireMode::Only(w) => w,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WireMode::Auto => "auto",
+            WireMode::Only(w) => w.name(),
+        }
+    }
+}
+
+/// Outcome of reading one command frame on the server side.
+#[derive(Debug, PartialEq)]
+pub enum CommandRead {
+    /// A well-formed command.
+    Cmd(Command),
+    /// A recoverable protocol error: the frame was fully consumed (framing
+    /// is intact), the server should reply `Err(reason)` and keep going.
+    Malformed(String),
+    /// Clean end of stream between frames.
+    Eof,
+    /// The `stop` poll fired during a read (server shutting down).
+    Interrupted,
+}
+
+/// One wire format, both directions. `read_command` / `write_reply` are the
+/// server side; `write_command` / `read_reply` mirror them on the client.
+///
+/// `read_command` takes a `stop` predicate polled whenever a read times out
+/// (the server sets a socket read timeout so a drained connection can't
+/// outlive a shutdown request); in-memory readers never time out, so
+/// round-trip tests can pass `&|| false`.
+pub trait Codec: Send {
+    fn wire(&self) -> Wire;
+
+    /// Read one complete command frame (for `BATCH`, header *and* body).
+    fn read_command(
+        &mut self,
+        r: &mut dyn BufRead,
+        stop: &dyn Fn() -> bool,
+    ) -> std::io::Result<CommandRead>;
+
+    /// Write one reply frame.
+    fn write_reply(&mut self, w: &mut dyn Write, reply: &Reply) -> std::io::Result<()>;
+
+    /// Write one complete command frame (for `BATCH`, header *and* body, so
+    /// a buffering caller gets the whole message in one syscall).
+    fn write_command(&mut self, w: &mut dyn Write, cmd: &Command) -> std::io::Result<()>;
+
+    /// Write a `Batch` command frame from a borrowed event slice — the load
+    /// driver's hot path sends one window per batch, and building a
+    /// [`Command::Batch`] just to encode it would clone every event.
+    /// Semantically identical to `write_command` on the equivalent batch.
+    fn write_batch(
+        &mut self,
+        w: &mut dyn Write,
+        id: &str,
+        events: &[crate::stream::StreamEvent],
+    ) -> std::io::Result<()>;
+
+    /// Read one reply frame; `None` on clean EOF. Timeouts (a client read
+    /// deadline) surface as the underlying `io::Error`.
+    fn read_reply(&mut self, r: &mut dyn BufRead) -> std::io::Result<Option<Reply>>;
+}
+
+/// Write the binary connection preamble (client side, immediately after
+/// connect).
+pub fn write_binary_preamble(w: &mut dyn Write) -> std::io::Result<()> {
+    w.write_all(&[BINARY_MAGIC, BINARY_VERSION])
+}
+
+/// Outcome of server-side codec negotiation.
+pub enum Negotiated {
+    Codec(Box<dyn Codec>),
+    /// Connection closed before the first byte.
+    Eof,
+    /// Shutdown observed while waiting for the first byte.
+    Interrupted,
+    /// The magic byte arrived with an unsupported version; the reason should
+    /// be sent as a binary `Err` frame (the peer speaks binary) and the
+    /// connection closed.
+    BadPreamble(String),
+}
+
+/// Decide the connection's codec from its first byte without consuming any
+/// text data: [`BINARY_MAGIC`] (plus a version byte) selects the binary
+/// codec, anything else — necessarily the first byte of an ASCII text
+/// request — selects the text codec.
+pub fn negotiate(
+    r: &mut dyn BufRead,
+    stop: &dyn Fn() -> bool,
+) -> std::io::Result<Negotiated> {
+    let first = loop {
+        match r.fill_buf() {
+            Ok([]) => return Ok(Negotiated::Eof),
+            Ok(buf) => break buf[0],
+            Err(e) => match e.kind() {
+                ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted => {
+                    if stop() {
+                        return Ok(Negotiated::Interrupted);
+                    }
+                }
+                _ => return Err(e),
+            },
+        }
+    };
+    if first != BINARY_MAGIC {
+        return Ok(Negotiated::Codec(Box::new(TextCodec::new())));
+    }
+    let mut preamble = [0u8; 2];
+    match read_exact_polled(r, &mut preamble, stop)? {
+        ReadExact::Done => {}
+        ReadExact::Eof => return Ok(Negotiated::Eof),
+        ReadExact::Interrupted => return Ok(Negotiated::Interrupted),
+    }
+    if preamble[1] != BINARY_VERSION {
+        return Ok(Negotiated::BadPreamble(format!(
+            "unsupported binary version {} (want {BINARY_VERSION})",
+            preamble[1]
+        )));
+    }
+    Ok(Negotiated::Codec(Box::new(BinaryCodec::new())))
+}
+
+/// Outcome of a polled exact read.
+pub(crate) enum ReadExact {
+    Done,
+    /// EOF with zero bytes consumed (clean end between frames). EOF *inside*
+    /// a frame is an `UnexpectedEof` error instead — the peer died mid-frame.
+    Eof,
+    Interrupted,
+}
+
+/// `read_exact` that polls `stop` across read timeouts and distinguishes a
+/// clean EOF at a frame boundary from a truncated frame. Server side: the
+/// socket read timeout is a poll point, never a failure.
+pub(crate) fn read_exact_polled(
+    r: &mut dyn BufRead,
+    buf: &mut [u8],
+    stop: &dyn Fn() -> bool,
+) -> std::io::Result<ReadExact> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(ReadExact::Eof);
+                }
+                return Err(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "connection closed mid-frame",
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e) => match e.kind() {
+                ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted => {
+                    if stop() {
+                        return Ok(ReadExact::Interrupted);
+                    }
+                }
+                _ => return Err(e),
+            },
+        }
+    }
+    Ok(ReadExact::Done)
+}
+
+/// Client-side `read_exact`: a socket read timeout IS the reply deadline
+/// (`[net] client_timeout_ms`), so `WouldBlock`/`TimedOut` propagate as
+/// errors instead of being polled through — a hung server must surface,
+/// not wedge the caller. Only genuine `Interrupted` (EINTR) is retried.
+pub(crate) fn read_exact_deadline(
+    r: &mut dyn BufRead,
+    buf: &mut [u8],
+) -> std::io::Result<ReadExact> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 {
+                    return Ok(ReadExact::Eof);
+                }
+                return Err(std::io::Error::new(
+                    ErrorKind::UnexpectedEof,
+                    "connection closed mid-frame",
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(ReadExact::Done)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn negotiation_picks_the_codec_from_the_first_byte() {
+        let mut text = Cursor::new(b"QUERY a\n".to_vec());
+        match negotiate(&mut text, &|| false).unwrap() {
+            Negotiated::Codec(c) => assert_eq!(c.wire(), Wire::Text),
+            _ => panic!("text stream must negotiate a codec"),
+        }
+        // nothing consumed: the text codec reads the request in full
+        assert_eq!(text.position(), 0);
+
+        let mut bin = Cursor::new(vec![BINARY_MAGIC, BINARY_VERSION, 0x07]);
+        match negotiate(&mut bin, &|| false).unwrap() {
+            Negotiated::Codec(c) => assert_eq!(c.wire(), Wire::Binary),
+            _ => panic!("binary preamble must negotiate a codec"),
+        }
+        assert_eq!(bin.position(), 2, "only the preamble is consumed");
+
+        let mut bad = Cursor::new(vec![BINARY_MAGIC, 9]);
+        match negotiate(&mut bad, &|| false).unwrap() {
+            Negotiated::BadPreamble(reason) => assert!(reason.contains("version 9")),
+            _ => panic!("wrong version must be refused"),
+        }
+
+        match negotiate(&mut Cursor::new(Vec::new()), &|| false).unwrap() {
+            Negotiated::Eof => {}
+            _ => panic!("empty stream is a clean EOF"),
+        }
+    }
+
+    #[test]
+    fn wire_and_mode_parsing() {
+        assert_eq!(Wire::parse("text"), Some(Wire::Text));
+        assert_eq!(Wire::parse("binary"), Some(Wire::Binary));
+        assert_eq!(Wire::parse("morse"), None);
+        assert_eq!(WireMode::parse("auto"), Some(WireMode::Auto));
+        assert_eq!(WireMode::parse("binary"), Some(WireMode::Only(Wire::Binary)));
+        assert!(WireMode::Auto.allows(Wire::Text));
+        assert!(WireMode::Auto.allows(Wire::Binary));
+        assert!(!WireMode::Only(Wire::Text).allows(Wire::Binary));
+        assert_eq!(WireMode::Auto.client_wire(), Wire::Text);
+        assert_eq!(WireMode::Only(Wire::Binary).client_wire(), Wire::Binary);
+    }
+}

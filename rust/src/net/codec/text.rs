@@ -1,0 +1,563 @@
+//! [`TextCodec`] — the original newline-delimited line protocol (wire v1),
+//! reimplemented over the typed [`Command`] / [`Reply`] core with a
+//! byte-for-byte identical wire format (spec: `docs/PROTOCOL.md`).
+//!
+//! Every request and every reply is exactly one `\n`-terminated UTF-8 line;
+//! a `BATCH` header is followed by its `k` raw event lines. Event payloads
+//! reuse the [`StreamEvent`] text format (`e i j dw` | `n count` | `t`), so
+//! a delta-stream file can be replayed over the wire verbatim. Session ids
+//! travel in their [`encode_session_id`] form — the encoding is injective
+//! and produces no whitespace, so ids containing spaces or arbitrary bytes
+//! survive tokenization exactly.
+//!
+//! Parsing is strict: unknown verbs, arity mismatches, malformed ids and
+//! semantically poisonous events (non-finite `dw`, self-loops — rejected by
+//! the hardened [`StreamEvent::parse`]) all yield
+//! [`CommandRead::Malformed`] — one `ERR <reason>` line and nothing else —
+//! so one bad line never desynchronizes the connection.
+
+use super::super::command::{
+    parse_wire_event, snapshot_to_kv, Command, Reply, MAX_BATCH, MAX_LINE, MAX_OPEN_NODES,
+};
+use super::{Codec, CommandRead, Wire};
+use crate::service::{decode_session_id, encode_session_id};
+use crate::stream::StreamEvent;
+use std::io::{BufRead, ErrorKind, Read, Write};
+
+/// The line-protocol codec. Stateless apart from a reusable line buffer.
+#[derive(Debug, Default)]
+pub struct TextCodec {
+    line: String,
+}
+
+impl TextCodec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Serialize one command to its wire line(s), trailing newline included
+    /// (a `BATCH` emits its header plus `k` body lines). Exposed for tests
+    /// that want to speak raw bytes.
+    pub fn command_lines(cmd: &Command) -> String {
+        let mut out = match cmd {
+            Command::Open { id, nodes } => {
+                format!("OPEN {} {nodes}", encode_session_id(id))
+            }
+            Command::Event { id, ev } => {
+                format!("EV {} {}", encode_session_id(id), ev.to_line())
+            }
+            Command::Batch { id, events } => return Self::batch_lines(id, events),
+            Command::Query { id } => format!("QUERY {}", encode_session_id(id)),
+            Command::Close { id } => format!("CLOSE {}", encode_session_id(id)),
+            Command::Stats => "STATS".to_string(),
+            Command::Quit => "QUIT".to_string(),
+            Command::Shutdown => "SHUTDOWN".to_string(),
+        };
+        out.push('\n');
+        out
+    }
+
+    /// The `BATCH` header plus body lines for a borrowed event slice.
+    fn batch_lines(id: &str, events: &[StreamEvent]) -> String {
+        let mut s = format!("BATCH {} {}", encode_session_id(id), events.len());
+        for ev in events {
+            s.push('\n');
+            s.push_str(&ev.to_line());
+        }
+        s.push('\n');
+        s
+    }
+
+    /// Serialize one reply to its wire line (no trailing newline). Exposed
+    /// for tests comparing exact bytes.
+    pub fn reply_line(reply: &Reply) -> String {
+        let kv_line = |pairs: &[(String, String)]| {
+            if pairs.is_empty() {
+                "OK".to_string()
+            } else {
+                let body: Vec<String> =
+                    pairs.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                format!("OK {}", body.join(" "))
+            }
+        };
+        match reply {
+            Reply::Ok => "OK".to_string(),
+            Reply::OkKv(pairs) => kv_line(pairs),
+            Reply::Snapshot(s) => kv_line(&snapshot_to_kv(s)),
+            Reply::Err(reason) => format!("ERR {reason}"),
+        }
+    }
+
+    /// Parse one reply line. The text wire cannot distinguish a snapshot
+    /// from any other kv reply, so snapshots come back as [`Reply::OkKv`]
+    /// (callers use [`Reply::into_snapshot`]).
+    pub fn parse_reply_line(line: &str) -> Result<Reply, String> {
+        let line = line.trim_end_matches(['\r', '\n']);
+        if let Some(rest) = line.strip_prefix("ERR") {
+            return Ok(Reply::Err(rest.trim().to_string()));
+        }
+        let rest = match line.strip_prefix("OK") {
+            Some(r) => r,
+            None => return Err(format!("malformed reply: {line:?}")),
+        };
+        let mut pairs = Vec::new();
+        for tok in rest.split_whitespace() {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("malformed OK pair: {tok:?}"))?;
+            pairs.push((k.to_string(), v.to_string()));
+        }
+        if pairs.is_empty() {
+            Ok(Reply::Ok)
+        } else {
+            Ok(Reply::OkKv(pairs))
+        }
+    }
+
+    /// Parse one request line into a command or header. `Err` carries the
+    /// `ERR` reason sent back to the client (always a single line).
+    fn parse_request_line(line: &str) -> Result<Parsed, String> {
+        if line.len() > MAX_LINE {
+            return Err("line too long".to_string());
+        }
+        let mut it = line.split_whitespace();
+        let verb = it.next().ok_or("empty line")?;
+        match verb {
+            "OPEN" => {
+                let id = wire_id(it.next(), verb)?;
+                let nodes = wire_usize(it.next(), verb, "n")?;
+                no_more(it, verb)?;
+                if nodes > MAX_OPEN_NODES {
+                    return Err(format!("OPEN: n exceeds maximum {MAX_OPEN_NODES}"));
+                }
+                Ok(Parsed::Cmd(Command::Open { id, nodes }))
+            }
+            "EV" => {
+                let id = wire_id(it.next(), verb)?;
+                let ev_line: Vec<&str> = it.collect();
+                let ev = parse_wire_event(&ev_line.join(" "))
+                    .map_err(|e| format!("EV: {e}"))?;
+                Ok(Parsed::Cmd(Command::Event { id, ev }))
+            }
+            "BATCH" => {
+                let id = wire_id(it.next(), verb)?;
+                let count = wire_usize(it.next(), verb, "k")?;
+                no_more(it, verb)?;
+                if count > MAX_BATCH {
+                    return Err(format!("BATCH: k exceeds maximum {MAX_BATCH}"));
+                }
+                Ok(Parsed::BatchHeader { id, count })
+            }
+            "QUERY" => {
+                let id = wire_id(it.next(), verb)?;
+                no_more(it, verb)?;
+                Ok(Parsed::Cmd(Command::Query { id }))
+            }
+            "CLOSE" => {
+                let id = wire_id(it.next(), verb)?;
+                no_more(it, verb)?;
+                Ok(Parsed::Cmd(Command::Close { id }))
+            }
+            "STATS" => no_more(it, verb).map(|()| Parsed::Cmd(Command::Stats)),
+            "QUIT" => no_more(it, verb).map(|()| Parsed::Cmd(Command::Quit)),
+            "SHUTDOWN" => no_more(it, verb).map(|()| Parsed::Cmd(Command::Shutdown)),
+            other => Err(format!("unknown verb `{other}`")),
+        }
+    }
+}
+
+/// A parsed request line: either a complete command or a `BATCH` header
+/// whose body lines are still on the wire.
+enum Parsed {
+    Cmd(Command),
+    BatchHeader { id: String, count: usize },
+}
+
+fn wire_id(token: Option<&str>, verb: &str) -> Result<String, String> {
+    let tok = token.ok_or_else(|| format!("{verb}: missing <id>"))?;
+    decode_session_id(tok).ok_or_else(|| format!("{verb}: malformed <id> encoding"))
+}
+
+fn wire_usize(token: Option<&str>, verb: &str, what: &str) -> Result<usize, String> {
+    token
+        .ok_or_else(|| format!("{verb}: missing <{what}>"))?
+        .parse()
+        .map_err(|_| format!("{verb}: invalid <{what}>"))
+}
+
+fn no_more(mut it: std::str::SplitWhitespace<'_>, verb: &str) -> Result<(), String> {
+    match it.next() {
+        Some(_) => Err(format!("{verb}: unexpected trailing tokens")),
+        None => Ok(()),
+    }
+}
+
+/// Outcome of one polled line read.
+enum LineRead {
+    /// A complete line (without the trailing newline) in the buffer.
+    Line,
+    /// Clean end of stream.
+    Eof,
+    /// The `stop` poll fired.
+    Interrupted,
+}
+
+/// Read one `\n`-terminated line, polling `stop` on read timeouts. Bytes
+/// are accumulated with `read_until` (not `read_line`), so a timeout
+/// landing mid multi-byte UTF-8 character cannot discard already-received
+/// bytes — invalid UTF-8 is surfaced lossily and rejected by the parser
+/// rather than silently dropped.
+///
+/// The line is capped at just over [`MAX_LINE`] bytes: the prefix of an
+/// oversized line is returned (and rejected by the parser) while its
+/// remaining bytes are *discarded through the newline* in bounded chunks —
+/// the buffer never grows past the cap and the tail is never misparsed as
+/// further requests, preserving one-reply-per-request framing.
+fn read_line_polled(
+    reader: &mut dyn BufRead,
+    buf: &mut String,
+    stop: &dyn Fn() -> bool,
+) -> std::io::Result<LineRead> {
+    buf.clear();
+    let mut bytes: Vec<u8> = Vec::new();
+    let mut discard: Vec<u8> = Vec::new();
+    let outcome = loop {
+        // phase 1 accumulates into `bytes` until the cap; phase 2
+        // (oversized) drains the rest of the physical line into a bounded
+        // scratch so the tail is never misparsed as further requests
+        let oversized = bytes.len() > MAX_LINE;
+        let (target, budget) = if oversized {
+            discard.clear();
+            (&mut discard, MAX_LINE as u64)
+        } else {
+            let budget = (MAX_LINE + 2 - bytes.len()) as u64;
+            (&mut bytes, budget)
+        };
+        let mut limited = (&mut *reader).take(budget);
+        match limited.read_until(b'\n', target) {
+            Ok(0) => {
+                // budget is always > 0, so 0 bytes means real EOF
+                break if bytes.is_empty() { LineRead::Eof } else { LineRead::Line };
+            }
+            Ok(n) => {
+                if target.last() == Some(&b'\n') {
+                    break LineRead::Line;
+                }
+                // no newline: the cap was hit (n == budget → keep draining)
+                // or the stream ended mid-line (surface what arrived)
+                if (n as u64) < budget {
+                    break LineRead::Line;
+                }
+            }
+            Err(e) => match e.kind() {
+                ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted => {
+                    if stop() {
+                        break LineRead::Interrupted;
+                    }
+                }
+                _ => return Err(e),
+            },
+        }
+    };
+    if matches!(outcome, LineRead::Line) {
+        while matches!(bytes.last(), Some(b'\n') | Some(b'\r')) {
+            bytes.pop();
+        }
+        buf.push_str(&String::from_utf8_lossy(&bytes));
+    }
+    Ok(outcome)
+}
+
+impl Codec for TextCodec {
+    fn wire(&self) -> Wire {
+        Wire::Text
+    }
+
+    fn read_command(
+        &mut self,
+        r: &mut dyn BufRead,
+        stop: &dyn Fn() -> bool,
+    ) -> std::io::Result<CommandRead> {
+        let mut line = std::mem::take(&mut self.line);
+        let out = loop {
+            match read_line_polled(r, &mut line, stop)? {
+                LineRead::Eof => break CommandRead::Eof,
+                LineRead::Interrupted => break CommandRead::Interrupted,
+                LineRead::Line => {}
+            }
+            if line.trim().is_empty() {
+                continue; // blank lines are keep-alive noise, not errors
+            }
+            match TextCodec::parse_request_line(&line) {
+                Err(reason) => break CommandRead::Malformed(reason),
+                Ok(Parsed::Cmd(cmd)) => break CommandRead::Cmd(cmd),
+                Ok(Parsed::BatchHeader { id, count }) => {
+                    // consume exactly `count` event lines. All of them are
+                    // read even when one is malformed — the protocol stays
+                    // line-synchronized and only the batch is rejected.
+                    // Cap the prealloc: the header's count is attacker-
+                    // controlled, and a bare `BATCH a 1048576` must not pin
+                    // ~24 MB per idle connection.
+                    let mut events = Vec::with_capacity(count.min(4096));
+                    let mut bad: Option<(usize, &'static str)> = None;
+                    let mut interrupted = None;
+                    for k in 1..=count {
+                        match read_line_polled(r, &mut line, stop)? {
+                            LineRead::Line => {}
+                            LineRead::Eof => {
+                                interrupted = Some(CommandRead::Eof);
+                                break;
+                            }
+                            LineRead::Interrupted => {
+                                interrupted = Some(CommandRead::Interrupted);
+                                break;
+                            }
+                        }
+                        match parse_wire_event(&line) {
+                            Ok(ev) => events.push(ev),
+                            Err(reason) => {
+                                bad.get_or_insert((k, reason));
+                            }
+                        }
+                    }
+                    break match (interrupted, bad) {
+                        (Some(end), _) => end,
+                        (None, Some((at, reason))) => {
+                            CommandRead::Malformed(format!("batch line {at}: {reason}"))
+                        }
+                        (None, None) => CommandRead::Cmd(Command::Batch { id, events }),
+                    };
+                }
+            }
+        };
+        self.line = line;
+        Ok(out)
+    }
+
+    fn write_reply(&mut self, w: &mut dyn Write, reply: &Reply) -> std::io::Result<()> {
+        let mut out = TextCodec::reply_line(reply);
+        out.push('\n');
+        w.write_all(out.as_bytes())
+    }
+
+    fn write_command(&mut self, w: &mut dyn Write, cmd: &Command) -> std::io::Result<()> {
+        w.write_all(TextCodec::command_lines(cmd).as_bytes())
+    }
+
+    fn write_batch(
+        &mut self,
+        w: &mut dyn Write,
+        id: &str,
+        events: &[StreamEvent],
+    ) -> std::io::Result<()> {
+        w.write_all(TextCodec::batch_lines(id, events).as_bytes())
+    }
+
+    fn read_reply(&mut self, r: &mut dyn BufRead) -> std::io::Result<Option<Reply>> {
+        self.line.clear();
+        let n = r.read_line(&mut self.line)?;
+        if n == 0 {
+            return Ok(None);
+        }
+        TextCodec::parse_reply_line(&self.line)
+            .map(Some)
+            .map_err(|e| std::io::Error::new(ErrorKind::InvalidData, e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn read_one(payload: &[u8]) -> CommandRead {
+        TextCodec::new()
+            .read_command(&mut Cursor::new(payload.to_vec()), &|| false)
+            .unwrap()
+    }
+
+    #[test]
+    fn command_roundtrip_through_the_wire_format() {
+        for cmd in [
+            Command::Open { id: "tenant/1 x".to_string(), nodes: 64 },
+            Command::Event {
+                id: "a".to_string(),
+                ev: StreamEvent::EdgeDelta { i: 3, j: 7, dw: -1.25 },
+            },
+            Command::Event { id: "a".to_string(), ev: StreamEvent::Tick },
+            Command::Batch {
+                id: "b".to_string(),
+                events: vec![
+                    StreamEvent::EdgeDelta { i: 0, j: 1, dw: 0.5 },
+                    StreamEvent::GrowNodes { count: 2 },
+                    StreamEvent::Tick,
+                ],
+            },
+            Command::Query { id: "a".to_string() },
+            Command::Close { id: "a b/c".to_string() },
+            Command::Stats,
+            Command::Quit,
+            Command::Shutdown,
+        ] {
+            let bytes = TextCodec::command_lines(&cmd);
+            assert_eq!(read_one(bytes.as_bytes()), CommandRead::Cmd(cmd), "{bytes:?}");
+        }
+    }
+
+    #[test]
+    fn wire_lines_are_byte_identical_to_the_v1_protocol() {
+        // the pre-redesign `Request::to_line` outputs, verbatim
+        assert_eq!(
+            TextCodec::command_lines(&Command::Open { id: "a".into(), nodes: 4 }),
+            "OPEN a 4\n"
+        );
+        assert_eq!(
+            TextCodec::command_lines(&Command::Event {
+                id: "tenant/1".into(),
+                ev: StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.5 },
+            }),
+            "EV tenant%2F1 e 0 1 1.5\n"
+        );
+        assert_eq!(
+            TextCodec::command_lines(&Command::Batch {
+                id: "b".into(),
+                events: vec![StreamEvent::Tick],
+            }),
+            "BATCH b 1\nt\n"
+        );
+        assert_eq!(TextCodec::reply_line(&Reply::Ok), "OK");
+        assert_eq!(
+            TextCodec::reply_line(&Reply::kv("accepted", 3)),
+            "OK accepted=3"
+        );
+        assert_eq!(
+            TextCodec::reply_line(&Reply::Err("unknown-session".into())),
+            "ERR unknown-session"
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_lines_without_desync() {
+        for bad in [
+            "NOPE\n",
+            "OPEN\n",
+            "OPEN a\n",
+            "OPEN a x\n",
+            "OPEN a 4 extra\n",
+            "EV a\n",
+            "EV a e 1 1 0.5\n",     // self-loop
+            "EV a e 1 2 NaN\n",     // poisonous delta
+            "EV a e 1 2 0.5 0.7\n", // fused events (trailing tokens)
+            "EV a x 1 2\n",
+            "BATCH a\n",
+            "BATCH a -1\n",
+            "QUERY\n",
+            "CLOSE\n",
+            "CLOSE bad%zz\n",
+            "STATS extra\n",
+            "QUIT now\n",
+            "OPEN bad%zz 4\n", // invalid id escape
+            "EV a e 0 4294967295 0.5\n",
+        ] {
+            match read_one(bad.as_bytes()) {
+                CommandRead::Malformed(reason) => {
+                    assert!(!reason.is_empty(), "{bad:?}")
+                }
+                other => panic!("{bad:?} should be Malformed, got {other:?}"),
+            }
+        }
+        assert!(matches!(
+            read_one(format!("BATCH a {}\n", MAX_BATCH + 1).as_bytes()),
+            CommandRead::Malformed(_)
+        ));
+        assert!(matches!(
+            read_one(format!("OPEN a {}\n", MAX_OPEN_NODES + 1).as_bytes()),
+            CommandRead::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn blank_lines_are_skipped_and_eof_is_clean() {
+        let mut codec = TextCodec::new();
+        let mut r = Cursor::new(b"\n\r\n  \nSTATS\n".to_vec());
+        assert_eq!(
+            codec.read_command(&mut r, &|| false).unwrap(),
+            CommandRead::Cmd(Command::Stats)
+        );
+        assert_eq!(codec.read_command(&mut r, &|| false).unwrap(), CommandRead::Eof);
+    }
+
+    #[test]
+    fn batch_with_bad_body_line_is_consumed_atomically() {
+        let mut codec = TextCodec::new();
+        let payload = b"BATCH s 3\ne 0 1 1.0\ne 2 2 1.0\nt\nSTATS\n".to_vec();
+        let mut r = Cursor::new(payload);
+        match codec.read_command(&mut r, &|| false).unwrap() {
+            CommandRead::Malformed(reason) => {
+                assert!(reason.contains("batch line 2"), "{reason:?}")
+            }
+            other => panic!("bad batch should be Malformed, got {other:?}"),
+        }
+        // the stream is still line-synchronized: the next command parses
+        assert_eq!(
+            codec.read_command(&mut r, &|| false).unwrap(),
+            CommandRead::Cmd(Command::Stats)
+        );
+    }
+
+    #[test]
+    fn oversized_line_is_rejected_and_framing_survives() {
+        let mut payload = vec![b'X'; MAX_LINE + 100];
+        payload.push(b'\n');
+        payload.extend_from_slice(b"QUIT\n");
+        let mut codec = TextCodec::new();
+        let mut r = Cursor::new(payload);
+        assert!(matches!(
+            codec.read_command(&mut r, &|| false).unwrap(),
+            CommandRead::Malformed(_)
+        ));
+        assert_eq!(
+            codec.read_command(&mut r, &|| false).unwrap(),
+            CommandRead::Cmd(Command::Quit)
+        );
+    }
+
+    #[test]
+    fn reply_roundtrip() {
+        for reply in [
+            Reply::Ok,
+            Reply::OkKv(vec![
+                ("windows".to_string(), "3".to_string()),
+                ("jsdist".to_string(), "0.12345".to_string()),
+            ]),
+            Reply::Err("unknown-session".to_string()),
+        ] {
+            let line = TextCodec::reply_line(&reply);
+            assert_eq!(TextCodec::parse_reply_line(&line), Ok(reply));
+        }
+        assert!(TextCodec::parse_reply_line("WAT 1").is_err());
+        assert!(TextCodec::parse_reply_line("OK novalue").is_err());
+    }
+
+    #[test]
+    fn snapshot_reply_is_kv_encoded_and_recoverable() {
+        let snap = crate::service::SessionSnapshot {
+            id: String::new(),
+            windows: 2,
+            events: 9,
+            last_jsdist: Some(std::f64::consts::FRAC_1_PI),
+            last_anomalous: false,
+            htilde: 1.75,
+            nodes: 8,
+            edges: 3,
+            anomalies: 1,
+            pending_events: 0,
+        };
+        let line = TextCodec::reply_line(&Reply::Snapshot(snap.clone()));
+        let back = TextCodec::parse_reply_line(&line).unwrap();
+        let got = back.into_snapshot("s").expect("snapshot decodes");
+        assert_eq!(got.last_jsdist.unwrap().to_bits(), snap.last_jsdist.unwrap().to_bits());
+        assert_eq!(got.htilde.to_bits(), snap.htilde.to_bits());
+        assert_eq!(got.windows, snap.windows);
+    }
+}

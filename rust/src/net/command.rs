@@ -1,0 +1,276 @@
+//! The transport-independent command core of the network API.
+//!
+//! A [`Command`] is what a client asks the service to do; a [`Reply`] is the
+//! structured answer. Neither knows anything about bytes on a wire — framing
+//! and encoding live entirely in the pluggable codecs
+//! ([`TextCodec`](super::codec::TextCodec) /
+//! [`BinaryCodec`](super::codec::BinaryCodec)), and the server dispatches
+//! `Command → Reply` against the scoring service with no formatting
+//! knowledge at all.
+//!
+//! Validation that is *semantic* rather than syntactic — resource bounds,
+//! poisonous event values — also lives here ([`validate_wire_event`],
+//! [`parse_wire_event`]) so both codecs enforce identical rules.
+
+use crate::service::SessionSnapshot;
+use crate::stream::StreamEvent;
+
+/// Upper bound on a `BATCH`'s event count: a hostile header can not make the
+/// server buffer unbounded memory. Generous — the load driver batches one
+/// window (tens to thousands of events) per message.
+pub const MAX_BATCH: usize = 1 << 20;
+
+/// Upper bound on one text request line's byte length (a `BATCH` body line
+/// is a plain event line, far below this). The binary codec reuses it as its
+/// string-length bound.
+pub const MAX_LINE: usize = 64 * 1024;
+
+/// Upper bound on `OPEN`'s node count: a hostile header can not make the
+/// server allocate an arbitrarily large initial graph.
+pub const MAX_OPEN_NODES: usize = 1 << 24;
+
+/// Default listen address of `finger serve`.
+pub const DEFAULT_ADDR: &str = "127.0.0.1:7341";
+
+/// One client command, independent of the wire that carried it.
+///
+/// Unlike the old line-protocol `Request`, a batch carries its events
+/// directly: reading the `k` body frames that follow a `BATCH` header is the
+/// codec's job, so the server never sees partial framing state.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    /// (Re)open `id` with a fresh `nodes`-node empty graph.
+    Open { id: String, nodes: usize },
+    /// One stream event for `id`.
+    Event { id: String, ev: StreamEvent },
+    /// A batch of events for `id`, submitted as one shard message.
+    Batch { id: String, events: Vec<StreamEvent> },
+    /// Point-in-time stats of a live session.
+    Query { id: String },
+    /// Retire session `id`: free its shard state and return the final
+    /// snapshot (trailing partial window flushed).
+    Close { id: String },
+    /// Per-shard queue depths and service totals.
+    Stats,
+    /// Close this connection (the server keeps running).
+    Quit,
+    /// Gracefully stop the whole server: drain every shard and produce the
+    /// final `ServiceReport`.
+    Shutdown,
+}
+
+impl Command {
+    /// The session id this command addresses, if any.
+    pub fn session_id(&self) -> Option<&str> {
+        match self {
+            Command::Open { id, .. }
+            | Command::Event { id, .. }
+            | Command::Batch { id, .. }
+            | Command::Query { id }
+            | Command::Close { id } => Some(id),
+            Command::Stats | Command::Quit | Command::Shutdown => None,
+        }
+    }
+}
+
+/// One structured server reply, independent of the wire that will carry it.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    /// Bare success.
+    Ok,
+    /// Success with ordered `key=value` detail pairs (`STATS`, `BATCH`).
+    OkKv(Vec<(String, String)>),
+    /// A session snapshot (`QUERY` / `CLOSE`). The id does not travel on
+    /// either wire — decoders leave it empty and callers re-attach it.
+    Snapshot(SessionSnapshot),
+    /// Failure; the reason is free text.
+    Err(String),
+}
+
+impl Reply {
+    /// Convenience constructor for a single `key=value` pair.
+    pub fn kv(key: &str, value: impl ToString) -> Self {
+        Reply::OkKv(vec![(key.to_string(), value.to_string())])
+    }
+
+    /// Value of `key` in an `OkKv` (or kv-encoded snapshot) reply.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        match self {
+            Reply::OkKv(pairs) => {
+                pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+            }
+            _ => None,
+        }
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Extract a snapshot, whichever shape the codec delivered: the binary
+    /// wire returns [`Reply::Snapshot`] directly, the text wire returns the
+    /// kv encoding (indistinguishable from any other `OK key=value` line).
+    /// The caller supplies `id` — it does not travel in the reply.
+    pub fn into_snapshot(self, id: &str) -> Option<SessionSnapshot> {
+        match self {
+            Reply::Snapshot(mut s) => {
+                s.id = id.to_string();
+                Some(s)
+            }
+            Reply::OkKv(ref pairs) => snapshot_from_kv(id, pairs),
+            _ => None,
+        }
+    }
+}
+
+/// Encode a session snapshot as ordered `key=value` pairs — the `QUERY` /
+/// `CLOSE` reply body on the text wire. Floats use Rust's
+/// shortest-roundtrip `Display`, so the client re-parses them bit-for-bit.
+pub fn snapshot_to_kv(s: &SessionSnapshot) -> Vec<(String, String)> {
+    let mut pairs = vec![
+        ("windows".to_string(), s.windows.to_string()),
+        ("events".to_string(), s.events.to_string()),
+        ("htilde".to_string(), s.htilde.to_string()),
+        ("nodes".to_string(), s.nodes.to_string()),
+        ("edges".to_string(), s.edges.to_string()),
+        ("anomalies".to_string(), s.anomalies.to_string()),
+        ("pending".to_string(), s.pending_events.to_string()),
+        ("anomalous".to_string(), (s.last_anomalous as u8).to_string()),
+    ];
+    if let Some(js) = s.last_jsdist {
+        pairs.push(("jsdist".to_string(), js.to_string()));
+    }
+    pairs
+}
+
+/// Decode the kv encoding back into a snapshot (the id is supplied by the
+/// caller — it does not travel in the reply).
+pub fn snapshot_from_kv(id: &str, pairs: &[(String, String)]) -> Option<SessionSnapshot> {
+    fn parsed<T: std::str::FromStr>(pairs: &[(String, String)], key: &str) -> Option<T> {
+        pairs.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.parse().ok())
+    }
+    Some(SessionSnapshot {
+        id: id.to_string(),
+        windows: parsed(pairs, "windows")?,
+        events: parsed(pairs, "events")?,
+        last_jsdist: parsed::<f64>(pairs, "jsdist"),
+        last_anomalous: parsed::<u8>(pairs, "anomalous")? != 0,
+        htilde: parsed(pairs, "htilde")?,
+        nodes: parsed(pairs, "nodes")?,
+        edges: parsed(pairs, "edges")?,
+        anomalies: parsed(pairs, "anomalies")?,
+        pending_events: parsed(pairs, "pending")?,
+    })
+}
+
+/// Resource-bound check shared by both codecs: node endpoints and grow
+/// counts share `OPEN`'s [`MAX_OPEN_NODES`] cap, so no single well-formed
+/// event can make a shard worker allocate an absurd graph (an
+/// `e 0 4294967295 0.5` would otherwise grow the node set to the max id on
+/// the next tick). Self-loops and non-finite deltas are rejected by the
+/// codecs' event decoders before this runs on the text wire; the binary
+/// decoder calls [`validate_wire_event`] for both classes.
+pub fn validate_wire_event(ev: &StreamEvent) -> Result<(), &'static str> {
+    match *ev {
+        StreamEvent::EdgeDelta { i, j, dw } => {
+            if i == j {
+                Err("self-loop delta")
+            } else if !dw.is_finite() {
+                Err("non-finite dw")
+            } else if i as usize >= MAX_OPEN_NODES || j as usize >= MAX_OPEN_NODES {
+                Err("node id exceeds maximum")
+            } else {
+                Ok(())
+            }
+        }
+        StreamEvent::GrowNodes { count } if count > MAX_OPEN_NODES => {
+            Err("grow count exceeds maximum")
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Parse one event line from untrusted wire input: syntactic validity (via
+/// the hardened [`StreamEvent::parse`]) plus the [`validate_wire_event`]
+/// resource bounds. Used by the text codec's `EV` verb and `BATCH` body
+/// lines.
+pub fn parse_wire_event(line: &str) -> Result<StreamEvent, &'static str> {
+    let ev = StreamEvent::parse(line)
+        .ok_or("bad event (want `e i j dw` | `n count` | `t`; dw finite, i != j)")?;
+    validate_wire_event(&ev)?;
+    Ok(ev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_event_bounds_are_enforced() {
+        assert!(parse_wire_event("e 0 4294967295 0.5").is_err());
+        assert!(parse_wire_event("e 1 1 0.5").is_err());
+        assert!(parse_wire_event("e 1 2 NaN").is_err());
+        assert!(parse_wire_event("e 0 1 0.5").is_ok());
+        assert!(parse_wire_event(&format!("n {MAX_OPEN_NODES}")).is_ok());
+        assert!(parse_wire_event(&format!("n {}", MAX_OPEN_NODES + 1)).is_err());
+        assert!(validate_wire_event(&StreamEvent::Tick).is_ok());
+        assert!(validate_wire_event(&StreamEvent::EdgeDelta {
+            i: 0,
+            j: 1,
+            dw: f64::INFINITY
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn snapshot_kv_roundtrips_floats_bit_for_bit() {
+        let snap = SessionSnapshot {
+            id: "s/1".to_string(),
+            windows: 7,
+            events: 420,
+            last_jsdist: Some(0.123456789012345678), // not representable; rounds
+            last_anomalous: true,
+            htilde: std::f64::consts::LN_2 * 3.7,
+            nodes: 100,
+            edges: 321,
+            anomalies: 2,
+            pending_events: 5,
+        };
+        let back = snapshot_from_kv("s/1", &snapshot_to_kv(&snap)).unwrap();
+        assert_eq!(back, snap, "kv round-trip must be bit-for-bit");
+
+        let no_window =
+            SessionSnapshot { last_jsdist: None, windows: 0, ..snap.clone() };
+        let back = snapshot_from_kv("s/1", &snapshot_to_kv(&no_window)).unwrap();
+        assert_eq!(back.last_jsdist, None);
+    }
+
+    #[test]
+    fn reply_into_snapshot_handles_both_shapes() {
+        let snap = SessionSnapshot {
+            id: String::new(),
+            windows: 1,
+            events: 2,
+            last_jsdist: Some(0.5),
+            last_anomalous: false,
+            htilde: 1.25,
+            nodes: 4,
+            edges: 1,
+            anomalies: 0,
+            pending_events: 0,
+        };
+        let direct = Reply::Snapshot(snap.clone()).into_snapshot("x").unwrap();
+        let via_kv = Reply::OkKv(snapshot_to_kv(&snap)).into_snapshot("x").unwrap();
+        assert_eq!(direct, via_kv);
+        assert_eq!(direct.id, "x");
+        assert_eq!(Reply::Ok.into_snapshot("x"), None);
+        assert_eq!(Reply::Err("nope".into()).into_snapshot("x"), None);
+    }
+
+    #[test]
+    fn command_session_ids() {
+        assert_eq!(Command::Query { id: "a".into() }.session_id(), Some("a"));
+        assert_eq!(Command::Close { id: "b".into() }.session_id(), Some("b"));
+        assert_eq!(Command::Stats.session_id(), None);
+    }
+}

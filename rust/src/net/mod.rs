@@ -5,50 +5,68 @@
 //! so events can be scored as they arrive from outside the process instead
 //! of in post-hoc batch jobs. This module turns the in-process sharded
 //! [`ScoringService`](crate::service::ScoringService) into exactly that — a
-//! line-protocol TCP server plus the client and load-driver tooling around
-//! it. Everything is `std::net` + threads: no async runtime dependency.
+//! TCP server plus the client and load-driver tooling around it. Everything
+//! is `std::net` + threads: no async runtime dependency.
+//!
+//! The API is split into a transport-independent command core and pluggable
+//! wire codecs:
+//!
+//! * [`command`] — typed [`Command`] / [`Reply`] enums and the shared
+//!   semantic validation (resource bounds, poisonous events). Nothing here
+//!   knows about bytes.
+//! * [`codec`] — the [`Codec`] trait plus both implementations:
+//!   [`TextCodec`] (the v1 newline-delimited line protocol, `nc`-friendly
+//!   and byte-identical to the original wire) and [`BinaryCodec`] (the v2
+//!   length-prefixed framing: opcode byte, varint lengths, f64 scores and
+//!   weights as raw bits). Both share one port — a binary connection opens
+//!   with a magic-byte preamble and the server negotiates per connection.
+//!   Spec for both wires: `docs/PROTOCOL.md`.
 //!
 //! # Architecture
 //!
 //! ```text
-//!            TCP (line protocol, one reply per request)
-//!  client ──────────────┐
-//!  client ────────────┐ │        ┌────────────────────────────────────┐
-//!  finger load ─────┐ │ │        │              NetServer             │
-//!   (N connections) │ │ │        │                                    │
-//!                   ▼ ▼ ▼        │  accept loop ──► conn thread 0 ──┐ │
-//!               OPEN/EV/BATCH ──►│                  conn thread 1 ──┤ │
-//!               QUERY/STATS      │                  conn thread k ──┤ │
-//!               QUIT/SHUTDOWN    │   parse → try_submit (backoff)   │ │
-//!                                └──────────────────────────────────┼─┘
-//!                                                                   ▼
+//!        TCP (one reply frame per command frame, wire negotiated)
+//!  client (text) ────────┐
+//!  client (binary) ────┐ │        ┌────────────────────────────────────┐
+//!  finger load ──────┐ │ │        │              NetServer             │
+//!   (N conns, either │ │ │        │                                    │
+//!    wire)           ▼ ▼ ▼        │  accept ─► negotiate codec         │
+//!            OPEN/EV/BATCH ──────►│         ─► conn thread: Command ──┐ │
+//!            QUERY/CLOSE/STATS    │            dispatch → Reply       │ │
+//!            QUIT/SHUTDOWN        │            (try_submit + backoff) │ │
+//!                                 └────────────────────────────────────┼─┘
+//!                                                                      ▼
 //!                                   ScoringService  hash(id) % shards
 //!                                   shard 0 │ shard 1 │ … │ shard N-1
 //!                                   (bounded queues, SessionRegistry,
 //!                                    batcher → scorer → anomaly)
 //! ```
 //!
-//! * [`proto`] — the session-scoped wire protocol: `OPEN`/`EV`/`BATCH`/
-//!   `QUERY`/`STATS`/`QUIT`/`SHUTDOWN`, one-line `OK`/`ERR` replies, event
-//!   payloads in the [`StreamEvent`](crate::stream::StreamEvent) text
-//!   format. Spec: `docs/PROTOCOL.md`.
 //! * [`server`] — [`NetServer`]: thread-per-connection readers feeding the
 //!   shared service through the non-blocking submit API, per-connection
 //!   error isolation, graceful drain returning the final
-//!   [`ServiceReport`](crate::service::ServiceReport).
-//! * [`client`] — [`NetClient`]: small blocking client (tests, tooling).
+//!   [`ServiceReport`](crate::service::ServiceReport). Dispatch is pure
+//!   `Command → Reply` — no formatting knowledge.
+//! * [`client`] — [`NetClient`]: small blocking client (tests, tooling),
+//!   generic over codec, with a configurable reply-read timeout.
 //! * [`traffic`] — the load driver: replays multi-tenant workloads
 //!   (including wiki/DoS/Hi-C dataset presets) over N concurrent
-//!   connections and reports end-to-end events/s.
+//!   connections on either wire and reports end-to-end events/s.
 
 pub mod client;
-pub mod proto;
+pub mod codec;
+pub mod command;
 pub mod server;
 pub mod traffic;
 
 pub use client::{NetClient, NetStats};
-pub use proto::{
-    parse_wire_event, Request, Response, DEFAULT_ADDR, MAX_BATCH, MAX_LINE, MAX_OPEN_NODES,
+pub use codec::{
+    BinaryCodec, Codec, CommandRead, TextCodec, Wire, WireMode, BINARY_MAGIC,
+    BINARY_VERSION,
+};
+pub use command::{
+    parse_wire_event, validate_wire_event, Command, Reply, DEFAULT_ADDR, MAX_BATCH,
+    MAX_LINE, MAX_OPEN_NODES,
 };
 pub use server::{NetConfig, NetServer, ShutdownHandle};
 pub use traffic::{replay, run_load, TrafficConfig, TrafficReport};

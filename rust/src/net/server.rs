@@ -1,28 +1,36 @@
 //! Thread-per-connection TCP server putting a [`ScoringService`] on a
 //! socket. Pure `std::net` — no async runtime dependency.
 //!
+//! The server is codec-agnostic: each connection negotiates its wire format
+//! on the first byte ([`negotiate`] — text line protocol or binary v2
+//! framing, both on one port), and from then on the connection loop only
+//! moves typed [`Command`]s in and [`Reply`]s out. All formatting knowledge
+//! lives in the codec; [`dispatch`] maps `Command → Reply` against the
+//! service with none.
+//!
 //! * **Connection isolation** — every accepted connection gets its own
-//!   reader thread; a malformed line yields a one-line `ERR` and the
-//!   connection keeps going; an I/O error or panic-free protocol failure
-//!   kills only that connection, never the server.
+//!   reader thread; a malformed frame yields a one-frame `Err` reply and
+//!   the connection keeps going; an I/O error kills only that connection,
+//!   never the server.
 //! * **Backpressure without wedging** — submissions go through the
-//!   service's non-blocking [`ScoringService::try_submit`] /
-//!   [`ScoringService::try_submit_batch`] in a bounded-sleep retry loop
-//!   that also watches the shutdown flag, so one stalled shard can slow a
-//!   connection but can neither wedge it past shutdown nor drop events.
-//! * **Graceful shutdown** — the `SHUTDOWN` verb (or
+//!   service's non-blocking [`ScoringService::try_submit_batch`] (and
+//!   friends) in a bounded-sleep retry loop that also watches the shutdown
+//!   flag, so one stalled shard can slow a connection but can neither wedge
+//!   it past shutdown nor drop events.
+//! * **Graceful shutdown** — the `Shutdown` command (or
 //!   [`ShutdownHandle::signal`]) stops the accept loop, joins every
 //!   connection thread, drains all shards via [`ScoringService::finish`]
 //!   and returns the final [`ServiceReport`] from [`NetServer::run`].
 
-use super::proto::{snapshot_response, Request, Response, DEFAULT_ADDR, MAX_LINE};
+use super::codec::{negotiate, Codec, CommandRead, Negotiated, Wire, WireMode};
+use super::command::{Command, Reply, DEFAULT_ADDR};
 use crate::cli::Config;
 use crate::entropy::FingerState;
 use crate::graph::Graph;
 use crate::service::{ScoringService, ServiceConfig, ServiceReport, SubmitError};
 use crate::stream::StreamEvent;
 use anyhow::{Context, Result};
-use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -33,6 +41,9 @@ use std::time::Duration;
 pub struct NetConfig {
     /// Listen address (`host:port`; port 0 binds an ephemeral port).
     pub addr: String,
+    /// Which wires the server accepts / the client speaks by default:
+    /// `auto` (negotiate per connection) or a single named wire.
+    pub wire: WireMode,
     /// Sleep between non-blocking submit retries while a shard queue is
     /// full (microseconds).
     pub backoff_us: u64,
@@ -43,36 +54,51 @@ pub struct NetConfig {
     /// replies gets its connection dropped instead of wedging the thread
     /// (and the shutdown join) in `write_all` forever.
     pub write_timeout_ms: u64,
+    /// Client-side reply-read timeout (milliseconds; 0 disables): a hung or
+    /// wedged server surfaces as a clean per-connection error instead of
+    /// blocking `finger load` forever.
+    pub client_timeout_ms: u64,
 }
 
 impl Default for NetConfig {
     fn default() -> Self {
         Self {
             addr: DEFAULT_ADDR.to_string(),
+            wire: WireMode::Auto,
             backoff_us: 200,
             poll_ms: 25,
             write_timeout_ms: 5000,
+            client_timeout_ms: 30_000,
         }
     }
 }
 
 impl NetConfig {
     /// Read the `[net]` section of a parsed config file; missing keys fall
-    /// back to the defaults. Recognized keys: `addr`, `backoff_us`,
-    /// `poll_ms`, `write_timeout_ms`.
+    /// back to the defaults. Recognized keys: `addr`, `wire`
+    /// (`auto` | `text` | `binary`), `backoff_us`, `poll_ms`,
+    /// `write_timeout_ms`, `client_timeout_ms`.
     pub fn from_config(c: &Config) -> Self {
         let d = Self::default();
         Self {
             addr: c.get("net.addr").unwrap_or(&d.addr).to_string(),
+            wire: c.get("net.wire").and_then(WireMode::parse).unwrap_or(d.wire),
             backoff_us: c.get_or("net.backoff_us", d.backoff_us).max(1),
             poll_ms: c.get_or("net.poll_ms", d.poll_ms).max(1),
             write_timeout_ms: c.get_or("net.write_timeout_ms", d.write_timeout_ms).max(1),
+            client_timeout_ms: c.get_or("net.client_timeout_ms", d.client_timeout_ms),
         }
+    }
+
+    /// The client read deadline this config implies (`None` when disabled).
+    pub fn client_timeout(&self) -> Option<Duration> {
+        (self.client_timeout_ms > 0)
+            .then(|| Duration::from_millis(self.client_timeout_ms))
     }
 }
 
 /// Signals a running [`NetServer`] to stop from another thread (tests, a
-/// CLI signal handler). Protocol clients use the `SHUTDOWN` verb instead.
+/// CLI signal handler). Protocol clients use the `Shutdown` command instead.
 #[derive(Clone)]
 pub struct ShutdownHandle {
     flag: Arc<AtomicBool>,
@@ -133,7 +159,7 @@ impl NetServer {
         self.shutdown.clone()
     }
 
-    /// Accept connections until a `SHUTDOWN` request (or
+    /// Accept connections until a `Shutdown` command (or
     /// [`ShutdownHandle::signal`]) arrives, then join every connection
     /// thread, drain the shards and return the final report.
     pub fn run(self) -> Result<ServiceReport> {
@@ -185,89 +211,13 @@ impl NetServer {
     }
 }
 
-/// Outcome of one polled line read.
-enum LineRead {
-    /// A complete line (without the trailing newline).
-    Line,
-    /// Clean end of stream.
-    Eof,
-    /// The server is shutting down.
-    Shutdown,
-}
-
-/// Read one `\n`-terminated line, polling the shutdown flag on read
-/// timeouts. Bytes are accumulated with `read_until` (not `read_line`),
-/// so a timeout landing mid multi-byte UTF-8 character cannot discard
-/// already-received bytes — invalid UTF-8 is surfaced lossily and rejected
-/// by the parser rather than silently dropped.
-///
-/// The line is capped at just over [`MAX_LINE`] bytes: the prefix of an
-/// oversized line is returned (and rejected by `Request::parse`) while its
-/// remaining bytes are *discarded through the newline* in bounded chunks —
-/// the buffer never grows past the cap and the tail is never misparsed as
-/// further requests, preserving one-reply-per-request framing.
-fn read_line_polled(
-    reader: &mut BufReader<TcpStream>,
-    buf: &mut String,
-    shutdown: &ShutdownHandle,
-) -> std::io::Result<LineRead> {
-    buf.clear();
-    let mut bytes: Vec<u8> = Vec::new();
-    let mut discard: Vec<u8> = Vec::new();
-    let outcome = loop {
-        // phase 1 accumulates into `bytes` until the cap; phase 2
-        // (oversized) drains the rest of the physical line into a bounded
-        // scratch so the tail is never misparsed as further requests
-        let oversized = bytes.len() > MAX_LINE;
-        let (target, budget) = if oversized {
-            discard.clear();
-            (&mut discard, MAX_LINE as u64)
-        } else {
-            let budget = (MAX_LINE + 2 - bytes.len()) as u64;
-            (&mut bytes, budget)
-        };
-        let mut limited = (&mut *reader).take(budget);
-        match limited.read_until(b'\n', target) {
-            Ok(0) => {
-                // budget is always > 0, so 0 bytes means real EOF
-                break if bytes.is_empty() { LineRead::Eof } else { LineRead::Line };
-            }
-            Ok(n) => {
-                if target.last() == Some(&b'\n') {
-                    break LineRead::Line;
-                }
-                // no newline: the cap was hit (n == budget → keep draining)
-                // or the stream ended mid-line (surface what arrived)
-                if (n as u64) < budget {
-                    break LineRead::Line;
-                }
-            }
-            Err(e) => match e.kind() {
-                ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted => {
-                    if shutdown.is_signaled() {
-                        break LineRead::Shutdown;
-                    }
-                }
-                _ => return Err(e),
-            },
-        }
-    };
-    if matches!(outcome, LineRead::Line) {
-        while matches!(bytes.last(), Some(b'\n') | Some(b'\r')) {
-            bytes.pop();
-        }
-        buf.push_str(&String::from_utf8_lossy(&bytes));
-    }
-    Ok(outcome)
-}
-
 /// One attempt of a non-blocking service call inside [`retry_backoff`].
 enum Backoff<T> {
     /// The call went through.
     Done(T),
     /// The shard queue was full — sleep and try again.
     Retry,
-    /// Terminal failure (shard closed); the `ERR` reason.
+    /// Terminal failure (shard closed); the `Err` reason.
     Fail(String),
 }
 
@@ -275,19 +225,19 @@ enum Backoff<T> {
 /// connection thread: retry `attempt` with `backoff_us` sleeps while the
 /// target shard's queue is full, honoring a shutdown request so one
 /// stalled shard can't wedge the thread past a drain. `Err` carries the
-/// `ERR` response to send instead.
+/// reply to send instead.
 fn retry_backoff<T>(
     net: &NetConfig,
     shutdown: &ShutdownHandle,
     mut attempt: impl FnMut() -> Backoff<T>,
-) -> Result<T, Response> {
+) -> Result<T, Reply> {
     loop {
         match attempt() {
             Backoff::Done(v) => return Ok(v),
-            Backoff::Fail(reason) => return Err(Response::Err(reason)),
+            Backoff::Fail(reason) => return Err(Reply::Err(reason)),
             Backoff::Retry => {
                 if shutdown.is_signaled() {
-                    return Err(Response::Err("shutting-down".to_string()));
+                    return Err(Reply::Err("shutting-down".to_string()));
                 }
                 std::thread::sleep(Duration::from_micros(net.backoff_us));
             }
@@ -304,7 +254,7 @@ fn submit_batch_backoff(
     shutdown: &ShutdownHandle,
     id: &str,
     events: Vec<StreamEvent>,
-) -> Result<usize, Response> {
+) -> Result<usize, Reply> {
     let mut pending = Some(events);
     retry_backoff(net, shutdown, || {
         match service.try_submit_batch(id, pending.take().expect("pending batch")) {
@@ -326,7 +276,7 @@ fn open_backoff(
     shutdown: &ShutdownHandle,
     id: &str,
     nodes: usize,
-) -> Result<(), Response> {
+) -> Result<(), Reply> {
     let mut state =
         Some(FingerState::with_policy(Graph::new(nodes), service.config().policy));
     retry_backoff(net, shutdown, || {
@@ -347,7 +297,7 @@ fn query_backoff(
     net: &NetConfig,
     shutdown: &ShutdownHandle,
     id: &str,
-) -> Result<Option<crate::service::SessionSnapshot>, Response> {
+) -> Result<Option<crate::service::SessionSnapshot>, Reply> {
     retry_backoff(net, shutdown, || match service.try_query(id) {
         Ok(snap) => Backoff::Done(snap),
         Err(SubmitError::WouldBlock { .. }) => Backoff::Retry,
@@ -355,17 +305,84 @@ fn query_backoff(
     })
 }
 
-fn stats_response(service: &ScoringService) -> Response {
+/// Close through the non-blocking path.
+fn close_backoff(
+    service: &ScoringService,
+    net: &NetConfig,
+    shutdown: &ShutdownHandle,
+    id: &str,
+) -> Result<Option<crate::service::SessionSnapshot>, Reply> {
+    retry_backoff(net, shutdown, || match service.try_close_session(id) {
+        Ok(snap) => Backoff::Done(snap),
+        Err(SubmitError::WouldBlock { .. }) => Backoff::Retry,
+        Err(e) => Backoff::Fail(e.to_string()),
+    })
+}
+
+fn stats_reply(service: &ScoringService) -> Reply {
     let depths: Vec<String> =
         service.queue_depths().iter().map(|d| d.to_string()).collect();
-    Response::Ok(vec![
+    Reply::OkKv(vec![
         ("shards".to_string(), service.shards().to_string()),
         ("depths".to_string(), depths.join(",")),
         ("submitted".to_string(), service.events_submitted().to_string()),
     ])
 }
 
-/// Serve one connection until `QUIT`, EOF, `SHUTDOWN` or an I/O error.
+/// What the connection loop does after writing the reply.
+enum Flow {
+    Continue,
+    /// Close this connection (the server keeps running).
+    Quit,
+    /// Signal server shutdown and close this connection.
+    Shutdown,
+}
+
+/// Map one command to its reply against the service. This is the whole
+/// server-side semantics of the protocol — no wire format in sight.
+fn dispatch(
+    service: &ScoringService,
+    net: &NetConfig,
+    shutdown: &ShutdownHandle,
+    cmd: Command,
+) -> (Reply, Flow) {
+    let reply = match cmd {
+        Command::Open { id, nodes } => {
+            match open_backoff(service, net, shutdown, &id, nodes) {
+                Ok(()) => Reply::Ok,
+                Err(err) => err,
+            }
+        }
+        Command::Event { id, ev } => {
+            match submit_batch_backoff(service, net, shutdown, &id, vec![ev]) {
+                Ok(_) => Reply::Ok,
+                Err(err) => err,
+            }
+        }
+        Command::Batch { id, events } => {
+            match submit_batch_backoff(service, net, shutdown, &id, events) {
+                Ok(n) => Reply::kv("accepted", n),
+                Err(err) => err,
+            }
+        }
+        Command::Query { id } => match query_backoff(service, net, shutdown, &id) {
+            Ok(Some(snap)) => Reply::Snapshot(snap),
+            Ok(None) => Reply::Err("unknown-session".to_string()),
+            Err(err) => err,
+        },
+        Command::Close { id } => match close_backoff(service, net, shutdown, &id) {
+            Ok(Some(snap)) => Reply::Snapshot(snap),
+            Ok(None) => Reply::Err("unknown-session".to_string()),
+            Err(err) => err,
+        },
+        Command::Stats => stats_reply(service),
+        Command::Quit => return (Reply::Ok, Flow::Quit),
+        Command::Shutdown => return (Reply::Ok, Flow::Shutdown),
+    };
+    (reply, Flow::Continue)
+}
+
+/// Serve one connection until `Quit`, EOF, `Shutdown` or an I/O error.
 fn handle_conn(
     stream: TcpStream,
     service: &ScoringService,
@@ -383,115 +400,62 @@ fn handle_conn(
         .context("set_write_timeout")?;
     let mut writer = stream.try_clone().context("clone stream")?;
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    let reply = |w: &mut TcpStream, resp: &Response| -> std::io::Result<()> {
-        let mut out = resp.to_line();
-        out.push('\n');
-        w.write_all(out.as_bytes())
+    let stop = || shutdown.is_signaled();
+    // buffer each reply frame and hit the socket once, so a frame is never
+    // split across a write timeout
+    let mut wbuf: Vec<u8> = Vec::new();
+    let mut reply = |codec: &mut dyn Codec,
+                     w: &mut TcpStream,
+                     r: &Reply|
+     -> std::io::Result<()> {
+        wbuf.clear();
+        codec.write_reply(&mut wbuf, r)?;
+        w.write_all(&wbuf)
     };
+
+    // first byte picks the wire; nothing text-framed is consumed
+    let mut codec = match negotiate(&mut reader, &stop)? {
+        Negotiated::Codec(c) => c,
+        Negotiated::Eof | Negotiated::Interrupted => return Ok(()),
+        Negotiated::BadPreamble(reason) => {
+            // the peer committed to binary framing; answer in kind and close
+            let mut bincodec = Wire::Binary.codec();
+            reply(bincodec.as_mut(), &mut writer, &Reply::Err(reason))?;
+            return Ok(());
+        }
+    };
+    if !net.wire.allows(codec.wire()) {
+        let refusal =
+            Reply::Err(format!("{} wire disabled on this server", codec.wire()));
+        reply(codec.as_mut(), &mut writer, &refusal)?;
+        return Ok(());
+    }
+
     loop {
-        match read_line_polled(&mut reader, &mut line, shutdown)? {
-            LineRead::Eof | LineRead::Shutdown => return Ok(()),
-            LineRead::Line => {}
-        }
-        if line.trim().is_empty() {
-            continue; // blank lines are keep-alive noise, not errors
-        }
-        let resp = match Request::parse(&line) {
-            Err(reason) => Response::Err(reason),
-            Ok(Request::Open { id, nodes }) => {
-                match open_backoff(service, net, shutdown, &id, nodes) {
-                    Ok(()) => Response::ok(),
-                    Err(err) => err,
-                }
-            }
-            Ok(Request::Event { id, ev }) => {
-                match submit_batch_backoff(service, net, shutdown, &id, vec![ev]) {
-                    Ok(_) => Response::ok(),
-                    Err(err) => err,
-                }
-            }
-            Ok(Request::Batch { id, count }) => {
-                match read_batch(&mut reader, &mut line, shutdown, count)? {
-                    BatchRead::Events(events) => {
-                        match submit_batch_backoff(service, net, shutdown, &id, events) {
-                            Ok(n) => Response::Ok(vec![(
-                                "accepted".to_string(),
-                                n.to_string(),
-                            )]),
-                            Err(err) => err,
-                        }
+        let resp = match codec.read_command(&mut reader, &stop)? {
+            CommandRead::Eof | CommandRead::Interrupted => return Ok(()),
+            CommandRead::Malformed(reason) => Reply::Err(reason),
+            CommandRead::Cmd(cmd) => {
+                let (resp, flow) = dispatch(service, net, shutdown, cmd);
+                match flow {
+                    Flow::Continue => resp,
+                    Flow::Quit => {
+                        reply(codec.as_mut(), &mut writer, &resp)?;
+                        return Ok(());
                     }
-                    BatchRead::Malformed { at, reason } => {
-                        Response::Err(format!("batch line {at}: {reason}"))
+                    Flow::Shutdown => {
+                        reply(codec.as_mut(), &mut writer, &resp)?;
+                        shutdown.signal();
+                        return Ok(());
                     }
-                    BatchRead::Interrupted => return Ok(()),
                 }
-            }
-            Ok(Request::Query { id }) => match query_backoff(service, net, shutdown, &id) {
-                Ok(Some(snap)) => snapshot_response(&snap),
-                Ok(None) => Response::Err("unknown-session".to_string()),
-                Err(err) => err,
-            },
-            Ok(Request::Stats) => stats_response(service),
-            Ok(Request::Quit) => {
-                reply(&mut writer, &Response::ok())?;
-                return Ok(());
-            }
-            Ok(Request::Shutdown) => {
-                reply(&mut writer, &Response::ok())?;
-                shutdown.signal();
-                return Ok(());
             }
         };
-        reply(&mut writer, &resp)?;
+        reply(codec.as_mut(), &mut writer, &resp)?;
         // during a drain, finish the in-flight request but take no new ones:
         // a connection that never pauses must not stall the shutdown join
         if shutdown.is_signaled() {
             return Ok(());
         }
     }
-}
-
-enum BatchRead {
-    Events(Vec<StreamEvent>),
-    /// Some body line failed to parse (1-based index); the whole batch is
-    /// consumed and rejected so the stream stays in sync.
-    Malformed {
-        at: usize,
-        reason: &'static str,
-    },
-    /// EOF or shutdown arrived mid-batch.
-    Interrupted,
-}
-
-/// Consume exactly `count` event lines after a `BATCH` header. All `count`
-/// lines are read even when one is malformed — the protocol stays line-
-/// synchronized and only the batch is rejected.
-fn read_batch(
-    reader: &mut BufReader<TcpStream>,
-    line: &mut String,
-    shutdown: &ShutdownHandle,
-    count: usize,
-) -> std::io::Result<BatchRead> {
-    // cap the prealloc: the header's count is attacker-controlled, and a
-    // bare `BATCH a 1048576` must not pin ~24 MB per idle connection
-    let mut events = Vec::with_capacity(count.min(4096));
-    let mut bad: Option<(usize, &'static str)> = None;
-    for k in 1..=count {
-        match read_line_polled(reader, line, shutdown)? {
-            LineRead::Line => {}
-            LineRead::Eof | LineRead::Shutdown => return Ok(BatchRead::Interrupted),
-        }
-        match super::proto::parse_wire_event(line) {
-            Ok(ev) => events.push(ev),
-            Err(reason) => {
-                bad.get_or_insert((k, reason));
-            }
-        }
-    }
-    Ok(match bad {
-        Some((at, reason)) => BatchRead::Malformed { at, reason },
-        None => BatchRead::Events(events),
-    })
 }

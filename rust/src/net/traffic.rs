@@ -1,45 +1,54 @@
 //! Load driver: replays a multi-tenant workload (including wiki/DoS/Hi-C
 //! dataset-preset tenants, see [`TenantPreset`]) against a running
-//! `finger serve` instance over N concurrent client connections and reports
-//! end-to-end events/s.
+//! `finger serve` instance over N concurrent client connections — on either
+//! wire — and reports end-to-end events/s.
 //!
 //! Tenants are round-robin partitioned across connections; each connection
 //! opens its tenants, then replays them window-major (one tick-delimited
-//! window per `BATCH` message, interleaved across its tenants so every
+//! window per `Batch` command, interleaved across its tenants so every
 //! shard stays busy — the same discipline as the in-process
-//! [`workload::drive`]), and finally `QUERY`s each tenant so callers can
+//! [`workload::drive`]), and finally `Query`s each tenant so callers can
 //! cross-check the scores against an in-process run of the same workload.
 //!
 //! [`workload::drive`]: crate::service::workload::drive
 
 use super::client::NetClient;
+use super::codec::Wire;
 use crate::service::workload::{
     tenant_streams, TenantPreset, TenantStream, TenantWorkloadConfig,
 };
 use crate::service::SessionSnapshot;
 use crate::stream::StreamEvent;
 use anyhow::{Context, Result};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Shape of one load-driver run.
 #[derive(Debug, Clone)]
 pub struct TrafficConfig {
     /// Server address (`host:port`).
     pub addr: String,
+    /// Wire format every connection speaks (`--wire text|binary`).
+    pub wire: Wire,
+    /// Reply-read deadline per connection (`[net] client_timeout_ms`); a
+    /// hung server surfaces as a per-connection error instead of wedging
+    /// the run forever.
+    pub client_timeout: Option<Duration>,
     /// Concurrent client connections (clamped to the tenant count).
     pub connections: usize,
     /// The tenant workload to replay (presets included).
     pub workload: TenantWorkloadConfig,
-    /// `QUERY` every tenant after its replay and collect the snapshots.
+    /// `Query` every tenant after its replay and collect the snapshots.
     pub query_sessions: bool,
-    /// Send `SHUTDOWN` after the run (from the first connection).
+    /// Send `Shutdown` after the run (from the first connection).
     pub shutdown_after: bool,
 }
 
 impl Default for TrafficConfig {
     fn default() -> Self {
         Self {
-            addr: super::proto::DEFAULT_ADDR.to_string(),
+            addr: super::command::DEFAULT_ADDR.to_string(),
+            wire: Wire::Text,
+            client_timeout: super::server::NetConfig::default().client_timeout(),
             connections: 4,
             workload: TenantWorkloadConfig::default(),
             query_sessions: true,
@@ -51,6 +60,8 @@ impl Default for TrafficConfig {
 /// Aggregate outcome of one load-driver run.
 #[derive(Debug)]
 pub struct TrafficReport {
+    /// The wire the run spoke.
+    pub wire: Wire,
     /// Connections actually used.
     pub connections: usize,
     pub sessions: usize,
@@ -60,10 +71,10 @@ pub struct TrafficReport {
     pub wall_secs: f64,
     /// End-to-end acknowledged events per second, aggregated.
     pub events_per_sec: f64,
-    /// Windows scored server-side, summed over `QUERY` snapshots (0 when
+    /// Windows scored server-side, summed over `Query` snapshots (0 when
     /// `query_sessions` is off).
     pub windows: usize,
-    /// Anomalous windows, summed over `QUERY` snapshots.
+    /// Anomalous windows, summed over `Query` snapshots.
     pub anomalies: usize,
     /// One snapshot per tenant (empty when `query_sessions` is off),
     /// sorted by session id.
@@ -71,25 +82,36 @@ pub struct TrafficReport {
 }
 
 /// Replay `cfg.workload` against `cfg.addr`. Builds the tenant streams,
-/// drives them over `cfg.connections` concurrent connections and returns
-/// the aggregate report. Fails on the first protocol or I/O error.
+/// drives them over `cfg.connections` concurrent connections on `cfg.wire`
+/// and returns the aggregate report. Fails on the first protocol or I/O
+/// error.
 pub fn run_load(cfg: &TrafficConfig) -> Result<TrafficReport> {
     let streams = tenant_streams(&cfg.workload);
-    let report = replay(&cfg.addr, cfg.connections, cfg.query_sessions, &streams)?;
+    let report = replay(
+        &cfg.addr,
+        cfg.connections,
+        cfg.query_sessions,
+        &streams,
+        cfg.wire,
+        cfg.client_timeout,
+    )?;
     if cfg.shutdown_after {
-        NetClient::connect(cfg.addr.as_str())?.shutdown_server()?;
+        NetClient::connect_with(cfg.addr.as_str(), cfg.wire, cfg.client_timeout)?
+            .shutdown_server()?;
     }
     Ok(report)
 }
 
 /// Replay prebuilt tenant streams over `connections` concurrent client
-/// connections (exposed so tests can drive the exact same streams through
-/// the wire and through the in-process service).
+/// connections speaking `wire` (exposed so tests can drive the exact same
+/// streams through either wire and through the in-process service).
 pub fn replay(
     addr: &str,
     connections: usize,
     query_sessions: bool,
     streams: &[TenantStream],
+    wire: Wire,
+    client_timeout: Option<Duration>,
 ) -> Result<TrafficReport> {
     let connections = connections.clamp(1, streams.len().max(1));
     let start = Instant::now();
@@ -100,8 +122,12 @@ pub fn replay(
         for c in 0..connections {
             let chunk: Vec<&TenantStream> =
                 streams.iter().skip(c).step_by(connections).collect();
-            handles
-                .push(scope.spawn(move || drive_connection(addr, &chunk, query_sessions)));
+            handles.push(scope.spawn(move || {
+                drive_connection(addr, &chunk, query_sessions, wire, client_timeout)
+                    // a timeout or protocol failure names its connection,
+                    // so the load report pinpoints which link wedged
+                    .with_context(|| format!("connection {c} ({wire} wire)"))
+            }));
         }
         for h in handles {
             outcomes.push(h.join().expect("load connection thread panicked"));
@@ -117,6 +143,7 @@ pub fn replay(
     let wall_secs = start.elapsed().as_secs_f64();
     snapshots.sort_by(|a, b| a.id.cmp(&b.id));
     Ok(TrafficReport {
+        wire,
         connections,
         sessions: streams.len(),
         events_sent,
@@ -134,8 +161,10 @@ fn drive_connection(
     addr: &str,
     chunk: &[&TenantStream],
     query: bool,
+    wire: Wire,
+    client_timeout: Option<Duration>,
 ) -> Result<(usize, Vec<SessionSnapshot>)> {
-    let mut client = NetClient::connect(addr)?;
+    let mut client = NetClient::connect_with(addr, wire, client_timeout)?;
     let mut sent = 0;
     for (id, initial, _) in chunk {
         client

@@ -31,6 +31,10 @@ enum ShardMsg {
     /// FIFO channel as events, so a query observes everything the caller
     /// submitted before it.
     Query { id: String, reply: Sender<Option<SessionSnapshot>> },
+    /// Retire a session: flush its trailing partial window, free the shard
+    /// state and reply with the final snapshot (`None` if unknown). FIFO
+    /// ordering means the close observes every event submitted before it.
+    Close { id: String, reply: Sender<Option<SessionSnapshot>> },
 }
 
 /// Submission failure.
@@ -76,7 +80,16 @@ pub struct ScoringService {
 struct ShardOutcome {
     reports: Vec<SessionReport>,
     dropped: usize,
+    closed_reports_dropped: usize,
 }
+
+/// Per-shard cap on retained reports of `Close`d sessions. Open/close churn
+/// (or a hostile `OPEN`/`CLOSE` loop) must not grow server memory without
+/// bound; past the cap the oldest-retired histories are dropped and only
+/// counted ([`ServiceReport::closed_reports_dropped`]). Event *accounting*
+/// ([`ServiceReport::total_events`]) is a counter and stays exact
+/// regardless.
+const MAX_RETAINED_CLOSED: usize = 4096;
 
 impl ScoringService {
     /// Spawn the shard workers and start accepting events.
@@ -234,6 +247,36 @@ impl ScoringService {
         rx.recv().map_err(|_| SubmitError::Closed { shard: self.shard_for(id) })
     }
 
+    /// Retire session `id`: flush its trailing partial window, free the
+    /// shard state and return the final [`SessionSnapshot`] (`None` when the
+    /// shard knows no such session — the wire maps that to
+    /// `ERR unknown-session`). The close rides the same FIFO channel as
+    /// events, so it observes everything this caller submitted before it.
+    /// The retired session's report still counts in the final
+    /// [`ServiceReport`] (its events were genuinely scored, retained up to a
+    /// per-shard cap — see [`ServiceReport::closed_reports_dropped`]); it is
+    /// simply no longer live, so later events for the id hit the
+    /// auto-create/drop path and `finish` does not checkpoint it. Blocks
+    /// while the shard's queue is full, like `submit`.
+    pub fn close_session(&self, id: &str) -> Result<Option<SessionSnapshot>, SubmitError> {
+        let (tx, rx) = channel();
+        self.send(ShardMsg::Close { id: id.to_string(), reply: tx })?;
+        rx.recv().map_err(|_| SubmitError::Closed { shard: self.shard_for(id) })
+    }
+
+    /// Non-blocking [`close_session`](Self::close_session): fails with
+    /// [`SubmitError::WouldBlock`] instead of waiting when the shard's queue
+    /// is full.
+    pub fn try_close_session(
+        &self,
+        id: &str,
+    ) -> Result<Option<SessionSnapshot>, SubmitError> {
+        let (tx, rx) = channel();
+        self.try_send(ShardMsg::Close { id: id.to_string(), reply: tx })
+            .map_err(|(_, e)| e)?;
+        rx.recv().map_err(|_| SubmitError::Closed { shard: self.shard_for(id) })
+    }
+
     /// Messages currently in flight per shard (queued plus being processed).
     /// A persistently deep shard signals a hot session set; the `STATS`
     /// protocol verb surfaces this to operators.
@@ -280,7 +323,8 @@ impl ScoringService {
             ShardMsg::Open { id, .. }
             | ShardMsg::Event { id, .. }
             | ShardMsg::Batch { id, .. }
-            | ShardMsg::Query { id, .. } => id,
+            | ShardMsg::Query { id, .. }
+            | ShardMsg::Close { id, .. } => id,
         };
         shard_of(id, self.senders.len())
     }
@@ -314,10 +358,12 @@ impl ScoringService {
         drop(senders); // workers' receive loops end once the queues drain
         let mut sessions = Vec::new();
         let mut dropped_events = 0;
+        let mut closed_reports_dropped = 0;
         for worker in workers {
             let outcome = worker.join().expect("shard worker panicked");
             sessions.extend(outcome.reports);
             dropped_events += outcome.dropped;
+            closed_reports_dropped += outcome.closed_reports_dropped;
         }
         sessions.sort_by(|a, b| a.id.cmp(&b.id));
         let wall_secs = start.elapsed().as_secs_f64();
@@ -326,6 +372,7 @@ impl ScoringService {
             throughput: total_events as f64 / wall_secs.max(1e-12),
             total_events,
             dropped_events,
+            closed_reports_dropped,
             wall_secs,
             shards: cfg.shards.max(1),
             sessions,
@@ -340,6 +387,12 @@ fn shard_worker(
 ) -> ShardOutcome {
     let mut registry = SessionRegistry::new();
     let mut dropped = 0;
+    // reports of sessions retired via Close: their events were scored, so
+    // they still count in the final ServiceReport — they are just no longer
+    // live (not queryable, not checkpointed at finish). Retention is capped
+    // so close churn can't grow memory without bound.
+    let mut closed: Vec<SessionReport> = Vec::new();
+    let mut closed_reports_dropped = 0usize;
     let route = |registry: &mut SessionRegistry,
                      dropped: &mut usize,
                      id: String,
@@ -372,6 +425,19 @@ fn shard_worker(
                 // the querying side may have hung up; that's its business
                 let _ = reply.send(registry.get(&id).map(SessionState::snapshot));
             }
+            ShardMsg::Close { id, reply } => {
+                let snapshot = registry.remove(&id).map(|mut session| {
+                    session.flush(); // the final snapshot scores any open window
+                    let snap = session.snapshot();
+                    if closed.len() < MAX_RETAINED_CLOSED {
+                        closed.push(session.into_report());
+                    } else {
+                        closed_reports_dropped += 1;
+                    }
+                    snap
+                });
+                let _ = reply.send(snapshot);
+            }
         }
         // decrement only after the message is fully processed, so depth
         // really is "queued + being processed": a shard grinding through a
@@ -379,7 +445,7 @@ fn shard_worker(
         depth.fetch_sub(1, Ordering::Relaxed);
     }
     // ingest closed: flush, checkpoint, report
-    let mut reports = Vec::new();
+    let mut reports = closed;
     for mut session in registry.into_sessions() {
         session.flush();
         if let Some(dir) = &cfg.checkpoint_dir {
@@ -389,7 +455,7 @@ fn shard_worker(
         }
         reports.push(session.into_report());
     }
-    ShardOutcome { reports, dropped }
+    ShardOutcome { reports, dropped, closed_reports_dropped }
 }
 
 /// Aggregate outcome across all shards and sessions.
@@ -402,6 +468,10 @@ pub struct ServiceReport {
     /// Events for unknown sessions dropped because `auto_create_sessions`
     /// was off.
     pub dropped_events: usize,
+    /// `Close`d-session reports discarded past the per-shard retention cap
+    /// (close churn must not grow memory unboundedly); their events remain
+    /// counted in `total_events`.
+    pub closed_reports_dropped: usize,
     pub wall_secs: f64,
     /// Accepted events per second, aggregated over the whole run.
     pub throughput: f64,
@@ -530,6 +600,30 @@ mod tests {
         }
         assert_eq!(svc.events_submitted(), 2);
         svc.finish();
+    }
+
+    #[test]
+    fn close_session_returns_final_snapshot_and_frees_state() {
+        let svc = ScoringService::start(ServiceConfig { shards: 2, ..Default::default() });
+        svc.open_session("a", Graph::new(4)).unwrap();
+        svc.submit("a", StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 }).unwrap();
+        svc.submit("a", StreamEvent::Tick).unwrap();
+        // trailing partial window: flushed into the final snapshot
+        svc.submit("a", StreamEvent::EdgeDelta { i: 1, j: 2, dw: 2.0 }).unwrap();
+        let snap = svc.close_session("a").unwrap().expect("session was live");
+        assert_eq!(snap.windows, 2, "close flushes the open window");
+        assert_eq!(snap.events, 3);
+        assert_eq!(snap.edges, 2);
+        assert_eq!(snap.pending_events, 0);
+        // the session is gone: a second close and a query both miss
+        assert_eq!(svc.close_session("a").unwrap(), None);
+        assert_eq!(svc.query("a").unwrap(), None);
+        // ...but its scored history still reaches the final report
+        let report = svc.finish();
+        let s = report.session("a").expect("closed session still reported");
+        assert_eq!(s.records.len(), 2);
+        assert_eq!(s.events, 3);
+        assert_eq!(report.total_events, 3);
     }
 
     #[test]

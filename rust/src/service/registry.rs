@@ -51,6 +51,12 @@ impl SessionRegistry {
         self.sessions.get_mut(id)
     }
 
+    /// Retire one session, handing its state back to the caller (the
+    /// `CLOSE` path). `None` when no such session is live on this shard.
+    pub fn remove(&mut self, id: &str) -> Option<SessionState> {
+        self.sessions.remove(id)
+    }
+
     /// Drain all sessions (finish path).
     pub fn into_sessions(self) -> impl Iterator<Item = SessionState> {
         self.sessions.into_values()

@@ -1,15 +1,22 @@
 //! Loopback integration tests for the TCP front end: wire scores must match
-//! the in-process pipeline bit-for-bit, malformed lines must be isolated to
-//! one `ERR`, and a graceful shutdown must account for every event sent.
+//! the in-process pipeline bit-for-bit on *both* codecs, the text wire must
+//! be byte-identical to the pre-redesign protocol (raw `nc`-style fixtures),
+//! malformed frames must be isolated to one `Err`, `CLOSE` must retire
+//! sessions on both wires, and a graceful shutdown must account for every
+//! event sent.
 
 use finger::graph::Graph;
-use finger::net::{run_load, NetClient, NetConfig, NetServer, TrafficConfig};
-use finger::net::{traffic, Response};
+use finger::net::{
+    run_load, NetClient, NetConfig, NetServer, Reply, TrafficConfig, Wire, WireMode,
+};
+use finger::net::traffic;
 use finger::service::workload::{tenant_streams, TenantStream};
 use finger::service::{
     ScoringService, ServiceConfig, ServiceReport, TenantPreset, TenantWorkloadConfig,
 };
 use finger::stream::StreamEvent;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 
 /// Boot a server on an ephemeral loopback port; returns its address and the
 /// thread that will yield the final `ServiceReport` after shutdown.
@@ -17,6 +24,13 @@ fn spawn_server(
     service_cfg: ServiceConfig,
 ) -> (String, std::thread::JoinHandle<anyhow::Result<ServiceReport>>) {
     let net_cfg = NetConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() };
+    spawn_server_with(service_cfg, net_cfg)
+}
+
+fn spawn_server_with(
+    service_cfg: ServiceConfig,
+    net_cfg: NetConfig,
+) -> (String, std::thread::JoinHandle<anyhow::Result<ServiceReport>>) {
     let server = NetServer::bind(service_cfg, net_cfg).expect("bind ephemeral port");
     let addr = server.local_addr().to_string();
     (addr, std::thread::spawn(move || server.run()))
@@ -53,35 +67,30 @@ fn run_in_process(streams: &[TenantStream], shards: usize) -> ServiceReport {
     svc.finish()
 }
 
-#[test]
-fn concurrent_wire_sessions_match_in_process_scores_bit_for_bit() {
-    let streams = small_workload();
-    let reference = run_in_process(&streams, 3);
-
-    let (addr, server) = spawn_server(ServiceConfig { shards: 3, ..Default::default() });
-    let report = traffic::replay(&addr, 3, true, &streams).expect("load run");
-    NetClient::connect(addr.as_str()).expect("connect").shutdown_server().expect("shutdown");
-    let service_report = server.join().expect("server thread").expect("server run");
-
-    assert_eq!(report.sessions, streams.len());
-    assert_eq!(report.snapshots.len(), streams.len());
+/// Assert one wire replay's snapshots match the in-process reference run
+/// bit for bit.
+fn assert_matches_reference(
+    report: &traffic::TrafficReport,
+    reference: &ServiceReport,
+    label: &str,
+) {
     for snap in &report.snapshots {
         let reference_session =
             reference.session(&snap.id).expect("session in reference run");
-        assert_eq!(snap.windows, reference_session.records.len(), "{}", snap.id);
-        assert_eq!(snap.events, reference_session.events, "{}", snap.id);
+        assert_eq!(snap.windows, reference_session.records.len(), "{label}: {}", snap.id);
+        assert_eq!(snap.events, reference_session.events, "{label}: {}", snap.id);
         let wire_js = snap.last_jsdist.expect("scored at least one window");
         let reference_js = reference_session.records.last().unwrap().jsdist;
         assert_eq!(
             wire_js.to_bits(),
             reference_js.to_bits(),
-            "{}: wire jsdist {wire_js} != in-process {reference_js}",
+            "{label}: {}: wire jsdist {wire_js} != in-process {reference_js}",
             snap.id
         );
         assert_eq!(
             snap.htilde.to_bits(),
             reference_session.htilde.to_bits(),
-            "{}: wire H̃ {} != in-process {}",
+            "{label}: {}: wire H̃ {} != in-process {}",
             snap.id,
             snap.htilde,
             reference_session.htilde
@@ -89,18 +98,114 @@ fn concurrent_wire_sessions_match_in_process_scores_bit_for_bit() {
         assert_eq!(
             snap.anomalies,
             reference_session.anomalies.len(),
-            "{}: anomaly flags must replay identically",
+            "{label}: {}: anomaly flags must replay identically",
             snap.id
         );
     }
-    // the drained server saw exactly what the clients acknowledged
-    assert_eq!(service_report.total_events, report.events_sent);
-    assert_eq!(service_report.total_events, reference.total_events);
-    assert_eq!(service_report.dropped_events, 0);
 }
 
 #[test]
-fn malformed_lines_err_without_killing_connection_or_server() {
+fn both_wires_match_in_process_scores_bit_for_bit() {
+    let streams = small_workload();
+    let reference = run_in_process(&streams, 3);
+
+    // one server, both wires (codec negotiated per connection): the text
+    // replay runs first, then OPEN resets every session for the binary one
+    let (addr, server) = spawn_server(ServiceConfig { shards: 3, ..Default::default() });
+    let text = traffic::replay(&addr, 3, true, &streams, Wire::Text, None)
+        .expect("text load run");
+    let binary = traffic::replay(&addr, 3, true, &streams, Wire::Binary, None)
+        .expect("binary load run");
+    NetClient::connect(addr.as_str()).expect("connect").shutdown_server().expect("shutdown");
+    let service_report = server.join().expect("server thread").expect("server run");
+
+    for report in [&text, &binary] {
+        assert_eq!(report.sessions, streams.len());
+        assert_eq!(report.snapshots.len(), streams.len());
+        assert_eq!(report.events_sent, text.events_sent, "same stream, same count");
+    }
+    assert_matches_reference(&text, &reference, "text");
+    assert_matches_reference(&binary, &reference, "binary");
+    // ...and against each other, snapshot by snapshot
+    for (t, b) in text.snapshots.iter().zip(&binary.snapshots) {
+        assert_eq!(t.id, b.id);
+        assert_eq!(t.htilde.to_bits(), b.htilde.to_bits(), "{}", t.id);
+        assert_eq!(
+            t.last_jsdist.unwrap().to_bits(),
+            b.last_jsdist.unwrap().to_bits(),
+            "{}",
+            t.id
+        );
+    }
+    // the drained server saw exactly what the clients acknowledged
+    assert_eq!(service_report.total_events, text.events_sent + binary.events_sent);
+    assert_eq!(service_report.dropped_events, 0);
+}
+
+/// The redesigned server must speak the v1 line protocol with zero wire
+/// format changes: raw `nc`-style bytes in, exact reply lines out.
+#[test]
+fn raw_text_fixture_is_byte_identical_to_v1() {
+    let (addr, server) = spawn_server(ServiceConfig { shards: 2, ..Default::default() });
+    let stream = TcpStream::connect(addr.as_str()).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut reader = BufReader::new(stream);
+
+    writer
+        .write_all(
+            b"OPEN demo 4\n\
+              EV demo e 0 1 1.0\n\
+              BATCH demo 2\n\
+              e 1 2 2.0\n\
+              t\n\
+              STATS\n\
+              GARBAGE\n\
+              QUERY nosuch\n\
+              QUIT\n",
+        )
+        .expect("send fixture");
+    let mut lines = Vec::new();
+    for _ in 0..7 {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("read reply line");
+        lines.push(line);
+    }
+    assert_eq!(lines[0], "OK\n", "OPEN");
+    assert_eq!(lines[1], "OK\n", "EV");
+    assert_eq!(lines[2], "OK accepted=2\n", "BATCH");
+    // depths are timing-dependent (events may still be in flight); the
+    // layout and the monotonic counters are not
+    assert!(
+        lines[3].starts_with("OK shards=2 depths=") && lines[3].contains(" submitted=3"),
+        "STATS: {:?}",
+        lines[3]
+    );
+    assert_eq!(lines[4], "ERR unknown verb `GARBAGE`\n");
+    assert_eq!(lines[5], "ERR unknown-session\n", "QUERY miss");
+    assert_eq!(lines[6], "OK\n", "QUIT");
+
+    // QUERY kv layout (values vary, key order must not)
+    let mut client = NetClient::connect(addr.as_str()).expect("connect 2");
+    let reply = client.roundtrip_raw(b"QUERY demo\n").expect("query");
+    match reply {
+        Reply::OkKv(pairs) => {
+            let keys: Vec<&str> = pairs.iter().map(|(k, _)| k.as_str()).collect();
+            assert_eq!(
+                keys,
+                [
+                    "windows", "events", "htilde", "nodes", "edges", "anomalies",
+                    "pending", "anomalous", "jsdist"
+                ]
+            );
+        }
+        other => panic!("QUERY should reply kv, got {other:?}"),
+    }
+    client.shutdown_server().expect("shutdown");
+    server.join().expect("server thread").expect("server run");
+}
+
+#[test]
+fn malformed_frames_err_without_killing_connection_or_server() {
     let (addr, server) = spawn_server(ServiceConfig { shards: 2, ..Default::default() });
     let mut client = NetClient::connect(addr.as_str()).expect("connect");
 
@@ -112,10 +217,11 @@ fn malformed_lines_err_without_killing_connection_or_server() {
         "EV s e 1 2 inf\n",
         "BATCH s nope\n",
         "QUERY bad%zz\n",        // malformed id encoding
+        "CLOSE bad%zz\n",
         "STATS andmore\n",
     ] {
-        match client.roundtrip_raw(bad).expect("connection must survive") {
-            Response::Err(reason) => assert!(!reason.is_empty(), "{bad:?}"),
+        match client.roundtrip_raw(bad.as_bytes()).expect("connection must survive") {
+            Reply::Err(reason) => assert!(!reason.is_empty(), "{bad:?}"),
             ok => panic!("{bad:?} should ERR, got {ok:?}"),
         }
     }
@@ -124,8 +230,8 @@ fn malformed_lines_err_without_killing_connection_or_server() {
     // and the stream stays line-synchronized
     client.open("s", 4).expect("open after errors");
     let batch = "BATCH s 3\ne 0 1 1.0\ne 2 2 1.0\nt\n";
-    match client.roundtrip_raw(batch).expect("batch round-trip") {
-        Response::Err(reason) => {
+    match client.roundtrip_raw(batch.as_bytes()).expect("batch round-trip") {
+        Reply::Err(reason) => {
             assert!(reason.contains("batch line 2"), "got {reason:?}")
         }
         ok => panic!("bad batch should ERR, got {ok:?}"),
@@ -166,12 +272,131 @@ fn malformed_lines_err_without_killing_connection_or_server() {
 }
 
 #[test]
+fn close_retires_sessions_on_both_wires() {
+    let (addr, server) = spawn_server(ServiceConfig { shards: 2, ..Default::default() });
+    for wire in [Wire::Text, Wire::Binary] {
+        let id = format!("tenant-{wire}");
+        let mut client =
+            NetClient::connect_with(addr.as_str(), wire, None).expect("connect");
+        client.open(&id, 8).expect("open");
+        client
+            .send_batch(
+                &id,
+                &[
+                    StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 },
+                    StreamEvent::Tick,
+                    // trailing partial window: CLOSE must flush it
+                    StreamEvent::EdgeDelta { i: 1, j: 2, dw: 2.0 },
+                ],
+            )
+            .expect("batch");
+        let closed = client.close(&id).expect("close").expect("session was live");
+        assert_eq!(closed.id, id);
+        assert_eq!(closed.windows, 2, "{wire}: close flushes the open window");
+        assert_eq!(closed.events, 3, "{wire}");
+        assert_eq!(closed.edges, 2, "{wire}");
+        assert_eq!(closed.pending_events, 0, "{wire}");
+        // the session is gone on every path
+        assert_eq!(client.close(&id).expect("second close"), None, "{wire}");
+        assert_eq!(client.query(&id).expect("query"), None, "{wire}");
+        client.quit().expect("quit");
+    }
+    NetClient::connect(addr.as_str()).expect("connect").shutdown_server().expect("shutdown");
+    let report = server.join().expect("server thread").expect("server run");
+    // retired sessions still count in the final accounting
+    assert_eq!(report.sessions.len(), 2);
+    assert_eq!(report.total_events, 6);
+}
+
+#[test]
+fn binary_and_text_clients_interleave_on_one_port() {
+    let (addr, server) = spawn_server(ServiceConfig { shards: 2, ..Default::default() });
+    let mut text = NetClient::connect_with(addr.as_str(), Wire::Text, None).unwrap();
+    let mut binary = NetClient::connect_with(addr.as_str(), Wire::Binary, None).unwrap();
+    assert_eq!(text.wire(), Wire::Text);
+    assert_eq!(binary.wire(), Wire::Binary);
+
+    text.open("shared", 4).expect("text open");
+    binary
+        .send_batch(
+            "shared",
+            &[StreamEvent::EdgeDelta { i: 0, j: 1, dw: 0.5 }, StreamEvent::Tick],
+        )
+        .expect("binary batch");
+    // the binary write is acknowledged, so the text query (same shard FIFO)
+    // observes it
+    let snap = text.query("shared").expect("text query").expect("session exists");
+    assert_eq!(snap.windows, 1);
+    assert_eq!(snap.events, 2);
+    let snap_bin =
+        binary.query("shared").expect("binary query").expect("session exists");
+    assert_eq!(
+        snap.htilde.to_bits(),
+        snap_bin.htilde.to_bits(),
+        "one session, one truth, two wires"
+    );
+    text.quit().expect("quit");
+    binary.shutdown_server().expect("shutdown");
+    server.join().expect("server thread").expect("server run");
+}
+
+#[test]
+fn wire_restriction_refuses_the_other_codec() {
+    let net_cfg = NetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        wire: WireMode::Only(Wire::Text),
+        ..Default::default()
+    };
+    let (addr, server) =
+        spawn_server_with(ServiceConfig { shards: 1, ..Default::default() }, net_cfg);
+    // text works
+    let mut text = NetClient::connect_with(addr.as_str(), Wire::Text, None).unwrap();
+    text.open("a", 2).expect("text open on text-only server");
+    // binary is refused with a binary Err frame, then the connection
+    // closes. Read the refusal without sending a command first — the
+    // server pushes it as soon as negotiation completes, and an unread
+    // command at server close could RST away the buffered refusal.
+    let mut binary = NetClient::connect_with(addr.as_str(), Wire::Binary, None).unwrap();
+    match binary.roundtrip_raw(b"").expect("read refusal") {
+        Reply::Err(reason) => assert!(reason.contains("disabled"), "{reason:?}"),
+        other => panic!("expected refusal, got {other:?}"),
+    }
+    text.shutdown_server().expect("shutdown");
+    server.join().expect("server thread").expect("server run");
+}
+
+#[test]
+fn client_timeout_surfaces_as_clean_error_on_both_wires() {
+    for wire in [Wire::Text, Wire::Binary] {
+        // a listener that accepts and never replies — a hung server
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        let hold = std::thread::spawn(move || {
+            // keep the connection open (unanswered) until the client gives up
+            let (stream, _) = listener.accept().expect("accept");
+            std::thread::sleep(std::time::Duration::from_millis(400));
+            drop(stream);
+        });
+        let mut client = NetClient::connect_with(
+            addr.as_str(),
+            wire,
+            Some(std::time::Duration::from_millis(50)),
+        )
+        .expect("connect");
+        let err = client.query("x").expect_err("must time out");
+        assert!(err.to_string().contains("timed out"), "{wire}: {err:#}");
+        hold.join().expect("holder thread");
+    }
+}
+
+#[test]
 fn shutdown_drains_and_accounts_for_every_event_sent() {
     let (addr, server) = spawn_server(ServiceConfig { shards: 2, ..Default::default() });
 
     let mut sent = 0usize;
-    let mut clients: Vec<NetClient> = (0..2)
-        .map(|_| NetClient::connect(addr.as_str()).expect("connect"))
+    let mut clients: Vec<NetClient> = [Wire::Text, Wire::Binary]
+        .iter()
+        .map(|&w| NetClient::connect_with(addr.as_str(), w, None).expect("connect"))
         .collect();
     for (c, client) in clients.iter_mut().enumerate() {
         let id = format!("tenant-{c}");
@@ -187,7 +412,7 @@ fn shutdown_drains_and_accounts_for_every_event_sent() {
             events.push(StreamEvent::Tick);
             sent += client.send_batch(&id, &events).expect("batch");
         }
-        // one single-event submit exercises the EV verb too
+        // one single-event submit exercises the EV command too
         client.send_event(&id, &StreamEvent::Tick).expect("event");
         sent += 1;
     }
@@ -211,6 +436,8 @@ fn run_load_presets_round_trip_over_the_wire() {
     let (addr, server) = spawn_server(ServiceConfig { shards: 4, ..Default::default() });
     let report = run_load(&TrafficConfig {
         addr,
+        wire: Wire::Binary,
+        client_timeout: Some(std::time::Duration::from_secs(30)),
         connections: 4,
         workload: TenantWorkloadConfig {
             sessions: 4,
@@ -232,6 +459,7 @@ fn run_load_presets_round_trip_over_the_wire() {
     let service_report = server.join().expect("server thread").expect("server run");
 
     assert_eq!(report.sessions, 4);
+    assert_eq!(report.wire, Wire::Binary);
     assert!(report.windows > 0, "every preset must score windows");
     assert_eq!(service_report.total_events, report.events_sent);
     // snapshots are sorted by session id, hence alphabetical preset order

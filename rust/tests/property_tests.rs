@@ -202,3 +202,228 @@ fn prop_graph_invariants_after_random_mutation() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Wire-codec properties: any Command / Reply must survive encode → decode
+// under both codecs (the binary wire exactly; the text wire up to its
+// documented kv erasure of the snapshot shape), including %XX-escaped
+// session ids, extreme-but-finite dw values, and max-size BATCH headers.
+// ---------------------------------------------------------------------------
+
+use finger::net::{BinaryCodec, Codec, Command, CommandRead, Reply, TextCodec, MAX_BATCH};
+use finger::service::SessionSnapshot;
+use finger::stream::StreamEvent;
+
+/// Strategy: session ids spanning every encoding hazard — spaces, `%`,
+/// slashes, UTF-8 multibyte. Non-empty: an empty id has no text-wire
+/// representation (its `%XX` encoding is the empty token), which is a
+/// documented limit of the line protocol, not of the command core.
+fn arb_session_id(rng: &mut Pcg64, size: usize) -> String {
+    let alphabet = [
+        "a", "B", "7", ".", "_", "-", " ", "%", "/", ":", "é", "念", "\t", "\\",
+    ];
+    let len = 1 + rng.below(size.max(1));
+    let mut id = String::new();
+    for _ in 0..len {
+        id.push_str(alphabet[rng.below(alphabet.len())]);
+    }
+    id
+}
+
+/// Strategy: wire-legal events with extreme-but-finite weights.
+fn arb_wire_event(rng: &mut Pcg64, _size: usize) -> StreamEvent {
+    match rng.below(3) {
+        0 => {
+            let i = rng.below((1 << 24) - 1) as u32;
+            let mut j = rng.below((1 << 24) - 1) as u32;
+            if i == j {
+                j = (j + 1) % ((1 << 24) - 1);
+            }
+            // extreme magnitudes, subnormals and exact negatives included —
+            // everything finite must survive the wire bit-for-bit
+            let dw = match rng.below(6) {
+                0 => rng.uniform(-1.0, 1.0),
+                1 => 1e308,
+                2 => -1e308,
+                3 => f64::MIN_POSITIVE,
+                4 => -f64::MIN_POSITIVE / 2.0, // subnormal
+                _ => -0.0,
+            };
+            StreamEvent::EdgeDelta { i, j, dw }
+        }
+        1 => StreamEvent::GrowNodes { count: rng.below(1 << 24) },
+        _ => StreamEvent::Tick,
+    }
+}
+
+fn arb_command(rng: &mut Pcg64, size: usize) -> Command {
+    let id = arb_session_id(rng, size);
+    match rng.below(8) {
+        0 => Command::Open { id, nodes: rng.below((1 << 24) + 1) },
+        1 => Command::Event { id, ev: arb_wire_event(rng, size) },
+        2 => {
+            let n = rng.below(size.max(1) + 1);
+            let events = (0..n).map(|_| arb_wire_event(rng, size)).collect();
+            Command::Batch { id, events }
+        }
+        3 => Command::Query { id },
+        4 => Command::Close { id },
+        5 => Command::Stats,
+        6 => Command::Quit,
+        _ => Command::Shutdown,
+    }
+}
+
+fn arb_snapshot(rng: &mut Pcg64, size: usize) -> SessionSnapshot {
+    SessionSnapshot {
+        // ids never travel in replies; decoders leave them empty
+        id: String::new(),
+        windows: rng.below(size + 1),
+        events: rng.below(1 << 30),
+        last_jsdist: if rng.bernoulli(0.5) { Some(rng.uniform(0.0, 1.0)) } else { None },
+        last_anomalous: rng.bernoulli(0.3),
+        htilde: rng.uniform(-10.0, 10.0),
+        nodes: rng.below(1 << 24),
+        edges: rng.below(1 << 24),
+        anomalies: rng.below(64),
+        pending_events: rng.below(1 << 20),
+    }
+}
+
+fn arb_reply(rng: &mut Pcg64, size: usize) -> Reply {
+    match rng.below(4) {
+        0 => Reply::Ok,
+        1 => {
+            // non-empty: the text wire writes an empty kv set as a bare
+            // `OK`, which decodes as Reply::Ok (same meaning, other shape)
+            let n = 1 + rng.below(size.clamp(1, 8));
+            let pairs = (0..n)
+                .map(|k| (format!("k{k}"), format!("{}", rng.uniform(-1e6, 1e6))))
+                .collect();
+            Reply::OkKv(pairs)
+        }
+        2 => Reply::Snapshot(arb_snapshot(rng, size)),
+        // free text, but never with leading/trailing whitespace — the text
+        // wire trims the reason (documented), so such reasons can't roundtrip
+        _ => Reply::Err(format!("reason-{}/{}", rng.below(1000), rng.below(1000))),
+    }
+}
+
+/// Encode a command with `codec`, decode it back, and compare.
+fn roundtrip_command(codec: &mut dyn Codec, cmd: &Command) -> Result<(), String> {
+    let mut buf = Vec::new();
+    codec.write_command(&mut buf, cmd).map_err(|e| format!("encode: {e}"))?;
+    let mut cursor = std::io::Cursor::new(buf);
+    match codec.read_command(&mut cursor, &|| false).map_err(|e| format!("decode: {e}"))? {
+        CommandRead::Cmd(back) if back == *cmd => Ok(()),
+        other => Err(format!("{} decoded {other:?}", codec.wire())),
+    }
+}
+
+#[test]
+fn prop_commands_roundtrip_under_both_codecs() {
+    run(&Config { cases: 200, ..Default::default() }, arb_command, |cmd| {
+        roundtrip_command(&mut TextCodec::new(), cmd)?;
+        roundtrip_command(&mut BinaryCodec::new(), cmd)
+    });
+}
+
+#[test]
+fn prop_replies_roundtrip_under_both_codecs() {
+    run(&Config { cases: 200, ..Default::default() }, arb_reply, |reply| {
+        // binary: exact, including the snapshot shape and every f64 bit
+        let mut buf = Vec::new();
+        let mut bin = BinaryCodec::new();
+        bin.write_reply(&mut buf, reply).map_err(|e| format!("bin encode: {e}"))?;
+        let back = bin
+            .read_reply(&mut std::io::Cursor::new(buf))
+            .map_err(|e| format!("bin decode: {e}"))?
+            .ok_or("bin decode: eof")?;
+        if back != *reply {
+            return Err(format!("binary: {back:?} != {reply:?}"));
+        }
+        // text: the snapshot shape is erased to kv (documented), but the
+        // decoded content — every float bit included — must survive
+        let mut buf = Vec::new();
+        let mut text = TextCodec::new();
+        text.write_reply(&mut buf, reply).map_err(|e| format!("text encode: {e}"))?;
+        let back = text
+            .read_reply(&mut std::io::Cursor::new(buf))
+            .map_err(|e| format!("text decode: {e}"))?
+            .ok_or("text decode: eof")?;
+        match (reply, &back) {
+            (Reply::Snapshot(snap), _) => {
+                let got = back
+                    .clone()
+                    .into_snapshot("")
+                    .ok_or_else(|| format!("text: snapshot kv unreadable: {back:?}"))?;
+                if got != *snap {
+                    return Err(format!("text snapshot: {got:?} != {snap:?}"));
+                }
+                match (got.last_jsdist, snap.last_jsdist) {
+                    (Some(a), Some(b)) if a.to_bits() != b.to_bits() => {
+                        return Err(format!("jsdist bits {a} != {b}"));
+                    }
+                    _ => {}
+                }
+                if got.htilde.to_bits() != snap.htilde.to_bits() {
+                    return Err("htilde bits drifted".into());
+                }
+            }
+            (expected, got) if got != expected => {
+                return Err(format!("text: {got:?} != {expected:?}"));
+            }
+            _ => {}
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn write_batch_is_byte_identical_to_write_command() {
+    // the client's borrowing hot path and the typed-command path must
+    // produce the same bytes under both codecs
+    fn check_codec(codec: &mut dyn Codec) {
+        let events = vec![
+            StreamEvent::EdgeDelta { i: 0, j: 1, dw: -1.5e300 },
+            StreamEvent::GrowNodes { count: 3 },
+            StreamEvent::Tick,
+        ];
+        let id = "tenant/1 %x";
+        let cmd = Command::Batch { id: id.to_string(), events: events.clone() };
+        let mut via_command = Vec::new();
+        codec.write_command(&mut via_command, &cmd).unwrap();
+        let mut via_batch = Vec::new();
+        codec.write_batch(&mut via_batch, id, &events).unwrap();
+        assert_eq!(via_command, via_batch, "{} wire", codec.wire());
+    }
+    check_codec(&mut TextCodec::new());
+    check_codec(&mut BinaryCodec::new());
+}
+
+#[test]
+fn max_size_batch_header_roundtrips_under_both_codecs() {
+    // not a property (one deterministic worst case): a BATCH at exactly
+    // MAX_BATCH events survives both wires; one past it is refused by both
+    let events: Vec<StreamEvent> = (0..MAX_BATCH)
+        .map(|k| {
+            let i = (k % ((1 << 20) - 1)) as u32;
+            StreamEvent::EdgeDelta { i, j: i + 1, dw: (k as f64).mul_add(1e-9, 0.5) }
+        })
+        .collect();
+    let cmd = Command::Batch { id: "max".to_string(), events };
+    roundtrip_command(&mut TextCodec::new(), &cmd).expect("text at MAX_BATCH");
+    roundtrip_command(&mut BinaryCodec::new(), &cmd).expect("binary at MAX_BATCH");
+
+    // text: an over-cap header is a recoverable Malformed read
+    let over = format!("BATCH max {}\n", MAX_BATCH + 1);
+    match TextCodec::new()
+        .read_command(&mut std::io::Cursor::new(over.into_bytes()), &|| false)
+        .expect("io")
+    {
+        CommandRead::Malformed(reason) => {
+            assert!(reason.contains("exceeds maximum"), "{reason:?}")
+        }
+        other => panic!("over-cap text header: {other:?}"),
+    }
+}

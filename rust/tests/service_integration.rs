@@ -194,6 +194,60 @@ fn checkpoint_restore_roundtrip_preserves_htilde_per_session() {
 }
 
 #[test]
+fn close_session_retires_state_but_keeps_the_books() {
+    // close mid-run: the snapshot is final (trailing window flushed), the
+    // shard state is freed, and the closed session's scored history still
+    // reaches the end-of-run report — no event goes unaccounted.
+    let workload_data = small_workload(8, 3);
+    let svc = ScoringService::start(ServiceConfig { shards: 3, ..Default::default() });
+    let mut submitted = 0usize;
+    for (id, initial, events) in &workload_data {
+        svc.open_session(id, initial.clone()).unwrap();
+        submitted += svc.submit_all(id, events.iter().cloned()).unwrap();
+    }
+    // close half the sessions; FIFO ordering makes each close observe every
+    // event submitted for its session above
+    let (closed, kept) = workload_data.split_at(4);
+    for (id, _, events) in closed {
+        let snap = svc.close_session(id).unwrap().expect("session is live");
+        assert_eq!(snap.id, *id);
+        assert_eq!(snap.events, events.len());
+        assert_eq!(snap.pending_events, 0, "{id}: close flushes the open window");
+        // retired: reads and re-closes both miss now
+        assert_eq!(svc.query(id).unwrap(), None, "{id}");
+        assert_eq!(svc.close_session(id).unwrap(), None, "{id}");
+    }
+    assert_eq!(svc.close_session("never-opened").unwrap(), None);
+    for (id, _, _) in kept {
+        assert!(svc.query(id).unwrap().is_some(), "{id} must still be live");
+    }
+    let report = svc.finish();
+    assert_eq!(report.sessions.len(), 8, "closed sessions still report");
+    assert_eq!(report.total_events, submitted);
+    for (id, _, events) in &workload_data {
+        assert_eq!(report.session(id).unwrap().events, events.len(), "{id}");
+    }
+}
+
+#[test]
+fn close_then_reopen_starts_fresh() {
+    let svc = ScoringService::start(ServiceConfig { shards: 2, ..Default::default() });
+    svc.open_session("a", Graph::new(4)).unwrap();
+    svc.submit("a", StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 }).unwrap();
+    svc.submit("a", StreamEvent::Tick).unwrap();
+    let first = svc.close_session("a").unwrap().expect("live");
+    assert_eq!(first.windows, 1);
+    // a reopened id is a brand-new session, not a resurrection
+    svc.open_session("a", Graph::new(4)).unwrap();
+    let snap = svc.query("a").unwrap().expect("reopened");
+    assert_eq!(snap.windows, 0);
+    assert_eq!(snap.events, 0);
+    let report = svc.finish();
+    // two distinct lifetimes of "a" are both accounted for
+    assert_eq!(report.sessions.iter().filter(|s| s.id == "a").count(), 2);
+}
+
+#[test]
 fn growing_sessions_route_and_score() {
     // sessions that grow their node set mid-stream (GrowNodes) work through
     // the service exactly as through a direct state
