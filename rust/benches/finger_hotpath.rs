@@ -1,0 +1,318 @@
+//! §Perf: the FINGER scoring hot path — windows/s and allocations/window.
+//!
+//! `cargo bench --bench finger_hotpath [-- --full | -- --quick]`
+//!
+//! Measures one committed window score end to end (batcher coalesce →
+//! Algorithm-2 preview ×2 → commit → anomaly decision) in two shapes:
+//!
+//! * **small-Δ streaming** — 10-edge windows against a large graph (the
+//!   wiki/DoS per-session shape the service multiplexes by the thousand);
+//! * **large-Δ monthly batch** — thousands-of-edges windows (the paper's
+//!   monthly Wikipedia snapshots).
+//!
+//! Each shape is driven twice over identical event streams: the **scratch**
+//! path (`WindowBatcher::push_ref` + `WindowScorer`'s reusable
+//! `entropy::Scratch`) and the **baseline** path (owned `push` + the
+//! per-call-allocating `jsdist_incremental`), asserting the scores are
+//! bit-for-bit identical before reporting the throughput ratio.
+//!
+//! A counting global allocator measures allocations/window; in steady state
+//! (fixed edge support, PaperFaithful s_max, resyncs off) the scratch scorer
+//! loop must allocate **zero** — the bench asserts it, so a regression fails
+//! CI's bench-smoke job.
+//!
+//! Results land in `BENCH_finger.json` (override with `FINGER_BENCH_JSON`);
+//! see docs/PERF.md for how to read the trajectory.
+
+use finger::bench::{bench_mode, write_json_report, BenchMode, BenchRecord};
+use finger::distance::jsdist_incremental;
+use finger::entropy::{FingerState, SmaxPolicy};
+use finger::graph::Graph;
+use finger::stream::{
+    AnomalyDetector, ResyncPolicy, StreamEvent, WindowBatcher, WindowScorer,
+};
+use finger::util::Pcg64;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Global allocator wrapper counting every alloc/realloc (not frees): the
+/// steady-state scorer loop must not enter it at all.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTING: CountingAlloc = CountingAlloc;
+
+fn alloc_calls() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+/// One window: `edges_per_window` edge events + the closing tick.
+fn make_events(
+    n: usize,
+    windows: usize,
+    edges_per_window: usize,
+    seed: u64,
+) -> Vec<StreamEvent> {
+    let mut rng = Pcg64::new(seed);
+    let mut evs = Vec::with_capacity(windows * (edges_per_window + 1));
+    for _ in 0..windows {
+        for _ in 0..edges_per_window {
+            let i = rng.below(n) as u32;
+            let j = (i + 1 + rng.below(n - 1) as u32) % n as u32;
+            if i != j {
+                evs.push(StreamEvent::EdgeDelta { i, j, dw: rng.uniform(0.1, 1.0) });
+            }
+        }
+        evs.push(StreamEvent::Tick);
+    }
+    evs
+}
+
+/// Fold `score` bits into a running checksum so the two paths can be
+/// asserted bit-for-bit equal without storing every window.
+fn fold(acc: u64, score: f64) -> u64 {
+    acc.rotate_left(7) ^ score.to_bits()
+}
+
+/// Scratch path: in-place batcher + scratch-reusing scorer (the service /
+/// pipeline hot path). Returns (windows, seconds, score checksum).
+fn run_scratch(initial: &Graph, events: &[StreamEvent]) -> (usize, f64, u64) {
+    let mut batcher = WindowBatcher::new();
+    let mut scorer = WindowScorer::new(
+        FingerState::new(initial.clone()),
+        AnomalyDetector::new(3.0, 24),
+        ResyncPolicy::disabled(),
+    );
+    let mut checksum = 0u64;
+    let t0 = Instant::now();
+    for ev in events {
+        if let Some((delta, n_events)) = batcher.push_ref(ev.clone()) {
+            let rec = scorer.score(delta, n_events);
+            checksum = fold(checksum, rec.jsdist);
+        }
+    }
+    (scorer.windows(), t0.elapsed().as_secs_f64(), checksum)
+}
+
+/// Baseline path: owned batcher windows + per-call-allocating Algorithm 2 —
+/// the pre-optimization per-window allocation pattern.
+fn run_baseline(initial: &Graph, events: &[StreamEvent]) -> (usize, f64, u64) {
+    let mut batcher = WindowBatcher::new();
+    let mut state = FingerState::new(initial.clone());
+    let mut detector = AnomalyDetector::new(3.0, 24);
+    let mut windows = 0usize;
+    let mut checksum = 0u64;
+    let t0 = Instant::now();
+    for ev in events {
+        if let Some((delta, _n_events)) = batcher.push(ev.clone()) {
+            let js = jsdist_incremental(&mut state, &delta);
+            detector.observe(js);
+            windows += 1;
+            checksum = fold(checksum, js);
+        }
+    }
+    (windows, t0.elapsed().as_secs_f64(), checksum)
+}
+
+/// Run one shape through both paths; returns (scratch windows/s, baseline
+/// windows/s) and pushes the records.
+fn bench_shape(
+    label: &str,
+    initial: &Graph,
+    events: &[StreamEvent],
+    records: &mut Vec<BenchRecord>,
+) -> (f64, f64) {
+    // warm both paths once (fills caches and scratch capacities), then time
+    let _ = run_scratch(initial, events);
+    let _ = run_baseline(initial, events);
+    let (w_s, secs_s, sum_s) = run_scratch(initial, events);
+    let (w_b, secs_b, sum_b) = run_baseline(initial, events);
+    assert_eq!(w_s, w_b, "{label}: window counts diverged");
+    assert_eq!(
+        sum_s, sum_b,
+        "{label}: scratch and baseline scores are not bit-identical"
+    );
+    let wps_scratch = w_s as f64 / secs_s.max(1e-12);
+    let wps_baseline = w_b as f64 / secs_b.max(1e-12);
+    println!(
+        "{label:<28} {w_s} windows: scratch {wps_scratch:.3e} w/s, \
+         baseline {wps_baseline:.3e} w/s ({:.2}x)",
+        wps_scratch / wps_baseline
+    );
+    records.push(BenchRecord::metric(
+        format!("finger_windows_per_sec_{label}"),
+        wps_scratch,
+        "windows_per_sec",
+    ));
+    records.push(BenchRecord::metric(
+        format!("finger_windows_per_sec_{label}_baseline"),
+        wps_baseline,
+        "windows_per_sec",
+    ));
+    records.push(BenchRecord::metric(
+        format!("finger_speedup_{label}"),
+        wps_scratch / wps_baseline,
+        "ratio",
+    ));
+    (wps_scratch, wps_baseline)
+}
+
+/// Steady-state allocation count: perturb-only windows over a fixed edge
+/// support (no adjacency growth), PaperFaithful s_max (no multiset), resync
+/// off. Measures allocator entries per window for the given driver.
+fn allocs_per_window(
+    g: &Graph,
+    edges: &[(u32, u32, f64)],
+    windows: usize,
+    scratch_path: bool,
+) -> f64 {
+    let mut rng = Pcg64::new(0xA110C);
+    let mut mk_events = |count: usize| {
+        let mut evs = Vec::with_capacity(count * (edges.len().min(10) + 1));
+        for _ in 0..count {
+            for k in 0..10 {
+                let (i, j, _) = edges[(rng.below(edges.len()) + k) % edges.len()];
+                // tiny alternating perturbation: weight stays strictly positive
+                let dw = if rng.bernoulli(0.5) { 1e-3 } else { -1e-3 };
+                evs.push(StreamEvent::EdgeDelta { i, j, dw });
+            }
+            evs.push(StreamEvent::Tick);
+        }
+        evs
+    };
+    let warm = mk_events(64);
+    let timed = mk_events(windows);
+    let mut batcher = WindowBatcher::new();
+    let state = FingerState::with_policy(g.clone(), SmaxPolicy::PaperFaithful);
+    if scratch_path {
+        let mut scorer =
+            WindowScorer::new(state, AnomalyDetector::new(3.0, 24), ResyncPolicy::disabled());
+        for ev in &warm {
+            if let Some((delta, n)) = batcher.push_ref(ev.clone()) {
+                scorer.score(delta, n);
+            }
+        }
+        let before = alloc_calls();
+        for ev in &timed {
+            if let Some((delta, n)) = batcher.push_ref(ev.clone()) {
+                scorer.score(delta, n);
+            }
+        }
+        (alloc_calls() - before) as f64 / windows as f64
+    } else {
+        let mut state = state;
+        let mut detector = AnomalyDetector::new(3.0, 24);
+        for ev in &warm {
+            if let Some((delta, _)) = batcher.push(ev.clone()) {
+                detector.observe(jsdist_incremental(&mut state, &delta));
+            }
+        }
+        let before = alloc_calls();
+        for ev in &timed {
+            if let Some((delta, _)) = batcher.push(ev.clone()) {
+                detector.observe(jsdist_incremental(&mut state, &delta));
+            }
+        }
+        (alloc_calls() - before) as f64 / windows as f64
+    }
+}
+
+fn main() {
+    let mode = bench_mode();
+    let (n_small, windows_small) = match mode {
+        BenchMode::Quick => (2_000, 400),
+        BenchMode::Default => (20_000, 2_000),
+        BenchMode::Full => (200_000, 5_000),
+    };
+    let (n_large, windows_large, edges_large) = match mode {
+        BenchMode::Quick => (600, 12, 1_000),
+        BenchMode::Default => (1_500, 24, 3_000),
+        BenchMode::Full => (4_000, 36, 10_000),
+    };
+    println!("=== §Perf FINGER hot path ({mode:?}) ===\n");
+    let mut records: Vec<BenchRecord> = Vec::new();
+
+    let mut rng = Pcg64::new(0xF19E);
+
+    // -- shape 1: small-Δ streaming windows over a big BA graph --
+    let g_small = finger::generators::barabasi_albert(n_small, 5, &mut rng);
+    let ev_small = make_events(n_small, windows_small, 10, 0xD311A);
+    println!(
+        "small-Δ streaming: BA n={} m={}, {windows_small} windows × 10 events",
+        g_small.num_nodes(),
+        g_small.num_edges()
+    );
+    let (wps, _) = bench_shape("small_delta", &g_small, &ev_small, &mut records);
+
+    // -- shape 2: large-Δ monthly batches on a denser mid-size graph --
+    let g_large = finger::generators::erdos_renyi_avg_degree(n_large, 16.0, &mut rng);
+    let ev_large = make_events(n_large, windows_large, edges_large, 0xB47C);
+    println!(
+        "\nlarge-Δ monthly batch: ER n={} m={}, {windows_large} windows × {edges_large} events",
+        g_large.num_nodes(),
+        g_large.num_edges()
+    );
+    bench_shape("large_delta", &g_large, &ev_large, &mut records);
+
+    // -- steady-state allocations/window (fixed support, perturb-only) --
+    let support: Vec<(u32, u32, f64)> = g_small.edges().take(4_000).collect();
+    let alloc_windows = match mode {
+        BenchMode::Quick => 100,
+        _ => 400,
+    };
+    let a_scratch = allocs_per_window(&g_small, &support, alloc_windows, true);
+    let a_baseline = allocs_per_window(&g_small, &support, alloc_windows, false);
+    println!(
+        "\nsteady-state allocations/window: scratch {a_scratch:.2}, baseline {a_baseline:.2}"
+    );
+    records.push(BenchRecord::metric(
+        "finger_allocs_per_window_steady",
+        a_scratch,
+        "allocs_per_window",
+    ));
+    records.push(BenchRecord::metric(
+        "finger_allocs_per_window_steady_baseline",
+        a_baseline,
+        "allocs_per_window",
+    ));
+    assert_eq!(
+        a_scratch, 0.0,
+        "scratch scorer loop allocated in steady state — hot-path regression"
+    );
+
+    println!("\nsmall-Δ scratch throughput: {wps:.3e} windows/s");
+    let json_path =
+        std::env::var("FINGER_BENCH_JSON").unwrap_or_else(|_| "BENCH_finger.json".to_string());
+    match write_json_report(&json_path, "finger_hotpath", &records) {
+        Ok(()) => println!("wrote {} records to {json_path}", records.len()),
+        Err(e) => eprintln!("failed to write {json_path}: {e}"),
+    }
+}

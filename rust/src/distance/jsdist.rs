@@ -6,7 +6,7 @@
 //! (Algorithm 2, incremental); approximation error can push the divergence
 //! slightly negative, so it is clamped at 0 before the square root.
 
-use crate::entropy::{exact_vnge, finger_hhat, FingerState};
+use crate::entropy::{exact_vnge, finger_hhat, FingerState, Scratch};
 use crate::graph::{ops, DeltaGraph, Graph};
 
 /// JS distance with an arbitrary entropy functional (the common core of
@@ -32,12 +32,37 @@ pub fn jsdist_exact(a: &Graph, b: &Graph) -> f64 {
 ///
 /// Line 1 computes H̃(G ⊕ ΔG/2) and H̃(G ⊕ ΔG) by Theorem 2 previews;
 /// line 2 combines them with the state's current H̃(G).
+///
+/// Allocates the mid-point delta and preview buffers per call; the scoring
+/// hot path uses [`jsdist_incremental_with`], which reuses a caller-owned
+/// [`Scratch`] and returns bit-identical scores.
 pub fn jsdist_incremental(state: &mut FingerState, delta: &DeltaGraph) -> f64 {
     let h_g = state.htilde();
     let h_mid = state.htilde_after(&delta.half());
     let p_next = state.preview(delta);
     let h_next = p_next.htilde();
     state.apply_previewed(delta, p_next); // reuse the ΔG preview for commit
+    let div = h_mid - 0.5 * (h_g + h_next);
+    div.max(0.0).sqrt()
+}
+
+/// [`jsdist_incremental`] with a reusable [`Scratch`] workspace: the ΔG/2
+/// mid-point delta and every preview/commit buffer live in `scratch`, so a
+/// steady-state window scores with zero allocations. Identical arithmetic in
+/// identical order — the score and the advanced state are bit-for-bit the
+/// same as the allocating variant.
+pub fn jsdist_incremental_with(
+    state: &mut FingerState,
+    delta: &DeltaGraph,
+    scratch: &mut Scratch,
+) -> f64 {
+    let h_g = state.htilde();
+    let (half, bufs) = scratch.split();
+    delta.half_into(half);
+    let h_mid = state.preview_bufs(half, true, bufs).htilde();
+    let p_next = state.preview_bufs(delta, true, bufs);
+    let h_next = p_next.htilde();
+    state.apply_previewed_bufs(delta, p_next, bufs); // reuse the ΔG preview
     let div = h_mid - 0.5 * (h_g + h_next);
     div.max(0.0).sqrt()
 }
@@ -111,6 +136,32 @@ mod tests {
         assert!((inc - batch).abs() < 1e-9, "inc={inc} batch={batch}");
         // state advanced to G ⊕ ΔG
         assert_eq!(state.graph().num_edges(), g_next.num_edges());
+    }
+
+    #[test]
+    fn incremental_with_scratch_bit_identical() {
+        let mut rng = Pcg64::new(11);
+        let g = generators::erdos_renyi(50, 0.1, &mut rng);
+        let mut a = FingerState::new(g.clone());
+        let mut b = FingerState::new(g);
+        let mut scratch = crate::entropy::Scratch::default();
+        for step in 0..40 {
+            let mut d = DeltaGraph::new();
+            for _ in 0..8 {
+                let i = rng.below(50) as u32;
+                let j = (i + 1 + rng.below(49) as u32) % 50;
+                if i != j {
+                    d.add(i, j, rng.uniform(-0.8, 1.0));
+                }
+            }
+            // alternate normal-form and raw (possibly duplicated) deltas
+            let d = if step % 2 == 0 { d.coalesced() } else { d };
+            let js_alloc = jsdist_incremental(&mut a, &d);
+            let js_scratch = jsdist_incremental_with(&mut b, &d, &mut scratch);
+            assert_eq!(js_alloc.to_bits(), js_scratch.to_bits(), "step {step}");
+            assert_eq!(a.htilde().to_bits(), b.htilde().to_bits(), "step {step}");
+            assert_eq!(a.q().to_bits(), b.q().to_bits(), "step {step}");
+        }
     }
 
     #[test]

@@ -12,6 +12,8 @@ pub mod veo;
 pub use deltacon::{deltacon_similarity, rmd_distance, DeltaConOpts};
 pub use degree::{bhattacharyya_distance, cosine_distance, hellinger_distance};
 pub use ged::graph_edit_distance;
-pub use jsdist::{jsdist_exact, jsdist_fast, jsdist_incremental, jsdist_with};
+pub use jsdist::{
+    jsdist_exact, jsdist_fast, jsdist_incremental, jsdist_incremental_with, jsdist_with,
+};
 pub use lambda::{lambda_distance, LambdaMatrix};
 pub use veo::veo_score;

@@ -11,9 +11,57 @@
 //!   Δs_max = max(0, max_{i∈Δ𝒱}(sᵢ+Δsᵢ) − s_max) rule never decreases s_max,
 //!   which drifts on deletion-heavy streams.
 //! * **PaperFaithful**: the paper's monotone rule, O(1) per touched node.
+//!
+//! Every preview/commit entry point comes in two flavors: the plain methods
+//! (`preview`/`apply`/`apply_previewed`) allocate their transient buffers per
+//! call, while the `*_with` variants thread a caller-owned [`Scratch`]
+//! workspace so a steady-state scoring loop allocates nothing. Both flavors
+//! run the same code on the same values — results are bit-for-bit identical.
 
+use crate::graph::delta::CoalesceBuf;
 use crate::graph::{DeltaGraph, Graph};
 use std::collections::BTreeMap;
+
+/// Reusable buffers for one Theorem-2 preview/commit evaluation. Every
+/// buffer is cleared before use, so a reused instance computes bit-for-bit
+/// the same result as a fresh one — reuse only skips the allocations.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct PreviewBufs {
+    /// Stable-coalesce workspace for non-normal-form deltas.
+    coalesce: CoalesceBuf,
+    /// Coalesced view of a non-normal-form delta.
+    coalesced: Vec<(u32, u32, f64)>,
+    /// Raw (node, Δs) pushes, two per edge delta.
+    pushes: Vec<(u32, f64)>,
+    /// Per-node net strength changes (merged `pushes`).
+    dstrength: Vec<(u32, f64)>,
+    /// Raw (strength-bits, ±1) multiset adjustments (Exact s_max preview).
+    adj_pushes: Vec<(u64, i64)>,
+    /// Merged multiset adjustments.
+    adj: Vec<(u64, i64)>,
+    /// Sorted, deduplicated touched-node ids (Exact commit).
+    touched: Vec<u32>,
+}
+
+/// Reusable scratch workspace for the allocation-free scoring hot path:
+/// holds the mid-point ΔG/2 buffer plus the preview/commit buffers that
+/// `preview`/`apply`/`jsdist_incremental` would otherwise allocate per call.
+/// One `Scratch` per scorer (or per thread); it carries no state between
+/// calls, so `*_with` results are bit-identical to the allocating wrappers.
+#[derive(Debug, Clone, Default)]
+pub struct Scratch {
+    pub(crate) half: DeltaGraph,
+    pub(crate) bufs: PreviewBufs,
+}
+
+impl Scratch {
+    /// Split into the mid-point delta buffer and the preview buffers, so the
+    /// Algorithm-2 loop can preview the half delta it just wrote into the
+    /// same workspace.
+    pub(crate) fn split(&mut self) -> (&mut DeltaGraph, &mut PreviewBufs) {
+        (&mut self.half, &mut self.bufs)
+    }
+}
 
 /// s_max maintenance policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -108,13 +156,24 @@ impl FingerState {
     /// Theorem 2: compute (Q′, c′, s_max′) for G ⊕ ΔG **without committing**.
     /// O(Δn + Δm). The preview s_max uses the paper's monotone rule (exact
     /// recomputation without commit would be O(n)); on commit the `Exact`
-    /// policy corrects it.
+    /// policy corrects it. Allocates transient buffers — the scoring hot
+    /// path passes a reusable workspace via [`FingerState::preview_with`].
     pub fn preview(&self, delta: &DeltaGraph) -> PreviewedState {
-        self.preview_impl(delta, true)
+        self.preview_bufs(delta, true, &mut PreviewBufs::default())
     }
 
-    fn preview_impl(&self, delta: &DeltaGraph, want_smax: bool) -> PreviewedState {
-        let delta_s = delta.delta_total_weight();
+    /// `preview` reusing `scratch`'s buffers: bit-identical result, zero
+    /// allocations once the buffers have grown to the working-set size.
+    pub fn preview_with(&self, delta: &DeltaGraph, scratch: &mut Scratch) -> PreviewedState {
+        self.preview_bufs(delta, true, &mut scratch.bufs)
+    }
+
+    pub(crate) fn preview_bufs(
+        &self,
+        delta: &DeltaGraph,
+        want_smax: bool,
+        bufs: &mut PreviewBufs,
+    ) -> PreviewedState {
         // Coalesce duplicate (i,j) entries before anything clamps: the clamp
         // below must see the *net* per-edge delta, matching what
         // `coalesced().apply_to(..)` / a single `Graph::add_weight` call
@@ -122,29 +181,19 @@ impl FingerState {
         // diverges whenever a delta over-deletes and then re-adds an edge.
         // Deltas already in coalesced normal form (the pipeline/service hot
         // path) are used in place — O(Δ) check, no copy; anything else gets
-        // an O(Δ log Δ) sort + merge.
-        let coalesced_entries;
+        // the O(Δ log Δ) stable sort + merge shared with `coalesced()`.
         let edges: &[(u32, u32, f64)] = if delta.is_sorted_unique() {
             delta.edge_deltas()
         } else {
-            let mut entries: Vec<(u32, u32, f64)> = delta.edge_deltas().to_vec();
-            entries.sort_unstable_by_key(|&(i, j, _)| (i, j));
-            let mut merged: Vec<(u32, u32, f64)> = Vec::with_capacity(entries.len());
-            for (i, j, dw) in entries {
-                match merged.last_mut() {
-                    Some((li, lj, acc)) if *li == i && *lj == j => *acc += dw,
-                    _ => merged.push((i, j, dw)),
-                }
-            }
-            coalesced_entries = merged;
-            &coalesced_entries
+            bufs.coalesce.coalesce_into(delta.edge_deltas(), &mut bufs.coalesced);
+            &bufs.coalesced
         };
         // ΔQ = 2Σ sᵢΔsᵢ + Σ Δsᵢ² + 4Σ wᵢⱼΔwᵢⱼ + 2Σ Δwᵢⱼ²  (Theorem 2),
         // where sᵢ, wᵢⱼ are values in G and Δsᵢ the *net* strength change.
         // Per-node net strength changes, accumulated by push + sort + merge:
         // O(Δ log Δ), cache-friendly for both the 10-edge streaming windows
         // and the thousands-edge monthly batches.
-        let mut pushes: Vec<(u32, f64)> = Vec::with_capacity(edges.len() * 2);
+        bufs.pushes.clear();
         let mut edge_terms = 0.0;
         for &(i, j, dw) in edges {
             let w_old = if (i as usize) < self.graph.num_nodes()
@@ -157,21 +206,21 @@ impl FingerState {
             // Clamp like Graph::add_weight does: weights cannot go negative.
             let dw_eff = if w_old + dw < 0.0 { -w_old } else { dw };
             edge_terms += 4.0 * w_old * dw_eff + 2.0 * dw_eff * dw_eff;
-            pushes.push((i, dw_eff));
-            pushes.push((j, dw_eff));
+            bufs.pushes.push((i, dw_eff));
+            bufs.pushes.push((j, dw_eff));
         }
-        pushes.sort_unstable_by_key(|&(node, _)| node);
-        let mut dstrength: Vec<(u32, f64)> = Vec::with_capacity(pushes.len());
-        for (node, ds) in pushes {
-            match dstrength.last_mut() {
+        bufs.pushes.sort_unstable_by_key(|&(node, _)| node);
+        bufs.dstrength.clear();
+        for &(node, ds) in &bufs.pushes {
+            match bufs.dstrength.last_mut() {
                 Some((last, acc)) if *last == node => *acc += ds,
-                _ => dstrength.push((node, ds)),
+                _ => bufs.dstrength.push((node, ds)),
             }
         }
         let mut node_terms = 0.0;
         let mut smax_candidate = 0.0f64;
         let mut delta_s_eff = 0.0;
-        for &(i, ds) in &dstrength {
+        for &(i, ds) in &bufs.dstrength {
             let s_old =
                 if (i as usize) < self.graph.num_nodes() { self.graph.strength(i) } else { 0.0 };
             node_terms += 2.0 * s_old * ds + ds * ds;
@@ -192,7 +241,6 @@ impl FingerState {
             }
         } else {
             // starting from an empty graph: compute Q′ from scratch terms
-            let _ = delta_s;
             let s_new = delta_s_eff;
             if s_new <= 0.0 {
                 (0.0, 0.0)
@@ -209,32 +257,32 @@ impl FingerState {
             _ if !want_smax => 0.0, // caller recomputes (apply's Exact path)
             SmaxPolicy::PaperFaithful => self.s_max.max(smax_candidate),
             SmaxPolicy::Exact => {
-                let mut adj_pushes: Vec<(u64, i64)> = Vec::with_capacity(dstrength.len() * 2);
-                for &(i, ds) in &dstrength {
+                bufs.adj_pushes.clear();
+                for &(i, ds) in &bufs.dstrength {
                     let s_old = if (i as usize) < self.graph.num_nodes() {
                         self.graph.strength(i)
                     } else {
                         0.0
                     };
                     if s_old > 0.0 {
-                        adj_pushes.push((s_old.to_bits(), -1));
+                        bufs.adj_pushes.push((s_old.to_bits(), -1));
                     }
                     let s_new_i = s_old + ds;
                     if s_new_i > 0.0 {
-                        adj_pushes.push((s_new_i.to_bits(), 1));
+                        bufs.adj_pushes.push((s_new_i.to_bits(), 1));
                     }
                 }
-                adj_pushes.sort_unstable_by_key(|&(k, _)| k);
-                let mut adj: Vec<(u64, i64)> = Vec::with_capacity(adj_pushes.len());
-                for (k, d) in adj_pushes {
-                    match adj.last_mut() {
+                bufs.adj_pushes.sort_unstable_by_key(|&(k, _)| k);
+                bufs.adj.clear();
+                for &(k, d) in &bufs.adj_pushes {
+                    match bufs.adj.last_mut() {
                         Some((last, acc)) if *last == k => *acc += d,
-                        _ => adj.push((k, d)),
+                        _ => bufs.adj.push((k, d)),
                     }
                 }
                 let mut best = 0.0f64;
                 // candidates introduced (or still positive) among touched keys
-                for &(bits, d) in &adj {
+                for &(bits, d) in &bufs.adj {
                     let eff = self.strengths.get(&bits).map(|&c| c as i64).unwrap_or(0) + d;
                     if eff > 0 {
                         best = best.max(f64::from_bits(bits));
@@ -243,9 +291,10 @@ impl FingerState {
                 // top of the untouched multiset
                 for (&bits, &cnt) in self.strengths.iter().rev() {
                     let eff = cnt as i64
-                        + adj
+                        + bufs
+                            .adj
                             .binary_search_by_key(&bits, |&(k, _)| k)
-                            .map(|idx| adj[idx].1)
+                            .map(|idx| bufs.adj[idx].1)
                             .unwrap_or(0);
                     if eff > 0 {
                         best = best.max(f64::from_bits(bits));
@@ -265,50 +314,90 @@ impl FingerState {
     }
 
     /// Commit ΔG: G ← G ⊕ ΔG, updating Q via Theorem 2 and s_max per policy.
-    /// O(Δn + Δm) (Exact policy adds O(log n) per touched node).
+    /// O(Δn + Δm) (Exact policy adds O(log n) per touched node). Allocates
+    /// transient buffers — the hot path uses [`FingerState::apply_with`].
     pub fn apply(&mut self, delta: &DeltaGraph) {
+        self.apply_bufs(delta, &mut PreviewBufs::default());
+    }
+
+    /// `apply` reusing `scratch`'s buffers: bit-identical state transition,
+    /// zero allocations in steady state.
+    pub fn apply_with(&mut self, delta: &DeltaGraph, scratch: &mut Scratch) {
+        self.apply_bufs(delta, &mut scratch.bufs);
+    }
+
+    fn apply_bufs(&mut self, delta: &DeltaGraph, bufs: &mut PreviewBufs) {
         // Exact policy recomputes s_max from the multiset below, so skip the
         // preview's O(Δ log n) s_max adjustment scan on that path.
-        let preview = self.preview_impl(delta, self.policy == SmaxPolicy::PaperFaithful);
-        self.apply_previewed(delta, preview);
+        let preview = self.preview_bufs(delta, self.policy == SmaxPolicy::PaperFaithful, bufs);
+        self.apply_previewed_bufs(delta, preview, bufs);
     }
 
     /// Commit ΔG reusing an already-computed `preview(delta)` result
     /// (Algorithm 2 previews ΔG for its score anyway — one preview saved).
     pub fn apply_previewed(&mut self, delta: &DeltaGraph, preview: PreviewedState) {
+        self.apply_previewed_bufs(delta, preview, &mut PreviewBufs::default());
+    }
+
+    /// `apply_previewed` reusing `scratch`'s buffers.
+    pub fn apply_previewed_with(
+        &mut self,
+        delta: &DeltaGraph,
+        preview: PreviewedState,
+        scratch: &mut Scratch,
+    ) {
+        self.apply_previewed_bufs(delta, preview, &mut scratch.bufs);
+    }
+
+    pub(crate) fn apply_previewed_bufs(
+        &mut self,
+        delta: &DeltaGraph,
+        preview: PreviewedState,
+        bufs: &mut PreviewBufs,
+    ) {
         // The preview coalesces duplicate (i,j) entries internally; mutate
         // the graph through the same coalesced view. Sequential re-clamping
         // of an over-deleting duplicate would disagree with the previewed Q.
         // The O(Δ) normal-form check suffices: coalescing a delta that is
         // merely unsorted (but duplicate-free) is semantically a no-op, so
-        // over-triggering on such deltas costs a copy, never correctness.
-        let coalesced;
-        let delta = if delta.is_sorted_unique() {
-            delta
+        // over-triggering on such deltas costs a sort, never correctness.
+        let new_nodes = delta.new_nodes();
+        let edges: &[(u32, u32, f64)] = if delta.is_sorted_unique() {
+            delta.edge_deltas()
         } else {
-            coalesced = delta.coalesced();
-            &coalesced
+            bufs.coalesce.coalesce_into(delta.edge_deltas(), &mut bufs.coalesced);
+            &bufs.coalesced
         };
-        // capture strengths of touched nodes before mutation (Exact policy)
-        let mut touched: Vec<u32> = Vec::new();
+        // capture strengths of touched nodes before mutation (Exact policy);
+        // sort + dedup in the reusable buffer (multiset removal/insertion is
+        // per-node commutative, so the order does not matter)
+        bufs.touched.clear();
         let mut multiset_miss = false;
         if self.policy == SmaxPolicy::Exact {
-            let mut seen = std::collections::HashSet::new();
-            for &(i, j, _) in delta.edge_deltas() {
-                if seen.insert(i) {
-                    touched.push(i);
-                }
-                if seen.insert(j) {
-                    touched.push(j);
-                }
+            for &(i, j, _) in edges {
+                bufs.touched.push(i);
+                bufs.touched.push(j);
             }
-            for &i in &touched {
+            bufs.touched.sort_unstable();
+            bufs.touched.dedup();
+            for &i in &bufs.touched {
                 if (i as usize) < self.graph.num_nodes() {
                     multiset_miss |= !self.remove_strength(self.graph.strength(i));
                 }
             }
         }
-        delta.apply_to(&mut self.graph);
+        // G ← G ⊕ ΔG through the same coalesced view (the logic of
+        // `DeltaGraph::apply_to`, inlined over the scratch slice).
+        let need = edges
+            .iter()
+            .map(|&(i, j, _)| i.max(j) as usize + 1)
+            .max()
+            .unwrap_or(0)
+            .max(self.graph.num_nodes() + new_nodes);
+        self.graph.ensure_nodes(need);
+        for &(i, j, dw) in edges {
+            self.graph.add_weight(i, j, dw);
+        }
         self.q = preview.q;
         self.s_total = preview.s_total;
         match self.policy {
@@ -316,7 +405,7 @@ impl FingerState {
                 self.s_max = preview.s_max;
             }
             SmaxPolicy::Exact => {
-                for &i in &touched {
+                for &i in &bufs.touched {
                     self.insert_strength(self.graph.strength(i));
                 }
                 if multiset_miss {
@@ -726,6 +815,50 @@ mod tests {
                 "{policy:?}: {} vs {q_scratch}",
                 state.q()
             );
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_to_allocating_path() {
+        // One Scratch shared across 60 steps and both policies: preview and
+        // apply must produce bit-for-bit the same (q, s_total, s_max, H̃) as
+        // the per-call-allocating wrappers, including on uncoalesced deltas.
+        for policy in [SmaxPolicy::Exact, SmaxPolicy::PaperFaithful] {
+            let mut rng = Pcg64::new(0x5C4A7C4);
+            let g = generators::erdos_renyi(40, 0.12, &mut rng);
+            let mut fresh = FingerState::with_policy(g.clone(), policy);
+            let mut reused = FingerState::with_policy(g, policy);
+            let mut scratch = Scratch::default();
+            for step in 0..60 {
+                let mut d = DeltaGraph::new();
+                for _ in 0..6 {
+                    let i = rng.below(40) as u32;
+                    let mut j = rng.below(40) as u32;
+                    if i == j {
+                        j = (j + 1) % 40;
+                    }
+                    d.add(i, j, rng.uniform(-1.0, 1.0));
+                }
+                // every other step stays raw (duplicates possible) to force
+                // the coalescing fallback through the scratch buffers too
+                let d = if step % 2 == 0 { d.coalesced() } else { d };
+                let p_fresh = fresh.preview(&d);
+                let p_reused = reused.preview_with(&d, &mut scratch);
+                assert_eq!(p_fresh.q.to_bits(), p_reused.q.to_bits(), "{policy:?} step {step}");
+                assert_eq!(p_fresh.s_total.to_bits(), p_reused.s_total.to_bits());
+                assert_eq!(p_fresh.s_max.to_bits(), p_reused.s_max.to_bits());
+                if step % 3 == 0 {
+                    fresh.apply_previewed(&d, p_fresh);
+                    reused.apply_previewed_with(&d, p_reused, &mut scratch);
+                } else {
+                    fresh.apply(&d);
+                    reused.apply_with(&d, &mut scratch);
+                }
+                assert_eq!(fresh.q().to_bits(), reused.q().to_bits(), "{policy:?} step {step}");
+                assert_eq!(fresh.s_max().to_bits(), reused.s_max().to_bits());
+                assert_eq!(fresh.htilde().to_bits(), reused.htilde().to_bits());
+                assert_eq!(fresh.graph().num_edges(), reused.graph().num_edges());
+            }
         }
     }
 

@@ -5,7 +5,7 @@
 pub mod baselines;
 pub mod incremental;
 
-pub use incremental::{FingerState, SmaxPolicy};
+pub use incremental::{FingerState, Scratch, SmaxPolicy};
 
 use crate::graph::{Csr, Graph};
 use crate::linalg::{power_iteration, PowerOpts, SymMatrix};

@@ -1,6 +1,6 @@
 //! Compressed sparse row view of a graph's weight matrix W (symmetric), used
-//! by the spectral kernels (power iteration, Lanczos) where adjacency-hash
-//! traversal would thrash the cache.
+//! by the spectral kernels (power iteration, Lanczos): one flat contiguous
+//! array instead of per-node rows, so repeated mat-vecs stream the cache.
 
 use super::Graph;
 
@@ -16,8 +16,8 @@ pub struct Csr {
 }
 
 impl Csr {
-    /// Build from a graph. O(n + m log d) — neighbor lists sorted per row for
-    /// deterministic, cache-friendly traversal.
+    /// Build from a graph. O(n + m): the graph's compact adjacency rows are
+    /// already sorted by neighbor id, so rows copy over verbatim.
     pub fn from_graph(g: &Graph) -> Self {
         let n = g.num_nodes();
         let mut row_ptr = Vec::with_capacity(n + 1);
@@ -25,9 +25,7 @@ impl Csr {
         let mut values = Vec::with_capacity(2 * g.num_edges());
         row_ptr.push(0);
         for i in 0..n {
-            let mut nbrs: Vec<(u32, f64)> = g.neighbors(i as u32).collect();
-            nbrs.sort_by_key(|&(j, _)| j);
-            for (j, w) in nbrs {
+            for &(j, w) in g.neighbor_entries(i as u32) {
                 col_idx.push(j);
                 values.push(w);
             }

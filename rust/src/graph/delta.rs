@@ -6,6 +6,66 @@
 
 use super::Graph;
 
+/// Reusable workspace for the stable coalesce: entries are keyed by the
+/// packed (i,j) pair plus their stream position, so duplicates merge in
+/// arrival order — bit-for-bit the accumulation order `coalesced()` has
+/// always used — while the buffers themselves are recycled across windows
+/// (the batcher/scorer hot path allocates nothing in steady state).
+#[derive(Debug, Clone, Default)]
+pub struct CoalesceBuf {
+    /// (packed (i,j) key, stream position, Δw)
+    keyed: Vec<(u64, u32, f64)>,
+}
+
+impl CoalesceBuf {
+    /// Load `entries` and sort by (key, stream position). The position
+    /// tiebreak makes the unstable sort order-deterministic, i.e. equivalent
+    /// to a stable sort by key.
+    fn load(&mut self, entries: &[(u32, u32, f64)]) {
+        self.keyed.clear();
+        self.keyed.extend(
+            entries
+                .iter()
+                .enumerate()
+                .map(|(pos, &(i, j, dw))| (((i as u64) << 32) | j as u64, pos as u32, dw)),
+        );
+        self.keyed.sort_unstable_by_key(|&(key, pos, _)| (key, pos));
+    }
+
+    /// Merge sorted runs into `out`: duplicate (i,j) deltas summed in stream
+    /// order, entries whose net delta is exactly 0.0 dropped — the normal
+    /// form `DeltaGraph::coalesced()` emits (ascending, duplicate-free).
+    fn merge_into(&self, out: &mut Vec<(u32, u32, f64)>) {
+        out.clear();
+        let mut idx = 0;
+        while idx < self.keyed.len() {
+            let (key, _, mut acc) = self.keyed[idx];
+            let mut next = idx + 1;
+            while next < self.keyed.len() && self.keyed[next].0 == key {
+                acc += self.keyed[next].2;
+                next += 1;
+            }
+            if acc != 0.0 {
+                out.push(((key >> 32) as u32, key as u32, acc));
+            }
+            idx = next;
+        }
+    }
+
+    /// Coalesce `entries` into `out` (clearing it first). Shared by
+    /// `DeltaGraph::coalesced`, the in-place batcher tick, and the
+    /// `FingerState` non-normal-form fallback, so every path produces the
+    /// identical normal form.
+    pub(crate) fn coalesce_into(
+        &mut self,
+        entries: &[(u32, u32, f64)],
+        out: &mut Vec<(u32, u32, f64)>,
+    ) {
+        self.load(entries);
+        self.merge_into(out);
+    }
+}
+
 /// A batch of incremental changes converting G into G' = G ⊕ ΔG.
 ///
 /// `edges[(i,j)] = Δw_ij` may be negative (weight decrease / deletion). Node
@@ -68,6 +128,22 @@ impl DeltaGraph {
         }
     }
 
+    /// `half()` into an existing delta, reusing its buffers (the scratch
+    /// mid-point delta of the allocation-free Algorithm-2 hot path). Halving
+    /// is exact in binary floating point, so this is bit-identical to
+    /// `half()`.
+    pub fn half_into(&self, out: &mut Self) {
+        out.edges.clear();
+        out.edges.extend(self.edges.iter().map(|&(i, j, dw)| (i, j, dw / 2.0)));
+        out.new_nodes = self.new_nodes;
+    }
+
+    /// Reset to the empty delta, keeping allocated capacity.
+    pub fn clear(&mut self) {
+        self.edges.clear();
+        self.new_nodes = 0;
+    }
+
     /// Scale every weight delta by `f`.
     pub fn scaled(&self, f: f64) -> Self {
         Self {
@@ -78,15 +154,19 @@ impl DeltaGraph {
 
     /// Coalesce duplicate (i,j) entries into a single summed delta (keeps
     /// apply/‌incremental costs proportional to distinct touched edges).
+    /// Duplicates sum in stream order; exact-zero nets are dropped.
     pub fn coalesced(&self) -> Self {
-        let mut map: crate::util::hash::DetHashMap<(u32, u32), f64> = Default::default();
-        for &(i, j, dw) in &self.edges {
-            *map.entry((i, j)).or_insert(0.0) += dw;
-        }
-        let mut edges: Vec<_> =
-            map.into_iter().filter(|&(_, dw)| dw != 0.0).map(|((i, j), dw)| (i, j, dw)).collect();
-        edges.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let mut edges = Vec::with_capacity(self.edges.len());
+        CoalesceBuf::default().coalesce_into(&self.edges, &mut edges);
         Self { edges, new_nodes: self.new_nodes }
+    }
+
+    /// `coalesced()` without giving up this delta's buffers: sorts and merges
+    /// through `buf` and writes the normal form back into `self`. The batcher
+    /// tick uses this so a steady-state window allocates nothing.
+    pub fn coalesce_in_place(&mut self, buf: &mut CoalesceBuf) {
+        buf.load(&self.edges);
+        buf.merge_into(&mut self.edges);
     }
 
     /// Entries strictly ascending by (i, j) — the normal form `coalesced()`
@@ -129,8 +209,10 @@ impl DeltaGraph {
         }
     }
 
-    /// Build the ΔG that converts `from` into `to` (both on a common node
-    /// set; `to` may be larger). Inverse of `apply_to` up to clamping.
+    /// Build the ΔG that converts `from` into `to` (on the common node set
+    /// 𝒱_c = 𝒱 ∪ 𝒱′; either side may be larger — a node id absent from one
+    /// graph simply has no incident edges there). Inverse of `apply_to` up to
+    /// clamping.
     pub fn diff(from: &Graph, to: &Graph) -> Self {
         let mut d = Self::new();
         if to.num_nodes() > from.num_nodes() {
@@ -147,14 +229,14 @@ impl DeltaGraph {
             }
         }
         for (i, j, w) in from.edges() {
-            if !to.has_edge(i, j)
-                || (i as usize) >= to.num_nodes()
+            // Bounds first: when `to` has fewer nodes, indexing its adjacency
+            // with a removed node id would panic — out-of-range means the
+            // edge is simply absent from `to`.
+            let absent = (i as usize) >= to.num_nodes()
                 || (j as usize) >= to.num_nodes()
-            {
-                let _ = w;
-                if to.weight(i, j) == 0.0 {
-                    d.add(i, j, -w);
-                }
+                || !to.has_edge(i, j);
+            if absent {
+                d.add(i, j, -w);
             }
         }
         d.coalesced()
@@ -215,6 +297,66 @@ mod tests {
             assert!((g.weight(i, j) - w).abs() < 1e-12, "({i},{j})");
         }
         assert_eq!(g.num_edges(), b.num_edges());
+    }
+
+    #[test]
+    fn diff_to_shrunken_graph_deletes_out_of_range_edges() {
+        // Regression: `to` smaller than `from` used to index `to`'s adjacency
+        // with removed node ids and panic. Removed nodes are modeled as "all
+        // incident edges deleted" (the paper's common-node-set convention).
+        let from = Graph::from_edges(5, &[(0, 1, 1.0), (2, 4, 2.0), (1, 3, 0.5)]);
+        let to = Graph::from_edges(2, &[(0, 1, 3.0)]);
+        let d = DeltaGraph::diff(&from, &to);
+        let mut g = from.clone();
+        d.apply_to(&mut g);
+        // node count never shrinks; all edges touching removed ids are gone
+        assert_eq!(g.num_nodes(), 5);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.weight(0, 1), 3.0);
+        assert!(!g.has_edge(2, 4));
+        assert!(!g.has_edge(1, 3));
+        g.check_invariants().unwrap();
+        // degenerate shrink: everything deleted
+        let d2 = DeltaGraph::diff(&from, &Graph::new(0));
+        let mut g2 = from.clone();
+        d2.apply_to(&mut g2);
+        assert_eq!(g2.num_edges(), 0);
+    }
+
+    #[test]
+    fn coalesce_in_place_matches_coalesced() {
+        let mut d = DeltaGraph::new();
+        d.grow_nodes(2)
+            .add(0, 1, 1.0)
+            .add(5, 2, -0.25)
+            .add(1, 0, 2.5)
+            .add(2, 3, 1.0)
+            .add(2, 3, -1.0)
+            .add(0, 1, 0.125);
+        let reference = d.coalesced();
+        let mut buf = CoalesceBuf::default();
+        d.coalesce_in_place(&mut buf);
+        assert_eq!(d.edge_deltas(), reference.edge_deltas());
+        assert_eq!(d.new_nodes(), reference.new_nodes());
+        assert!(d.is_sorted_unique());
+        // idempotent, and the buffers keep working across reuse
+        let mut again = d.clone();
+        again.coalesce_in_place(&mut buf);
+        assert_eq!(again.edge_deltas(), d.edge_deltas());
+    }
+
+    #[test]
+    fn half_into_and_clear_reuse_buffers() {
+        let mut d = DeltaGraph::new();
+        d.grow_nodes(3).add(0, 1, 4.0).add(1, 2, -2.0);
+        let mut out = DeltaGraph::new();
+        out.add(7, 8, 9.0); // stale content must be overwritten
+        d.half_into(&mut out);
+        assert_eq!(out.edge_deltas(), d.half().edge_deltas());
+        assert_eq!(out.new_nodes(), 3);
+        out.clear();
+        assert!(out.is_empty());
+        assert_eq!(out.new_nodes(), 0);
     }
 
     #[test]

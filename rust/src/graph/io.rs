@@ -45,12 +45,11 @@ where
     tok.parse::<T>().map_err(|e| anyhow::anyhow!("line {}: bad {what}: {e}", lineno + 1))
 }
 
-/// Write a graph as an edge list.
+/// Write a graph as an edge list (`edges()` already iterates ascending by
+/// (i, j), so the output is deterministic without a sort pass).
 pub fn write_edge_list<W: Write>(g: &Graph, mut w: W) -> Result<()> {
     writeln!(w, "# n={} m={}", g.num_nodes(), g.num_edges())?;
-    let mut edges: Vec<_> = g.edges().collect();
-    edges.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
-    for (i, j, wt) in edges {
+    for (i, j, wt) in g.edges() {
         writeln!(w, "{i} {j} {wt}")?;
     }
     Ok(())

@@ -9,21 +9,26 @@ pub mod ops;
 pub mod sequence;
 
 pub use csr::Csr;
-pub use delta::DeltaGraph;
+pub use delta::{CoalesceBuf, DeltaGraph};
 pub use sequence::GraphSequence;
 
-use crate::util::hash::DetHashMap;
-
 /// Undirected weighted simple graph with nonnegative edge weights.
+///
+/// Adjacency is stored compactly as one sorted `Vec<(neighbor, weight)>` per
+/// node (ascending neighbor id): `weight`/`has_edge` are a binary search over
+/// a contiguous row instead of a hash probe, mutation is an insertion-point
+/// write, and traversal (`neighbors`, `edges`, CSR construction) walks the
+/// rows in cache order — the scoring hot path touches no hash table.
 ///
 /// Invariants maintained by every mutator:
 /// * symmetry: `weight(i,j) == weight(j,i)`;
 /// * no self-loops, no zero-weight stored edges;
+/// * each adjacency row strictly ascending by neighbor id;
 /// * `strength(i) == Σ_j weight(i,j)` cached;
 /// * `total_weight() == Σ_i strength(i) == 2·Σ_{(i,j)∈E} w_ij` cached.
 #[derive(Debug, Clone, Default)]
 pub struct Graph {
-    adj: Vec<DetHashMap<u32, f64>>,
+    adj: Vec<Vec<(u32, f64)>>,
     strengths: Vec<f64>,
     m: usize,
     total_weight: f64,
@@ -33,7 +38,7 @@ impl Graph {
     /// Empty graph on `n` nodes.
     pub fn new(n: usize) -> Self {
         Self {
-            adj: vec![DetHashMap::default(); n],
+            adj: vec![Vec::new(); n],
             strengths: vec![0.0; n],
             m: 0,
             total_weight: 0.0,
@@ -94,16 +99,20 @@ impl Graph {
         self.strengths.iter().cloned().fold(0.0, f64::max)
     }
 
-    /// Edge weight, or 0.0 if absent.
+    /// Edge weight, or 0.0 if absent. Binary search over the sorted row.
     #[inline]
     pub fn weight(&self, i: u32, j: u32) -> f64 {
-        self.adj[i as usize].get(&j).copied().unwrap_or(0.0)
+        let row = &self.adj[i as usize];
+        match row.binary_search_by_key(&j, |&(k, _)| k) {
+            Ok(idx) => row[idx].1,
+            Err(_) => 0.0,
+        }
     }
 
     /// Whether edge (i,j) exists.
     #[inline]
     pub fn has_edge(&self, i: u32, j: u32) -> bool {
-        self.adj[i as usize].contains_key(&j)
+        self.adj[i as usize].binary_search_by_key(&j, |&(k, _)| k).is_ok()
     }
 
     /// Unweighted degree of node i.
@@ -115,8 +124,28 @@ impl Graph {
     /// Grow the node set to at least `n` nodes.
     pub fn ensure_nodes(&mut self, n: usize) {
         if n > self.adj.len() {
-            self.adj.resize_with(n, DetHashMap::default);
+            self.adj.resize_with(n, Vec::new);
             self.strengths.resize(n, 0.0);
+        }
+    }
+
+    /// Insert or overwrite the directed entry i→j, keeping the row sorted
+    /// (binary-search insertion point).
+    #[inline]
+    fn row_set(&mut self, i: u32, j: u32, w: f64) {
+        let row = &mut self.adj[i as usize];
+        match row.binary_search_by_key(&j, |&(k, _)| k) {
+            Ok(idx) => row[idx].1 = w,
+            Err(idx) => row.insert(idx, (j, w)),
+        }
+    }
+
+    /// Remove the directed entry i→j if present.
+    #[inline]
+    fn row_remove(&mut self, i: u32, j: u32) {
+        let row = &mut self.adj[i as usize];
+        if let Ok(idx) = row.binary_search_by_key(&j, |&(k, _)| k) {
+            row.remove(idx);
         }
     }
 
@@ -128,8 +157,8 @@ impl Graph {
         let old = self.weight(i, j);
         if w <= 0.0 {
             if old > 0.0 {
-                self.adj[i as usize].remove(&j);
-                self.adj[j as usize].remove(&i);
+                self.row_remove(i, j);
+                self.row_remove(j, i);
                 self.m -= 1;
                 self.strengths[i as usize] -= old;
                 self.strengths[j as usize] -= old;
@@ -140,8 +169,8 @@ impl Graph {
         if old == 0.0 {
             self.m += 1;
         }
-        self.adj[i as usize].insert(j, w);
-        self.adj[j as usize].insert(i, w);
+        self.row_set(i, j, w);
+        self.row_set(j, i, w);
         let dw = w - old;
         self.strengths[i as usize] += dw;
         self.strengths[j as usize] += dw;
@@ -164,15 +193,22 @@ impl Graph {
         old
     }
 
-    /// Neighbors (and weights) of node i.
+    /// Neighbors (and weights) of node i, ascending by neighbor id.
     pub fn neighbors(&self, i: u32) -> impl Iterator<Item = (u32, f64)> + '_ {
-        self.adj[i as usize].iter().map(|(&j, &w)| (j, w))
+        self.adj[i as usize].iter().copied()
     }
 
-    /// Iterate each undirected edge once as (i, j, w) with i < j.
+    /// Neighbors of node i as the underlying sorted slice (ascending neighbor
+    /// id) — the zero-cost view CSR construction and other bulk readers use.
+    #[inline]
+    pub fn neighbor_entries(&self, i: u32) -> &[(u32, f64)] {
+        &self.adj[i as usize]
+    }
+
+    /// Iterate each undirected edge once as (i, j, w), ascending by (i, j).
     pub fn edges(&self) -> impl Iterator<Item = (u32, u32, f64)> + '_ {
         self.adj.iter().enumerate().flat_map(|(i, nbrs)| {
-            nbrs.iter().filter_map(move |(&j, &w)| {
+            nbrs.iter().filter_map(move |&(j, w)| {
                 if (i as u32) < j {
                     Some((i as u32, j, w))
                 } else {
@@ -252,7 +288,10 @@ impl Graph {
         let mut total = 0.0;
         for i in 0..n {
             let mut s = 0.0;
-            for (&j, &w) in &self.adj[i] {
+            if !self.adj[i].windows(2).all(|w| w[0].0 < w[1].0) {
+                return Err(format!("adjacency row {i} not strictly sorted"));
+            }
+            for &(j, w) in &self.adj[i] {
                 if j as usize >= n {
                     return Err(format!("neighbor {j} out of range"));
                 }
@@ -404,6 +443,32 @@ mod tests {
         assert_eq!(w[0 * 3 + 2], 1.5);
         assert_eq!(w[2 * 3 + 0], 1.5);
         assert_eq!(w[0 * 3 + 1], 0.0);
+    }
+
+    #[test]
+    fn neighbor_entries_sorted_ascending() {
+        // insertion order deliberately scrambled; rows must stay sorted
+        let mut g = Graph::new(6);
+        g.set_weight(3, 5, 1.0);
+        g.set_weight(3, 0, 2.0);
+        g.set_weight(3, 4, 3.0);
+        g.set_weight(3, 1, 4.0);
+        assert_eq!(g.neighbor_entries(3), &[(0, 2.0), (1, 4.0), (4, 3.0), (5, 1.0)]);
+        let nbrs: Vec<_> = g.neighbors(3).collect();
+        assert_eq!(nbrs, vec![(0, 2.0), (1, 4.0), (4, 3.0), (5, 1.0)]);
+        g.remove_edge(3, 4);
+        assert_eq!(g.neighbor_entries(3), &[(0, 2.0), (1, 4.0), (5, 1.0)]);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn edges_emitted_in_sorted_order() {
+        let mut g = Graph::new(5);
+        g.set_weight(2, 4, 1.0);
+        g.set_weight(0, 3, 2.0);
+        g.set_weight(0, 1, 3.0);
+        let es: Vec<_> = g.edges().collect();
+        assert_eq!(es, vec![(0, 1, 3.0), (0, 3, 2.0), (2, 4, 1.0)]);
     }
 
     #[test]

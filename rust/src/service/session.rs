@@ -48,19 +48,21 @@ impl SessionState {
         &self.id
     }
 
-    /// Feed one event; scores a window when `ev` closes one.
+    /// Feed one event; scores a window when `ev` closes one. Allocation-free
+    /// in steady state: the batcher lends the coalesced window out of its
+    /// reusable buffer and the scorer reuses its own scratch workspace.
     pub fn on_event(&mut self, ev: StreamEvent) {
         self.events += 1;
-        if let Some((delta, n_events)) = self.batcher.push(ev) {
-            let record = self.scorer.score(&delta, n_events);
+        if let Some((delta, n_events)) = self.batcher.push_ref(ev) {
+            let record = self.scorer.score(delta, n_events);
             self.records.push(record);
         }
     }
 
     /// Score any trailing partial window (stream ended without a tick).
     pub fn flush(&mut self) {
-        if let Some((delta, n_events)) = self.batcher.flush() {
-            let record = self.scorer.score(&delta, n_events);
+        if let Some((delta, n_events)) = self.batcher.flush_ref() {
+            let record = self.scorer.score(delta, n_events);
             self.records.push(record);
         }
     }

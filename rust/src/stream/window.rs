@@ -13,8 +13,8 @@
 //! [`resyncs`]: crate::entropy::FingerState::resync
 
 use super::event::StreamEvent;
-use crate::entropy::FingerState;
-use crate::graph::DeltaGraph;
+use crate::entropy::{FingerState, Scratch};
+use crate::graph::{CoalesceBuf, DeltaGraph};
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -37,11 +37,29 @@ pub struct ScoreRecord {
 }
 
 /// Folds events into window deltas: edge/node events accumulate into the
-/// current `DeltaGraph`; a `Tick` closes the window and yields it coalesced.
+/// current `DeltaGraph`; a `Tick` closes the window and yields it coalesced
+/// (always in `is_sorted_unique()` normal form, so the `FingerState` fast
+/// path never re-coalesces).
+///
+/// The in-place variants ([`push_ref`]/[`flush_ref`]) coalesce into the
+/// batcher's own reusable buffers and lend the window out by reference —
+/// a steady-state window allocates nothing. The owning [`push`]/[`flush`]
+/// wrappers clone the emitted window for callers that must send it across a
+/// thread boundary (the pipeline's channels).
+///
+/// [`push_ref`]: WindowBatcher::push_ref
+/// [`flush_ref`]: WindowBatcher::flush_ref
+/// [`push`]: WindowBatcher::push
+/// [`flush`]: WindowBatcher::flush
 #[derive(Debug, Default)]
 pub struct WindowBatcher {
     current: DeltaGraph,
+    coalesce: CoalesceBuf,
     events_in_window: usize,
+    /// `current` holds a window already lent out by `push_ref`/`flush_ref`;
+    /// it is reset lazily on the next event so the borrow can outlive the
+    /// call that produced it.
+    emitted: bool,
 }
 
 impl WindowBatcher {
@@ -49,10 +67,19 @@ impl WindowBatcher {
         Self::default()
     }
 
-    /// Feed one event; returns the closed window `(ΔG, events)` on `Tick`
-    /// (the tick itself counts as one event, matching the pipeline's
-    /// historical accounting).
-    pub fn push(&mut self, ev: StreamEvent) -> Option<(DeltaGraph, usize)> {
+    fn reset_if_emitted(&mut self) {
+        if self.emitted {
+            self.current.clear();
+            self.emitted = false;
+        }
+    }
+
+    /// Feed one event; on `Tick`, closes the window and returns it coalesced
+    /// **by reference** into the batcher's reusable buffer (valid until the
+    /// next `push_ref`/`flush_ref` call). The tick itself counts as one
+    /// event, matching the pipeline's historical accounting.
+    pub fn push_ref(&mut self, ev: StreamEvent) -> Option<(&DeltaGraph, usize)> {
+        self.reset_if_emitted();
         match ev {
             StreamEvent::EdgeDelta { i, j, dw } => {
                 if i != j {
@@ -67,23 +94,38 @@ impl WindowBatcher {
                 None
             }
             StreamEvent::Tick => {
-                let d = std::mem::take(&mut self.current).coalesced();
+                self.current.coalesce_in_place(&mut self.coalesce);
                 let n = self.events_in_window + 1;
                 self.events_in_window = 0;
-                Some((d, n))
+                self.emitted = true;
+                Some((&self.current, n))
             }
         }
     }
 
-    /// Close a trailing partial window (stream ended without a final tick).
-    pub fn flush(&mut self) -> Option<(DeltaGraph, usize)> {
+    /// Close a trailing partial window by reference (stream ended without a
+    /// final tick). Same lifetime contract as [`WindowBatcher::push_ref`].
+    pub fn flush_ref(&mut self) -> Option<(&DeltaGraph, usize)> {
+        self.reset_if_emitted();
         if self.events_in_window == 0 {
             return None;
         }
-        let d = std::mem::take(&mut self.current).coalesced();
+        self.current.coalesce_in_place(&mut self.coalesce);
         let n = self.events_in_window;
         self.events_in_window = 0;
-        Some((d, n))
+        self.emitted = true;
+        Some((&self.current, n))
+    }
+
+    /// Owning variant of [`WindowBatcher::push_ref`] (clones the emitted
+    /// window so it can cross a thread boundary).
+    pub fn push(&mut self, ev: StreamEvent) -> Option<(DeltaGraph, usize)> {
+        self.push_ref(ev).map(|(d, n)| (d.clone(), n))
+    }
+
+    /// Owning variant of [`WindowBatcher::flush_ref`].
+    pub fn flush(&mut self) -> Option<(DeltaGraph, usize)> {
+        self.flush_ref().map(|(d, n)| (d.clone(), n))
     }
 
     /// Events accumulated in the currently-open window.
@@ -95,35 +137,78 @@ impl WindowBatcher {
 /// Online anomaly rule: a score is anomalous when it exceeds μ + kσ of the
 /// trailing window of *previous* scores (the current score is added after
 /// the decision, and no decision is made until 4 scores have been seen).
+///
+/// μ and σ are maintained as rolling Σx / Σx² so each decision is O(1)
+/// instead of copying the trailing deque and recomputing two passes per
+/// window. Decisions match the two-pass recompute rule except for scores
+/// landing within float-drift distance of the μ + kσ threshold itself (the
+/// rolling one-pass variance differs from the two-pass form by ulps); the
+/// sums are re-derived from the retained deque every `REFRESH_EVERY`
+/// observations, which bounds the drift a rolling subtract can accumulate
+/// on long streams.
 #[derive(Debug, Clone)]
 pub struct AnomalyDetector {
     sigma: f64,
     window: usize,
     trailing: VecDeque<f64>,
+    /// Rolling Σx over `trailing`.
+    sum: f64,
+    /// Rolling Σx² over `trailing`.
+    sum_sq: f64,
+    observed: u64,
 }
 
 impl AnomalyDetector {
+    /// Rolling sums are refreshed from the deque after this many `observe`
+    /// calls (drift bound; the refresh itself is O(window) and alloc-free).
+    const REFRESH_EVERY: u64 = 1024;
+
     /// `window` is clamped to ≥ 4: a decision needs 4 trailing samples, so a
     /// smaller window would silently disable detection forever.
     pub fn new(sigma: f64, window: usize) -> Self {
-        Self { sigma, window: window.max(4), trailing: VecDeque::new() }
+        Self {
+            sigma,
+            window: window.max(4),
+            trailing: VecDeque::new(),
+            sum: 0.0,
+            sum_sq: 0.0,
+            observed: 0,
+        }
     }
 
-    /// Judge `score` against the trailing statistics, then fold it in.
+    /// Judge `score` against the trailing statistics, then fold it in. O(1).
     pub fn observe(&mut self, score: f64) -> bool {
         let anomalous = if self.trailing.len() >= 4 {
-            let xs: Vec<f64> = self.trailing.iter().copied().collect();
-            let mu = crate::util::stats::mean(&xs);
-            let sd = crate::util::stats::std_dev(&xs);
-            score > mu + self.sigma * sd.max(1e-12)
+            let n = self.trailing.len() as f64;
+            let mu = self.sum / n;
+            // population variance via E[x²] − μ²; clamped at 0 because the
+            // one-pass form can go fractionally negative on near-constant
+            // windows where the two-pass recompute would give ~0
+            let var = (self.sum_sq / n - mu * mu).max(0.0);
+            score > mu + self.sigma * var.sqrt().max(1e-12)
         } else {
             false
         };
         self.trailing.push_back(score);
+        self.sum += score;
+        self.sum_sq += score * score;
         if self.trailing.len() > self.window {
-            self.trailing.pop_front();
+            if let Some(old) = self.trailing.pop_front() {
+                self.sum -= old;
+                self.sum_sq -= old * old;
+            }
+        }
+        self.observed += 1;
+        if self.observed % Self::REFRESH_EVERY == 0 {
+            self.refresh_sums();
         }
         anomalous
+    }
+
+    /// Recompute the rolling sums from the retained samples.
+    fn refresh_sums(&mut self) {
+        self.sum = self.trailing.iter().sum();
+        self.sum_sq = self.trailing.iter().map(|x| x * x).sum();
     }
 }
 
@@ -161,11 +246,14 @@ impl ResyncPolicy {
 
 /// Scores window deltas against an owned incremental `FingerState`:
 /// Algorithm 2 per window, online anomaly flagging, per-window latency, and
-/// scheduled drift correction.
+/// scheduled drift correction. Owns a reusable [`Scratch`] workspace, so a
+/// steady-state window is scored without allocating (scores stay bit-for-bit
+/// identical to the allocating `jsdist_incremental`).
 #[derive(Debug)]
 pub struct WindowScorer {
     state: FingerState,
     detector: AnomalyDetector,
+    scratch: Scratch,
     resync: ResyncPolicy,
     interval: u64,
     since_resync: u64,
@@ -180,6 +268,7 @@ impl WindowScorer {
         Self {
             state,
             detector,
+            scratch: Scratch::default(),
             resync,
             interval,
             since_resync: 0,
@@ -192,7 +281,8 @@ impl WindowScorer {
     /// Score one window delta and advance the state (Algorithm 2 commits ΔG).
     pub fn score(&mut self, delta: &DeltaGraph, n_events: usize) -> ScoreRecord {
         let t0 = Instant::now();
-        let js = crate::distance::jsdist_incremental(&mut self.state, delta);
+        let js =
+            crate::distance::jsdist_incremental_with(&mut self.state, delta, &mut self.scratch);
         let latency = t0.elapsed().as_secs_f64();
         let anomalous = self.detector.observe(js);
         let record = ScoreRecord {
@@ -274,6 +364,87 @@ mod tests {
         b.push(Ev::GrowNodes { count: 2 });
         let (d, n) = b.flush().unwrap();
         assert_eq!((d.new_nodes(), n), (2, 1));
+    }
+
+    #[test]
+    fn push_ref_reuses_buffers_and_matches_owned_push() {
+        // the in-place window must equal the owned (cloned) one, window after
+        // window, including duplicate coalescing and node growth
+        let mut a = WindowBatcher::new();
+        let mut b = WindowBatcher::new();
+        let mut rng = Pcg64::new(77);
+        for w in 0..20 {
+            let mut evs = Vec::new();
+            for _ in 0..6 {
+                let i = rng.below(10) as u32;
+                let j = rng.below(10) as u32;
+                evs.push(Ev::EdgeDelta { i, j, dw: rng.uniform(-1.0, 1.0) });
+            }
+            if w % 3 == 0 {
+                evs.push(Ev::GrowNodes { count: 1 });
+            }
+            evs.push(Ev::Tick);
+            for ev in evs {
+                let ra = a.push_ref(ev.clone()).map(|(d, n)| (d.clone(), n));
+                let rb = b.push(ev);
+                match (ra, rb) {
+                    (None, None) => {}
+                    (Some((da, na)), Some((db, nb))) => {
+                        assert_eq!(na, nb, "window {w}");
+                        assert_eq!(da.edge_deltas(), db.edge_deltas(), "window {w}");
+                        assert_eq!(da.new_nodes(), db.new_nodes(), "window {w}");
+                        assert!(da.is_sorted_unique(), "window {w} not normal form");
+                    }
+                    other => panic!("window {w}: mismatch {other:?}"),
+                }
+            }
+        }
+        // trailing partial window via flush_ref
+        a.push_ref(Ev::EdgeDelta { i: 0, j: 1, dw: 1.0 });
+        b.push(Ev::EdgeDelta { i: 0, j: 1, dw: 1.0 });
+        let (da, na) = a.flush_ref().map(|(d, n)| (d.clone(), n)).unwrap();
+        let (db, nb) = b.flush().unwrap();
+        assert_eq!((da.edge_deltas(), na), (db.edge_deltas(), nb));
+    }
+
+    #[test]
+    fn detector_rolling_decisions_match_recompute_rule() {
+        // The O(1) rolling μ/σ must decide like the two-pass recompute over
+        // the same trailing window (the pre-optimization rule). The two
+        // formulations agree only up to float drift of the threshold itself
+        // (rolling subtraction + one-pass variance vs two-pass), so scores
+        // landing within a tiny band around μ + kσ are legitimately
+        // undetermined and excluded from the comparison; everything else —
+        // the decisions that matter — must match.
+        let mut rolling = AnomalyDetector::new(2.5, 16);
+        let mut trailing: VecDeque<f64> = VecDeque::new();
+        let mut rng = Pcg64::new(0x0B5E);
+        let mut decided = 0usize;
+        for step in 0..5000 {
+            // mix of smooth scores and occasional spikes
+            let score = if rng.below(40) == 0 {
+                rng.uniform(5.0, 50.0)
+            } else {
+                rng.uniform(0.0, 1.0)
+            };
+            let got = rolling.observe(score);
+            if trailing.len() >= 4 {
+                let xs: Vec<f64> = trailing.iter().copied().collect();
+                let mu = crate::util::stats::mean(&xs);
+                let sd = crate::util::stats::std_dev(&xs);
+                let threshold = mu + 2.5 * sd.max(1e-12);
+                let margin = 1e-9 * (1.0 + threshold.abs());
+                if (score - threshold).abs() > margin {
+                    assert_eq!(got, score > threshold, "step {step} score {score}");
+                    decided += 1;
+                }
+            }
+            trailing.push_back(score);
+            if trailing.len() > 16 {
+                trailing.pop_front();
+            }
+        }
+        assert!(decided > 4900, "comparison skipped too often: {decided}");
     }
 
     #[test]

@@ -149,19 +149,152 @@ fn prop_delta_diff_apply_roundtrip() {
     check(
         |rng: &mut Pcg64, size: usize| (arb_graph(rng, size), arb_graph(rng, size + 1)),
         |(a, b)| {
-            let d = DeltaGraph::diff(a, b);
-            let rebuilt = finger::graph::ops::compose(a, &d);
-            if rebuilt.num_edges() != b.num_edges() {
-                return Err(format!(
-                    "edge count {} vs {}",
-                    rebuilt.num_edges(),
-                    b.num_edges()
-                ));
-            }
-            for (i, j, w) in b.edges() {
-                if (rebuilt.weight(i, j) - w).abs() > 1e-9 {
-                    return Err(format!("weight mismatch at ({i},{j})"));
+            // growing direction (|b| ≥ |a|) and shrinking direction (the
+            // diff target has fewer nodes — regression: this used to index
+            // the smaller graph's adjacency out of bounds and panic)
+            for (from, to) in [(a, b), (b, a)] {
+                let d = DeltaGraph::diff(from, to);
+                let rebuilt = finger::graph::ops::compose(from, &d);
+                if rebuilt.num_edges() != to.num_edges() {
+                    return Err(format!(
+                        "edge count {} vs {}",
+                        rebuilt.num_edges(),
+                        to.num_edges()
+                    ));
                 }
+                for (i, j, w) in to.edges() {
+                    if (rebuilt.weight(i, j) - w).abs() > 1e-9 {
+                        return Err(format!("weight mismatch at ({i},{j})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Hot-path equivalence: scratch-reusing scoring (in-place batcher +
+// `Scratch`-threaded Algorithm 2) must be bit-for-bit identical to the
+// per-call-allocating path on arbitrary raw (uncoalesced, duplicate-bearing)
+// deltas, under both s_max policies, across interleaved sessions that share
+// one Scratch but nothing else.
+// ---------------------------------------------------------------------------
+
+/// Strategy helper: raw window deltas with guaranteed duplicate entries and
+/// occasional node growth (NOT coalesced — exercises the fallback path).
+fn raw_windows(rng: &mut Pcg64, g: &finger::graph::Graph, windows: usize) -> Vec<DeltaGraph> {
+    let n = g.num_nodes() as u32;
+    let mut out = Vec::new();
+    for _ in 0..windows {
+        let mut d = DeltaGraph::new();
+        for _ in 0..rng.range(1, 8) {
+            let i = rng.below(n as usize) as u32;
+            let mut j = rng.below(n as usize) as u32;
+            if i == j {
+                j = (j + 1) % n;
+            }
+            match rng.below(4) {
+                0 => {
+                    d.add(i, j, rng.uniform(0.1, 2.0));
+                }
+                1 => {
+                    // over-delete then re-add: a duplicate pair whose clamp
+                    // semantics only work through the coalesced view
+                    d.add(i, j, -g.weight(i.min(j), i.max(j)) - rng.uniform(0.0, 1.0));
+                    d.add(j, i, rng.uniform(0.1, 0.8));
+                }
+                2 => {
+                    d.add(i, j, rng.uniform(-1.0, 1.0));
+                }
+                _ => {
+                    d.grow_nodes(1);
+                }
+            }
+        }
+        out.push(d);
+    }
+    out
+}
+
+#[test]
+fn prop_scratch_scoring_bit_identical_across_interleaved_sessions() {
+    use finger::distance::jsdist_incremental;
+    use finger::entropy::{Scratch, SmaxPolicy};
+    use finger::prop_assert;
+    use finger::stream::event::events_from_deltas;
+    use finger::stream::{AnomalyDetector, ResyncPolicy, WindowBatcher, WindowScorer};
+
+    run(
+        &Config { cases: 40, ..Default::default() },
+        |rng: &mut Pcg64, size: usize| {
+            let g1 = arb_graph(rng, size);
+            let g2 = arb_graph(rng, size);
+            let w1 = raw_windows(rng, &g1, 5);
+            let w2 = raw_windows(rng, &g2, 5);
+            (g1, g2, w1, w2)
+        },
+        |(g1, g2, w1, w2)| {
+            for policy in [SmaxPolicy::Exact, SmaxPolicy::PaperFaithful] {
+                // scratch path: one shared Scratch, two interleaved states
+                let mut shared = Scratch::default();
+                let mut scr1 = FingerState::with_policy(g1.clone(), policy);
+                let mut scr2 = FingerState::with_policy(g2.clone(), policy);
+                // reference path: per-call-allocating preview/apply
+                let mut ref1 = FingerState::with_policy(g1.clone(), policy);
+                let mut ref2 = FingerState::with_policy(g2.clone(), policy);
+                for k in 0..w1.len().max(w2.len()) {
+                    for (d, scr, rf) in
+                        [(w1.get(k), &mut scr1, &mut ref1), (w2.get(k), &mut scr2, &mut ref2)]
+                    {
+                        let Some(d) = d else { continue };
+                        let p_ref = rf.preview(d);
+                        let p_scr = scr.preview_with(d, &mut shared);
+                        prop_assert!(
+                            p_ref.q.to_bits() == p_scr.q.to_bits()
+                                && p_ref.s_total.to_bits() == p_scr.s_total.to_bits()
+                                && p_ref.s_max.to_bits() == p_scr.s_max.to_bits(),
+                            "{policy:?} window {k}: preview diverged"
+                        );
+                        rf.apply_previewed(d, p_ref);
+                        scr.apply_previewed_with(d, p_scr, &mut shared);
+                        prop_assert!(
+                            rf.q().to_bits() == scr.q().to_bits()
+                                && rf.s_max().to_bits() == scr.s_max().to_bits()
+                                && rf.htilde().to_bits() == scr.htilde().to_bits(),
+                            "{policy:?} window {k}: committed state diverged"
+                        );
+                    }
+                }
+                // in-place batcher + scratch scorer (the service hot path)
+                // vs DeltaGraph::coalesced + allocating jsdist_incremental
+                // (the pre-refactor window loop) over the same event stream
+                let mut batcher = WindowBatcher::new();
+                let mut scorer = WindowScorer::new(
+                    FingerState::with_policy(g1.clone(), policy),
+                    AnomalyDetector::new(3.0, 8),
+                    ResyncPolicy::disabled(),
+                );
+                let mut reference = FingerState::with_policy(g1.clone(), policy);
+                let mut scored = Vec::new();
+                for ev in events_from_deltas(w1) {
+                    if let Some((delta, n)) = batcher.push_ref(ev) {
+                        prop_assert!(delta.is_sorted_unique(), "batcher window not normal form");
+                        scored.push(scorer.score(delta, n).jsdist);
+                    }
+                }
+                for (k, d) in w1.iter().enumerate() {
+                    let js = jsdist_incremental(&mut reference, &d.coalesced());
+                    prop_assert!(
+                        js.to_bits() == scored[k].to_bits(),
+                        "{policy:?} window {k}: jsdist {js} vs {}",
+                        scored[k]
+                    );
+                }
+                prop_assert!(
+                    reference.htilde().to_bits() == scorer.state().htilde().to_bits(),
+                    "{policy:?}: final H̃ diverged"
+                );
             }
             Ok(())
         },

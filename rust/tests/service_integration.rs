@@ -295,3 +295,30 @@ fn per_session_anomalies_are_isolated() {
         report.session("noisy").unwrap().anomalies
     );
 }
+
+#[test]
+fn per_session_scores_bit_identical_to_allocating_loop() {
+    // Stronger form of `per_session_scores_match_offline_loop`: the sharded
+    // service scores through the allocation-free scratch path, and every
+    // session's jsdist/htilde must equal the per-call-allocating
+    // `jsdist_incremental` replay bit for bit (not just within tolerance).
+    let workload_data = small_workload(10, 6);
+    let cfg = ServiceConfig { shards: 4, ..Default::default() };
+    let report = workload::drive(&cfg, &workload_data, 3, false);
+    for (id, initial, events) in &workload_data {
+        let session = report.session(id).expect("session scored");
+        let mut state = FingerState::new(initial.clone());
+        let mut batcher = finger::stream::WindowBatcher::new();
+        let mut offline = Vec::new();
+        for ev in events.iter().cloned() {
+            if let Some((delta, _)) = batcher.push(ev) {
+                offline.push(jsdist_incremental(&mut state, &delta));
+            }
+        }
+        assert_eq!(session.records.len(), offline.len(), "{id}");
+        for (r, js) in session.records.iter().zip(&offline) {
+            assert_eq!(r.jsdist.to_bits(), js.to_bits(), "{id} window {}", r.window);
+        }
+        assert_eq!(session.htilde.to_bits(), state.htilde().to_bits(), "{id}");
+    }
+}

@@ -149,3 +149,38 @@ fn throughput_is_reported_positive() {
     assert!(res.throughput > 1000.0, "throughput={}", res.throughput);
     assert!(res.p99_latency >= res.p50_latency);
 }
+
+#[test]
+fn pipeline_scores_bit_identical_to_allocating_algorithm2_loop() {
+    // The pipeline's scorer runs the scratch-reusing hot path (in-place
+    // batcher + `entropy::Scratch`); its scores must be bit-for-bit what the
+    // per-call-allocating `jsdist_incremental` produces over the same
+    // windows — the pre-refactor reference semantics.
+    let cfg =
+        WikiConfig { months: 14, initial_nodes: 120, growth_per_month: 30, ..Default::default() };
+    let stream = wiki_stream(&cfg);
+    let events = events_from_deltas(&stream.deltas);
+    let res = Pipeline::new(stream.initial.clone(), PipelineConfig::default()).run(events);
+
+    let mut state = FingerState::new(stream.initial.clone());
+    let mut batcher = finger::stream::WindowBatcher::new();
+    let mut reference = Vec::new();
+    for d in &stream.deltas {
+        for ev in events_from_deltas(std::slice::from_ref(d)) {
+            if let Some((delta, _)) = batcher.push(ev) {
+                reference.push(finger::distance::jsdist_incremental(&mut state, &delta));
+            }
+        }
+    }
+    assert_eq!(res.records.len(), reference.len());
+    for (r, js) in res.records.iter().zip(&reference) {
+        assert_eq!(
+            r.jsdist.to_bits(),
+            js.to_bits(),
+            "window {}: {} vs {js}",
+            r.window,
+            r.jsdist
+        );
+    }
+    assert_eq!(res.records.last().unwrap().htilde.to_bits(), state.htilde().to_bits());
+}
