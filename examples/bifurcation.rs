@@ -8,6 +8,8 @@
 //! cargo run --release --offline --example bifurcation [-- --dim 240]
 //! ```
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+
 use finger::cli::Args;
 use finger::coordinator::{experiments, report};
 use finger::datasets::HicConfig;

@@ -4,6 +4,8 @@
 //! cargo run --release --offline --example dos_detection [-- --nodes 2000 --trials 50 --extended]
 //! ```
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+
 use finger::cli::Args;
 use finger::coordinator::{experiments, report};
 use finger::datasets::OregonConfig;

@@ -7,6 +7,8 @@
 //!     [-- --sessions 1000 --shards 8 --windows 12 --events 50]
 //! ```
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+
 use finger::cli::Args;
 use finger::service::{workload, ScoringService, ServiceConfig, TenantWorkloadConfig};
 use finger::stream::StreamEvent;

@@ -4,6 +4,8 @@
 //! cargo run --release --offline --example quickstart
 //! ```
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+
 use finger::distance::{jsdist_exact, jsdist_fast, jsdist_incremental};
 use finger::entropy::{exact_vnge, finger_hhat, finger_htilde, FingerState};
 use finger::graph::DeltaGraph;

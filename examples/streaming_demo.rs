@@ -10,6 +10,8 @@
 //! cargo run --release --offline --example streaming_demo [-- --months 60 --growth 400]
 //! ```
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+
 use finger::cli::Args;
 use finger::datasets::{wiki_stream, WikiConfig};
 use finger::stream::{event, Pipeline, PipelineConfig};

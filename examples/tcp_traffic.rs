@@ -11,6 +11,8 @@
 //!     [-- --sessions 16 --connections 4 --windows 6 --shards 4]
 //! ```
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+
 use finger::cli::Args;
 use finger::net::{NetClient, NetConfig, NetServer, TrafficConfig, TrafficReport, Wire};
 use finger::service::{ServiceConfig, TenantPreset, TenantWorkloadConfig};

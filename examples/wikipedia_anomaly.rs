@@ -7,6 +7,8 @@
 //! cargo run --release --offline --example wikipedia_anomaly [-- --scale 2.0]
 //! ```
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+
 use finger::cli::Args;
 use finger::coordinator::{experiments, report};
 use finger::datasets::WikiConfig;

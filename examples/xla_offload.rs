@@ -8,6 +8,8 @@
 //! cargo run --release --offline --example xla_offload [-- --artifacts artifacts]
 //! ```
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+
 use finger::cli::Args;
 use finger::entropy::{finger_hhat, quadratic_q};
 use finger::runtime::{Runtime, XlaEntropy};

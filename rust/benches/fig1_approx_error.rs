@@ -5,6 +5,8 @@
 //! Paper shape to reproduce: AE decays as d̄ grows or p_ws shrinks; CTRR of
 //! both approximations ≥ 97%.
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+
 use finger::bench::{bench_mode, BenchMode};
 use finger::coordinator::experiments::{fig1_degree_sweep, fig1_ws_sweep, GraphModel};
 use finger::coordinator::report::approx_table;

@@ -5,6 +5,8 @@
 //! Paper shape: SAE → 0 with n for ER/WS (balanced spectra, Corollaries 2–3);
 //! SAE grows ~log n for BA; CTRR → ~100% for moderate n.
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+
 use finger::bench::{bench_mode, BenchMode};
 use finger::coordinator::experiments::{fig2_size_sweep, mean_ctrr, sae_trend, GraphModel};
 use finger::coordinator::report::approx_table;

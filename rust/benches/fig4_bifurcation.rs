@@ -7,6 +7,8 @@
 //! the decoy support-noise dip; spectral/affinity methods follow the hub
 //! oscillation confounder.
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+
 use finger::bench::{bench_mode, BenchMode};
 use finger::coordinator::experiments::run_bifurcation;
 use finger::coordinator::report::bifurcation_table;

@@ -24,6 +24,10 @@
 //! Results land in `BENCH_finger.json` (override with `FINGER_BENCH_JSON`);
 //! see docs/PERF.md for how to read the trajectory.
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+#![allow(unsafe_code)] // the counting GlobalAlloc needs raw alloc hooks
+
+use finger::assert_bits_eq;
 use finger::bench::{bench_mode, write_json_report, BenchMode, BenchRecord};
 use finger::distance::jsdist_incremental;
 use finger::entropy::{FingerState, SmaxPolicy};
@@ -303,7 +307,7 @@ fn main() {
         a_baseline,
         "allocs_per_window",
     ));
-    assert_eq!(
+    assert_bits_eq!(
         a_scratch, 0.0,
         "scratch scorer loop allocated in steady state — hot-path regression"
     );

@@ -12,6 +12,8 @@
 //! with `FINGER_BENCH_JSON`) so the perf trajectory is machine-readable
 //! across PRs.
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+
 use finger::bench::{bench_mode, write_json_report, BenchMode, BenchRecord, BenchResult, Bencher};
 use finger::entropy::FingerState;
 use finger::graph::{Csr, DeltaGraph};

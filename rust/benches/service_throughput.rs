@@ -9,6 +9,8 @@
 //! session sets in parallel; expect ≥2× from 1→4 shards on a ≥4-core
 //! machine. Results are written to `BENCH_service_throughput.json`.
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+
 use finger::bench::{bench_mode, write_json_report, BenchMode, BenchRecord};
 use finger::service::{workload, ServiceConfig, TenantWorkloadConfig};
 

@@ -6,6 +6,8 @@
 //! Paper shape: FINGER-JS (Fast) best PCC and SRCC everywhere; Incremental
 //! fastest with second-best correlation.
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+
 use finger::bench::{bench_mode, BenchMode};
 use finger::coordinator::experiments::run_wiki;
 use finger::coordinator::report::{series_dump, wiki_table};

@@ -5,6 +5,8 @@
 //! Paper shape: FINGER-JS (Fast) dominates at every X; all methods converge
 //! near X=10%; VEO/degree-distribution columns (S2) are not competitive.
 
+#![allow(clippy::print_stdout)] // stdout is this target's interface
+
 use finger::bench::{bench_mode, BenchMode};
 use finger::coordinator::experiments::run_dos;
 use finger::coordinator::report::dos_table;

@@ -73,11 +73,13 @@ pub fn detection_rate(trials: &[DetectionTrial], k: usize) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
 
     #[test]
     fn tds_endpoints_and_interior() {
         let theta = [1.0, 3.0, 5.0];
         let tds = temporal_difference_score(&theta);
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(tds, vec![1.0, 2.0, 4.0, 5.0]);
         assert_eq!(tds.len(), theta.len() + 1);
     }
@@ -121,8 +123,8 @@ mod tests {
             DetectionTrial { scores: vec![0.9, 0.1], anomaly_idx: 0 },
             DetectionTrial { scores: vec![0.1, 0.9], anomaly_idx: 0 },
         ];
-        assert_eq!(detection_rate(&trials, 1), 0.5);
-        assert_eq!(detection_rate(&[], 1), 0.0);
+        assert_bits_eq!(detection_rate(&trials, 1), 0.5);
+        assert_bits_eq!(detection_rate(&[], 1), 0.0);
     }
 
     #[test]
@@ -134,6 +136,7 @@ mod tests {
             Graph::new(3),
         ]);
         let s = consecutive_scores(&seq, |_, _| 1.0);
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(s, vec![1.0, 1.0]);
     }
 }

@@ -80,6 +80,7 @@ impl Args {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
 
     fn toks(s: &str) -> Vec<String> {
         s.split_whitespace().map(|t| t.to_string()).collect()
@@ -114,7 +115,7 @@ mod tests {
     fn default_on_missing_or_bad() {
         let a = Args::parse(&toks("x --n abc"));
         assert_eq!(a.get_parsed("n", 7usize), 7);
-        assert_eq!(a.get_parsed("missing", 3.5f64), 3.5);
+        assert_bits_eq!(a.get_parsed("missing", 3.5f64), 3.5);
     }
 
     #[test]

@@ -170,6 +170,7 @@ pub fn hic_sequence(cfg: &HicConfig) -> GraphSequence {
                     break;
                 }
                 let base = base_weight(i, j);
+                // finger-lint: allow(FL003): exact zero sentinel, not a computed comparison
                 if base == 0.0 {
                     continue;
                 }

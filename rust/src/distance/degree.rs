@@ -19,6 +19,7 @@ pub fn cosine_distance(a: &Graph, b: &Graph) -> f64 {
     let dot: f64 = p.iter().zip(&q).map(|(x, y)| x * y).sum();
     let np: f64 = p.iter().map(|x| x * x).sum::<f64>().sqrt();
     let nq: f64 = q.iter().map(|x| x * x).sum::<f64>().sqrt();
+    // finger-lint: allow(FL003): exact zero sentinel, not a computed comparison
     if np == 0.0 || nq == 0.0 {
         return 0.0;
     }

@@ -89,6 +89,7 @@ pub fn deltacon_similarity(a: &Graph, b: &Graph, opts: &DeltaConOpts) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
     use crate::generators;
 
     #[test]
@@ -154,6 +155,6 @@ mod tests {
         let a = generators::erdos_renyi(30, 0.2, &mut rng);
         let b = generators::erdos_renyi(30, 0.2, &mut rng);
         let o = DeltaConOpts::default();
-        assert_eq!(rmd_distance(&a, &b, &o), rmd_distance(&a, &b, &o));
+        assert_bits_eq!(rmd_distance(&a, &b, &o), rmd_distance(&a, &b, &o));
     }
 }

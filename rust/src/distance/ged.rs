@@ -30,11 +30,12 @@ pub fn graph_edit_distance(a: &Graph, b: &Graph) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
 
     #[test]
     fn identical_zero() {
         let g = Graph::from_pairs(4, &[(0, 1), (2, 3)]);
-        assert_eq!(graph_edit_distance(&g, &g), 0.0);
+        assert_bits_eq!(graph_edit_distance(&g, &g), 0.0);
     }
 
     #[test]
@@ -42,14 +43,14 @@ mod tests {
         let a = Graph::from_pairs(4, &[(0, 1), (1, 2)]);
         let b = Graph::from_pairs(4, &[(0, 1), (2, 3)]);
         // (1,2) removed + (2,3) added = 2
-        assert_eq!(graph_edit_distance(&a, &b), 2.0);
+        assert_bits_eq!(graph_edit_distance(&a, &b), 2.0);
     }
 
     #[test]
     fn counts_node_edits() {
         let a = Graph::from_pairs(3, &[(0, 1)]);
         let b = Graph::from_pairs(5, &[(0, 1)]);
-        assert_eq!(graph_edit_distance(&a, &b), 2.0);
+        assert_bits_eq!(graph_edit_distance(&a, &b), 2.0);
     }
 
     #[test]
@@ -57,13 +58,13 @@ mod tests {
         // GED is support-only — the genome experiment's failure mode
         let a = Graph::from_edges(3, &[(0, 1, 1.0)]);
         let b = Graph::from_edges(3, &[(0, 1, 100.0)]);
-        assert_eq!(graph_edit_distance(&a, &b), 0.0);
+        assert_bits_eq!(graph_edit_distance(&a, &b), 0.0);
     }
 
     #[test]
     fn symmetry() {
         let a = Graph::from_pairs(4, &[(0, 1), (1, 2)]);
         let b = Graph::from_pairs(6, &[(0, 3), (4, 5)]);
-        assert_eq!(graph_edit_distance(&a, &b), graph_edit_distance(&b, &a));
+        assert_bits_eq!(graph_edit_distance(&a, &b), graph_edit_distance(&b, &a));
     }
 }

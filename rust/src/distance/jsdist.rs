@@ -51,6 +51,7 @@ pub fn jsdist_incremental(state: &mut FingerState, delta: &DeltaGraph) -> f64 {
 /// steady-state window scores with zero allocations. Identical arithmetic in
 /// identical order — the score and the advanced state are bit-for-bit the
 /// same as the allocating variant.
+// lint: hot-path
 pub fn jsdist_incremental_with(
     state: &mut FingerState,
     delta: &DeltaGraph,
@@ -66,6 +67,7 @@ pub fn jsdist_incremental_with(
     let div = h_mid - 0.5 * (h_g + h_next);
     div.max(0.0).sqrt()
 }
+// lint: hot-path end
 
 #[cfg(test)]
 mod tests {

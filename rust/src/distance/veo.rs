@@ -20,6 +20,7 @@ pub fn veo_score(a: &Graph, b: &Graph) -> f64 {
         }
     }
     let denom = (va + vb + a.num_edges() + b.num_edges()) as f64;
+    // finger-lint: allow(FL003): exact zero sentinel, not a computed comparison
     if denom == 0.0 {
         return 0.0;
     }
@@ -29,6 +30,7 @@ pub fn veo_score(a: &Graph, b: &Graph) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
 
     #[test]
     fn identical_zero() {
@@ -61,13 +63,13 @@ mod tests {
 
     #[test]
     fn empty_graphs() {
-        assert_eq!(veo_score(&Graph::new(0), &Graph::new(0)), 0.0);
+        assert_bits_eq!(veo_score(&Graph::new(0), &Graph::new(0)), 0.0);
     }
 
     #[test]
     fn symmetry() {
         let a = Graph::from_pairs(4, &[(0, 1), (1, 2)]);
         let b = Graph::from_pairs(5, &[(0, 1), (3, 4)]);
-        assert_eq!(veo_score(&a, &b), veo_score(&b, &a));
+        assert_bits_eq!(veo_score(&a, &b), veo_score(&b, &a));
     }
 }

@@ -77,6 +77,7 @@ pub fn vnge_nl_exact(g: &Graph) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
     use crate::generators;
     use crate::util::Pcg64;
 
@@ -112,9 +113,9 @@ mod tests {
     #[test]
     fn empty_graph_zero() {
         let g = crate::graph::Graph::new(4);
-        assert_eq!(vnge_nl(&g), 0.0);
-        assert_eq!(vnge_gl(&g), 0.0);
-        assert_eq!(vnge_nl_exact(&g), 0.0);
+        assert_bits_eq!(vnge_nl(&g), 0.0);
+        assert_bits_eq!(vnge_gl(&g), 0.0);
+        assert_bits_eq!(vnge_nl_exact(&g), 0.0);
     }
 
     #[test]

@@ -168,6 +168,7 @@ impl FingerState {
         self.preview_bufs(delta, true, &mut scratch.bufs)
     }
 
+    // lint: hot-path
     pub(crate) fn preview_bufs(
         &self,
         delta: &DeltaGraph,
@@ -306,6 +307,7 @@ impl FingerState {
         };
         PreviewedState { q: q_new, s_total: s_new, s_max: s_max_new }
     }
+    // lint: hot-path end
 
     /// H̃(G ⊕ ΔG) without committing (Algorithm 2 line 1). O(Δn + Δm).
     pub fn htilde_after(&self, delta: &DeltaGraph) -> f64 {
@@ -349,6 +351,7 @@ impl FingerState {
         self.apply_previewed_bufs(delta, preview, &mut scratch.bufs);
     }
 
+    // lint: hot-path
     pub(crate) fn apply_previewed_bufs(
         &mut self,
         delta: &DeltaGraph,
@@ -425,6 +428,7 @@ impl FingerState {
         }
         self.steps += 1;
     }
+    // lint: hot-path end
 
     /// Remove one occurrence of strength `s` from the multiset. Returns
     /// false when `s` is positive but neither its exact bit-key nor a
@@ -524,6 +528,7 @@ impl PreviewedState {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
     use crate::entropy::{finger_htilde, quadratic_q};
     use crate::generators;
     use crate::graph::ops;
@@ -579,11 +584,11 @@ mod tests {
         g.set_weight(0, 1, 10.0);
         g.set_weight(2, 3, 1.0);
         let mut state = FingerState::new(g);
-        assert_eq!(state.s_max(), 10.0);
+        assert_bits_eq!(state.s_max(), 10.0);
         let mut d = DeltaGraph::new();
         d.add(0, 1, -10.0); // delete heavy edge
         state.apply(&d);
-        assert_eq!(state.s_max(), 1.0); // exact policy decreases
+        assert_bits_eq!(state.s_max(), 1.0); // exact policy decreases
         assert!((state.htilde() - finger_htilde(state.graph())).abs() < 1e-12);
     }
 
@@ -596,7 +601,7 @@ mod tests {
         let mut d = DeltaGraph::new();
         d.add(0, 1, -10.0);
         state.apply(&d);
-        assert_eq!(state.s_max(), 10.0); // monotone rule keeps the stale max
+        assert_bits_eq!(state.s_max(), 10.0); // monotone rule keeps the stale max
     }
 
     #[test]
@@ -662,8 +667,8 @@ mod tests {
         let mut d = DeltaGraph::new();
         d.add(0, 1, -1.0).add(1, 2, -1.0);
         state.apply(&d);
-        assert_eq!(state.s_total(), 0.0);
-        assert_eq!(state.htilde(), 0.0);
+        assert_bits_eq!(state.s_total(), 0.0);
+        assert_bits_eq!(state.htilde(), 0.0);
     }
 
     #[test]
@@ -876,7 +881,7 @@ mod tests {
         d.add(0, 1, -1.5); // delete the heavy edge: removes strength 1.5 twice
         state.apply(&d);
         assert_eq!(state.strength_multiset_len(), 2); // nodes 2 and 3
-        assert_eq!(state.s_max(), 0.5);
+        assert_bits_eq!(state.s_max(), 0.5);
         assert!((state.htilde() - finger_htilde(state.graph())).abs() < 1e-12);
     }
 
@@ -889,12 +894,12 @@ mod tests {
         let mut state = FingerState::new(g);
         state.strengths.remove(&2.0f64.to_bits());
         state.strengths.insert(100.0f64.to_bits(), 2); // stale keys
-        assert_eq!(state.s_max(), 2.0); // cached s_max still sane pre-apply
+        assert_bits_eq!(state.s_max(), 2.0); // cached s_max still sane pre-apply
         let mut d = DeltaGraph::new();
         d.add(0, 1, 1.0);
         state.apply(&d);
         let positive = state.graph().strengths().iter().filter(|&&s| s > 0.0).count();
         assert_eq!(state.strength_multiset_len(), positive);
-        assert_eq!(state.s_max(), state.graph().s_max()); // 3.0, stale 100 purged
+        assert_bits_eq!(state.s_max(), state.graph().s_max()); // 3.0, stale 100 purged
     }
 }

@@ -113,6 +113,7 @@ pub fn theorem1_bounds(q: f64, lambda_min: f64, lambda_max: f64) -> Option<(f64,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
     use crate::generators;
     use crate::util::Pcg64;
 
@@ -186,10 +187,10 @@ mod tests {
     #[test]
     fn empty_graph_zero() {
         let g = Graph::new(5);
-        assert_eq!(exact_vnge(&g), 0.0);
-        assert_eq!(finger_hhat(&g), 0.0);
-        assert_eq!(finger_htilde(&g), 0.0);
-        assert_eq!(quadratic_q(&g), 0.0);
+        assert_bits_eq!(exact_vnge(&g), 0.0);
+        assert_bits_eq!(finger_hhat(&g), 0.0);
+        assert_bits_eq!(finger_htilde(&g), 0.0);
+        assert_bits_eq!(quadratic_q(&g), 0.0);
     }
 
     #[test]
@@ -235,7 +236,7 @@ mod tests {
 
     #[test]
     fn hhat_from_parts_clamps() {
-        assert_eq!(hhat_from_parts(0.5, 0.0), 0.0);
-        assert_eq!(hhat_from_parts(-1e-18, 0.5), 0.0); // tiny negative Q noise
+        assert_bits_eq!(hhat_from_parts(0.5, 0.0), 0.0);
+        assert_bits_eq!(hhat_from_parts(-1e-18, 0.5), 0.0); // tiny negative Q noise
     }
 }

@@ -166,6 +166,7 @@ pub fn path(n: usize) -> Graph {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
 
     #[test]
     fn er_edge_count_near_expectation() {
@@ -181,7 +182,9 @@ mod tests {
     #[test]
     fn er_p_zero_and_one() {
         let mut rng = Pcg64::new(2);
+        // finger-lint: allow(FL003): integer edge counts; the floats are literal parameters
         assert_eq!(erdos_renyi(50, 0.0, &mut rng).num_edges(), 0);
+        // finger-lint: allow(FL003): integer edge counts; the floats are literal parameters
         assert_eq!(erdos_renyi(10, 1.0, &mut rng).num_edges(), 45);
     }
 
@@ -242,18 +245,19 @@ mod tests {
     fn complete_structure() {
         let g = complete(5, 2.0);
         assert_eq!(g.num_edges(), 10);
-        assert_eq!(g.strength(0), 8.0);
+        assert_bits_eq!(g.strength(0), 8.0);
     }
 
     #[test]
     fn ring_star_path_degrees() {
+        // finger-lint: allow(FL003): ring strengths are exact small integers
         assert!(ring(6).strengths().iter().all(|&s| s == 2.0));
         let s = star(6);
-        assert_eq!(s.strength(0), 5.0);
-        assert_eq!(s.strength(3), 1.0);
+        assert_bits_eq!(s.strength(0), 5.0);
+        assert_bits_eq!(s.strength(3), 1.0);
         let p = path(5);
-        assert_eq!(p.strength(0), 1.0);
-        assert_eq!(p.strength(2), 2.0);
+        assert_bits_eq!(p.strength(0), 1.0);
+        assert_bits_eq!(p.strength(2), 2.0);
     }
 
     #[test]

@@ -103,6 +103,7 @@ mod tests {
         let c = Csr::from_graph(&path3());
         assert_eq!(c.row_ptr, vec![0, 1, 3, 4]);
         assert_eq!(c.col_idx, vec![1, 0, 2, 1]);
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(c.values, vec![1.0, 1.0, 2.0, 2.0]);
         assert_eq!(c.nnz(), 4);
     }
@@ -115,6 +116,7 @@ mod tests {
         let mut y = [0.0; 3];
         c.matvec_w(&x, &mut y);
         // W = [[0,1,0],[1,0,2],[0,2,0]]
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(y, [2.0, 7.0, 4.0]);
     }
 
@@ -137,6 +139,7 @@ mod tests {
         let mut y = [0.0; 3];
         c.matvec_laplacian(&x, &mut y);
         // L = [[1,-1,0],[-1,3,-2],[0,-2,2]], first column
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(y, [1.0, -1.0, 0.0]);
     }
 
@@ -161,6 +164,7 @@ mod tests {
         let x = [1.0, 2.0];
         let mut y = [9.0, 9.0];
         c.matvec_laplacian_normalized(&x, &mut y);
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(y, [0.0, 0.0]);
     }
 }

@@ -45,6 +45,7 @@ impl CoalesceBuf {
                 acc += self.keyed[next].2;
                 next += 1;
             }
+            // finger-lint: allow(FL003): exact zero sentinel, not a computed comparison
             if acc != 0.0 {
                 out.push(((key >> 32) as u32, key as u32, acc));
             }
@@ -246,6 +247,7 @@ impl DeltaGraph {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
 
     #[test]
     fn apply_adds_edges_and_nodes() {
@@ -254,8 +256,8 @@ mod tests {
         d.grow_nodes(1).add(0, 2, 1.5).add(0, 1, 2.0);
         d.apply_to(&mut g);
         assert_eq!(g.num_nodes(), 3);
-        assert_eq!(g.weight(0, 2), 1.5);
-        assert_eq!(g.weight(0, 1), 2.0);
+        assert_bits_eq!(g.weight(0, 2), 1.5);
+        assert_bits_eq!(g.weight(0, 1), 2.0);
         g.check_invariants().unwrap();
     }
 
@@ -273,8 +275,9 @@ mod tests {
         let mut d = DeltaGraph::new();
         d.add(0, 1, 4.0).add(1, 2, -2.0);
         let h = d.half();
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(h.edge_deltas(), &[(0, 1, 2.0), (1, 2, -1.0)]);
-        assert_eq!(h.delta_total_weight(), d.delta_total_weight() / 2.0);
+        assert_bits_eq!(h.delta_total_weight(), d.delta_total_weight() / 2.0);
     }
 
     #[test]
@@ -282,6 +285,7 @@ mod tests {
         let mut d = DeltaGraph::new();
         d.add(0, 1, 1.0).add(1, 0, 2.0).add(2, 3, 1.0).add(2, 3, -1.0);
         let c = d.coalesced();
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(c.edge_deltas(), &[(0, 1, 3.0)]);
     }
 
@@ -312,7 +316,7 @@ mod tests {
         // node count never shrinks; all edges touching removed ids are gone
         assert_eq!(g.num_nodes(), 5);
         assert_eq!(g.num_edges(), 1);
-        assert_eq!(g.weight(0, 1), 3.0);
+        assert_bits_eq!(g.weight(0, 1), 3.0);
         assert!(!g.has_edge(2, 4));
         assert!(!g.has_edge(1, 3));
         g.check_invariants().unwrap();
@@ -389,6 +393,7 @@ mod tests {
     fn order_normalized() {
         let mut d = DeltaGraph::new();
         d.add(5, 2, 1.0);
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(d.edge_deltas(), &[(2, 5, 1.0)]);
     }
 }

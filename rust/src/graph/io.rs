@@ -105,6 +105,7 @@ pub fn write_delta_stream<W: Write>(deltas: &[DeltaGraph], mut w: W) -> Result<(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
 
     #[test]
     fn edge_list_roundtrip() {
@@ -113,16 +114,16 @@ mod tests {
         write_edge_list(&g, &mut buf).unwrap();
         let g2 = read_edge_list(&buf[..], 0).unwrap();
         assert_eq!(g2.num_nodes(), 4);
-        assert_eq!(g2.weight(0, 1), 1.5);
-        assert_eq!(g2.weight(2, 3), 2.0);
+        assert_bits_eq!(g2.weight(0, 1), 1.5);
+        assert_bits_eq!(g2.weight(2, 3), 2.0);
     }
 
     #[test]
     fn edge_list_default_weight_and_comments() {
         let text = "# comment\n0 1\n\n1 2 3.5\n";
         let g = read_edge_list(text.as_bytes(), 0).unwrap();
-        assert_eq!(g.weight(0, 1), 1.0);
-        assert_eq!(g.weight(1, 2), 3.5);
+        assert_bits_eq!(g.weight(0, 1), 1.0);
+        assert_bits_eq!(g.weight(1, 2), 3.5);
     }
 
     #[test]
@@ -146,8 +147,10 @@ mod tests {
         write_delta_stream(&deltas, &mut buf).unwrap();
         let back = read_delta_stream(&buf[..]).unwrap();
         assert_eq!(back.len(), 3);
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(back[0].edge_deltas(), &[(0, 1, 1.0)]);
         assert!(back[1].is_empty());
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(back[2].edge_deltas(), &[(1, 2, -0.5)]);
     }
 
@@ -159,7 +162,7 @@ mod tests {
         let g = Graph::from_edges(3, &[(0, 2, 4.0)]);
         save_graph(&g, &path).unwrap();
         let g2 = load_graph(&path).unwrap();
-        assert_eq!(g2.weight(0, 2), 4.0);
+        assert_bits_eq!(g2.weight(0, 2), 4.0);
         std::fs::remove_file(path).ok();
     }
 }

@@ -166,6 +166,7 @@ impl Graph {
             }
             return;
         }
+        // finger-lint: allow(FL003): exact zero sentinel, not a computed comparison
         if old == 0.0 {
             self.m += 1;
         }
@@ -327,14 +328,15 @@ impl Graph {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
 
     #[test]
     fn empty_graph() {
         let g = Graph::new(5);
         assert_eq!(g.num_nodes(), 5);
         assert_eq!(g.num_edges(), 0);
-        assert_eq!(g.total_weight(), 0.0);
-        assert_eq!(g.s_max(), 0.0);
+        assert_bits_eq!(g.total_weight(), 0.0);
+        assert_bits_eq!(g.s_max(), 0.0);
         g.check_invariants().unwrap();
     }
 
@@ -342,12 +344,12 @@ mod tests {
     fn set_weight_symmetric() {
         let mut g = Graph::new(3);
         g.set_weight(0, 1, 2.5);
-        assert_eq!(g.weight(0, 1), 2.5);
-        assert_eq!(g.weight(1, 0), 2.5);
+        assert_bits_eq!(g.weight(0, 1), 2.5);
+        assert_bits_eq!(g.weight(1, 0), 2.5);
         assert_eq!(g.num_edges(), 1);
-        assert_eq!(g.strength(0), 2.5);
-        assert_eq!(g.strength(1), 2.5);
-        assert_eq!(g.total_weight(), 5.0);
+        assert_bits_eq!(g.strength(0), 2.5);
+        assert_bits_eq!(g.strength(1), 2.5);
+        assert_bits_eq!(g.total_weight(), 5.0);
         g.check_invariants().unwrap();
     }
 
@@ -357,8 +359,8 @@ mod tests {
         g.set_weight(0, 1, 2.0);
         g.set_weight(0, 1, 5.0);
         assert_eq!(g.num_edges(), 1);
-        assert_eq!(g.strength(0), 5.0);
-        assert_eq!(g.total_weight(), 10.0);
+        assert_bits_eq!(g.strength(0), 5.0);
+        assert_bits_eq!(g.total_weight(), 10.0);
         g.check_invariants().unwrap();
     }
 
@@ -370,7 +372,7 @@ mod tests {
         g.set_weight(0, 1, 0.0);
         assert_eq!(g.num_edges(), 1);
         assert!(!g.has_edge(0, 1));
-        assert_eq!(g.strength(0), 3.0);
+        assert_bits_eq!(g.strength(0), 3.0);
         g.check_invariants().unwrap();
     }
 
@@ -379,10 +381,10 @@ mod tests {
         let mut g = Graph::new(2);
         g.add_weight(0, 1, 1.5);
         g.add_weight(0, 1, 0.5);
-        assert_eq!(g.weight(0, 1), 2.0);
+        assert_bits_eq!(g.weight(0, 1), 2.0);
         g.add_weight(0, 1, -2.0);
         assert!(!g.has_edge(0, 1));
-        assert_eq!(g.total_weight(), 0.0);
+        assert_bits_eq!(g.total_weight(), 0.0);
         g.check_invariants().unwrap();
     }
 
@@ -397,6 +399,7 @@ mod tests {
         let g = Graph::from_edges(4, &[(0, 1, 1.0), (1, 2, 2.0), (2, 3, 3.0)]);
         let mut es: Vec<_> = g.edges().collect();
         es.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(es, vec![(0, 1, 1.0), (1, 2, 2.0), (2, 3, 3.0)]);
     }
 
@@ -405,8 +408,8 @@ mod tests {
         // path 0-1-2 with weights 1, 2: s = [1, 3, 2]
         let g = Graph::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0)]);
         let (s2, w2) = g.q_moments();
-        assert_eq!(s2, 1.0 + 9.0 + 4.0);
-        assert_eq!(w2, 1.0 + 4.0);
+        assert_bits_eq!(s2, 1.0 + 9.0 + 4.0);
+        assert_bits_eq!(w2, 1.0 + 4.0);
     }
 
     #[test]
@@ -440,9 +443,9 @@ mod tests {
     fn dense_weights_symmetric() {
         let g = Graph::from_edges(3, &[(0, 2, 1.5)]);
         let w = g.dense_weights();
-        assert_eq!(w[0 * 3 + 2], 1.5);
-        assert_eq!(w[2 * 3 + 0], 1.5);
-        assert_eq!(w[0 * 3 + 1], 0.0);
+        assert_bits_eq!(w[0 * 3 + 2], 1.5);
+        assert_bits_eq!(w[2 * 3 + 0], 1.5);
+        assert_bits_eq!(w[0 * 3 + 1], 0.0);
     }
 
     #[test]
@@ -453,10 +456,13 @@ mod tests {
         g.set_weight(3, 0, 2.0);
         g.set_weight(3, 4, 3.0);
         g.set_weight(3, 1, 4.0);
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(g.neighbor_entries(3), &[(0, 2.0), (1, 4.0), (4, 3.0), (5, 1.0)]);
         let nbrs: Vec<_> = g.neighbors(3).collect();
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(nbrs, vec![(0, 2.0), (1, 4.0), (4, 3.0), (5, 1.0)]);
         g.remove_edge(3, 4);
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(g.neighbor_entries(3), &[(0, 2.0), (1, 4.0), (5, 1.0)]);
         g.check_invariants().unwrap();
     }
@@ -468,6 +474,7 @@ mod tests {
         g.set_weight(0, 3, 2.0);
         g.set_weight(0, 1, 3.0);
         let es: Vec<_> = g.edges().collect();
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(es, vec![(0, 1, 3.0), (0, 3, 2.0), (2, 4, 1.0)]);
     }
 
@@ -476,8 +483,8 @@ mod tests {
         let mut g = Graph::new(3);
         g.set_weight(0, 1, 4.0);
         g.set_weight(1, 2, 3.0);
-        assert_eq!(g.s_max(), 7.0); // node 1
+        assert_bits_eq!(g.s_max(), 7.0); // node 1
         g.remove_edge(0, 1);
-        assert_eq!(g.s_max(), 3.0);
+        assert_bits_eq!(g.s_max(), 3.0);
     }
 }

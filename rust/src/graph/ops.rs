@@ -58,14 +58,15 @@ fn b_weight(b: &Graph, i: u32, j: u32) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
 
     #[test]
     fn average_graph_weights() {
         let a = Graph::from_edges(3, &[(0, 1, 2.0)]);
         let b = Graph::from_edges(3, &[(0, 1, 4.0), (1, 2, 2.0)]);
         let m = average_graph(&a, &b);
-        assert_eq!(m.weight(0, 1), 3.0);
-        assert_eq!(m.weight(1, 2), 1.0);
+        assert_bits_eq!(m.weight(0, 1), 3.0);
+        assert_bits_eq!(m.weight(1, 2), 1.0);
         assert!((m.total_weight() - (a.total_weight() + b.total_weight()) / 2.0).abs() < 1e-12);
     }
 
@@ -75,8 +76,8 @@ mod tests {
         let b = Graph::from_edges(4, &[(2, 3, 2.0)]);
         let m = average_graph(&a, &b);
         assert_eq!(m.num_nodes(), 4);
-        assert_eq!(m.weight(0, 1), 1.0);
-        assert_eq!(m.weight(2, 3), 1.0);
+        assert_bits_eq!(m.weight(0, 1), 1.0);
+        assert_bits_eq!(m.weight(2, 3), 1.0);
     }
 
     #[test]
@@ -85,8 +86,8 @@ mod tests {
         let mut d = DeltaGraph::new();
         d.add(0, 1, 1.0);
         let g2 = compose(&g, &d);
-        assert_eq!(g.weight(0, 1), 1.0);
-        assert_eq!(g2.weight(0, 1), 2.0);
+        assert_bits_eq!(g.weight(0, 1), 1.0);
+        assert_bits_eq!(g2.weight(0, 1), 2.0);
     }
 
     #[test]
@@ -94,7 +95,7 @@ mod tests {
         let g = Graph::from_edges(3, &[(0, 1, 1.0), (1, 2, 2.0)]);
         let s = scale(&g, 0.5);
         assert_eq!(s.num_edges(), 2);
-        assert_eq!(s.weight(1, 2), 1.0);
+        assert_bits_eq!(s.weight(1, 2), 1.0);
     }
 
     #[test]
@@ -102,8 +103,8 @@ mod tests {
         let a = Graph::from_edges(3, &[(0, 1, 5.0)]);
         let b = Graph::from_edges(3, &[(0, 1, 2.0), (1, 2, 7.0)]);
         let u = union_support(&a, &b, f64::max);
-        assert_eq!(u.weight(0, 1), 5.0);
-        assert_eq!(u.weight(1, 2), 7.0);
+        assert_bits_eq!(u.weight(0, 1), 5.0);
+        assert_bits_eq!(u.weight(1, 2), 7.0);
     }
 
     #[test]

@@ -65,6 +65,7 @@ impl GraphSequence {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
 
     #[test]
     fn from_deltas_materializes() {
@@ -75,7 +76,7 @@ mod tests {
         d2.add(0, 1, -1.0);
         let seq = GraphSequence::from_deltas(g0, &[d1, d2]);
         assert_eq!(seq.len(), 3);
-        assert_eq!(seq.get(1).weight(1, 2), 2.0);
+        assert_bits_eq!(seq.get(1).weight(1, 2), 2.0);
         assert_eq!(seq.get(2).num_edges(), 1);
     }
 

@@ -48,6 +48,7 @@ pub mod entropy;
 pub mod generators;
 pub mod graph;
 pub mod linalg;
+pub mod lint;
 pub mod net;
 pub mod runtime;
 pub mod service;

@@ -116,6 +116,7 @@ fn tridiagonalize(a: &mut [f64], n: usize, d: &mut [f64], e: &mut [f64]) {
             for k in 0..=l {
                 scale += a[i * n + k].abs();
             }
+            // finger-lint: allow(FL003): exact zero sentinel, not a computed comparison
             if scale == 0.0 {
                 e[i] = a[i * n + l];
             } else {
@@ -207,6 +208,7 @@ fn tql(d: &mut [f64], e: &mut [f64]) -> Result<(), String> {
                 let b = c * e[i];
                 r = hypot(f, g);
                 e[i + 1] = r;
+                // finger-lint: allow(FL003): exact zero sentinel, not a computed comparison
                 if r == 0.0 {
                     d[i + 1] -= p;
                     e[m] = 0.0;
@@ -371,6 +373,7 @@ mod tests {
         assert!(SymMatrix::zeros(0).eigenvalues().is_empty());
         let mut m = SymMatrix::zeros(1);
         m.set(0, 0, 5.0);
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(m.eigenvalues(), vec![5.0]);
     }
 }

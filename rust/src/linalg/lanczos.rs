@@ -71,6 +71,7 @@ pub fn lanczos_top_k(
     let mut mat = crate::linalg::SymMatrix::zeros(t);
     for i in 0..t {
         mat.set(i, i, alpha[i]);
+        // finger-lint: allow(FL003): exact zero sentinel, not a computed comparison
         if i + 1 < t && beta[i] != 0.0 {
             mat.set(i, i + 1, beta[i]);
             mat.set(i + 1, i, beta[i]);

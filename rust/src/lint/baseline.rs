@@ -1,0 +1,141 @@
+//! Shrink-only baseline I/O. The baseline file carries pre-existing
+//! violations so the lint can land blocking; every entry names its rule,
+//! site, and a written reason. CI checks the file only ever *shrinks*
+//! relative to `main` — new code never gets baselined, it gets fixed or
+//! carries an inline waiver.
+//!
+//! Format, one entry per line (`#` comments and blank lines ignored):
+//!
+//! ```text
+//! FL001 rust/src/stream/pipeline.rs:113 worker join at pipeline finish is fail-fast by design
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct BaselineEntry {
+    pub rule: String,
+    pub path: String,
+    pub line: u32,
+    pub reason: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Baseline {
+    pub entries: Vec<BaselineEntry>,
+}
+
+fn rule_id_ok(id: &str) -> bool {
+    let b = id.as_bytes();
+    b.len() == 5 && b[0] == b'F' && b[1] == b'L' && b[2..].iter().all(u8::is_ascii_digit)
+}
+
+impl Baseline {
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let mut entries = Vec::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (rule, rest) = line
+                .split_once(char::is_whitespace)
+                .with_context(|| format!("baseline line {lineno}: want `RULE path:line reason`"))?;
+            if !rule_id_ok(rule) {
+                bail!("baseline line {lineno}: malformed rule id `{rule}`");
+            }
+            let rest = rest.trim_start();
+            let (site, reason) = rest
+                .split_once(char::is_whitespace)
+                .with_context(|| format!("baseline line {lineno}: entry needs a written reason"))?;
+            let (path, site_line) = site
+                .rsplit_once(':')
+                .with_context(|| format!("baseline line {lineno}: site must be `path:line`"))?;
+            let site_line: u32 = site_line
+                .parse()
+                .with_context(|| format!("baseline line {lineno}: bad line number in `{site}`"))?;
+            let reason = reason.trim();
+            if reason.is_empty() {
+                bail!("baseline line {lineno}: entry needs a written reason");
+            }
+            entries.push(BaselineEntry {
+                rule: rule.to_string(),
+                path: path.to_string(),
+                line: site_line,
+                reason: reason.to_string(),
+            });
+        }
+        Ok(Baseline { entries })
+    }
+
+    /// Load from a file; a missing file is an empty baseline.
+    pub fn load(path: &Path) -> Result<Baseline> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => {
+                Self::parse(&text).with_context(|| format!("parse {}", path.display()))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Baseline::default()),
+            Err(e) => Err(e).with_context(|| format!("read {}", path.display())),
+        }
+    }
+
+    /// Index of the entry covering a diagnostic, if any.
+    pub fn find(&self, rule: &str, path: &str, line: u32) -> Option<usize> {
+        self.entries
+            .iter()
+            .position(|e| e.rule == rule && e.path == path && e.line == line)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "# finger lint baseline — shrink-only: entries may be removed (by fixing or\n\
+             # inline-waiving the site), never added. Format: RULE path:line reason\n",
+        );
+        for e in &self.entries {
+            out.push_str(&format!("{} {}:{} {}\n", e.rule, e.path, e.line, e.reason));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_entries_and_comments() {
+        let text = "# header\n\
+                    \n\
+                    FL001 rust/src/net/x.rs:12 cold-start only\n\
+                    FL003 rust/src/a.rs:3 exact sentinel\n";
+        let b = Baseline::parse(text).unwrap();
+        assert_eq!(b.entries.len(), 2);
+        assert_eq!(b.find("FL001", "rust/src/net/x.rs", 12), Some(0));
+        assert_eq!(b.find("FL001", "rust/src/net/x.rs", 13), None);
+        assert_eq!(b.entries[1].reason, "exact sentinel");
+    }
+
+    #[test]
+    fn rejects_entries_without_reason() {
+        assert!(Baseline::parse("FL001 rust/src/net/x.rs:12\n").is_err());
+        assert!(Baseline::parse("FL001 rust/src/net/x.rs:12   \n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_rule_or_site() {
+        assert!(Baseline::parse("FLX01 a.rs:1 reason\n").is_err());
+        assert!(Baseline::parse("FL001 a.rs reason\n").is_err());
+        assert!(Baseline::parse("FL001 a.rs:zz reason\n").is_err());
+    }
+
+    #[test]
+    fn render_round_trips() {
+        let text = "FL002 rust/src/entropy/x.rs:9 carried from before the hot marker\n";
+        let b = Baseline::parse(text).unwrap();
+        let again = Baseline::parse(&b.render()).unwrap();
+        assert_eq!(again.entries.len(), 1);
+        assert_eq!(again.entries[0].line, 9);
+    }
+}

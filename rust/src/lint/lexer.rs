@@ -1,0 +1,457 @@
+//! A small hand-rolled Rust lexer — just enough fidelity for the `finger
+//! lint` rules: cooked/raw/byte strings, char-literal vs. lifetime
+//! disambiguation, nested block comments, float vs. integer literals and
+//! multi-character operators, with 1-based line/column tracking.
+//!
+//! The lexer is deliberately forgiving: it never panics on arbitrary input
+//! (see the property test in `tests/lint_integration.rs`) and only reports an
+//! error for constructs it cannot find the end of (unterminated strings,
+//! char literals and block comments). Everything else — including invalid
+//! Rust — tokenizes to *something*, which is all the rule engine needs.
+
+/// Token classification. `Punct` covers operators and delimiters; multi-char
+/// operators (`==`, `!=`, `::`, `->`, …) lex as a single token so rules can
+/// match on exact operator text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenKind {
+    Ident,
+    Lifetime,
+    Int,
+    Float,
+    Str,
+    Char,
+    LineComment,
+    BlockComment,
+    Punct,
+}
+
+/// A token: byte span into the source plus the 1-based line/column where it
+/// starts (columns count bytes, matching rustc's default for ASCII source).
+#[derive(Debug, Clone, Copy)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub start: usize,
+    pub end: usize,
+    pub line: u32,
+    pub col: u32,
+}
+
+impl Token {
+    /// The token's text. Spans always fall on char boundaries by
+    /// construction, but slice defensively anyway.
+    pub fn text<'a>(&self, src: &'a str) -> &'a str {
+        src.get(self.start..self.end).unwrap_or("")
+    }
+}
+
+/// The only lexer failure mode: a construct with no terminator before EOF.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LexError {
+    pub what: &'static str,
+    pub line: u32,
+}
+
+impl std::fmt::Display for LexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "unterminated {} starting on line {}", self.what, self.line)
+    }
+}
+
+impl std::error::Error for LexError {}
+
+const THREE_BYTE_OPS: &[&[u8]] = &[b"<<=", b">>=", b"..=", b"..."];
+const TWO_BYTE_OPS: &[&[u8]] = &[
+    b"::", b"->", b"=>", b"==", b"!=", b"<=", b">=", b"&&", b"||", b"<<", b">>", b"+=", b"-=",
+    b"*=", b"/=", b"%=", b"^=", b"&=", b"|=", b"..",
+];
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_' || c >= 0x80
+}
+
+fn is_ident_continue(c: u8) -> bool {
+    is_ident_start(c) || c.is_ascii_digit()
+}
+
+/// True when the single char starting at `b[j]` is immediately followed by a
+/// closing quote — i.e. `'x'` is a char literal, not the lifetime `'x`.
+fn char_closes(b: &[u8], j: usize) -> bool {
+    let c = match b.get(j) {
+        Some(&c) => c,
+        None => return false,
+    };
+    let len = if c < 0x80 {
+        1
+    } else if c < 0xE0 {
+        2
+    } else if c < 0xF0 {
+        3
+    } else {
+        4
+    };
+    b.get(j + len) == Some(&b'\'')
+}
+
+/// True when `b[j..]` is `#`* followed by `"` — distinguishes the raw string
+/// `r#"…"#` from the raw identifier `r#fn`.
+fn raw_follows(b: &[u8], mut j: usize) -> bool {
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == b'"'
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    col: u32,
+    toks: Vec<Token>,
+}
+
+impl Lexer<'_> {
+    fn peek(&self, k: usize) -> u8 {
+        self.b.get(self.i + k).copied().unwrap_or(0)
+    }
+
+    fn bump(&mut self) {
+        if let Some(&c) = self.b.get(self.i) {
+            self.i += 1;
+            if c == b'\n' {
+                self.line += 1;
+                self.col = 1;
+            } else {
+                self.col += 1;
+            }
+        }
+    }
+
+    fn push(&mut self, kind: TokenKind, start: usize, line: u32, col: u32) {
+        self.toks.push(Token { kind, start, end: self.i, line, col });
+    }
+
+    fn block_comment(&mut self, start: usize, line: u32, col: u32) -> Result<(), LexError> {
+        self.bump();
+        self.bump();
+        let mut depth = 1u32;
+        while depth > 0 {
+            if self.i >= self.b.len() {
+                return Err(LexError { what: "block comment", line });
+            }
+            if self.peek(0) == b'/' && self.peek(1) == b'*' {
+                self.bump();
+                self.bump();
+                depth += 1;
+            } else if self.peek(0) == b'*' && self.peek(1) == b'/' {
+                self.bump();
+                self.bump();
+                depth -= 1;
+            } else {
+                self.bump();
+            }
+        }
+        self.push(TokenKind::BlockComment, start, line, col);
+        Ok(())
+    }
+
+    /// Cooked string; a leading `b` prefix, if any, was consumed by the
+    /// caller and `self.i` sits on the opening quote.
+    fn string(&mut self, start: usize, line: u32, col: u32) -> Result<(), LexError> {
+        self.bump();
+        loop {
+            if self.i >= self.b.len() {
+                return Err(LexError { what: "string", line });
+            }
+            match self.peek(0) {
+                b'\\' => {
+                    self.bump();
+                    self.bump();
+                }
+                b'"' => {
+                    self.bump();
+                    break;
+                }
+                _ => self.bump(),
+            }
+        }
+        self.push(TokenKind::Str, start, line, col);
+        Ok(())
+    }
+
+    /// Raw string starting at the `r`/`br` prefix.
+    fn raw_string(&mut self, start: usize, line: u32, col: u32) -> Result<(), LexError> {
+        while matches!(self.peek(0), b'r' | b'b') {
+            self.bump();
+        }
+        let mut hashes = 0usize;
+        while self.peek(0) == b'#' {
+            hashes += 1;
+            self.bump();
+        }
+        self.bump(); // opening quote
+        loop {
+            if self.i >= self.b.len() {
+                return Err(LexError { what: "raw string", line });
+            }
+            if self.peek(0) == b'"' {
+                self.bump();
+                let mut seen = 0usize;
+                while seen < hashes && self.peek(0) == b'#' {
+                    self.bump();
+                    seen += 1;
+                }
+                if seen == hashes {
+                    break;
+                }
+            } else {
+                self.bump();
+            }
+        }
+        self.push(TokenKind::Str, start, line, col);
+        Ok(())
+    }
+
+    /// `self.i` sits on a `'`: either a char literal or a lifetime.
+    fn char_or_lifetime(&mut self, start: usize, line: u32, col: u32) -> Result<(), LexError> {
+        self.bump(); // opening quote
+        let c = self.peek(0);
+        if is_ident_start(c) && c != b'\\' && !char_closes(self.b, self.i) {
+            self.bump();
+            while is_ident_continue(self.peek(0)) {
+                self.bump();
+            }
+            self.push(TokenKind::Lifetime, start, line, col);
+            return Ok(());
+        }
+        if c == b'\\' {
+            self.bump();
+            self.bump();
+        }
+        while self.i < self.b.len() && self.peek(0) != b'\'' {
+            if self.peek(0) == b'\n' {
+                return Err(LexError { what: "char literal", line });
+            }
+            self.bump();
+        }
+        if self.i >= self.b.len() {
+            return Err(LexError { what: "char literal", line });
+        }
+        self.bump(); // closing quote
+        self.push(TokenKind::Char, start, line, col);
+        Ok(())
+    }
+
+    fn number(&mut self, start: usize, line: u32, col: u32) {
+        let mut kind = TokenKind::Int;
+        if self.peek(0) == b'0' && matches!(self.peek(1), b'x' | b'o' | b'b') {
+            self.bump();
+            self.bump();
+            while self.peek(0).is_ascii_hexdigit() || self.peek(0) == b'_' {
+                self.bump();
+            }
+        } else {
+            while self.peek(0).is_ascii_digit() || self.peek(0) == b'_' {
+                self.bump();
+            }
+            if self.peek(0) == b'.' && self.peek(1).is_ascii_digit() {
+                kind = TokenKind::Float;
+                self.bump();
+                while self.peek(0).is_ascii_digit() || self.peek(0) == b'_' {
+                    self.bump();
+                }
+            } else if self.peek(0) == b'.' && self.peek(1) != b'.' && !is_ident_start(self.peek(1))
+            {
+                // trailing-dot float like `1.`
+                kind = TokenKind::Float;
+                self.bump();
+            }
+            let exp_digits = self.peek(1).is_ascii_digit()
+                || (matches!(self.peek(1), b'+' | b'-') && self.peek(2).is_ascii_digit());
+            if matches!(self.peek(0), b'e' | b'E') && exp_digits {
+                kind = TokenKind::Float;
+                self.bump();
+                self.bump();
+                while self.peek(0).is_ascii_digit() || self.peek(0) == b'_' {
+                    self.bump();
+                }
+            }
+        }
+        // type suffix (`f64`, `u32`, …): an `f` prefix forces float
+        if is_ident_start(self.peek(0)) {
+            let sfx = self.i;
+            while is_ident_continue(self.peek(0)) {
+                self.bump();
+            }
+            if self.b.get(sfx) == Some(&b'f') {
+                kind = TokenKind::Float;
+            }
+        }
+        self.push(kind, start, line, col);
+    }
+
+    fn punct(&mut self, start: usize, line: u32, col: u32) {
+        let rest = &self.b[self.i..];
+        let mut n = 1usize;
+        if THREE_BYTE_OPS.iter().any(|op| rest.starts_with(op)) {
+            n = 3;
+        } else if TWO_BYTE_OPS.iter().any(|op| rest.starts_with(op)) {
+            n = 2;
+        }
+        for _ in 0..n {
+            self.bump();
+        }
+        self.push(TokenKind::Punct, start, line, col);
+    }
+}
+
+/// Tokenize `src`. Comments are kept as tokens (the rule engine reads region
+/// markers and waivers out of them); whitespace is dropped.
+pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
+    let mut lx = Lexer { b: src.as_bytes(), i: 0, line: 1, col: 1, toks: Vec::new() };
+    while lx.i < lx.b.len() {
+        let (start, line, col) = (lx.i, lx.line, lx.col);
+        let c = lx.peek(0);
+        if c.is_ascii_whitespace() {
+            lx.bump();
+        } else if c == b'/' && lx.peek(1) == b'/' {
+            while lx.i < lx.b.len() && lx.peek(0) != b'\n' {
+                lx.bump();
+            }
+            lx.push(TokenKind::LineComment, start, line, col);
+        } else if c == b'/' && lx.peek(1) == b'*' {
+            lx.block_comment(start, line, col)?;
+        } else if c == b'r'
+            && (lx.peek(1) == b'"' || (lx.peek(1) == b'#' && raw_follows(lx.b, lx.i + 1)))
+        {
+            lx.raw_string(start, line, col)?;
+        } else if c == b'b'
+            && lx.peek(1) == b'r'
+            && (lx.peek(2) == b'"' || (lx.peek(2) == b'#' && raw_follows(lx.b, lx.i + 2)))
+        {
+            lx.raw_string(start, line, col)?;
+        } else if c == b'b' && lx.peek(1) == b'"' {
+            lx.bump();
+            lx.string(start, line, col)?;
+        } else if c == b'b' && lx.peek(1) == b'\'' {
+            lx.bump();
+            lx.char_or_lifetime(start, line, col)?;
+        } else if is_ident_start(c) {
+            while is_ident_continue(lx.peek(0)) {
+                lx.bump();
+            }
+            lx.push(TokenKind::Ident, start, line, col);
+        } else if c.is_ascii_digit() {
+            lx.number(start, line, col);
+        } else if c == b'"' {
+            lx.string(start, line, col)?;
+        } else if c == b'\'' {
+            lx.char_or_lifetime(start, line, col)?;
+        } else {
+            lx.punct(start, line, col);
+        }
+    }
+    Ok(lx.toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds_and_texts(src: &str) -> Vec<(TokenKind, String)> {
+        lex(src)
+            .unwrap()
+            .into_iter()
+            .map(|t| (t.kind, t.text(src).to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn operators_lex_as_single_tokens() {
+        let got = kinds_and_texts("a == b != c -> d :: e");
+        let texts: Vec<&str> = got.iter().map(|(_, s)| s.as_str()).collect();
+        assert_eq!(texts, ["a", "==", "b", "!=", "c", "->", "d", "::", "e"]);
+    }
+
+    #[test]
+    fn float_vs_int_vs_range() {
+        let got = kinds_and_texts("0..10 1.5 2. 3e4 5f64 6u32 0xAF 1_000");
+        let expect = [
+            (TokenKind::Int, "0"),
+            (TokenKind::Punct, ".."),
+            (TokenKind::Int, "10"),
+            (TokenKind::Float, "1.5"),
+            (TokenKind::Float, "2."),
+            (TokenKind::Float, "3e4"),
+            (TokenKind::Float, "5f64"),
+            (TokenKind::Int, "6u32"),
+            (TokenKind::Int, "0xAF"),
+            (TokenKind::Int, "1_000"),
+        ];
+        assert_eq!(got.len(), expect.len());
+        for ((gk, gs), (ek, es)) in got.iter().zip(expect.iter()) {
+            assert_eq!((gk, gs.as_str()), (ek, *es));
+        }
+    }
+
+    #[test]
+    fn method_call_on_int_is_not_a_float() {
+        let got = kinds_and_texts("1.max(2)");
+        assert_eq!(got[0], (TokenKind::Int, "1".to_string()));
+        assert_eq!(got[2], (TokenKind::Ident, "max".to_string()));
+    }
+
+    #[test]
+    fn lifetime_vs_char_literal() {
+        let got = kinds_and_texts("'a 'static '_ 'x' '\\n' b'z'");
+        let expect = [
+            (TokenKind::Lifetime, "'a"),
+            (TokenKind::Lifetime, "'static"),
+            (TokenKind::Lifetime, "'_"),
+            (TokenKind::Char, "'x'"),
+            (TokenKind::Char, "'\\n'"),
+            (TokenKind::Char, "b'z'"),
+        ];
+        assert_eq!(got.len(), expect.len());
+        for ((gk, gs), (ek, es)) in got.iter().zip(expect.iter()) {
+            assert_eq!((gk, gs.as_str()), (ek, *es));
+        }
+    }
+
+    #[test]
+    fn strings_raw_strings_and_escapes() {
+        let got = kinds_and_texts(r####"  "a \" b"  r"raw"  r#"has "quotes""#  b"bytes"  "####);
+        assert_eq!(got.len(), 4);
+        assert!(got.iter().all(|(k, _)| *k == TokenKind::Str));
+        assert_eq!(got[2].1, r###"r#"has "quotes""#"###);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let got = kinds_and_texts("/* outer /* inner */ still */ x");
+        assert_eq!(got[0].0, TokenKind::BlockComment);
+        assert_eq!(got[1], (TokenKind::Ident, "x".to_string()));
+    }
+
+    #[test]
+    fn line_and_column_tracking() {
+        let toks = lex("ab\n  cd\n").unwrap();
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[1].line, toks[1].col), (2, 3));
+    }
+
+    #[test]
+    fn unterminated_string_is_an_error_not_a_panic() {
+        assert!(lex("let s = \"oops").is_err());
+        assert!(lex("/* never closed").is_err());
+        assert!(lex("let c = '").is_err());
+    }
+
+    #[test]
+    fn raw_identifier_is_not_a_raw_string() {
+        let got = kinds_and_texts("r#fn");
+        // lexes as `r`, `#`, `fn` — good enough for the rules, and crucially
+        // not swallowed as an unterminated raw string
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0], (TokenKind::Ident, "r".to_string()));
+    }
+}

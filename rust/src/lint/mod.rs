@@ -1,0 +1,296 @@
+//! `finger lint` — a first-party, dependency-free invariant lint over the
+//! crate's own source (see `docs/LINTS.md` for the rule catalogue).
+//!
+//! The repo's load-bearing guarantees — bit-for-bit score identity across
+//! layers, zero allocations per steady-state window, bounded-channel
+//! backpressure, panic-free shard workers — were previously enforced only
+//! dynamically (the bench's counting allocator, the tests that happen to
+//! exercise a path). This pass makes them static and blocking: a hand-rolled
+//! lexer ([`lexer`]) feeds a per-file model ([`model`]) and a rule engine
+//! ([`rules`], FL001–FL005) emitting rustc-style `file:line:col` diagnostics.
+//!
+//! Escape hatches, in preference order: fix the code; an inline waiver
+//! comment naming the rule and a written reason on (or the line above) the
+//! offending line (see `docs/LINTS.md` for the grammar — spelling it out
+//! here would itself parse as a waiver); or an entry in the shrink-only
+//! baseline file ([`baseline`]).
+
+pub mod baseline;
+pub mod lexer;
+pub mod model;
+pub mod rules;
+
+pub use baseline::Baseline;
+pub use model::FileModel;
+pub use rules::RULES;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Directories scanned, relative to the repo root. The vendored crate under
+/// `rust/vendor/` is third-party code and deliberately out of scope, as are
+/// test fixture files (seeded violations live under a `fixtures/` dir).
+pub const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// A finding that survived waivers and the baseline (or an `FL000` meta
+/// problem: lexer failure / malformed waiver — those have no escape hatch).
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub rule: String,
+    pub path: String,
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}:{}: {}: {}", self.path, self.line, self.col, self.rule, self.message)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LintOptions {
+    /// Repo root the scan roots hang off.
+    pub root: PathBuf,
+    /// Baseline file; relative paths resolve against `root`.
+    pub baseline: Option<PathBuf>,
+    /// Exit non-zero on surviving findings (CI mode).
+    pub deny: bool,
+}
+
+impl LintOptions {
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        LintOptions {
+            root: root.into(),
+            baseline: Some(PathBuf::from("lint-baseline.txt")),
+            deny: false,
+        }
+    }
+
+    /// Read the `[lint]` config section (`baseline`, `deny`).
+    pub fn from_config(config: &crate::cli::Config) -> Self {
+        let mut opts = LintOptions::new(".");
+        if let Some(p) = config.get("lint.baseline") {
+            opts.baseline = Some(PathBuf::from(p));
+        }
+        opts.deny = config.get_bool("lint.deny", false);
+        opts
+    }
+}
+
+pub struct LintReport {
+    /// Surviving diagnostics, in (file, line, col) order.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Findings suppressed by inline waivers.
+    pub waived: usize,
+    /// Findings suppressed by the baseline.
+    pub baselined: usize,
+    /// Baseline entries that matched nothing — stale, remove them.
+    pub stale_baseline: Vec<String>,
+    /// Files scanned.
+    pub files: usize,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "finger lint: {} finding(s), {} waived, {} baselined, {} file(s) scanned",
+            self.diagnostics.len(),
+            self.waived,
+            self.baselined,
+            self.files
+        )
+    }
+}
+
+/// Recursively collect `.rs` files under the scan roots, sorted for stable
+/// diagnostic order. Directories named `fixtures` are skipped (seeded lint
+/// violations for the golden tests live there).
+pub fn collect_files(root: &Path) -> Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+            .with_context(|| format!("read dir {}", dir.display()))?
+            .map(|e| e.map(|e| e.path()))
+            .collect::<std::io::Result<_>>()?;
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                if p.file_name().is_some_and(|n| n == "fixtures") {
+                    continue;
+                }
+                walk(&p, out)?;
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk(&dir, &mut out)?;
+        }
+    }
+    Ok(out)
+}
+
+/// Lint one source string under a path label (the label drives the
+/// directory-scoped rules, so fixture tests can pretend to live anywhere).
+/// Returns surviving diagnostics plus the count of waived findings. Never
+/// fails: lexer errors and malformed waivers surface as `FL000` diagnostics.
+pub fn lint_source(path_label: &str, src: String) -> (Vec<Diagnostic>, usize) {
+    let model = match FileModel::build(path_label, src) {
+        Ok(m) => m,
+        Err(e) => {
+            let d = Diagnostic {
+                rule: "FL000".to_string(),
+                path: path_label.replace('\\', "/"),
+                line: e.line,
+                col: 1,
+                message: format!("lexer: {e}"),
+            };
+            return (vec![d], 0);
+        }
+    };
+    let mut out = Vec::new();
+    for (line, msg) in &model.malformed {
+        out.push(Diagnostic {
+            rule: "FL000".to_string(),
+            path: model.path.clone(),
+            line: *line,
+            col: 1,
+            message: format!("malformed waiver: {msg}"),
+        });
+    }
+    let mut waived = 0usize;
+    for f in rules::check_file(&model) {
+        if model.waived(f.line, f.rule) {
+            waived += 1;
+            continue;
+        }
+        out.push(Diagnostic {
+            rule: f.rule.to_string(),
+            path: model.path.clone(),
+            line: f.line,
+            col: f.col,
+            message: f.message,
+        });
+    }
+    out.sort_by(|a, b| (a.line, a.col, &a.rule).cmp(&(b.line, b.col, &b.rule)));
+    (out, waived)
+}
+
+fn resolve_baseline(opts: &LintOptions) -> Option<PathBuf> {
+    opts.baseline.as_ref().map(|p| {
+        if p.is_absolute() {
+            p.clone()
+        } else {
+            opts.root.join(p)
+        }
+    })
+}
+
+/// Run the full pass over the repo at `opts.root`.
+pub fn run(opts: &LintOptions) -> Result<LintReport> {
+    let files = collect_files(&opts.root)?;
+    let base = match resolve_baseline(opts) {
+        Some(p) => Baseline::load(&p)?,
+        None => Baseline::default(),
+    };
+    let mut used = vec![false; base.entries.len()];
+    let mut diagnostics = Vec::new();
+    let mut waived = 0usize;
+    let mut baselined = 0usize;
+    for path in &files {
+        let rel = path.strip_prefix(&opts.root).unwrap_or(path);
+        let label = rel.to_string_lossy().replace('\\', "/");
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let (diags, w) = lint_source(&label, src);
+        waived += w;
+        for d in diags {
+            if d.rule != "FL000" {
+                if let Some(i) = base.find(&d.rule, &d.path, d.line) {
+                    used[i] = true;
+                    baselined += 1;
+                    continue;
+                }
+            }
+            diagnostics.push(d);
+        }
+    }
+    let stale_baseline = base
+        .entries
+        .iter()
+        .zip(&used)
+        .filter(|(_, &u)| !u)
+        .map(|(e, _)| format!("{} {}:{} {}", e.rule, e.path, e.line, e.reason))
+        .collect();
+    Ok(LintReport { diagnostics, waived, baselined, stale_baseline, files: files.len() })
+}
+
+/// Render surviving diagnostics as a baseline file (for `--write-baseline`
+/// when first adopting the lint on a branch with pre-existing findings).
+pub fn render_as_baseline(diags: &[Diagnostic]) -> String {
+    let entries = diags
+        .iter()
+        .filter(|d| d.rule != "FL000")
+        .map(|d| baseline::BaselineEntry {
+            rule: d.rule.clone(),
+            path: d.path.clone(),
+            line: d.line,
+            reason: "carried over at lint introduction; fix or justify".to_string(),
+        })
+        .collect();
+    Baseline { entries }.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lint_source_applies_waivers() {
+        let src = "// finger-lint: allow(FL004): rendezvous reply, one message\n\
+                   fn f() { let _ = channel::<u32>(); }\n\
+                   fn g() { let _ = channel::<u32>(); }\n";
+        let (diags, waived) = lint_source("rust/src/service/x.rs", src.to_string());
+        assert_eq!(waived, 1, "line-2 use is covered by the waiver");
+        assert_eq!(diags.len(), 1, "line-3 use is not");
+        assert_eq!((diags[0].rule.as_str(), diags[0].line), ("FL004", 3));
+    }
+
+    #[test]
+    fn malformed_waiver_is_fl000() {
+        let src = "// finger-lint: allow(FL001)\nfn f() {}\n";
+        let (diags, _) = lint_source("rust/src/a.rs", src.to_string());
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "FL000");
+    }
+
+    #[test]
+    fn lexer_error_is_fl000_not_a_crash() {
+        let (diags, _) = lint_source("rust/src/a.rs", "let s = \"oops".to_string());
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, "FL000");
+        assert!(diags[0].message.contains("unterminated"));
+    }
+
+    #[test]
+    fn diagnostic_display_is_rustc_style() {
+        let d = Diagnostic {
+            rule: "FL001".to_string(),
+            path: "rust/src/net/server.rs".to_string(),
+            line: 12,
+            col: 9,
+            message: "boom".to_string(),
+        };
+        assert_eq!(d.to_string(), "rust/src/net/server.rs:12:9: FL001: boom");
+    }
+}

@@ -1,0 +1,399 @@
+//! Per-file analysis layered on the token stream: which tokens are test-only
+//! code (`#[cfg(test)]` items, `#[test]` fns, `mod tests` blocks), which sit
+//! inside a hot-path region marker, which lines carry waivers, and which
+//! functions in the file declare a bare `f64`/`f32` return type (the FL003
+//! float-call registry).
+
+use super::lexer::{lex, LexError, Token, TokenKind};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Region marker comment: a line comment containing this needle opens a
+/// hot-path region; the same needle followed by `end` closes it.
+pub const HOT_MARKER: &str = "lint: hot-path";
+/// Waiver comments start with this needle (anywhere in a line comment).
+pub const WAIVER_MARKER: &str = "finger-lint";
+
+/// Everything the rules need to know about one source file.
+pub struct FileModel {
+    /// Normalized path label (forward slashes) used in diagnostics.
+    pub path: String,
+    pub src: String,
+    /// All tokens, comments included.
+    pub tokens: Vec<Token>,
+    /// Indices into `tokens` of non-comment tokens (the "code view").
+    pub code: Vec<usize>,
+    /// Per code-view position: token is inside test-only code.
+    pub is_test: Vec<bool>,
+    /// Per code-view position: token is inside a hot-path region.
+    pub in_hot: Vec<bool>,
+    /// line number -> rule ids waived on that line (a waiver covers its own
+    /// line and the next, so it works trailing or standalone-above).
+    pub waivers: BTreeMap<u32, BTreeSet<String>>,
+    /// Waiver comments that failed to parse: (line, problem).
+    pub malformed: Vec<(u32, String)>,
+    /// Functions declared in this file returning a bare `f64` / `f32`.
+    pub float_fns: BTreeSet<String>,
+}
+
+/// A borrowed, index-safe view over the code tokens. Out-of-range lookups
+/// (including `k.wrapping_sub(1)` at position 0) return `""` / `None` so
+/// rule code never needs bounds arithmetic.
+pub struct CodeView<'a> {
+    pub src: &'a str,
+    pub tokens: &'a [Token],
+    pub code: &'a [usize],
+}
+
+impl CodeView<'_> {
+    pub fn len(&self) -> usize {
+        self.code.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.code.is_empty()
+    }
+
+    pub fn tok(&self, k: usize) -> Option<&Token> {
+        self.code.get(k).and_then(|&i| self.tokens.get(i))
+    }
+
+    pub fn text(&self, k: usize) -> &str {
+        self.tok(k).map(|t| t.text(self.src)).unwrap_or("")
+    }
+
+    pub fn kind(&self, k: usize) -> Option<TokenKind> {
+        self.tok(k).map(|t| t.kind)
+    }
+}
+
+impl FileModel {
+    pub fn build(path: &str, src: String) -> Result<FileModel, LexError> {
+        let tokens = lex(&src)?;
+        let code: Vec<usize> = tokens
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| {
+                !matches!(t.kind, TokenKind::LineComment | TokenKind::BlockComment)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        let (in_hot, waivers, malformed) = analyze_comments(&src, &tokens);
+        let view = CodeView { src: &src, tokens: &tokens, code: &code };
+        let is_test = analyze_test_regions(&view);
+        let float_fns = analyze_float_fns(&view);
+        Ok(FileModel {
+            path: path.replace('\\', "/"),
+            src,
+            tokens,
+            code,
+            is_test,
+            in_hot,
+            waivers,
+            malformed,
+            float_fns,
+        })
+    }
+
+    pub fn view(&self) -> CodeView<'_> {
+        CodeView { src: &self.src, tokens: &self.tokens, code: &self.code }
+    }
+
+    /// Is `rule` waived on `line`?
+    pub fn waived(&self, line: u32, rule: &str) -> bool {
+        self.waivers.get(&line).is_some_and(|s| s.contains(rule))
+    }
+}
+
+type CommentAnalysis = (Vec<bool>, BTreeMap<u32, BTreeSet<String>>, Vec<(u32, String)>);
+
+/// Single pass over all tokens: hot-path region tracking (per code-view
+/// position) plus waiver extraction from line comments.
+fn analyze_comments(src: &str, tokens: &[Token]) -> CommentAnalysis {
+    let mut hot = false;
+    let mut in_hot = Vec::new();
+    let mut waivers: BTreeMap<u32, BTreeSet<String>> = BTreeMap::new();
+    let mut malformed = Vec::new();
+    for t in tokens {
+        match t.kind {
+            TokenKind::LineComment => {
+                let text = t.text(src);
+                if let Some(p) = text.find(HOT_MARKER) {
+                    hot = !text[p + HOT_MARKER.len()..].contains("end");
+                }
+                if let Some(p) = text.find(WAIVER_MARKER) {
+                    match parse_waiver(&text[p..]) {
+                        Ok(rules) => {
+                            for r in rules {
+                                waivers.entry(t.line).or_default().insert(r.clone());
+                                waivers.entry(t.line + 1).or_default().insert(r);
+                            }
+                        }
+                        Err(msg) => malformed.push((t.line, msg)),
+                    }
+                }
+            }
+            TokenKind::BlockComment => {}
+            _ => in_hot.push(hot),
+        }
+    }
+    (in_hot, waivers, malformed)
+}
+
+/// Parse a waiver starting at the marker needle. The grammar after the
+/// marker is `: allow(<rule>[, <rule>…]): <non-empty reason>`, where each
+/// rule id is two letters + three digits (FL001, FL002, …).
+fn parse_waiver(s: &str) -> Result<Vec<String>, String> {
+    let s = s.strip_prefix(WAIVER_MARKER).unwrap_or(s);
+    let s = s
+        .trim_start()
+        .strip_prefix(':')
+        .ok_or_else(|| "expected `:` after `finger-lint`".to_string())?;
+    let s = s
+        .trim_start()
+        .strip_prefix("allow")
+        .ok_or_else(|| "expected `allow(...)`".to_string())?;
+    let s = s
+        .trim_start()
+        .strip_prefix('(')
+        .ok_or_else(|| "expected `(` after `allow`".to_string())?;
+    let (ids, rest) = s.split_once(')').ok_or_else(|| "unclosed `allow(`".to_string())?;
+    let rest = rest
+        .trim_start()
+        .strip_prefix(':')
+        .ok_or_else(|| "waiver missing `: reason`".to_string())?;
+    if rest.trim().is_empty() {
+        return Err("waiver missing reason".to_string());
+    }
+    let mut rules = Vec::new();
+    for id in ids.split(',') {
+        let id = id.trim();
+        let b = id.as_bytes();
+        let well_formed = b.len() == 5
+            && b[0] == b'F'
+            && b[1] == b'L'
+            && b[2..].iter().all(u8::is_ascii_digit);
+        if !well_formed {
+            return Err(format!("malformed rule id `{id}`"));
+        }
+        rules.push(id.to_string());
+    }
+    if rules.is_empty() {
+        return Err("empty rule list".to_string());
+    }
+    Ok(rules)
+}
+
+/// Mark code-view tokens that live inside test-only regions: items carrying
+/// `#[test]` / `#[cfg(test)]` / `#[cfg_attr(…, test, …)]` attributes and
+/// `mod tests`-style inline modules. Regions attach to the next `{ … }`
+/// block; a `;` at bracket depth 0 before any `{` cancels the attachment
+/// (attributed `use` items, out-of-line mods).
+fn analyze_test_regions(v: &CodeView) -> Vec<bool> {
+    let n = v.len();
+    let mut is_test = vec![false; n];
+    let mut depth: u32 = 0;
+    let mut pdepth: u32 = 0;
+    let mut close_at: Vec<u32> = Vec::new();
+    let mut pending = false;
+    let mut k = 0;
+    while k < n {
+        let active = !close_at.is_empty();
+        let tx = v.text(k);
+        if tx == "#" && v.text(k + 1) == "[" {
+            // scan the attribute, collecting idents
+            let mut j = k + 2;
+            let mut bdepth = 1i32;
+            let mut first: Option<&str> = None;
+            let mut has_test = false;
+            while j < n && bdepth > 0 {
+                let tj = v.text(j);
+                match tj {
+                    "[" => bdepth += 1,
+                    "]" => bdepth -= 1,
+                    _ => {
+                        if v.kind(j) == Some(TokenKind::Ident) {
+                            if first.is_none() {
+                                first = Some(tj);
+                            }
+                            if tj == "test" {
+                                has_test = true;
+                            }
+                        }
+                    }
+                }
+                j += 1;
+            }
+            let is_test_attr = match first {
+                Some("test") => true,
+                Some("cfg") | Some("cfg_attr") => has_test,
+                _ => false,
+            };
+            if is_test_attr {
+                pending = true;
+            }
+            for slot in is_test.iter_mut().take(j.min(n)).skip(k) {
+                *slot = active;
+            }
+            k = j;
+            continue;
+        }
+        if tx == "mod" && v.kind(k + 1) == Some(TokenKind::Ident) {
+            let name = v.text(k + 1);
+            if name == "tests"
+                || name == "test"
+                || name.ends_with("_tests")
+                || name.ends_with("_test")
+            {
+                pending = true;
+            }
+        }
+        match tx {
+            "{" => {
+                depth += 1;
+                if pending {
+                    close_at.push(depth);
+                    pending = false;
+                }
+            }
+            "}" => {
+                if close_at.last() == Some(&depth) {
+                    close_at.pop();
+                }
+                depth = depth.saturating_sub(1);
+            }
+            "(" | "[" => pdepth += 1,
+            ")" | "]" => pdepth = pdepth.saturating_sub(1),
+            ";" if pdepth == 0 => pending = false,
+            _ => {}
+        }
+        is_test[k] = active || !close_at.is_empty();
+        k += 1;
+    }
+    is_test
+}
+
+/// Collect the names of `fn` items whose declared return type is exactly
+/// `f64` or `f32`. Used by FL003 to catch float comparisons routed through
+/// same-file helper calls (e.g. `assert_eq!(score(a), score(b))`).
+fn analyze_float_fns(v: &CodeView) -> BTreeSet<String> {
+    let n = v.len();
+    let mut out = BTreeSet::new();
+    let mut k = 0;
+    while k < n {
+        if v.text(k) == "fn" && v.kind(k + 1) == Some(TokenKind::Ident) {
+            let name = v.text(k + 1).to_string();
+            let mut j = k + 2;
+            let mut pd = 0i32;
+            let mut ret: Vec<&str> = Vec::new();
+            let mut in_ret = false;
+            while j < n {
+                let tx = v.text(j);
+                if tx == "(" || tx == "[" {
+                    pd += 1;
+                } else if tx == ")" || tx == "]" {
+                    pd = (pd - 1).max(0);
+                } else if pd == 0 && (tx == "{" || tx == ";") {
+                    break;
+                } else if pd == 0 && tx == "->" {
+                    in_ret = true;
+                    j += 1;
+                    continue;
+                } else if pd == 0 && tx == "where" {
+                    in_ret = false;
+                }
+                if in_ret {
+                    ret.push(tx);
+                }
+                j += 1;
+            }
+            if ret == ["f64"] || ret == ["f32"] {
+                out.insert(name);
+            }
+            k = j;
+            continue;
+        }
+        k += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(src: &str) -> FileModel {
+        FileModel::build("virtual/test.rs", src.to_string()).unwrap()
+    }
+
+    #[test]
+    fn cfg_test_mod_marks_tokens() {
+        let m = model("fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\n");
+        let v = m.view();
+        let idx_live = (0..v.len()).find(|&k| v.text(k) == "live").unwrap();
+        let idx_t = (0..v.len()).find(|&k| v.text(k) == "t").unwrap();
+        assert!(!m.is_test[idx_live]);
+        assert!(m.is_test[idx_t]);
+    }
+
+    #[test]
+    fn test_attr_fn_marks_body_only() {
+        let m = model("#[test]\nfn check() { body(); }\nfn live() { other(); }\n");
+        let v = m.view();
+        let idx_body = (0..v.len()).find(|&k| v.text(k) == "body").unwrap();
+        let idx_other = (0..v.len()).find(|&k| v.text(k) == "other").unwrap();
+        assert!(m.is_test[idx_body]);
+        assert!(!m.is_test[idx_other]);
+    }
+
+    #[test]
+    fn cfg_test_use_does_not_leak() {
+        let m = model("#[cfg(test)]\nuse std::fmt;\nfn live() { body(); }\n");
+        let v = m.view();
+        let idx_body = (0..v.len()).find(|&k| v.text(k) == "body").unwrap();
+        assert!(!m.is_test[idx_body]);
+    }
+
+    #[test]
+    fn hot_region_markers() {
+        let src = "fn a() { x(); }\n\
+                   // lint: hot-path\n\
+                   fn b() { y(); }\n\
+                   // lint: hot-path end\n\
+                   fn c() { z(); }\n";
+        let m = model(src);
+        let v = m.view();
+        let at = |name: &str| (0..v.len()).find(|&k| v.text(k) == name).unwrap();
+        assert!(!m.in_hot[at("x")]);
+        assert!(m.in_hot[at("y")]);
+        assert!(!m.in_hot[at("z")]);
+    }
+
+    #[test]
+    fn waiver_parses_and_covers_next_line() {
+        let src = "// finger-lint: allow(FL001): guarded by loop bound\nfn f() {}\n";
+        let m = model(src);
+        assert!(m.waived(1, "FL001"));
+        assert!(m.waived(2, "FL001"));
+        assert!(!m.waived(3, "FL001"));
+        assert!(!m.waived(2, "FL002"));
+        assert!(m.malformed.is_empty());
+    }
+
+    #[test]
+    fn waiver_without_reason_is_malformed() {
+        let m = model("// finger-lint: allow(FL001):\nfn f() {}\n");
+        assert_eq!(m.malformed.len(), 1);
+        assert!(m.waivers.is_empty());
+    }
+
+    #[test]
+    fn float_fn_registry() {
+        let src = "pub fn score(a: &G) -> f64 { 0.0 }\n\
+                   fn count() -> usize { 0 }\n\
+                   fn pair() -> (f64, f64) { (0.0, 0.0) }\n";
+        let m = model(src);
+        assert!(m.float_fns.contains("score"));
+        assert!(!m.float_fns.contains("count"));
+        assert!(!m.float_fns.contains("pair"));
+    }
+}

@@ -1,0 +1,414 @@
+//! The FL001–FL005 rule set, evaluated over a [`FileModel`]'s code-token
+//! view. Each rule is a token-pattern check — deliberately syntactic (no type
+//! inference), tuned to this repo's invariants with waivers/baseline as the
+//! escape hatch for the boundary cases a lexer cannot judge.
+
+use super::model::{CodeView, FileModel};
+use crate::lint::lexer::TokenKind;
+
+/// A raw rule hit, before waivers/baseline are applied.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+/// Stable rule ids with the one-line invariant each guards (mirrored in
+/// `docs/LINTS.md`).
+pub const RULES: &[(&str, &str)] = &[
+    ("FL001", "no panic paths (unwrap/expect/panic!/indexing) in service/, net/, stream/"),
+    ("FL002", "no allocating calls inside `// lint: hot-path` regions"),
+    ("FL003", "no `==`/`!=` (or assert_eq!) on float-typed expressions; compare bits"),
+    ("FL004", "no unbounded mpsc::channel() where sync_channel preserves backpressure"),
+    ("FL005", "no `.lock().unwrap()`; use `.lock().expect(\"context\")` or a policy helper"),
+];
+
+/// Rust keywords that can legally precede `[` without it being an indexing
+/// expression (`let [a, b] = ..`, `return [x]`, `in [..]`, …).
+const KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else", "enum",
+    "extern", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut",
+    "pub", "ref", "return", "self", "Self", "static", "struct", "super", "trait", "type",
+    "unsafe", "use", "where", "while", "yield",
+];
+
+/// Method calls that allocate (FL002), matched as `.name(`.
+const ALLOC_METHODS: &[&str] = &["clone", "collect", "to_owned", "to_string", "to_vec"];
+
+/// Macros that allocate (FL002), matched as `name!`.
+const ALLOC_MACROS: &[&str] = &["format", "vec"];
+
+/// Container types whose `::new`/`::from`/`::with_capacity` constructors
+/// count as allocating calls in a hot-path region (FL002).
+const ALLOC_TYPES: &[&str] =
+    &["Box", "BTreeMap", "BTreeSet", "HashMap", "HashSet", "String", "Vec", "VecDeque"];
+
+/// Macros whose invocation panics (FL001).
+const PANIC_MACROS: &[&str] = &["panic", "todo", "unimplemented", "unreachable"];
+
+/// Float-comparing assertion macros (FL003).
+const FLOAT_ASSERT_MACROS: &[&str] =
+    &["assert_eq", "assert_ne", "debug_assert_eq", "debug_assert_ne"];
+
+/// True when `path` (normalized, repo-relative) is inside the panic-free
+/// zone FL001 guards: a shard worker or connection thread panic takes every
+/// session it carries down with it.
+fn in_panic_free_zone(path: &str) -> bool {
+    path.starts_with("rust/src/service/")
+        || path.starts_with("rust/src/net/")
+        || path.starts_with("rust/src/stream/")
+}
+
+/// Whole files that are test/bench-only code: integration tests and benches
+/// are fail-fast by design, so the panic- and channel-hygiene rules skip
+/// them (FL003 still applies — score identity is asserted *in* tests).
+fn is_test_file(path: &str) -> bool {
+    path.starts_with("rust/tests/") || path.starts_with("rust/benches/")
+}
+
+/// Run every rule over one file. Waivers and the baseline are applied by the
+/// runner, not here.
+pub fn check_file(model: &FileModel) -> Vec<Finding> {
+    let v = model.view();
+    let test_file = is_test_file(&model.path);
+    let panic_zone = in_panic_free_zone(&model.path);
+    let mut out = Vec::new();
+    for k in 0..v.len() {
+        let in_test = test_file || model.is_test.get(k).copied().unwrap_or(false);
+        if panic_zone && !in_test {
+            fl001(&v, k, &mut out);
+        }
+        if model.in_hot.get(k).copied().unwrap_or(false) {
+            fl002(&v, k, &mut out);
+        }
+        fl003(&v, k, &model.float_fns, &mut out);
+        if !in_test {
+            fl004(&v, k, &mut out);
+            fl005(&v, k, &mut out);
+        }
+    }
+    out
+}
+
+fn finding(v: &CodeView, k: usize, rule: &'static str, message: String) -> Finding {
+    let (line, col) = v.tok(k).map(|t| (t.line, t.col)).unwrap_or((0, 0));
+    Finding { rule, line, col, message }
+}
+
+fn fl001(v: &CodeView, k: usize, out: &mut Vec<Finding>) {
+    let tx = v.text(k);
+    let prev = v.text(k.wrapping_sub(1));
+    if (tx == "unwrap" || tx == "expect") && prev == "." && v.text(k + 1) == "(" {
+        out.push(finding(
+            v,
+            k,
+            "FL001",
+            format!("`.{tx}()` on a request path can kill a shared worker; propagate an error"),
+        ));
+        return;
+    }
+    if PANIC_MACROS.contains(&tx) && v.text(k + 1) == "!" && prev != "." {
+        out.push(finding(
+            v,
+            k,
+            "FL001",
+            format!("`{tx}!` on a request path can kill a shared worker; return an error instead"),
+        ));
+        return;
+    }
+    if tx == "[" {
+        let is_index = match v.kind(k.wrapping_sub(1)) {
+            Some(TokenKind::Ident) => !KEYWORDS.contains(&prev),
+            Some(TokenKind::Punct) => prev == ")" || prev == "]",
+            _ => false,
+        };
+        if is_index {
+            out.push(finding(
+                v,
+                k,
+                "FL001",
+                "indexing can panic on a request path; use `.get(..)` or waive bounds".to_string(),
+            ));
+        }
+    }
+}
+
+fn fl002(v: &CodeView, k: usize, out: &mut Vec<Finding>) {
+    let tx = v.text(k);
+    let prev = v.text(k.wrapping_sub(1));
+    if ALLOC_METHODS.contains(&tx) && prev == "." && v.text(k + 1) == "(" {
+        out.push(finding(
+            v,
+            k,
+            "FL002",
+            format!("allocating call `.{tx}()` inside a `lint: hot-path` region"),
+        ));
+    } else if ALLOC_MACROS.contains(&tx) && v.text(k + 1) == "!" {
+        out.push(finding(
+            v,
+            k,
+            "FL002",
+            format!("allocating macro `{tx}!` inside a `lint: hot-path` region"),
+        ));
+    } else if ALLOC_TYPES.contains(&tx)
+        && v.text(k + 1) == "::"
+        && matches!(v.text(k + 2), "new" | "from" | "with_capacity")
+    {
+        out.push(finding(
+            v,
+            k,
+            "FL002",
+            format!("allocating constructor `{tx}::{}` in a hot-path region", v.text(k + 2)),
+        ));
+    }
+}
+
+/// Does the operand *ending* at token `k` look float-typed? Either a float
+/// literal, or `ident(..)` where `ident` is a registered `-> f64` fn.
+fn float_operand_ends_at(
+    v: &CodeView,
+    k: usize,
+    float_fns: &std::collections::BTreeSet<String>,
+) -> bool {
+    if v.kind(k) == Some(TokenKind::Float) {
+        return true;
+    }
+    if v.text(k) == ")" {
+        // walk back to the matching `(` and inspect the callee ident
+        let mut depth = 0i32;
+        let mut j = k;
+        loop {
+            match v.text(j) {
+                ")" => depth += 1,
+                "(" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            if j == 0 {
+                return false;
+            }
+            j -= 1;
+        }
+        let callee = v.text(j.wrapping_sub(1));
+        return v.kind(j.wrapping_sub(1)) == Some(TokenKind::Ident) && float_fns.contains(callee);
+    }
+    false
+}
+
+/// Does the operand *starting* at token `k` look float-typed?
+fn float_operand_starts_at(
+    v: &CodeView,
+    k: usize,
+    float_fns: &std::collections::BTreeSet<String>,
+) -> bool {
+    if v.kind(k) == Some(TokenKind::Float) {
+        return true;
+    }
+    if v.text(k) == "-" && v.kind(k + 1) == Some(TokenKind::Float) {
+        return true;
+    }
+    v.kind(k) == Some(TokenKind::Ident) && float_fns.contains(v.text(k)) && v.text(k + 1) == "("
+}
+
+fn fl003(
+    v: &CodeView,
+    k: usize,
+    float_fns: &std::collections::BTreeSet<String>,
+    out: &mut Vec<Finding>,
+) {
+    let tx = v.text(k);
+    if tx == "==" || tx == "!=" {
+        if float_operand_ends_at(v, k.wrapping_sub(1), float_fns)
+            || float_operand_starts_at(v, k + 1, float_fns)
+        {
+            out.push(finding(
+                v,
+                k,
+                "FL003",
+                format!("float `{tx}` breaks bit-exactness; compare `.to_bits()` instead"),
+            ));
+        }
+        return;
+    }
+    if FLOAT_ASSERT_MACROS.contains(&tx) && v.text(k + 1) == "!" && v.text(k + 2) == "(" {
+        // scan the macro arguments for float evidence / a to_bits() escape
+        let mut depth = 1i32;
+        let mut j = k + 3;
+        let mut evidence = false;
+        let mut bits = false;
+        while j < v.len() && depth > 0 {
+            match v.text(j) {
+                "(" => depth += 1,
+                ")" => depth -= 1,
+                "to_bits" => bits = true,
+                t => {
+                    if v.kind(j) == Some(TokenKind::Float)
+                        || (v.kind(j) == Some(TokenKind::Ident)
+                            && float_fns.contains(t)
+                            && v.text(j + 1) == "(")
+                    {
+                        evidence = true;
+                    }
+                }
+            }
+            j += 1;
+        }
+        if evidence && !bits {
+            out.push(finding(
+                v,
+                k,
+                "FL003",
+                format!("`{tx}!` on float args; use `assert_bits_eq!` for bit-exact comparison"),
+            ));
+        }
+    }
+}
+
+fn fl004(v: &CodeView, k: usize, out: &mut Vec<Finding>) {
+    let prev = v.text(k.wrapping_sub(1));
+    // `channel()` or turbofish `channel::<T>()`; a bare `channel` in a `use`
+    // list or a `fn channel` definition is not a call
+    let called = v.text(k + 1) == "(" || (v.text(k + 1) == "::" && v.text(k + 2) == "<");
+    if v.text(k) == "channel" && called && prev != "." && prev != "fn" {
+        out.push(finding(
+            v,
+            k,
+            "FL004",
+            "unbounded `mpsc::channel()`; use `sync_channel` or waive rendezvous".to_string(),
+        ));
+    }
+}
+
+fn fl005(v: &CodeView, k: usize, out: &mut Vec<Finding>) {
+    if v.text(k) == "."
+        && v.text(k + 1) == "lock"
+        && v.text(k + 2) == "("
+        && v.text(k + 3) == ")"
+        && v.text(k + 4) == "."
+        && v.text(k + 5) == "unwrap"
+    {
+        out.push(finding(
+            v,
+            k + 1,
+            "FL005",
+            "`.lock().unwrap()` hides the poisoning policy; spell `.lock().expect(..)`".to_string(),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::model::FileModel;
+
+    fn findings(path: &str, src: &str) -> Vec<(String, u32)> {
+        let model = FileModel::build(path, src.to_string()).unwrap();
+        check_file(&model).into_iter().map(|f| (f.rule.to_string(), f.line)).collect()
+    }
+
+    #[test]
+    fn fl001_flags_unwrap_and_macros_in_zone_only() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\nfn g() { panic!(\"no\"); }\n";
+        let got = findings("rust/src/service/x.rs", src);
+        assert_eq!(got, vec![("FL001".to_string(), 1), ("FL001".to_string(), 2)]);
+        assert!(findings("rust/src/graph/x.rs", src).is_empty(), "outside the zone");
+    }
+
+    #[test]
+    fn fl001_indexing_but_not_attributes_or_array_types() {
+        let src = "#[derive(Debug)]\n\
+                   struct S { a: [u8; 4] }\n\
+                   fn f(v: &[u32], k: usize) -> u32 { v[k] }\n\
+                   fn g() -> [u8; 2] { [1, 2] }\n";
+        let got = findings("rust/src/net/x.rs", src);
+        assert_eq!(got, vec![("FL001".to_string(), 3)]);
+    }
+
+    #[test]
+    fn fl001_skips_test_code() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t(x: Option<u32>) { x.unwrap(); }\n}\n";
+        assert!(findings("rust/src/stream/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn fl002_only_inside_hot_region() {
+        let src = "fn cold() { let _ = vec![1]; }\n\
+                   // lint: hot-path\n\
+                   fn hot(v: &[u32]) -> Vec<u32> { v.to_vec() }\n\
+                   // lint: hot-path end\n\
+                   fn cold2() -> String { format!(\"x\") }\n";
+        let got = findings("rust/src/entropy/x.rs", src);
+        assert_eq!(got, vec![("FL002".to_string(), 3)]);
+    }
+
+    #[test]
+    fn fl002_constructors() {
+        let src = "// lint: hot-path\n\
+                   fn hot() { let v = Vec::with_capacity(4); let b = Box::new(v); }\n\
+                   // lint: hot-path end\n";
+        let got = findings("rust/src/entropy/x.rs", src);
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().all(|(r, _)| r == "FL002"));
+    }
+
+    #[test]
+    fn fl003_operator_on_float_literal_or_registered_fn() {
+        let src = "fn score(x: u32) -> f64 { x as f64 }\n\
+                   fn a(w: f64) -> bool { w == 0.0 }\n\
+                   fn b(x: u32, y: u32) -> bool { score(x) == score(y) }\n\
+                   fn c(x: u32, y: u32) -> bool { x == y }\n\
+                   fn d(x: f64, y: f64) -> bool { x.to_bits() == y.to_bits() }\n";
+        let got = findings("rust/src/distance/x.rs", src);
+        assert_eq!(got, vec![("FL003".to_string(), 2), ("FL003".to_string(), 3)]);
+    }
+
+    #[test]
+    fn fl003_assert_eq_with_float_args() {
+        let src = "fn score() -> f64 { 1.0 }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       #[test]\n\
+                       fn t() {\n\
+                           assert_eq!(super::score(), 1.0);\n\
+                           assert_eq!(super::score().to_bits(), 1.0f64.to_bits());\n\
+                           assert_eq!(1 + 1, 2);\n\
+                       }\n\
+                   }\n";
+        let got = findings("rust/src/distance/x.rs", src);
+        // only the raw float assert_eq! on line 6 (the score() == 1.0 literal
+        // inside it is part of the same macro; to_bits and int asserts pass)
+        assert_eq!(got, vec![("FL003".to_string(), 6)]);
+    }
+
+    #[test]
+    fn fl004_unbounded_channel_but_not_sync_channel() {
+        let src = "use std::sync::mpsc::{channel, sync_channel};\n\
+                   fn f() { let (_a, _b) = channel::<u32>(); }\n\
+                   fn g() { let (_a, _b) = sync_channel::<u32>(1); }\n";
+        let got = findings("rust/src/service/y.rs", src);
+        assert_eq!(got.iter().filter(|(r, _)| r == "FL004").count(), 1);
+    }
+
+    #[test]
+    fn fl005_lock_unwrap_anywhere_non_test() {
+        let src = "fn f(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().unwrap() }\n\
+                   fn g(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().expect(\"poisoned\") }\n";
+        let got = findings("rust/src/runtime/x.rs", src);
+        assert_eq!(got, vec![("FL005".to_string(), 1)]);
+    }
+
+    #[test]
+    fn waivers_are_not_applied_here() {
+        // check_file reports raw findings; the runner subtracts waivers
+        let src = "// finger-lint: allow(FL004): rendezvous\n\
+                   fn f() { let _ = channel::<u32>(); }\n";
+        let got = findings("rust/src/service/z.rs", src);
+        assert_eq!(got.iter().filter(|(r, _)| r == "FL004").count(), 1);
+    }
+}

@@ -16,6 +16,10 @@
 //!   load         replay a multi-tenant workload (dataset presets included)
 //!                against a running `serve` over N concurrent connections
 //!   offload      cross-check the XLA artifact path against native Rust
+//!   lint         run the first-party invariant lint (FL001–FL005) over the
+//!                repo's own source, see docs/LINTS.md
+
+#![allow(clippy::print_stdout)] // stdout is this target's interface
 
 use anyhow::{bail, Context, Result};
 use finger::bench::{self, BenchRecord};
@@ -51,6 +55,7 @@ fn run(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("load") => cmd_load(args),
         Some("offload") => cmd_offload(args),
+        Some("lint") => cmd_lint(args),
         Some(other) => bail!("unknown subcommand `{other}` (try --help)"),
         None => {
             print_help();
@@ -84,8 +89,48 @@ fn print_help() {
                        [--events E] [--nodes N] [--timeout-ms T]\n\
                        [--presets wiki,dos,hic,synthetic] [--seed S]\n\
                        [--bench-out BENCH_net.json] [--config run.toml] [--shutdown]\n\
-           offload     [--artifacts DIR]"
+           offload     [--artifacts DIR]\n\
+           lint        [--root DIR] [--baseline FILE] [--deny] [--write-baseline]\n\
+                       [--config run.toml]   (config section: [lint])"
     );
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    let config = match args.get("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::default(),
+    };
+    let mut opts = finger::lint::LintOptions::from_config(&config);
+    if let Some(root) = args.get("root") {
+        opts.root = root.into();
+    }
+    if let Some(b) = args.get("baseline") {
+        opts.baseline = Some(b.into());
+    }
+    opts.deny = opts.deny || args.flag("deny");
+    let report = finger::lint::run(&opts)?;
+    for d in &report.diagnostics {
+        println!("{d}");
+    }
+    for stale in &report.stale_baseline {
+        eprintln!("note: stale baseline entry (remove it): {stale}");
+    }
+    println!("{}", report.summary());
+    if args.flag("write-baseline") {
+        let path = opts.root.join("lint-baseline.txt");
+        std::fs::write(&path, finger::lint::render_as_baseline(&report.diagnostics))
+            .with_context(|| format!("write {}", path.display()))?;
+        println!(
+            "lint: wrote baseline with {} entries to {}",
+            report.diagnostics.len(),
+            path.display()
+        );
+        return Ok(());
+    }
+    if opts.deny && !report.clean() {
+        bail!("lint failed with {} finding(s) (--deny)", report.diagnostics.len());
+    }
+    Ok(())
 }
 
 fn gen_graph(args: &Args) -> Result<Graph> {

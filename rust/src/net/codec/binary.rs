@@ -236,6 +236,7 @@ impl FrameReader<'_> {
     fn u8(&mut self) -> Result<P<u8>> {
         let mut b = [0u8; 1];
         match self.read_exact(&mut b)? {
+            // finger-lint: allow(FL001): read_exact filled the 1-byte buffer
             ReadExact::Done => Ok(P::Val(b[0])),
             ReadExact::Eof => Err(Error::new(
                 ErrorKind::UnexpectedEof,
@@ -362,6 +363,7 @@ impl Codec for BinaryCodec {
         // frames); every later primitive treats EOF as a truncated frame
         let mut op = [0u8; 1];
         let opcode = match read_exact_polled(r, &mut op, stop)? {
+            // finger-lint: allow(FL001): read_exact filled the 1-byte buffer
             ReadExact::Done => op[0],
             ReadExact::Eof => return Ok(CommandRead::Eof),
             ReadExact::Interrupted => return Ok(CommandRead::Interrupted),
@@ -454,8 +456,10 @@ impl Codec for BinaryCodec {
         // surface as the error the client maps to "read timed out"
         let mut op = [0u8; 1];
         let opcode = match read_exact_deadline(r, &mut op)? {
+            // finger-lint: allow(FL001): read_exact filled the 1-byte buffer
             ReadExact::Done => op[0],
             ReadExact::Eof => return Ok(None),
+            // finger-lint: allow(FL001): deadline reads never return Interrupted
             ReadExact::Interrupted => unreachable!("deadline reads never interrupt"),
         };
         let mut fr = FrameReader { r, mode: ReadMode::Deadline };

@@ -197,6 +197,7 @@ pub fn negotiate(
     let first = loop {
         match r.fill_buf() {
             Ok([]) => return Ok(Negotiated::Eof),
+            // finger-lint: allow(FL001): fill_buf returned a non-empty slice
             Ok(buf) => break buf[0],
             Err(e) => match e.kind() {
                 ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted => {
@@ -217,10 +218,11 @@ pub fn negotiate(
         ReadExact::Eof => return Ok(Negotiated::Eof),
         ReadExact::Interrupted => return Ok(Negotiated::Interrupted),
     }
-    if preamble[1] != BINARY_VERSION {
+    // finger-lint: allow(FL001): const index into a [u8; 2] preamble
+    let version = preamble[1];
+    if version != BINARY_VERSION {
         return Ok(Negotiated::BadPreamble(format!(
-            "unsupported binary version {} (want {BINARY_VERSION})",
-            preamble[1]
+            "unsupported binary version {version} (want {BINARY_VERSION})"
         )));
     }
     Ok(Negotiated::Codec(Box::new(BinaryCodec::new())))
@@ -245,6 +247,7 @@ pub(crate) fn read_exact_polled(
 ) -> std::io::Result<ReadExact> {
     let mut filled = 0;
     while filled < buf.len() {
+        // finger-lint: allow(FL001): filled < buf.len() keeps the range in bounds
         match r.read(&mut buf[filled..]) {
             Ok(0) => {
                 if filled == 0 {
@@ -279,6 +282,7 @@ pub(crate) fn read_exact_deadline(
 ) -> std::io::Result<ReadExact> {
     let mut filled = 0;
     while filled < buf.len() {
+        // finger-lint: allow(FL001): filled < buf.len() keeps the range in bounds
         match r.read(&mut buf[filled..]) {
             Ok(0) => {
                 if filled == 0 {

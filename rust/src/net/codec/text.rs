@@ -411,6 +411,7 @@ mod tests {
             TextCodec::command_lines(&Command::Open { id: "a".into(), nodes: 4 }),
             "OPEN a 4\n"
         );
+        // finger-lint: allow(FL003): compares encoded text; the float args are literals
         assert_eq!(
             TextCodec::command_lines(&Command::Event {
                 id: "tenant/1".into(),

@@ -246,30 +246,34 @@ fn retry_backoff<T>(
 }
 
 /// Submit a batch through the non-blocking path; returns the accepted
-/// event count. Rejected batches are handed back by the service, so
-/// retries never clone the events.
+/// event count. Rejected batches are handed back by the service and rebound
+/// directly (no `Option` shuttle), so retries never clone the events and the
+/// loop has no panic path (FL001).
 fn submit_batch_backoff(
     service: &ScoringService,
     net: &NetConfig,
     shutdown: &ShutdownHandle,
     id: &str,
-    events: Vec<StreamEvent>,
+    mut events: Vec<StreamEvent>,
 ) -> Result<usize, Reply> {
-    let mut pending = Some(events);
-    retry_backoff(net, shutdown, || {
-        match service.try_submit_batch(id, pending.take().expect("pending batch")) {
-            Ok(n) => Backoff::Done(n),
+    loop {
+        match service.try_submit_batch(id, events) {
+            Ok(n) => return Ok(n),
             Err((back, SubmitError::WouldBlock { .. })) => {
-                pending = Some(back);
-                Backoff::Retry
+                if shutdown.is_signaled() {
+                    return Err(Reply::Err("shutting-down".to_string()));
+                }
+                events = back;
+                std::thread::sleep(Duration::from_micros(net.backoff_us));
             }
-            Err((_, e)) => Backoff::Fail(e.to_string()),
+            Err((_, e)) => return Err(Reply::Err(e.to_string())),
         }
-    })
+    }
 }
 
-/// Open a session through the non-blocking path; the initial state is
-/// built once and handed back on every retry.
+/// Open a session through the non-blocking path; the initial state is built
+/// once and handed back by the service on every retry (same loop shape as
+/// `submit_batch_backoff`, for the same FL001 reason).
 fn open_backoff(
     service: &ScoringService,
     net: &NetConfig,
@@ -277,18 +281,20 @@ fn open_backoff(
     id: &str,
     nodes: usize,
 ) -> Result<(), Reply> {
-    let mut state =
-        Some(FingerState::with_policy(Graph::new(nodes), service.config().policy));
-    retry_backoff(net, shutdown, || {
-        match service.try_open_session_state(id, state.take().expect("pending state")) {
-            Ok(()) => Backoff::Done(()),
+    let mut state = FingerState::with_policy(Graph::new(nodes), service.config().policy);
+    loop {
+        match service.try_open_session_state(id, state) {
+            Ok(()) => return Ok(()),
             Err((back, SubmitError::WouldBlock { .. })) => {
-                state = Some(back);
-                Backoff::Retry
+                if shutdown.is_signaled() {
+                    return Err(Reply::Err("shutting-down".to_string()));
+                }
+                state = back;
+                std::thread::sleep(Duration::from_micros(net.backoff_us));
             }
-            Err((_, e)) => Backoff::Fail(e.to_string()),
+            Err((_, e)) => return Err(Reply::Err(e.to_string())),
         }
-    })
+    }
 }
 
 /// Query through the non-blocking path.

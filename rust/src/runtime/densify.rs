@@ -27,8 +27,11 @@ mod tests {
         let g = Graph::from_edges(2, &[(0, 1, 2.0)]);
         let w = padded_weights_f32(&g, 4).unwrap();
         assert_eq!(w.len(), 16);
+        // finger-lint: allow(FL003): f32 lattice of exact constants; the bit macro is f64-typed
         assert_eq!(w[0 * 4 + 1], 2.0);
+        // finger-lint: allow(FL003): f32 lattice of exact constants; the bit macro is f64-typed
         assert_eq!(w[1 * 4 + 0], 2.0);
+        // finger-lint: allow(FL003): exact zero sentinel over exact f32 constants
         assert_eq!(w.iter().filter(|&&x| x != 0.0).count(), 2);
     }
 

@@ -33,7 +33,7 @@ impl Runtime {
 
     fn compiled(&self, art: &Artifact) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
         let key = (art.name.clone(), art.n);
-        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+        if let Some(exe) = self.cache.lock().expect("compile cache mutex poisoned").get(&key) {
             return Ok(exe.clone());
         }
         let proto = xla::HloModuleProto::from_text_file(
@@ -44,7 +44,7 @@ impl Runtime {
         let exe = std::sync::Arc::new(
             self.client.compile(&comp).with_context(|| format!("compile {}", art.name))?,
         );
-        self.cache.lock().unwrap().insert(key, exe.clone());
+        self.cache.lock().expect("compile cache mutex poisoned").insert(key, exe.clone());
         Ok(exe)
     }
 
@@ -83,7 +83,7 @@ impl Runtime {
 
     /// Number of compiled executables currently cached.
     pub fn cached_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.lock().expect("compile cache mutex poisoned").len()
     }
 }
 

@@ -106,6 +106,7 @@ impl ScoringService {
             let handle = std::thread::Builder::new()
                 .name(format!("finger-shard-{shard}"))
                 .spawn(move || shard_worker(rx, worker_cfg, worker_depth))
+                // finger-lint: allow(FL001): cold-start — no spawn, no service
                 .expect("spawn shard worker");
             senders.push(tx);
             workers.push(handle);
@@ -221,6 +222,7 @@ impl ScoringService {
         match self.try_send(ShardMsg::Open { id: id.to_string(), state }) {
             Ok(()) => Ok(()),
             Err((ShardMsg::Open { state, .. }, e)) => Err((state, e)),
+            // finger-lint: allow(FL001): try_send echoes the sent variant back
             Err(_) => unreachable!("try_send echoes the sent message variant"),
         }
     }
@@ -231,6 +233,7 @@ impl ScoringService {
     /// so it reflects every event this caller submitted before it. Blocks
     /// while the shard's queue is full, like `submit`.
     pub fn query(&self, id: &str) -> Result<Option<SessionSnapshot>, SubmitError> {
+        // finger-lint: allow(FL004): rendezvous reply; one message, then dropped
         let (tx, rx) = channel();
         self.send(ShardMsg::Query { id: id.to_string(), reply: tx })?;
         rx.recv().map_err(|_| SubmitError::Closed { shard: self.shard_for(id) })
@@ -241,6 +244,7 @@ impl ScoringService {
     /// is full. Once enqueued, the reply wait is bounded by the work already
     /// queued (shard workers never block on anything themselves).
     pub fn try_query(&self, id: &str) -> Result<Option<SessionSnapshot>, SubmitError> {
+        // finger-lint: allow(FL004): rendezvous reply; one message, then dropped
         let (tx, rx) = channel();
         self.try_send(ShardMsg::Query { id: id.to_string(), reply: tx })
             .map_err(|(_, e)| e)?;
@@ -259,6 +263,7 @@ impl ScoringService {
     /// auto-create/drop path and `finish` does not checkpoint it. Blocks
     /// while the shard's queue is full, like `submit`.
     pub fn close_session(&self, id: &str) -> Result<Option<SessionSnapshot>, SubmitError> {
+        // finger-lint: allow(FL004): rendezvous reply; one message, then dropped
         let (tx, rx) = channel();
         self.send(ShardMsg::Close { id: id.to_string(), reply: tx })?;
         rx.recv().map_err(|_| SubmitError::Closed { shard: self.shard_for(id) })
@@ -271,6 +276,7 @@ impl ScoringService {
         &self,
         id: &str,
     ) -> Result<Option<SessionSnapshot>, SubmitError> {
+        // finger-lint: allow(FL004): rendezvous reply; one message, then dropped
         let (tx, rx) = channel();
         self.try_send(ShardMsg::Close { id: id.to_string(), reply: tx })
             .map_err(|(_, e)| e)?;
@@ -331,19 +337,23 @@ impl ScoringService {
 
     fn send(&self, msg: ShardMsg) -> Result<(), SubmitError> {
         let shard = self.shard_of_msg(&msg);
+        // finger-lint: allow(FL001): shard_of bounds the index by senders.len()
+        let (sender, depth) = (&self.senders[shard], &self.depths[shard]);
         // count before sending so a blocked send is visible as queue depth
-        self.depths[shard].fetch_add(1, Ordering::Relaxed);
-        self.senders[shard].send(msg).map_err(|_| {
-            self.depths[shard].fetch_sub(1, Ordering::Relaxed);
+        depth.fetch_add(1, Ordering::Relaxed);
+        sender.send(msg).map_err(|_| {
+            depth.fetch_sub(1, Ordering::Relaxed);
             SubmitError::Closed { shard }
         })
     }
 
     fn try_send(&self, msg: ShardMsg) -> Result<(), (ShardMsg, SubmitError)> {
         let shard = self.shard_of_msg(&msg);
-        self.depths[shard].fetch_add(1, Ordering::Relaxed);
-        self.senders[shard].try_send(msg).map_err(|e| {
-            self.depths[shard].fetch_sub(1, Ordering::Relaxed);
+        // finger-lint: allow(FL001): shard_of bounds the index by senders.len()
+        let (sender, depth) = (&self.senders[shard], &self.depths[shard]);
+        depth.fetch_add(1, Ordering::Relaxed);
+        sender.try_send(msg).map_err(|e| {
+            depth.fetch_sub(1, Ordering::Relaxed);
             match e {
                 TrySendError::Full(m) => (m, SubmitError::WouldBlock { shard }),
                 TrySendError::Disconnected(m) => (m, SubmitError::Closed { shard }),
@@ -360,10 +370,18 @@ impl ScoringService {
         let mut dropped_events = 0;
         let mut closed_reports_dropped = 0;
         for worker in workers {
-            let outcome = worker.join().expect("shard worker panicked");
-            sessions.extend(outcome.reports);
-            dropped_events += outcome.dropped;
-            closed_reports_dropped += outcome.closed_reports_dropped;
+            match worker.join() {
+                Ok(outcome) => {
+                    sessions.extend(outcome.reports);
+                    dropped_events += outcome.dropped;
+                    closed_reports_dropped += outcome.closed_reports_dropped;
+                }
+                // a panicked shard lost its session reports, but the drain
+                // must still surface what the surviving shards scored
+                Err(_) => {
+                    eprintln!("finger-service: a shard worker panicked; its reports are lost");
+                }
+            }
         }
         sessions.sort_by(|a, b| a.id.cmp(&b.id));
         let wall_secs = start.elapsed().as_secs_f64();
@@ -397,17 +415,17 @@ fn shard_worker(
                      dropped: &mut usize,
                      id: String,
                      events: &mut dyn Iterator<Item = StreamEvent>| {
-        if !registry.contains(&id) {
-            if cfg.auto_create_sessions {
-                registry.insert(SessionState::new(id.clone(), Graph::new(0), &cfg));
-            } else {
-                *dropped += events.count();
-                return;
-            }
+        if !registry.contains(&id) && cfg.auto_create_sessions {
+            registry.insert(SessionState::new(id.clone(), Graph::new(0), &cfg));
         }
-        let session = registry.get_mut(&id).expect("session just ensured");
-        for ev in events {
-            session.on_event(ev);
+        match registry.get_mut(&id) {
+            Some(session) => {
+                for ev in events {
+                    session.on_event(ev);
+                }
+            }
+            // auto-create disabled and the id is unknown: count, don't panic
+            None => *dropped += events.count(),
         }
     };
     for msg in rx {

@@ -150,13 +150,17 @@ pub fn decode_session_id(stem: &str) -> Option<String> {
     let mut out = Vec::with_capacity(bytes.len());
     let mut k = 0;
     while k < bytes.len() {
+        // finger-lint: allow(FL001): k < bytes.len() loop bound
         if bytes[k] == b'%' {
             let hex = bytes.get(k + 1..k + 3)?;
+            // finger-lint: allow(FL001): hex is a length-checked 2-byte slice
             let hi = (hex[0] as char).to_digit(16)?;
+            // finger-lint: allow(FL001): hex is a length-checked 2-byte slice
             let lo = (hex[1] as char).to_digit(16)?;
             out.push((hi * 16 + lo) as u8);
             k += 3;
         } else {
+            // finger-lint: allow(FL001): k < bytes.len() loop bound
             out.push(bytes[k]);
             k += 1;
         }

@@ -108,6 +108,7 @@ mod tests {
         assert_eq!(StreamEvent::parse("n 3 4"), None);
         assert_eq!(StreamEvent::parse("t t"), None);
         // ...but ordinary negative deltas (deletions) still parse
+        // finger-lint: allow(FL003): round-trip equality of parsed events with literal weights
         assert_eq!(
             StreamEvent::parse("e 1 2 -0.5"),
             Some(StreamEvent::EdgeDelta { i: 1, j: 2, dw: -0.5 })
@@ -120,6 +121,7 @@ mod tests {
         d1.grow_nodes(2).add(0, 1, 1.0);
         let d2 = crate::graph::DeltaGraph::new();
         let evs = events_from_deltas(&[d1, d2]);
+        // finger-lint: allow(FL003): round-trip equality of parsed events with literal weights
         assert_eq!(
             evs,
             vec![

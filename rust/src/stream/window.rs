@@ -78,6 +78,7 @@ impl WindowBatcher {
     /// **by reference** into the batcher's reusable buffer (valid until the
     /// next `push_ref`/`flush_ref` call). The tick itself counts as one
     /// event, matching the pipeline's historical accounting.
+    // lint: hot-path
     pub fn push_ref(&mut self, ev: StreamEvent) -> Option<(&DeltaGraph, usize)> {
         self.reset_if_emitted();
         match ev {
@@ -116,6 +117,7 @@ impl WindowBatcher {
         self.emitted = true;
         Some((&self.current, n))
     }
+    // lint: hot-path end
 
     /// Owning variant of [`WindowBatcher::push_ref`] (clones the emitted
     /// window so it can cross a thread boundary).
@@ -279,6 +281,7 @@ impl WindowScorer {
     }
 
     /// Score one window delta and advance the state (Algorithm 2 commits ΔG).
+    // lint: hot-path
     pub fn score(&mut self, delta: &DeltaGraph, n_events: usize) -> ScoreRecord {
         let t0 = Instant::now();
         let js =
@@ -299,6 +302,7 @@ impl WindowScorer {
         self.maybe_resync();
         record
     }
+    // lint: hot-path end
 
     fn maybe_resync(&mut self) {
         if self.interval == 0 {
@@ -359,6 +363,7 @@ mod tests {
         assert!(b.push(Ev::EdgeDelta { i: 2, j: 2, dw: 1.0 }).is_none()); // self-loop skipped
         let (d, n) = b.push(Ev::Tick).unwrap();
         assert_eq!(n, 3); // two edge events + the tick
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(d.edge_deltas(), &[(0, 1, 1.0)]);
         assert!(b.flush().is_none()); // nothing pending after a tick
         b.push(Ev::GrowNodes { count: 2 });

@@ -105,13 +105,17 @@ mod tests {
 
     #[test]
     fn secs_units() {
+        // finger-lint: allow(FL003): compares formatted strings; literal float args only
         assert_eq!(secs(0.0000005), "0.5µs");
+        // finger-lint: allow(FL003): compares formatted strings; literal float args only
         assert_eq!(secs(0.002), "2.00ms");
+        // finger-lint: allow(FL003): compares formatted strings; literal float args only
         assert_eq!(secs(2.0), "2.000s");
     }
 
     #[test]
     fn pct_format() {
+        // finger-lint: allow(FL003): compares formatted strings; literal float args only
         assert_eq!(pct(0.975), "97.5%");
     }
 }

@@ -11,3 +11,27 @@ pub mod timer;
 
 pub use rng::Pcg64;
 pub use timer::Timer;
+
+/// Bit-exact float equality assertion: the approved way to compare scores in
+/// tests (lint rule FL003 flags raw `assert_eq!` on float expressions; raw
+/// `==` rounds through the comparison semantics of NaN and signed zero,
+/// while the repo's identity guarantees are stated bit-for-bit — see
+/// docs/LINTS.md). Both sides are evaluated once and compared via
+/// `f64::to_bits`.
+#[macro_export]
+macro_rules! assert_bits_eq {
+    ($a:expr, $b:expr $(,)?) => {{
+        let (a, b): (f64, f64) = ($a, $b);
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "assert_bits_eq failed: {a:?} ({:#018x}) vs {b:?} ({:#018x})",
+            a.to_bits(),
+            b.to_bits()
+        );
+    }};
+    ($a:expr, $b:expr, $($msg:tt)+) => {{
+        let (a, b): (f64, f64) = ($a, $b);
+        assert_eq!(a.to_bits(), b.to_bits(), $($msg)+);
+    }};
+}

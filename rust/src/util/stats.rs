@@ -106,6 +106,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
 
     fn close(a: f64, b: f64) -> bool {
         (a - b).abs() < 1e-12
@@ -120,8 +121,8 @@ mod tests {
 
     #[test]
     fn mean_empty_is_zero() {
-        assert_eq!(mean(&[]), 0.0);
-        assert_eq!(variance(&[1.0]), 0.0);
+        assert_bits_eq!(mean(&[]), 0.0);
+        assert_bits_eq!(variance(&[1.0]), 0.0);
     }
 
     #[test]
@@ -140,7 +141,7 @@ mod tests {
 
     #[test]
     fn pearson_constant_is_zero() {
-        assert_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+        assert_bits_eq!(pearson(&[1.0, 1.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
     }
 
     #[test]
@@ -155,12 +156,14 @@ mod tests {
     #[test]
     fn ranks_no_ties() {
         let r = fractional_ranks(&[30.0, 10.0, 20.0]);
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(r, vec![3.0, 1.0, 2.0]);
     }
 
     #[test]
     fn ranks_with_ties_average() {
         let r = fractional_ranks(&[10.0, 20.0, 20.0, 30.0]);
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
     }
 
@@ -195,6 +198,7 @@ mod tests {
 
     #[test]
     fn top_k_truncates_at_len() {
+        // finger-lint: allow(FL003): exact-constant slice; assert_bits_eq! has no slice form
         assert_eq!(top_k_indices(&[1.0], 5), vec![0]);
     }
 

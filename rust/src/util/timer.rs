@@ -49,6 +49,7 @@ pub fn ctrr(baseline_secs: f64, approx_secs: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::assert_bits_eq;
 
     #[test]
     fn timer_measures_sleep() {
@@ -67,7 +68,7 @@ mod tests {
     #[test]
     fn ctrr_basic() {
         assert!((ctrr(10.0, 0.1) - 0.99).abs() < 1e-12);
-        assert_eq!(ctrr(0.0, 1.0), 0.0);
+        assert_bits_eq!(ctrr(0.0, 1.0), 0.0);
         assert!((ctrr(2.0, 2.0) - 0.0).abs() < 1e-12);
     }
 

@@ -1,6 +1,7 @@
 //! Cross-method distance integration: the full registry on shared workloads,
 //! metric sanity, and the paper's qualitative orderings.
 
+use finger::assert_bits_eq;
 use finger::coordinator::{all_methods, core_methods};
 use finger::distance::*;
 use finger::entropy::FingerState;
@@ -48,7 +49,7 @@ fn finger_detects_weight_change_support_methods_do_not() {
         reweighted.set_weight(i, j, 10.0 / w); // drastic redistribution
     }
     assert!(jsdist_fast(&g, &reweighted) > 0.01);
-    assert_eq!(graph_edit_distance(&g, &reweighted), 0.0);
+    assert_bits_eq!(graph_edit_distance(&g, &reweighted), 0.0);
     assert!(veo_score(&g, &reweighted) < 1e-12);
     assert!(cosine_distance(&g, &reweighted) < 1e-12); // unweighted degrees equal
 }

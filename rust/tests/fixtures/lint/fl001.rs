@@ -1,0 +1,28 @@
+//! FL001 fixture: panic sites on a request path. The golden test lints this
+//! under a virtual `rust/src/service/` path so the zone rule applies; it is
+//! never compiled (the `fixtures/` directory is skipped by the scanner).
+
+pub fn handle(line: &str, shards: &[u32]) -> u32 {
+    let id = line.split(' ').next().unwrap();
+    let n: u32 = id.parse().expect("bad id");
+    if shards.is_empty() {
+        panic!("no shards");
+    }
+    let first = shards[0];
+    // finger-lint: allow(FL001): emptiness checked above
+    let also_first = shards[0];
+    first + also_first + n
+}
+
+pub fn unfinished() {
+    todo!("route the reply");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let v = vec![1u32];
+        assert_eq!(v[0], "7".parse::<u32>().unwrap());
+    }
+}

@@ -1,0 +1,22 @@
+//! FL002 fixture: allocations inside a hot-path region marker. Linted under
+//! a virtual `rust/src/entropy/` path; never compiled.
+
+pub fn cold(input: &[f64]) -> Vec<f64> {
+    input.to_vec()
+}
+
+// lint: hot-path
+pub fn hot(input: &[f64], out: &mut Vec<f64>) -> usize {
+    let copy = input.to_vec();
+    let text = format!("{}", copy.len());
+    let fresh: Vec<f64> = Vec::new();
+    // finger-lint: allow(FL002): one-time growth, amortized to zero
+    let grown: Vec<f64> = Vec::with_capacity(input.len());
+    out.extend_from_slice(input);
+    text.len() + fresh.capacity() + grown.capacity()
+}
+// lint: hot-path end
+
+pub fn cold_again() -> String {
+    "allocations are fine outside the region".to_string()
+}

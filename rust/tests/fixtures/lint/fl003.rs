@@ -1,0 +1,31 @@
+//! FL003 fixture: float equality outside the bit-exactness helpers. Linted
+//! under a virtual `rust/src/distance/` path; never compiled.
+
+pub fn weight() -> f64 {
+    2.5
+}
+
+pub fn raw_compares(a: f64, b: f64) -> bool {
+    a == weight() && b != 0.125
+}
+
+pub fn bits_compare(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits()
+}
+
+pub fn int_compare(a: u32, b: u32) -> bool {
+    a == b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn float_asserts() {
+        assert_eq!(weight(), 2.5);
+        // finger-lint: allow(FL003): exact zero sentinel
+        assert_ne!(weight(), 0.0);
+        assert_eq!(weight().to_bits(), 2.5f64.to_bits());
+    }
+}

@@ -1,0 +1,13 @@
+//! FL004 fixture: unbounded channels where `sync_channel` would preserve
+//! backpressure. Linted under a virtual `rust/src/service/` path; never
+//! compiled.
+
+use std::sync::mpsc::{channel, sync_channel};
+
+pub fn wire_up() {
+    let (tx, rx) = channel::<u32>();
+    // finger-lint: allow(FL004): rendezvous reply; one message, then dropped
+    let (reply_tx, reply_rx) = channel::<u32>();
+    let (bounded_tx, bounded_rx) = sync_channel::<u32>(16);
+    drop((tx, rx, reply_tx, reply_rx, bounded_tx, bounded_rx));
+}

@@ -1,0 +1,13 @@
+//! FL005 fixture: `.lock().unwrap()` hides the poisoning policy. Linted
+//! under a virtual `rust/src/runtime/` path (outside the FL001 panic zone,
+//! so only FL005 fires); never compiled.
+
+use std::sync::Mutex;
+
+pub fn counter(m: &Mutex<u64>) -> u64 {
+    *m.lock().unwrap()
+}
+
+pub fn counter_with_context(m: &Mutex<u64>) -> u64 {
+    *m.lock().expect("counter mutex poisoned")
+}

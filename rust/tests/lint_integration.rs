@@ -1,0 +1,216 @@
+//! End-to-end coverage for `finger lint`: golden diagnostics over seeded
+//! fixture files (one per rule, linted under virtual paths so the
+//! directory-scoped rules apply), a repo-wide lexer/model self-check, a
+//! lexer robustness property, and the gating invariant itself — the full
+//! repo lints clean under the checked-in baseline.
+
+use finger::lint::{self, FileModel};
+use finger::util::{proptest, Pcg64};
+
+const FL001_SRC: &str = include_str!("fixtures/lint/fl001.rs");
+const FL002_SRC: &str = include_str!("fixtures/lint/fl002.rs");
+const FL003_SRC: &str = include_str!("fixtures/lint/fl003.rs");
+const FL004_SRC: &str = include_str!("fixtures/lint/fl004.rs");
+const FL005_SRC: &str = include_str!("fixtures/lint/fl005.rs");
+
+/// Lint a fixture under a virtual path; returns (diagnostics, waived count).
+fn lint_fixture(virtual_path: &str, src: &str) -> (Vec<lint::Diagnostic>, usize) {
+    let (diags, waived) = lint::lint_source(virtual_path, src.to_string());
+    assert!(
+        diags.iter().all(|d| d.rule != "FL000"),
+        "fixture must lex cleanly with well-formed waivers: {diags:?}"
+    );
+    (diags, waived)
+}
+
+fn rule_lines(diags: &[lint::Diagnostic]) -> Vec<(&str, u32)> {
+    diags.iter().map(|d| (d.rule.as_str(), d.line)).collect()
+}
+
+fn message_at(diags: &[lint::Diagnostic], line: u32) -> &str {
+    &diags
+        .iter()
+        .find(|d| d.line == line)
+        .unwrap_or_else(|| panic!("no diagnostic at line {line}: {diags:?}"))
+        .message
+}
+
+#[test]
+fn fl001_golden_panic_sites_on_request_path() {
+    let (diags, waived) = lint_fixture("rust/src/service/fixture.rs", FL001_SRC);
+    let expect = vec![
+        ("FL001", 6),  // .unwrap()
+        ("FL001", 7),  // .expect()
+        ("FL001", 9),  // panic!
+        ("FL001", 11), // indexing
+        ("FL001", 18), // todo!
+    ];
+    assert_eq!(rule_lines(&diags), expect);
+    assert_eq!(waived, 1, "the second shards[0] carries a bounds waiver");
+    assert!(message_at(&diags, 6).contains("propagate an error"));
+    assert!(message_at(&diags, 9).contains("return an error"));
+    assert!(message_at(&diags, 11).contains(".get(..)"));
+}
+
+#[test]
+fn fl001_same_source_outside_the_zone_is_quiet() {
+    let (diags, _) = lint_fixture("rust/src/graph/fixture.rs", FL001_SRC);
+    assert!(diags.is_empty(), "zone rule must not fire under rust/src/graph/: {diags:?}");
+}
+
+#[test]
+fn fl002_golden_allocations_in_hot_region() {
+    let (diags, waived) = lint_fixture("rust/src/entropy/fixture.rs", FL002_SRC);
+    let expect = vec![
+        ("FL002", 10), // .to_vec()
+        ("FL002", 11), // format!
+        ("FL002", 12), // Vec::new
+    ];
+    assert_eq!(rule_lines(&diags), expect);
+    assert_eq!(waived, 1, "Vec::with_capacity carries a one-time-growth waiver");
+    assert!(message_at(&diags, 10).contains("allocating call"));
+    assert!(message_at(&diags, 11).contains("allocating macro"));
+    assert!(message_at(&diags, 12).contains("allocating constructor"));
+}
+
+#[test]
+fn fl003_golden_float_equality() {
+    let (diags, waived) = lint_fixture("rust/src/distance/fixture.rs", FL003_SRC);
+    let expect = vec![
+        ("FL003", 9), // a == weight()
+        ("FL003", 9), // b != 0.125
+        ("FL003", 26), // assert_eq!(weight(), 2.5)
+    ];
+    assert_eq!(rule_lines(&diags), expect);
+    assert_eq!(waived, 1, "the exact-zero assert_ne! carries a sentinel waiver");
+    assert!(message_at(&diags, 9).contains("bit-exactness"));
+    assert!(message_at(&diags, 26).contains("assert_bits_eq!"));
+}
+
+#[test]
+fn fl004_golden_unbounded_channel() {
+    let (diags, waived) = lint_fixture("rust/src/service/fixture.rs", FL004_SRC);
+    assert_eq!(rule_lines(&diags), vec![("FL004", 8)]);
+    assert_eq!(waived, 1, "the reply channel carries a rendezvous waiver");
+    assert!(message_at(&diags, 8).contains("sync_channel"));
+}
+
+#[test]
+fn fl005_golden_lock_unwrap() {
+    let (diags, waived) = lint_fixture("rust/src/runtime/fixture.rs", FL005_SRC);
+    assert_eq!(rule_lines(&diags), vec![("FL005", 8)]);
+    assert_eq!(waived, 0);
+    assert!(message_at(&diags, 8).contains("poisoning policy"));
+}
+
+#[test]
+fn panic_zone_rules_skip_test_files() {
+    // the same seeded sources under rust/tests/ report nothing for the
+    // whole-file-exempt rules (FL003 still applies to test files)
+    let (d1, _) = lint_fixture("rust/tests/fixture.rs", FL001_SRC);
+    assert!(d1.is_empty(), "{d1:?}");
+    let (d4, _) = lint_fixture("rust/tests/fixture.rs", FL004_SRC);
+    assert!(d4.is_empty(), "{d4:?}");
+    let (d5, _) = lint_fixture("rust/tests/fixture.rs", FL005_SRC);
+    assert!(d5.is_empty(), "{d5:?}");
+    let (d3, _) = lint_fixture("rust/tests/fixture.rs", FL003_SRC);
+    assert!(!d3.is_empty(), "FL003 must still fire in test files");
+}
+
+#[test]
+fn lexer_and_model_handle_every_repo_source() {
+    // every scanned .rs file must tokenize and model-build without error —
+    // the lint can only gate CI if it can read the whole codebase
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let files = lint::collect_files(root).expect("walk scan roots");
+    assert!(files.len() > 50, "expected a real scan, got {} files", files.len());
+    for path in &files {
+        let src = std::fs::read_to_string(path).expect("read source");
+        let label = path.to_string_lossy().into_owned();
+        let model = FileModel::build(&label, src)
+            .unwrap_or_else(|e| panic!("{}: lexer/model failed: {e}", path.display()));
+        assert!(
+            model.malformed.is_empty(),
+            "{}: malformed waiver: {:?}",
+            path.display(),
+            model.malformed
+        );
+    }
+}
+
+#[test]
+fn repo_lints_clean_under_checked_in_baseline() {
+    // the gating invariant: `finger lint --deny` passes on this tree, and
+    // every baseline entry still matches a real finding (shrink-only)
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint::run(&lint::LintOptions::new(root)).expect("lint run");
+    assert!(
+        report.clean(),
+        "repo must lint clean:\n{}",
+        report
+            .diagnostics
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(
+        report.stale_baseline.is_empty(),
+        "stale baseline entries: {:?}",
+        report.stale_baseline
+    );
+    assert!(report.files > 50);
+}
+
+#[test]
+fn lexer_never_panics_on_arbitrary_input() {
+    // robustness property: any byte soup either tokenizes or reports a
+    // structured LexError — the lint must never crash on weird sources
+    proptest::check(
+        |rng: &mut Pcg64, size: usize| {
+            let n = rng.below(size.max(1) * 8 + 1);
+            let bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            String::from_utf8_lossy(&bytes).into_owned()
+        },
+        |src| {
+            let _ = lint::lexer::lex(src);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lexer_never_panics_on_rusty_fragments() {
+    // denser coverage of the tricky lexemes: quotes, escapes, raw strings,
+    // lifetimes, nested comments — assembled randomly
+    const PIECES: &[&str] = &[
+        "\"", "'", "\\", "r#\"", "\"#", "//", "/*", "*/", "'a", "b'x'", "0.5", "1e9", "ident",
+        "::", "<", ">", "\n", "{", "}", "0x1f", "'\\n'", "r\"", "#", "!", "µ",
+    ];
+    proptest::check(
+        |rng: &mut Pcg64, size: usize| {
+            let n = rng.below(size + 1) + 1;
+            (0..n).map(|_| PIECES[rng.below(PIECES.len())]).collect::<String>()
+        },
+        |src| {
+            let _ = lint::lexer::lex(src);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn baseline_roundtrip_through_render() {
+    let diags = vec![lint::Diagnostic {
+        rule: "FL001".to_string(),
+        path: "rust/src/service/x.rs".to_string(),
+        line: 3,
+        col: 7,
+        message: "boom".to_string(),
+    }];
+    let rendered = lint::render_as_baseline(&diags);
+    let parsed = lint::Baseline::parse(&rendered).expect("rendered baseline parses");
+    assert_eq!(parsed.entries.len(), 1);
+    assert!(parsed.find("FL001", "rust/src/service/x.rs", 3).is_some());
+    assert!(parsed.find("FL001", "rust/src/service/x.rs", 4).is_none());
+}
