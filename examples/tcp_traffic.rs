@@ -1,14 +1,20 @@
-//! End-to-end TCP traffic demo: boot the network front end on an ephemeral
-//! loopback port, then replay the same mixed dataset-preset workload (wiki
-//! + DoS + Hi-C + synthetic tenants) twice against that one server — once
-//! on the text wire, once on the binary wire (the server negotiates the
-//! codec per connection on its first byte) — print the throughput ratio,
-//! query live stats, retire one session with `CLOSE`, and shut the server
-//! down gracefully.
+//! End-to-end TCP traffic demo for the event-driven front end: boot the
+//! server on an ephemeral loopback port, then sweep connection tiers
+//! (10 / 100 / 1000 by default) against it — each tier replayed twice over
+//! the same mixed dataset-preset workload (wiki + DoS + Hi-C + synthetic
+//! tenants), once on the text wire and once on the binary wire (the server
+//! negotiates the codec per connection on its first byte). Every tier
+//! prints end-to-end events/s and p99 request latency per wire, asserts
+//! the two wires scored bit-for-bit identically, and the demo finishes
+//! with a live stats probe, a `CLOSE`, and a graceful shutdown.
+//!
+//! The 1000-connection tier holds ~2000 sockets in this one process
+//! (client and server ends both live here) — raise the fd ceiling first
+//! (`ulimit -n 4096`) or pass a smaller sweep.
 //!
 //! ```bash
 //! cargo run --release --offline --example tcp_traffic \
-//!     [-- --sessions 16 --connections 4 --windows 6 --shards 4]
+//!     [-- --connections 10,100,1000 --windows 3 --events 12 --shards 4 --threads 2]
 //! ```
 
 #![allow(clippy::print_stdout)] // stdout is this target's interface
@@ -23,82 +29,97 @@ fn main() -> anyhow::Result<()> {
         shards: args.get_parsed("shards", 4usize).max(1),
         ..Default::default()
     };
-    let net_cfg = NetConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() };
+    let mut net_cfg = NetConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() };
+    net_cfg.event_threads = args.get_parsed("threads", net_cfg.event_threads).max(1);
     let client_timeout = net_cfg.client_timeout();
+    let threads = net_cfg.event_threads;
     let server = NetServer::bind(service_cfg, net_cfg)?;
     let addr = server.local_addr().to_string();
-    println!("server listening on {addr} (wire negotiated per connection)");
+    println!(
+        "server listening on {addr} ({threads} event-loop threads, \
+         wire negotiated per connection)"
+    );
     let server_thread = std::thread::spawn(move || server.run());
 
-    let workload = TenantWorkloadConfig {
-        sessions: args.get_parsed("sessions", 16usize).max(1),
-        windows: args.get_parsed("windows", 6usize).max(2),
-        events_per_window: args.get_parsed("events", 30usize).max(1),
-        nodes_per_session: args.get_parsed("nodes", 48usize).max(24),
-        presets: vec![
-            TenantPreset::Wiki,
-            TenantPreset::Dos,
-            TenantPreset::HiC,
-            TenantPreset::Synthetic,
-        ],
-        seed: args.get_parsed("seed", 0x7C9u64),
-    };
-    let connections = args.get_parsed("connections", 4usize).max(1);
+    let tiers = args.get_list("connections", &[10usize, 100, 1000]);
+    let windows = args.get_parsed("windows", 3usize).max(2);
+    let events = args.get_parsed("events", 12usize).max(1);
+    let nodes = args.get_parsed("nodes", 32usize).max(24);
 
-    // same workload, same server, both wires — OPEN resets each session, so
-    // the second replay starts from scratch and the runs are comparable
-    let mut reports: Vec<TrafficReport> = Vec::new();
-    for wire in [Wire::Text, Wire::Binary] {
-        let report = finger::net::run_load(&TrafficConfig {
-            addr: addr.clone(),
-            wire,
-            client_timeout,
-            connections,
-            workload: workload.clone(),
-            query_sessions: true,
-            shutdown_after: false,
-        })?;
-        println!(
-            "{:>6} wire: {} events for {} sessions over {} connections in {:.3}s \
-             → {:.0} events/s end-to-end ({} windows, {} anomalous)",
-            wire.name(),
-            report.events_sent,
-            report.sessions,
-            report.connections,
-            report.wall_secs,
-            report.events_per_sec,
-            report.windows,
-            report.anomalies,
-        );
-        reports.push(report);
-    }
-    let (text, binary) = (&reports[0], &reports[1]);
     println!(
-        "binary/text throughput ratio: {:.2}x",
-        binary.events_per_sec / text.events_per_sec.max(1e-12)
+        "{:<8} {:<12} {:>10} {:>14} {:>10}",
+        "wire", "connections", "sessions", "events/s", "p99(us)"
     );
-    // both wires replayed identical streams → identical scores, bit for bit
-    for (t, b) in text.snapshots.iter().zip(&binary.snapshots) {
-        assert_eq!(t.htilde.to_bits(), b.htilde.to_bits(), "{}: wires disagree", t.id);
-    }
-    for snap in binary.snapshots.iter().take(4) {
+    let mut last_pair: Option<(TrafficReport, TrafficReport)> = None;
+    for &tier in &tiers {
+        let workload = TenantWorkloadConfig {
+            // one tenant per connection: replay() clamps the connection
+            // count to the session count, so sessions track the tier
+            sessions: tier.max(1),
+            windows,
+            events_per_window: events,
+            nodes_per_session: nodes,
+            presets: vec![
+                TenantPreset::Wiki,
+                TenantPreset::Dos,
+                TenantPreset::HiC,
+                TenantPreset::Synthetic,
+            ],
+            seed: args.get_parsed("seed", 0x7C9u64),
+        };
+        // same workload, same server, both wires — OPEN resets each
+        // session, so the second replay starts from scratch and the two
+        // runs are comparable
+        let mut pair: Vec<TrafficReport> = Vec::new();
+        for wire in [Wire::Text, Wire::Binary] {
+            let report = finger::net::run_load(&TrafficConfig {
+                addr: addr.clone(),
+                wire,
+                client_timeout,
+                connections: tier.max(1),
+                workload: workload.clone(),
+                query_sessions: true,
+                shutdown_after: false,
+            })?;
+            println!(
+                "{:<8} {:<12} {:>10} {:>14.0} {:>10}",
+                wire.name(),
+                report.connections,
+                report.sessions,
+                report.events_per_sec,
+                report.p99_us,
+            );
+            pair.push(report);
+        }
+        let binary = pair.pop().expect("binary report");
+        let text = pair.pop().expect("text report");
+        // both wires replayed identical streams → identical scores, bit
+        // for bit, at every connection count
+        for (t, b) in text.snapshots.iter().zip(&binary.snapshots) {
+            assert_eq!(t.htilde.to_bits(), b.htilde.to_bits(), "{}: wires disagree", t.id);
+        }
         println!(
-            "  {:<16} windows={:<3} H̃={:.4} n={} m={} anomalies={}",
-            snap.id, snap.windows, snap.htilde, snap.nodes, snap.edges, snap.anomalies
+            "  tier {tier}: binary/text throughput {:.2}x — p50 text {}us / binary {}us",
+            binary.events_per_sec / text.events_per_sec.max(1e-12),
+            text.p50_us,
+            binary.p50_us,
         );
+        last_pair = Some((text, binary));
     }
 
     // live operator view, then retire one session with CLOSE
     let mut probe = NetClient::connect_with(addr.as_str(), Wire::Binary, client_timeout)?;
     let stats = probe.stats()?;
     println!("queue depths at idle: {:?} ({} events accepted)", stats.depths, stats.submitted);
-    if let Some(first) = binary.snapshots.first() {
-        let closed = probe.close(&first.id)?.expect("session is live");
-        println!(
-            "closed {:<16} final: windows={} events={} H̃={:.4}",
-            closed.id, closed.windows, closed.events, closed.htilde
-        );
-        assert!(probe.query(&first.id)?.is_none(), "closed session must be gone");
+    if let Some((_, binary)) = &last_pair {
+        if let Some(first) = binary.snapshots.first() {
+            let closed = probe.close(&first.id)?.expect("session is live");
+            println!(
+                "closed {:<16} final: windows={} events={} H̃={:.4}",
+                closed.id, closed.windows, closed.events, closed.htilde
+            );
+            assert!(probe.query(&first.id)?.is_none(), "closed session must be gone");
+        }
     }
     probe.quit()?;
 

@@ -10,6 +10,9 @@ use std::collections::{BTreeMap, BTreeSet};
 /// Region marker comment: a line comment containing this needle opens a
 /// hot-path region; the same needle followed by `end` closes it.
 pub const HOT_MARKER: &str = "lint: hot-path";
+/// Region marker for readiness-driven event-loop code (FL006): inside,
+/// blocking I/O calls would stall every connection the loop owns.
+pub const EVENT_LOOP_MARKER: &str = "lint: event-loop";
 /// Waiver comments start with this needle (anywhere in a line comment).
 pub const WAIVER_MARKER: &str = "finger-lint";
 
@@ -26,6 +29,8 @@ pub struct FileModel {
     pub is_test: Vec<bool>,
     /// Per code-view position: token is inside a hot-path region.
     pub in_hot: Vec<bool>,
+    /// Per code-view position: token is inside an event-loop region.
+    pub in_event_loop: Vec<bool>,
     /// line number -> rule ids waived on that line (a waiver covers its own
     /// line and the next, so it works trailing or standalone-above).
     pub waivers: BTreeMap<u32, BTreeSet<String>>,
@@ -77,7 +82,7 @@ impl FileModel {
             })
             .map(|(i, _)| i)
             .collect();
-        let (in_hot, waivers, malformed) = analyze_comments(&src, &tokens);
+        let (in_hot, in_event_loop, waivers, malformed) = analyze_comments(&src, &tokens);
         let view = CodeView { src: &src, tokens: &tokens, code: &code };
         let is_test = analyze_test_regions(&view);
         let float_fns = analyze_float_fns(&view);
@@ -88,6 +93,7 @@ impl FileModel {
             code,
             is_test,
             in_hot,
+            in_event_loop,
             waivers,
             malformed,
             float_fns,
@@ -104,13 +110,16 @@ impl FileModel {
     }
 }
 
-type CommentAnalysis = (Vec<bool>, BTreeMap<u32, BTreeSet<String>>, Vec<(u32, String)>);
+type CommentAnalysis =
+    (Vec<bool>, Vec<bool>, BTreeMap<u32, BTreeSet<String>>, Vec<(u32, String)>);
 
-/// Single pass over all tokens: hot-path region tracking (per code-view
-/// position) plus waiver extraction from line comments.
+/// Single pass over all tokens: hot-path and event-loop region tracking
+/// (per code-view position) plus waiver extraction from line comments.
 fn analyze_comments(src: &str, tokens: &[Token]) -> CommentAnalysis {
     let mut hot = false;
+    let mut event_loop = false;
     let mut in_hot = Vec::new();
+    let mut in_event_loop = Vec::new();
     let mut waivers: BTreeMap<u32, BTreeSet<String>> = BTreeMap::new();
     let mut malformed = Vec::new();
     for t in tokens {
@@ -119,6 +128,9 @@ fn analyze_comments(src: &str, tokens: &[Token]) -> CommentAnalysis {
                 let text = t.text(src);
                 if let Some(p) = text.find(HOT_MARKER) {
                     hot = !text[p + HOT_MARKER.len()..].contains("end");
+                }
+                if let Some(p) = text.find(EVENT_LOOP_MARKER) {
+                    event_loop = !text[p + EVENT_LOOP_MARKER.len()..].contains("end");
                 }
                 if let Some(p) = text.find(WAIVER_MARKER) {
                     match parse_waiver(&text[p..]) {
@@ -133,10 +145,13 @@ fn analyze_comments(src: &str, tokens: &[Token]) -> CommentAnalysis {
                 }
             }
             TokenKind::BlockComment => {}
-            _ => in_hot.push(hot),
+            _ => {
+                in_hot.push(hot);
+                in_event_loop.push(event_loop);
+            }
         }
     }
-    (in_hot, waivers, malformed)
+    (in_hot, in_event_loop, waivers, malformed)
 }
 
 /// Parse a waiver starting at the marker needle. The grammar after the
@@ -366,6 +381,25 @@ mod tests {
         assert!(!m.in_hot[at("x")]);
         assert!(m.in_hot[at("y")]);
         assert!(!m.in_hot[at("z")]);
+    }
+
+    #[test]
+    fn event_loop_region_markers_track_independently_of_hot_path() {
+        let src = "fn a() { x(); }\n\
+                   // lint: event-loop\n\
+                   fn b() { y(); }\n\
+                   // lint: hot-path\n\
+                   fn c() { z(); }\n\
+                   // lint: hot-path end\n\
+                   // lint: event-loop end\n\
+                   fn d() { w(); }\n";
+        let m = model(src);
+        let v = m.view();
+        let at = |name: &str| (0..v.len()).find(|&k| v.text(k) == name).unwrap();
+        assert!(!m.in_event_loop[at("x")]);
+        assert!(m.in_event_loop[at("y")] && !m.in_hot[at("y")]);
+        assert!(m.in_event_loop[at("z")] && m.in_hot[at("z")]);
+        assert!(!m.in_event_loop[at("w")] && !m.in_hot[at("w")]);
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! The FL001–FL005 rule set, evaluated over a [`FileModel`]'s code-token
+//! The FL001–FL006 rule set, evaluated over a [`FileModel`]'s code-token
 //! view. Each rule is a token-pattern check — deliberately syntactic (no type
 //! inference), tuned to this repo's invariants with waivers/baseline as the
 //! escape hatch for the boundary cases a lexer cannot judge.
@@ -23,6 +23,7 @@ pub const RULES: &[(&str, &str)] = &[
     ("FL003", "no `==`/`!=` (or assert_eq!) on float-typed expressions; compare bits"),
     ("FL004", "no unbounded mpsc::channel() where sync_channel preserves backpressure"),
     ("FL005", "no `.lock().unwrap()`; use `.lock().expect(\"context\")` or a policy helper"),
+    ("FL006", "no blocking I/O calls inside `// lint: event-loop` regions"),
 ];
 
 /// Rust keywords that can legally precede `[` without it being an indexing
@@ -47,6 +48,21 @@ const ALLOC_TYPES: &[&str] =
 
 /// Macros whose invocation panics (FL001).
 const PANIC_MACROS: &[&str] = &["panic", "todo", "unimplemented", "unreachable"];
+
+/// Method calls that block the calling thread until the peer produces or
+/// drains bytes (FL006), matched as `.name(`. A readiness-driven loop must
+/// use buffered nonblocking reads (`ReadBuf::fill_from` + `Codec::decode`)
+/// instead — one slow peer must never stall the loop. `set_read_timeout`
+/// is in the list because needing a timeout implies a blocking read.
+const BLOCKING_IO_METHODS: &[&str] = &[
+    "read_exact",
+    "read_line",
+    "read_to_end",
+    "read_to_string",
+    "read_until",
+    "set_read_timeout",
+    "set_write_timeout",
+];
 
 /// Float-comparing assertion macros (FL003).
 const FLOAT_ASSERT_MACROS: &[&str] =
@@ -87,6 +103,9 @@ pub fn check_file(model: &FileModel) -> Vec<Finding> {
         if !in_test {
             fl004(&v, k, &mut out);
             fl005(&v, k, &mut out);
+        }
+        if model.in_event_loop.get(k).copied().unwrap_or(false) {
+            fl006(&v, k, &mut out);
         }
     }
     out
@@ -302,6 +321,19 @@ fn fl005(v: &CodeView, k: usize, out: &mut Vec<Finding>) {
     }
 }
 
+fn fl006(v: &CodeView, k: usize, out: &mut Vec<Finding>) {
+    let tx = v.text(k);
+    let prev = v.text(k.wrapping_sub(1));
+    if BLOCKING_IO_METHODS.contains(&tx) && prev == "." && v.text(k + 1) == "(" {
+        out.push(finding(
+            v,
+            k,
+            "FL006",
+            format!("blocking `.{tx}()` in a `lint: event-loop` region stalls every connection"),
+        ));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,6 +433,18 @@ mod tests {
                    fn g(m: &std::sync::Mutex<u32>) -> u32 { *m.lock().expect(\"poisoned\") }\n";
         let got = findings("rust/src/runtime/x.rs", src);
         assert_eq!(got, vec![("FL005".to_string(), 1)]);
+    }
+
+    #[test]
+    fn fl006_blocking_io_only_inside_event_loop_region() {
+        let src = "use std::io::{BufRead, Read};\n\
+                   fn setup(s: &std::net::TcpStream) { s.set_read_timeout(None).ok(); }\n\
+                   // lint: event-loop\n\
+                   fn tick(r: &mut dyn BufRead, s: &mut String) { r.read_line(s).ok(); }\n\
+                   // lint: event-loop end\n\
+                   fn drain(r: &mut dyn Read, b: &mut [u8]) { r.read_exact(b).ok(); }\n";
+        let got = findings("rust/src/net/server.rs", src);
+        assert_eq!(got, vec![("FL006".to_string(), 4)]);
     }
 
     #[test]

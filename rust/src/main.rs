@@ -82,13 +82,14 @@ fn print_help() {
                        [--nodes N] [--capacity C] [--producers P] [--seed S]\n\
                        [--config run.toml] [--per-event]\n\
            serve       [--addr 127.0.0.1:7341] [--shards N] [--capacity C]\n\
-                       [--wire auto|text|binary] [--config run.toml]\n\
+                       [--wire auto|text|binary] [--threads N] [--config run.toml]\n\
                        (config sections: [service], [net])\n\
            load        [--addr 127.0.0.1:7341] [--connections 1,2,4,8]\n\
                        [--wire text,binary] [--sessions N] [--windows W]\n\
                        [--events E] [--nodes N] [--timeout-ms T]\n\
                        [--presets wiki,dos,hic,synthetic] [--seed S]\n\
                        [--bench-out BENCH_net.json] [--config run.toml] [--shutdown]\n\
+                       (reports events/s plus p50/p99 request latency)\n\
            offload     [--artifacts DIR]\n\
            lint        [--root DIR] [--baseline FILE] [--deny] [--write-baseline]\n\
                        [--config run.toml]   (config section: [lint])"
@@ -365,14 +366,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         net_cfg.wire = WireMode::parse(raw)
             .with_context(|| format!("unknown wire {raw:?} (want auto|text|binary)"))?;
     }
+    net_cfg.event_threads = args.get_parsed("threads", net_cfg.event_threads).max(1);
     let wire_mode = net_cfg.wire;
+    let event_threads = net_cfg.event_threads;
     let server = NetServer::bind(service_cfg.clone(), net_cfg)?;
     println!(
-        "serve: listening on {} ({} shards, capacity {}, wire {}); send SHUTDOWN to stop",
+        "serve: listening on {} ({} shards, capacity {}, wire {}, {} event threads); \
+         send SHUTDOWN to stop",
         server.local_addr(),
         service_cfg.shards,
         service_cfg.channel_capacity,
         wire_mode.name(),
+        event_threads,
     );
     let report = server.run()?;
     println!(
@@ -436,8 +441,8 @@ fn cmd_load(args: &Args) -> Result<()> {
         wires.iter().map(|w| w.name()).collect::<Vec<_>>(),
     );
     println!(
-        "{:<8} {:<12} {:>12} {:>12} {:>12} {:>14}",
-        "wire", "connections", "events", "windows", "wall", "events/s"
+        "{:<8} {:<12} {:>12} {:>12} {:>12} {:>14} {:>10} {:>10}",
+        "wire", "connections", "events", "windows", "wall", "events/s", "p50(us)", "p99(us)"
     );
     let mut records = Vec::new();
     let mut total_windows = 0usize;
@@ -454,13 +459,15 @@ fn cmd_load(args: &Args) -> Result<()> {
             })?;
             total_windows += report.windows;
             println!(
-                "{:<8} {:<12} {:>12} {:>12} {:>12} {:>14.0}",
+                "{:<8} {:<12} {:>12} {:>12} {:>12} {:>14.0} {:>10} {:>10}",
                 wire.name(),
                 report.connections,
                 report.events_sent,
                 report.windows,
                 finger::util::fmt::secs(report.wall_secs),
                 report.events_per_sec,
+                report.p50_us,
+                report.p99_us,
             );
             // label records with the connection count that actually ran —
             // replay() clamps the request to the tenant count
@@ -477,6 +484,16 @@ fn cmd_load(args: &Args) -> Result<()> {
                 format!("net_windows_{}_conns_{conns}", wire.name()),
                 report.windows as f64,
                 "windows",
+            ));
+            records.push(BenchRecord::metric(
+                format!("net_p50_us_{}_conns_{conns}", wire.name()),
+                report.p50_us as f64,
+                "us",
+            ));
+            records.push(BenchRecord::metric(
+                format!("net_p99_us_{}_conns_{conns}", wire.name()),
+                report.p99_us as f64,
+                "us",
             ));
         }
     }

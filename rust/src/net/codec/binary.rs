@@ -26,6 +26,12 @@
 //! edges, varint anomalies, varint pending, u8 anomalous, f64 htilde, u8
 //! has_jsdist [, f64 jsdist])`, `0x83 ERR(string)`.
 //!
+//! Server-side decoding is incremental ([`Codec::decode`]): frames are
+//! parsed from a [`ReadBuf`] and consumed only once complete, so a
+//! partially-arrived frame parks in the buffer instead of blocking a
+//! thread. A `BATCH` body is consumed event-by-event as bytes arrive —
+//! a maximum-size batch (≈29 MB) never has to fit in the buffer at once.
+//!
 //! Error handling splits by whether framing survives: *semantic* failures
 //! on a fully-read frame (self-loop, non-finite `dw`, `OPEN`/grow counts
 //! over [`MAX_OPEN_NODES`]) are recoverable `Malformed` reads — the server
@@ -37,7 +43,9 @@
 use super::super::command::{
     validate_wire_event, Command, Reply, MAX_BATCH, MAX_LINE, MAX_OPEN_NODES,
 };
-use super::{read_exact_deadline, read_exact_polled, Codec, CommandRead, ReadExact, Wire};
+use super::{
+    read_exact_deadline, read_via_decode, Codec, CommandRead, Decode, ReadBuf, ReadExact, Wire,
+};
 use crate::service::SessionSnapshot;
 use crate::stream::StreamEvent;
 use std::io::{BufRead, Error, ErrorKind, Result, Write};
@@ -71,10 +79,49 @@ fn bad(msg: impl Into<String>) -> Error {
     Error::new(ErrorKind::InvalidData, msg.into())
 }
 
-/// The binary codec. Stateless apart from a reusable frame buffer.
+/// The incremental-decode verdict for "need more bytes": mid-stream it is
+/// [`Decode::Incomplete`]; at EOF a partial frame means the peer died
+/// mid-frame.
+fn more(eof: bool) -> Result<Decode> {
+    if eof {
+        Err(Error::new(ErrorKind::UnexpectedEof, "connection closed mid-frame"))
+    } else {
+        Ok(Decode::Incomplete)
+    }
+}
+
+/// Early-return `more(eof)` when a slice-reader primitive ran out of bytes.
+macro_rules! need {
+    ($e:expr, $eof:expr) => {
+        match $e {
+            Some(v) => v,
+            None => return more($eof),
+        }
+    };
+}
+
+/// The binary codec.
+///
+/// Carries the incremental-decode state a readiness-driven server needs: a
+/// read buffer for the blocking [`Codec::read_command`] shim, a reusable
+/// write scratch, and an in-progress `BATCH` whose body events are still
+/// arriving.
 #[derive(Debug, Default)]
 pub struct BinaryCodec {
     buf: Vec<u8>,
+    rbuf: ReadBuf,
+    batch: Option<BinBatch>,
+}
+
+/// An in-progress `BATCH`: the header has been consumed and `got` of the
+/// `want` body events have arrived so far.
+#[derive(Debug)]
+struct BinBatch {
+    id: String,
+    want: usize,
+    got: usize,
+    events: Vec<StreamEvent>,
+    bad: Option<(usize, &'static str)>,
 }
 
 impl BinaryCodec {
@@ -191,67 +238,41 @@ fn put_event(out: &mut Vec<u8>, ev: &StreamEvent) {
     }
 }
 
-/// How a frame read treats a socket read timeout: the server polls its
-/// shutdown flag and keeps waiting; the client treats the timeout as its
-/// reply deadline and fails the read (a hung server must surface as an
-/// error, never a wedge).
-#[derive(Clone, Copy)]
-enum ReadMode<'a> {
-    Poll(&'a dyn Fn() -> bool),
-    Deadline,
+/// A restartable reader over buffered frame bytes: every primitive returns
+/// `Ok(None)` when the buffer runs out mid-value (the caller retries once
+/// more bytes arrive, re-parsing from the frame start — nothing is consumed
+/// until the whole frame parses) and a fatal error on syntactic garbage.
+struct SliceReader<'a> {
+    b: &'a [u8],
+    pos: usize,
 }
 
-/// A byte reader over one frame: every primitive read either completes,
-/// interrupts (shutdown observed in `Poll` mode), or fails fatally. EOF
-/// inside a frame is `UnexpectedEof`; EOF before the opcode is the clean
-/// kind.
-struct FrameReader<'a> {
-    r: &'a mut dyn BufRead,
-    mode: ReadMode<'a>,
-}
-
-/// A primitive read either yields a value or observes the stop flag.
-enum P<T> {
-    Val(T),
-    Interrupted,
-}
-
-macro_rules! prim {
-    ($e:expr) => {
-        match $e {
-            P::Val(v) => v,
-            P::Interrupted => return Ok(None),
-        }
-    };
-}
-
-impl FrameReader<'_> {
-    fn read_exact(&mut self, buf: &mut [u8]) -> Result<ReadExact> {
-        match self.mode {
-            ReadMode::Poll(stop) => read_exact_polled(self.r, buf, stop),
-            ReadMode::Deadline => read_exact_deadline(self.r, buf),
-        }
+impl<'a> SliceReader<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, pos: 0 }
     }
 
-    fn u8(&mut self) -> Result<P<u8>> {
-        let mut b = [0u8; 1];
-        match self.read_exact(&mut b)? {
-            // finger-lint: allow(FL001): read_exact filled the 1-byte buffer
-            ReadExact::Done => Ok(P::Val(b[0])),
-            ReadExact::Eof => Err(Error::new(
-                ErrorKind::UnexpectedEof,
-                "connection closed mid-frame",
-            )),
-            ReadExact::Interrupted => Ok(P::Interrupted),
+    fn u8(&mut self) -> Option<u8> {
+        let v = self.b.get(self.pos).copied();
+        if v.is_some() {
+            self.pos += 1;
         }
+        v
     }
 
-    fn varint(&mut self) -> Result<P<u64>> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        let s = self.b.get(self.pos..end)?;
+        self.pos = end;
+        Some(s)
+    }
+
+    fn varint(&mut self) -> Result<Option<u64>> {
         let mut v: u64 = 0;
         for shift in (0..64).step_by(7) {
-            let byte = match self.u8()? {
-                P::Val(b) => b,
-                P::Interrupted => return Ok(P::Interrupted),
+            let byte = match self.u8() {
+                Some(b) => b,
+                None => return Ok(None),
             };
             // the 10th byte lands at shift 63 and may only carry one bit;
             // anything more would silently truncate — reject, or a crafted
@@ -262,90 +283,143 @@ impl FrameReader<'_> {
             }
             v |= u64::from(byte & 0x7F) << shift;
             if byte & 0x80 == 0 {
-                return Ok(P::Val(v));
+                return Ok(Some(v));
             }
         }
         Err(bad("varint longer than 10 bytes"))
     }
 
-    fn usize_bounded(&mut self, max: usize, what: &str) -> Result<P<usize>> {
+    fn usize_bounded(&mut self, max: usize, what: &str) -> Result<Option<usize>> {
         match self.varint()? {
-            P::Val(v) if v <= max as u64 => Ok(P::Val(v as usize)),
-            P::Val(v) => Err(bad(format!("{what} {v} exceeds maximum {max}"))),
-            P::Interrupted => Ok(P::Interrupted),
+            Some(v) if v <= max as u64 => Ok(Some(v as usize)),
+            Some(v) => Err(bad(format!("{what} {v} exceeds maximum {max}"))),
+            None => Ok(None),
         }
     }
 
-    fn f64(&mut self) -> Result<P<f64>> {
+    fn f64(&mut self) -> Option<f64> {
+        let bytes = self.take(8)?;
         let mut b = [0u8; 8];
-        match self.read_exact(&mut b)? {
-            ReadExact::Done => Ok(P::Val(f64::from_bits(u64::from_le_bytes(b)))),
-            ReadExact::Eof => Err(Error::new(
-                ErrorKind::UnexpectedEof,
-                "connection closed mid-frame",
-            )),
-            ReadExact::Interrupted => Ok(P::Interrupted),
-        }
+        b.copy_from_slice(bytes);
+        Some(f64::from_bits(u64::from_le_bytes(b)))
     }
 
-    fn string(&mut self) -> Result<P<String>> {
+    fn string(&mut self) -> Result<Option<String>> {
         let len = match self.usize_bounded(MAX_LINE, "string length")? {
-            P::Val(v) => v,
-            P::Interrupted => return Ok(P::Interrupted),
+            Some(v) => v,
+            None => return Ok(None),
         };
-        let mut bytes = vec![0u8; len];
-        match self.read_exact(&mut bytes)? {
-            ReadExact::Done => {}
-            ReadExact::Eof => {
-                return Err(Error::new(
-                    ErrorKind::UnexpectedEof,
-                    "connection closed mid-frame",
-                ))
-            }
-            ReadExact::Interrupted => return Ok(P::Interrupted),
-        }
-        String::from_utf8(bytes)
-            .map(P::Val)
+        let bytes = match self.take(len) {
+            Some(b) => b,
+            None => return Ok(None),
+        };
+        String::from_utf8(bytes.to_vec())
+            .map(Some)
             .map_err(|_| bad("string is not valid UTF-8"))
     }
 
     /// Decode one event. Syntactic only — semantic validation
-    /// ([`validate_wire_event`]) runs on the completed frame so the whole
-    /// message is consumed either way.
-    fn event(&mut self) -> Result<P<StreamEvent>> {
-        let tag = match self.u8()? {
-            P::Val(t) => t,
-            P::Interrupted => return Ok(P::Interrupted),
+    /// ([`validate_wire_event`]) runs on the completed value so the whole
+    /// frame is consumed either way.
+    fn event(&mut self) -> Result<Option<StreamEvent>> {
+        let tag = match self.u8() {
+            Some(t) => t,
+            None => return Ok(None),
         };
         let ev = match tag {
             EV_EDGE => {
                 let i = match self.varint()? {
-                    P::Val(v) if v <= u32::MAX as u64 => v as u32,
-                    P::Val(v) => return Err(bad(format!("node id {v} exceeds u32"))),
-                    P::Interrupted => return Ok(P::Interrupted),
+                    Some(v) if v <= u32::MAX as u64 => v as u32,
+                    Some(v) => return Err(bad(format!("node id {v} exceeds u32"))),
+                    None => return Ok(None),
                 };
                 let j = match self.varint()? {
-                    P::Val(v) if v <= u32::MAX as u64 => v as u32,
-                    P::Val(v) => return Err(bad(format!("node id {v} exceeds u32"))),
-                    P::Interrupted => return Ok(P::Interrupted),
+                    Some(v) if v <= u32::MAX as u64 => v as u32,
+                    Some(v) => return Err(bad(format!("node id {v} exceeds u32"))),
+                    None => return Ok(None),
                 };
-                let dw = match self.f64()? {
-                    P::Val(v) => v,
-                    P::Interrupted => return Ok(P::Interrupted),
+                let dw = match self.f64() {
+                    Some(v) => v,
+                    None => return Ok(None),
                 };
                 StreamEvent::EdgeDelta { i, j, dw }
             }
             EV_GROW => match self.varint()? {
-                P::Val(v) => match usize::try_from(v) {
+                Some(v) => match usize::try_from(v) {
                     Ok(count) => StreamEvent::GrowNodes { count },
                     Err(_) => return Err(bad(format!("grow count {v} overflows"))),
                 },
-                P::Interrupted => return Ok(P::Interrupted),
+                None => return Ok(None),
             },
             EV_TICK => StreamEvent::Tick,
             other => return Err(bad(format!("unknown event tag {other:#04x}"))),
         };
-        Ok(P::Val(ev))
+        Ok(Some(ev))
+    }
+}
+
+/// A byte reader over one client-side reply frame. The socket read timeout
+/// IS the reply deadline ([`read_exact_deadline`], `[net]
+/// client_timeout_ms`): a hung server surfaces as an error, never a wedge.
+/// EOF inside a frame is `UnexpectedEof`; EOF before the opcode is the
+/// clean kind (handled by `read_reply`).
+struct FrameReader<'a> {
+    r: &'a mut dyn BufRead,
+}
+
+impl FrameReader<'_> {
+    fn read_exact(&mut self, buf: &mut [u8]) -> Result<()> {
+        match read_exact_deadline(self.r, buf)? {
+            ReadExact::Done => Ok(()),
+            ReadExact::Eof | ReadExact::Interrupted => Err(Error::new(
+                ErrorKind::UnexpectedEof,
+                "connection closed mid-frame",
+            )),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.read_exact(&mut b)?;
+        // finger-lint: allow(FL001): read_exact filled the 1-byte buffer
+        Ok(b[0])
+    }
+
+    fn varint(&mut self) -> Result<u64> {
+        let mut v: u64 = 0;
+        for shift in (0..64).step_by(7) {
+            let byte = self.u8()?;
+            if shift == 63 && byte & 0x7E != 0 {
+                return Err(bad("varint overflows u64"));
+            }
+            v |= u64::from(byte & 0x7F) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+        }
+        Err(bad("varint longer than 10 bytes"))
+    }
+
+    fn usize_bounded(&mut self, max: usize, what: &str) -> Result<usize> {
+        let v = self.varint()?;
+        if v <= max as u64 {
+            Ok(v as usize)
+        } else {
+            Err(bad(format!("{what} {v} exceeds maximum {max}")))
+        }
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        self.read_exact(&mut b)?;
+        Ok(f64::from_bits(u64::from_le_bytes(b)))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.usize_bounded(MAX_LINE, "string length")?;
+        let mut bytes = vec![0u8; len];
+        self.read_exact(&mut bytes)?;
+        String::from_utf8(bytes).map_err(|_| bad("string is not valid UTF-8"))
     }
 }
 
@@ -359,73 +433,92 @@ impl Codec for BinaryCodec {
         r: &mut dyn BufRead,
         stop: &dyn Fn() -> bool,
     ) -> Result<CommandRead> {
-        // the opcode read is the only place where EOF is clean (between
-        // frames); every later primitive treats EOF as a truncated frame
-        let mut op = [0u8; 1];
-        let opcode = match read_exact_polled(r, &mut op, stop)? {
-            // finger-lint: allow(FL001): read_exact filled the 1-byte buffer
-            ReadExact::Done => op[0],
-            ReadExact::Eof => return Ok(CommandRead::Eof),
-            ReadExact::Interrupted => return Ok(CommandRead::Interrupted),
-        };
-        let mut fr = FrameReader { r, mode: ReadMode::Poll(stop) };
-        // `prim!` early-returns Ok(None) on interruption; wrap so the macro
-        // shape stays uniform across the arms below
-        let decoded: Option<CommandRead> = (|| -> Result<Option<CommandRead>> {
+        // blocking shim over the incremental decoder: identical semantics,
+        // one framing implementation
+        let mut rbuf = std::mem::take(&mut self.rbuf);
+        let out = read_via_decode(&mut rbuf, r, stop, |buf, eof| self.decode(buf, eof));
+        self.rbuf = rbuf;
+        out
+    }
+
+    fn decode(&mut self, buf: &mut ReadBuf, eof: bool) -> Result<Decode> {
+        loop {
+            // an in-progress BATCH consumes its body event-by-event as the
+            // bytes arrive, decoding past a semantic error so the frame is
+            // consumed and framing stays intact — the same atomic-reject
+            // discipline as the text wire
+            while let Some(b) = self.batch.as_mut() {
+                if b.got == b.want {
+                    break;
+                }
+                let mut sr = SliceReader::new(buf.bytes());
+                let ev = need!(sr.event()?, eof);
+                buf.consume(sr.pos);
+                b.got += 1;
+                match validate_wire_event(&ev) {
+                    Ok(()) => b.events.push(ev),
+                    Err(reason) => {
+                        b.bad.get_or_insert((b.got, reason));
+                    }
+                }
+            }
+            if let Some(b) = self.batch.take() {
+                return Ok(match b.bad {
+                    Some((at, reason)) => {
+                        Decode::Malformed(format!("batch event {at}: {reason}"))
+                    }
+                    None => Decode::Cmd(Command::Batch { id: b.id, events: b.events }),
+                });
+            }
+            if buf.is_empty() {
+                return if eof { Ok(Decode::Eof) } else { Ok(Decode::Incomplete) };
+            }
+            let mut sr = SliceReader::new(buf.bytes());
+            let opcode = need!(sr.u8(), eof);
             let out = match opcode {
                 OP_OPEN => {
-                    let id = prim!(fr.string()?);
-                    let nodes = prim!(fr.varint()?);
+                    let id = need!(sr.string()?, eof);
+                    let nodes = need!(sr.varint()?, eof);
                     if nodes > MAX_OPEN_NODES as u64 {
-                        CommandRead::Malformed(format!(
-                            "OPEN: n exceeds maximum {MAX_OPEN_NODES}"
-                        ))
+                        Decode::Malformed(format!("OPEN: n exceeds maximum {MAX_OPEN_NODES}"))
                     } else {
-                        CommandRead::Cmd(Command::Open { id, nodes: nodes as usize })
+                        Decode::Cmd(Command::Open { id, nodes: nodes as usize })
                     }
                 }
                 OP_EV => {
-                    let id = prim!(fr.string()?);
-                    let ev = prim!(fr.event()?);
+                    let id = need!(sr.string()?, eof);
+                    let ev = need!(sr.event()?, eof);
                     match validate_wire_event(&ev) {
-                        Ok(()) => CommandRead::Cmd(Command::Event { id, ev }),
-                        Err(reason) => CommandRead::Malformed(format!("EV: {reason}")),
+                        Ok(()) => Decode::Cmd(Command::Event { id, ev }),
+                        Err(reason) => Decode::Malformed(format!("EV: {reason}")),
                     }
                 }
                 OP_BATCH => {
-                    let id = prim!(fr.string()?);
-                    let count = prim!(fr.usize_bounded(MAX_BATCH, "BATCH count")?);
-                    // decode all `count` events even past a semantic error,
-                    // so the frame is consumed and framing stays intact —
-                    // the same atomic-reject discipline as the text wire
-                    let mut events = Vec::with_capacity(count.min(4096));
-                    let mut badev: Option<(usize, &'static str)> = None;
-                    for k in 1..=count {
-                        let ev = prim!(fr.event()?);
-                        match validate_wire_event(&ev) {
-                            Ok(()) => events.push(ev),
-                            Err(reason) => {
-                                badev.get_or_insert((k, reason));
-                            }
-                        }
-                    }
-                    match badev {
-                        Some((at, reason)) => CommandRead::Malformed(format!(
-                            "batch event {at}: {reason}"
-                        )),
-                        None => CommandRead::Cmd(Command::Batch { id, events }),
-                    }
+                    let id = need!(sr.string()?, eof);
+                    let count = need!(sr.usize_bounded(MAX_BATCH, "BATCH count")?, eof);
+                    buf.consume(sr.pos);
+                    // cap the prealloc: the header's count is
+                    // attacker-controlled, and a bare `BATCH a 1048576`
+                    // must not pin ~24 MB per idle connection
+                    self.batch = Some(BinBatch {
+                        id,
+                        want: count,
+                        got: 0,
+                        events: Vec::with_capacity(count.min(4096)),
+                        bad: None,
+                    });
+                    continue;
                 }
-                OP_QUERY => CommandRead::Cmd(Command::Query { id: prim!(fr.string()?) }),
-                OP_CLOSE => CommandRead::Cmd(Command::Close { id: prim!(fr.string()?) }),
-                OP_STATS => CommandRead::Cmd(Command::Stats),
-                OP_QUIT => CommandRead::Cmd(Command::Quit),
-                OP_SHUTDOWN => CommandRead::Cmd(Command::Shutdown),
+                OP_QUERY => Decode::Cmd(Command::Query { id: need!(sr.string()?, eof) }),
+                OP_CLOSE => Decode::Cmd(Command::Close { id: need!(sr.string()?, eof) }),
+                OP_STATS => Decode::Cmd(Command::Stats),
+                OP_QUIT => Decode::Cmd(Command::Quit),
+                OP_SHUTDOWN => Decode::Cmd(Command::Shutdown),
                 other => return Err(bad(format!("unknown command opcode {other:#04x}"))),
             };
-            Ok(Some(out))
-        })()?;
-        Ok(decoded.unwrap_or(CommandRead::Interrupted))
+            buf.consume(sr.pos);
+            return Ok(out);
+        }
     }
 
     fn write_reply(&mut self, w: &mut dyn Write, reply: &Reply) -> Result<()> {
@@ -458,35 +551,34 @@ impl Codec for BinaryCodec {
         let opcode = match read_exact_deadline(r, &mut op)? {
             // finger-lint: allow(FL001): read_exact filled the 1-byte buffer
             ReadExact::Done => op[0],
-            ReadExact::Eof => return Ok(None),
-            // finger-lint: allow(FL001): deadline reads never return Interrupted
-            ReadExact::Interrupted => unreachable!("deadline reads never interrupt"),
+            // deadline reads never interrupt; treat it as the clean EOF arm
+            ReadExact::Eof | ReadExact::Interrupted => return Ok(None),
         };
-        let mut fr = FrameReader { r, mode: ReadMode::Deadline };
+        let mut fr = FrameReader { r };
         let reply = match opcode {
             OP_OK => Reply::Ok,
             OP_OKKV => {
-                let n = prim!(fr.usize_bounded(MAX_KV_PAIRS, "kv pair count")?);
+                let n = fr.usize_bounded(MAX_KV_PAIRS, "kv pair count")?;
                 let mut pairs = Vec::with_capacity(n);
                 for _ in 0..n {
-                    let k = prim!(fr.string()?);
-                    let v = prim!(fr.string()?);
+                    let k = fr.string()?;
+                    let v = fr.string()?;
                     pairs.push((k, v));
                 }
                 Reply::OkKv(pairs)
             }
             OP_SNAPSHOT => {
-                let windows = prim!(fr.varint()?) as usize;
-                let events = prim!(fr.varint()?) as usize;
-                let nodes = prim!(fr.varint()?) as usize;
-                let edges = prim!(fr.varint()?) as usize;
-                let anomalies = prim!(fr.varint()?) as usize;
-                let pending_events = prim!(fr.varint()?) as usize;
-                let last_anomalous = prim!(fr.u8()?) != 0;
-                let htilde = prim!(fr.f64()?);
-                let last_jsdist = match prim!(fr.u8()?) {
+                let windows = fr.varint()? as usize;
+                let events = fr.varint()? as usize;
+                let nodes = fr.varint()? as usize;
+                let edges = fr.varint()? as usize;
+                let anomalies = fr.varint()? as usize;
+                let pending_events = fr.varint()? as usize;
+                let last_anomalous = fr.u8()? != 0;
+                let htilde = fr.f64()?;
+                let last_jsdist = match fr.u8()? {
                     0 => None,
-                    1 => Some(prim!(fr.f64()?)),
+                    1 => Some(fr.f64()?),
                     other => return Err(bad(format!("bad jsdist flag {other}"))),
                 };
                 Reply::Snapshot(SessionSnapshot {
@@ -502,7 +594,7 @@ impl Codec for BinaryCodec {
                     pending_events,
                 })
             }
-            OP_ERR => Reply::Err(prim!(fr.string()?)),
+            OP_ERR => Reply::Err(fr.string()?),
             other => return Err(bad(format!("unknown reply opcode {other:#04x}"))),
         };
         Ok(Some(reply))
@@ -687,6 +779,38 @@ mod tests {
         assert_eq!(err.kind(), ErrorKind::UnexpectedEof);
     }
 
+    #[test]
+    fn incremental_batch_decode_keeps_the_buffer_bounded() {
+        let events: Vec<StreamEvent> = (0..10_000)
+            .map(|k| StreamEvent::EdgeDelta { i: k, j: k + 1, dw: 1.0 })
+            .collect();
+        let want = events.len();
+        let mut payload = Vec::new();
+        BinaryCodec::encode_command(&mut payload, &Command::Batch { id: "big".into(), events });
+        let mut codec = BinaryCodec::new();
+        let mut buf = ReadBuf::new();
+        let mut got = None;
+        for chunk in payload.chunks(512) {
+            buf.extend(chunk);
+            match codec.decode(&mut buf, false).unwrap() {
+                Decode::Incomplete => {
+                    // the buffer holds at most one partial event plus the
+                    // unconsumed tail of the current chunk, never the frame
+                    assert!(buf.len() < 600, "buffer grew to {}", buf.len());
+                }
+                Decode::Cmd(c) => got = Some(c),
+                other => panic!("unexpected decode outcome: {other:?}"),
+            }
+        }
+        match got {
+            Some(Command::Batch { id, events }) => {
+                assert_eq!(id, "big");
+                assert_eq!(events.len(), want);
+            }
+            other => panic!("batch did not decode: {other:?}"),
+        }
+    }
+
     /// Yields its bytes, then `WouldBlock` forever — a hung server as seen
     /// through a socket with a read timeout.
     struct HungAfter(Cursor<Vec<u8>>);
@@ -722,28 +846,31 @@ mod tests {
 
     #[test]
     fn varint_boundaries() {
-        let never = || false;
         for v in [0u64, 1, 127, 128, 16_383, 16_384, u32::MAX as u64, u64::MAX] {
             let mut buf = Vec::new();
             put_varint(&mut buf, v);
-            let mut r = Cursor::new(buf);
-            let mut fr = FrameReader { r: &mut r, mode: ReadMode::Poll(&never) };
-            match fr.varint().unwrap() {
-                P::Val(got) => assert_eq!(got, v),
-                P::Interrupted => unreachable!(),
-            }
+            let mut sr = SliceReader::new(&buf);
+            assert_eq!(sr.varint().unwrap(), Some(v));
+            assert_eq!(sr.pos, buf.len(), "whole varint consumed");
         }
+        // a truncated varint is "need more bytes", not an error
+        let mut buf = Vec::new();
+        put_varint(&mut buf, 16_384);
+        let mut sr = SliceReader::new(&buf[..1]);
+        assert_eq!(sr.varint().unwrap(), None);
         // an 11-byte continuation run is rejected
-        let mut r = Cursor::new(vec![0x80u8; 11]);
-        let mut fr = FrameReader { r: &mut r, mode: ReadMode::Deadline };
-        assert!(fr.varint().is_err());
+        let mut sr = SliceReader::new(&[0x80u8; 11]);
+        assert!(sr.varint().is_err());
         // a 10th byte carrying bits past u64 would silently truncate (e.g.
         // 0x02<<63 wraps to 0, turning a huge length prefix into a small
         // one and desynchronizing the frame) — must be rejected, not wrapped
         let mut overflow = vec![0x80u8; 9];
         overflow.push(0x02);
-        let mut r = Cursor::new(overflow);
-        let mut fr = FrameReader { r: &mut r, mode: ReadMode::Deadline };
+        let mut sr = SliceReader::new(&overflow);
+        assert!(sr.varint().is_err());
+        // the client-side FrameReader enforces the same strictness
+        let mut r = Cursor::new(vec![0x80u8; 11]);
+        let mut fr = FrameReader { r: &mut r };
         assert!(fr.varint().is_err());
     }
 }

@@ -127,13 +127,165 @@ pub enum CommandRead {
     Interrupted,
 }
 
+/// Outcome of one incremental [`Codec::decode`] step over a [`ReadBuf`].
+///
+/// The decoder is restartable: it consumes bytes from the buffer only once
+/// a complete frame (or a complete recoverable error) is available, so a
+/// partially-arrived frame parks in the buffer and the next `decode` call
+/// resumes exactly where the wire left off.
+#[derive(Debug, PartialEq)]
+pub enum Decode {
+    /// A complete, well-formed command was consumed from the buffer.
+    Cmd(Command),
+    /// A recoverable protocol error; the offending frame was fully consumed
+    /// and the caller should reply `ERR` and keep decoding.
+    Malformed(String),
+    /// Not enough buffered bytes for a complete frame. Only returned while
+    /// `eof == false`; at EOF a decoder resolves every outcome.
+    Incomplete,
+    /// Clean end of stream at a frame boundary (only when `eof == true`).
+    Eof,
+}
+
+/// A per-connection read buffer feeding incremental [`Codec::decode`] calls.
+///
+/// Bytes are appended at the tail ([`ReadBuf::fill_from`] /
+/// [`ReadBuf::extend`]) and consumed from the head as the decoder completes
+/// frames; the consumed prefix is reclaimed lazily so steady-state decoding
+/// does not shift bytes on every frame. Decoders keep the unconsumed tail
+/// bounded (oversized text lines drain through a capped scratch and binary
+/// batches are consumed event-by-event), so the buffer never grows past one
+/// frame head plus one read chunk.
+#[derive(Debug, Default)]
+pub struct ReadBuf {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl ReadBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reuse a pooled allocation (the event loop recycles buffers across
+    /// connections, the same scratch discipline as `entropy::Scratch`).
+    pub fn from_vec(mut v: Vec<u8>) -> Self {
+        v.clear();
+        Self { buf: v, start: 0 }
+    }
+
+    /// Surrender the backing allocation (for pooling).
+    pub fn into_vec(mut self) -> Vec<u8> {
+        self.buf.clear();
+        self.buf
+    }
+
+    /// The unconsumed bytes.
+    pub fn bytes(&self) -> &[u8] {
+        // finger-lint: allow(FL001): start <= buf.len() is a struct invariant
+        &self.buf[self.start..]
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.buf.len()
+    }
+
+    /// Mark `n` unconsumed bytes as consumed.
+    pub fn consume(&mut self, n: usize) {
+        self.start = (self.start + n).min(self.buf.len());
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        }
+    }
+
+    /// Append bytes (tests and in-memory feeds).
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Reclaim the consumed prefix so appended bytes reuse the allocation.
+    fn compact(&mut self) {
+        if self.start > 0 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+    }
+
+    /// One `read` call appending at most `max` bytes. Returns the byte
+    /// count straight from the reader: `Ok(0)` is EOF, `WouldBlock` means
+    /// the (nonblocking) source is drained for now.
+    pub fn fill_from(&mut self, r: &mut dyn Read, max: usize) -> std::io::Result<usize> {
+        self.compact();
+        let old = self.buf.len();
+        self.buf.resize(old + max, 0);
+        // finger-lint: allow(FL001): old <= buf.len() after the resize above
+        let res = r.read(&mut self.buf[old..]);
+        let filled = match &res {
+            Ok(n) => *n,
+            Err(_) => 0,
+        };
+        self.buf.truncate(old + filled);
+        res
+    }
+}
+
+/// Read chunk size for [`read_via_decode`] and the event loop's per-call
+/// socket reads.
+pub(crate) const READ_CHUNK: usize = 8 * 1024;
+
+/// Drive an incremental decoder against a blocking reader, reproducing the
+/// classic `read_command` semantics: reads that time out poll `stop`, EOF
+/// at a frame boundary is clean, EOF inside a frame surfaces whatever the
+/// decoder resolves it to (text completes the final line; binary fails with
+/// `UnexpectedEof`).
+pub(crate) fn read_via_decode(
+    rbuf: &mut ReadBuf,
+    r: &mut dyn BufRead,
+    stop: &dyn Fn() -> bool,
+    mut decode: impl FnMut(&mut ReadBuf, bool) -> std::io::Result<Decode>,
+) -> std::io::Result<CommandRead> {
+    let mut eof = false;
+    loop {
+        match decode(rbuf, eof)? {
+            Decode::Cmd(cmd) => return Ok(CommandRead::Cmd(cmd)),
+            Decode::Malformed(reason) => return Ok(CommandRead::Malformed(reason)),
+            Decode::Eof => return Ok(CommandRead::Eof),
+            Decode::Incomplete => {}
+        }
+        if eof {
+            // contract violation backstop: at EOF a decoder must resolve
+            return Err(std::io::Error::new(
+                ErrorKind::UnexpectedEof,
+                "connection closed mid-frame",
+            ));
+        }
+        match rbuf.fill_from(r, READ_CHUNK) {
+            Ok(0) => eof = true,
+            Ok(_) => {}
+            Err(e) => match e.kind() {
+                ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted => {
+                    if stop() {
+                        return Ok(CommandRead::Interrupted);
+                    }
+                }
+                _ => return Err(e),
+            },
+        }
+    }
+}
+
 /// One wire format, both directions. `read_command` / `write_reply` are the
 /// server side; `write_command` / `read_reply` mirror them on the client.
 ///
-/// `read_command` takes a `stop` predicate polled whenever a read times out
-/// (the server sets a socket read timeout so a drained connection can't
-/// outlive a shutdown request); in-memory readers never time out, so
-/// round-trip tests can pass `&|| false`.
+/// `read_command` takes a `stop` predicate polled whenever a read times out;
+/// the event-driven server decodes incrementally instead, so the blocking
+/// entry point now serves round-trip tests and simple embedding callers
+/// (in-memory readers never time out — pass `&|| false`).
 pub trait Codec: Send {
     fn wire(&self) -> Wire;
 
@@ -143,6 +295,22 @@ pub trait Codec: Send {
         r: &mut dyn BufRead,
         stop: &dyn Fn() -> bool,
     ) -> std::io::Result<CommandRead>;
+
+    /// Incrementally decode one command frame from buffered bytes.
+    ///
+    /// Consumes bytes from `buf` only when a complete frame (or complete
+    /// recoverable error) is available; otherwise returns
+    /// [`Decode::Incomplete`] and the partial frame parks in the buffer —
+    /// the readiness-driven server never blocks a thread on a slow sender.
+    /// In-progress multi-part frames (a `BATCH` header whose body is still
+    /// arriving, an oversized text line being drained) keep their state in
+    /// the codec, so calls must always use the same buffer.
+    ///
+    /// `eof` means the peer closed its write side: the decoder must resolve
+    /// every outcome (no `Incomplete`) — text completes an unterminated
+    /// final line, binary fails a truncated frame with `UnexpectedEof`, and
+    /// an empty buffer at a frame boundary is a clean [`Decode::Eof`].
+    fn decode(&mut self, buf: &mut ReadBuf, eof: bool) -> std::io::Result<Decode>;
 
     /// Write one reply frame.
     fn write_reply(&mut self, w: &mut dyn Write, reply: &Reply) -> std::io::Result<()>;
@@ -171,6 +339,44 @@ pub trait Codec: Send {
 /// connect).
 pub fn write_binary_preamble(w: &mut dyn Write) -> std::io::Result<()> {
     w.write_all(&[BINARY_MAGIC, BINARY_VERSION])
+}
+
+/// Outcome of buffer-fed codec negotiation ([`negotiate_buf`]).
+pub enum NegotiatedBuf {
+    Codec(Box<dyn Codec>),
+    /// A lone magic byte is buffered; the version byte is still on the wire.
+    Incomplete,
+    /// The magic byte arrived with an unsupported version; the reason should
+    /// be sent as a binary `Err` frame (the peer speaks binary) and the
+    /// connection closed.
+    BadPreamble(String),
+}
+
+/// The event-driven server's analogue of [`negotiate`]: decide the codec
+/// from the first buffered byte(s). Text consumes nothing (the first byte
+/// is the start of a request line); a binary preamble consumes exactly its
+/// two bytes. EOF-before-first-byte is the caller's case (empty buffer at
+/// peer close).
+pub fn negotiate_buf(buf: &mut ReadBuf) -> NegotiatedBuf {
+    let bytes = buf.bytes();
+    let first = match bytes.first() {
+        Some(&b) => b,
+        None => return NegotiatedBuf::Incomplete,
+    };
+    if first != BINARY_MAGIC {
+        return NegotiatedBuf::Codec(Box::new(TextCodec::new()));
+    }
+    let version = match bytes.get(1) {
+        Some(&v) => v,
+        None => return NegotiatedBuf::Incomplete,
+    };
+    buf.consume(2);
+    if version != BINARY_VERSION {
+        return NegotiatedBuf::BadPreamble(format!(
+            "unsupported binary version {version} (want {BINARY_VERSION})"
+        ));
+    }
+    NegotiatedBuf::Codec(Box::new(BinaryCodec::new()))
 }
 
 /// Outcome of server-side codec negotiation.
@@ -332,6 +538,99 @@ mod tests {
         match negotiate(&mut Cursor::new(Vec::new()), &|| false).unwrap() {
             Negotiated::Eof => {}
             _ => panic!("empty stream is a clean EOF"),
+        }
+    }
+
+    #[test]
+    fn readbuf_consume_and_fill_keep_the_tail_intact() {
+        let mut b = ReadBuf::new();
+        assert!(b.is_empty());
+        b.extend(b"hello world");
+        assert_eq!(b.bytes(), b"hello world");
+        b.consume(6);
+        assert_eq!(b.bytes(), b"world");
+        assert_eq!(b.len(), 5);
+        let n = b
+            .fill_from(&mut Cursor::new(b"!!".to_vec()), 16)
+            .expect("cursor read");
+        assert_eq!(n, 2);
+        assert_eq!(b.bytes(), b"world!!");
+        b.consume(100); // over-consume clamps and resets
+        assert!(b.is_empty());
+        assert_eq!(b.fill_from(&mut Cursor::new(Vec::new()), 16).expect("eof"), 0);
+    }
+
+    #[test]
+    fn negotiate_buf_matches_the_blocking_negotiation() {
+        let mut text = ReadBuf::new();
+        text.extend(b"QUERY a\n");
+        match negotiate_buf(&mut text) {
+            NegotiatedBuf::Codec(c) => assert_eq!(c.wire(), Wire::Text),
+            _ => panic!("text bytes must negotiate a codec"),
+        }
+        assert_eq!(text.bytes(), b"QUERY a\n", "text negotiation consumes nothing");
+
+        let mut bin = ReadBuf::new();
+        bin.extend(&[BINARY_MAGIC]);
+        assert!(matches!(negotiate_buf(&mut bin), NegotiatedBuf::Incomplete));
+        bin.extend(&[BINARY_VERSION, 0x07]);
+        match negotiate_buf(&mut bin) {
+            NegotiatedBuf::Codec(c) => assert_eq!(c.wire(), Wire::Binary),
+            _ => panic!("binary preamble must negotiate a codec"),
+        }
+        assert_eq!(bin.bytes(), &[0x07], "only the preamble is consumed");
+
+        let mut bad = ReadBuf::new();
+        bad.extend(&[BINARY_MAGIC, 9]);
+        match negotiate_buf(&mut bad) {
+            NegotiatedBuf::BadPreamble(reason) => assert!(reason.contains("version 9")),
+            _ => panic!("wrong version must be refused"),
+        }
+
+        assert!(matches!(negotiate_buf(&mut ReadBuf::new()), NegotiatedBuf::Incomplete));
+    }
+
+    /// Feeding a frame stream one byte at a time through `decode` must
+    /// yield exactly the same commands as the blocking `read_command` path
+    /// — on both wires.
+    #[test]
+    fn byte_at_a_time_decode_matches_blocking_read() {
+        let cmds = vec![
+            Command::Open { id: "tenant/1".into(), nodes: 16 },
+            Command::Batch {
+                id: "b".into(),
+                events: vec![
+                    crate::stream::StreamEvent::EdgeDelta { i: 0, j: 1, dw: 0.5 },
+                    crate::stream::StreamEvent::GrowNodes { count: 2 },
+                    crate::stream::StreamEvent::Tick,
+                ],
+            },
+            Command::Query { id: "tenant/1".into() },
+            Command::Stats,
+            Command::Quit,
+        ];
+        for wire in [Wire::Text, Wire::Binary] {
+            let mut payload = Vec::new();
+            let mut enc = wire.codec();
+            for cmd in &cmds {
+                enc.write_command(&mut payload, cmd).expect("encode");
+            }
+            let mut dec = wire.codec();
+            let mut buf = ReadBuf::new();
+            let mut got = Vec::new();
+            for (i, byte) in payload.iter().enumerate() {
+                buf.extend(&[*byte]);
+                let eof = i + 1 == payload.len();
+                loop {
+                    match dec.decode(&mut buf, eof).expect("decode") {
+                        Decode::Cmd(c) => got.push(c),
+                        Decode::Incomplete | Decode::Eof => break,
+                        Decode::Malformed(m) => panic!("unexpected malformed: {m}"),
+                    }
+                }
+            }
+            assert_eq!(got, cmds, "{wire} wire");
+            assert!(buf.is_empty(), "{wire} wire leaves no residue");
         }
     }
 

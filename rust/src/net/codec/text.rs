@@ -19,15 +19,34 @@
 use super::super::command::{
     parse_wire_event, snapshot_to_kv, Command, Reply, MAX_BATCH, MAX_LINE, MAX_OPEN_NODES,
 };
-use super::{Codec, CommandRead, Wire};
+use super::{read_via_decode, Codec, CommandRead, Decode, ReadBuf, Wire};
 use crate::service::{decode_session_id, encode_session_id};
 use crate::stream::StreamEvent;
-use std::io::{BufRead, ErrorKind, Read, Write};
+use std::io::{BufRead, ErrorKind, Write};
 
-/// The line-protocol codec. Stateless apart from a reusable line buffer.
+/// The line-protocol codec.
+///
+/// Carries the incremental-decode state a readiness-driven server needs:
+/// a read buffer for the blocking [`Codec::read_command`] shim, the capped
+/// prefix of an oversized line being drained, and an in-progress `BATCH`
+/// whose body lines are still arriving.
 #[derive(Debug, Default)]
 pub struct TextCodec {
     line: String,
+    rbuf: ReadBuf,
+    discard: Option<String>,
+    batch: Option<TextBatch>,
+}
+
+/// An in-progress `BATCH`: the header has been consumed and `got` of the
+/// `want` body lines have arrived so far.
+#[derive(Debug)]
+struct TextBatch {
+    id: String,
+    want: usize,
+    got: usize,
+    events: Vec<StreamEvent>,
+    bad: Option<(usize, &'static str)>,
 }
 
 impl TextCodec {
@@ -192,80 +211,91 @@ fn no_more(mut it: std::str::SplitWhitespace<'_>, verb: &str) -> Result<(), Stri
     }
 }
 
-/// Outcome of one polled line read.
-enum LineRead {
-    /// A complete line (without the trailing newline) in the buffer.
-    Line,
-    /// Clean end of stream.
-    Eof,
-    /// The `stop` poll fired.
-    Interrupted,
+/// Outcome of one incremental line extraction.
+enum NextLine {
+    /// A complete line (trailing `\r`/`\n` stripped).
+    Line(String),
+    /// Clean end of stream at a line boundary.
+    End,
+    /// No complete line buffered yet.
+    More,
 }
 
-/// Read one `\n`-terminated line, polling `stop` on read timeouts. Bytes
-/// are accumulated with `read_until` (not `read_line`), so a timeout
-/// landing mid multi-byte UTF-8 character cannot discard already-received
-/// bytes — invalid UTF-8 is surfaced lossily and rejected by the parser
-/// rather than silently dropped.
+fn trim_line_end(line: &mut String) {
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+}
+
+/// Pull one `\n`-terminated line out of the buffer, if a complete one is
+/// available. Bytes stay raw until a full line arrives, so a read landing
+/// mid multi-byte UTF-8 character cannot discard already-received bytes —
+/// invalid UTF-8 is surfaced lossily and rejected by the parser rather
+/// than silently dropped.
 ///
 /// The line is capped at just over [`MAX_LINE`] bytes: the prefix of an
-/// oversized line is returned (and rejected by the parser) while its
-/// remaining bytes are *discarded through the newline* in bounded chunks —
-/// the buffer never grows past the cap and the tail is never misparsed as
-/// further requests, preserving one-reply-per-request framing.
-fn read_line_polled(
-    reader: &mut dyn BufRead,
-    buf: &mut String,
-    stop: &dyn Fn() -> bool,
-) -> std::io::Result<LineRead> {
-    buf.clear();
-    let mut bytes: Vec<u8> = Vec::new();
-    let mut discard: Vec<u8> = Vec::new();
-    let outcome = loop {
-        // phase 1 accumulates into `bytes` until the cap; phase 2
-        // (oversized) drains the rest of the physical line into a bounded
-        // scratch so the tail is never misparsed as further requests
-        let oversized = bytes.len() > MAX_LINE;
-        let (target, budget) = if oversized {
-            discard.clear();
-            (&mut discard, MAX_LINE as u64)
-        } else {
-            let budget = (MAX_LINE + 2 - bytes.len()) as u64;
-            (&mut bytes, budget)
-        };
-        let mut limited = (&mut *reader).take(budget);
-        match limited.read_until(b'\n', target) {
-            Ok(0) => {
-                // budget is always > 0, so 0 bytes means real EOF
-                break if bytes.is_empty() { LineRead::Eof } else { LineRead::Line };
-            }
-            Ok(n) => {
-                if target.last() == Some(&b'\n') {
-                    break LineRead::Line;
+/// oversized line is parked in `discard` (and later rejected by the
+/// parser) while its remaining bytes are *discarded through the newline* —
+/// the buffer never holds more than the cap plus one read chunk and the
+/// tail is never misparsed as further requests, preserving
+/// one-reply-per-request framing.
+///
+/// At `eof` an unterminated final line is surfaced as a line (the peer
+/// sent bytes it expects to be parsed) and an empty buffer is `End`.
+fn next_line(discard: &mut Option<String>, buf: &mut ReadBuf, eof: bool) -> NextLine {
+    loop {
+        if discard.is_some() {
+            // oversized line: throw the tail away through the newline, then
+            // surface the capped prefix so the parser rejects it
+            let newline = buf.bytes().iter().position(|&b| b == b'\n');
+            match newline {
+                Some(i) => {
+                    buf.consume(i + 1);
+                    let mut line = discard.take().unwrap_or_default();
+                    trim_line_end(&mut line);
+                    return NextLine::Line(line);
                 }
-                // no newline: the cap was hit (n == budget → keep draining)
-                // or the stream ended mid-line (surface what arrived)
-                if (n as u64) < budget {
-                    break LineRead::Line;
-                }
-            }
-            Err(e) => match e.kind() {
-                ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted => {
-                    if stop() {
-                        break LineRead::Interrupted;
+                None => {
+                    let n = buf.len();
+                    buf.consume(n);
+                    if eof {
+                        return NextLine::Line(discard.take().unwrap_or_default());
                     }
+                    return NextLine::More;
                 }
-                _ => return Err(e),
-            },
+            }
         }
-    };
-    if matches!(outcome, LineRead::Line) {
-        while matches!(bytes.last(), Some(b'\n') | Some(b'\r')) {
-            bytes.pop();
+        let bytes = buf.bytes();
+        match bytes.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                let mut line = String::from_utf8_lossy(bytes.get(..i).unwrap_or(&[]))
+                    .into_owned();
+                buf.consume(i + 1);
+                trim_line_end(&mut line);
+                return NextLine::Line(line);
+            }
+            None if bytes.len() > MAX_LINE + 2 => {
+                let cap = MAX_LINE + 2;
+                let prefix =
+                    String::from_utf8_lossy(bytes.get(..cap).unwrap_or(bytes)).into_owned();
+                buf.consume(cap);
+                *discard = Some(prefix);
+            }
+            None => {
+                if !eof {
+                    return NextLine::More;
+                }
+                if bytes.is_empty() {
+                    return NextLine::End;
+                }
+                let mut line = String::from_utf8_lossy(bytes).into_owned();
+                let n = buf.len();
+                buf.consume(n);
+                trim_line_end(&mut line);
+                return NextLine::Line(line);
+            }
         }
-        buf.push_str(&String::from_utf8_lossy(&bytes));
     }
-    Ok(outcome)
 }
 
 impl Codec for TextCodec {
@@ -278,60 +308,77 @@ impl Codec for TextCodec {
         r: &mut dyn BufRead,
         stop: &dyn Fn() -> bool,
     ) -> std::io::Result<CommandRead> {
-        let mut line = std::mem::take(&mut self.line);
-        let out = loop {
-            match read_line_polled(r, &mut line, stop)? {
-                LineRead::Eof => break CommandRead::Eof,
-                LineRead::Interrupted => break CommandRead::Interrupted,
-                LineRead::Line => {}
-            }
-            if line.trim().is_empty() {
-                continue; // blank lines are keep-alive noise, not errors
-            }
-            match TextCodec::parse_request_line(&line) {
-                Err(reason) => break CommandRead::Malformed(reason),
-                Ok(Parsed::Cmd(cmd)) => break CommandRead::Cmd(cmd),
-                Ok(Parsed::BatchHeader { id, count }) => {
-                    // consume exactly `count` event lines. All of them are
-                    // read even when one is malformed — the protocol stays
-                    // line-synchronized and only the batch is rejected.
-                    // Cap the prealloc: the header's count is attacker-
-                    // controlled, and a bare `BATCH a 1048576` must not pin
-                    // ~24 MB per idle connection.
-                    let mut events = Vec::with_capacity(count.min(4096));
-                    let mut bad: Option<(usize, &'static str)> = None;
-                    let mut interrupted = None;
-                    for k in 1..=count {
-                        match read_line_polled(r, &mut line, stop)? {
-                            LineRead::Line => {}
-                            LineRead::Eof => {
-                                interrupted = Some(CommandRead::Eof);
-                                break;
-                            }
-                            LineRead::Interrupted => {
-                                interrupted = Some(CommandRead::Interrupted);
-                                break;
-                            }
-                        }
+        // blocking shim over the incremental decoder: identical semantics,
+        // one framing implementation
+        let mut rbuf = std::mem::take(&mut self.rbuf);
+        let out = read_via_decode(&mut rbuf, r, stop, |buf, eof| self.decode(buf, eof));
+        self.rbuf = rbuf;
+        out
+    }
+
+    fn decode(&mut self, buf: &mut ReadBuf, eof: bool) -> std::io::Result<Decode> {
+        loop {
+            // an in-progress BATCH consumes exactly `want` body lines. All
+            // of them are read even when one is malformed — the protocol
+            // stays line-synchronized and only the batch is rejected.
+            while let Some(b) = self.batch.as_mut() {
+                if b.got == b.want {
+                    break;
+                }
+                match next_line(&mut self.discard, buf, eof) {
+                    NextLine::More => return Ok(Decode::Incomplete),
+                    NextLine::End => {
+                        // peer closed mid-batch: mirror the blocking path's
+                        // clean EOF (nothing useful can be replied)
+                        self.batch = None;
+                        return Ok(Decode::Eof);
+                    }
+                    NextLine::Line(line) => {
+                        b.got += 1;
                         match parse_wire_event(&line) {
-                            Ok(ev) => events.push(ev),
+                            Ok(ev) => b.events.push(ev),
                             Err(reason) => {
-                                bad.get_or_insert((k, reason));
+                                b.bad.get_or_insert((b.got, reason));
                             }
                         }
                     }
-                    break match (interrupted, bad) {
-                        (Some(end), _) => end,
-                        (None, Some((at, reason))) => {
-                            CommandRead::Malformed(format!("batch line {at}: {reason}"))
-                        }
-                        (None, None) => CommandRead::Cmd(Command::Batch { id, events }),
-                    };
                 }
             }
-        };
-        self.line = line;
-        Ok(out)
+            if let Some(b) = self.batch.take() {
+                return Ok(match b.bad {
+                    Some((at, reason)) => {
+                        Decode::Malformed(format!("batch line {at}: {reason}"))
+                    }
+                    None => Decode::Cmd(Command::Batch { id: b.id, events: b.events }),
+                });
+            }
+            match next_line(&mut self.discard, buf, eof) {
+                NextLine::More => return Ok(Decode::Incomplete),
+                NextLine::End => return Ok(Decode::Eof),
+                NextLine::Line(line) => {
+                    if line.trim().is_empty() {
+                        continue; // blank lines are keep-alive noise, not errors
+                    }
+                    match TextCodec::parse_request_line(&line) {
+                        Err(reason) => return Ok(Decode::Malformed(reason)),
+                        Ok(Parsed::Cmd(cmd)) => return Ok(Decode::Cmd(cmd)),
+                        Ok(Parsed::BatchHeader { id, count }) => {
+                            // Cap the prealloc: the header's count is
+                            // attacker-controlled, and a bare
+                            // `BATCH a 1048576` must not pin ~24 MB per
+                            // idle connection.
+                            self.batch = Some(TextBatch {
+                                id,
+                                want: count,
+                                got: 0,
+                                events: Vec::with_capacity(count.min(4096)),
+                                bad: None,
+                            });
+                        }
+                    }
+                }
+            }
+        }
     }
 
     fn write_reply(&mut self, w: &mut dyn Write, reply: &Reply) -> std::io::Result<()> {

@@ -6,7 +6,10 @@
 //! of in post-hoc batch jobs. This module turns the in-process sharded
 //! [`ScoringService`](crate::service::ScoringService) into exactly that — a
 //! TCP server plus the client and load-driver tooling around it. Everything
-//! is `std::net` + threads: no async runtime dependency.
+//! is `std::net` + a fixed pool of event-loop threads multiplexing
+//! nonblocking sockets over `poll(2)`: no async runtime dependency, and no
+//! thread per connection — tens of thousands of concurrent connections ride
+//! on a handful of threads.
 //!
 //! The API is split into a transport-independent command core and pluggable
 //! wire codecs:
@@ -20,49 +23,60 @@
 //!   length-prefixed framing: opcode byte, varint lengths, f64 scores and
 //!   weights as raw bits). Both share one port — a binary connection opens
 //!   with a magic-byte preamble and the server negotiates per connection.
+//!   Both codecs decode *incrementally* from a per-connection [`ReadBuf`]:
+//!   partial frames park in the buffer and in-progress multi-part state
+//!   stays in the codec, which is what lets one thread serve many sockets.
 //!   Spec for both wires: `docs/PROTOCOL.md`.
+//! * [`poll`] — the crate's one FFI point: a dependency-free `poll(2)`
+//!   wrapper the event loops park in.
 //!
 //! # Architecture
 //!
 //! ```text
 //!        TCP (one reply frame per command frame, wire negotiated)
 //!  client (text) ────────┐
-//!  client (binary) ────┐ │        ┌────────────────────────────────────┐
-//!  finger load ──────┐ │ │        │              NetServer             │
-//!   (N conns, either │ │ │        │                                    │
-//!    wire)           ▼ ▼ ▼        │  accept ─► negotiate codec         │
-//!            OPEN/EV/BATCH ──────►│         ─► conn thread: Command ──┐ │
-//!            QUERY/CLOSE/STATS    │            dispatch → Reply       │ │
-//!            QUIT/SHUTDOWN        │            (try_submit + backoff) │ │
-//!                                 └────────────────────────────────────┼─┘
-//!                                                                      ▼
+//!  client (binary) ────┐ │        ┌─────────────────────────────────────┐
+//!  finger load ──────┐ │ │        │              NetServer              │
+//!   (N conns, either │ │ │        │  accept ─► deal round-robin         │
+//!    wire)           ▼ ▼ ▼        │  event loop × T: poll(2) over the   │
+//!            OPEN/EV/BATCH ──────►│    poll set; per-conn state machine │
+//!            QUERY/CLOSE/STATS    │    negotiate ─► decode ─► dispatch ─┼─┐
+//!            QUIT/SHUTDOWN        │    → Reply into write queue         │ │
+//!                                 │    (WouldBlock parks the command,   │ │
+//!                                 │     read interest withdrawn)        │ │
+//!                                 └─────────────────────────────────────┘ │
+//!                                                                        ▼
 //!                                   ScoringService  hash(id) % shards
 //!                                   shard 0 │ shard 1 │ … │ shard N-1
 //!                                   (bounded queues, SessionRegistry,
 //!                                    batcher → scorer → anomaly)
 //! ```
 //!
-//! * [`server`] — [`NetServer`]: thread-per-connection readers feeding the
-//!   shared service through the non-blocking submit API, per-connection
-//!   error isolation, graceful drain returning the final
+//! * [`server`] — [`NetServer`]: the accept loop dealing connections to a
+//!   fixed pool of event-loop threads, each driving per-connection state
+//!   machines (incremental decode, bounded write queue with partial-write
+//!   handling, lifecycle negotiate → active → drain) and mapping service
+//!   backpressure to socket readiness. Graceful drain returns the final
 //!   [`ServiceReport`](crate::service::ServiceReport). Dispatch is pure
 //!   `Command → Reply` — no formatting knowledge.
 //! * [`client`] — [`NetClient`]: small blocking client (tests, tooling),
 //!   generic over codec, with a configurable reply-read timeout.
 //! * [`traffic`] — the load driver: replays multi-tenant workloads
 //!   (including wiki/DoS/Hi-C dataset presets) over N concurrent
-//!   connections on either wire and reports end-to-end events/s.
+//!   connections on either wire and reports end-to-end events/s plus
+//!   per-request latency percentiles.
 
 pub mod client;
 pub mod codec;
 pub mod command;
+pub mod poll;
 pub mod server;
 pub mod traffic;
 
 pub use client::{NetClient, NetStats};
 pub use codec::{
-    BinaryCodec, Codec, CommandRead, TextCodec, Wire, WireMode, BINARY_MAGIC,
-    BINARY_VERSION,
+    negotiate_buf, BinaryCodec, Codec, CommandRead, Decode, NegotiatedBuf, ReadBuf,
+    TextCodec, Wire, WireMode, BINARY_MAGIC, BINARY_VERSION,
 };
 pub use command::{
     parse_wire_event, validate_wire_event, Command, Reply, DEFAULT_ADDR, MAX_BATCH,

@@ -1,0 +1,211 @@
+//! Dependency-free readiness multiplexing over `poll(2)`.
+//!
+//! The event-driven front end ([`crate::net::server`]) parks one thread on a
+//! whole set of nonblocking sockets and wakes only when one of them has work.
+//! std exposes no readiness primitive, so this module carries the crate's one
+//! FFI declaration: the POSIX `poll` syscall, a single function over a
+//! `#[repr(C)]` struct that has been ABI-stable since the nineties. Nothing
+//! else in the crate is allowed `unsafe` (see `[lints.rust]` in Cargo.toml);
+//! the two `unsafe` blocks here are the entire surface, each a direct call
+//! with the pointer/length taken from one live `&mut [PollFd]`.
+//!
+//! On non-Unix targets there is no `poll`; [`poll_fds`] degrades to a short
+//! sleep that reports every requested interest as ready, which the caller's
+//! nonblocking reads/writes then sort out via `WouldBlock`. Correct, but a
+//! busy loop — the readiness front end is for Unix hosts.
+
+use std::io;
+use std::net::TcpStream;
+
+/// Interest/readiness entry, layout-identical to `struct pollfd`.
+#[repr(C)]
+#[derive(Clone, Copy, Debug)]
+pub struct PollFd {
+    pub fd: i32,
+    pub events: i16,
+    pub revents: i16,
+}
+
+/// Data may be read without blocking.
+pub const POLLIN: i16 = 0x001;
+/// Data may be written without blocking.
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (always polled, never requested).
+pub const POLLERR: i16 = 0x008;
+/// Peer hung up (always polled, never requested).
+pub const POLLHUP: i16 = 0x010;
+/// The fd is not open (always polled, never requested).
+pub const POLLNVAL: i16 = 0x020;
+
+impl PollFd {
+    /// An entry asking for `events` readiness on `fd`, `revents` cleared.
+    pub fn interest(fd: i32, events: i16) -> Self {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    /// Any readable-ish condition: data, hangup, error, or a bad fd. All
+    /// four resolve the same way — attempt the nonblocking read and let it
+    /// report data / clean EOF / an error.
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLHUP | POLLERR | POLLNVAL) != 0
+    }
+
+    /// Writable, or in an error state the write will surface.
+    pub fn writable(&self) -> bool {
+        self.revents & (POLLOUT | POLLHUP | POLLERR | POLLNVAL) != 0
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    #![allow(unsafe_code)] // the crate's single FFI point; see module docs
+
+    use super::PollFd;
+    use std::io;
+
+    extern "C" {
+        // `nfds_t` is `c_ulong`, which matches `usize` on every Linux target.
+        fn poll(fds: *mut PollFd, nfds: usize, timeout: i32) -> i32;
+    }
+
+    pub fn poll_raw(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+        // SAFETY: the pointer and length come from one live mutable slice of
+        // `#[repr(C)]` PollFd entries, exactly the array poll(2) expects; the
+        // kernel writes only within `fds.len()` entries' `revents` fields.
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len(), timeout_ms) };
+        if rc < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(rc as usize)
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    #![allow(unsafe_code)] // the crate's single FFI point; see module docs
+
+    use super::PollFd;
+    use std::io;
+
+    extern "C" {
+        // `nfds_t` is `u32` on the BSD family (macOS included).
+        fn poll(fds: *mut PollFd, nfds: u32, timeout: i32) -> i32;
+    }
+
+    pub fn poll_raw(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+        let nfds = u32::try_from(fds.len())
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "poll set exceeds u32"))?;
+        // SAFETY: pointer/length from one live mutable slice of repr(C)
+        // entries; the kernel writes only the `revents` fields.
+        let rc = unsafe { poll(fds.as_mut_ptr(), nfds, timeout_ms) };
+        if rc < 0 {
+            Err(io::Error::last_os_error())
+        } else {
+            Ok(rc as usize)
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod sys {
+    use super::PollFd;
+    use std::io;
+    use std::time::Duration;
+
+    /// Degraded portability fallback: sleep briefly, then report every
+    /// requested interest as ready and let the caller's nonblocking I/O
+    /// return `WouldBlock` for the fds that were not actually ready.
+    pub fn poll_raw(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+        if timeout_ms != 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut ready = 0;
+        for f in fds.iter_mut() {
+            f.revents = f.events;
+            if f.revents != 0 {
+                ready += 1;
+            }
+        }
+        Ok(ready)
+    }
+}
+
+/// Block until at least one entry is ready, the timeout elapses, or the set
+/// is empty. `timeout_ms < 0` waits indefinitely, `0` returns immediately.
+/// Returns the number of entries with nonzero `revents`. `EINTR` is retried
+/// internally so callers never see a spurious error from a signal.
+pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    loop {
+        match sys::poll_raw(fds, timeout_ms) {
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            other => return other,
+        }
+    }
+}
+
+/// The raw fd backing a std TCP socket, for building a [`PollFd`] entry.
+#[cfg(unix)]
+pub fn raw_fd(stream: &TcpStream) -> i32 {
+    use std::os::unix::io::AsRawFd;
+    stream.as_raw_fd()
+}
+
+/// Non-Unix targets have no fd concept here; the fallback `poll_raw` never
+/// dereferences the value, so any sentinel works.
+#[cfg(not(unix))]
+pub fn raw_fd(_stream: &TcpStream) -> i32 {
+    -1
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::TcpListener;
+
+    fn loopback_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let addr = listener.local_addr().expect("local addr");
+        let a = TcpStream::connect(addr).expect("connect");
+        let (b, _) = listener.accept().expect("accept");
+        (a, b)
+    }
+
+    #[test]
+    fn poll_times_out_when_idle_and_wakes_on_data() {
+        let (mut a, b) = loopback_pair();
+        let fd = raw_fd(&b);
+
+        let mut set = [PollFd::interest(fd, POLLIN)];
+        let n = poll_fds(&mut set, 0).expect("poll immediate");
+        assert_eq!(n, 0, "no data yet: {:?}", set[0]);
+        assert!(!set[0].readable());
+
+        a.write_all(&[0x2a]).expect("write wake byte");
+        let n = poll_fds(&mut set, 1000).expect("poll after write");
+        assert_eq!(n, 1);
+        assert!(set[0].readable());
+    }
+
+    #[test]
+    fn poll_reports_writable_and_hangup() {
+        let (a, b) = loopback_pair();
+        let mut set = [PollFd::interest(raw_fd(&b), POLLOUT)];
+        let n = poll_fds(&mut set, 1000).expect("poll writable");
+        assert_eq!(n, 1);
+        assert!(set[0].writable());
+
+        drop(a);
+        let mut set = [PollFd::interest(raw_fd(&b), POLLIN)];
+        let n = poll_fds(&mut set, 1000).expect("poll hup");
+        assert_eq!(n, 1);
+        assert!(set[0].readable(), "peer close must surface as readable: {:?}", set[0]);
+    }
+
+    #[test]
+    fn empty_set_with_zero_timeout_is_a_noop() {
+        let mut set: [PollFd; 0] = [];
+        assert_eq!(poll_fds(&mut set, 0).expect("empty poll"), 0);
+    }
+}

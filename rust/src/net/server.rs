@@ -1,40 +1,63 @@
-//! Thread-per-connection TCP server putting a [`ScoringService`] on a
-//! socket. Pure `std::net` — no async runtime dependency.
+//! Readiness-driven TCP front end: a fixed pool of event-loop threads puts
+//! the [`ScoringService`] on a socket and multiplexes tens of thousands of
+//! nonblocking connections over `poll(2)` ([`poll`](super::poll) — pure
+//! `std::net` plus one FFI declaration, no async runtime).
 //!
-//! The server is codec-agnostic: each connection negotiates its wire format
-//! on the first byte ([`negotiate`] — text line protocol or binary v2
-//! framing, both on one port), and from then on the connection loop only
-//! moves typed [`Command`]s in and [`Reply`]s out. All formatting knowledge
-//! lives in the codec; [`dispatch`] maps `Command → Reply` against the
-//! service with none.
+//! Every connection is a small state machine ([`Conn`]): a per-connection
+//! read buffer feeds the codec's incremental [`Codec::decode`] (partial
+//! frames park in the buffer, so a slow or stalled sender costs its own
+//! connection nothing but a few buffered bytes), replies queue in a write
+//! buffer with partial-write handling, and the buffers are pooled across
+//! connections. Dispatch stays pure `Command → Reply` with no formatting
+//! knowledge.
 //!
-//! * **Connection isolation** — every accepted connection gets its own
-//!   reader thread; a malformed frame yields a one-frame `Err` reply and
-//!   the connection keeps going; an I/O error kills only that connection,
-//!   never the server.
-//! * **Backpressure without wedging** — submissions go through the
-//!   service's non-blocking [`ScoringService::try_submit_batch`] (and
-//!   friends) in a bounded-sleep retry loop that also watches the shutdown
-//!   flag, so one stalled shard can slow a connection but can neither wedge
-//!   it past shutdown nor drop events.
-//! * **Graceful shutdown** — the `Shutdown` command (or
-//!   [`ShutdownHandle::signal`]) stops the accept loop, joins every
-//!   connection thread, drains all shards via [`ScoringService::finish`]
-//!   and returns the final [`ServiceReport`] from [`NetServer::run`].
+//! * **Negotiation in the state machine** — the first buffered byte picks
+//!   the codec ([`negotiate_buf`]): text consumes nothing, a binary
+//!   preamble consumes exactly its two bytes, and a refused or malformed
+//!   preamble answers with one `Err` frame before the connection drains.
+//! * **Backpressure as readiness** — a command the service cannot take yet
+//!   ([`SubmitError::WouldBlock`]) parks as [`Pending`] and the
+//!   connection's read interest is withdrawn until the shard accepts it:
+//!   flow control by suspending the socket, not by sleeping a thread. The
+//!   parked attempt retries on a `backoff_us` cadence.
+//! * **Graceful shutdown** — `SHUTDOWN` (or [`ShutdownHandle::signal`])
+//!   wakes every loop through its waker socket; parked commands answer
+//!   `shutting-down`, queued replies flush under the write deadline, the
+//!   accept loop stops, and [`NetServer::run`] joins the loops, drains the
+//!   shards and returns the final [`ServiceReport`].
+//! * **No idle burn** — an idle loop parks in `poll` with no timeout; new
+//!   connections and shutdown arrive as waker bytes, so a quiet server
+//!   makes no periodic wakeups at all.
 
-use super::codec::{negotiate, Codec, CommandRead, Negotiated, Wire, WireMode};
+use super::codec::{
+    negotiate_buf, Codec, Decode, NegotiatedBuf, ReadBuf, Wire, WireMode, READ_CHUNK,
+};
 use super::command::{Command, Reply, DEFAULT_ADDR};
+use super::poll::{poll_fds, raw_fd, PollFd, POLLIN, POLLOUT};
 use crate::cli::Config;
 use crate::entropy::FingerState;
 use crate::graph::Graph;
 use crate::service::{ScoringService, ServiceConfig, ServiceReport, SubmitError};
 use crate::stream::StreamEvent;
 use anyhow::{Context, Result};
-use std::io::{BufReader, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Bounded hand-off queue from the accept loop to each event loop.
+const INTAKE_CAP: usize = 1024;
+
+/// Per-connection write-queue high-water mark: once this many reply bytes
+/// are queued, the connection stops decoding (and reading) until the peer
+/// drains some — a client that pipelines requests without reading replies
+/// is flow-controlled instead of ballooning the server.
+const WBUF_HIGH: usize = 256 * 1024;
+
+/// Recycled buffer pool cap per event loop (two buffers per connection).
+const POOL_CAP: usize = 128;
 
 /// Knobs of the network front end, readable from the `[net]` config section.
 #[derive(Debug, Clone)]
@@ -44,15 +67,16 @@ pub struct NetConfig {
     /// Which wires the server accepts / the client speaks by default:
     /// `auto` (negotiate per connection) or a single named wire.
     pub wire: WireMode,
-    /// Sleep between non-blocking submit retries while a shard queue is
-    /// full (microseconds).
+    /// Retry cadence for a command parked on a full shard queue
+    /// (microseconds); the event loop's poll timeout while anything is
+    /// parked, never slept on a thread.
     pub backoff_us: u64,
-    /// Socket read timeout used to poll the shutdown flag (milliseconds);
-    /// bounds how long a drained connection outlives a shutdown request.
-    pub poll_ms: u64,
-    /// Socket write timeout (milliseconds): a client that stops reading its
-    /// replies gets its connection dropped instead of wedging the thread
-    /// (and the shutdown join) in `write_all` forever.
+    /// Event-loop threads; each owns a poll set of nonblocking connections
+    /// (accepted connections are dealt round-robin).
+    pub event_threads: usize,
+    /// Write-progress deadline (milliseconds): a client that stops reading
+    /// its replies gets its connection dropped once its write queue makes
+    /// no progress for this long, instead of wedging a drain.
     pub write_timeout_ms: u64,
     /// Client-side reply-read timeout (milliseconds; 0 disables): a hung or
     /// wedged server surfaces as a clean per-connection error instead of
@@ -66,7 +90,7 @@ impl Default for NetConfig {
             addr: DEFAULT_ADDR.to_string(),
             wire: WireMode::Auto,
             backoff_us: 200,
-            poll_ms: 25,
+            event_threads: 2,
             write_timeout_ms: 5000,
             client_timeout_ms: 30_000,
         }
@@ -76,7 +100,7 @@ impl Default for NetConfig {
 impl NetConfig {
     /// Read the `[net]` section of a parsed config file; missing keys fall
     /// back to the defaults. Recognized keys: `addr`, `wire`
-    /// (`auto` | `text` | `binary`), `backoff_us`, `poll_ms`,
+    /// (`auto` | `text` | `binary`), `backoff_us`, `event_threads`,
     /// `write_timeout_ms`, `client_timeout_ms`.
     pub fn from_config(c: &Config) -> Self {
         let d = Self::default();
@@ -84,7 +108,7 @@ impl NetConfig {
             addr: c.get("net.addr").unwrap_or(&d.addr).to_string(),
             wire: c.get("net.wire").and_then(WireMode::parse).unwrap_or(d.wire),
             backoff_us: c.get_or("net.backoff_us", d.backoff_us).max(1),
-            poll_ms: c.get_or("net.poll_ms", d.poll_ms).max(1),
+            event_threads: c.get_or("net.event_threads", d.event_threads).clamp(1, 64),
             write_timeout_ms: c.get_or("net.write_timeout_ms", d.write_timeout_ms).max(1),
             client_timeout_ms: c.get_or("net.client_timeout_ms", d.client_timeout_ms),
         }
@@ -103,11 +127,21 @@ impl NetConfig {
 pub struct ShutdownHandle {
     flag: Arc<AtomicBool>,
     addr: SocketAddr,
+    /// Write side of each event loop's waker socket; a signal nudges every
+    /// loop out of its (possibly indefinite) poll.
+    wakers: Arc<Mutex<Vec<TcpStream>>>,
 }
 
 impl ShutdownHandle {
     pub fn signal(&self) {
         self.flag.store(true, Ordering::SeqCst);
+        // finger-lint: allow(FL001): crash-on-poison policy — the registry only holds wake handles
+        let wakers = self.wakers.lock().expect("waker registry poisoned");
+        for w in wakers.iter() {
+            let mut w: &TcpStream = w;
+            let _ = w.write_all(&[1u8]);
+        }
+        drop(wakers);
         // wake the blocking accept with a throwaway connection; a wildcard
         // bind address (0.0.0.0 / ::) is not connectable on every platform,
         // so target loopback on the bound port instead
@@ -124,6 +158,23 @@ impl ShutdownHandle {
     pub fn is_signaled(&self) -> bool {
         self.flag.load(Ordering::SeqCst)
     }
+
+    fn register_waker(&self, w: TcpStream) {
+        // finger-lint: allow(FL001): crash-on-poison policy — the registry only holds wake handles
+        self.wakers.lock().expect("waker registry poisoned").push(w);
+    }
+}
+
+/// A loopback socket pair used to interrupt a parked `poll`: the returned
+/// `(write, read)` halves are connected; the read half is nonblocking and
+/// sits in the loop's poll set, the write half is nudged with single bytes.
+fn waker_pair() -> std::io::Result<(TcpStream, TcpStream)> {
+    let listener = TcpListener::bind((std::net::Ipv4Addr::LOCALHOST, 0))?;
+    let tx = TcpStream::connect(listener.local_addr()?)?;
+    let (rx, _) = listener.accept()?;
+    rx.set_nonblocking(true)?;
+    tx.set_nodelay(true).ok();
+    Ok((tx, rx))
 }
 
 /// The bound, not-yet-running server.
@@ -140,7 +191,11 @@ impl NetServer {
         let listener = TcpListener::bind(&net.addr)
             .with_context(|| format!("bind {}", net.addr))?;
         let addr = listener.local_addr().context("local_addr")?;
-        let shutdown = ShutdownHandle { flag: Arc::new(AtomicBool::new(false)), addr };
+        let shutdown = ShutdownHandle {
+            flag: Arc::new(AtomicBool::new(false)),
+            addr,
+            wakers: Arc::new(Mutex::new(Vec::new())),
+        };
         Ok(Self {
             listener,
             service: Arc::new(ScoringService::start(service_cfg)),
@@ -160,169 +215,90 @@ impl NetServer {
     }
 
     /// Accept connections until a `Shutdown` command (or
-    /// [`ShutdownHandle::signal`]) arrives, then join every connection
-    /// thread, drain the shards and return the final report.
+    /// [`ShutdownHandle::signal`]) arrives, dealing them round-robin to the
+    /// event-loop threads; then join every loop, drain the shards and
+    /// return the final report.
     pub fn run(self) -> Result<ServiceReport> {
         let Self { listener, service, net, shutdown } = self;
-        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
-        for (conn_id, incoming) in listener.incoming().enumerate() {
-            if shutdown.is_signaled() {
-                break;
-            }
-            let stream = match incoming {
-                Ok(s) => s,
+        let threads = net.event_threads.max(1);
+        let mut loops = Vec::with_capacity(threads);
+        let mut senders: Vec<SyncSender<TcpStream>> = Vec::with_capacity(threads);
+        let mut wake_txs: Vec<TcpStream> = Vec::with_capacity(threads);
+        let mut boot_err: Option<anyhow::Error> = None;
+        for t in 0..threads {
+            let booted = waker_pair()
+                .context("create event-loop waker")
+                .and_then(|(wake_tx, wake_rx)| {
+                    let clone = wake_tx.try_clone().context("clone waker")?;
+                    Ok((wake_tx, wake_rx, clone))
+                });
+            let (wake_tx, wake_rx, waker_clone) = match booted {
+                Ok(parts) => parts,
                 Err(e) => {
-                    eprintln!("net: accept failed: {e}");
-                    continue;
+                    boot_err = Some(e);
+                    break;
                 }
             };
-            let service = Arc::clone(&service);
-            let net = net.clone();
-            let shutdown = shutdown.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("finger-conn-{conn_id}"))
-                .spawn(move || {
-                    if let Err(e) = handle_conn(stream, &service, &net, &shutdown) {
-                        // per-connection isolation: log and move on
-                        eprintln!("net: connection {conn_id}: {e}");
-                    }
-                })
-                .context("spawn connection thread")?;
-            conns.push(handle);
-            // opportunistically reap finished connection threads
-            conns = conns
-                .into_iter()
-                .filter_map(|h| {
-                    if h.is_finished() {
-                        let _ = h.join();
-                        None
-                    } else {
-                        Some(h)
-                    }
-                })
-                .collect();
+            shutdown.register_waker(waker_clone);
+            let (tx, rx) = sync_channel::<TcpStream>(INTAKE_CAP);
+            let (service, net, shutdown) =
+                (Arc::clone(&service), net.clone(), shutdown.clone());
+            let spawned = std::thread::Builder::new()
+                .name(format!("finger-loop-{t}"))
+                .spawn(move || EventLoop::new(service, net, shutdown, rx, wake_rx).run());
+            match spawned {
+                Ok(h) => {
+                    loops.push(h);
+                    senders.push(tx);
+                    wake_txs.push(wake_tx);
+                }
+                Err(e) => {
+                    boot_err =
+                        Some(anyhow::Error::new(e).context("spawn event-loop thread"));
+                    break;
+                }
+            }
         }
-        for h in conns {
+        if boot_err.is_none() {
+            let mut next = 0usize;
+            for incoming in listener.incoming() {
+                if shutdown.is_signaled() {
+                    break;
+                }
+                let stream = match incoming {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("net: accept failed: {e}");
+                        continue;
+                    }
+                };
+                let t = next % threads;
+                next = next.wrapping_add(1);
+                // a full intake queue briefly blocks accept — bounded
+                // backpressure instead of an unbounded backlog
+                let sent = senders.get(t).map(|tx| tx.send(stream).is_ok()).unwrap_or(false);
+                if sent {
+                    if let Some(w) = wake_txs.get_mut(t) {
+                        let _ = w.write_all(&[1u8]);
+                    }
+                }
+            }
+        }
+        shutdown.signal();
+        drop(senders); // event loops see a disconnected intake
+        for w in wake_txs.iter_mut() {
+            let _ = w.write_all(&[1u8]);
+        }
+        for h in loops {
             let _ = h.join();
         }
+        if let Some(e) = boot_err {
+            return Err(e);
+        }
         let service = Arc::try_unwrap(service)
-            .map_err(|_| anyhow::anyhow!("connection thread leaked a service handle"))?;
+            .map_err(|_| anyhow::anyhow!("event loop leaked a service handle"))?;
         Ok(service.finish())
     }
-}
-
-/// One attempt of a non-blocking service call inside [`retry_backoff`].
-enum Backoff<T> {
-    /// The call went through.
-    Done(T),
-    /// The shard queue was full — sleep and try again.
-    Retry,
-    /// Terminal failure (shard closed); the `Err` reason.
-    Fail(String),
-}
-
-/// The shared full-queue retry discipline of every service call on a
-/// connection thread: retry `attempt` with `backoff_us` sleeps while the
-/// target shard's queue is full, honoring a shutdown request so one
-/// stalled shard can't wedge the thread past a drain. `Err` carries the
-/// reply to send instead.
-fn retry_backoff<T>(
-    net: &NetConfig,
-    shutdown: &ShutdownHandle,
-    mut attempt: impl FnMut() -> Backoff<T>,
-) -> Result<T, Reply> {
-    loop {
-        match attempt() {
-            Backoff::Done(v) => return Ok(v),
-            Backoff::Fail(reason) => return Err(Reply::Err(reason)),
-            Backoff::Retry => {
-                if shutdown.is_signaled() {
-                    return Err(Reply::Err("shutting-down".to_string()));
-                }
-                std::thread::sleep(Duration::from_micros(net.backoff_us));
-            }
-        }
-    }
-}
-
-/// Submit a batch through the non-blocking path; returns the accepted
-/// event count. Rejected batches are handed back by the service and rebound
-/// directly (no `Option` shuttle), so retries never clone the events and the
-/// loop has no panic path (FL001).
-fn submit_batch_backoff(
-    service: &ScoringService,
-    net: &NetConfig,
-    shutdown: &ShutdownHandle,
-    id: &str,
-    mut events: Vec<StreamEvent>,
-) -> Result<usize, Reply> {
-    loop {
-        match service.try_submit_batch(id, events) {
-            Ok(n) => return Ok(n),
-            Err((back, SubmitError::WouldBlock { .. })) => {
-                if shutdown.is_signaled() {
-                    return Err(Reply::Err("shutting-down".to_string()));
-                }
-                events = back;
-                std::thread::sleep(Duration::from_micros(net.backoff_us));
-            }
-            Err((_, e)) => return Err(Reply::Err(e.to_string())),
-        }
-    }
-}
-
-/// Open a session through the non-blocking path; the initial state is built
-/// once and handed back by the service on every retry (same loop shape as
-/// `submit_batch_backoff`, for the same FL001 reason).
-fn open_backoff(
-    service: &ScoringService,
-    net: &NetConfig,
-    shutdown: &ShutdownHandle,
-    id: &str,
-    nodes: usize,
-) -> Result<(), Reply> {
-    let mut state = FingerState::with_policy(Graph::new(nodes), service.config().policy);
-    loop {
-        match service.try_open_session_state(id, state) {
-            Ok(()) => return Ok(()),
-            Err((back, SubmitError::WouldBlock { .. })) => {
-                if shutdown.is_signaled() {
-                    return Err(Reply::Err("shutting-down".to_string()));
-                }
-                state = back;
-                std::thread::sleep(Duration::from_micros(net.backoff_us));
-            }
-            Err((_, e)) => return Err(Reply::Err(e.to_string())),
-        }
-    }
-}
-
-/// Query through the non-blocking path.
-fn query_backoff(
-    service: &ScoringService,
-    net: &NetConfig,
-    shutdown: &ShutdownHandle,
-    id: &str,
-) -> Result<Option<crate::service::SessionSnapshot>, Reply> {
-    retry_backoff(net, shutdown, || match service.try_query(id) {
-        Ok(snap) => Backoff::Done(snap),
-        Err(SubmitError::WouldBlock { .. }) => Backoff::Retry,
-        Err(e) => Backoff::Fail(e.to_string()),
-    })
-}
-
-/// Close through the non-blocking path.
-fn close_backoff(
-    service: &ScoringService,
-    net: &NetConfig,
-    shutdown: &ShutdownHandle,
-    id: &str,
-) -> Result<Option<crate::service::SessionSnapshot>, Reply> {
-    retry_backoff(net, shutdown, || match service.try_close_session(id) {
-        Ok(snap) => Backoff::Done(snap),
-        Err(SubmitError::WouldBlock { .. }) => Backoff::Retry,
-        Err(e) => Backoff::Fail(e.to_string()),
-    })
 }
 
 fn stats_reply(service: &ScoringService) -> Reply {
@@ -335,133 +311,545 @@ fn stats_reply(service: &ScoringService) -> Reply {
     ])
 }
 
-/// What the connection loop does after writing the reply.
-enum Flow {
-    Continue,
-    /// Close this connection (the server keeps running).
-    Quit,
-    /// Signal server shutdown and close this connection.
-    Shutdown,
+/// A command the service could not take yet (shard queue full): the typed
+/// retry state parked on its connection. While one of these is parked the
+/// connection reads nothing — service backpressure propagates to the
+/// socket, and the attempt re-runs on the `backoff_us` poll cadence.
+enum Pending {
+    Open { id: String, state: Box<FingerState> },
+    Batch { id: String, events: Vec<StreamEvent>, single: bool },
+    Query { id: String },
+    Close { id: String },
 }
 
-/// Map one command to its reply against the service. This is the whole
-/// server-side semantics of the protocol — no wire format in sight.
-fn dispatch(
-    service: &ScoringService,
-    net: &NetConfig,
-    shutdown: &ShutdownHandle,
-    cmd: Command,
-) -> (Reply, Flow) {
-    let reply = match cmd {
-        Command::Open { id, nodes } => {
-            match open_backoff(service, net, shutdown, &id, nodes) {
-                Ok(()) => Reply::Ok,
-                Err(err) => err,
-            }
-        }
-        Command::Event { id, ev } => {
-            match submit_batch_backoff(service, net, shutdown, &id, vec![ev]) {
-                Ok(_) => Reply::Ok,
-                Err(err) => err,
-            }
-        }
-        Command::Batch { id, events } => {
-            match submit_batch_backoff(service, net, shutdown, &id, events) {
-                Ok(n) => Reply::kv("accepted", n),
-                Err(err) => err,
-            }
-        }
-        Command::Query { id } => match query_backoff(service, net, shutdown, &id) {
-            Ok(Some(snap)) => Reply::Snapshot(snap),
-            Ok(None) => Reply::Err("unknown-session".to_string()),
-            Err(err) => err,
-        },
-        Command::Close { id } => match close_backoff(service, net, shutdown, &id) {
-            Ok(Some(snap)) => Reply::Snapshot(snap),
-            Ok(None) => Reply::Err("unknown-session".to_string()),
-            Err(err) => err,
-        },
-        Command::Stats => stats_reply(service),
-        Command::Quit => return (Reply::Ok, Flow::Quit),
-        Command::Shutdown => return (Reply::Ok, Flow::Shutdown),
-    };
-    (reply, Flow::Continue)
+/// One non-blocking service attempt: done (with the reply) or parked again.
+enum Attempt {
+    Done(Reply),
+    Blocked(Pending),
 }
 
-/// Serve one connection until `Quit`, EOF, `Shutdown` or an I/O error.
-fn handle_conn(
+/// Run one attempt of `p` against the service. Rejected payloads are handed
+/// back by the service and rebound directly, so retries never clone events
+/// or state and the path has no panic site.
+fn attempt(service: &ScoringService, p: Pending) -> Attempt {
+    match p {
+        Pending::Open { id, state } => match service.try_open_session_state(&id, *state) {
+            Ok(()) => Attempt::Done(Reply::Ok),
+            Err((back, SubmitError::WouldBlock { .. })) => {
+                Attempt::Blocked(Pending::Open { id, state: Box::new(back) })
+            }
+            Err((_, e)) => Attempt::Done(Reply::Err(e.to_string())),
+        },
+        Pending::Batch { id, events, single } => {
+            match service.try_submit_batch(&id, events) {
+                Ok(n) => Attempt::Done(if single {
+                    Reply::Ok
+                } else {
+                    Reply::kv("accepted", n)
+                }),
+                Err((back, SubmitError::WouldBlock { .. })) => {
+                    Attempt::Blocked(Pending::Batch { id, events: back, single })
+                }
+                Err((_, e)) => Attempt::Done(Reply::Err(e.to_string())),
+            }
+        }
+        Pending::Query { id } => match service.try_query(&id) {
+            Ok(Some(snap)) => Attempt::Done(Reply::Snapshot(snap)),
+            Ok(None) => Attempt::Done(Reply::Err("unknown-session".to_string())),
+            Err(SubmitError::WouldBlock { .. }) => Attempt::Blocked(Pending::Query { id }),
+            Err(e) => Attempt::Done(Reply::Err(e.to_string())),
+        },
+        Pending::Close { id } => match service.try_close_session(&id) {
+            Ok(Some(snap)) => Attempt::Done(Reply::Snapshot(snap)),
+            Ok(None) => Attempt::Done(Reply::Err("unknown-session".to_string())),
+            Err(SubmitError::WouldBlock { .. }) => Attempt::Blocked(Pending::Close { id }),
+            Err(e) => Attempt::Done(Reply::Err(e.to_string())),
+        },
+    }
+}
+
+// lint: event-loop
+
+/// Where a connection is in its life. `Draining` writes out what is queued
+/// (under the write deadline) and closes; nothing further is read.
+enum Lifecycle {
+    /// Waiting for the first byte(s) to pick the codec.
+    Negotiating,
+    /// Normal request/reply service.
+    Active,
+    /// Flush the write queue, then close.
+    Draining { since: Instant },
+}
+
+/// Per-connection state machine owned by one event loop.
+struct Conn {
     stream: TcpStream,
-    service: &ScoringService,
-    net: &NetConfig,
-    shutdown: &ShutdownHandle,
-) -> Result<()> {
-    stream.set_nodelay(true).ok(); // request/reply latency over throughput
-    stream
-        .set_read_timeout(Some(Duration::from_millis(net.poll_ms)))
-        .context("set_read_timeout")?;
-    // a client that stops reading replies must not wedge this thread (and
-    // the shutdown join) in write_all — time the write out and drop it
-    stream
-        .set_write_timeout(Some(Duration::from_millis(net.write_timeout_ms)))
-        .context("set_write_timeout")?;
-    let mut writer = stream.try_clone().context("clone stream")?;
-    let mut reader = BufReader::new(stream);
-    let stop = || shutdown.is_signaled();
-    // buffer each reply frame and hit the socket once, so a frame is never
-    // split across a write timeout
-    let mut wbuf: Vec<u8> = Vec::new();
-    let mut reply = |codec: &mut dyn Codec,
-                     w: &mut TcpStream,
-                     r: &Reply|
-     -> std::io::Result<()> {
-        wbuf.clear();
-        codec.write_reply(&mut wbuf, r)?;
-        w.write_all(&wbuf)
-    };
+    fd: i32,
+    /// Loop-local id for log lines.
+    serial: u64,
+    /// `None` until the first byte(s) negotiate a wire.
+    codec: Option<Box<dyn Codec>>,
+    rbuf: ReadBuf,
+    /// Encoded replies not yet written; `wpos` marks the written prefix.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    pending: Option<Pending>,
+    life: Lifecycle,
+    /// Peer closed its write side (read returned 0).
+    peer_eof: bool,
+    /// Set while the write queue is stuck on `WouldBlock`.
+    write_stall: Option<Instant>,
+    dead: bool,
+}
 
-    // first byte picks the wire; nothing text-framed is consumed
-    let mut codec = match negotiate(&mut reader, &stop)? {
-        Negotiated::Codec(c) => c,
-        Negotiated::Eof | Negotiated::Interrupted => return Ok(()),
-        Negotiated::BadPreamble(reason) => {
-            // the peer committed to binary framing; answer in kind and close
-            let mut bincodec = Wire::Binary.codec();
-            reply(bincodec.as_mut(), &mut writer, &Reply::Err(reason))?;
-            return Ok(());
-        }
-    };
-    if !net.wire.allows(codec.wire()) {
-        let refusal =
-            Reply::Err(format!("{} wire disabled on this server", codec.wire()));
-        reply(codec.as_mut(), &mut writer, &refusal)?;
-        return Ok(());
+impl Conn {
+    fn queued(&self) -> usize {
+        self.wbuf.len() - self.wpos
     }
 
-    loop {
-        let resp = match codec.read_command(&mut reader, &stop)? {
-            CommandRead::Eof | CommandRead::Interrupted => return Ok(()),
-            CommandRead::Malformed(reason) => Reply::Err(reason),
-            CommandRead::Cmd(cmd) => {
-                let (resp, flow) = dispatch(service, net, shutdown, cmd);
-                match flow {
-                    Flow::Continue => resp,
-                    Flow::Quit => {
-                        reply(codec.as_mut(), &mut writer, &resp)?;
-                        return Ok(());
-                    }
-                    Flow::Shutdown => {
-                        reply(codec.as_mut(), &mut writer, &resp)?;
-                        shutdown.signal();
-                        return Ok(());
-                    }
+    fn is_draining(&self) -> bool {
+        matches!(self.life, Lifecycle::Draining { .. })
+    }
+
+    fn start_drain(&mut self) {
+        if !self.is_draining() {
+            self.life = Lifecycle::Draining { since: Instant::now() };
+        }
+    }
+
+    /// Read interest: withdrawn while a command is parked on backpressure,
+    /// while the write queue is over its high-water mark, and once the
+    /// connection is draining or the peer's write side is closed.
+    fn wants_read(&self) -> bool {
+        !self.dead
+            && !self.is_draining()
+            && !self.peer_eof
+            && self.pending.is_none()
+            && self.queued() < WBUF_HIGH
+    }
+
+    /// Encode one reply onto the write queue with this connection's codec.
+    fn reply(&mut self, r: &Reply) {
+        let Some(codec) = self.codec.as_mut() else {
+            self.dead = true;
+            return;
+        };
+        if codec.write_reply(&mut self.wbuf, r).is_err() {
+            self.dead = true;
+        }
+    }
+
+    /// Pull whatever the socket has ready into the read buffer (bounded per
+    /// call: leftovers re-report readiness on the next poll, so one greedy
+    /// peer cannot starve the rest of the set).
+    fn fill(&mut self) {
+        let mut r: &TcpStream = &self.stream;
+        for _ in 0..4 {
+            match self.rbuf.fill_from(&mut r, READ_CHUNK) {
+                Ok(0) => {
+                    self.peer_eof = true;
+                    return;
+                }
+                Ok(_) => {}
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return;
                 }
             }
-        };
-        reply(codec.as_mut(), &mut writer, &resp)?;
-        // during a drain, finish the in-flight request but take no new ones:
-        // a connection that never pauses must not stall the shutdown join
-        if shutdown.is_signaled() {
-            return Ok(());
+        }
+    }
+
+    /// Write as much of the queue as the socket takes. `WouldBlock` arms the
+    /// stall clock; no progress for `deadline` drops the connection instead
+    /// of letting an unread reply wedge a drain.
+    fn flush(&mut self, deadline: Duration) {
+        let mut w: &TcpStream = &self.stream;
+        while self.wpos < self.wbuf.len() {
+            let chunk = self.wbuf.get(self.wpos..).unwrap_or(&[]);
+            match w.write(chunk) {
+                Ok(0) => {
+                    self.dead = true;
+                    return;
+                }
+                Ok(n) => {
+                    self.wpos += n;
+                    self.write_stall = None;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    let since = *self.write_stall.get_or_insert_with(Instant::now);
+                    if since.elapsed() >= deadline {
+                        self.dead = true;
+                    }
+                    return;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+        self.wbuf.clear();
+        self.wpos = 0;
+    }
+}
+
+/// Map one decoded command to its reply (or parked attempt) against the
+/// service. This is the whole server-side semantics of the protocol — no
+/// wire format in sight.
+fn dispatch_cmd(
+    service: &ScoringService,
+    shutdown: &ShutdownHandle,
+    conn: &mut Conn,
+    cmd: Command,
+) {
+    match cmd {
+        Command::Open { id, nodes } => {
+            let state = Box::new(FingerState::with_policy(
+                Graph::new(nodes),
+                service.config().policy,
+            ));
+            run_attempt(service, shutdown, conn, Pending::Open { id, state });
+        }
+        Command::Event { id, ev } => {
+            let p = Pending::Batch { id, events: vec![ev], single: true };
+            run_attempt(service, shutdown, conn, p);
+        }
+        Command::Batch { id, events } => {
+            let p = Pending::Batch { id, events, single: false };
+            run_attempt(service, shutdown, conn, p);
+        }
+        Command::Query { id } => run_attempt(service, shutdown, conn, Pending::Query { id }),
+        Command::Close { id } => run_attempt(service, shutdown, conn, Pending::Close { id }),
+        Command::Stats => conn.reply(&stats_reply(service)),
+        Command::Quit => {
+            conn.reply(&Reply::Ok);
+            conn.start_drain();
+        }
+        Command::Shutdown => {
+            conn.reply(&Reply::Ok);
+            shutdown.signal();
+            conn.start_drain();
         }
     }
 }
+
+/// First attempt of a service command; a full shard queue parks it on the
+/// connection (unless a shutdown is in progress, which answers like the
+/// old retry loop did).
+fn run_attempt(
+    service: &ScoringService,
+    shutdown: &ShutdownHandle,
+    conn: &mut Conn,
+    p: Pending,
+) {
+    match attempt(service, p) {
+        Attempt::Done(r) => conn.reply(&r),
+        Attempt::Blocked(p) => {
+            if shutdown.is_signaled() {
+                conn.reply(&Reply::Err("shutting-down".to_string()));
+            } else {
+                conn.pending = Some(p);
+            }
+        }
+    }
+}
+
+/// Advance one connection as far as it can go without blocking: negotiate
+/// the codec, retry a parked command, decode and dispatch every complete
+/// buffered frame flow control allows, then opportunistically flush.
+fn progress_conn(
+    service: &ScoringService,
+    net: &NetConfig,
+    shutdown: &ShutdownHandle,
+    conn: &mut Conn,
+) {
+    if conn.dead {
+        return;
+    }
+
+    // first byte(s) pick the wire; a refused wire answers on the codec the
+    // peer committed to, before any command arrives
+    if conn.codec.is_none() && !conn.is_draining() {
+        match negotiate_buf(&mut conn.rbuf) {
+            NegotiatedBuf::Codec(c) => {
+                let wire = c.wire();
+                conn.codec = Some(c);
+                if net.wire.allows(wire) {
+                    conn.life = Lifecycle::Active;
+                } else {
+                    conn.reply(&Reply::Err(format!("{wire} wire disabled on this server")));
+                    conn.start_drain();
+                }
+            }
+            NegotiatedBuf::Incomplete => {
+                if conn.peer_eof {
+                    // closed before (or inside) the preamble: nothing to say
+                    conn.dead = true;
+                }
+            }
+            NegotiatedBuf::BadPreamble(reason) => {
+                conn.codec = Some(Wire::Binary.codec());
+                conn.reply(&Reply::Err(reason));
+                conn.start_drain();
+            }
+        }
+    }
+
+    // retry the parked command before decoding anything new — replies must
+    // stay in request order
+    if let Some(p) = conn.pending.take() {
+        if shutdown.is_signaled() {
+            conn.reply(&Reply::Err("shutting-down".to_string()));
+        } else {
+            match attempt(service, p) {
+                Attempt::Done(r) => conn.reply(&r),
+                Attempt::Blocked(p) => conn.pending = Some(p),
+            }
+        }
+    }
+
+    // decode every complete buffered frame flow control allows
+    loop {
+        if conn.pending.is_some()
+            || conn.is_draining()
+            || conn.dead
+            || conn.queued() >= WBUF_HIGH
+        {
+            break;
+        }
+        let outcome = match conn.codec.as_mut() {
+            Some(codec) => codec.decode(&mut conn.rbuf, conn.peer_eof),
+            None => break,
+        };
+        match outcome {
+            Ok(Decode::Cmd(cmd)) => dispatch_cmd(service, shutdown, conn, cmd),
+            Ok(Decode::Malformed(reason)) => conn.reply(&Reply::Err(reason)),
+            Ok(Decode::Incomplete) => break,
+            Ok(Decode::Eof) => {
+                conn.start_drain();
+                break;
+            }
+            Err(e) => {
+                // fatal framing error: flush what is queued, then close
+                eprintln!("net: connection {}: {e}", conn.serial);
+                conn.start_drain();
+                break;
+            }
+        }
+    }
+
+    if conn.queued() > 0 {
+        conn.flush(Duration::from_millis(net.write_timeout_ms));
+    }
+}
+
+/// One event-loop thread: a poll set of nonblocking connections, the waker
+/// socket, and the bounded intake from the accept loop.
+struct EventLoop {
+    service: Arc<ScoringService>,
+    net: NetConfig,
+    shutdown: ShutdownHandle,
+    intake: Receiver<TcpStream>,
+    waker: TcpStream,
+    conns: Vec<Conn>,
+    pollfds: Vec<PollFd>,
+    /// Recycled read/write buffers from closed connections.
+    pool: Vec<Vec<u8>>,
+    next_serial: u64,
+}
+
+impl EventLoop {
+    fn new(
+        service: Arc<ScoringService>,
+        net: NetConfig,
+        shutdown: ShutdownHandle,
+        intake: Receiver<TcpStream>,
+        waker: TcpStream,
+    ) -> Self {
+        Self {
+            service,
+            net,
+            shutdown,
+            intake,
+            waker,
+            conns: Vec::new(),
+            pollfds: Vec::new(),
+            pool: Vec::new(),
+            next_serial: 0,
+        }
+    }
+
+    fn run(mut self) {
+        loop {
+            self.drain_intake();
+            if self.shutdown.is_signaled() {
+                self.begin_shutdown_drain();
+            }
+            for conn in self.conns.iter_mut() {
+                progress_conn(&self.service, &self.net, &self.shutdown, conn);
+            }
+            self.sweep();
+            if self.shutdown.is_signaled() && self.conns.is_empty() {
+                return;
+            }
+            self.poll_wait();
+        }
+    }
+
+    /// Adopt connections the accept loop handed over (drop them straight
+    /// away once a shutdown is in progress, like an un-accepted backlog).
+    fn drain_intake(&mut self) {
+        loop {
+            match self.intake.try_recv() {
+                Ok(stream) => {
+                    if self.shutdown.is_signaled() {
+                        continue;
+                    }
+                    if let Err(e) = self.admit(stream) {
+                        eprintln!("net: connection setup failed: {e}");
+                    }
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => return,
+            }
+        }
+    }
+
+    fn admit(&mut self, stream: TcpStream) -> std::io::Result<()> {
+        stream.set_nodelay(true).ok(); // request/reply latency over throughput
+        stream.set_nonblocking(true)?;
+        let fd = raw_fd(&stream);
+        let rbuf = ReadBuf::from_vec(self.pool.pop().unwrap_or_default());
+        let mut wbuf = self.pool.pop().unwrap_or_default();
+        wbuf.clear();
+        let serial = self.next_serial;
+        self.next_serial = self.next_serial.wrapping_add(1);
+        self.conns.push(Conn {
+            stream,
+            fd,
+            serial,
+            codec: None,
+            rbuf,
+            wbuf,
+            wpos: 0,
+            pending: None,
+            life: Lifecycle::Negotiating,
+            peer_eof: false,
+            write_stall: None,
+            dead: false,
+        });
+        Ok(())
+    }
+
+    /// Fail parked commands and stop taking new ones on every connection;
+    /// queued replies still flush under the write deadline.
+    fn begin_shutdown_drain(&mut self) {
+        for conn in self.conns.iter_mut() {
+            if conn.pending.take().is_some() {
+                conn.reply(&Reply::Err("shutting-down".to_string()));
+            }
+            conn.start_drain();
+        }
+    }
+
+    /// Close finished connections and recycle their buffers.
+    fn sweep(&mut self) {
+        let deadline = Duration::from_millis(self.net.write_timeout_ms);
+        let pool = &mut self.pool;
+        self.conns.retain_mut(|c| {
+            if let Lifecycle::Draining { since } = c.life {
+                if c.queued() == 0 || since.elapsed() >= deadline {
+                    c.dead = true;
+                }
+            }
+            if !c.dead {
+                return true;
+            }
+            if pool.len() + 1 < POOL_CAP {
+                pool.push(std::mem::take(&mut c.rbuf).into_vec());
+                let mut w = std::mem::take(&mut c.wbuf);
+                w.clear();
+                pool.push(w);
+            }
+            false
+        });
+    }
+
+    /// How long the next poll may park. Fully idle means indefinitely — new
+    /// work arrives as readiness or a waker byte, never on a timer.
+    fn tick_timeout_ms(&self) -> i32 {
+        let mut parked = false;
+        let mut busy = false;
+        for c in &self.conns {
+            parked |= c.pending.is_some();
+            busy |= c.queued() > 0 || c.is_draining();
+        }
+        if parked {
+            // service backpressure: retry cadence (poll still wakes earlier
+            // for any socket event)
+            ((self.net.backoff_us / 1000).max(1)).min(50) as i32
+        } else if busy || self.shutdown.is_signaled() {
+            // bounded tick to enforce write/drain deadlines
+            25
+        } else {
+            -1
+        }
+    }
+
+    /// Park in `poll(2)`, then move readiness into the connections: fill
+    /// read buffers, flush write queues. Decode/dispatch happens at the top
+    /// of the loop, right after this returns.
+    fn poll_wait(&mut self) {
+        self.pollfds.clear();
+        self.pollfds.push(PollFd::interest(raw_fd(&self.waker), POLLIN));
+        for c in &self.conns {
+            let mut ev = 0i16;
+            if c.wants_read() {
+                ev |= POLLIN;
+            }
+            if c.queued() > 0 {
+                ev |= POLLOUT;
+            }
+            self.pollfds.push(PollFd::interest(c.fd, ev));
+        }
+        let timeout = self.tick_timeout_ms();
+        if let Err(e) = poll_fds(&mut self.pollfds, timeout) {
+            eprintln!("net: poll failed: {e}");
+            std::thread::sleep(Duration::from_millis(1));
+            return;
+        }
+        if self.pollfds.first().map(|p| p.readable()).unwrap_or(false) {
+            self.drain_waker();
+        }
+        let deadline = Duration::from_millis(self.net.write_timeout_ms);
+        for (c, p) in self.conns.iter_mut().zip(self.pollfds.iter().skip(1)) {
+            if c.dead {
+                continue;
+            }
+            if p.readable() && c.wants_read() {
+                c.fill();
+            }
+            if p.writable() && c.queued() > 0 {
+                c.flush(deadline);
+            }
+        }
+    }
+
+    /// Swallow queued wake bytes (their only content is "wake up").
+    fn drain_waker(&mut self) {
+        let mut sink = [0u8; 64];
+        let mut r: &TcpStream = &self.waker;
+        loop {
+            match r.read(&mut sink) {
+                Ok(0) => return,
+                Ok(_) => {}
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return,
+            }
+        }
+    }
+}
+
+// lint: event-loop end

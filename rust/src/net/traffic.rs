@@ -1,14 +1,22 @@
 //! Load driver: replays a multi-tenant workload (including wiki/DoS/Hi-C
 //! dataset-preset tenants, see [`TenantPreset`]) against a running
 //! `finger serve` instance over N concurrent client connections — on either
-//! wire — and reports end-to-end events/s.
+//! wire — and reports end-to-end events/s plus per-request latency
+//! percentiles.
 //!
-//! Tenants are round-robin partitioned across connections; each connection
-//! opens its tenants, then replays them window-major (one tick-delimited
-//! window per `Batch` command, interleaved across its tenants so every
-//! shard stays busy — the same discipline as the in-process
-//! [`workload::drive`]), and finally `Query`s each tenant so callers can
-//! cross-check the scores against an in-process run of the same workload.
+//! The driver separates *connections* from *threads* so it can exercise the
+//! server's multiplexer at high connection counts: every one of the N
+//! sockets is connected up front and stays open for the whole run, but they
+//! are driven by at most [`MAX_LOAD_WORKERS`] worker threads, each
+//! multiplexing its share of the sockets. Tenants are round-robin
+//! partitioned across connections; each worker opens its tenants, then
+//! replays them window-major (one tick-delimited window per `Batch`
+//! command, interleaved across its connections so every shard stays busy —
+//! the same discipline as the in-process [`workload::drive`]), and finally
+//! `Query`s each tenant so callers can cross-check the scores against an
+//! in-process run of the same workload. Every request round-trip (open,
+//! batch, query) is timed into a shared [`Histogram`], surfacing p50/p99
+//! alongside throughput.
 //!
 //! [`workload::drive`]: crate::service::workload::drive
 
@@ -19,8 +27,14 @@ use crate::service::workload::{
 };
 use crate::service::SessionSnapshot;
 use crate::stream::StreamEvent;
+use crate::util::stats::Histogram;
 use anyhow::{Context, Result};
 use std::time::{Duration, Instant};
+
+/// Driver thread cap: a 10k-connection sweep opens 10k sockets but never
+/// more than this many client threads — each worker round-robins its share
+/// of the connections, mirroring how the server side multiplexes them.
+pub const MAX_LOAD_WORKERS: usize = 64;
 
 /// Shape of one load-driver run.
 #[derive(Debug, Clone)]
@@ -33,13 +47,15 @@ pub struct TrafficConfig {
     /// hung server surfaces as a per-connection error instead of wedging
     /// the run forever.
     pub client_timeout: Option<Duration>,
-    /// Concurrent client connections (clamped to the tenant count).
+    /// Concurrent client connections (clamped to the tenant count). All of
+    /// them are open simultaneously for the whole run, driven by up to
+    /// [`MAX_LOAD_WORKERS`] threads.
     pub connections: usize,
     /// The tenant workload to replay (presets included).
     pub workload: TenantWorkloadConfig,
     /// `Query` every tenant after its replay and collect the snapshots.
     pub query_sessions: bool,
-    /// Send `Shutdown` after the run (from the first connection).
+    /// Send `Shutdown` after the run (from a fresh connection).
     pub shutdown_after: bool,
 }
 
@@ -76,6 +92,12 @@ pub struct TrafficReport {
     pub windows: usize,
     /// Anomalous windows, summed over `Query` snapshots.
     pub anomalies: usize,
+    /// Median request round-trip (microseconds) over every open, batch and
+    /// query command of the run; 0 when nothing was recorded.
+    pub p50_us: u64,
+    /// 99th-percentile request round-trip (microseconds) — the tail a
+    /// C10K front end is judged on.
+    pub p99_us: u64,
     /// One snapshot per tenant (empty when `query_sessions` is off),
     /// sorted by session id.
     pub snapshots: Vec<SessionSnapshot>,
@@ -114,31 +136,37 @@ pub fn replay(
     client_timeout: Option<Duration>,
 ) -> Result<TrafficReport> {
     let connections = connections.clamp(1, streams.len().max(1));
+    let workers = connections.min(MAX_LOAD_WORKERS);
     let start = Instant::now();
-    let mut outcomes: Vec<Result<(usize, Vec<SessionSnapshot>)>> =
-        Vec::with_capacity(connections);
+    let mut outcomes: Vec<Result<WorkerOutcome>> = Vec::with_capacity(workers);
     std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(connections);
-        for c in 0..connections {
-            let chunk: Vec<&TenantStream> =
-                streams.iter().skip(c).step_by(connections).collect();
-            handles.push(scope.spawn(move || {
-                drive_connection(addr, &chunk, query_sessions, wire, client_timeout)
-                    // a timeout or protocol failure names its connection,
-                    // so the load report pinpoints which link wedged
-                    .with_context(|| format!("connection {c} ({wire} wire)"))
-            }));
+        let mut handles = Vec::with_capacity(workers);
+        for worker in 0..workers {
+            let plan = WorkerPlan {
+                addr,
+                streams,
+                connections,
+                worker,
+                workers,
+                query: query_sessions,
+                wire,
+                client_timeout,
+            };
+            handles.push(scope.spawn(move || drive_worker(plan)));
         }
         for h in handles {
-            outcomes.push(h.join().expect("load connection thread panicked"));
+            // finger-lint: allow(FL001): load worker join; the run is lost anyway if one died
+            outcomes.push(h.join().expect("load worker thread panicked"));
         }
     });
     let mut events_sent = 0;
     let mut snapshots = Vec::new();
+    let mut lat = Histogram::new();
     for outcome in outcomes {
-        let (sent, snaps) = outcome?;
-        events_sent += sent;
-        snapshots.extend(snaps);
+        let o = outcome?;
+        events_sent += o.sent;
+        snapshots.extend(o.snaps);
+        lat.merge(&o.lat);
     }
     let wall_secs = start.elapsed().as_secs_f64();
     snapshots.sort_by(|a, b| a.id.cmp(&b.id));
@@ -151,64 +179,128 @@ pub fn replay(
         events_per_sec: events_sent as f64 / wall_secs.max(1e-12),
         windows: snapshots.iter().map(|s| s.windows).sum(),
         anomalies: snapshots.iter().map(|s| s.anomalies).sum(),
+        p50_us: lat.percentile(50.0),
+        p99_us: lat.percentile(99.0),
         snapshots,
     })
 }
 
-/// One connection's share: open every tenant, replay window-major, then
-/// optionally query each tenant.
-fn drive_connection(
-    addr: &str,
-    chunk: &[&TenantStream],
+/// Everything one worker thread needs to drive its share of the run.
+struct WorkerPlan<'a> {
+    addr: &'a str,
+    streams: &'a [TenantStream],
+    /// Total connection count of the run (tenant partitioning modulus).
+    connections: usize,
+    /// This worker's index; it owns connections `worker, worker + workers, …`.
+    worker: usize,
+    workers: usize,
     query: bool,
     wire: Wire,
     client_timeout: Option<Duration>,
-) -> Result<(usize, Vec<SessionSnapshot>)> {
-    let mut client = NetClient::connect_with(addr, wire, client_timeout)?;
-    let mut sent = 0;
-    for (id, initial, _) in chunk {
-        client
-            .open(id, initial.num_nodes())
-            .with_context(|| format!("open {id}"))?;
-        // the wire opens an *empty* graph; replay the initial edges as a
-        // window-0 batch so the server-side state matches the local graph
-        let seed_events: Vec<StreamEvent> = initial
-            .edges()
-            .map(|(i, j, w)| StreamEvent::EdgeDelta { i, j, dw: w })
-            .chain(std::iter::once(StreamEvent::Tick))
-            .collect();
-        sent += client
-            .send_batch(id, &seed_events)
-            .with_context(|| format!("seed {id}"))?;
+}
+
+struct WorkerOutcome {
+    sent: usize,
+    snaps: Vec<SessionSnapshot>,
+    lat: Histogram,
+}
+
+/// One open connection and the tenants partitioned onto it.
+struct LoadConn<'a> {
+    /// Global connection index (names the link in error contexts).
+    index: usize,
+    client: NetClient,
+    tenants: Vec<&'a TenantStream>,
+}
+
+/// Time one request round-trip into the latency histogram (errors are
+/// recorded too — a timed-out request is exactly the tail worth seeing).
+fn timed<T>(lat: &mut Histogram, f: impl FnOnce() -> Result<T>) -> Result<T> {
+    let t0 = Instant::now();
+    let out = f();
+    lat.record(t0.elapsed().as_micros().min(u64::MAX as u128) as u64);
+    out
+}
+
+/// Drive this worker's connections: connect all of them up front (the whole
+/// run's sockets are open at once), open + seed every tenant, replay
+/// window-major across the worker's links, then query and quit.
+fn drive_worker(plan: WorkerPlan<'_>) -> Result<WorkerOutcome> {
+    let WorkerPlan { addr, streams, connections, worker, workers, query, wire, client_timeout } =
+        plan;
+    let mut lat = Histogram::new();
+    let mut sent = 0usize;
+    let mut conns: Vec<LoadConn<'_>> = Vec::new();
+    let mut c = worker;
+    while c < connections {
+        let client = NetClient::connect_with(addr, wire, client_timeout)
+            // a connect/timeout failure names its connection, so the load
+            // report pinpoints which link wedged
+            .with_context(|| format!("connect {c} ({wire} wire)"))?;
+        let tenants: Vec<&TenantStream> =
+            streams.iter().skip(c).step_by(connections).collect();
+        conns.push(LoadConn { index: c, client, tenants });
+        c += workers;
     }
-    let windows: Vec<Vec<&[StreamEvent]>> = chunk
+    for conn in conns.iter_mut() {
+        for (id, initial, _) in conn.tenants.iter().copied() {
+            timed(&mut lat, || conn.client.open(id, initial.num_nodes()))
+                .with_context(|| format!("open {id} (connection {})", conn.index))?;
+            // the wire opens an *empty* graph; replay the initial edges as a
+            // window-0 batch so the server-side state matches the local graph
+            let seed_events: Vec<StreamEvent> = initial
+                .edges()
+                .map(|(i, j, w)| StreamEvent::EdgeDelta { i, j, dw: w })
+                .chain(std::iter::once(StreamEvent::Tick))
+                .collect();
+            sent += timed(&mut lat, || conn.client.send_batch(id, &seed_events))
+                .with_context(|| format!("seed {id} (connection {})", conn.index))?;
+        }
+    }
+    // per connection, per tenant: the tick-delimited windows of its stream
+    let windows: Vec<Vec<Vec<&[StreamEvent]>>> = conns
         .iter()
-        .map(|(_, _, evs)| {
-            evs.split_inclusive(|e| matches!(e, StreamEvent::Tick)).collect()
+        .map(|conn| {
+            conn.tenants
+                .iter()
+                .copied()
+                .map(|(_, _, evs)| {
+                    evs.split_inclusive(|e| matches!(e, StreamEvent::Tick)).collect()
+                })
+                .collect()
         })
         .collect();
-    let max_windows = windows.iter().map(|w| w.len()).max().unwrap_or(0);
+    let max_windows =
+        windows.iter().flatten().map(|w| w.len()).max().unwrap_or(0);
+    // window-major: every tenant's window w lands before any window w+1,
+    // interleaved across this worker's connections so shards stay busy
     for w in 0..max_windows {
-        for (k, (id, _, _)) in chunk.iter().enumerate() {
-            if let Some(win) = windows[k].get(w) {
-                sent += client
-                    .send_batch(id, win)
-                    .with_context(|| format!("batch {w} for {id}"))?;
+        for (conn, per_tenant) in conns.iter_mut().zip(windows.iter()) {
+            for (t, wins) in per_tenant.iter().enumerate() {
+                let Some(win) = wins.get(w) else { continue };
+                let Some((id, _, _)) = conn.tenants.get(t).copied() else { continue };
+                sent += timed(&mut lat, || conn.client.send_batch(id, win))
+                    .with_context(|| {
+                        format!("batch {w} for {id} (connection {})", conn.index)
+                    })?;
             }
         }
     }
     let mut snaps = Vec::new();
     if query {
-        for (id, _, _) in chunk {
-            let snap = client
-                .query(id)
-                .with_context(|| format!("query {id}"))?
-                .with_context(|| format!("session {id} vanished server-side"))?;
-            snaps.push(snap);
+        for conn in conns.iter_mut() {
+            for (id, _, _) in conn.tenants.iter().copied() {
+                let snap = timed(&mut lat, || conn.client.query(id))
+                    .with_context(|| format!("query {id} (connection {})", conn.index))?
+                    .with_context(|| format!("session {id} vanished server-side"))?;
+                snaps.push(snap);
+            }
         }
     }
-    client.quit()?;
-    Ok((sent, snaps))
+    for conn in conns {
+        conn.client.quit()?;
+    }
+    Ok(WorkerOutcome { sent, snaps, lat })
 }
 
 /// Human-readable preset mix of a workload (for logs and reports).

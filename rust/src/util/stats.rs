@@ -103,6 +103,100 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     v[rank.min(v.len() - 1)]
 }
 
+/// Bucket count for [`Histogram`]: 16 exact buckets below 16, then 16
+/// log-spaced sub-buckets per power of two up to `u64::MAX`.
+const HIST_BUCKETS: usize = 976;
+
+/// A dependency-free fixed-bucket latency histogram (HDR-style).
+///
+/// Values below 16 land in exact unit buckets; above that, each power of
+/// two is split into 16 sub-buckets, bounding the relative quantile error
+/// at 1/16 (≈6%) while the whole table stays under 8 KiB — mergeable
+/// across load-driver worker threads without locks, O(1) `record`, and no
+/// per-sample allocation. Units are the caller's (the load driver records
+/// per-event round-trip microseconds).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { counts: vec![0; HIST_BUCKETS], count: 0 }
+    }
+
+    fn bucket(v: u64) -> usize {
+        if v < 16 {
+            return v as usize;
+        }
+        let msb = 63 - u64::from(v.leading_zeros()); // >= 4 since v >= 16
+        ((msb - 3) * 16 + ((v >> (msb - 4)) & 15)) as usize
+    }
+
+    /// The largest value a bucket covers — quantiles report this upper
+    /// edge, so they never under-estimate a latency.
+    fn bucket_upper(idx: usize) -> u64 {
+        if idx < 32 {
+            // buckets 0..32 are exact (values 0..16 unit-wide, 16..32 too)
+            return idx as u64;
+        }
+        let msb = (idx / 16) as u32 + 3;
+        let sub = (idx % 16) as u128;
+        // u128 arithmetic: the very top bucket's edge would overflow u64
+        let upper = (1u128 << msb) + ((sub + 1) << (msb - 4)) - 1;
+        upper.min(u64::MAX as u128) as u64
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let idx = Self::bucket(v);
+        if let Some(c) = self.counts.get_mut(idx) {
+            *c += 1;
+            self.count += 1;
+        }
+    }
+
+    /// Fold another histogram in (per-worker histograms merge at the end).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.count += other.count;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Nearest-rank percentile, `p` in [0, 100]. Returns the covering
+    /// bucket's upper edge (within 1/16 relative error above the true
+    /// value); 0 on an empty histogram.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (((p / 100.0) * self.count as f64).ceil().max(1.0) as u64).min(self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_upper(i);
+            }
+        }
+        Self::bucket_upper(HIST_BUCKETS - 1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,5 +302,71 @@ mod tests {
         assert!(close(percentile(&xs, 50.0), 3.0));
         assert!(close(percentile(&xs, 100.0), 5.0));
         assert!(close(percentile(&xs, 1.0), 1.0));
+    }
+
+    #[test]
+    fn histogram_is_exact_below_sixteen() {
+        let mut h = Histogram::new();
+        for v in 0..16 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 16);
+        assert_eq!(h.percentile(100.0), 15);
+        assert_eq!(h.percentile(0.0), 0);
+        let mut one = Histogram::new();
+        one.record(7);
+        assert_eq!(one.percentile(50.0), 7);
+    }
+
+    #[test]
+    fn histogram_bounds_relative_error_at_one_sixteenth() {
+        for v in [16u64, 17, 100, 999, 1_000, 65_536, 1_000_000, u64::MAX / 3] {
+            let mut h = Histogram::new();
+            h.record(v);
+            let got = h.percentile(99.0);
+            assert!(got >= v, "p99 {got} under-estimates {v}");
+            assert!(got - v <= v / 16, "p99 {got} off by more than 1/16 from {v}");
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_over_a_uniform_ramp() {
+        let mut h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        assert!((500..=540).contains(&p50), "p50={p50}");
+        assert!((990..=1055).contains(&p99), "p99={p99}");
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn histogram_merge_matches_recording_everything_in_one() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut whole = Histogram::new();
+        for v in [3u64, 900, 12_345, 70, 70, 8_000_000] {
+            whole.record(v);
+        }
+        for v in [3u64, 900, 12_345] {
+            a.record(v);
+        }
+        for v in [70u64, 70, 8_000_000] {
+            b.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        for p in [0.0, 25.0, 50.0, 75.0, 99.0, 100.0] {
+            assert_eq!(a.percentile(p), whole.percentile(p), "p={p}");
+        }
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(99.0), 0);
     }
 }

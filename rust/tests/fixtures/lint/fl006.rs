@@ -1,0 +1,25 @@
+//! FL006 fixture: blocking I/O inside a `lint: event-loop` region stalls
+//! every connection sharing the loop's thread. Linted under a virtual
+//! `rust/src/net/` path; never compiled.
+
+use std::io::{BufRead, Read};
+use std::net::TcpStream;
+
+pub fn accept_setup(s: &TcpStream) {
+    s.set_read_timeout(None).ok();
+}
+
+// lint: event-loop
+pub fn pump(r: &mut dyn BufRead, line: &mut String) {
+    r.read_line(line).ok();
+    let mut hdr = [0u8; 2];
+    r.read_exact(&mut hdr).ok();
+    // finger-lint: allow(FL006): runs once at loop teardown, sockets closed
+    let _ = r.read_to_end(&mut Vec::new());
+}
+// lint: event-loop end
+
+pub fn shutdown_drain(r: &mut dyn Read) {
+    let mut rest = Vec::new();
+    r.read_to_end(&mut rest).ok();
+}

@@ -12,6 +12,7 @@ const FL002_SRC: &str = include_str!("fixtures/lint/fl002.rs");
 const FL003_SRC: &str = include_str!("fixtures/lint/fl003.rs");
 const FL004_SRC: &str = include_str!("fixtures/lint/fl004.rs");
 const FL005_SRC: &str = include_str!("fixtures/lint/fl005.rs");
+const FL006_SRC: &str = include_str!("fixtures/lint/fl006.rs");
 
 /// Lint a fixture under a virtual path; returns (diagnostics, waived count).
 fn lint_fixture(virtual_path: &str, src: &str) -> (Vec<lint::Diagnostic>, usize) {
@@ -101,6 +102,18 @@ fn fl005_golden_lock_unwrap() {
     assert_eq!(rule_lines(&diags), vec![("FL005", 8)]);
     assert_eq!(waived, 0);
     assert!(message_at(&diags, 8).contains("poisoning policy"));
+}
+
+#[test]
+fn fl006_golden_blocking_io_in_event_loop_region() {
+    let (diags, waived) = lint_fixture("rust/src/net/server.rs", FL006_SRC);
+    let expect = vec![
+        ("FL006", 14), // .read_line()
+        ("FL006", 16), // .read_exact()
+    ];
+    assert_eq!(rule_lines(&diags), expect);
+    assert_eq!(waived, 1, "the teardown read_to_end carries a waiver");
+    assert!(message_at(&diags, 14).contains("stalls every connection"));
 }
 
 #[test]

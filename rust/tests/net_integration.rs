@@ -2,14 +2,17 @@
 //! the in-process pipeline bit-for-bit on *both* codecs, the text wire must
 //! be byte-identical to the pre-redesign protocol (raw `nc`-style fixtures),
 //! malformed frames must be isolated to one `Err`, `CLOSE` must retire
-//! sessions on both wires, and a graceful shutdown must account for every
-//! event sent.
+//! sessions on both wires, a graceful shutdown must account for every event
+//! sent, and slow-loris senders (byte-dribbled and half-frame-stalled) must
+//! neither break their own connection nor delay anyone else's.
 
 use finger::graph::Graph;
-use finger::net::{
-    run_load, NetClient, NetConfig, NetServer, Reply, TrafficConfig, Wire, WireMode,
-};
+use finger::net::codec;
 use finger::net::traffic;
+use finger::net::{
+    run_load, Codec, Command, NetClient, NetConfig, NetServer, Reply, TrafficConfig,
+    Wire, WireMode,
+};
 use finger::service::workload::{tenant_streams, TenantStream};
 use finger::service::{
     ScoringService, ServiceConfig, ServiceReport, TenantPreset, TenantWorkloadConfig,
@@ -471,4 +474,140 @@ fn run_load_presets_round_trip_over_the_wire() {
         assert!(snap.htilde.is_finite());
     }
     assert!(report.events_per_sec > 0.0);
+}
+
+/// A slow-loris sender (one byte per write, with pauses) must be served
+/// correctly on both wires: partial frames park in the per-connection
+/// buffer until they complete, and every reply still comes back in order.
+#[test]
+fn slow_loris_byte_dribble_completes_on_both_wires() {
+    let (addr, server) = spawn_server(ServiceConfig { shards: 2, ..Default::default() });
+
+    // text wire: dribble a pipelined fixture one byte at a time
+    {
+        let stream = TcpStream::connect(addr.as_str()).expect("connect text");
+        let mut writer = stream.try_clone().expect("clone");
+        let mut reader = BufReader::new(stream);
+        let bytes: &[u8] = b"OPEN loris 4\nEV loris e 0 1 1.0\nQUERY loris\nQUIT\n";
+        for &b in bytes {
+            writer.write_all(&[b]).expect("dribble byte");
+            writer.flush().expect("flush");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let mut lines = Vec::new();
+        for _ in 0..4 {
+            let mut line = String::new();
+            reader.read_line(&mut line).expect("read reply line");
+            lines.push(line);
+        }
+        assert_eq!(lines[0], "OK\n", "OPEN");
+        assert_eq!(lines[1], "OK\n", "EV");
+        assert!(lines[2].starts_with("OK windows="), "QUERY: {:?}", lines[2]);
+        assert_eq!(lines[3], "OK\n", "QUIT");
+    }
+
+    // binary wire: same discipline — preamble plus four frames, one byte
+    // per write, replies read back through the codec
+    {
+        let stream = TcpStream::connect(addr.as_str()).expect("connect binary");
+        let mut writer = stream.try_clone().expect("clone");
+        let mut wire_codec = Wire::Binary.codec();
+        let mut bytes = Vec::new();
+        codec::write_binary_preamble(&mut bytes).expect("preamble");
+        for cmd in [
+            Command::Open { id: "loris-bin".to_string(), nodes: 4 },
+            Command::Event {
+                id: "loris-bin".to_string(),
+                ev: StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 },
+            },
+            Command::Query { id: "loris-bin".to_string() },
+            Command::Quit,
+        ] {
+            wire_codec.write_command(&mut bytes, &cmd).expect("encode");
+        }
+        for &b in bytes.iter() {
+            writer.write_all(&[b]).expect("dribble byte");
+            writer.flush().expect("flush");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let mut reader = BufReader::new(stream);
+        for (k, expect_snapshot) in [false, false, true, false].into_iter().enumerate() {
+            let reply = wire_codec
+                .read_reply(&mut reader)
+                .expect("read reply")
+                .expect("reply before EOF");
+            match (expect_snapshot, reply) {
+                (false, Reply::Ok) => {}
+                (true, Reply::Snapshot(snap)) => {
+                    assert_eq!(snap.id, "loris-bin");
+                    assert_eq!(snap.events, 1, "the dribbled EV landed");
+                }
+                (want_snap, got) => panic!("reply {k}: want snapshot={want_snap}, got {got:?}"),
+            }
+        }
+    }
+
+    NetClient::connect(addr.as_str()).expect("connect").shutdown_server().expect("shutdown");
+    server.join().expect("server thread").expect("server run");
+}
+
+/// One stalled half-frame must not delay other connections multiplexed on
+/// the same event-loop thread: the readiness-driven server parks the
+/// partial frame in that connection's buffer and keeps serving everyone
+/// else, and the parked bytes resume exactly where they stopped.
+#[test]
+fn stalled_half_frame_does_not_delay_other_connections() {
+    let net_cfg = NetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        event_threads: 1, // force both connections onto one loop thread
+        ..Default::default()
+    };
+    let (addr, server) =
+        spawn_server_with(ServiceConfig { shards: 2, ..Default::default() }, net_cfg);
+
+    // connection A: a BATCH header promising two body lines, then silence
+    let stalled = TcpStream::connect(addr.as_str()).expect("connect stalled");
+    let mut stalled_writer = stalled.try_clone().expect("clone");
+    stalled_writer
+        .write_all(b"OPEN stall 4\nBATCH stall 2\ne 0 1 1.0")
+        .expect("send half frame");
+    stalled_writer.flush().expect("flush");
+    let mut stalled_reader = BufReader::new(stalled);
+    let mut line = String::new();
+    stalled_reader.read_line(&mut line).expect("OPEN reply");
+    assert_eq!(line, "OK\n", "OPEN for the stalled connection");
+
+    // connection B on the same loop thread: round-trips must stay snappy
+    // while A's half-frame sits parked
+    let mut live = NetClient::connect(addr.as_str()).expect("connect live");
+    live.open("live", 4).expect("open");
+    let t0 = std::time::Instant::now();
+    for _ in 0..20 {
+        live.send_batch(
+            "live",
+            &[StreamEvent::EdgeDelta { i: 0, j: 1, dw: 0.5 }, StreamEvent::Tick],
+        )
+        .expect("batch while neighbor stalls");
+    }
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < std::time::Duration::from_secs(2),
+        "20 round-trips took {elapsed:?} next to a stalled half-frame"
+    );
+    let snap = live.query("live").expect("query").expect("session exists");
+    assert_eq!(snap.windows, 20);
+
+    // A completes its frame: the batch lands atomically, in order
+    stalled_writer.write_all(b"\nt\nQUIT\n").expect("finish frame");
+    line.clear();
+    stalled_reader.read_line(&mut line).expect("BATCH reply");
+    assert_eq!(line, "OK accepted=2\n");
+    line.clear();
+    stalled_reader.read_line(&mut line).expect("QUIT reply");
+    assert_eq!(line, "OK\n");
+    live.quit().expect("quit");
+
+    NetClient::connect(addr.as_str()).expect("connect").shutdown_server().expect("shutdown");
+    let report = server.join().expect("server thread").expect("server run");
+    assert_eq!(report.total_events, 42, "20 live batches of 2 plus the stalled batch of 2");
 }
