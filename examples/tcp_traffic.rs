@@ -80,6 +80,8 @@ fn main() -> anyhow::Result<()> {
                 workload: workload.clone(),
                 query_sessions: true,
                 shutdown_after: false,
+                live_stats: false,
+                check_metrics: false,
             })?;
             println!(
                 "{:<8} {:<12} {:>10} {:>14.0} {:>10}",

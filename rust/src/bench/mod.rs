@@ -2,7 +2,7 @@
 //! warmup + timed iterations, reporting mean/p50/p99 and throughput. Used by
 //! every target in `rust/benches/`.
 
-use crate::util::stats::percentile;
+use crate::util::stats::LatencySummary;
 use std::time::Instant;
 
 /// Result of one benchmark case.
@@ -17,14 +17,13 @@ pub struct BenchResult {
 
 impl BenchResult {
     pub fn report(&self) -> String {
-        format!(
-            "{:<44} iters={:<5} mean={:<10} p50={:<10} p99={}",
-            self.name,
-            self.iters,
-            crate::util::fmt::secs(self.mean_secs),
-            crate::util::fmt::secs(self.p50_secs),
-            crate::util::fmt::secs(self.p99_secs),
-        )
+        let summary = LatencySummary {
+            count: self.iters as u64,
+            mean: self.mean_secs,
+            p50: self.p50_secs,
+            p99: self.p99_secs,
+        };
+        format!("{:<44} iters={:<5} {}", self.name, self.iters, summary.report_secs())
     }
 }
 
@@ -65,13 +64,13 @@ impl Bencher {
             std::hint::black_box(f());
             samples.push(t0.elapsed().as_secs_f64());
         }
-        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let summary = LatencySummary::from_samples(&samples);
         BenchResult {
             name: name.to_string(),
             iters: samples.len(),
-            mean_secs: mean,
-            p50_secs: percentile(&samples, 50.0),
-            p99_secs: percentile(&samples, 99.0),
+            mean_secs: summary.mean,
+            p50_secs: summary.p50,
+            p99_secs: summary.p99,
         }
     }
 }
@@ -130,7 +129,10 @@ impl From<&BenchResult> for BenchRecord {
     }
 }
 
-fn json_escape(s: &str) -> String {
+/// JSON string escaping shared by [`write_json_report`] and the
+/// observability snapshot writer (`crate::obs::snapshot`) — hand-rolled
+/// because serde is not in the offline registry.
+pub fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
         match c {
@@ -145,7 +147,9 @@ fn json_escape(s: &str) -> String {
     out
 }
 
-fn json_num(x: f64) -> String {
+/// JSON number rendering (non-finite → `null`), shared with the snapshot
+/// writer like [`json_escape`].
+pub fn json_num(x: f64) -> String {
     if x.is_finite() {
         format!("{x:e}")
     } else {

@@ -50,6 +50,7 @@ pub mod graph;
 pub mod linalg;
 pub mod lint;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod service;
 pub mod stream;

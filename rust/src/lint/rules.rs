@@ -18,7 +18,7 @@ pub struct Finding {
 /// Stable rule ids with the one-line invariant each guards (mirrored in
 /// `docs/LINTS.md`).
 pub const RULES: &[(&str, &str)] = &[
-    ("FL001", "no panic paths (unwrap/expect/panic!/indexing) in service/, net/, stream/"),
+    ("FL001", "no panic paths (unwrap/expect/panic!/indexing) in service/, net/, stream/, obs/"),
     ("FL002", "no allocating calls inside `// lint: hot-path` regions"),
     ("FL003", "no `==`/`!=` (or assert_eq!) on float-typed expressions; compare bits"),
     ("FL004", "no unbounded mpsc::channel() where sync_channel preserves backpressure"),
@@ -70,11 +70,14 @@ const FLOAT_ASSERT_MACROS: &[&str] =
 
 /// True when `path` (normalized, repo-relative) is inside the panic-free
 /// zone FL001 guards: a shard worker or connection thread panic takes every
-/// session it carries down with it.
+/// session it carries down with it. `obs/` is in the zone because its
+/// recorders run inside those same workers — metrics must never take a
+/// request down.
 fn in_panic_free_zone(path: &str) -> bool {
     path.starts_with("rust/src/service/")
         || path.starts_with("rust/src/net/")
         || path.starts_with("rust/src/stream/")
+        || path.starts_with("rust/src/obs/")
 }
 
 /// Whole files that are test/bench-only code: integration tests and benches

@@ -83,12 +83,15 @@ fn print_help() {
                        [--config run.toml] [--per-event]\n\
            serve       [--addr 127.0.0.1:7341] [--shards N] [--capacity C]\n\
                        [--wire auto|text|binary] [--threads N] [--config run.toml]\n\
-                       (config sections: [service], [net])\n\
+                       [--metrics-out snap.json] [--metrics-interval MS]\n\
+                       (config sections: [service], [net], [obs] — see\n\
+                       docs/OBSERVABILITY.md)\n\
            load        [--addr 127.0.0.1:7341] [--connections 1,2,4,8]\n\
                        [--wire text,binary] [--sessions N] [--windows W]\n\
                        [--events E] [--nodes N] [--timeout-ms T]\n\
                        [--presets wiki,dos,hic,synthetic] [--seed S]\n\
                        [--bench-out BENCH_net.json] [--config run.toml] [--shutdown]\n\
+                       [--live-stats] [--check-metrics]\n\
                        (reports events/s plus p50/p99 request latency)\n\
            offload     [--artifacts DIR]\n\
            lint        [--root DIR] [--baseline FILE] [--deny] [--write-baseline]\n\
@@ -367,8 +370,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .with_context(|| format!("unknown wire {raw:?} (want auto|text|binary)"))?;
     }
     net_cfg.event_threads = args.get_parsed("threads", net_cfg.event_threads).max(1);
+    if let Some(path) = args.get("metrics-out") {
+        net_cfg.obs.snapshot_path = Some(path.to_string());
+    }
+    net_cfg.obs.interval_ms =
+        args.get_parsed("metrics-interval", net_cfg.obs.interval_ms).max(1);
     let wire_mode = net_cfg.wire;
     let event_threads = net_cfg.event_threads;
+    let metrics_out = net_cfg.obs.snapshot_path.clone();
     let server = NetServer::bind(service_cfg.clone(), net_cfg)?;
     println!(
         "serve: listening on {} ({} shards, capacity {}, wire {}, {} event threads); \
@@ -379,6 +388,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         wire_mode.name(),
         event_threads,
     );
+    if let Some(path) = &metrics_out {
+        println!("serve: writing metrics snapshots to {path}");
+    }
     let report = server.run()?;
     println!(
         "serve: drained — {} sessions, {} events ({} dropped), {} windows, \
@@ -456,6 +468,8 @@ fn cmd_load(args: &Args) -> Result<()> {
                 workload: workload.clone(),
                 query_sessions: true,
                 shutdown_after: false,
+                live_stats: args.flag("live-stats"),
+                check_metrics: args.flag("check-metrics"),
             })?;
             total_windows += report.windows;
             println!(
@@ -474,6 +488,9 @@ fn cmd_load(args: &Args) -> Result<()> {
             let conns = report.connections;
             if conns != connections {
                 println!("  (requested {connections} connections, clamped to {conns})");
+            }
+            if let Some(n) = report.metrics_keys {
+                println!("  (METRICS parity OK across wires: {n} keys)");
             }
             records.push(BenchRecord::metric(
                 format!("net_throughput_{}_conns_{conns}", wire.name()),

@@ -26,6 +26,10 @@ pub struct NetStats {
     pub depths: Vec<usize>,
     /// Events the service accepted so far.
     pub submitted: usize,
+    /// Milliseconds since the service started.
+    pub uptime_ms: u64,
+    /// Live client connections across the server's event loops.
+    pub connections: u64,
 }
 
 /// A blocking connection to a `finger serve` instance, speaking either wire.
@@ -180,7 +184,22 @@ impl NetClient {
             submitted: resp
                 .get_parsed("submitted")
                 .context("STATS reply missing submitted")?,
+            uptime_ms: resp
+                .get_parsed("uptime_ms")
+                .context("STATS reply missing uptime_ms")?,
+            connections: resp
+                .get_parsed("connections")
+                .context("STATS reply missing connections")?,
         })
+    }
+
+    /// The full metrics registry: counters, gauges, per-shard/per-loop
+    /// slots, latency histograms and service extras. Identical reports on
+    /// both wires (all values are integers).
+    pub fn metrics(&mut self) -> Result<crate::obs::MetricsReport> {
+        self.expect_ok(&Command::Metrics)?
+            .into_metrics()
+            .context("malformed METRICS reply")
     }
 
     /// Close this connection politely (the server keeps running).

@@ -20,11 +20,14 @@
 //!
 //! Command opcodes: `0x01 OPEN(id, varint nodes)`, `0x02 EV(id, event)`,
 //! `0x03 BATCH(id, varint k, k×event)`, `0x04 QUERY(id)`, `0x05 CLOSE(id)`,
-//! `0x06 STATS`, `0x07 QUIT`, `0x08 SHUTDOWN`.
+//! `0x06 STATS`, `0x07 QUIT`, `0x08 SHUTDOWN`, `0x09 METRICS`.
 //! Reply opcodes: `0x80 OK`, `0x81 OKKV(varint n, n×(string,string))`,
 //! `0x82 SNAPSHOT(varint windows, varint events, varint nodes, varint
 //! edges, varint anomalies, varint pending, u8 anomalous, f64 htilde, u8
-//! has_jsdist [, f64 jsdist])`, `0x83 ERR(string)`.
+//! has_jsdist [, f64 jsdist])`, `0x83 ERR(string)`, `0x84 METRICS(varint n,
+//! n×(string, varint), varint h, h×(string name, varint count, varint b,
+//! b×(varint idx, varint cnt)))` — all metric values are unsigned integers,
+//! so the binary and text renderings decode to identical reports.
 //!
 //! Server-side decoding is incremental ([`Codec::decode`]): frames are
 //! parsed from a [`ReadBuf`] and consumed only once complete, so a
@@ -59,12 +62,14 @@ const OP_CLOSE: u8 = 0x05;
 const OP_STATS: u8 = 0x06;
 const OP_QUIT: u8 = 0x07;
 const OP_SHUTDOWN: u8 = 0x08;
+const OP_METRICS: u8 = 0x09;
 
 // Reply opcodes.
 const OP_OK: u8 = 0x80;
 const OP_OKKV: u8 = 0x81;
 const OP_SNAPSHOT: u8 = 0x82;
 const OP_ERR: u8 = 0x83;
+const OP_METRICS_REPLY: u8 = 0x84;
 
 // Event tags.
 const EV_EDGE: u8 = 0x00;
@@ -74,6 +79,10 @@ const EV_TICK: u8 = 0x02;
 /// Upper bound on `OKKV` pair counts — far above any real reply, low enough
 /// that a corrupt length prefix can't make a client allocate unboundedly.
 const MAX_KV_PAIRS: usize = 1 << 12;
+
+/// Upper bound on histogram counts in a `METRICS` reply (the registry ships
+/// three; the bound only guards against corrupt length prefixes).
+const MAX_METRIC_HISTS: usize = 64;
 
 fn bad(msg: impl Into<String>) -> Error {
     Error::new(ErrorKind::InvalidData, msg.into())
@@ -152,6 +161,7 @@ impl BinaryCodec {
                 put_string(out, id);
             }
             Command::Stats => out.push(OP_STATS),
+            Command::Metrics => out.push(OP_METRICS),
             Command::Quit => out.push(OP_QUIT),
             Command::Shutdown => out.push(OP_SHUTDOWN),
         }
@@ -195,6 +205,24 @@ impl BinaryCodec {
                         out.extend_from_slice(&js.to_bits().to_le_bytes());
                     }
                     None => out.push(0),
+                }
+            }
+            Reply::Metrics(r) => {
+                out.push(OP_METRICS_REPLY);
+                put_varint(out, r.pairs.len() as u64);
+                for (k, v) in &r.pairs {
+                    put_string(out, k);
+                    put_varint(out, *v);
+                }
+                put_varint(out, r.hists.len() as u64);
+                for h in &r.hists {
+                    put_string(out, &h.name);
+                    put_varint(out, h.count);
+                    put_varint(out, h.buckets.len() as u64);
+                    for (i, c) in &h.buckets {
+                        put_varint(out, *i as u64);
+                        put_varint(out, *c);
+                    }
                 }
             }
             Reply::Err(reason) => {
@@ -512,6 +540,7 @@ impl Codec for BinaryCodec {
                 OP_QUERY => Decode::Cmd(Command::Query { id: need!(sr.string()?, eof) }),
                 OP_CLOSE => Decode::Cmd(Command::Close { id: need!(sr.string()?, eof) }),
                 OP_STATS => Decode::Cmd(Command::Stats),
+                OP_METRICS => Decode::Cmd(Command::Metrics),
                 OP_QUIT => Decode::Cmd(Command::Quit),
                 OP_SHUTDOWN => Decode::Cmd(Command::Shutdown),
                 other => return Err(bad(format!("unknown command opcode {other:#04x}"))),
@@ -594,6 +623,36 @@ impl Codec for BinaryCodec {
                     pending_events,
                 })
             }
+            OP_METRICS_REPLY => {
+                let np = fr.usize_bounded(MAX_KV_PAIRS, "metrics pair count")?;
+                let mut pairs = Vec::with_capacity(np);
+                for _ in 0..np {
+                    let k = fr.string()?;
+                    let v = fr.varint()?;
+                    pairs.push((k, v));
+                }
+                let nh = fr.usize_bounded(MAX_METRIC_HISTS, "metrics hist count")?;
+                let mut hists = Vec::with_capacity(nh);
+                for _ in 0..nh {
+                    let name = fr.string()?;
+                    let count = fr.varint()?;
+                    let nb = fr.usize_bounded(
+                        crate::util::stats::HIST_BUCKETS,
+                        "hist bucket count",
+                    )?;
+                    let mut buckets = Vec::with_capacity(nb);
+                    for _ in 0..nb {
+                        let i = fr.usize_bounded(
+                            crate::util::stats::HIST_BUCKETS,
+                            "hist bucket index",
+                        )?;
+                        let c = fr.varint()?;
+                        buckets.push((i as u32, c));
+                    }
+                    hists.push(crate::obs::WireHist { name, count, buckets });
+                }
+                Reply::Metrics(crate::obs::MetricsReport { pairs, hists })
+            }
             OP_ERR => Reply::Err(fr.string()?),
             other => return Err(bad(format!("unknown reply opcode {other:#04x}"))),
         };
@@ -637,6 +696,7 @@ mod tests {
             Command::Query { id: String::new() },
             Command::Close { id: "tenant/1".into() },
             Command::Stats,
+            Command::Metrics,
             Command::Quit,
             Command::Shutdown,
         ] {
@@ -662,6 +722,24 @@ mod tests {
             Reply::Ok,
             Reply::OkKv(vec![("depths".into(), "0,1,2".into())]),
             Reply::Snapshot(snap),
+            Reply::Metrics(crate::obs::MetricsReport {
+                pairs: vec![
+                    ("net_accepted".into(), 0),
+                    ("shard0_events".into(), u64::MAX),
+                ],
+                hists: vec![
+                    crate::obs::WireHist {
+                        name: "score_latency_us".into(),
+                        count: 5,
+                        buckets: vec![(0, 1), (900, 4)],
+                    },
+                    crate::obs::WireHist {
+                        name: "queue_wait_us".into(),
+                        count: 0,
+                        buckets: vec![],
+                    },
+                ],
+            }),
             Reply::Err("unknown-session".into()),
         ] {
             let back = roundtrip_reply(&reply);

@@ -607,6 +607,7 @@ mod tests {
             },
             Command::Query { id: "tenant/1".into() },
             Command::Stats,
+            Command::Metrics,
             Command::Quit,
         ];
         for wire in [Wire::Text, Wire::Binary] {

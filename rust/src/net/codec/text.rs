@@ -17,7 +17,8 @@
 //! so one bad line never desynchronizes the connection.
 
 use super::super::command::{
-    parse_wire_event, snapshot_to_kv, Command, Reply, MAX_BATCH, MAX_LINE, MAX_OPEN_NODES,
+    metrics_to_kv, parse_wire_event, snapshot_to_kv, Command, Reply, MAX_BATCH, MAX_LINE,
+    MAX_OPEN_NODES,
 };
 use super::{read_via_decode, Codec, CommandRead, Decode, ReadBuf, Wire};
 use crate::service::{decode_session_id, encode_session_id};
@@ -69,6 +70,7 @@ impl TextCodec {
             Command::Query { id } => format!("QUERY {}", encode_session_id(id)),
             Command::Close { id } => format!("CLOSE {}", encode_session_id(id)),
             Command::Stats => "STATS".to_string(),
+            Command::Metrics => "METRICS".to_string(),
             Command::Quit => "QUIT".to_string(),
             Command::Shutdown => "SHUTDOWN".to_string(),
         };
@@ -103,6 +105,7 @@ impl TextCodec {
             Reply::Ok => "OK".to_string(),
             Reply::OkKv(pairs) => kv_line(pairs),
             Reply::Snapshot(s) => kv_line(&snapshot_to_kv(s)),
+            Reply::Metrics(r) => kv_line(&metrics_to_kv(r)),
             Reply::Err(reason) => format!("ERR {reason}"),
         }
     }
@@ -178,6 +181,7 @@ impl TextCodec {
                 Ok(Parsed::Cmd(Command::Close { id }))
             }
             "STATS" => no_more(it, verb).map(|()| Parsed::Cmd(Command::Stats)),
+            "METRICS" => no_more(it, verb).map(|()| Parsed::Cmd(Command::Metrics)),
             "QUIT" => no_more(it, verb).map(|()| Parsed::Cmd(Command::Quit)),
             "SHUTDOWN" => no_more(it, verb).map(|()| Parsed::Cmd(Command::Shutdown)),
             other => Err(format!("unknown verb `{other}`")),
@@ -443,6 +447,7 @@ mod tests {
             Command::Query { id: "a".to_string() },
             Command::Close { id: "a b/c".to_string() },
             Command::Stats,
+            Command::Metrics,
             Command::Quit,
             Command::Shutdown,
         ] {
@@ -485,6 +490,23 @@ mod tests {
     }
 
     #[test]
+    fn metrics_reply_is_one_kv_line_and_recoverable() {
+        let report = crate::obs::MetricsReport {
+            pairs: vec![("net_accepted".to_string(), 2), ("uptime_ms".to_string(), 77)],
+            hists: vec![crate::obs::WireHist {
+                name: "request_us".to_string(),
+                count: 3,
+                buckets: vec![(5, 1), (17, 2)],
+            }],
+        };
+        let line = TextCodec::reply_line(&Reply::Metrics(report.clone()));
+        // pinned wire bytes: the hist pair packs count|idx:cnt,... with no spaces
+        assert_eq!(line, "OK net_accepted=2 uptime_ms=77 hist:request_us=3|5:1,17:2");
+        let back = TextCodec::parse_reply_line(&line).unwrap();
+        assert_eq!(back.into_metrics(), Some(report));
+    }
+
+    #[test]
     fn rejects_malformed_lines_without_desync() {
         for bad in [
             "NOPE\n",
@@ -503,6 +525,7 @@ mod tests {
             "CLOSE\n",
             "CLOSE bad%zz\n",
             "STATS extra\n",
+            "METRICS extra\n",
             "QUIT now\n",
             "OPEN bad%zz 4\n", // invalid id escape
             "EV a e 0 4294967295 0.5\n",

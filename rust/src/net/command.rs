@@ -52,6 +52,9 @@ pub enum Command {
     Close { id: String },
     /// Per-shard queue depths and service totals.
     Stats,
+    /// The full metrics registry: every counter/gauge, per-shard and
+    /// per-event-loop slots, latency histograms and service-derived extras.
+    Metrics,
     /// Close this connection (the server keeps running).
     Quit,
     /// Gracefully stop the whole server: drain every shard and produce the
@@ -68,7 +71,7 @@ impl Command {
             | Command::Batch { id, .. }
             | Command::Query { id }
             | Command::Close { id } => Some(id),
-            Command::Stats | Command::Quit | Command::Shutdown => None,
+            Command::Stats | Command::Metrics | Command::Quit | Command::Shutdown => None,
         }
     }
 }
@@ -83,6 +86,11 @@ pub enum Reply {
     /// A session snapshot (`QUERY` / `CLOSE`). The id does not travel on
     /// either wire — decoders leave it empty and callers re-attach it.
     Snapshot(SessionSnapshot),
+    /// The metrics registry (`METRICS`): ordered name→value pairs plus
+    /// encoded latency histograms. Values are integers end to end, so the
+    /// text wire's decimal rendering round-trips bit-for-bit and both wires
+    /// deliver identical reports.
+    Metrics(crate::obs::MetricsReport),
     /// Failure; the reason is free text.
     Err(String),
 }
@@ -118,6 +126,18 @@ impl Reply {
                 Some(s)
             }
             Reply::OkKv(ref pairs) => snapshot_from_kv(id, pairs),
+            _ => None,
+        }
+    }
+
+    /// Extract a metrics report, whichever shape the codec delivered: the
+    /// binary wire returns [`Reply::Metrics`] directly, the text wire the kv
+    /// encoding ([`metrics_to_kv`]). Every value is an integer, so the two
+    /// shapes decode to identical reports.
+    pub fn into_metrics(self) -> Option<crate::obs::MetricsReport> {
+        match self {
+            Reply::Metrics(r) => Some(r),
+            Reply::OkKv(ref pairs) => metrics_from_kv(pairs),
             _ => None,
         }
     }
@@ -161,6 +181,46 @@ pub fn snapshot_from_kv(id: &str, pairs: &[(String, String)]) -> Option<SessionS
         anomalies: parsed(pairs, "anomalies")?,
         pending_events: parsed(pairs, "pending")?,
     })
+}
+
+/// Encode a metrics report as ordered `key=value` pairs — the `METRICS`
+/// reply body on the text wire. Registry pairs travel verbatim (values are
+/// `u64`, so decimal text round-trips exactly); each histogram becomes one
+/// `hist:<name>` pair whose value packs the total count and the sparse
+/// bucket list without whitespace: `<count>|<idx>:<n>,<idx>:<n>,...`.
+pub fn metrics_to_kv(r: &crate::obs::MetricsReport) -> Vec<(String, String)> {
+    let mut pairs: Vec<(String, String)> =
+        r.pairs.iter().map(|(k, v)| (k.clone(), v.to_string())).collect();
+    for h in &r.hists {
+        let buckets: Vec<String> =
+            h.buckets.iter().map(|(i, c)| format!("{i}:{c}")).collect();
+        pairs.push((format!("hist:{}", h.name), format!("{}|{}", h.count, buckets.join(","))));
+    }
+    pairs
+}
+
+/// Decode the kv encoding back into a metrics report. `None` on any
+/// malformed value — the reply then surfaces as plain kv pairs.
+pub fn metrics_from_kv(pairs: &[(String, String)]) -> Option<crate::obs::MetricsReport> {
+    let mut report = crate::obs::MetricsReport::default();
+    for (k, v) in pairs {
+        if let Some(name) = k.strip_prefix("hist:") {
+            let (count, body) = v.split_once('|')?;
+            let mut buckets = Vec::new();
+            for tok in body.split(',').filter(|t| !t.is_empty()) {
+                let (i, c) = tok.split_once(':')?;
+                buckets.push((i.parse().ok()?, c.parse().ok()?));
+            }
+            report.hists.push(crate::obs::WireHist {
+                name: name.to_string(),
+                count: count.parse().ok()?,
+                buckets,
+            });
+        } else {
+            report.pairs.push((k.clone(), v.parse().ok()?));
+        }
+    }
+    Some(report)
 }
 
 /// Resource-bound check shared by both codecs: node endpoints and grow
@@ -272,5 +332,42 @@ mod tests {
         assert_eq!(Command::Query { id: "a".into() }.session_id(), Some("a"));
         assert_eq!(Command::Close { id: "b".into() }.session_id(), Some("b"));
         assert_eq!(Command::Stats.session_id(), None);
+        assert_eq!(Command::Metrics.session_id(), None);
+    }
+
+    #[test]
+    fn metrics_kv_roundtrips_exactly() {
+        let report = crate::obs::MetricsReport {
+            pairs: vec![
+                ("net_accepted".to_string(), 12),
+                ("shard0_events".to_string(), u64::MAX),
+                ("uptime_ms".to_string(), 0),
+            ],
+            hists: vec![
+                crate::obs::WireHist {
+                    name: "score_latency_us".to_string(),
+                    count: 7,
+                    buckets: vec![(0, 3), (64, 4)],
+                },
+                crate::obs::WireHist {
+                    name: "queue_wait_us".to_string(),
+                    count: 0,
+                    buckets: vec![],
+                },
+            ],
+        };
+        let kv = metrics_to_kv(&report);
+        // the hist pairs pack without whitespace, so the text wire's
+        // space-tokenized OK line carries them intact
+        assert!(kv.iter().all(|(k, v)| !k.contains(' ') && !v.contains(' ')));
+        let back = metrics_from_kv(&kv).expect("kv decodes");
+        assert_eq!(back, report, "kv round-trip must be exact");
+        assert_eq!(
+            Reply::Metrics(report.clone()).into_metrics(),
+            Reply::OkKv(kv).into_metrics(),
+            "both wire shapes decode to the same report"
+        );
+        // a non-metrics kv reply does not decode (non-integer value)
+        assert_eq!(metrics_from_kv(&[("depths".into(), "0,1".into())]), None);
     }
 }

@@ -82,6 +82,10 @@ pub struct NetConfig {
     /// wedged server surfaces as a clean per-connection error instead of
     /// blocking `finger load` forever.
     pub client_timeout_ms: u64,
+    /// Observability knobs: the periodic JSON snapshot writer and the
+    /// slow-request span ring (`[obs]` section, `finger serve
+    /// --metrics-interval/--metrics-out`).
+    pub obs: crate::obs::ObsConfig,
 }
 
 impl Default for NetConfig {
@@ -93,17 +97,20 @@ impl Default for NetConfig {
             event_threads: 2,
             write_timeout_ms: 5000,
             client_timeout_ms: 30_000,
+            obs: crate::obs::ObsConfig::default(),
         }
     }
 }
 
 impl NetConfig {
-    /// Read the `[net]` section of a parsed config file; missing keys fall
-    /// back to the defaults. Recognized keys: `addr`, `wire`
-    /// (`auto` | `text` | `binary`), `backoff_us`, `event_threads`,
-    /// `write_timeout_ms`, `client_timeout_ms`.
+    /// Read the `[net]` and `[obs]` sections of a parsed config file;
+    /// missing keys fall back to the defaults. Recognized keys: `addr`,
+    /// `wire` (`auto` | `text` | `binary`), `backoff_us`, `event_threads`,
+    /// `write_timeout_ms`, `client_timeout_ms`; `obs.snapshot_path`,
+    /// `obs.interval_ms`, `obs.slow_n`, `obs.sample_every`.
     pub fn from_config(c: &Config) -> Self {
         let d = Self::default();
+        let od = crate::obs::ObsConfig::default();
         Self {
             addr: c.get("net.addr").unwrap_or(&d.addr).to_string(),
             wire: c.get("net.wire").and_then(WireMode::parse).unwrap_or(d.wire),
@@ -111,6 +118,12 @@ impl NetConfig {
             event_threads: c.get_or("net.event_threads", d.event_threads).clamp(1, 64),
             write_timeout_ms: c.get_or("net.write_timeout_ms", d.write_timeout_ms).max(1),
             client_timeout_ms: c.get_or("net.client_timeout_ms", d.client_timeout_ms),
+            obs: crate::obs::ObsConfig {
+                snapshot_path: c.get("obs.snapshot_path").map(str::to_string),
+                interval_ms: c.get_or("obs.interval_ms", od.interval_ms).max(1),
+                slow_n: c.get_or("obs.slow_n", od.slow_n),
+                sample_every: c.get_or("obs.sample_every", od.sample_every),
+            },
         }
     }
 
@@ -221,6 +234,8 @@ impl NetServer {
     pub fn run(self) -> Result<ServiceReport> {
         let Self { listener, service, net, shutdown } = self;
         let threads = net.event_threads.max(1);
+        crate::obs::init_spans(net.obs.slow_n, net.obs.sample_every);
+        crate::obs::note_loops(threads);
         let mut loops = Vec::with_capacity(threads);
         let mut senders: Vec<SyncSender<TcpStream>> = Vec::with_capacity(threads);
         let mut wake_txs: Vec<TcpStream> = Vec::with_capacity(threads);
@@ -245,7 +260,9 @@ impl NetServer {
                 (Arc::clone(&service), net.clone(), shutdown.clone());
             let spawned = std::thread::Builder::new()
                 .name(format!("finger-loop-{t}"))
-                .spawn(move || EventLoop::new(service, net, shutdown, rx, wake_rx).run());
+                .spawn(move || {
+                    EventLoop::new(t, service, net, shutdown, rx, wake_rx).run()
+                });
             match spawned {
                 Ok(h) => {
                     loops.push(h);
@@ -257,6 +274,36 @@ impl NetServer {
                         Some(anyhow::Error::new(e).context("spawn event-loop thread"));
                     break;
                 }
+            }
+        }
+        // periodic JSON metrics snapshots while the server runs; the final
+        // post-drain write below covers whatever happened after the last tick
+        let mut obs_writer = None;
+        if let Some(p) = net.obs.snapshot_path.clone() {
+            let path = std::path::PathBuf::from(p);
+            let service = Arc::clone(&service);
+            let shutdown = shutdown.clone();
+            let interval = Duration::from_millis(net.obs.interval_ms.max(1));
+            let spawned = std::thread::Builder::new()
+                .name("finger-obs".to_string())
+                .spawn(move || loop {
+                    let mut slept = Duration::ZERO;
+                    while slept < interval && !shutdown.is_signaled() {
+                        let step = (interval - slept).min(Duration::from_millis(100));
+                        std::thread::sleep(step);
+                        slept += step;
+                    }
+                    let extras = service_extras(&service);
+                    if let Err(e) = crate::obs::write_snapshot(&path, &extras) {
+                        eprintln!("net: metrics snapshot {}: {e}", path.display());
+                    }
+                    if shutdown.is_signaled() {
+                        return;
+                    }
+                });
+            match spawned {
+                Ok(h) => obs_writer = Some(h),
+                Err(e) => eprintln!("net: spawn metrics writer: {e}"),
             }
         }
         if boot_err.is_none() {
@@ -292,6 +339,17 @@ impl NetServer {
         for h in loops {
             let _ = h.join();
         }
+        if let Some(h) = obs_writer {
+            let _ = h.join();
+        }
+        // one post-drain snapshot so the file on disk reflects the quiesced
+        // counters (every event loop has joined; nothing submits anymore)
+        if let Some(p) = net.obs.snapshot_path.as_deref() {
+            let extras = service_extras(&service);
+            if let Err(e) = crate::obs::write_snapshot(std::path::Path::new(p), &extras) {
+                eprintln!("net: metrics snapshot {p}: {e}");
+            }
+        }
         if let Some(e) = boot_err {
             return Err(e);
         }
@@ -308,7 +366,34 @@ fn stats_reply(service: &ScoringService) -> Reply {
         ("shards".to_string(), service.shards().to_string()),
         ("depths".to_string(), depths.join(",")),
         ("submitted".to_string(), service.events_submitted().to_string()),
+        ("uptime_ms".to_string(), service.uptime_ms().to_string()),
+        (
+            "connections".to_string(),
+            crate::obs::Gauge::NetConnections.get().to_string(),
+        ),
     ])
+}
+
+/// Service-side extras merged into every metrics report and snapshot:
+/// totals the registry cannot see on its own (authoritative submit count,
+/// live queue depths) keyed alongside the registry's counters.
+fn service_extras(service: &ScoringService) -> Vec<(String, u64)> {
+    let mut extra = vec![
+        ("service_shards".to_string(), service.shards() as u64),
+        (
+            "service_events_submitted".to_string(),
+            service.events_submitted() as u64,
+        ),
+        ("uptime_ms".to_string(), service.uptime_ms()),
+    ];
+    for (i, d) in service.queue_depths().iter().enumerate() {
+        extra.push((format!("shard{i}_depth"), *d as u64));
+    }
+    extra
+}
+
+fn metrics_reply(service: &ScoringService) -> Reply {
+    Reply::Metrics(crate::obs::report(&service_extras(service)))
 }
 
 /// A command the service could not take yet (shard queue full): the typed
@@ -326,6 +411,34 @@ enum Pending {
 enum Attempt {
     Done(Reply),
     Blocked(Pending),
+}
+
+/// A parked attempt plus when it first parked — the span's queue-wait clock.
+struct Parked {
+    p: Pending,
+    since: Instant,
+}
+
+/// Copy the span source fields out of a pending attempt before the service
+/// consumes it: command kind, the session-id bytes (truncated to the span
+/// ring's fixed width, so nothing allocates) and the target shard.
+fn span_src(
+    service: &ScoringService,
+    p: &Pending,
+) -> (crate::obs::SpanKind, [u8; crate::obs::SPAN_ID_BYTES], usize, usize) {
+    use crate::obs::SpanKind;
+    let (kind, id) = match p {
+        Pending::Open { id, .. } => (SpanKind::Open, id),
+        Pending::Batch { id, .. } => (SpanKind::Batch, id),
+        Pending::Query { id } => (SpanKind::Query, id),
+        Pending::Close { id } => (SpanKind::Close, id),
+    };
+    let mut buf = [0u8; crate::obs::SPAN_ID_BYTES];
+    let len = id.len().min(buf.len());
+    for (dst, src) in buf.iter_mut().zip(id.as_bytes()) {
+        *dst = *src;
+    }
+    (kind, buf, len, service.shard_for(id))
 }
 
 /// Run one attempt of `p` against the service. Rejected payloads are handed
@@ -393,7 +506,7 @@ struct Conn {
     /// Encoded replies not yet written; `wpos` marks the written prefix.
     wbuf: Vec<u8>,
     wpos: usize,
-    pending: Option<Pending>,
+    pending: Option<Parked>,
     life: Lifecycle,
     /// Peer closed its write side (read returned 0).
     peer_eof: bool,
@@ -430,12 +543,16 @@ impl Conn {
 
     /// Encode one reply onto the write queue with this connection's codec.
     fn reply(&mut self, r: &Reply) {
+        let was = self.queued();
         let Some(codec) = self.codec.as_mut() else {
             self.dead = true;
             return;
         };
         if codec.write_reply(&mut self.wbuf, r).is_err() {
             self.dead = true;
+        }
+        if was < WBUF_HIGH && self.queued() >= WBUF_HIGH {
+            crate::obs::Counter::NetWriteSuspensions.inc();
         }
     }
 
@@ -450,7 +567,7 @@ impl Conn {
                     self.peer_eof = true;
                     return;
                 }
-                Ok(_) => {}
+                Ok(n) => crate::obs::Counter::NetBytesIn.add(n as u64),
                 Err(e) if e.kind() == ErrorKind::WouldBlock => return,
                 Err(e) if e.kind() == ErrorKind::Interrupted => {}
                 Err(_) => {
@@ -476,6 +593,7 @@ impl Conn {
                 Ok(n) => {
                     self.wpos += n;
                     self.write_stall = None;
+                    crate::obs::Counter::NetBytesOut.add(n as u64);
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
                     let since = *self.write_stall.get_or_insert_with(Instant::now);
@@ -524,6 +642,7 @@ fn dispatch_cmd(
         Command::Query { id } => run_attempt(service, shutdown, conn, Pending::Query { id }),
         Command::Close { id } => run_attempt(service, shutdown, conn, Pending::Close { id }),
         Command::Stats => conn.reply(&stats_reply(service)),
+        Command::Metrics => conn.reply(&metrics_reply(service)),
         Command::Quit => {
             conn.reply(&Reply::Ok);
             conn.start_drain();
@@ -545,13 +664,22 @@ fn run_attempt(
     conn: &mut Conn,
     p: Pending,
 ) {
+    let t0 = Instant::now();
+    let (kind, idbuf, idlen, shard) = span_src(service, &p);
     match attempt(service, p) {
-        Attempt::Done(r) => conn.reply(&r),
+        Attempt::Done(r) => {
+            let total_us = t0.elapsed().as_micros() as u64;
+            crate::obs::request_us().record(conn.serial as usize, total_us);
+            let id = std::str::from_utf8(idbuf.get(..idlen).unwrap_or(&[])).unwrap_or("");
+            crate::obs::span_record(kind, id, shard, 0, total_us);
+            conn.reply(&r);
+        }
         Attempt::Blocked(p) => {
             if shutdown.is_signaled() {
                 conn.reply(&Reply::Err("shutting-down".to_string()));
             } else {
-                conn.pending = Some(p);
+                crate::obs::Counter::NetParks.inc();
+                conn.pending = Some(Parked { p, since: t0 });
             }
         }
     }
@@ -600,13 +728,26 @@ fn progress_conn(
 
     // retry the parked command before decoding anything new — replies must
     // stay in request order
-    if let Some(p) = conn.pending.take() {
+    if let Some(parked) = conn.pending.take() {
         if shutdown.is_signaled() {
             conn.reply(&Reply::Err("shutting-down".to_string()));
         } else {
-            match attempt(service, p) {
-                Attempt::Done(r) => conn.reply(&r),
-                Attempt::Blocked(p) => conn.pending = Some(p),
+            let since = parked.since;
+            let queue_us = since.elapsed().as_micros() as u64;
+            let (kind, idbuf, idlen, shard) = span_src(service, &parked.p);
+            match attempt(service, parked.p) {
+                Attempt::Done(r) => {
+                    crate::obs::Counter::NetResumes.inc();
+                    let total_us = since.elapsed().as_micros() as u64;
+                    let stripe = conn.serial as usize;
+                    crate::obs::request_us().record(stripe, total_us);
+                    crate::obs::queue_wait_us().record(stripe, queue_us);
+                    let id = std::str::from_utf8(idbuf.get(..idlen).unwrap_or(&[]))
+                        .unwrap_or("");
+                    crate::obs::span_record(kind, id, shard, queue_us, total_us);
+                    conn.reply(&r);
+                }
+                Attempt::Blocked(p) => conn.pending = Some(Parked { p, since }),
             }
         }
     }
@@ -626,7 +767,10 @@ fn progress_conn(
         };
         match outcome {
             Ok(Decode::Cmd(cmd)) => dispatch_cmd(service, shutdown, conn, cmd),
-            Ok(Decode::Malformed(reason)) => conn.reply(&Reply::Err(reason)),
+            Ok(Decode::Malformed(reason)) => {
+                crate::obs::Counter::NetDecodeErrors.inc();
+                conn.reply(&Reply::Err(reason));
+            }
             Ok(Decode::Incomplete) => break,
             Ok(Decode::Eof) => {
                 conn.start_drain();
@@ -634,6 +778,7 @@ fn progress_conn(
             }
             Err(e) => {
                 // fatal framing error: flush what is queued, then close
+                crate::obs::Counter::NetDecodeErrors.inc();
                 eprintln!("net: connection {}: {e}", conn.serial);
                 conn.start_drain();
                 break;
@@ -649,6 +794,9 @@ fn progress_conn(
 /// One event-loop thread: a poll set of nonblocking connections, the waker
 /// socket, and the bounded intake from the accept loop.
 struct EventLoop {
+    /// Which loop this is (`finger-loop-{index}`) — its slot in the
+    /// per-loop poll-set gauges.
+    index: usize,
     service: Arc<ScoringService>,
     net: NetConfig,
     shutdown: ShutdownHandle,
@@ -663,6 +811,7 @@ struct EventLoop {
 
 impl EventLoop {
     fn new(
+        index: usize,
         service: Arc<ScoringService>,
         net: NetConfig,
         shutdown: ShutdownHandle,
@@ -670,6 +819,7 @@ impl EventLoop {
         waker: TcpStream,
     ) -> Self {
         Self {
+            index,
             service,
             net,
             shutdown,
@@ -740,6 +890,8 @@ impl EventLoop {
             write_stall: None,
             dead: false,
         });
+        crate::obs::Counter::NetAccepted.inc();
+        crate::obs::Gauge::NetConnections.inc();
         Ok(())
     }
 
@@ -767,6 +919,7 @@ impl EventLoop {
             if !c.dead {
                 return true;
             }
+            crate::obs::Gauge::NetConnections.dec();
             if pool.len() + 1 < POOL_CAP {
                 pool.push(std::mem::take(&mut c.rbuf).into_vec());
                 let mut w = std::mem::take(&mut c.wbuf);
@@ -814,12 +967,14 @@ impl EventLoop {
             }
             self.pollfds.push(PollFd::interest(c.fd, ev));
         }
+        crate::obs::set_loop_pollset(self.index, self.pollfds.len() as u64);
         let timeout = self.tick_timeout_ms();
         if let Err(e) = poll_fds(&mut self.pollfds, timeout) {
             eprintln!("net: poll failed: {e}");
             std::thread::sleep(Duration::from_millis(1));
             return;
         }
+        crate::obs::Counter::NetWakeups.inc();
         if self.pollfds.first().map(|p| p.readable()).unwrap_or(false) {
             self.drain_waker();
         }

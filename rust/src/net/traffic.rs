@@ -29,6 +29,8 @@ use crate::service::SessionSnapshot;
 use crate::stream::StreamEvent;
 use crate::util::stats::Histogram;
 use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Driver thread cap: a 10k-connection sweep opens 10k sockets but never
@@ -57,6 +59,12 @@ pub struct TrafficConfig {
     pub query_sessions: bool,
     /// Send `Shutdown` after the run (from a fresh connection).
     pub shutdown_after: bool,
+    /// Poll `STATS` from a side connection roughly once a second during the
+    /// replay and print a live per-shard queue-depth imbalance line.
+    pub live_stats: bool,
+    /// After the replay, fetch `METRICS` on *both* wires and fail the run
+    /// unless the key lists are identical (codec parity check).
+    pub check_metrics: bool,
 }
 
 impl Default for TrafficConfig {
@@ -69,6 +77,8 @@ impl Default for TrafficConfig {
             workload: TenantWorkloadConfig::default(),
             query_sessions: true,
             shutdown_after: false,
+            live_stats: false,
+            check_metrics: false,
         }
     }
 }
@@ -101,6 +111,9 @@ pub struct TrafficReport {
     /// One snapshot per tenant (empty when `query_sessions` is off),
     /// sorted by session id.
     pub snapshots: Vec<SessionSnapshot>,
+    /// `Some(key count)` when the run verified METRICS key parity across
+    /// both wires (`check_metrics`).
+    pub metrics_keys: Option<usize>,
 }
 
 /// Replay `cfg.workload` against `cfg.addr`. Builds the tenant streams,
@@ -109,19 +122,109 @@ pub struct TrafficReport {
 /// error.
 pub fn run_load(cfg: &TrafficConfig) -> Result<TrafficReport> {
     let streams = tenant_streams(&cfg.workload);
-    let report = replay(
+    let stop = Arc::new(AtomicBool::new(false));
+    let monitor = if cfg.live_stats {
+        let (addr, wire, timeout) = (cfg.addr.clone(), cfg.wire, cfg.client_timeout);
+        let stop = Arc::clone(&stop);
+        std::thread::Builder::new()
+            .name("finger-load-mon".to_string())
+            .spawn(move || monitor_stats(&addr, wire, timeout, &stop))
+            .ok()
+    } else {
+        None
+    };
+    let outcome = replay(
         &cfg.addr,
         cfg.connections,
         cfg.query_sessions,
         &streams,
         cfg.wire,
         cfg.client_timeout,
-    )?;
+    );
+    stop.store(true, Ordering::SeqCst);
+    if let Some(h) = monitor {
+        let _ = h.join();
+    }
+    let mut report = outcome?;
+    if cfg.check_metrics {
+        report.metrics_keys = Some(check_metrics_parity(&cfg.addr, cfg.client_timeout)?);
+    }
     if cfg.shutdown_after {
         NetClient::connect_with(cfg.addr.as_str(), cfg.wire, cfg.client_timeout)?
             .shutdown_server()?;
     }
     Ok(report)
+}
+
+/// Poll `STATS` once a second until `stop`, printing one live line per poll:
+/// per-shard queue depths plus a max/mean imbalance ratio, so a skewed
+/// tenant partition shows up while the run is still going.
+fn monitor_stats(addr: &str, wire: Wire, timeout: Option<Duration>, stop: &AtomicBool) {
+    let mut client = match NetClient::connect_with(addr, wire, timeout) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("load: stats monitor: {e:#}");
+            return;
+        }
+    };
+    loop {
+        for _ in 0..10 {
+            if stop.load(Ordering::SeqCst) {
+                let _ = client.quit();
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        match client.stats() {
+            Ok(s) => {
+                let depths: Vec<String> =
+                    s.depths.iter().map(|d| d.to_string()).collect();
+                let max = s.depths.iter().copied().max().unwrap_or(0);
+                let mean = s.depths.iter().sum::<usize>() as f64
+                    / s.depths.len().max(1) as f64;
+                let imbalance = if mean > 0.0 { max as f64 / mean } else { 1.0 };
+                eprintln!(
+                    "load: depths=[{}] max={max} mean={mean:.1} imbalance={imbalance:.2} conns={} submitted={} uptime={}ms",
+                    depths.join(","),
+                    s.connections,
+                    s.submitted,
+                    s.uptime_ms,
+                );
+            }
+            Err(e) => {
+                eprintln!("load: stats monitor: {e:#}");
+                return;
+            }
+        }
+    }
+}
+
+/// Fetch `METRICS` on both wires and require the key lists to be identical
+/// — every counter, gauge, slot, extra and histogram the text codec renders
+/// must come back through the binary codec under the same name. Returns the
+/// (common) key count.
+pub fn check_metrics_parity(addr: &str, timeout: Option<Duration>) -> Result<usize> {
+    let text = metric_keys(addr, Wire::Text, timeout)?;
+    let binary = metric_keys(addr, Wire::Binary, timeout)?;
+    if text != binary {
+        anyhow::bail!(
+            "METRICS key lists differ across wires: text={text:?} binary={binary:?}"
+        );
+    }
+    Ok(text.len())
+}
+
+/// One `METRICS` round-trip on `wire`, flattened to its key list (histogram
+/// keys use the text wire's `hist:` prefix so both shapes compare equal).
+fn metric_keys(addr: &str, wire: Wire, timeout: Option<Duration>) -> Result<Vec<String>> {
+    let mut client = NetClient::connect_with(addr, wire, timeout)
+        .with_context(|| format!("connect ({wire} wire)"))?;
+    let report =
+        client.metrics().with_context(|| format!("METRICS on the {wire} wire"))?;
+    let mut keys: Vec<String> = report.pairs.iter().map(|(k, _)| k.clone()).collect();
+    keys.extend(report.hists.iter().map(|h| format!("hist:{}", h.name)));
+    client.quit()?;
+    Ok(keys)
 }
 
 /// Replay prebuilt tenant streams over `connections` concurrent client
@@ -182,6 +285,7 @@ pub fn replay(
         p50_us: lat.percentile(50.0),
         p99_us: lat.percentile(99.0),
         snapshots,
+        metrics_keys: None,
     })
 }
 

@@ -1,0 +1,132 @@
+//! Lock-free histogram recorder: the atomic mirror of
+//! [`stats::Histogram`](crate::util::stats::Histogram), sharing its exact
+//! bucket table ([`stats::bucket_index`](crate::util::stats::bucket_index),
+//! 976 buckets, 1/16 relative error) so a snapshot transfers bucket counts
+//! without re-bucketing.
+//!
+//! Recording is two relaxed `fetch_add`s on `static` storage — safe from any
+//! thread, zero allocation, no lock. To keep concurrent recorders (shard
+//! workers, event loops) from bouncing one cache line, the bucket table is
+//! striped [`OBS_HIST_STRIPES`] ways: callers pass a stripe hint (their
+//! shard or loop index) and snapshots fold the stripes back together.
+
+use super::OBS_HIST_STRIPES;
+use crate::util::stats::{self, HIST_BUCKETS};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One stripe: a full bucket table plus its sample count.
+struct Stripe {
+    counts: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+}
+
+impl Stripe {
+    const fn new() -> Self {
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Stripe { counts: [Z; HIST_BUCKETS], count: AtomicU64::new(0) }
+    }
+}
+
+/// A statically-constructible, lock-free, striped histogram recorder.
+pub struct AtomicHistogram {
+    stripes: [Stripe; OBS_HIST_STRIPES],
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicHistogram {
+    /// Const so recorders can live in `static`s (`static H: AtomicHistogram
+    /// = AtomicHistogram::new();`).
+    pub const fn new() -> Self {
+        const S: Stripe = Stripe::new();
+        AtomicHistogram { stripes: [S; OBS_HIST_STRIPES] }
+    }
+
+    // lint: hot-path
+    // Record is called from scoring and event-loop hot regions: atomics
+    // only, slot access via `get` (no panic path), no allocation.
+
+    /// Record one sample on the caller's stripe (`stripe` folds modulo the
+    /// stripe count — pass a shard or loop index).
+    #[inline]
+    pub fn record(&self, stripe: usize, v: u64) {
+        if let Some(s) = self.stripes.get(stripe % OBS_HIST_STRIPES) {
+            if let Some(c) = s.counts.get(stats::bucket_index(v)) {
+                c.fetch_add(1, Ordering::Relaxed);
+                s.count.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    // lint: hot-path end
+
+    /// Total samples recorded across all stripes.
+    pub fn count(&self) -> u64 {
+        self.stripes.iter().map(|s| s.count.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Fold the stripes into an owned [`stats::Histogram`] snapshot.
+    /// Concurrent recording keeps running; the snapshot is a consistent
+    /// *monotone* view (it may miss samples landing mid-walk, never
+    /// invents any).
+    pub fn snapshot(&self) -> stats::Histogram {
+        let mut h = stats::Histogram::new();
+        for s in &self.stripes {
+            for (i, c) in s.counts.iter().enumerate() {
+                let n = c.load(Ordering::Relaxed);
+                if n > 0 {
+                    h.add_count(i, n);
+                }
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_the_plain_histogram_across_stripes() {
+        static H: AtomicHistogram = AtomicHistogram::new();
+        let mut expect = stats::Histogram::new();
+        for (i, v) in [0u64, 5, 16, 999, 54_321, 7, 7, 1 << 40].iter().enumerate() {
+            H.record(i, *v); // spread over every stripe, folding included
+            expect.record(*v);
+        }
+        assert_eq!(H.count(), expect.count());
+        assert_eq!(H.snapshot(), expect);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        static H: AtomicHistogram = AtomicHistogram::new();
+        const PER_THREAD: usize = 5_000;
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                s.spawn(move || {
+                    for k in 0..PER_THREAD {
+                        H.record(t, (k as u64 % 100) + 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(H.count(), 4 * PER_THREAD as u64);
+        assert_eq!(H.snapshot().count(), 4 * PER_THREAD as u64);
+    }
+
+    #[test]
+    fn snapshot_percentiles_bound_error_like_the_source() {
+        let h = AtomicHistogram::new();
+        for _ in 0..100 {
+            h.record(0, 1_000);
+        }
+        let p99 = h.snapshot().percentile(99.0);
+        assert!(p99 >= 1_000 && p99 - 1_000 <= 1_000 / 16, "p99={p99}");
+    }
+}

@@ -1,0 +1,508 @@
+//! First-party observability: a dependency-free, process-global metrics
+//! registry in the style of `util/stats.rs`.
+//!
+//! The server built in PRs 2–7 was a black box while running — queue depths,
+//! event-loop wakeups, backpressure parks and per-window scoring latency were
+//! only visible post-mortem in `ServiceReport`/`TrafficReport`. This module
+//! is the sensor layer the ROADMAP's scaling items read from: static atomic
+//! [`Counter`]s and [`Gauge`]s, fixed per-shard / per-event-loop slot arrays,
+//! striped lock-free [`AtomicHistogram`] recorders, and a sampled ring of the
+//! slowest request [`span`]s.
+//!
+//! Design constraints, in order:
+//!
+//! * **Zero allocation at record time.** Every record function is a handful
+//!   of relaxed atomic ops on `static` cells — callable from `// lint:
+//!   hot-path` and `// lint: event-loop` regions (the recording code below is
+//!   itself inside a `lint: hot-path` region, so FL002 enforces this), and
+//!   the counting-allocator assert in `benches/finger_hotpath.rs` still sees
+//!   0 allocations/window with scoring metrics live.
+//! * **No panic paths.** `rust/src/obs/` is part of the FL001 panic-free
+//!   zone: slot arrays are accessed via `get(i % LEN)` (out-of-range shards
+//!   fold modulo the slot count, so totals stay exact), never by indexing.
+//! * **Process-global.** Recorders are reached from the scoring hot path
+//!   (`stream/window.rs`), which is constructed in places that know nothing
+//!   about servers (benches, the in-process pipeline) — a registry handle
+//!   can't be threaded through, so the registry is `static` and readers must
+//!   treat values as monotone counters, not per-run deltas.
+//!
+//! Rendering (name → value pairs, histogram snapshots) allocates freely —
+//! it runs on the `METRICS` request path and the snapshot writer thread,
+//! never per event. The catalogue of every metric below is documented in
+//! `docs/OBSERVABILITY.md`.
+
+pub mod hist;
+pub mod snapshot;
+pub mod span;
+
+pub use hist::AtomicHistogram;
+pub use snapshot::{write_snapshot, ObsConfig};
+pub use span::{
+    init_spans, snapshot_spans, span_record, SpanKind, SpanSnapshot, DEFAULT_SLOW_N,
+    SPAN_ID_BYTES,
+};
+
+use crate::util::stats;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Per-shard slot count. A service configured with more shards than this
+/// folds the excess modulo [`MAX_OBS_SHARDS`] — per-slot attribution blurs
+/// past 64 shards, but slot sums stay exactly equal to the true totals.
+pub const MAX_OBS_SHARDS: usize = 64;
+
+/// Per-event-loop slot count (the server clamps `event_threads` to 64, so
+/// in practice this is never folded).
+pub const MAX_OBS_LOOPS: usize = 64;
+
+/// Stripe count for the histogram recorders: concurrent recorders spread
+/// over stripes by shard/loop index so a hot path never bounces one cache
+/// line across every worker.
+pub const OBS_HIST_STRIPES: usize = 4;
+
+/// Monotone event counters. Names on the wire/snapshot come from
+/// [`Counter::name`]; the declaration order here is the stable render order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Connections accepted by the listener (lifetime total).
+    NetAccepted,
+    /// Event-loop `poll(2)` returns (readiness, waker byte, or tick).
+    NetWakeups,
+    /// Bytes read off client sockets.
+    NetBytesIn,
+    /// Bytes written to client sockets.
+    NetBytesOut,
+    /// Malformed or framing-broken requests answered with `ERR`.
+    NetDecodeErrors,
+    /// Commands parked on shard backpressure (`Pending`), withdrawing the
+    /// connection's read interest.
+    NetParks,
+    /// Parked commands later accepted by their shard.
+    NetResumes,
+    /// Write queues crossing the high-water mark (decode suspended until
+    /// the peer drains replies).
+    NetWriteSuspensions,
+    /// `try_submit*` rejections with a full shard queue.
+    SvcWouldBlock,
+    /// Events entering window batching (pre-coalesce).
+    WinEventsIn,
+    /// Edge deltas surviving coalescing (post-merge); the coalesce ratio is
+    /// `win_coalesced / win_events_in`.
+    WinCoalesced,
+    /// Windows scored (Algorithm 2 runs).
+    ScoreWindows,
+    /// Windows flagged anomalous by the detector.
+    ScoreAnomalies,
+}
+
+/// Every counter in stable render order.
+pub const COUNTERS: &[Counter] = &[
+    Counter::NetAccepted,
+    Counter::NetWakeups,
+    Counter::NetBytesIn,
+    Counter::NetBytesOut,
+    Counter::NetDecodeErrors,
+    Counter::NetParks,
+    Counter::NetResumes,
+    Counter::NetWriteSuspensions,
+    Counter::SvcWouldBlock,
+    Counter::WinEventsIn,
+    Counter::WinCoalesced,
+    Counter::ScoreWindows,
+    Counter::ScoreAnomalies,
+];
+
+/// Live-level gauges (incremented and decremented; rendered as `u64`, never
+/// below zero).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gauge {
+    /// Connections currently owned by the event loops.
+    NetConnections,
+    /// Sessions currently resident across all shards.
+    SvcSessions,
+}
+
+/// Every gauge in stable render order.
+pub const GAUGES: &[Gauge] = &[Gauge::NetConnections, Gauge::SvcSessions];
+
+// lint: hot-path
+// Record-time surface: pure relaxed atomics on statics. No allocation
+// (FL002 checks this region), no indexing/unwrap (FL001 checks the module).
+
+/// One zero-initialized cell per macro expansion — each `match` arm below
+/// gets its own distinct `static`.
+macro_rules! cell {
+    () => {{
+        static C: AtomicU64 = AtomicU64::new(0);
+        &C
+    }};
+}
+
+impl Counter {
+    fn cell(self) -> &'static AtomicU64 {
+        match self {
+            Counter::NetAccepted => cell!(),
+            Counter::NetWakeups => cell!(),
+            Counter::NetBytesIn => cell!(),
+            Counter::NetBytesOut => cell!(),
+            Counter::NetDecodeErrors => cell!(),
+            Counter::NetParks => cell!(),
+            Counter::NetResumes => cell!(),
+            Counter::NetWriteSuspensions => cell!(),
+            Counter::SvcWouldBlock => cell!(),
+            Counter::WinEventsIn => cell!(),
+            Counter::WinCoalesced => cell!(),
+            Counter::ScoreWindows => cell!(),
+            Counter::ScoreAnomalies => cell!(),
+        }
+    }
+
+    /// Add `n`; a relaxed `fetch_add` on a static cell.
+    #[inline]
+    pub fn add(self, n: u64) {
+        self.cell().fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    #[inline]
+    pub fn inc(self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(self) -> u64 {
+        self.cell().load(Ordering::Relaxed)
+    }
+
+    /// The stable metric name (`docs/OBSERVABILITY.md` catalogues these).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::NetAccepted => "net_accepted",
+            Counter::NetWakeups => "net_wakeups",
+            Counter::NetBytesIn => "net_bytes_in",
+            Counter::NetBytesOut => "net_bytes_out",
+            Counter::NetDecodeErrors => "net_decode_errors",
+            Counter::NetParks => "net_parks",
+            Counter::NetResumes => "net_resumes",
+            Counter::NetWriteSuspensions => "net_write_suspensions",
+            Counter::SvcWouldBlock => "svc_would_block",
+            Counter::WinEventsIn => "win_events_in",
+            Counter::WinCoalesced => "win_coalesced",
+            Counter::ScoreWindows => "score_windows",
+            Counter::ScoreAnomalies => "score_anomalies",
+        }
+    }
+}
+
+impl Gauge {
+    fn cell(self) -> &'static AtomicU64 {
+        match self {
+            Gauge::NetConnections => cell!(),
+            Gauge::SvcSessions => cell!(),
+        }
+    }
+
+    /// Raise the level by one.
+    #[inline]
+    pub fn inc(self) {
+        self.cell().fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Lower the level by one; saturates at zero instead of wrapping, so a
+    /// spurious extra decrement (a bug, but an observability bug) can never
+    /// render as `u64::MAX`.
+    #[inline]
+    pub fn dec(self) {
+        let c = self.cell();
+        let mut cur = c.load(Ordering::Relaxed);
+        while cur > 0 {
+            match c.compare_exchange_weak(cur, cur - 1, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Current level.
+    pub fn get(self) -> u64 {
+        self.cell().load(Ordering::Relaxed)
+    }
+
+    /// The stable metric name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Gauge::NetConnections => "net_connections",
+            Gauge::SvcSessions => "svc_sessions",
+        }
+    }
+}
+
+const SLOT_ZERO: AtomicU64 = AtomicU64::new(0);
+
+/// Events accepted per shard (incremented at the service's submit sites, so
+/// the slots sum exactly to `ServiceReport.events_submitted`).
+static SHARD_EVENTS: [AtomicU64; MAX_OBS_SHARDS] = [SLOT_ZERO; MAX_OBS_SHARDS];
+/// Windows scored per shard.
+static SHARD_WINDOWS: [AtomicU64; MAX_OBS_SHARDS] = [SLOT_ZERO; MAX_OBS_SHARDS];
+/// `WouldBlock` rejections per shard (which queue is the hot one).
+static SHARD_WOULD_BLOCK: [AtomicU64; MAX_OBS_SHARDS] = [SLOT_ZERO; MAX_OBS_SHARDS];
+/// Poll-set size per event loop (connections + the waker), set each wakeup.
+static LOOP_POLLSET: [AtomicU64; MAX_OBS_LOOPS] = [SLOT_ZERO; MAX_OBS_LOOPS];
+
+/// How many shard slots are live (highest configured shard count seen).
+static SHARD_COUNT: AtomicUsize = AtomicUsize::new(0);
+/// How many event-loop slots are live.
+static LOOP_COUNT: AtomicUsize = AtomicUsize::new(0);
+
+#[inline]
+fn slot_add(slots: &[AtomicU64; MAX_OBS_SHARDS], shard: usize, n: u64) {
+    if let Some(c) = slots.get(shard % MAX_OBS_SHARDS) {
+        c.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Record `n` events accepted onto `shard`.
+#[inline]
+pub fn shard_events_add(shard: usize, n: u64) {
+    slot_add(&SHARD_EVENTS, shard, n);
+}
+
+/// Record one window scored on `shard`.
+#[inline]
+pub fn shard_window(shard: usize) {
+    slot_add(&SHARD_WINDOWS, shard, 1);
+}
+
+/// Record one `WouldBlock` rejection from `shard` (also bumps the global
+/// [`Counter::SvcWouldBlock`]).
+#[inline]
+pub fn shard_would_block(shard: usize) {
+    slot_add(&SHARD_WOULD_BLOCK, shard, 1);
+    Counter::SvcWouldBlock.inc();
+}
+
+/// Publish event loop `idx`'s current poll-set size.
+#[inline]
+pub fn set_loop_pollset(idx: usize, size: u64) {
+    if let Some(c) = LOOP_POLLSET.get(idx % MAX_OBS_LOOPS) {
+        c.store(size, Ordering::Relaxed);
+    }
+}
+
+/// Histogram of window scoring latency (Algorithm 2, microseconds).
+pub fn score_latency_us() -> &'static AtomicHistogram {
+    static H: AtomicHistogram = AtomicHistogram::new();
+    &H
+}
+
+/// Histogram of full request round-trips server-side (decode → reply
+/// queued, microseconds), including any backpressure park.
+pub fn request_us() -> &'static AtomicHistogram {
+    static H: AtomicHistogram = AtomicHistogram::new();
+    &H
+}
+
+/// Histogram of backpressure queue-wait (park → shard acceptance,
+/// microseconds); empty while no command ever parks.
+pub fn queue_wait_us() -> &'static AtomicHistogram {
+    static H: AtomicHistogram = AtomicHistogram::new();
+    &H
+}
+
+/// Record one scored window from the scoring hot path: latency into
+/// [`score_latency_us`] (striped by `stripe`), the window counter, and the
+/// anomaly counter when the detector fired.
+#[inline]
+pub fn score_window(latency_us: u64, anomalous: bool, stripe: usize) {
+    score_latency_us().record(stripe, latency_us);
+    Counter::ScoreWindows.inc();
+    if anomalous {
+        Counter::ScoreAnomalies.inc();
+    }
+}
+
+// lint: hot-path end
+
+/// Declare the number of live service shards (rendering shows this many
+/// per-shard slots). Keeps the maximum it has seen.
+pub fn note_shards(n: usize) {
+    SHARD_COUNT.fetch_max(n.min(MAX_OBS_SHARDS), Ordering::Relaxed);
+}
+
+/// Declare the number of live event loops.
+pub fn note_loops(n: usize) {
+    LOOP_COUNT.fetch_max(n.min(MAX_OBS_LOOPS), Ordering::Relaxed);
+}
+
+/// The live per-shard event totals (one entry per noted shard). Their sum
+/// equals `ServiceReport.events_submitted` for a single-service process.
+pub fn shard_event_counts() -> Vec<u64> {
+    let n = SHARD_COUNT.load(Ordering::Relaxed);
+    SHARD_EVENTS.iter().take(n).map(|c| c.load(Ordering::Relaxed)).collect()
+}
+
+/// Everything the registry knows, as a typed report: the payload of the
+/// `METRICS` wire verb (`Reply::Metrics`) and the core of the JSON
+/// snapshot. Key order is deterministic: counters, gauges, then per-shard
+/// and per-loop slots in index order.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricsReport {
+    /// Flat `name → value` pairs (counters, gauges, slots, plus whatever
+    /// server-derived pairs the builder appends, e.g. `uptime_ms`).
+    pub pairs: Vec<(String, u64)>,
+    /// Histograms in sparse encoded form.
+    pub hists: Vec<WireHist>,
+}
+
+/// One histogram in the sparse form that travels on the wire and into
+/// snapshots: `(bucket index, count)` pairs ascending by index, bucket
+/// semantics shared with [`stats::bucket_index`].
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct WireHist {
+    pub name: String,
+    /// Total samples (sum of the bucket counts).
+    pub count: u64,
+    pub buckets: Vec<(u32, u64)>,
+}
+
+impl WireHist {
+    /// Encode a dense histogram sparsely under `name`.
+    pub fn from_histogram(name: &str, h: &stats::Histogram) -> Self {
+        Self {
+            name: name.to_string(),
+            count: h.count(),
+            buckets: h.nonzero_buckets().map(|(i, c)| (i as u32, c)).collect(),
+        }
+    }
+
+    /// Reconstruct the dense histogram (exact: both sides index with
+    /// [`stats::bucket_index`]).
+    pub fn to_histogram(&self) -> stats::Histogram {
+        let mut h = stats::Histogram::new();
+        for &(i, c) in &self.buckets {
+            h.add_count(i as usize, c);
+        }
+        h
+    }
+}
+
+/// Render the whole registry. `extra` pairs (server-derived values such as
+/// `uptime_ms` or `shards`) are appended after the registry's own, so the
+/// registry portion of the key sequence is identical no matter who asks.
+pub fn report(extra: &[(String, u64)]) -> MetricsReport {
+    let mut pairs: Vec<(String, u64)> = Vec::new();
+    for c in COUNTERS {
+        pairs.push((c.name().to_string(), c.get()));
+    }
+    for g in GAUGES {
+        pairs.push((g.name().to_string(), g.get()));
+    }
+    let shards = SHARD_COUNT.load(Ordering::Relaxed);
+    for (i, (ev, (win, wb))) in SHARD_EVENTS
+        .iter()
+        .zip(SHARD_WINDOWS.iter().zip(SHARD_WOULD_BLOCK.iter()))
+        .take(shards)
+        .enumerate()
+    {
+        pairs.push((format!("shard{i}_events"), ev.load(Ordering::Relaxed)));
+        pairs.push((format!("shard{i}_windows"), win.load(Ordering::Relaxed)));
+        pairs.push((format!("shard{i}_would_block"), wb.load(Ordering::Relaxed)));
+    }
+    let loops = LOOP_COUNT.load(Ordering::Relaxed);
+    for (i, c) in LOOP_POLLSET.iter().take(loops).enumerate() {
+        pairs.push((format!("loop{i}_pollset"), c.load(Ordering::Relaxed)));
+    }
+    pairs.extend(extra.iter().cloned());
+    let hists = vec![
+        WireHist::from_histogram("score_latency_us", &score_latency_us().snapshot()),
+        WireHist::from_histogram("request_us", &request_us().snapshot()),
+        WireHist::from_histogram("queue_wait_us", &queue_wait_us().snapshot()),
+    ];
+    MetricsReport { pairs, hists }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global and production code records into it
+    // from other unit tests running concurrently in this binary, so the
+    // assertions below are monotone (`>=`), never exact before/after.
+
+    #[test]
+    fn counters_accumulate_and_name_stably() {
+        let before = Counter::NetAccepted.get();
+        Counter::NetAccepted.inc();
+        Counter::NetAccepted.add(2);
+        assert!(Counter::NetAccepted.get() >= before + 3);
+        assert_eq!(Counter::NetAccepted.name(), "net_accepted");
+        assert_eq!(COUNTERS.len(), 13);
+        // names are unique (each variant has its own cell and wire key)
+        let mut names: Vec<&str> = COUNTERS.iter().map(|c| c.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), COUNTERS.len());
+    }
+
+    #[test]
+    fn gauge_saturates_at_zero() {
+        // NetConnections is only recorded by the event loops, which no lib
+        // unit test runs — drain it, then go below zero on purpose
+        for _ in 0..10_000 {
+            Gauge::NetConnections.dec();
+        }
+        assert_eq!(Gauge::NetConnections.get(), 0, "dec must saturate, not wrap");
+        Gauge::NetConnections.inc();
+        assert!(Gauge::NetConnections.get() >= 1);
+        Gauge::NetConnections.dec();
+    }
+
+    #[test]
+    fn shard_slots_fold_modulo_capacity() {
+        let base: u64 = shard_event_counts().iter().sum();
+        note_shards(4);
+        shard_events_add(1, 5);
+        shard_events_add(1 + MAX_OBS_SHARDS, 7); // folds onto slot 1
+        let sum: u64 = shard_event_counts().iter().sum();
+        assert!(sum >= base + 12, "folded shard still lands in a live slot");
+    }
+
+    #[test]
+    fn report_orders_registry_keys_deterministically() {
+        note_shards(2);
+        note_loops(1);
+        let r1 = report(&[("uptime_ms".to_string(), 1)]);
+        let r2 = report(&[("uptime_ms".to_string(), 2)]);
+        let keys1: Vec<&String> = r1.pairs.iter().map(|(k, _)| k).collect();
+        let keys2: Vec<&String> = r2.pairs.iter().map(|(k, _)| k).collect();
+        assert_eq!(keys1, keys2);
+        assert_eq!(keys1.first().map(|s| s.as_str()), Some("net_accepted"));
+        assert!(keys1.iter().any(|k| *k == "shard1_windows"));
+        assert!(keys1.iter().any(|k| *k == "loop0_pollset"));
+        assert_eq!(keys1.last().map(|s| s.as_str()), Some("uptime_ms"));
+        assert_eq!(r1.hists.len(), 3);
+        assert_eq!(r1.hists.first().map(|h| h.name.as_str()), Some("score_latency_us"));
+    }
+
+    #[test]
+    fn wire_hist_roundtrips_exactly() {
+        let mut h = crate::util::stats::Histogram::new();
+        for v in [0u64, 3, 17, 999, 1_000_000] {
+            h.record(v);
+        }
+        let w = WireHist::from_histogram("t", &h);
+        assert_eq!(w.count, 5);
+        assert_eq!(w.to_histogram(), h);
+    }
+
+    #[test]
+    fn score_window_feeds_counter_and_histogram() {
+        let wins = Counter::ScoreWindows.get();
+        let anom = Counter::ScoreAnomalies.get();
+        let hist = score_latency_us().snapshot().count();
+        score_window(120, true, 0);
+        score_window(80, false, 3);
+        assert!(Counter::ScoreWindows.get() >= wins + 2);
+        assert!(Counter::ScoreAnomalies.get() >= anom + 1);
+        assert!(score_latency_us().snapshot().count() >= hist + 2);
+    }
+}

@@ -1,0 +1,142 @@
+//! Periodic JSON snapshot of the metrics registry, written by the server's
+//! `finger-obs` thread so `finger load` runs and CI can scrape live
+//! telemetry off disk (`BENCH_net.json`'s sibling, `OBS_net.json` in CI).
+//!
+//! The format is hand-rolled JSON (serde is not in the offline registry),
+//! deliberately one `"key": value` pair per line so shell tooling can grep
+//! and awk it — the CI net-smoke step sums the `shard<i>_events` lines and
+//! checks them against `service_events_submitted`. Scrape examples live in
+//! `docs/OBSERVABILITY.md`.
+
+use super::span::snapshot_spans;
+use crate::bench::json_escape;
+use crate::util::stats::LatencySummary;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Knobs of the observability layer, read from the `[obs]` config section
+/// (and `finger serve --metrics-interval/--metrics-out`).
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Where the periodic JSON snapshot lands; `None` disables the writer.
+    pub snapshot_path: Option<String>,
+    /// Snapshot cadence in milliseconds.
+    pub interval_ms: u64,
+    /// Slow-request spans kept (ring capacity).
+    pub slow_n: usize,
+    /// Span sampling: look at every Nth request (1 = all, 0 = disabled).
+    pub sample_every: u64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        Self {
+            snapshot_path: None,
+            interval_ms: 1000,
+            slow_n: super::span::DEFAULT_SLOW_N,
+            sample_every: 1,
+        }
+    }
+}
+
+/// Write one snapshot: every registry pair plus the caller's `extra` pairs
+/// (the server appends live service-derived values — `uptime_ms`,
+/// `service_events_submitted`, per-shard depths), per-histogram summary
+/// stats, sparse bucket arrays, and the slow-span ring. The file is
+/// replaced atomically enough for scrapers (written to a `.tmp` sibling,
+/// then renamed) so a reader never sees a torn snapshot.
+pub fn write_snapshot(path: &Path, extra: &[(String, u64)]) -> std::io::Result<()> {
+    let report = super::report(extra);
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        writeln!(f, "{{")?;
+        writeln!(f, "  \"metrics\": {{")?;
+        let n = report.pairs.len();
+        for (k, (name, value)) in report.pairs.iter().enumerate() {
+            let comma = if k + 1 < n { "," } else { "" };
+            writeln!(f, "    \"{}\": {value}{comma}", json_escape(name))?;
+        }
+        writeln!(f, "  }},")?;
+        writeln!(f, "  \"hists\": {{")?;
+        let nh = report.hists.len();
+        for (k, wh) in report.hists.iter().enumerate() {
+            let comma = if k + 1 < nh { "," } else { "" };
+            let s = LatencySummary::from_histogram(&wh.to_histogram());
+            let buckets: Vec<String> =
+                wh.buckets.iter().map(|(i, c)| format!("[{i},{c}]")).collect();
+            writeln!(
+                f,
+                "    \"{}\": {{\"count\": {}, \"mean\": {:.1}, \"p50\": {}, \"p99\": {}, \
+                 \"buckets\": [{}]}}{comma}",
+                json_escape(&wh.name),
+                s.count,
+                s.mean,
+                s.p50 as u64,
+                s.p99 as u64,
+                buckets.join(",")
+            )?;
+        }
+        writeln!(f, "  }},")?;
+        writeln!(f, "  \"slow_spans\": [")?;
+        let spans = snapshot_spans();
+        let ns = spans.len();
+        for (k, s) in spans.iter().enumerate() {
+            let comma = if k + 1 < ns { "," } else { "" };
+            writeln!(
+                f,
+                "    {{\"kind\": \"{}\", \"id\": \"{}\", \"shard\": {}, \"queue_us\": {}, \
+                 \"total_us\": {}}}{comma}",
+                s.kind,
+                json_escape(&s.id),
+                s.shard,
+                s.queue_us,
+                s.total_us
+            )?;
+        }
+        writeln!(f, "  ]")?;
+        writeln!(f, "}}")?;
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_is_parseable_shape_and_greppable() {
+        super::super::note_shards(2);
+        super::super::shard_events_add(0, 3);
+        super::super::score_window(250, false, 0);
+        let path = std::env::temp_dir().join("finger_obs_snapshot_test.json");
+        let extra = vec![
+            ("uptime_ms".to_string(), 1234u64),
+            ("service_events_submitted".to_string(), 3u64),
+        ];
+        write_snapshot(&path, &extra).expect("write snapshot");
+        let text = std::fs::read_to_string(&path).expect("read back");
+        // one pair per line: the CI awk/grep contract
+        assert!(text.lines().any(|l| l.trim_start().starts_with("\"shard0_events\":")), "{text}");
+        assert!(text.contains("\"service_events_submitted\": 3"));
+        assert!(text.contains("\"uptime_ms\": 1234"));
+        assert!(text.contains("\"score_latency_us\""));
+        assert!(text.contains("\"slow_spans\""));
+        // braces and brackets balance (cheap well-formedness check)
+        let open = text.matches('{').count();
+        let close = text.matches('}').count();
+        assert_eq!(open, close);
+        assert_eq!(text.matches('[').count(), text.matches(']').count());
+        // no trailing comma before a closing brace/bracket
+        for w in text.split_whitespace().collect::<Vec<_>>().windows(2) {
+            if let [a, b] = w {
+                assert!(
+                    !(a.ends_with(',') && (b.starts_with('}') || b.starts_with(']'))),
+                    "trailing comma before {b}"
+                );
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,197 @@
+//! Sampled request spans: a fixed ring of the slowest N requests the server
+//! has answered, each carrying the command kind, session id, shard, and a
+//! queue-wait vs. service-time breakdown (monotonic-clock microseconds,
+//! measured by the caller with `Instant`).
+//!
+//! Recording is sampled (`1/sample_every` requests, decided by one relaxed
+//! `fetch_add`) and best-effort: the ring is a small pre-allocated `Vec`
+//! under a `Mutex`, and a recorder that loses the lock race (poisoning)
+//! simply drops the span — observability must never take a request down
+//! with it, so there is no panic path here (FL001 covers this module).
+//! Session ids are copied into a fixed inline buffer; ids longer than
+//! [`SPAN_ID_BYTES`] are truncated for display.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Inline id-copy capacity (ids are ≤ 24 bytes in every workload preset;
+/// longer ones truncate, they never allocate).
+pub const SPAN_ID_BYTES: usize = 24;
+
+/// Default ring capacity (`[obs] slow_n`).
+pub const DEFAULT_SLOW_N: usize = 32;
+
+/// What kind of request a span timed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    Open,
+    Batch,
+    Query,
+    Close,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Open => "open",
+            SpanKind::Batch => "batch",
+            SpanKind::Query => "query",
+            SpanKind::Close => "close",
+        }
+    }
+}
+
+/// One recorded span, inline storage only.
+#[derive(Debug, Clone, Copy)]
+struct Span {
+    kind: SpanKind,
+    id: [u8; SPAN_ID_BYTES],
+    id_len: u8,
+    shard: u32,
+    queue_us: u64,
+    total_us: u64,
+}
+
+/// A span rendered for snapshots (owned strings are fine off the hot path).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanSnapshot {
+    pub kind: &'static str,
+    pub id: String,
+    pub shard: u32,
+    /// Time parked on shard backpressure before the service accepted the
+    /// command (0 for requests that never parked).
+    pub queue_us: u64,
+    /// Full round-trip: decode complete → reply queued.
+    pub total_us: u64,
+}
+
+struct Ring {
+    spans: Vec<Span>,
+    cap: usize,
+}
+
+static RING: Mutex<Ring> = Mutex::new(Ring { spans: Vec::new(), cap: DEFAULT_SLOW_N });
+/// Request counter driving the sampling decision.
+static TICK: AtomicU64 = AtomicU64::new(0);
+/// Record every Nth request (0 disables spans entirely).
+static SAMPLE_EVERY: AtomicU64 = AtomicU64::new(1);
+
+/// Configure the ring: keep the slowest `slow_n` spans, looking at every
+/// `sample_every`-th request (`0` disables spans). Called by the server at
+/// startup; safe to call again (the ring restarts empty).
+pub fn init_spans(slow_n: usize, sample_every: u64) {
+    SAMPLE_EVERY.store(sample_every, Ordering::Relaxed);
+    if let Ok(mut r) = RING.lock() {
+        r.cap = slow_n;
+        r.spans = Vec::with_capacity(slow_n);
+    }
+}
+
+// lint: hot-path
+// The record path runs inside the event loop per request: one atomic for
+// the sampling decision; only sampled requests touch the (short) lock, and
+// the inline id copy never allocates.
+
+/// Record one request span (sampled). `id` is copied inline, truncated to
+/// [`SPAN_ID_BYTES`].
+#[inline]
+pub fn span_record(kind: SpanKind, id: &str, shard: usize, queue_us: u64, total_us: u64) {
+    let every = SAMPLE_EVERY.load(Ordering::Relaxed);
+    if every == 0 {
+        return;
+    }
+    let tick = TICK.fetch_add(1, Ordering::Relaxed);
+    if every > 1 && tick % every != 0 {
+        return;
+    }
+    let mut buf = [0u8; SPAN_ID_BYTES];
+    let mut len = 0u8;
+    for (dst, src) in buf.iter_mut().zip(id.as_bytes()) {
+        *dst = *src;
+        len += 1;
+    }
+    let span = Span {
+        kind,
+        id: buf,
+        id_len: len,
+        shard: (shard.min(u32::MAX as usize)) as u32,
+        queue_us,
+        total_us,
+    };
+    // best-effort: a poisoned lock drops the span, never the request
+    if let Ok(mut r) = RING.lock() {
+        if r.spans.len() < r.cap {
+            r.spans.push(span);
+            return;
+        }
+        // full: replace the fastest kept span iff this one is slower
+        let min = r
+            .spans
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, s)| s.total_us)
+            .map(|(i, s)| (i, s.total_us));
+        if let Some((i, fastest)) = min {
+            if span.total_us > fastest {
+                if let Some(slot) = r.spans.get_mut(i) {
+                    *slot = span;
+                }
+            }
+        }
+    }
+}
+
+// lint: hot-path end
+
+/// The kept spans, slowest first (allocates; snapshot/METRICS path only).
+pub fn snapshot_spans() -> Vec<SpanSnapshot> {
+    let mut out: Vec<SpanSnapshot> = Vec::new();
+    if let Ok(r) = RING.lock() {
+        out.reserve(r.spans.len());
+        for s in r.spans.iter() {
+            let id_bytes = s.id.get(..s.id_len as usize).unwrap_or(&[]);
+            out.push(SpanSnapshot {
+                kind: s.kind.name(),
+                id: String::from_utf8_lossy(id_bytes).into_owned(),
+                shard: s.shard,
+                queue_us: s.queue_us,
+                total_us: s.total_us,
+            });
+        }
+    }
+    out.sort_by(|a, b| b.total_us.cmp(&a.total_us));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The ring is process-global, so every assertion here runs under one
+    /// lock-step test to avoid cross-test interference.
+    #[test]
+    fn ring_keeps_the_slowest_and_samples() {
+        init_spans(3, 1);
+        for (i, total) in [10u64, 500, 20, 900, 5, 30].iter().enumerate() {
+            span_record(SpanKind::Batch, &format!("s{i}"), i, 1, *total);
+        }
+        let kept = snapshot_spans();
+        assert_eq!(kept.len(), 3);
+        let totals: Vec<u64> = kept.iter().map(|s| s.total_us).collect();
+        assert_eq!(totals, vec![900, 500, 30], "slowest three, sorted desc");
+        assert_eq!(kept.first().map(|s| s.kind), Some("batch"));
+
+        // sample_every = 0 disables recording entirely
+        init_spans(3, 0);
+        span_record(SpanKind::Query, "x", 0, 0, 10_000);
+        assert!(snapshot_spans().is_empty());
+
+        // long ids truncate inline, never panic
+        init_spans(2, 1);
+        let long = "a".repeat(SPAN_ID_BYTES * 2);
+        span_record(SpanKind::Open, &long, 7, 0, 42);
+        let kept = snapshot_spans();
+        assert_eq!(kept.first().map(|s| s.id.len()), Some(SPAN_ID_BYTES));
+        assert_eq!(kept.first().map(|s| s.shard), Some(7));
+    }
+}

@@ -95,6 +95,7 @@ impl ScoringService {
     /// Spawn the shard workers and start accepting events.
     pub fn start(cfg: ServiceConfig) -> Self {
         let shards = cfg.shards.max(1);
+        crate::obs::note_shards(shards);
         let mut senders = Vec::with_capacity(shards);
         let mut workers = Vec::with_capacity(shards);
         let mut depths = Vec::with_capacity(shards);
@@ -105,7 +106,7 @@ impl ScoringService {
             let worker_depth = Arc::clone(&depth);
             let handle = std::thread::Builder::new()
                 .name(format!("finger-shard-{shard}"))
-                .spawn(move || shard_worker(rx, worker_cfg, worker_depth))
+                .spawn(move || shard_worker(rx, worker_cfg, worker_depth, shard))
                 // finger-lint: allow(FL001): cold-start — no spawn, no service
                 .expect("spawn shard worker");
             senders.push(tx);
@@ -143,14 +144,15 @@ impl ScoringService {
 
     /// (Re)open a session resuming from an existing incremental state.
     pub fn open_session_state(&self, id: &str, state: FingerState) -> Result<(), SubmitError> {
-        self.send(ShardMsg::Open { id: id.to_string(), state })
+        self.send(ShardMsg::Open { id: id.to_string(), state }).map(|_| ())
     }
 
     /// Route one event to `id`'s shard. Blocks while that shard's bounded
     /// queue is full (backpressure) — it never drops.
     pub fn submit(&self, id: &str, ev: StreamEvent) -> Result<(), SubmitError> {
-        self.send(ShardMsg::Event { id: id.to_string(), ev })?;
+        let shard = self.send(ShardMsg::Event { id: id.to_string(), ev })?;
         self.submitted.fetch_add(1, Ordering::Relaxed);
+        crate::obs::shard_events_add(shard, 1);
         Ok(())
     }
 
@@ -175,8 +177,9 @@ impl ScoringService {
         if n == 0 {
             return Ok(0);
         }
-        self.send(ShardMsg::Batch { id: id.to_string(), events })?;
+        let shard = self.send(ShardMsg::Batch { id: id.to_string(), events })?;
         self.submitted.fetch_add(n, Ordering::Relaxed);
+        crate::obs::shard_events_add(shard, n as u64);
         Ok(n)
     }
 
@@ -185,8 +188,10 @@ impl ScoringService {
     /// queue is full, so an ingest thread multiplexing many sessions (e.g. a
     /// network connection reader) is never wedged by one stalled shard.
     pub fn try_submit(&self, id: &str, ev: StreamEvent) -> Result<(), SubmitError> {
-        self.try_send(ShardMsg::Event { id: id.to_string(), ev }).map_err(|(_, e)| e)?;
+        let shard =
+            self.try_send(ShardMsg::Event { id: id.to_string(), ev }).map_err(|(_, e)| e)?;
         self.submitted.fetch_add(1, Ordering::Relaxed);
+        crate::obs::shard_events_add(shard, 1);
         Ok(())
     }
 
@@ -202,8 +207,9 @@ impl ScoringService {
             return Ok(0);
         }
         match self.try_send(ShardMsg::Batch { id: id.to_string(), events }) {
-            Ok(()) => {
+            Ok(shard) => {
                 self.submitted.fetch_add(n, Ordering::Relaxed);
+                crate::obs::shard_events_add(shard, n as u64);
                 Ok(n)
             }
             Err((ShardMsg::Batch { events, .. }, e)) => Err((events, e)),
@@ -220,7 +226,7 @@ impl ScoringService {
         state: FingerState,
     ) -> Result<(), (FingerState, SubmitError)> {
         match self.try_send(ShardMsg::Open { id: id.to_string(), state }) {
-            Ok(()) => Ok(()),
+            Ok(_) => Ok(()),
             Err((ShardMsg::Open { state, .. }, e)) => Err((state, e)),
             // finger-lint: allow(FL001): try_send echoes the sent variant back
             Err(_) => unreachable!("try_send echoes the sent message variant"),
@@ -295,6 +301,12 @@ impl ScoringService {
         self.submitted.load(Ordering::Relaxed)
     }
 
+    /// Milliseconds since the service started accepting events (surfaced by
+    /// the `STATS`/`METRICS` protocol verbs and the obs snapshot).
+    pub fn uptime_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+
     /// Re-open every `<id>.ckpt` session found in `dir` (written by a prior
     /// run's `finish` with `checkpoint_dir` set). Returns how many sessions
     /// were restored.
@@ -335,27 +347,32 @@ impl ScoringService {
         shard_of(id, self.senders.len())
     }
 
-    fn send(&self, msg: ShardMsg) -> Result<(), SubmitError> {
+    /// Route `msg` to its shard, returning the shard index on success so
+    /// callers can attribute the send in the metrics registry.
+    fn send(&self, msg: ShardMsg) -> Result<usize, SubmitError> {
         let shard = self.shard_of_msg(&msg);
         // finger-lint: allow(FL001): shard_of bounds the index by senders.len()
         let (sender, depth) = (&self.senders[shard], &self.depths[shard]);
         // count before sending so a blocked send is visible as queue depth
         depth.fetch_add(1, Ordering::Relaxed);
-        sender.send(msg).map_err(|_| {
+        sender.send(msg).map(|()| shard).map_err(|_| {
             depth.fetch_sub(1, Ordering::Relaxed);
             SubmitError::Closed { shard }
         })
     }
 
-    fn try_send(&self, msg: ShardMsg) -> Result<(), (ShardMsg, SubmitError)> {
+    fn try_send(&self, msg: ShardMsg) -> Result<usize, (ShardMsg, SubmitError)> {
         let shard = self.shard_of_msg(&msg);
         // finger-lint: allow(FL001): shard_of bounds the index by senders.len()
         let (sender, depth) = (&self.senders[shard], &self.depths[shard]);
         depth.fetch_add(1, Ordering::Relaxed);
-        sender.try_send(msg).map_err(|e| {
+        sender.try_send(msg).map(|()| shard).map_err(|e| {
             depth.fetch_sub(1, Ordering::Relaxed);
             match e {
-                TrySendError::Full(m) => (m, SubmitError::WouldBlock { shard }),
+                TrySendError::Full(m) => {
+                    crate::obs::shard_would_block(shard);
+                    (m, SubmitError::WouldBlock { shard })
+                }
                 TrySendError::Disconnected(m) => (m, SubmitError::Closed { shard }),
             }
         })
@@ -402,6 +419,7 @@ fn shard_worker(
     rx: Receiver<ShardMsg>,
     cfg: ServiceConfig,
     depth: Arc<AtomicUsize>,
+    shard: usize,
 ) -> ShardOutcome {
     let mut registry = SessionRegistry::new();
     let mut dropped = 0;
@@ -417,11 +435,14 @@ fn shard_worker(
                      events: &mut dyn Iterator<Item = StreamEvent>| {
         if !registry.contains(&id) && cfg.auto_create_sessions {
             registry.insert(SessionState::new(id.clone(), Graph::new(0), &cfg));
+            crate::obs::Gauge::SvcSessions.inc();
         }
         match registry.get_mut(&id) {
             Some(session) => {
                 for ev in events {
-                    session.on_event(ev);
+                    if session.on_event(ev) {
+                        crate::obs::shard_window(shard);
+                    }
                 }
             }
             // auto-create disabled and the id is unknown: count, don't panic
@@ -431,6 +452,9 @@ fn shard_worker(
     for msg in rx {
         match msg {
             ShardMsg::Open { id, state } => {
+                if !registry.contains(&id) {
+                    crate::obs::Gauge::SvcSessions.inc();
+                }
                 registry.insert(SessionState::from_finger_state(id, state, &cfg));
             }
             ShardMsg::Event { id, ev } => {
@@ -445,7 +469,11 @@ fn shard_worker(
             }
             ShardMsg::Close { id, reply } => {
                 let snapshot = registry.remove(&id).map(|mut session| {
-                    session.flush(); // the final snapshot scores any open window
+                    crate::obs::Gauge::SvcSessions.dec();
+                    if session.flush() {
+                        // the final snapshot scores any open window
+                        crate::obs::shard_window(shard);
+                    }
                     let snap = session.snapshot();
                     if closed.len() < MAX_RETAINED_CLOSED {
                         closed.push(session.into_report());
@@ -465,7 +493,10 @@ fn shard_worker(
     // ingest closed: flush, checkpoint, report
     let mut reports = closed;
     for mut session in registry.into_sessions() {
-        session.flush();
+        crate::obs::Gauge::SvcSessions.dec();
+        if session.flush() {
+            crate::obs::shard_window(shard);
+        }
         if let Some(dir) = &cfg.checkpoint_dir {
             if let Err(e) = session.checkpoint_into(dir) {
                 eprintln!("checkpoint session {}: {e:#}", session.id());

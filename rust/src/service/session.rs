@@ -51,20 +51,28 @@ impl SessionState {
     /// Feed one event; scores a window when `ev` closes one. Allocation-free
     /// in steady state: the batcher lends the coalesced window out of its
     /// reusable buffer and the scorer reuses its own scratch workspace.
-    pub fn on_event(&mut self, ev: StreamEvent) {
+    /// Returns `true` when this event closed (and scored) a window, so the
+    /// shard worker can attribute scored windows to its shard in the metrics
+    /// registry without re-deriving window boundaries.
+    pub fn on_event(&mut self, ev: StreamEvent) -> bool {
         self.events += 1;
         if let Some((delta, n_events)) = self.batcher.push_ref(ev) {
             let record = self.scorer.score(delta, n_events);
             self.records.push(record);
+            return true;
         }
+        false
     }
 
     /// Score any trailing partial window (stream ended without a tick).
-    pub fn flush(&mut self) {
+    /// Returns `true` when there was one to score.
+    pub fn flush(&mut self) -> bool {
         if let Some((delta, n_events)) = self.batcher.flush_ref() {
             let record = self.scorer.score(delta, n_events);
             self.records.push(record);
+            return true;
         }
+        false
     }
 
     pub fn state(&self) -> &FingerState {

@@ -10,7 +10,9 @@ use super::event::StreamEvent;
 use super::window::{AnomalyDetector, ResyncPolicy, WindowBatcher, WindowScorer};
 use crate::entropy::FingerState;
 use crate::graph::{DeltaGraph, Graph};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
 use std::time::Instant;
 
 pub use super::window::ScoreRecord;
@@ -71,6 +73,10 @@ impl Pipeline {
             sync_channel(self.cfg.channel_capacity);
 
         // -- source --
+        // the produced count crosses back through a shared atomic rather
+        // than the join result, so the drain below has no panic site
+        let produced = Arc::new(AtomicUsize::new(0));
+        let source_count = Arc::clone(&produced);
         let source = std::thread::spawn(move || {
             let mut count = 0usize;
             for ev in events {
@@ -79,7 +85,7 @@ impl Pipeline {
                     break; // downstream gone: stop producing
                 }
             }
-            count
+            source_count.store(count, Ordering::Release);
         });
 
         // -- batcher --
@@ -110,8 +116,13 @@ impl Pipeline {
         for (delta, n_events) in win_rx {
             records.push(scorer.score(&delta, n_events));
         }
-        batcher.join().expect("batcher panicked");
-        let total_events = source.join().expect("source panicked");
+        if batcher.join().is_err() {
+            eprintln!("pipeline: batcher thread panicked; records may be incomplete");
+        }
+        if source.join().is_err() {
+            eprintln!("pipeline: source thread panicked; event count may be incomplete");
+        }
+        let total_events = produced.load(Ordering::Acquire);
 
         let wall = start.elapsed().as_secs_f64();
         let lats: Vec<f64> = records.iter().map(|r| r.latency).collect();

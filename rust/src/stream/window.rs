@@ -99,6 +99,9 @@ impl WindowBatcher {
                 let n = self.events_in_window + 1;
                 self.events_in_window = 0;
                 self.emitted = true;
+                // coalesce ratio telemetry: events in vs deltas surviving
+                crate::obs::Counter::WinEventsIn.add(n as u64);
+                crate::obs::Counter::WinCoalesced.add(self.current.edge_deltas().len() as u64);
                 Some((&self.current, n))
             }
         }
@@ -115,6 +118,8 @@ impl WindowBatcher {
         let n = self.events_in_window;
         self.events_in_window = 0;
         self.emitted = true;
+        crate::obs::Counter::WinEventsIn.add(n as u64);
+        crate::obs::Counter::WinCoalesced.add(self.current.edge_deltas().len() as u64);
         Some((&self.current, n))
     }
     // lint: hot-path end
@@ -288,6 +293,9 @@ impl WindowScorer {
             crate::distance::jsdist_incremental_with(&mut self.state, delta, &mut self.scratch);
         let latency = t0.elapsed().as_secs_f64();
         let anomalous = self.detector.observe(js);
+        // zero-allocation registry record: latency histogram (striped by
+        // window index) + window/anomaly counters
+        crate::obs::score_window((latency * 1e6) as u64, anomalous, self.window);
         let record = ScoreRecord {
             window: self.window,
             jsdist: js,

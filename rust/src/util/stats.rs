@@ -1,6 +1,9 @@
 //! Statistics used by the evaluation harness: summary moments, Pearson and
 //! Spearman correlation (the paper reports PCC in Table 2 and SRCC in
-//! Table S1), and fractional ranking with tie handling.
+//! Table S1), fractional ranking with tie handling, the log-bucket
+//! [`Histogram`] shared by the load driver and the observability layer
+//! (`crate::obs` mirrors its bucket math with atomic cells), and the
+//! [`LatencySummary`] rendering helper every latency report goes through.
 
 /// Arithmetic mean. Returns 0.0 on empty input.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -104,8 +107,37 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 }
 
 /// Bucket count for [`Histogram`]: 16 exact buckets below 16, then 16
-/// log-spaced sub-buckets per power of two up to `u64::MAX`.
-const HIST_BUCKETS: usize = 976;
+/// log-spaced sub-buckets per power of two up to `u64::MAX`. Public so the
+/// atomic mirror in `crate::obs` and the wire encoding of histograms can
+/// share the exact same table shape.
+pub const HIST_BUCKETS: usize = 976;
+
+/// Bucket index a value lands in: exact below 16, then 16 log-spaced
+/// sub-buckets per power of two (1/16 relative error bound). This is *the*
+/// bucket function — [`Histogram`], the atomic recorders in `crate::obs`,
+/// and the `METRICS` wire encoding all index with it, so bucket counts can
+/// travel between them unchanged.
+pub fn bucket_index(v: u64) -> usize {
+    if v < 16 {
+        return v as usize;
+    }
+    let msb = 63 - u64::from(v.leading_zeros()); // >= 4 since v >= 16
+    ((msb - 3) * 16 + ((v >> (msb - 4)) & 15)) as usize
+}
+
+/// The largest value bucket `idx` covers — quantiles report this upper
+/// edge, so they never under-estimate a latency.
+pub fn bucket_upper(idx: usize) -> u64 {
+    if idx < 32 {
+        // buckets 0..32 are exact (values 0..16 unit-wide, 16..32 too)
+        return idx as u64;
+    }
+    let msb = (idx / 16) as u32 + 3;
+    let sub = (idx % 16) as u128;
+    // u128 arithmetic: the very top bucket's edge would overflow u64
+    let upper = (1u128 << msb) + ((sub + 1) << (msb - 4)) - 1;
+    upper.min(u64::MAX as u128) as u64
+}
 
 /// A dependency-free fixed-bucket latency histogram (HDR-style).
 ///
@@ -115,7 +147,7 @@ const HIST_BUCKETS: usize = 976;
 /// across load-driver worker threads without locks, O(1) `record`, and no
 /// per-sample allocation. Units are the caller's (the load driver records
 /// per-event round-trip microseconds).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Histogram {
     counts: Vec<u64>,
     count: u64,
@@ -132,33 +164,23 @@ impl Histogram {
         Histogram { counts: vec![0; HIST_BUCKETS], count: 0 }
     }
 
-    fn bucket(v: u64) -> usize {
-        if v < 16 {
-            return v as usize;
-        }
-        let msb = 63 - u64::from(v.leading_zeros()); // >= 4 since v >= 16
-        ((msb - 3) * 16 + ((v >> (msb - 4)) & 15)) as usize
-    }
-
-    /// The largest value a bucket covers — quantiles report this upper
-    /// edge, so they never under-estimate a latency.
-    fn bucket_upper(idx: usize) -> u64 {
-        if idx < 32 {
-            // buckets 0..32 are exact (values 0..16 unit-wide, 16..32 too)
-            return idx as u64;
-        }
-        let msb = (idx / 16) as u32 + 3;
-        let sub = (idx % 16) as u128;
-        // u128 arithmetic: the very top bucket's edge would overflow u64
-        let upper = (1u128 << msb) + ((sub + 1) << (msb - 4)) - 1;
-        upper.min(u64::MAX as u128) as u64
-    }
-
     pub fn record(&mut self, v: u64) {
-        let idx = Self::bucket(v);
+        let idx = bucket_index(v);
         if let Some(c) = self.counts.get_mut(idx) {
             *c += 1;
             self.count += 1;
+        }
+    }
+
+    /// Add `n` samples directly into bucket `idx` (out-of-range indices are
+    /// ignored). This is how bucket counts re-enter a `Histogram` after
+    /// traveling through the `METRICS` wire encoding or an atomic recorder
+    /// snapshot — both index with [`bucket_index`], so counts transfer
+    /// without re-bucketing error.
+    pub fn add_count(&mut self, idx: usize, n: u64) {
+        if let Some(c) = self.counts.get_mut(idx) {
+            *c += n;
+            self.count += n;
         }
     }
 
@@ -178,6 +200,12 @@ impl Histogram {
         self.count == 0
     }
 
+    /// The non-empty buckets as `(index, count)`, ascending by index — the
+    /// sparse form the wire encoding and JSON snapshots ship.
+    pub fn nonzero_buckets(&self) -> impl Iterator<Item = (usize, u64)> + '_ {
+        self.counts.iter().enumerate().filter(|(_, &c)| c > 0).map(|(i, &c)| (i, c))
+    }
+
     /// Nearest-rank percentile, `p` in [0, 100]. Returns the covering
     /// bucket's upper edge (within 1/16 relative error above the true
     /// value); 0 on an empty histogram.
@@ -190,10 +218,74 @@ impl Histogram {
         for (i, &c) in self.counts.iter().enumerate() {
             seen += c;
             if seen >= rank {
-                return Self::bucket_upper(i);
+                return bucket_upper(i);
             }
         }
-        Self::bucket_upper(HIST_BUCKETS - 1)
+        bucket_upper(HIST_BUCKETS - 1)
+    }
+}
+
+/// One latency distribution rendered to the numbers every report in this
+/// repo shows: count, mean, p50 and p99. The single summary/display path
+/// shared by the bench harness (`Bencher::run` summarizes its second-valued
+/// samples with it), the load driver (`net::traffic` summarizes its
+/// microsecond [`Histogram`]), and the observability snapshots
+/// (`crate::obs` renders every atomic histogram through it) — so a p99
+/// means the same thing everywhere it is printed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    /// Mean in the samples' unit (exact for `from_samples`; bucket-edge
+    /// approximation within the 1/16 bound for `from_histogram`).
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+impl LatencySummary {
+    /// Summarize raw samples (nearest-rank percentiles, exact mean).
+    pub fn from_samples(xs: &[f64]) -> Self {
+        Self {
+            count: xs.len() as u64,
+            mean: mean(xs),
+            p50: percentile(xs, 50.0),
+            p99: percentile(xs, 99.0),
+        }
+    }
+
+    /// Summarize a [`Histogram`] (mean approximated from bucket upper edges,
+    /// so like the percentiles it never under-estimates by more than the
+    /// bucket error bound).
+    pub fn from_histogram(h: &Histogram) -> Self {
+        let count = h.count();
+        let mean = if count == 0 {
+            0.0
+        } else {
+            let total: f64 =
+                h.nonzero_buckets().map(|(i, c)| bucket_upper(i) as f64 * c as f64).sum();
+            total / count as f64
+        };
+        Self { count, mean, p50: h.percentile(50.0) as f64, p99: h.percentile(99.0) as f64 }
+    }
+
+    /// Render with the shared seconds formatter (`mean=… p50=… p99=…`) —
+    /// the bench report form.
+    pub fn report_secs(&self) -> String {
+        format!(
+            "mean={:<10} p50={:<10} p99={}",
+            crate::util::fmt::secs(self.mean),
+            crate::util::fmt::secs(self.p50),
+            crate::util::fmt::secs(self.p99),
+        )
+    }
+
+    /// Render integral-unit summaries (microsecond histograms) compactly:
+    /// `n=… mean=… p50=… p99=…`.
+    pub fn report_units(&self, unit: &str) -> String {
+        format!(
+            "n={} mean={:.0}{unit} p50={:.0}{unit} p99={:.0}{unit}",
+            self.count, self.mean, self.p50, self.p99
+        )
     }
 }
 
@@ -201,6 +293,8 @@ impl Histogram {
 mod tests {
     use super::*;
     use crate::assert_bits_eq;
+    use crate::util::proptest;
+    use crate::util::Pcg64;
 
     fn close(a: f64, b: f64) -> bool {
         (a - b).abs() < 1e-12
@@ -368,5 +462,140 @@ mod tests {
         let h = Histogram::new();
         assert!(h.is_empty());
         assert_eq!(h.percentile(99.0), 0);
+    }
+
+    #[test]
+    fn histogram_sparse_roundtrip_via_add_count() {
+        let mut h = Histogram::new();
+        for v in [0u64, 1, 15, 16, 17, 999, 1_000_000, u64::MAX] {
+            h.record(v);
+        }
+        let mut back = Histogram::new();
+        for (idx, n) in h.nonzero_buckets() {
+            back.add_count(idx, n);
+        }
+        assert_eq!(back, h, "sparse form must reconstruct the exact histogram");
+        // out-of-range indices are ignored, not panicking
+        back.add_count(HIST_BUCKETS + 10, 3);
+        assert_eq!(back, h);
+    }
+
+    #[test]
+    fn summary_from_samples_and_histogram_agree_on_exact_buckets() {
+        // values below 16 are bucketed exactly, so the two constructors
+        // must agree exactly there
+        let vals = [2u64, 4, 4, 8, 15];
+        let xs: Vec<f64> = vals.iter().map(|&v| v as f64).collect();
+        let mut h = Histogram::new();
+        for &v in &vals {
+            h.record(v);
+        }
+        let a = LatencySummary::from_samples(&xs);
+        let b = LatencySummary::from_histogram(&h);
+        assert_eq!(a.count, b.count);
+        assert_bits_eq!(a.p50, b.p50);
+        assert_bits_eq!(a.p99, b.p99);
+        assert!(close(a.mean, b.mean));
+        assert!(b.report_units("us").contains("p99="));
+        assert!(a.report_secs().contains("p50="));
+    }
+
+    /// Strategy for the histogram property tests: a few hundred values
+    /// spread across the full bucket range (unit, mid, huge).
+    fn value_vec(rng: &mut Pcg64, size: usize) -> Vec<u64> {
+        let n = 1 + rng.below(size.max(1) + 8);
+        (0..n)
+            .map(|_| {
+                let shift = rng.below(64) as u32;
+                rng.below(u32::MAX as usize + 1) as u64 >> (shift % 33) << (shift % 31)
+            })
+            .collect()
+    }
+
+    fn hist_of(vals: &[u64]) -> Histogram {
+        let mut h = Histogram::new();
+        for &v in vals {
+            h.record(v);
+        }
+        h
+    }
+
+    #[test]
+    fn prop_merge_is_commutative_and_associative() {
+        proptest::check(
+            |rng: &mut Pcg64, size: usize| {
+                (value_vec(rng, size), value_vec(rng, size), value_vec(rng, size))
+            },
+            |(xs, ys, zs)| {
+                let (hx, hy, hz) = (hist_of(xs), hist_of(ys), hist_of(zs));
+                // commutative: x + y == y + x
+                let mut xy = hx.clone();
+                xy.merge(&hy);
+                let mut yx = hy.clone();
+                yx.merge(&hx);
+                crate::prop_assert!(xy == yx, "merge not commutative");
+                // associative: (x + y) + z == x + (y + z)
+                let mut xy_z = xy.clone();
+                xy_z.merge(&hz);
+                let mut yz = hy.clone();
+                yz.merge(&hz);
+                let mut x_yz = hx.clone();
+                x_yz.merge(&yz);
+                crate::prop_assert!(xy_z == x_yz, "merge not associative");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_empty_merge_is_identity() {
+        proptest::check(value_vec, |xs| {
+            let h = hist_of(xs);
+            let mut merged = h.clone();
+            merged.merge(&Histogram::new());
+            crate::prop_assert!(merged == h, "merging an empty histogram changed it");
+            let mut from_empty = Histogram::new();
+            from_empty.merge(&h);
+            crate::prop_assert!(from_empty == h, "merging into an empty histogram lost data");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_quantiles_monotone_in_q() {
+        proptest::check(value_vec, |xs| {
+            let h = hist_of(xs);
+            let mut prev = h.percentile(0.0);
+            for q in 1..=100u32 {
+                let cur = h.percentile(q as f64);
+                crate::prop_assert!(cur >= prev, "p{q}={cur} < p{}={prev}", q - 1);
+                prev = cur;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_recorded_values_respect_bucket_error_bound() {
+        proptest::check(value_vec, |xs| {
+            for &v in xs {
+                let mut h = Histogram::new();
+                h.record(v);
+                // p100 of a single sample is its bucket's upper edge: never
+                // below the true value, and within 1/16 relative error
+                let got = h.percentile(100.0);
+                crate::prop_assert!(got >= v, "bucket edge {got} under-estimates {v}");
+                crate::prop_assert!(
+                    got - v <= v / 16,
+                    "bucket edge {got} exceeds the 1/16 bound for {v}"
+                );
+                // and the edge is consistent with the shared bucket fns
+                crate::prop_assert!(
+                    got == bucket_upper(bucket_index(v)),
+                    "percentile edge disagrees with bucket_upper(bucket_index)"
+                );
+            }
+            Ok(())
+        });
     }
 }

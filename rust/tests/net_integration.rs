@@ -183,6 +183,11 @@ fn raw_text_fixture_is_byte_identical_to_v1() {
         "STATS: {:?}",
         lines[3]
     );
+    assert!(
+        lines[3].contains(" uptime_ms=") && lines[3].contains(" connections="),
+        "STATS carries liveness keys: {:?}",
+        lines[3]
+    );
     assert_eq!(lines[4], "ERR unknown verb `GARBAGE`\n");
     assert_eq!(lines[5], "ERR unknown-session\n", "QUERY miss");
     assert_eq!(lines[6], "OK\n", "QUIT");
@@ -457,10 +462,14 @@ fn run_load_presets_round_trip_over_the_wire() {
         },
         query_sessions: true,
         shutdown_after: true,
+        live_stats: false,
+        check_metrics: true,
     })
     .expect("load");
     let service_report = server.join().expect("server thread").expect("server run");
 
+    let keys = report.metrics_keys.expect("parity check ran");
+    assert!(keys > 0, "METRICS must expose at least the counter registry");
     assert_eq!(report.sessions, 4);
     assert_eq!(report.wire, Wire::Binary);
     assert!(report.windows > 0, "every preset must score windows");
@@ -610,4 +619,110 @@ fn stalled_half_frame_does_not_delay_other_connections() {
     NetClient::connect(addr.as_str()).expect("connect").shutdown_server().expect("shutdown");
     let report = server.join().expect("server thread").expect("server run");
     assert_eq!(report.total_events, 42, "20 live batches of 2 plus the stalled batch of 2");
+}
+
+/// The METRICS verb: raw text fixture pins the one-line kv shape and the
+/// registry's leading key, the binary opcode fixture pins the 0x09 frame,
+/// and the typed reports must carry identical key lists on both wires.
+#[test]
+fn metrics_verb_reports_identically_on_both_wires() {
+    let (addr, server) = spawn_server(ServiceConfig { shards: 2, ..Default::default() });
+    // move some traffic first so the counters are provably live
+    let mut client = NetClient::connect(addr.as_str()).expect("connect");
+    client.open("m", 8).expect("open");
+    client
+        .send_batch(
+            "m",
+            &[
+                StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 },
+                StreamEvent::EdgeDelta { i: 1, j: 2, dw: 0.5 },
+                StreamEvent::Tick,
+            ],
+        )
+        .expect("batch");
+    // QUERY rides the shard FIFO, so once it answers the batch has been
+    // batched and scored — the win_/score_ counters below are settled
+    client.query("m").expect("query").expect("session exists");
+
+    // raw text fixture: one OK kv line, registry keys first in declaration
+    // order, server extras appended, histograms packed at the end
+    {
+        let stream = TcpStream::connect(addr.as_str()).expect("connect raw");
+        let mut writer = stream.try_clone().expect("clone");
+        let mut reader = BufReader::new(stream);
+        writer.write_all(b"METRICS\nQUIT\n").expect("send fixture");
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("read metrics line");
+        assert!(
+            line.starts_with("OK net_accepted="),
+            "registry order pins the first key: {line:?}"
+        );
+        for key in [
+            " net_wakeups=",
+            " net_bytes_in=",
+            " net_connections=",
+            " svc_sessions=",
+            " shard0_events=",
+            " shard1_events=",
+            " loop0_pollset=",
+            " service_shards=2 ",
+            " service_events_submitted=",
+            " uptime_ms=",
+            " shard0_depth=",
+            " hist:score_latency_us=",
+            " hist:request_us=",
+            " hist:queue_wait_us=",
+        ] {
+            assert!(line.contains(key), "METRICS line missing {key:?}: {line:?}");
+        }
+        let mut quit = String::new();
+        reader.read_line(&mut quit).expect("read quit reply");
+        assert_eq!(quit, "OK\n");
+    }
+
+    // typed reports on both wires: identical key lists, same three hists
+    let mut text = NetClient::connect_with(addr.as_str(), Wire::Text, None).expect("text");
+    let mut binary =
+        NetClient::connect_with(addr.as_str(), Wire::Binary, None).expect("binary");
+    let rt = text.metrics().expect("text metrics");
+    let rb = binary.metrics().expect("binary metrics");
+    let keys = |r: &finger::obs::MetricsReport| -> Vec<String> {
+        r.pairs
+            .iter()
+            .map(|(k, _)| k.clone())
+            .chain(r.hists.iter().map(|h| format!("hist:{}", h.name)))
+            .collect()
+    };
+    assert_eq!(keys(&rt), keys(&rb), "key parity across wires");
+    assert_eq!(rt.hists.len(), 3);
+    assert_eq!(rt.hists[0].name, "score_latency_us");
+    assert_eq!(rt.hists[1].name, "request_us");
+    assert_eq!(rt.hists[2].name, "queue_wait_us");
+    // values: the registry is process-global (other tests in this binary
+    // record concurrently), so global counters assert monotone; the
+    // service-derived extras are this server's and assert exactly
+    let get = |r: &finger::obs::MetricsReport, k: &str| -> u64 {
+        r.pairs.iter().find(|(key, _)| key == k).map(|(_, v)| *v).expect(k)
+    };
+    assert_eq!(get(&rt, "service_shards"), 2);
+    assert_eq!(get(&rt, "service_events_submitted"), 3);
+    assert!(get(&rt, "net_accepted") >= 3);
+    assert!(get(&rt, "win_events_in") >= 3);
+    assert!(get(&rt, "score_windows") >= 1);
+    assert!(rt.hists[1].count >= 1, "request_us saw our round-trips");
+
+    // binary opcode fixture: METRICS is the single byte 0x09 on the wire
+    match binary.roundtrip_raw(&[0x09]).expect("raw binary metrics") {
+        Reply::Metrics(r) => assert!(!r.pairs.is_empty()),
+        other => panic!("raw 0x09 should yield Reply::Metrics, got {other:?}"),
+    }
+
+    // the load driver's parity helper agrees end to end
+    let n = traffic::check_metrics_parity(&addr, None).expect("parity");
+    assert!(n > 0);
+
+    text.quit().expect("quit text");
+    binary.quit().expect("quit binary");
+    client.shutdown_server().expect("shutdown");
+    server.join().expect("server thread").expect("server run");
 }

@@ -1,0 +1,113 @@
+//! End-to-end observability accounting, in a process of its own.
+//!
+//! The metrics registry is process-global, so this binary holds exactly one
+//! test: unlike the monotone assertions the lib unit tests and
+//! `net_integration` must settle for, here every recorded value comes from
+//! the single load run below and the cross-layer invariants can be asserted
+//! *exactly* — most importantly that the per-shard event slots in the JSON
+//! snapshot sum to the service's authoritative submitted-event count.
+
+use finger::net::{run_load, NetConfig, NetServer, TrafficConfig, Wire};
+use finger::obs::ObsConfig;
+use finger::service::{ServiceConfig, TenantWorkloadConfig};
+use std::time::Duration;
+
+/// Pull `"key": value` out of the one-pair-per-line snapshot (the same
+/// contract the CI awk/grep scrape relies on).
+fn metric_u64(text: &str, key: &str) -> Option<u64> {
+    let needle = format!("\"{key}\":");
+    for line in text.lines() {
+        if let Some(rest) = line.trim().strip_prefix(needle.as_str()) {
+            return rest.trim().trim_end_matches(',').trim().parse().ok();
+        }
+    }
+    None
+}
+
+#[test]
+fn snapshot_shard_events_sum_to_service_submitted() {
+    let snap_path = std::env::temp_dir()
+        .join(format!("finger_obs_integration_{}.json", std::process::id()));
+    let net_cfg = NetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        obs: ObsConfig {
+            snapshot_path: Some(snap_path.display().to_string()),
+            interval_ms: 50,
+            slow_n: 16,
+            sample_every: 1,
+        },
+        ..Default::default()
+    };
+    let server = NetServer::bind(ServiceConfig { shards: 3, ..Default::default() }, net_cfg)
+        .expect("bind ephemeral port");
+    let addr = server.local_addr().to_string();
+    let server = std::thread::spawn(move || server.run());
+
+    let load = run_load(&TrafficConfig {
+        addr,
+        wire: Wire::Text,
+        client_timeout: Some(Duration::from_secs(30)),
+        connections: 3,
+        workload: TenantWorkloadConfig {
+            sessions: 6,
+            windows: 4,
+            events_per_window: 10,
+            nodes_per_session: 16,
+            presets: Vec::new(),
+            seed: 0xA11CE,
+        },
+        query_sessions: true,
+        shutdown_after: true,
+        live_stats: false,
+        check_metrics: true,
+    })
+    .expect("load run");
+    let service_report = server.join().expect("server thread").expect("server run");
+
+    // the load driver verified METRICS key parity across both wires
+    assert!(load.metrics_keys.expect("parity check ran") > 0);
+    assert!(load.events_sent > 0);
+    assert_eq!(service_report.dropped_events, 0);
+    assert_eq!(service_report.total_events, load.events_sent);
+
+    // the server wrote a final post-drain snapshot on shutdown
+    let text = std::fs::read_to_string(&snap_path).expect("snapshot file exists");
+    std::fs::remove_file(&snap_path).ok();
+
+    // THE invariant: per-shard event slots sum exactly to the service's
+    // submitted-event count (the submit sites bump both in lockstep)
+    let mut shard_sum = 0u64;
+    let mut shards_seen = 0usize;
+    for i in 0..finger::obs::MAX_OBS_SHARDS {
+        match metric_u64(&text, &format!("shard{i}_events")) {
+            Some(v) => {
+                shard_sum += v;
+                shards_seen += 1;
+            }
+            None => break,
+        }
+    }
+    assert_eq!(shards_seen, 3, "one slot per configured shard:\n{text}");
+    assert_eq!(
+        shard_sum,
+        service_report.total_events as u64,
+        "shard event slots must sum to the drained total:\n{text}"
+    );
+    assert_eq!(
+        metric_u64(&text, "service_events_submitted"),
+        Some(service_report.total_events as u64),
+        "snapshot extras carry the authoritative submit count"
+    );
+
+    // event loops swept every connection before the final snapshot
+    assert_eq!(metric_u64(&text, "net_connections"), Some(0), "{text}");
+    // the scoring hot path recorded through the obs layer
+    let windows: u64 = service_report.sessions.iter().map(|s| s.records.len() as u64).sum();
+    assert!(metric_u64(&text, "score_windows").unwrap_or(0) >= windows);
+    assert!(metric_u64(&text, "win_events_in").unwrap_or(0) >= load.events_sent as u64);
+    // histograms and the span ring made it into the snapshot
+    assert!(text.contains("\"score_latency_us\""), "{text}");
+    assert!(text.contains("\"request_us\""), "{text}");
+    assert!(text.contains("\"slow_spans\""), "{text}");
+    assert!(text.contains("\"kind\""), "sampled spans present:\n{text}");
+}
