@@ -56,7 +56,7 @@ fn main() {
         }
     }
 
-    let report = workload::drive(&svc_cfg, &streams, 8, true);
+    let report = workload::drive(&svc_cfg, &streams, 8, true).expect("drive workload");
     println!(
         "scored {} events across {} sessions in {:.3}s → {:.2e} events/s aggregate",
         report.total_events,
@@ -95,7 +95,7 @@ fn main() {
     let ckpt_cfg =
         ServiceConfig { checkpoint_dir: Some(dir.clone()), shards: 2, ..Default::default() };
     let small: Vec<_> = streams.into_iter().take(4).collect();
-    let first_report = workload::drive(&ckpt_cfg, &small, 2, true);
+    let first_report = workload::drive(&ckpt_cfg, &small, 2, true).expect("drive workload");
     let svc = ScoringService::start(ckpt_cfg);
     let restored = svc.restore_sessions(&dir).expect("restore sessions");
     let resumed = svc.finish();

@@ -139,7 +139,7 @@ fn main() {
         ..Default::default()
     });
     let svc_cfg = ServiceConfig { shards: 4, ..Default::default() };
-    let report = workload::drive(&svc_cfg, &svc_workload, 4, true);
+    let report = workload::drive(&svc_cfg, &svc_workload, 4, true).expect("drive service");
     println!(
         "service (4 shards, {svc_sessions} sessions): {} events in {:.3}s → {:.2e} events/s",
         report.total_events, report.wall_secs, report.throughput
@@ -148,6 +148,44 @@ fn main() {
         "service_throughput_4shards",
         report.throughput,
         "events_per_sec",
+    ));
+
+    // -- L3: durability tax — the same workload with the per-shard WAL on
+    // (default fsync policy). windows/s WAL-on should stay ≥ 0.8× WAL-off.
+    let wal_dir =
+        std::env::temp_dir().join(format!("finger_bench_wal_{}", std::process::id()));
+    std::fs::remove_dir_all(&wal_dir).ok();
+    let wal_cfg = ServiceConfig {
+        shards: 4,
+        durability: Some(finger::durability::DurabilityConfig::new(&wal_dir)),
+        ..Default::default()
+    };
+    let wal_report = workload::drive(&wal_cfg, &svc_workload, 4, true).expect("drive WAL");
+    std::fs::remove_dir_all(&wal_dir).ok();
+    let secs_off = report.wall_secs.max(1e-9);
+    let secs_on = wal_report.wall_secs.max(1e-9);
+    let windows_off = report.total_windows() as f64 / secs_off;
+    let windows_on = wal_report.total_windows() as f64 / secs_on;
+    let wal_ratio = windows_on / windows_off.max(1e-9);
+    println!(
+        "service durability tax: {windows_off:.0} windows/s WAL-off vs \
+         {windows_on:.0} windows/s WAL-on ({:.2}x)",
+        wal_ratio
+    );
+    records.push(BenchRecord::metric(
+        "service_windows_per_sec_wal_off",
+        windows_off,
+        "windows_per_sec",
+    ));
+    records.push(BenchRecord::metric(
+        "service_windows_per_sec_wal_on",
+        windows_on,
+        "windows_per_sec",
+    ));
+    records.push(BenchRecord::metric(
+        "service_wal_on_off_ratio",
+        wal_ratio,
+        "ratio_on_vs_off",
     ));
 
     // -- runtime: XLA offload (needs artifacts) --

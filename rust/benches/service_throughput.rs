@@ -46,7 +46,7 @@ fn main() {
     );
     for &shards in &shard_counts {
         let cfg = ServiceConfig { shards, ..Default::default() };
-        let report = workload::drive(&cfg, &workload_data, 4, true);
+        let report = workload::drive(&cfg, &workload_data, 4, true).expect("drive workload");
         assert_eq!(report.total_events, total, "event loss at {shards} shards");
         let speedup = report.throughput / *baseline.get_or_insert(report.throughput);
         println!(

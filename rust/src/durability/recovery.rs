@@ -1,0 +1,184 @@
+//! Recovery planning: turn the on-disk durability state back into the exact
+//! inputs the service needs to resume.
+//!
+//! Recovery = snapshot + replay. [`plan`] reads `CURRENT`, loads the
+//! committed epoch's manifest, and lists — per shard, in sequence order —
+//! the WAL segments past the manifest's covered position. The service then
+//! restores each session's `FingerState` from the epoch's checkpoint files
+//! and replays the listed segments through the normal `WindowScorer` path;
+//! because the WAL holds the exact coalesced deltas (bit-exact floats) and
+//! the EPOCH markers reproduce the live server's canonicalization points,
+//! the replayed states are bit-identical to the crashed server's.
+//!
+//! The plan is strict about shard topology: WAL streams are ordered *per
+//! shard*, so replaying them under a different shard count would interleave
+//! a session's windows incorrectly. A mismatch is a hard error with a clear
+//! message (restart with the recorded shard count, or move the directory
+//! aside to start fresh).
+
+use super::snapshot::{self, EpochManifest};
+use super::{wal, DurabilityConfig};
+use std::io;
+use std::path::PathBuf;
+
+/// What a restarting service must do to resume bit-identically.
+#[derive(Debug)]
+pub struct RecoveryPlan {
+    /// The committed epoch's manifest, if any epoch ever committed.
+    pub manifest: Option<EpochManifest>,
+    /// Directory of per-session checkpoint files for that epoch.
+    pub epoch_dir: Option<PathBuf>,
+    /// Per shard (indexed 0..shards): WAL segments to replay, ascending.
+    pub segments: Vec<Vec<(u64, PathBuf)>>,
+}
+
+impl RecoveryPlan {
+    /// True when there is nothing on disk to recover (fresh directory).
+    pub fn is_empty(&self) -> bool {
+        self.manifest.is_none() && self.segments.iter().all(Vec::is_empty)
+    }
+
+    /// Total segments scheduled for replay.
+    pub fn segment_count(&self) -> usize {
+        self.segments.iter().map(Vec::len).sum()
+    }
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Build the recovery plan for a service configured with `shards` shards.
+pub fn plan(cfg: &DurabilityConfig, shards: usize) -> io::Result<RecoveryPlan> {
+    let manifest = match snapshot::read_current(cfg)? {
+        Some(epoch) => Some(snapshot::load_manifest(&cfg.epoch_dir(epoch))?),
+        None => None,
+    };
+    if let Some(m) = &manifest {
+        if m.shards != shards {
+            return Err(bad(format!(
+                "durability state at {} was written by a {}-shard service but this one has \
+                 {shards}; restart with shards={} (or move the directory aside to start fresh)",
+                cfg.dir.display(),
+                m.shards,
+                m.shards,
+            )));
+        }
+    }
+
+    let mut segments: Vec<Vec<(u64, PathBuf)>> = vec![Vec::new(); shards];
+    for (shard, seq, path) in wal::scan_segments(&cfg.wal_dir())? {
+        let Some(slot) = segments.get_mut(shard) else {
+            if manifest.is_some() {
+                // the manifest's shard count matched, so this segment is a
+                // pre-snapshot leftover prune will collect; skip it
+                continue;
+            }
+            return Err(bad(format!(
+                "WAL at {} has segments for shard {shard} but this service has {shards} \
+                 shards; restart with the original shard count (or move the directory aside)",
+                cfg.wal_dir().display(),
+            )));
+        };
+        let covered = manifest
+            .as_ref()
+            .and_then(|m| m.next_seq.get(shard))
+            .is_some_and(|&next| seq < next);
+        if !covered {
+            slot.push((seq, path));
+        }
+    }
+    for slot in &mut segments {
+        slot.sort_by_key(|&(seq, _)| seq);
+    }
+
+    let epoch_dir = manifest.as_ref().map(|m| cfg.epoch_dir(m.epoch));
+    Ok(RecoveryPlan { manifest, epoch_dir, segments })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::durability::snapshot::{commit_epoch, prepare_epoch_tmp, EpochCut};
+    use std::fs;
+
+    fn scratch(tag: &str) -> DurabilityConfig {
+        let root = std::env::temp_dir()
+            .join(format!("finger_recovery_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        let cfg = DurabilityConfig::new(&root);
+        fs::create_dir_all(cfg.wal_dir()).unwrap();
+        cfg
+    }
+
+    fn teardown(cfg: &DurabilityConfig) {
+        fs::remove_dir_all(&cfg.dir).ok();
+    }
+
+    #[test]
+    fn fresh_directory_plans_empty() {
+        let cfg = scratch("fresh");
+        let p = plan(&cfg, 4).unwrap();
+        assert!(p.is_empty());
+        assert_eq!(p.segments.len(), 4);
+        teardown(&cfg);
+    }
+
+    #[test]
+    fn without_manifest_all_segments_replay() {
+        let cfg = scratch("nomanifest");
+        for (shard, seq) in [(0usize, 1u64), (0, 2), (1, 1)] {
+            fs::write(cfg.wal_dir().join(wal::segment_name(shard, seq)), b"").unwrap();
+        }
+        let p = plan(&cfg, 2).unwrap();
+        assert!(p.manifest.is_none());
+        assert_eq!(p.segments[0].iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(p.segments[1].iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![1]);
+        teardown(&cfg);
+    }
+
+    #[test]
+    fn manifest_skips_covered_segments() {
+        let cfg = scratch("covered");
+        for seq in 1..=4u64 {
+            fs::write(cfg.wal_dir().join(wal::segment_name(0, seq)), b"").unwrap();
+        }
+        prepare_epoch_tmp(&cfg, 1).unwrap();
+        commit_epoch(
+            &cfg,
+            1,
+            &[EpochCut { shard: 0, next_seq: 3, sessions: Vec::new() }],
+        )
+        .unwrap();
+        let p = plan(&cfg, 1).unwrap();
+        assert_eq!(p.manifest.as_ref().unwrap().epoch, 1);
+        assert_eq!(p.epoch_dir.as_deref(), Some(cfg.epoch_dir(1).as_path()));
+        // commit pruned 1..=2; the plan replays 3..=4
+        assert_eq!(p.segments[0].iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![3, 4]);
+        teardown(&cfg);
+    }
+
+    #[test]
+    fn shard_count_mismatch_is_a_hard_error() {
+        let cfg = scratch("mismatch");
+        prepare_epoch_tmp(&cfg, 1).unwrap();
+        commit_epoch(
+            &cfg,
+            1,
+            &[
+                EpochCut { shard: 0, next_seq: 2, sessions: Vec::new() },
+                EpochCut { shard: 1, next_seq: 2, sessions: Vec::new() },
+            ],
+        )
+        .unwrap();
+        let err = plan(&cfg, 3).unwrap_err();
+        assert!(err.to_string().contains("2-shard"), "{err}");
+
+        // same without a manifest: a stray high-shard segment must refuse too
+        let cfg2 = scratch("mismatch2");
+        fs::write(cfg2.wal_dir().join(wal::segment_name(5, 1)), b"").unwrap();
+        assert!(plan(&cfg2, 2).is_err());
+        teardown(&cfg);
+        teardown(&cfg2);
+    }
+}

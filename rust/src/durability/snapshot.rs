@@ -1,0 +1,455 @@
+//! Epoch manifests: the snapshot half of the durability story.
+//!
+//! An epoch is one consistent cut across every shard, taken online (no
+//! drain): the coordinator injects a barrier into each shard channel; each
+//! worker rotates its WAL (writing the EPOCH marker), canonicalizes its live
+//! session states, writes one `stream::checkpoint` file per session into the
+//! epoch's staging directory, and reports back an [`EpochCut`] — the WAL
+//! segment the new epoch starts at plus the durable metadata of every live
+//! session. The coordinator then writes the `MANIFEST`, fsyncs, and commits
+//! the whole directory with one atomic rename (the `obs/snapshot.rs`
+//! tmp-then-rename idiom), repoints `CURRENT`, and prunes the WAL segments
+//! and epoch directories the new epoch supersedes.
+//!
+//! The `MANIFEST` is a whitespace-tokenized text file (session ids are
+//! `%`-escaped and hence token-safe; floats are raw `f64::to_bits` hex, so
+//! the restore is bit-exact):
+//!
+//! ```text
+//! finger-epoch v1
+//! epoch 3
+//! shards 2
+//! next 0 7
+//! next 1 9
+//! session wiki-00001 shard 0 windows 12 events 240 anomalies 1 \
+//!         interval 512 since 4 resyncs 2 maxdrift 3cb0000000000000 \
+//!         last 3f50624dd2f1a9fc lastanom 0 obs 12 trail 3f5062...,3f51...
+//! ```
+//!
+//! (one `session` line per live session, shown wrapped here for width).
+
+use super::DurabilityConfig;
+use crate::service::session::{decode_session_id, encode_session_id};
+use std::fs::{self, File};
+use std::io::{self, BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+
+/// Everything beyond the checkpointed `FingerState` that a session needs to
+/// resume *bit-identically*: scorer progress (window count and the adaptive
+/// resync schedule), detector history (trailing window, observation count),
+/// and the report-level tallies surfaced by `QUERY`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionDurableMeta {
+    pub id: String,
+    pub shard: usize,
+    /// Windows scored so far (`WindowScorer::windows`).
+    pub windows: u64,
+    /// Events accepted so far (pre-coalesce).
+    pub events: usize,
+    /// Anomalous windows so far.
+    pub anomalies: usize,
+    /// Current adaptive resync interval.
+    pub interval: u64,
+    /// Windows since the last resync.
+    pub since_resync: u64,
+    /// Resyncs performed.
+    pub resyncs: u64,
+    /// Largest drift any resync corrected.
+    pub max_drift: f64,
+    /// Last window's (jsdist, anomalous), if any window was scored.
+    pub last: Option<(f64, bool)>,
+    /// Detector observations so far.
+    pub observed: u64,
+    /// Detector trailing scores, oldest first.
+    pub trailing: Vec<f64>,
+}
+
+/// One shard's reply to the epoch barrier.
+#[derive(Debug)]
+pub struct EpochCut {
+    pub shard: usize,
+    /// First WAL segment NOT covered by this epoch (the segment opened by
+    /// the barrier's rotation, leading with the EPOCH marker).
+    pub next_seq: u64,
+    pub sessions: Vec<SessionDurableMeta>,
+}
+
+/// The committed, crash-consistent description of one epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochManifest {
+    pub epoch: u64,
+    pub shards: usize,
+    /// Per shard: first WAL segment to replay on recovery.
+    pub next_seq: Vec<u64>,
+    pub sessions: Vec<SessionDurableMeta>,
+}
+
+fn hex64(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn parse_hex64(tok: &str) -> Option<f64> {
+    if tok.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(tok, 16).ok().map(f64::from_bits)
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+fn write_manifest<W: Write>(w: &mut W, m: &EpochManifest) -> io::Result<()> {
+    writeln!(w, "finger-epoch v1")?;
+    writeln!(w, "epoch {}", m.epoch)?;
+    writeln!(w, "shards {}", m.shards)?;
+    for (shard, next) in m.next_seq.iter().enumerate() {
+        writeln!(w, "next {shard} {next}")?;
+    }
+    for s in &m.sessions {
+        let last = match s.last {
+            Some((v, _)) => hex64(v),
+            None => "-".to_string(),
+        };
+        let lastanom = match s.last {
+            Some((_, true)) => "1",
+            Some((_, false)) => "0",
+            None => "-",
+        };
+        let trail = if s.trailing.is_empty() {
+            "-".to_string()
+        } else {
+            s.trailing.iter().map(|&v| hex64(v)).collect::<Vec<_>>().join(",")
+        };
+        writeln!(
+            w,
+            "session {} shard {} windows {} events {} anomalies {} interval {} since {} \
+             resyncs {} maxdrift {} last {} lastanom {} obs {} trail {}",
+            encode_session_id(&s.id),
+            s.shard,
+            s.windows,
+            s.events,
+            s.anomalies,
+            s.interval,
+            s.since_resync,
+            s.resyncs,
+            hex64(s.max_drift),
+            last,
+            lastanom,
+            s.observed,
+            trail,
+        )?;
+    }
+    Ok(())
+}
+
+fn parse_session_line(tokens: &[&str]) -> Option<SessionDurableMeta> {
+    // session <id> + 12 labelled fields = 25 tokens
+    if tokens.len() != 25 {
+        return None;
+    }
+    let id = decode_session_id(tokens.get(1)?)?;
+    let mut field = |idx: usize, label: &str| -> Option<&str> {
+        if *tokens.get(idx)? != label {
+            return None;
+        }
+        tokens.get(idx + 1).copied()
+    };
+    let shard = field(2, "shard")?.parse().ok()?;
+    let windows = field(4, "windows")?.parse().ok()?;
+    let events = field(6, "events")?.parse().ok()?;
+    let anomalies = field(8, "anomalies")?.parse().ok()?;
+    let interval = field(10, "interval")?.parse().ok()?;
+    let since_resync = field(12, "since")?.parse().ok()?;
+    let resyncs = field(14, "resyncs")?.parse().ok()?;
+    let max_drift = parse_hex64(field(16, "maxdrift")?)?;
+    let last_tok = field(18, "last")?;
+    let lastanom_tok = field(20, "lastanom")?;
+    let last = match (last_tok, lastanom_tok) {
+        ("-", "-") => None,
+        (v, "0") => Some((parse_hex64(v)?, false)),
+        (v, "1") => Some((parse_hex64(v)?, true)),
+        _ => return None,
+    };
+    let observed = field(22, "obs")?.parse().ok()?;
+    let trail_tok = field(24, "trail")?;
+    let trailing = if trail_tok == "-" {
+        Vec::new()
+    } else {
+        let mut vals = Vec::new();
+        for part in trail_tok.split(',') {
+            vals.push(parse_hex64(part)?);
+        }
+        vals
+    };
+    Some(SessionDurableMeta {
+        id,
+        shard,
+        windows,
+        events,
+        anomalies,
+        interval,
+        since_resync,
+        resyncs,
+        max_drift,
+        last,
+        observed,
+        trailing,
+    })
+}
+
+fn read_manifest<R: BufRead>(r: R) -> io::Result<EpochManifest> {
+    let mut lines = r.lines();
+    let header = lines.next().ok_or_else(|| bad("empty manifest"))??;
+    if header.trim() != "finger-epoch v1" {
+        return Err(bad(format!("bad manifest header: {header:?}")));
+    }
+    let mut epoch: Option<u64> = None;
+    let mut shards: Option<usize> = None;
+    let mut next: Vec<(usize, u64)> = Vec::new();
+    let mut sessions = Vec::new();
+    for line in lines {
+        let line = line?;
+        let tokens: Vec<&str> = line.split_whitespace().collect();
+        match tokens.first().copied() {
+            None => continue,
+            Some("epoch") => {
+                epoch = tokens.get(1).and_then(|t| t.parse().ok());
+                if epoch.is_none() {
+                    return Err(bad(format!("bad epoch line: {line:?}")));
+                }
+            }
+            Some("shards") => {
+                shards = tokens.get(1).and_then(|t| t.parse().ok());
+                if shards.is_none() {
+                    return Err(bad(format!("bad shards line: {line:?}")));
+                }
+            }
+            Some("next") => {
+                let shard: Option<usize> = tokens.get(1).and_then(|t| t.parse().ok());
+                let seq: Option<u64> = tokens.get(2).and_then(|t| t.parse().ok());
+                match (shard, seq, tokens.len()) {
+                    (Some(s), Some(q), 3) => next.push((s, q)),
+                    _ => return Err(bad(format!("bad next line: {line:?}"))),
+                }
+            }
+            Some("session") => match parse_session_line(&tokens) {
+                Some(s) => sessions.push(s),
+                None => return Err(bad(format!("bad session line: {line:?}"))),
+            },
+            Some(other) => return Err(bad(format!("unknown manifest line {other:?}"))),
+        }
+    }
+    let epoch = epoch.ok_or_else(|| bad("manifest missing epoch"))?;
+    let shards = shards.ok_or_else(|| bad("manifest missing shards"))?;
+    let mut next_seq = vec![1u64; shards];
+    if next.len() != shards {
+        return Err(bad(format!("{} next lines for {shards} shards", next.len())));
+    }
+    for (shard, seq) in next {
+        match next_seq.get_mut(shard) {
+            Some(slot) => *slot = seq,
+            None => return Err(bad(format!("next line for out-of-range shard {shard}"))),
+        }
+    }
+    Ok(EpochManifest { epoch, shards, next_seq, sessions })
+}
+
+/// Read the manifest of a committed epoch directory.
+pub fn load_manifest(epoch_dir: &Path) -> io::Result<EpochManifest> {
+    let f = File::open(epoch_dir.join("MANIFEST"))?;
+    read_manifest(BufReader::new(f))
+}
+
+/// The latest committed epoch per `CURRENT`, or `None` on a fresh directory.
+pub fn read_current(cfg: &DurabilityConfig) -> io::Result<Option<u64>> {
+    let text = match fs::read_to_string(cfg.current_path()) {
+        Ok(t) => t,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(e),
+    };
+    let name = text.trim();
+    let epoch = name
+        .strip_prefix("epoch-")
+        .and_then(|n| n.parse().ok())
+        .ok_or_else(|| bad(format!("bad CURRENT content: {name:?}")))?;
+    Ok(Some(epoch))
+}
+
+/// Create (after clearing any stale leftover) the staging directory the
+/// barrier's checkpoint files are written into.
+pub fn prepare_epoch_tmp(cfg: &DurabilityConfig, epoch: u64) -> io::Result<PathBuf> {
+    let tmp = cfg.epoch_tmp_dir(epoch);
+    if tmp.exists() {
+        fs::remove_dir_all(&tmp)?;
+    }
+    fs::create_dir_all(&tmp)?;
+    Ok(tmp)
+}
+
+/// Commit an epoch whose per-session checkpoints already sit in the staging
+/// directory: write + fsync `MANIFEST`, atomically rename the directory into
+/// place, repoint `CURRENT`, then prune superseded epochs and WAL segments.
+pub fn commit_epoch(
+    cfg: &DurabilityConfig,
+    epoch: u64,
+    cuts: &[EpochCut],
+) -> io::Result<EpochManifest> {
+    let shards = cuts.len();
+    let mut next_seq = vec![1u64; shards];
+    let mut sessions = Vec::new();
+    for cut in cuts {
+        match next_seq.get_mut(cut.shard) {
+            Some(slot) => *slot = cut.next_seq,
+            None => return Err(bad(format!("epoch cut for out-of-range shard {}", cut.shard))),
+        }
+        sessions.extend(cut.sessions.iter().cloned());
+    }
+    sessions.sort_by(|a, b| a.id.cmp(&b.id));
+    let manifest = EpochManifest { epoch, shards, next_seq, sessions };
+
+    let tmp = cfg.epoch_tmp_dir(epoch);
+    {
+        let mut f = File::create(tmp.join("MANIFEST"))?;
+        write_manifest(&mut f, &manifest)?;
+        f.sync_all()?;
+    }
+    // fsync the staging directory so the checkpoint files' names are durable
+    // before the rename publishes them
+    File::open(&tmp)?.sync_all()?;
+    let final_dir = cfg.epoch_dir(epoch);
+    if final_dir.exists() {
+        fs::remove_dir_all(&final_dir)?;
+    }
+    fs::rename(&tmp, &final_dir)?;
+
+    // repoint CURRENT with the same tmp-then-rename idiom as obs snapshots
+    let current_tmp = cfg.dir.join("CURRENT.tmp");
+    {
+        let mut f = File::create(&current_tmp)?;
+        writeln!(f, "epoch-{epoch:010}")?;
+        f.sync_all()?;
+    }
+    fs::rename(&current_tmp, cfg.current_path())?;
+    File::open(&cfg.dir)?.sync_all()?;
+
+    prune(cfg, &manifest);
+    Ok(manifest)
+}
+
+/// Best-effort removal of everything the committed `manifest` supersedes:
+/// older (and stale `.tmp`) epoch directories and every WAL segment below
+/// the manifest's per-shard `next` position. Failures here cost disk space,
+/// never correctness, so they are ignored.
+fn prune(cfg: &DurabilityConfig, manifest: &EpochManifest) {
+    let keep = cfg.epoch_dir(manifest.epoch);
+    if let Ok(entries) = fs::read_dir(&cfg.dir) {
+        for entry in entries.flatten() {
+            let path = entry.path();
+            let Some(name) = entry.file_name().to_str().map(str::to_string) else { continue };
+            if path == keep || !name.starts_with("epoch-") {
+                continue;
+            }
+            let _ = fs::remove_dir_all(&path);
+        }
+    }
+    if let Ok(segments) = super::wal::scan_segments(&cfg.wal_dir()) {
+        for (shard, seq, path) in segments {
+            let covered = match manifest.next_seq.get(shard) {
+                Some(&next) => seq < next,
+                // a segment for a shard the manifest does not know cannot be
+                // replayed consistently; the snapshot supersedes it
+                None => true,
+            };
+            if covered {
+                let _ = fs::remove_file(path);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(id: &str, shard: usize) -> SessionDurableMeta {
+        SessionDurableMeta {
+            id: id.to_string(),
+            shard,
+            windows: 12,
+            events: 240,
+            anomalies: 1,
+            interval: 512,
+            since_resync: 4,
+            resyncs: 2,
+            max_drift: 1e-15,
+            last: Some((0.001_234_5, false)),
+            observed: 12,
+            trailing: vec![0.25, 1.0 / 3.0, f64::MIN_POSITIVE],
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_bit_exact() {
+        let m = EpochManifest {
+            epoch: 7,
+            shards: 2,
+            next_seq: vec![4, 9],
+            sessions: vec![
+                meta("wiki 00001", 0), // id with a space: %-escaped on disk
+                SessionDurableMeta {
+                    last: None,
+                    trailing: Vec::new(),
+                    observed: 0,
+                    ..meta("dos-00002", 1)
+                },
+            ],
+        };
+        let mut buf = Vec::new();
+        write_manifest(&mut buf, &m).unwrap();
+        let got = read_manifest(io::Cursor::new(&buf)).unwrap();
+        assert_eq!(got, m);
+        // floats survive as exact bits
+        assert_eq!(got.sessions[0].max_drift.to_bits(), m.sessions[0].max_drift.to_bits());
+        assert_eq!(got.sessions[0].trailing[2].to_bits(), f64::MIN_POSITIVE.to_bits());
+    }
+
+    #[test]
+    fn manifest_rejects_malformed_lines() {
+        for text in [
+            "",
+            "not-a-manifest\n",
+            "finger-epoch v1\nepoch 1\n", // missing shards
+            "finger-epoch v1\nepoch 1\nshards 2\nnext 0 1\n", // one next line short
+            "finger-epoch v1\nepoch 1\nshards 1\nnext 0 1\nsession broken shard 0\n",
+            "finger-epoch v1\nepoch 1\nshards 1\nnext 5 1\n", // out-of-range shard
+        ] {
+            assert!(read_manifest(io::Cursor::new(text.as_bytes())).is_err(), "{text:?}");
+        }
+    }
+
+    #[test]
+    fn commit_epoch_publishes_current_and_prunes() {
+        let root =
+            std::env::temp_dir().join(format!("finger_epoch_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&root);
+        let cfg = crate::durability::DurabilityConfig::new(&root);
+        fs::create_dir_all(cfg.wal_dir()).unwrap();
+        // two stale segments for shard 0, one live
+        for seq in 1..=3u64 {
+            fs::write(cfg.wal_dir().join(super::super::wal::segment_name(0, seq)), b"x")
+                .unwrap();
+        }
+        prepare_epoch_tmp(&cfg, 1).unwrap();
+        let cuts =
+            vec![EpochCut { shard: 0, next_seq: 3, sessions: vec![meta("session-00000", 0)] }];
+        let m = commit_epoch(&cfg, 1, &cuts).unwrap();
+        assert_eq!(read_current(&cfg).unwrap(), Some(1));
+        assert_eq!(load_manifest(&cfg.epoch_dir(1)).unwrap(), m);
+        assert!(!cfg.epoch_tmp_dir(1).exists());
+        // segments 1 and 2 pruned, 3 (the epoch's own start) kept
+        let left = super::super::wal::scan_segments(&cfg.wal_dir()).unwrap();
+        assert_eq!(left.iter().map(|&(_, s, _)| s).collect::<Vec<_>>(), vec![3]);
+        fs::remove_dir_all(&root).ok();
+    }
+}

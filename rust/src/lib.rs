@@ -44,6 +44,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod datasets;
 pub mod distance;
+pub mod durability;
 pub mod entropy;
 pub mod generators;
 pub mod graph;

@@ -78,6 +78,7 @@ fn in_panic_free_zone(path: &str) -> bool {
         || path.starts_with("rust/src/net/")
         || path.starts_with("rust/src/stream/")
         || path.starts_with("rust/src/obs/")
+        || path.starts_with("rust/src/durability/")
 }
 
 /// Whole files that are test/bench-only code: integration tests and benches

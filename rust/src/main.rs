@@ -13,6 +13,7 @@
 //!                sharded scoring service across shard counts
 //!   serve        put the scoring service on a TCP socket (line protocol,
 //!                see docs/PROTOCOL.md); runs until a SHUTDOWN request
+//!   epoch        ask a running `serve` to cut one durability epoch snapshot
 //!   load         replay a multi-tenant workload (dataset presets included)
 //!                against a running `serve` over N concurrent connections
 //!   offload      cross-check the XLA artifact path against native Rust
@@ -27,6 +28,7 @@ use finger::cli::{Args, Config};
 use finger::coordinator::experiments::{self, GraphModel};
 use finger::coordinator::report;
 use finger::datasets::{HicConfig, OregonConfig, WikiConfig};
+use finger::durability::{DurabilityConfig, FsyncPolicy};
 use finger::entropy::{exact_vnge, finger_hhat, finger_htilde};
 use finger::graph::{io as gio, Graph};
 use finger::net::{traffic, NetClient, NetConfig, NetServer, TrafficConfig, Wire, WireMode};
@@ -53,6 +55,7 @@ fn run(args: &Args) -> Result<()> {
         Some("sweep") => cmd_sweep(args),
         Some("serve-bench") => cmd_serve_bench(args),
         Some("serve") => cmd_serve(args),
+        Some("epoch") => cmd_epoch(args),
         Some("load") => cmd_load(args),
         Some("offload") => cmd_offload(args),
         Some("lint") => cmd_lint(args),
@@ -84,8 +87,12 @@ fn print_help() {
            serve       [--addr 127.0.0.1:7341] [--shards N] [--capacity C]\n\
                        [--wire auto|text|binary] [--threads N] [--config run.toml]\n\
                        [--metrics-out snap.json] [--metrics-interval MS]\n\
-                       (config sections: [service], [net], [obs] — see\n\
-                       docs/OBSERVABILITY.md)\n\
+                       [--durability-dir DIR] [--fsync always|every_ms[=N]|every_n[=N]]\n\
+                       [--snapshot-interval MS]\n\
+                       (config sections: [service], [net], [obs], [durability] —\n\
+                       see docs/OBSERVABILITY.md and docs/DURABILITY.md)\n\
+           epoch       [--addr 127.0.0.1:7341] [--wire text|binary] [--config run.toml]\n\
+                       (cut one online durability epoch on a running serve)\n\
            load        [--addr 127.0.0.1:7341] [--connections 1,2,4,8]\n\
                        [--wire text,binary] [--sessions N] [--windows W]\n\
                        [--events E] [--nodes N] [--timeout-ms T]\n\
@@ -337,7 +344,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let mut baseline: Option<f64> = None;
     for &shards in &shard_counts {
         let cfg = ServiceConfig { shards, channel_capacity: capacity, ..base.clone() };
-        let report = workload::drive(&cfg, &workload_data, producers, batched);
+        let report = workload::drive(&cfg, &workload_data, producers, batched)?;
         assert_eq!(report.total_events, total, "event loss in serve-bench");
         let speedup = report.throughput / baseline.get_or_insert(report.throughput).max(1e-12);
         println!(
@@ -375,19 +382,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     net_cfg.obs.interval_ms =
         args.get_parsed("metrics-interval", net_cfg.obs.interval_ms).max(1);
+    if let Some(dir) = args.get("durability-dir") {
+        let mut dur = service_cfg
+            .durability
+            .take()
+            .unwrap_or_else(|| DurabilityConfig::new(dir));
+        dur.dir = dir.into();
+        service_cfg.durability = Some(dur);
+    }
+    if let Some(dur) = service_cfg.durability.as_mut() {
+        if let Some(raw) = args.get("fsync") {
+            dur.fsync = FsyncPolicy::parse(raw).with_context(|| {
+                format!("unknown fsync spec {raw:?} (want always|every_ms[=N]|every_n[=N])")
+            })?;
+        }
+        dur.snapshot_interval_ms =
+            args.get_parsed("snapshot-interval", dur.snapshot_interval_ms);
+    }
     let wire_mode = net_cfg.wire;
     let event_threads = net_cfg.event_threads;
     let metrics_out = net_cfg.obs.snapshot_path.clone();
     let server = NetServer::bind(service_cfg.clone(), net_cfg)?;
+    let restored_ckpt = server.restore_checkpoint_sessions()?;
+    let rec = server.recovery().clone();
     println!(
-        "serve: listening on {} ({} shards, capacity {}, wire {}, {} event threads); \
-         send SHUTDOWN to stop",
+        "serve: listening on {} ({} shards, capacity {}, wire {}, {} event threads, \
+         restored {} sessions, replayed {} windows); send SHUTDOWN to stop",
         server.local_addr(),
         service_cfg.shards,
         service_cfg.channel_capacity,
         wire_mode.name(),
         event_threads,
+        rec.restored_sessions + restored_ckpt,
+        rec.replayed_windows,
     );
+    if let Some(dur) = &service_cfg.durability {
+        println!(
+            "serve: durability on at {} (fsync {:?}{})",
+            dur.dir.display(),
+            dur.fsync,
+            match rec.epoch {
+                Some(e) => format!(", recovered from epoch {e}"),
+                None => String::new(),
+            },
+        );
+    }
     if let Some(path) = &metrics_out {
         println!("serve: writing metrics snapshots to {path}");
     }
@@ -403,6 +442,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.throughput,
         finger::util::fmt::secs(report.wall_secs),
     );
+    Ok(())
+}
+
+fn cmd_epoch(args: &Args) -> Result<()> {
+    let config = match args.get("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::default(),
+    };
+    let mut net_cfg = NetConfig::from_config(&config);
+    if let Some(addr) = args.get("addr") {
+        net_cfg.addr = addr.to_string();
+    }
+    let wire = match args.get("wire") {
+        None => net_cfg.wire.client_wire(),
+        Some(raw) => Wire::parse(raw)
+            .with_context(|| format!("unknown wire {raw:?} (want text|binary)"))?,
+    };
+    let mut client =
+        NetClient::connect_with(net_cfg.addr.as_str(), wire, net_cfg.client_timeout())?;
+    let (epoch, sessions) = client.epoch()?;
+    println!("epoch: committed epoch {epoch} covering {sessions} session(s)");
+    client.quit().ok();
     Ok(())
 }
 

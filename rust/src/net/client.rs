@@ -193,6 +193,17 @@ impl NetClient {
         })
     }
 
+    /// Cut one durability epoch snapshot online (all shards, no drain).
+    /// Returns `(epoch, sessions)` — the committed epoch number and how many
+    /// sessions it covers. Errors when the server runs without durability.
+    pub fn epoch(&mut self) -> Result<(u64, usize)> {
+        let resp = self.expect_ok(&Command::Epoch)?;
+        Ok((
+            resp.get_parsed("epoch").context("EPOCH reply missing epoch")?,
+            resp.get_parsed("sessions").context("EPOCH reply missing sessions")?,
+        ))
+    }
+
     /// The full metrics registry: counters, gauges, per-shard/per-loop
     /// slots, latency histograms and service extras. Identical reports on
     /// both wires (all values are integers).

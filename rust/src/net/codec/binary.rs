@@ -20,7 +20,8 @@
 //!
 //! Command opcodes: `0x01 OPEN(id, varint nodes)`, `0x02 EV(id, event)`,
 //! `0x03 BATCH(id, varint k, k×event)`, `0x04 QUERY(id)`, `0x05 CLOSE(id)`,
-//! `0x06 STATS`, `0x07 QUIT`, `0x08 SHUTDOWN`, `0x09 METRICS`.
+//! `0x06 STATS`, `0x07 QUIT`, `0x08 SHUTDOWN`, `0x09 METRICS`,
+//! `0x0A EPOCH`.
 //! Reply opcodes: `0x80 OK`, `0x81 OKKV(varint n, n×(string,string))`,
 //! `0x82 SNAPSHOT(varint windows, varint events, varint nodes, varint
 //! edges, varint anomalies, varint pending, u8 anomalous, f64 htilde, u8
@@ -63,6 +64,7 @@ const OP_STATS: u8 = 0x06;
 const OP_QUIT: u8 = 0x07;
 const OP_SHUTDOWN: u8 = 0x08;
 const OP_METRICS: u8 = 0x09;
+const OP_EPOCH: u8 = 0x0A;
 
 // Reply opcodes.
 const OP_OK: u8 = 0x80;
@@ -162,6 +164,7 @@ impl BinaryCodec {
             }
             Command::Stats => out.push(OP_STATS),
             Command::Metrics => out.push(OP_METRICS),
+            Command::Epoch => out.push(OP_EPOCH),
             Command::Quit => out.push(OP_QUIT),
             Command::Shutdown => out.push(OP_SHUTDOWN),
         }
@@ -541,6 +544,7 @@ impl Codec for BinaryCodec {
                 OP_CLOSE => Decode::Cmd(Command::Close { id: need!(sr.string()?, eof) }),
                 OP_STATS => Decode::Cmd(Command::Stats),
                 OP_METRICS => Decode::Cmd(Command::Metrics),
+                OP_EPOCH => Decode::Cmd(Command::Epoch),
                 OP_QUIT => Decode::Cmd(Command::Quit),
                 OP_SHUTDOWN => Decode::Cmd(Command::Shutdown),
                 other => return Err(bad(format!("unknown command opcode {other:#04x}"))),
@@ -697,6 +701,7 @@ mod tests {
             Command::Close { id: "tenant/1".into() },
             Command::Stats,
             Command::Metrics,
+            Command::Epoch,
             Command::Quit,
             Command::Shutdown,
         ] {

@@ -71,6 +71,7 @@ impl TextCodec {
             Command::Close { id } => format!("CLOSE {}", encode_session_id(id)),
             Command::Stats => "STATS".to_string(),
             Command::Metrics => "METRICS".to_string(),
+            Command::Epoch => "EPOCH".to_string(),
             Command::Quit => "QUIT".to_string(),
             Command::Shutdown => "SHUTDOWN".to_string(),
         };
@@ -182,6 +183,7 @@ impl TextCodec {
             }
             "STATS" => no_more(it, verb).map(|()| Parsed::Cmd(Command::Stats)),
             "METRICS" => no_more(it, verb).map(|()| Parsed::Cmd(Command::Metrics)),
+            "EPOCH" => no_more(it, verb).map(|()| Parsed::Cmd(Command::Epoch)),
             "QUIT" => no_more(it, verb).map(|()| Parsed::Cmd(Command::Quit)),
             "SHUTDOWN" => no_more(it, verb).map(|()| Parsed::Cmd(Command::Shutdown)),
             other => Err(format!("unknown verb `{other}`")),
@@ -448,6 +450,7 @@ mod tests {
             Command::Close { id: "a b/c".to_string() },
             Command::Stats,
             Command::Metrics,
+            Command::Epoch,
             Command::Quit,
             Command::Shutdown,
         ] {
@@ -526,6 +529,7 @@ mod tests {
             "CLOSE bad%zz\n",
             "STATS extra\n",
             "METRICS extra\n",
+            "EPOCH now\n",
             "QUIT now\n",
             "OPEN bad%zz 4\n", // invalid id escape
             "EV a e 0 4294967295 0.5\n",

@@ -55,6 +55,9 @@ pub enum Command {
     /// The full metrics registry: every counter/gauge, per-shard and
     /// per-event-loop slots, latency histograms and service-derived extras.
     Metrics,
+    /// Cut one durability epoch snapshot online (all shards, no drain).
+    /// `ERR` when the server runs without a `[durability]` dir.
+    Epoch,
     /// Close this connection (the server keeps running).
     Quit,
     /// Gracefully stop the whole server: drain every shard and produce the
@@ -71,7 +74,11 @@ impl Command {
             | Command::Batch { id, .. }
             | Command::Query { id }
             | Command::Close { id } => Some(id),
-            Command::Stats | Command::Metrics | Command::Quit | Command::Shutdown => None,
+            Command::Stats
+            | Command::Metrics
+            | Command::Epoch
+            | Command::Quit
+            | Command::Shutdown => None,
         }
     }
 }

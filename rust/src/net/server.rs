@@ -200,6 +200,9 @@ pub struct NetServer {
 
 impl NetServer {
     /// Bind the listen socket and start the scoring service's shard workers.
+    /// When the config carries a `[durability]` dir this recovers the latest
+    /// epoch snapshot plus WAL tail before accepting a single connection, so
+    /// a restarted server answers queries with bit-identical session state.
     pub fn bind(service_cfg: ServiceConfig, net: NetConfig) -> Result<Self> {
         let listener = TcpListener::bind(&net.addr)
             .with_context(|| format!("bind {}", net.addr))?;
@@ -209,12 +212,28 @@ impl NetServer {
             addr,
             wakers: Arc::new(Mutex::new(Vec::new())),
         };
-        Ok(Self {
-            listener,
-            service: Arc::new(ScoringService::start(service_cfg)),
-            net,
-            shutdown,
-        })
+        let service = ScoringService::recover(service_cfg).context("durability recovery")?;
+        Ok(Self { listener, service: Arc::new(service), net, shutdown })
+    }
+
+    /// What startup recovery restored (empty outside durability mode).
+    pub fn recovery(&self) -> &crate::service::RecoveryReport {
+        self.service.recovery()
+    }
+
+    /// Re-open the finish-time `<id>.ckpt` sessions under the configured
+    /// `checkpoint_dir`, if any. A no-op when the directory is unset or
+    /// absent, and in durability mode — there the epoch snapshot + WAL
+    /// replay already rebuilt every session, and double-restoring would
+    /// reset them. Returns how many sessions were restored.
+    pub fn restore_checkpoint_sessions(&self) -> Result<usize> {
+        if self.service.config().durability.is_some() {
+            return Ok(0);
+        }
+        match self.service.config().checkpoint_dir.clone() {
+            Some(dir) if dir.is_dir() => self.service.restore_sessions(dir),
+            _ => Ok(0),
+        }
     }
 
     /// The bound address (resolves port 0 to the actual ephemeral port).
@@ -306,6 +325,37 @@ impl NetServer {
                 Err(e) => eprintln!("net: spawn metrics writer: {e}"),
             }
         }
+        // periodic online epoch snapshots while the server runs (durability
+        // mode with `snapshot_interval_ms > 0`); the drain-time cut below
+        // covers whatever happened after the last tick
+        let mut epoch_timer = None;
+        let epoch_interval_ms =
+            service.config().durability.as_ref().map_or(0, |d| d.snapshot_interval_ms);
+        if epoch_interval_ms > 0 {
+            let service = Arc::clone(&service);
+            let shutdown = shutdown.clone();
+            let interval = Duration::from_millis(epoch_interval_ms);
+            let spawned = std::thread::Builder::new()
+                .name("finger-epoch".to_string())
+                .spawn(move || loop {
+                    let mut slept = Duration::ZERO;
+                    while slept < interval && !shutdown.is_signaled() {
+                        let step = (interval - slept).min(Duration::from_millis(100));
+                        std::thread::sleep(step);
+                        slept += step;
+                    }
+                    if shutdown.is_signaled() {
+                        return;
+                    }
+                    if let Err(e) = service.snapshot_epoch() {
+                        eprintln!("net: epoch snapshot: {e}");
+                    }
+                });
+            match spawned {
+                Ok(h) => epoch_timer = Some(h),
+                Err(e) => eprintln!("net: spawn epoch timer: {e}"),
+            }
+        }
         if boot_err.is_none() {
             let mut next = 0usize;
             for incoming in listener.incoming() {
@@ -342,6 +392,9 @@ impl NetServer {
         if let Some(h) = obs_writer {
             let _ = h.join();
         }
+        if let Some(h) = epoch_timer {
+            let _ = h.join();
+        }
         // one post-drain snapshot so the file on disk reflects the quiesced
         // counters (every event loop has joined; nothing submits anymore)
         if let Some(p) = net.obs.snapshot_path.as_deref() {
@@ -352,6 +405,14 @@ impl NetServer {
         }
         if let Some(e) = boot_err {
             return Err(e);
+        }
+        // one final epoch cut so a clean shutdown restarts from the snapshot
+        // alone (no WAL tail to replay); every event loop has joined, so
+        // nothing submits concurrently and the cut covers everything
+        if service.config().durability.is_some() {
+            if let Err(e) = service.snapshot_epoch() {
+                eprintln!("net: final epoch snapshot: {e}");
+            }
         }
         let service = Arc::try_unwrap(service)
             .map_err(|_| anyhow::anyhow!("event loop leaked a service handle"))?;
@@ -643,6 +704,19 @@ fn dispatch_cmd(
         Command::Close { id } => run_attempt(service, shutdown, conn, Pending::Close { id }),
         Command::Stats => conn.reply(&stats_reply(service)),
         Command::Metrics => conn.reply(&metrics_reply(service)),
+        Command::Epoch => {
+            // admin verb: blocks this event loop for one barrier round-trip
+            // across the shards (checkpoint writes included) — rare by
+            // construction, and every other loop keeps serving meanwhile
+            let r = match service.snapshot_epoch() {
+                Ok(cut) => Reply::OkKv(vec![
+                    ("epoch".to_string(), cut.epoch.to_string()),
+                    ("sessions".to_string(), cut.sessions.to_string()),
+                ]),
+                Err(e) => Reply::Err(e.to_string()),
+            };
+            conn.reply(&r);
+        }
         Command::Quit => {
             conn.reply(&Reply::Ok);
             conn.start_drain();

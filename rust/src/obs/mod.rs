@@ -92,6 +92,14 @@ pub enum Counter {
     ScoreWindows,
     /// Windows flagged anomalous by the detector.
     ScoreAnomalies,
+    /// Records appended to per-shard write-ahead logs.
+    WalAppends,
+    /// Bytes appended to per-shard write-ahead logs (framing included).
+    WalBytes,
+    /// `fsync` calls issued by WAL writers.
+    WalFsyncs,
+    /// Epoch snapshots committed (manifest renamed + `CURRENT` repointed).
+    SnapshotEpochs,
 }
 
 /// Every counter in stable render order.
@@ -109,6 +117,10 @@ pub const COUNTERS: &[Counter] = &[
     Counter::WinCoalesced,
     Counter::ScoreWindows,
     Counter::ScoreAnomalies,
+    Counter::WalAppends,
+    Counter::WalBytes,
+    Counter::WalFsyncs,
+    Counter::SnapshotEpochs,
 ];
 
 /// Live-level gauges (incremented and decremented; rendered as `u64`, never
@@ -153,6 +165,10 @@ impl Counter {
             Counter::WinCoalesced => cell!(),
             Counter::ScoreWindows => cell!(),
             Counter::ScoreAnomalies => cell!(),
+            Counter::WalAppends => cell!(),
+            Counter::WalBytes => cell!(),
+            Counter::WalFsyncs => cell!(),
+            Counter::SnapshotEpochs => cell!(),
         }
     }
 
@@ -189,6 +205,10 @@ impl Counter {
             Counter::WinCoalesced => "win_coalesced",
             Counter::ScoreWindows => "score_windows",
             Counter::ScoreAnomalies => "score_anomalies",
+            Counter::WalAppends => "wal_appends",
+            Counter::WalBytes => "wal_bytes",
+            Counter::WalFsyncs => "wal_fsyncs",
+            Counter::SnapshotEpochs => "snapshot_epochs",
         }
     }
 }
@@ -435,7 +455,7 @@ mod tests {
         Counter::NetAccepted.add(2);
         assert!(Counter::NetAccepted.get() >= before + 3);
         assert_eq!(Counter::NetAccepted.name(), "net_accepted");
-        assert_eq!(COUNTERS.len(), 13);
+        assert_eq!(COUNTERS.len(), 17);
         // names are unique (each variant has its own cell and wire key)
         let mut names: Vec<&str> = COUNTERS.iter().map(|c| c.name()).collect();
         names.sort_unstable();

@@ -2,6 +2,7 @@
 //! `[service]` section of a config file (`cli::Config`).
 
 use crate::cli::Config;
+use crate::durability::{DurabilityConfig, FsyncPolicy};
 use crate::entropy::SmaxPolicy;
 use crate::stream::ResyncPolicy;
 use std::path::PathBuf;
@@ -27,6 +28,11 @@ pub struct ServiceConfig {
     pub auto_create_sessions: bool,
     /// Snapshot every session here on `finish` (one `<id>.ckpt` per session).
     pub checkpoint_dir: Option<PathBuf>,
+    /// Per-shard write-ahead logging + epoch snapshots (`docs/DURABILITY.md`).
+    /// `Some` turns the durability subsystem on: shard workers write-ahead
+    /// every committed window, `EPOCH` barriers cut online snapshots, and
+    /// startup recovers snapshot + WAL tail into bit-identical sessions.
+    pub durability: Option<DurabilityConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -40,16 +46,23 @@ impl Default for ServiceConfig {
             resync: ResyncPolicy::default(),
             auto_create_sessions: true,
             checkpoint_dir: None,
+            durability: None,
         }
     }
 }
 
 impl ServiceConfig {
-    /// Read the `[service]` section of a parsed config file; missing keys
-    /// fall back to the defaults above. Recognized keys: `shards`,
-    /// `channel_capacity`, `anomaly_sigma`, `anomaly_window`, `smax_policy`
-    /// (`exact` | `paper`), `resync_interval` (windows, 0 disables),
-    /// `auto_create_sessions`, `checkpoint_dir`.
+    /// Read the `[service]` and `[durability]` sections of a parsed config
+    /// file; missing keys fall back to the defaults above. Recognized
+    /// `[service]` keys: `shards`, `channel_capacity`, `anomaly_sigma`,
+    /// `anomaly_window`, `smax_policy` (`exact` | `paper`),
+    /// `resync_interval` (windows, 0 disables), `auto_create_sessions`,
+    /// `checkpoint_dir`. Recognized `[durability]` keys (presence of `dir`
+    /// turns durability on): `dir`, `fsync`
+    /// (`always` | `every_ms[=N]` | `every_n[=N]`; an unparseable spec falls
+    /// back to the default), `fsync_ms`, `fsync_windows` (numeric overrides,
+    /// taking precedence over `fsync`), `segment_bytes`,
+    /// `snapshot_interval_ms` (0 disables the periodic snapshot timer).
     pub fn from_config(c: &Config) -> Self {
         let d = Self::default();
         Self {
@@ -67,6 +80,24 @@ impl ServiceConfig {
             auto_create_sessions: c
                 .get_bool("service.auto_create_sessions", d.auto_create_sessions),
             checkpoint_dir: c.get("service.checkpoint_dir").map(PathBuf::from),
+            durability: c.get("durability.dir").map(|dir| {
+                let mut dur = DurabilityConfig::new(dir);
+                if let Some(p) = c.get("durability.fsync").and_then(FsyncPolicy::parse) {
+                    dur.fsync = p;
+                }
+                if let Some(ms) = c.get("durability.fsync_ms").and_then(|v| v.parse().ok()) {
+                    dur.fsync = FsyncPolicy::EveryMs(ms);
+                }
+                if let Some(n) =
+                    c.get("durability.fsync_windows").and_then(|v| v.parse::<u64>().ok())
+                {
+                    dur.fsync = FsyncPolicy::EveryNWindows(n.max(1));
+                }
+                dur.segment_bytes = c.get_or("durability.segment_bytes", dur.segment_bytes);
+                dur.snapshot_interval_ms =
+                    c.get_or("durability.snapshot_interval_ms", dur.snapshot_interval_ms);
+                dur
+            }),
         }
     }
 }
@@ -98,5 +129,30 @@ mod tests {
         assert_eq!(s.shards, d.shards);
         assert_eq!(s.policy, SmaxPolicy::Exact);
         assert!(s.checkpoint_dir.is_none());
+        assert!(s.durability.is_none());
+    }
+
+    #[test]
+    fn from_config_reads_durability_section() {
+        let c = Config::parse(
+            "[durability]\ndir = \"/tmp/dur\"\nfsync = \"every_n=8\"\n\
+             segment_bytes = 4096\nsnapshot_interval_ms = 500\n",
+        )
+        .unwrap();
+        let dur = ServiceConfig::from_config(&c).durability.expect("dir enables durability");
+        assert_eq!(dur.dir, std::path::PathBuf::from("/tmp/dur"));
+        assert_eq!(dur.fsync, FsyncPolicy::EveryNWindows(8));
+        assert_eq!(dur.segment_bytes, 4096);
+        assert_eq!(dur.snapshot_interval_ms, 500);
+
+        // numeric overrides beat the spec string; bad specs fall back
+        let c = Config::parse("[durability]\ndir = \"/d\"\nfsync = \"bogus\"\nfsync_ms = 7\n")
+            .unwrap();
+        let dur = ServiceConfig::from_config(&c).durability.unwrap();
+        assert_eq!(dur.fsync, FsyncPolicy::EveryMs(7));
+
+        // no dir, no durability — other keys alone don't enable it
+        let c = Config::parse("[durability]\nfsync = \"always\"\n").unwrap();
+        assert!(ServiceConfig::from_config(&c).durability.is_none());
     }
 }

@@ -6,14 +6,16 @@
 
 use super::config::ServiceConfig;
 use super::registry::{shard_of, SessionRegistry};
-use super::session::{SessionReport, SessionSnapshot, SessionState};
+use super::session::{encode_session_id, SessionReport, SessionSnapshot, SessionState};
+use crate::durability::wal::{WalReader, WalRecord, WalWriter};
+use crate::durability::{recovery, snapshot, EpochCut};
 use crate::entropy::FingerState;
 use crate::graph::Graph;
 use crate::stream::{checkpoint, StreamEvent};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -35,6 +37,11 @@ enum ShardMsg {
     /// state and reply with the final snapshot (`None` if unknown). FIFO
     /// ordering means the close observes every event submitted before it.
     Close { id: String, reply: Sender<Option<SessionSnapshot>> },
+    /// Epoch barrier (broadcast to every shard, never routed by id): rotate
+    /// the WAL, canonicalize live states, checkpoint them into `dir`, and
+    /// reply with the shard's cut. FIFO ordering makes the cut consistent
+    /// with everything submitted before the barrier.
+    Epoch { dir: PathBuf, epoch: u64, reply: Sender<anyhow::Result<EpochCut>> },
 }
 
 /// Submission failure.
@@ -75,6 +82,31 @@ pub struct ScoringService {
     depths: Vec<Arc<AtomicUsize>>,
     submitted: AtomicUsize,
     start: Instant,
+    /// Next epoch number to cut (continues past the recovered epoch); the
+    /// lock also serializes whole epoch commits, barrier through publish.
+    epoch: Mutex<u64>,
+    /// What startup recovery rebuilt (all zeroes for a fresh start).
+    recovery: RecoveryReport,
+}
+
+/// What startup recovery rebuilt (see [`ScoringService::recover`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// Sessions live after snapshot restore + WAL replay.
+    pub restored_sessions: usize,
+    /// WAL window records actually scored during replay.
+    pub replayed_windows: usize,
+    /// The committed epoch the restore started from, if any.
+    pub epoch: Option<u64>,
+}
+
+/// Outcome of one committed epoch snapshot
+/// (see [`ScoringService::snapshot_epoch`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EpochSummary {
+    pub epoch: u64,
+    /// Live sessions checkpointed in the epoch.
+    pub sessions: usize,
 }
 
 struct ShardOutcome {
@@ -92,21 +124,81 @@ struct ShardOutcome {
 const MAX_RETAINED_CLOSED: usize = 4096;
 
 impl ScoringService {
-    /// Spawn the shard workers and start accepting events.
+    /// Spawn the shard workers and start accepting events. Does **not**
+    /// recover existing durability state — use [`ScoringService::recover`]
+    /// when resuming from a populated durability directory.
     pub fn start(cfg: ServiceConfig) -> Self {
+        // continue the epoch numbering even without a full recovery, so a
+        // misuse of start() over live durability state cannot re-commit (and
+        // prune away) an already-taken epoch number
+        let next_epoch = cfg
+            .durability
+            .as_ref()
+            .and_then(|d| snapshot::read_current(d).ok().flatten())
+            .map_or(1, |e| e + 1);
+        Self::start_with(cfg, Vec::new(), RecoveryReport::default(), next_epoch)
+    }
+
+    /// Start the service by recovering its durability directory: restore
+    /// every session from the latest committed epoch's checkpoints, then
+    /// replay the WAL tail through the normal scoring path (bit-identical to
+    /// the crashed run — see `docs/DURABILITY.md`). Falls back to a plain
+    /// [`ScoringService::start`] when durability is not configured.
+    pub fn recover(cfg: ServiceConfig) -> anyhow::Result<Self> {
+        let Some(dur) = cfg.durability.clone() else {
+            return Ok(Self::start(cfg));
+        };
+        let shards = cfg.shards.max(1);
+        let plan = recovery::plan(&dur, shards)?;
+        let mut report = RecoveryReport::default();
+        let mut registries: Vec<SessionRegistry> =
+            (0..shards).map(|_| SessionRegistry::new()).collect();
+
+        if let (Some(manifest), Some(dir)) = (&plan.manifest, &plan.epoch_dir) {
+            report.epoch = Some(manifest.epoch);
+            for meta in &manifest.sessions {
+                let path = dir.join(format!("{}.ckpt", encode_session_id(&meta.id)));
+                let state = checkpoint::load_with_policy(&path, cfg.policy)
+                    .map_err(|e| anyhow::anyhow!("restore session {}: {e:#}", meta.id))?;
+                if let Some(registry) = registries.get_mut(shard_of(&meta.id, shards)) {
+                    registry.insert(SessionState::from_durable(state, meta, &cfg));
+                }
+            }
+        }
+        for (shard, segments) in plan.segments.iter().enumerate() {
+            let Some(registry) = registries.get_mut(shard) else { continue };
+            for (_seq, path) in segments {
+                for rec in WalReader::open(path)? {
+                    report.replayed_windows += replay_record(registry, rec, &cfg);
+                }
+            }
+        }
+        report.restored_sessions = registries.iter().map(SessionRegistry::len).sum();
+        let next_epoch = plan.manifest.as_ref().map_or(1, |m| m.epoch + 1);
+        Ok(Self::start_with(cfg, registries, report, next_epoch))
+    }
+
+    fn start_with(
+        cfg: ServiceConfig,
+        initial: Vec<SessionRegistry>,
+        recovery: RecoveryReport,
+        next_epoch: u64,
+    ) -> Self {
         let shards = cfg.shards.max(1);
         crate::obs::note_shards(shards);
+        let mut registries = initial;
+        registries.resize_with(shards, SessionRegistry::new);
         let mut senders = Vec::with_capacity(shards);
         let mut workers = Vec::with_capacity(shards);
         let mut depths = Vec::with_capacity(shards);
-        for shard in 0..shards {
+        for (shard, registry) in registries.into_iter().enumerate() {
             let (tx, rx) = sync_channel::<ShardMsg>(cfg.channel_capacity.max(1));
             let worker_cfg = cfg.clone();
             let depth = Arc::new(AtomicUsize::new(0));
             let worker_depth = Arc::clone(&depth);
             let handle = std::thread::Builder::new()
                 .name(format!("finger-shard-{shard}"))
-                .spawn(move || shard_worker(rx, worker_cfg, worker_depth, shard))
+                .spawn(move || shard_worker(rx, worker_cfg, worker_depth, shard, registry))
                 // finger-lint: allow(FL001): cold-start — no spawn, no service
                 .expect("spawn shard worker");
             senders.push(tx);
@@ -120,7 +212,15 @@ impl ScoringService {
             depths,
             submitted: AtomicUsize::new(0),
             start: Instant::now(),
+            epoch: Mutex::new(next_epoch.max(1)),
+            recovery,
         }
+    }
+
+    /// What startup recovery restored and replayed (all zeroes unless the
+    /// service was started via [`ScoringService::recover`]).
+    pub fn recovery(&self) -> &RecoveryReport {
+        &self.recovery
     }
 
     pub fn shards(&self) -> usize {
@@ -336,6 +436,48 @@ impl ScoringService {
         Ok(restored)
     }
 
+    /// Cut one epoch snapshot online, without draining: broadcast the
+    /// barrier through every shard's FIFO channel, collect the per-shard
+    /// [`EpochCut`]s, and commit the manifest atomically. Epochs are
+    /// serialized — one commit at a time — and the numbering continues past
+    /// the recovered epoch. Errors when durability is not configured.
+    pub fn snapshot_epoch(&self) -> anyhow::Result<EpochSummary> {
+        let Some(dur) = self.cfg.durability.clone() else {
+            anyhow::bail!("durability is not configured (no [durability] dir)");
+        };
+        let mut next = match self.epoch.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let epoch = *next;
+        let tmp = snapshot::prepare_epoch_tmp(&dur, epoch)?;
+        // finger-lint: allow(FL004): rendezvous replies; one per shard, then dropped
+        let (tx, rx) = channel();
+        for (shard, sender) in self.senders.iter().enumerate() {
+            let msg = ShardMsg::Epoch { dir: tmp.clone(), epoch, reply: tx.clone() };
+            if let Some(depth) = self.depths.get(shard) {
+                depth.fetch_add(1, Ordering::Relaxed);
+                if sender.send(msg).is_err() {
+                    depth.fetch_sub(1, Ordering::Relaxed);
+                    anyhow::bail!("shard {shard} is gone; epoch {epoch} aborted");
+                }
+            }
+        }
+        drop(tx);
+        let mut cuts = Vec::with_capacity(self.senders.len());
+        for _ in 0..self.senders.len() {
+            let cut = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("a shard worker died during epoch {epoch}"))??;
+            cuts.push(cut);
+        }
+        cuts.sort_by_key(|c| c.shard);
+        let manifest = snapshot::commit_epoch(&dur, epoch, &cuts)?;
+        *next = epoch + 1;
+        crate::obs::Counter::SnapshotEpochs.inc();
+        Ok(EpochSummary { epoch, sessions: manifest.sessions.len() })
+    }
+
     fn shard_of_msg(&self, msg: &ShardMsg) -> usize {
         let id = match msg {
             ShardMsg::Open { id, .. }
@@ -343,6 +485,9 @@ impl ScoringService {
             | ShardMsg::Batch { id, .. }
             | ShardMsg::Query { id, .. }
             | ShardMsg::Close { id, .. } => id,
+            // broadcast by snapshot_epoch to every shard directly, never
+            // routed through send/try_send
+            ShardMsg::Epoch { .. } => return 0,
         };
         shard_of(id, self.senders.len())
     }
@@ -381,7 +526,8 @@ impl ScoringService {
     /// Close the ingest side, drain every shard (flushing partial windows,
     /// checkpointing when configured) and aggregate the results.
     pub fn finish(self) -> ServiceReport {
-        let Self { cfg, senders, workers, submitted, start, depths: _ } = self;
+        let Self { cfg, senders, workers, submitted, start, depths: _, epoch: _, recovery } =
+            self;
         drop(senders); // workers' receive loops end once the queues drain
         let mut sessions = Vec::new();
         let mut dropped_events = 0;
@@ -410,6 +556,8 @@ impl ScoringService {
             closed_reports_dropped,
             wall_secs,
             shards: cfg.shards.max(1),
+            restored_sessions: recovery.restored_sessions,
+            replayed_windows: recovery.replayed_windows,
             sessions,
         }
     }
@@ -420,8 +568,21 @@ fn shard_worker(
     cfg: ServiceConfig,
     depth: Arc<AtomicUsize>,
     shard: usize,
+    initial: SessionRegistry,
 ) -> ShardOutcome {
-    let mut registry = SessionRegistry::new();
+    let mut registry = initial;
+    for _ in 0..registry.len() {
+        crate::obs::Gauge::SvcSessions.inc(); // recovered sessions are live
+    }
+    let mut wal = cfg.durability.as_ref().and_then(|dur| {
+        match WalWriter::open(&dur.wal_dir(), shard, dur.fsync, dur.segment_bytes) {
+            Ok(w) => Some(w),
+            Err(e) => {
+                eprintln!("wal[shard {shard}]: open failed: {e}; running without WAL");
+                None
+            }
+        }
+    });
     let mut dropped = 0;
     // reports of sessions retired via Close: their events were scored, so
     // they still count in the final ServiceReport — they are just no longer
@@ -431,6 +592,7 @@ fn shard_worker(
     let mut closed_reports_dropped = 0usize;
     let route = |registry: &mut SessionRegistry,
                      dropped: &mut usize,
+                     wal: &mut Option<WalWriter>,
                      id: String,
                      events: &mut dyn Iterator<Item = StreamEvent>| {
         if !registry.contains(&id) && cfg.auto_create_sessions {
@@ -440,7 +602,7 @@ fn shard_worker(
         match registry.get_mut(&id) {
             Some(session) => {
                 for ev in events {
-                    if session.on_event(ev) {
+                    if session.on_event_durable(ev, wal.as_mut()) {
                         crate::obs::shard_window(shard);
                     }
                 }
@@ -455,34 +617,55 @@ fn shard_worker(
                 if !registry.contains(&id) {
                     crate::obs::Gauge::SvcSessions.inc();
                 }
-                registry.insert(SessionState::from_finger_state(id, state, &cfg));
+                if let Some(w) = wal.as_mut() {
+                    w.append_open(&id, state.graph());
+                }
+                registry.insert(SessionState::from_finger_state(id.clone(), state, &cfg));
+                if wal.is_some() {
+                    // recovery rebuilds an OPEN purely from its logged graph,
+                    // so force the live state onto that same canonical form
+                    // (a no-op for states freshly built from a graph, which
+                    // is every state the public open paths produce)
+                    if let Some(session) = registry.get_mut(&id) {
+                        session.canonicalize();
+                    }
+                }
             }
             ShardMsg::Event { id, ev } => {
-                route(&mut registry, &mut dropped, id, &mut std::iter::once(ev));
+                route(&mut registry, &mut dropped, &mut wal, id, &mut std::iter::once(ev));
             }
             ShardMsg::Batch { id, events } => {
-                route(&mut registry, &mut dropped, id, &mut events.into_iter());
+                route(&mut registry, &mut dropped, &mut wal, id, &mut events.into_iter());
             }
             ShardMsg::Query { id, reply } => {
                 // the querying side may have hung up; that's its business
                 let _ = reply.send(registry.get(&id).map(SessionState::snapshot));
             }
             ShardMsg::Close { id, reply } => {
-                let snapshot = registry.remove(&id).map(|mut session| {
-                    crate::obs::Gauge::SvcSessions.dec();
-                    if session.flush() {
-                        // the final snapshot scores any open window
-                        crate::obs::shard_window(shard);
+                let snapshot = match registry.remove(&id) {
+                    Some(mut session) => {
+                        crate::obs::Gauge::SvcSessions.dec();
+                        if session.flush_durable(wal.as_mut()) {
+                            // the final snapshot scores any open window
+                            crate::obs::shard_window(shard);
+                        }
+                        if let Some(w) = wal.as_mut() {
+                            w.append_close(&id);
+                        }
+                        let snap = session.snapshot();
+                        if closed.len() < MAX_RETAINED_CLOSED {
+                            closed.push(session.into_report());
+                        } else {
+                            closed_reports_dropped += 1;
+                        }
+                        Some(snap)
                     }
-                    let snap = session.snapshot();
-                    if closed.len() < MAX_RETAINED_CLOSED {
-                        closed.push(session.into_report());
-                    } else {
-                        closed_reports_dropped += 1;
-                    }
-                    snap
-                });
+                    None => None,
+                };
                 let _ = reply.send(snapshot);
+            }
+            ShardMsg::Epoch { dir, epoch, reply } => {
+                let _ = reply.send(cut_epoch(&mut registry, &mut wal, &dir, epoch, shard));
             }
         }
         // decrement only after the message is fully processed, so depth
@@ -494,7 +677,7 @@ fn shard_worker(
     let mut reports = closed;
     for mut session in registry.into_sessions() {
         crate::obs::Gauge::SvcSessions.dec();
-        if session.flush() {
+        if session.flush_durable(wal.as_mut()) {
             crate::obs::shard_window(shard);
         }
         if let Some(dir) = &cfg.checkpoint_dir {
@@ -504,7 +687,99 @@ fn shard_worker(
         }
         reports.push(session.into_report());
     }
+    if let Some(w) = wal.as_mut() {
+        w.sync(); // drain-time flush windows must hit stable storage
+    }
     ShardOutcome { reports, dropped, closed_reports_dropped }
+}
+
+/// Execute the epoch barrier on one shard: rotate the WAL so a fresh segment
+/// leads with the EPOCH marker, canonicalize every live session (exactly
+/// what replay does when it meets that marker), then checkpoint each into
+/// the epoch's staging directory and report the cut. Canonicalization runs
+/// to completion over all sessions *before* any fallible checkpoint write,
+/// so a failed cut still leaves the live states consistent with the marker.
+fn cut_epoch(
+    registry: &mut SessionRegistry,
+    wal: &mut Option<WalWriter>,
+    dir: &Path,
+    epoch: u64,
+    shard: usize,
+) -> anyhow::Result<EpochCut> {
+    let next_seq = match wal.as_mut() {
+        Some(w) => w.rotate_epoch(epoch)?,
+        None => anyhow::bail!("shard {shard} has no WAL writer; epoch {epoch} aborted"),
+    };
+    let mut failed: Option<String> = None;
+    for session in registry.sessions_mut() {
+        if !session.canonicalize() && failed.is_none() {
+            failed = Some(session.id().to_string());
+        }
+    }
+    if let Some(id) = failed {
+        anyhow::bail!("canonicalize session {id} at epoch {epoch}");
+    }
+    let mut sessions = Vec::with_capacity(registry.len());
+    for session in registry.sessions_mut() {
+        session.checkpoint_into(dir).map_err(|e| {
+            anyhow::anyhow!("checkpoint session {} at epoch {epoch}: {e:#}", session.id())
+        })?;
+        sessions.push(session.durable_meta(shard));
+    }
+    Ok(EpochCut { shard, next_seq, sessions })
+}
+
+/// Apply one replayed WAL record to a shard's recovered registry, mirroring
+/// the live worker's handling of the message that produced the record.
+/// Returns the number of windows scored (0 or 1) for the recovery report.
+fn replay_record(registry: &mut SessionRegistry, rec: WalRecord, cfg: &ServiceConfig) -> usize {
+    match rec {
+        WalRecord::Open { id, nodes, edges } => {
+            let mut g = Graph::new(nodes);
+            for (i, j, w) in edges {
+                // decoded edges satisfy i < j; an endpoint past `nodes`
+                // would mean a corrupt-but-CRC-valid record, so grow rather
+                // than reach Graph's bounds assert
+                if j as usize >= g.num_nodes() {
+                    g.ensure_nodes(j as usize + 1);
+                }
+                g.set_weight(i, j, w);
+            }
+            // the live Open canonicalized right after insert; building from
+            // the logged graph lands on that same canonical state
+            registry.insert(SessionState::from_finger_state(
+                id,
+                FingerState::with_policy(g, cfg.policy),
+                cfg,
+            ));
+            0
+        }
+        WalRecord::Window { id, window_seq, n_events, delta } => {
+            if !registry.contains(&id) {
+                if !cfg.auto_create_sessions {
+                    return 0; // mirrors the live drop path
+                }
+                registry.insert(SessionState::new(id.clone(), Graph::new(0), cfg));
+            }
+            match registry.get_mut(&id) {
+                Some(session) if session.replay_window(window_seq, n_events, &delta) => 1,
+                _ => 0,
+            }
+        }
+        WalRecord::Close { id } => {
+            registry.remove(&id);
+            0
+        }
+        WalRecord::Epoch { .. } => {
+            // the live server canonicalized every session at exactly this
+            // stream position; reproduce it (idempotent, so a marker replayed
+            // over already-canonical restored states is a no-op)
+            for session in registry.sessions_mut() {
+                session.canonicalize();
+            }
+            0
+        }
+    }
 }
 
 /// Aggregate outcome across all shards and sessions.
@@ -525,6 +800,10 @@ pub struct ServiceReport {
     /// Accepted events per second, aggregated over the whole run.
     pub throughput: f64,
     pub shards: usize,
+    /// Sessions restored by startup recovery (0 for a fresh start).
+    pub restored_sessions: usize,
+    /// WAL windows replayed through the scorer by startup recovery.
+    pub replayed_windows: usize,
 }
 
 impl ServiceReport {
@@ -673,6 +952,143 @@ mod tests {
         assert_eq!(s.records.len(), 2);
         assert_eq!(s.events, 3);
         assert_eq!(report.total_events, 3);
+    }
+
+    use crate::durability::{DurabilityConfig, FsyncPolicy};
+    use std::path::PathBuf;
+
+    fn durable_cfg(tag: &str) -> (ServiceConfig, PathBuf) {
+        let root =
+            std::env::temp_dir().join(format!("finger_engine_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let mut dur = DurabilityConfig::new(&root);
+        dur.fsync = FsyncPolicy::Always;
+        let cfg = ServiceConfig { shards: 2, durability: Some(dur), ..Default::default() };
+        (cfg, root)
+    }
+
+    /// Deterministic two-session load; ends on explicit ticks so no events
+    /// are pending (pending partials are not durable by design).
+    fn feed(svc: &ScoringService, seed: u32, n: u32) {
+        for k in 0..n {
+            let i = (k * 7 + seed) % 6;
+            let j = i + 1 + (k % 3);
+            let id = if k % 2 == 0 { "a" } else { "b" };
+            let dw = 0.1 + f64::from(k % 5) * 0.3;
+            svc.submit(id, StreamEvent::EdgeDelta { i, j, dw }).unwrap();
+            if k % 7 == 6 {
+                svc.submit(id, StreamEvent::Tick).unwrap();
+            }
+        }
+        svc.submit("a", StreamEvent::Tick).unwrap();
+        svc.submit("b", StreamEvent::Tick).unwrap();
+    }
+
+    fn assert_snapshots_bit_identical(got: &SessionSnapshot, want: &SessionSnapshot) {
+        assert_eq!(got.htilde.to_bits(), want.htilde.to_bits(), "{}: htilde bits", got.id);
+        assert_eq!(
+            got.last_jsdist.map(f64::to_bits),
+            want.last_jsdist.map(f64::to_bits),
+            "{}: jsdist bits",
+            got.id
+        );
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn recover_after_simulated_crash_is_bit_identical_to_uninterrupted_run() {
+        let (cfg_ref, root_ref) = durable_cfg("ref");
+        let (cfg_crash, root_crash) = durable_cfg("crash");
+        // identical load on both runs, an epoch cut mid-stream in each; the
+        // crash run is then abandoned without drain (mem::forget: no final
+        // flush, no checkpoint — only the WAL + epoch survive, like kill -9)
+        let run = |cfg: ServiceConfig, crash: bool| -> Vec<SessionSnapshot> {
+            let svc = ScoringService::recover(cfg).unwrap();
+            svc.open_session("a", Graph::new(4)).unwrap();
+            svc.open_session("b", Graph::new(4)).unwrap();
+            feed(&svc, 1, 120);
+            let cut = svc.snapshot_epoch().unwrap();
+            assert_eq!(cut.epoch, 1);
+            assert_eq!(cut.sessions, 2);
+            feed(&svc, 2, 90);
+            let snaps =
+                vec![svc.query("a").unwrap().unwrap(), svc.query("b").unwrap().unwrap()];
+            if crash {
+                std::mem::forget(svc);
+            } else {
+                svc.finish();
+            }
+            snaps
+        };
+        let want = run(cfg_ref, false);
+        let live = run(cfg_crash.clone(), true);
+        for (l, w) in live.iter().zip(&want) {
+            assert_snapshots_bit_identical(l, w); // same inputs, same trajectory
+        }
+
+        let svc = ScoringService::recover(cfg_crash).unwrap();
+        let rep = svc.recovery().clone();
+        assert_eq!(rep.restored_sessions, 2);
+        assert_eq!(rep.epoch, Some(1));
+        assert!(rep.replayed_windows > 0, "post-epoch windows must replay");
+        for want_snap in &want {
+            let got = svc.query(&want_snap.id).unwrap().unwrap();
+            assert_snapshots_bit_identical(&got, want_snap);
+        }
+        let report = svc.finish();
+        assert_eq!(report.restored_sessions, 2);
+        assert_eq!(report.replayed_windows, rep.replayed_windows);
+        std::fs::remove_dir_all(root_ref).ok();
+        std::fs::remove_dir_all(root_crash).ok();
+    }
+
+    #[test]
+    fn recover_replays_wal_without_any_committed_epoch() {
+        let (cfg, root) = durable_cfg("noepoch");
+        let svc = ScoringService::recover(cfg.clone()).unwrap();
+        assert_eq!(svc.recovery(), &RecoveryReport::default());
+        svc.open_session("a", Graph::new(4)).unwrap();
+        // "b" is never opened: exercises the auto-create path on replay too
+        feed(&svc, 3, 60);
+        let want =
+            vec![svc.query("a").unwrap().unwrap(), svc.query("b").unwrap().unwrap()];
+        std::mem::forget(svc);
+
+        let svc = ScoringService::recover(cfg).unwrap();
+        assert_eq!(svc.recovery().epoch, None);
+        assert!(svc.recovery().replayed_windows > 0);
+        for want_snap in &want {
+            let got = svc.query(&want_snap.id).unwrap().unwrap();
+            assert_snapshots_bit_identical(&got, want_snap);
+        }
+        svc.finish();
+        std::fs::remove_dir_all(root).ok();
+    }
+
+    #[test]
+    fn closed_sessions_stay_closed_across_recovery() {
+        let (cfg, root) = durable_cfg("close");
+        let svc = ScoringService::recover(cfg.clone()).unwrap();
+        svc.open_session("a", Graph::new(4)).unwrap();
+        svc.open_session("b", Graph::new(4)).unwrap();
+        feed(&svc, 5, 40);
+        svc.close_session("b").unwrap().expect("b was live");
+        svc.query("a").unwrap().expect("a settles"); // barrier before "crash"
+        std::mem::forget(svc);
+
+        let svc = ScoringService::recover(cfg).unwrap();
+        assert_eq!(svc.recovery().restored_sessions, 1);
+        assert_eq!(svc.query("b").unwrap(), None, "CLOSE must replay");
+        assert!(svc.query("a").unwrap().is_some());
+        svc.finish();
+        std::fs::remove_dir_all(root).ok();
+    }
+
+    #[test]
+    fn snapshot_epoch_requires_durability() {
+        let svc = ScoringService::start(ServiceConfig { shards: 1, ..Default::default() });
+        assert!(svc.snapshot_epoch().is_err());
+        svc.finish();
     }
 
     #[test]

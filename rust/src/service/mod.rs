@@ -62,7 +62,9 @@ pub mod session;
 pub mod workload;
 
 pub use config::ServiceConfig;
-pub use engine::{ScoringService, ServiceReport, SubmitError};
+pub use engine::{
+    EpochSummary, RecoveryReport, ScoringService, ServiceReport, SubmitError,
+};
 pub use registry::{shard_of, SessionRegistry};
 pub use session::{
     decode_session_id, encode_session_id, SessionReport, SessionSnapshot, SessionState,

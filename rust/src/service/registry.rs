@@ -57,6 +57,12 @@ impl SessionRegistry {
         self.sessions.remove(id)
     }
 
+    /// Mutable walk over every live session (the epoch barrier
+    /// canonicalizes and checkpoints each in place).
+    pub fn sessions_mut(&mut self) -> impl Iterator<Item = &mut SessionState> {
+        self.sessions.values_mut()
+    }
+
     /// Drain all sessions (finish path).
     pub fn into_sessions(self) -> impl Iterator<Item = SessionState> {
         self.sessions.into_values()

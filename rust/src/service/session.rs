@@ -3,6 +3,8 @@
 //! plus the per-session report extracted when the service finishes.
 
 use super::config::ServiceConfig;
+use crate::durability::wal::WalWriter;
+use crate::durability::SessionDurableMeta;
 use crate::entropy::FingerState;
 use crate::graph::Graph;
 use crate::stream::window::{AnomalyDetector, ScoreRecord, WindowBatcher, WindowScorer};
@@ -17,6 +19,12 @@ pub struct SessionState {
     scorer: WindowScorer,
     records: Vec<ScoreRecord>,
     events: usize,
+    /// Anomalous windows scored before the epoch this session was restored
+    /// from (those windows' records live only in the crashed process).
+    base_anomalies: usize,
+    /// Last (jsdist, anomalous) carried over from the restore manifest, used
+    /// until this process scores a window of its own.
+    restored_last: Option<(f64, bool)>,
 }
 
 impl SessionState {
@@ -41,7 +49,34 @@ impl SessionState {
             ),
             records: Vec::new(),
             events: 0,
+            base_anomalies: 0,
+            restored_last: None,
         }
+    }
+
+    /// Session resuming at an epoch cut: the checkpointed (canonical)
+    /// `FingerState` plus the manifest's durable metadata — scorer progress,
+    /// the adaptive resync schedule's live position, and detector history
+    /// restored *verbatim*, so the resumed session's future behavior is
+    /// bit-identical to the crashed one's.
+    pub fn from_durable(
+        state: FingerState,
+        meta: &SessionDurableMeta,
+        cfg: &ServiceConfig,
+    ) -> Self {
+        let mut s = Self::from_finger_state(meta.id.clone(), state, cfg);
+        s.scorer.restore_progress(
+            meta.windows as usize,
+            meta.interval,
+            meta.since_resync,
+            meta.resyncs,
+            meta.max_drift,
+        );
+        s.scorer.restore_detector(&meta.trailing, meta.observed);
+        s.events = meta.events;
+        s.base_anomalies = meta.anomalies;
+        s.restored_last = meta.last;
+        s
     }
 
     pub fn id(&self) -> &str {
@@ -55,8 +90,20 @@ impl SessionState {
     /// shard worker can attribute scored windows to its shard in the metrics
     /// registry without re-deriving window boundaries.
     pub fn on_event(&mut self, ev: StreamEvent) -> bool {
+        self.on_event_durable(ev, None)
+    }
+
+    /// [`SessionState::on_event`] with write-ahead logging: when `ev` closes
+    /// a window and a WAL is live, the coalesced delta is appended (and
+    /// fsynced per policy) *before* the window is scored. Still
+    /// allocation-free in steady state — the WAL writer encodes into its own
+    /// reusable buffer.
+    pub fn on_event_durable(&mut self, ev: StreamEvent, wal: Option<&mut WalWriter>) -> bool {
         self.events += 1;
         if let Some((delta, n_events)) = self.batcher.push_ref(ev) {
+            if let Some(w) = wal {
+                w.append_window(&self.id, self.scorer.windows() as u64, n_events, delta);
+            }
             let record = self.scorer.score(delta, n_events);
             self.records.push(record);
             return true;
@@ -67,12 +114,80 @@ impl SessionState {
     /// Score any trailing partial window (stream ended without a tick).
     /// Returns `true` when there was one to score.
     pub fn flush(&mut self) -> bool {
+        self.flush_durable(None)
+    }
+
+    /// [`SessionState::flush`] with write-ahead logging (drain path).
+    pub fn flush_durable(&mut self, wal: Option<&mut WalWriter>) -> bool {
         if let Some((delta, n_events)) = self.batcher.flush_ref() {
+            if let Some(w) = wal {
+                w.append_window(&self.id, self.scorer.windows() as u64, n_events, delta);
+            }
             let record = self.scorer.score(delta, n_events);
             self.records.push(record);
             return true;
         }
         false
+    }
+
+    /// Replay one WAL window record through the normal scoring path.
+    /// Records whose sequence number precedes the scorer's position are
+    /// already covered by the restored snapshot and skipped (the WAL epoch
+    /// segment can overlap the snapshot by design). Returns `true` when the
+    /// window was scored.
+    pub fn replay_window(&mut self, window_seq: u64, n_events: usize, delta: &crate::graph::DeltaGraph) -> bool {
+        if window_seq < self.scorer.windows() as u64 {
+            return false;
+        }
+        self.events += n_events;
+        let record = self.scorer.score(delta, n_events);
+        self.records.push(record);
+        true
+    }
+
+    /// Canonicalize the live state at an epoch barrier: replace the
+    /// incremental `FingerState` with its checkpoint-format roundtrip (the
+    /// exact state a future recovery will rebuild from this epoch's files)
+    /// and re-derive the detector's rolling sums. Idempotent — the
+    /// roundtrip is a projection — so replaying an EPOCH marker over an
+    /// already-canonical state is a no-op. Returns `false` only if the
+    /// in-memory serialization failed (the live state is left untouched).
+    pub fn canonicalize(&mut self) -> bool {
+        let mut buf = Vec::new();
+        if checkpoint::write_state(&mut buf, self.scorer.state()).is_err() {
+            return false;
+        }
+        match checkpoint::read_state(std::io::Cursor::new(&buf), self.scorer.state().policy()) {
+            Ok(state) => {
+                self.scorer.replace_state(state);
+                self.scorer.canonicalize_detector();
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// The durable metadata an epoch manifest records for this session.
+    /// `events` excludes the open window's pending events — partial windows
+    /// are not durable (they are in neither the WAL nor the snapshot), so
+    /// the durable count must not include them either.
+    pub fn durable_meta(&self, shard: usize) -> SessionDurableMeta {
+        let last = self.records.last().map(|r| (r.jsdist, r.anomalous)).or(self.restored_last);
+        SessionDurableMeta {
+            id: self.id.clone(),
+            shard,
+            windows: self.scorer.windows() as u64,
+            events: self.events - self.batcher.pending_events(),
+            anomalies: self.base_anomalies
+                + self.records.iter().filter(|r| r.anomalous).count(),
+            interval: self.scorer.resync_interval(),
+            since_resync: self.scorer.since_resync(),
+            resyncs: self.scorer.resyncs(),
+            max_drift: self.scorer.max_drift(),
+            last,
+            observed: self.scorer.detector().observed(),
+            trailing: self.scorer.detector().trailing_scores().collect(),
+        }
     }
 
     pub fn state(&self) -> &FingerState {
@@ -92,17 +207,18 @@ impl SessionState {
     /// [`crate::service::ScoringService::query`] and the net front end's
     /// `QUERY` verb). Cheap: no scoring work, no graph copies.
     pub fn snapshot(&self) -> SessionSnapshot {
-        let last = self.records.last();
+        let last = self.records.last().map(|r| (r.jsdist, r.anomalous)).or(self.restored_last);
         SessionSnapshot {
             id: self.id.clone(),
-            windows: self.records.len(),
+            windows: self.scorer.windows(),
             events: self.events,
-            last_jsdist: last.map(|r| r.jsdist),
-            last_anomalous: last.map(|r| r.anomalous).unwrap_or(false),
+            last_jsdist: last.map(|(js, _)| js),
+            last_anomalous: last.map(|(_, a)| a).unwrap_or(false),
             htilde: self.scorer.state().htilde(),
             nodes: self.scorer.state().graph().num_nodes(),
             edges: self.scorer.state().graph().num_edges(),
-            anomalies: self.records.iter().filter(|r| r.anomalous).count(),
+            anomalies: self.base_anomalies
+                + self.records.iter().filter(|r| r.anomalous).count(),
             pending_events: self.batcher.pending_events(),
         }
     }

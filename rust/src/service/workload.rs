@@ -11,7 +11,7 @@
 //! traffic shapes the paper evaluates.
 
 use super::config::ServiceConfig;
-use super::engine::{ScoringService, ServiceReport};
+use super::engine::{ScoringService, ServiceReport, SubmitError};
 use crate::datasets::{dos_inject, hic_sequence, oregon_snapshots, wiki_stream};
 use crate::datasets::{HicConfig, OregonConfig, WikiConfig};
 use crate::graph::{DeltaGraph, Graph, GraphSequence};
@@ -209,24 +209,28 @@ pub fn workload_events(workload: &[TenantStream]) -> usize {
 /// producers; each producer interleaves its sessions window by window so all
 /// shards stay busy), then `finish`. When `batched`, each tick-delimited
 /// window goes through `submit_batch` as one message; otherwise events are
-/// submitted one by one.
+/// submitted one by one. A producer failure (a shard worker died) drains
+/// the service and surfaces as an error instead of aborting the process.
 pub fn drive(
     cfg: &ServiceConfig,
     workload: &[TenantStream],
     producers: usize,
     batched: bool,
-) -> ServiceReport {
+) -> anyhow::Result<ServiceReport> {
     let service = ScoringService::start(cfg.clone());
     for (id, initial, _) in workload {
-        service.open_session(id, initial.clone()).expect("open session");
+        service
+            .open_session(id, initial.clone())
+            .map_err(|e| anyhow::anyhow!("open session {id}: {e}"))?;
     }
     let producers = producers.clamp(1, workload.len().max(1));
-    std::thread::scope(|scope| {
+    let failure: Option<String> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(producers);
         for p in 0..producers {
             let service = &service;
             let chunk: Vec<&TenantStream> =
                 workload.iter().skip(p).step_by(producers).collect();
-            scope.spawn(move || {
+            handles.push(scope.spawn(move || -> Result<(), SubmitError> {
                 if batched {
                     // window-major round-robin of per-window batches
                     let windows: Vec<Vec<&[StreamEvent]>> = chunk
@@ -240,10 +244,10 @@ pub fn drive(
                         windows.iter().map(|w| w.len()).max().unwrap_or(0);
                     for w in 0..max_windows {
                         for (k, (id, _, _)) in chunk.iter().enumerate() {
-                            if let Some(win) = windows[k].get(w) {
-                                service
-                                    .submit_batch(id, win.to_vec())
-                                    .expect("submit batch");
+                            if let Some(win) =
+                                windows.get(k).and_then(|ws| ws.get(w))
+                            {
+                                service.submit_batch(id, win.to_vec())?;
                             }
                         }
                     }
@@ -254,15 +258,33 @@ pub fn drive(
                     for t in 0..max_events {
                         for (id, _, evs) in &chunk {
                             if let Some(ev) = evs.get(t) {
-                                service.submit(id, ev.clone()).expect("submit");
+                                service.submit(id, ev.clone())?;
                             }
                         }
                     }
                 }
-            });
+                Ok(())
+            }));
         }
+        let mut first = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first.get_or_insert_with(|| e.to_string());
+                }
+                Err(_) => {
+                    first.get_or_insert_with(|| "producer thread panicked".to_string());
+                }
+            }
+        }
+        first
     });
-    service.finish()
+    if let Some(msg) = failure {
+        drop(service); // senders close; surviving workers exit cleanly
+        anyhow::bail!("workload producer: {msg}");
+    }
+    Ok(service.finish())
 }
 
 #[cfg(test)]
@@ -348,8 +370,8 @@ mod tests {
         };
         let workload = tenant_streams(&wl_cfg);
         let svc_cfg = ServiceConfig { shards: 2, ..Default::default() };
-        let a = drive(&svc_cfg, &workload, 2, false);
-        let b = drive(&svc_cfg, &workload, 3, true);
+        let a = drive(&svc_cfg, &workload, 2, false).unwrap();
+        let b = drive(&svc_cfg, &workload, 3, true).unwrap();
         assert_eq!(a.total_events, workload_events(&workload));
         assert_eq!(a.total_events, b.total_events);
         for (ra, rb) in a.sessions.iter().zip(&b.sessions) {

@@ -8,16 +8,24 @@ use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
+/// Serialize a state checkpoint into any writer (the on-disk format of
+/// [`save`], also used in-memory by the service's epoch canonicalization —
+/// edge weights print in shortest-roundtrip form, so the format is
+/// bit-exact either way).
+pub fn write_state<W: Write>(w: &mut W, state: &FingerState) -> Result<()> {
+    writeln!(w, "finger-checkpoint v1")?;
+    writeln!(w, "steps {}", state.steps())?;
+    writeln!(w, "nodes {}", state.graph().num_nodes())?;
+    crate::graph::io::write_edge_list(state.graph(), w)?;
+    Ok(())
+}
+
 /// Save a state checkpoint.
 pub fn save(state: &FingerState, path: impl AsRef<Path>) -> Result<()> {
     let f = std::fs::File::create(path.as_ref())
         .with_context(|| format!("create {}", path.as_ref().display()))?;
     let mut w = std::io::BufWriter::new(f);
-    writeln!(w, "finger-checkpoint v1")?;
-    writeln!(w, "steps {}", state.steps())?;
-    writeln!(w, "nodes {}", state.graph().num_nodes())?;
-    crate::graph::io::write_edge_list(state.graph(), &mut w)?;
-    Ok(())
+    write_state(&mut w, state)
 }
 
 /// Restore a state checkpoint (default s_max policy).
@@ -32,7 +40,15 @@ pub fn load(path: impl AsRef<Path>) -> Result<FingerState> {
 pub fn load_with_policy(path: impl AsRef<Path>, policy: SmaxPolicy) -> Result<FingerState> {
     let f = std::fs::File::open(path.as_ref())
         .with_context(|| format!("open {}", path.as_ref().display()))?;
-    let mut r = BufReader::new(f);
+    read_state(BufReader::new(f), policy)
+}
+
+/// Parse a checkpoint from any reader, rebuilding the `FingerState` under
+/// `policy`. The state is rebuilt purely from the saved graph (Q/c/s_max are
+/// derived, steps reset), which makes `write ∘ read` a **projection**:
+/// applying the roundtrip twice produces byte-identical output to applying
+/// it once — the idempotence the service's epoch canonicalization rests on.
+pub fn read_state<R: BufRead>(mut r: R, policy: SmaxPolicy) -> Result<FingerState> {
     let mut line = String::new();
     r.read_line(&mut line)?;
     anyhow::ensure!(line.trim() == "finger-checkpoint v1", "bad checkpoint header: {line:?}");
@@ -115,6 +131,36 @@ mod tests {
         }
         assert!((full.htilde() - resumed.htilde()).abs() < 1e-12);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn in_memory_roundtrip_is_idempotent() {
+        // write∘read applied twice == applied once, byte for byte: the
+        // canonicalization idempotence bit-identical recovery rests on
+        let g = crate::generators::erdos_renyi(40, 0.15, &mut Pcg64::new(11));
+        let mut state = FingerState::new(g);
+        let mut rng = Pcg64::new(12);
+        for _ in 0..50 {
+            let mut d = DeltaGraph::new();
+            let i = rng.below(40) as u32;
+            let j = (i + 1 + rng.below(39) as u32) % 40;
+            if i != j {
+                d.add(i, j, rng.uniform(-0.5, 1.0));
+            }
+            state.apply(&d.coalesced());
+        }
+        let roundtrip = |s: &FingerState| -> (Vec<u8>, FingerState) {
+            let mut buf = Vec::new();
+            write_state(&mut buf, s).unwrap();
+            let re = read_state(std::io::Cursor::new(&buf), SmaxPolicy::default()).unwrap();
+            (buf, re)
+        };
+        let (_, canon) = roundtrip(&state);
+        let (bytes_once, canon2) = roundtrip(&canon);
+        let (bytes_twice, _) = roundtrip(&canon2);
+        assert_eq!(bytes_once, bytes_twice, "canonical form must be a fixed point");
+        assert_eq!(canon.q().to_bits(), canon2.q().to_bits());
+        assert_eq!(canon.htilde().to_bits(), canon2.htilde().to_bits());
     }
 
     #[test]

@@ -217,6 +217,38 @@ impl AnomalyDetector {
         self.sum = self.trailing.iter().sum();
         self.sum_sq = self.trailing.iter().map(|x| x * x).sum();
     }
+
+    /// Re-derive the rolling sums from the retained deque *now*. The epoch
+    /// canonicalization calls this on live detectors so their sums match
+    /// what [`AnomalyDetector::restore`] will recompute after a recovery —
+    /// rolling drift would otherwise make marginal decisions diverge.
+    pub fn canonicalize(&mut self) {
+        self.refresh_sums();
+    }
+
+    /// Observations folded in so far.
+    pub fn observed(&self) -> u64 {
+        self.observed
+    }
+
+    /// The retained trailing scores, oldest first.
+    pub fn trailing_scores(&self) -> impl Iterator<Item = f64> + '_ {
+        self.trailing.iter().copied()
+    }
+
+    /// Restore the detector to a checkpointed position: the retained
+    /// trailing scores (oldest first) and the observation count. Sums are
+    /// recomputed two-pass — identical to what [`AnomalyDetector::canonicalize`]
+    /// left on the live side at the matching epoch barrier.
+    pub fn restore(&mut self, trailing: &[f64], observed: u64) {
+        self.trailing.clear();
+        self.trailing.extend(trailing.iter().copied());
+        while self.trailing.len() > self.window {
+            self.trailing.pop_front();
+        }
+        self.observed = observed;
+        self.refresh_sums();
+    }
 }
 
 /// Drift-bounded auto-resync schedule for long-lived streams: resync every
@@ -341,6 +373,14 @@ impl WindowScorer {
         self.state
     }
 
+    /// Swap in a replacement `FingerState` (the epoch canonicalization
+    /// substitutes the checkpoint-roundtripped state for the live one, so
+    /// live-after-barrier and restored-from-checkpoint agree bit for bit).
+    /// Progress counters and the detector are untouched.
+    pub fn replace_state(&mut self, state: FingerState) {
+        self.state = state;
+    }
+
     /// Windows scored so far.
     pub fn windows(&self) -> usize {
         self.window
@@ -354,6 +394,51 @@ impl WindowScorer {
     /// Largest |ΔQ| drift any resync corrected.
     pub fn max_drift(&self) -> f64 {
         self.max_drift
+    }
+
+    /// Current adaptive resync interval (0 when resync is disabled).
+    pub fn resync_interval(&self) -> u64 {
+        self.interval
+    }
+
+    /// Windows since the last resync.
+    pub fn since_resync(&self) -> u64 {
+        self.since_resync
+    }
+
+    /// The online anomaly detector (durable metadata reads its position).
+    pub fn detector(&self) -> &AnomalyDetector {
+        &self.detector
+    }
+
+    /// Re-derive the detector's rolling sums ([`AnomalyDetector::canonicalize`]).
+    pub fn canonicalize_detector(&mut self) {
+        self.detector.canonicalize();
+    }
+
+    /// Restore scorer progress to a checkpointed position: window count, the
+    /// adaptive resync schedule's live interval/phase, and the resync stats.
+    /// Restoring these verbatim (rather than re-deriving) is what keeps the
+    /// post-recovery resync *schedule* — and therefore every future
+    /// drift-correction point — identical to the crashed server's.
+    pub fn restore_progress(
+        &mut self,
+        windows: usize,
+        interval: u64,
+        since_resync: u64,
+        resyncs: u64,
+        max_drift: f64,
+    ) {
+        self.window = windows;
+        self.interval = interval;
+        self.since_resync = since_resync;
+        self.resyncs = resyncs;
+        self.max_drift = max_drift;
+    }
+
+    /// Restore the detector ([`AnomalyDetector::restore`]).
+    pub fn restore_detector(&mut self, trailing: &[f64], observed: u64) {
+        self.detector.restore(trailing, observed);
     }
 }
 

@@ -1,0 +1,280 @@
+//! Durability failover integration: a `finger serve` process is SIGKILLed
+//! mid-load (no drain, no flush — a real crash), restarted on the same
+//! durability directory, and must answer queries bit-for-bit identical to a
+//! reference run that was never interrupted. A second test truncates the
+//! WAL tail at arbitrary byte offsets (torn final write) and asserts
+//! recovery always yields a valid prefix instead of an error.
+
+use finger::durability::{DurabilityConfig, FsyncPolicy};
+use finger::graph::Graph;
+use finger::net::{NetClient, Wire};
+use finger::service::{ScoringService, ServiceConfig, SessionSnapshot};
+use finger::stream::StreamEvent;
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+const NODES: usize = 16;
+const SESSIONS: usize = 4;
+const PRE_CRASH_WINDOWS: usize = 3;
+const TOTAL_WINDOWS: usize = 5;
+
+/// Deterministic tick-terminated window `w` of session `s` — identical on
+/// the wire and in process, positive weights, no self-loops, indices < 16.
+fn window(s: usize, w: usize) -> Vec<StreamEvent> {
+    let mut evs = Vec::with_capacity(7);
+    for k in 0..6u32 {
+        let i = ((w as u32) * 5 + k * 3 + s as u32) % 10;
+        let j = i + 1 + (k % 4);
+        let dw = 0.2 + f64::from((k + w as u32) % 5) * 0.3;
+        evs.push(StreamEvent::EdgeDelta { i, j, dw });
+    }
+    evs.push(StreamEvent::Tick);
+    evs
+}
+
+fn session_ids() -> Vec<String> {
+    (0..SESSIONS).map(|s| format!("tenant-{s}")).collect()
+}
+
+fn durable_cfg(dir: &Path) -> ServiceConfig {
+    let mut dur = DurabilityConfig::new(dir);
+    dur.fsync = FsyncPolicy::Always;
+    ServiceConfig { shards: 2, durability: Some(dur), ..Default::default() }
+}
+
+struct ServerProc {
+    child: std::process::Child,
+    addr: String,
+    startup_line: String,
+}
+
+/// Boot the real binary with durability on an ephemeral port and parse the
+/// startup line (printed only after bind + recovery have finished).
+fn spawn_serve(dir: &Path) -> ServerProc {
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_finger"))
+        .args(["serve", "--addr", "127.0.0.1:0", "--shards", "2", "--threads", "1"])
+        .arg("--durability-dir")
+        .arg(dir)
+        .args(["--fsync", "always"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn finger serve");
+    let stdout = child.stdout.take().expect("child stdout");
+    let mut lines = std::io::BufReader::new(stdout).lines();
+    let startup_line = loop {
+        let line = lines
+            .next()
+            .expect("server exited before printing its startup line")
+            .expect("read startup line");
+        if line.contains("listening on") {
+            break line;
+        }
+    };
+    let addr = startup_line
+        .split("listening on ")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .expect("address in startup line")
+        .trim_end_matches([',', ';'])
+        .to_string();
+    // keep draining stdout so the child never blocks on a full pipe
+    std::thread::spawn(move || for _ in lines {});
+    ServerProc { child, addr, startup_line }
+}
+
+fn connect(addr: &str) -> NetClient {
+    NetClient::connect_with(addr, Wire::Text, Some(Duration::from_secs(30)))
+        .expect("connect to serve")
+}
+
+fn assert_bit_identical(got: &SessionSnapshot, want: &SessionSnapshot, id: &str) {
+    assert_eq!(got.windows, want.windows, "{id}: window count");
+    assert_eq!(got.events, want.events, "{id}: event count");
+    assert_eq!(got.pending_events, 0, "{id}: ticks close every window");
+    assert_eq!(got.nodes, want.nodes, "{id}: nodes");
+    assert_eq!(got.edges, want.edges, "{id}: edges");
+    assert_eq!(got.anomalies, want.anomalies, "{id}: anomaly count");
+    assert_eq!(
+        got.htilde.to_bits(),
+        want.htilde.to_bits(),
+        "{id}: H̃ {} vs {}",
+        got.htilde,
+        want.htilde
+    );
+    match (got.last_jsdist, want.last_jsdist) {
+        (Some(a), Some(b)) => {
+            assert_eq!(a.to_bits(), b.to_bits(), "{id}: jsdist {a} vs {b}")
+        }
+        (None, None) => {}
+        (a, b) => panic!("{id}: jsdist presence mismatch: {a:?} vs {b:?}"),
+    }
+}
+
+#[test]
+fn kill9_mid_load_then_restart_is_bit_identical_to_uninterrupted_run() {
+    let root =
+        std::env::temp_dir().join(format!("finger_recovery_it_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::create_dir_all(&root).expect("create test root");
+    let crashed_dir = root.join("crashed");
+    let reference_dir = root.join("reference");
+    let ids = session_ids();
+
+    // Reference: the same durable load, in process, never interrupted. The
+    // epoch cut lands at the same window boundary as the wire run's EPOCH,
+    // so both runs canonicalize their live states at the same point.
+    let reference = ScoringService::start(durable_cfg(&reference_dir));
+    for id in &ids {
+        reference.open_session(id, Graph::new(NODES)).expect("open reference session");
+    }
+    for w in 0..TOTAL_WINDOWS {
+        for (s, id) in ids.iter().enumerate() {
+            reference.submit_batch(id, window(s, w)).expect("reference batch");
+        }
+        if w == 1 {
+            reference.snapshot_epoch().expect("reference epoch cut");
+        }
+    }
+    let want: Vec<SessionSnapshot> = ids
+        .iter()
+        .map(|id| reference.query(id).expect("reference query").expect("live session"))
+        .collect();
+    reference.finish();
+
+    // Crashed run, part 1: the real server over the wire, killed with
+    // SIGKILL after the settle barrier (a QUERY round-trips through each
+    // shard worker, so every submitted window is scored and — fsync=always —
+    // WAL-appended to stable storage before the kill lands).
+    let mut srv = spawn_serve(&crashed_dir);
+    {
+        let mut client = connect(&srv.addr);
+        for id in &ids {
+            client.open(id, NODES).expect("open session over the wire");
+        }
+        for w in 0..PRE_CRASH_WINDOWS {
+            for (s, id) in ids.iter().enumerate() {
+                client.send_batch(id, &window(s, w)).expect("wire batch");
+            }
+            if w == 1 {
+                let (epoch, sessions) = client.epoch().expect("EPOCH verb");
+                assert_eq!(epoch, 1, "first online cut");
+                assert_eq!(sessions, SESSIONS, "cut covers every session");
+            }
+        }
+        for id in &ids {
+            client.query(id).expect("settle query").expect("live session");
+        }
+    }
+    srv.child.kill().expect("SIGKILL the server");
+    let _ = srv.child.wait();
+
+    // Part 2: restart on the same directory — recovery must restore the
+    // epoch snapshot, replay the WAL tail, and keep scoring as if the crash
+    // never happened.
+    let mut srv2 = spawn_serve(&crashed_dir);
+    assert!(
+        srv2.startup_line.contains(&format!("restored {SESSIONS} sessions")),
+        "startup line must report recovery: {}",
+        srv2.startup_line
+    );
+    let mut client = connect(&srv2.addr);
+    for w in PRE_CRASH_WINDOWS..TOTAL_WINDOWS {
+        for (s, id) in ids.iter().enumerate() {
+            client.send_batch(id, &window(s, w)).expect("post-recovery batch");
+        }
+    }
+    for (s, id) in ids.iter().enumerate() {
+        let got = client.query(id).expect("query recovered").expect("recovered session");
+        assert_bit_identical(&got, &want[s], id);
+    }
+    client.shutdown_server().expect("graceful shutdown");
+    let _ = srv2.child.wait();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+fn copy_dir(src: &Path, dst: &Path) {
+    std::fs::create_dir_all(dst).expect("create copy dir");
+    for entry in std::fs::read_dir(src).expect("read src dir") {
+        let entry = entry.expect("dir entry");
+        let to = dst.join(entry.file_name());
+        if entry.file_type().expect("file type").is_dir() {
+            copy_dir(&entry.path(), &to);
+        } else {
+            std::fs::copy(entry.path(), &to).expect("copy file");
+        }
+    }
+}
+
+#[test]
+fn truncated_wal_tail_always_recovers_a_valid_prefix() {
+    let root =
+        std::env::temp_dir().join(format!("finger_recovery_trunc_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::create_dir_all(&root).expect("create test root");
+    let src = root.join("src");
+
+    // One durable single-shard session, crashed without any drain or cut.
+    let mut cfg = durable_cfg(&src);
+    cfg.shards = 1;
+    let svc = ScoringService::start(cfg);
+    svc.open_session("t", Graph::new(NODES)).expect("open");
+    for w in 0..6 {
+        svc.submit_batch("t", window(0, w)).expect("batch");
+    }
+    let full = svc.query("t").expect("settle query").expect("live session");
+    assert_eq!(full.windows, 6);
+    std::mem::forget(svc); // simulated kill -9: workers leak, nothing flushes
+
+    let wal_dir = src.join("wal");
+    let mut segments: Vec<PathBuf> = std::fs::read_dir(&wal_dir)
+        .expect("wal dir exists")
+        .map(|e| e.expect("dir entry").path())
+        .collect();
+    segments.sort();
+    let last = segments.last().expect("one WAL segment").clone();
+    let bytes = std::fs::read(&last).expect("read segment");
+    assert!(!bytes.is_empty(), "segment holds the session's records");
+
+    // Cut the tail at a spread of offsets (including 0, 1, mid-record cuts
+    // and the full length): recovery must never error, must never score
+    // more than the uninterrupted run, and at full length must match it
+    // bit for bit.
+    let step = (bytes.len() / 10).max(1);
+    let mut cuts: Vec<usize> = (0..bytes.len()).step_by(step).collect();
+    cuts.extend([1, bytes.len().saturating_sub(1), bytes.len()]);
+    for (k, cut) in cuts.into_iter().enumerate() {
+        let dst = root.join(format!("cut-{k}"));
+        copy_dir(&src, &dst);
+        let torn = dst.join("wal").join(last.file_name().expect("segment name"));
+        let prefix = bytes.get(..cut).expect("cut within segment").to_vec();
+        std::fs::write(&torn, prefix).expect("write torn segment");
+
+        let mut cfg = durable_cfg(&dst);
+        cfg.shards = 1;
+        let recovered = ScoringService::recover(cfg)
+            .unwrap_or_else(|e| panic!("cut at {cut}B must recover, got: {e}"));
+        match recovered.query("t").expect("query recovered") {
+            Some(snap) => {
+                assert!(
+                    snap.windows <= full.windows,
+                    "cut at {cut}B replayed {} windows > full {}",
+                    snap.windows,
+                    full.windows
+                );
+                assert_eq!(snap.pending_events, 0, "windows replay whole or not at all");
+                if cut == bytes.len() {
+                    assert_bit_identical(&snap, &full, "untorn tail");
+                }
+            }
+            None => assert!(
+                cut < bytes.len(),
+                "full-length copy must restore the session"
+            ),
+        }
+        recovered.finish();
+        std::fs::remove_dir_all(&dst).ok();
+    }
+    std::fs::remove_dir_all(&root).ok();
+}

@@ -46,7 +46,7 @@ fn no_event_loss_under_capacity_one_channels() {
     let workload_data = small_workload(48, 6);
     let total = workload::workload_events(&workload_data);
     let cfg = ServiceConfig { shards: 3, channel_capacity: 1, ..Default::default() };
-    let report = workload::drive(&cfg, &workload_data, 6, false);
+    let report = workload::drive(&cfg, &workload_data, 6, false).unwrap();
     assert_eq!(report.total_events, total);
     assert_eq!(report.dropped_events, 0);
     assert_eq!(report.sessions.len(), 48);
@@ -62,7 +62,7 @@ fn batched_ingest_loses_nothing_either() {
     let workload_data = small_workload(32, 5);
     let total = workload::workload_events(&workload_data);
     let cfg = ServiceConfig { shards: 4, channel_capacity: 1, ..Default::default() };
-    let report = workload::drive(&cfg, &workload_data, 4, true);
+    let report = workload::drive(&cfg, &workload_data, 4, true).unwrap();
     assert_eq!(report.total_events, total);
     assert_eq!(report.sessions.iter().map(|s| s.events).sum::<usize>(), total);
 }
@@ -73,7 +73,7 @@ fn per_session_scores_match_offline_loop() {
     // scores must equal the direct single-threaded Algorithm-2 loop.
     let workload_data = small_workload(12, 5);
     let cfg = ServiceConfig { shards: 3, ..Default::default() };
-    let report = workload::drive(&cfg, &workload_data, 4, false);
+    let report = workload::drive(&cfg, &workload_data, 4, false).unwrap();
     for (id, initial, events) in &workload_data {
         let session = report.session(id).expect("session scored");
         // replay offline
@@ -140,7 +140,7 @@ fn checkpoint_restore_roundtrip_preserves_htilde_per_session() {
         checkpoint_dir: Some(dir.clone()),
         ..Default::default()
     };
-    let first = workload::drive(&cfg, &workload_data, 2, true);
+    let first = workload::drive(&cfg, &workload_data, 2, true).unwrap();
     assert_eq!(first.sessions.len(), 10);
 
     // restore into a fresh service and finish immediately: states must match
@@ -304,7 +304,7 @@ fn per_session_scores_bit_identical_to_allocating_loop() {
     // `jsdist_incremental` replay bit for bit (not just within tolerance).
     let workload_data = small_workload(10, 6);
     let cfg = ServiceConfig { shards: 4, ..Default::default() };
-    let report = workload::drive(&cfg, &workload_data, 3, false);
+    let report = workload::drive(&cfg, &workload_data, 3, false).unwrap();
     for (id, initial, events) in &workload_data {
         let session = report.session(id).expect("session scored");
         let mut state = FingerState::new(initial.clone());
