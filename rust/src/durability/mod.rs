@@ -59,6 +59,39 @@ impl Default for FsyncPolicy {
     }
 }
 
+/// What the service does when WAL IO fails (a real disk error or an
+/// injected `wal.*` fault): the `[durability] on_error` knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OnError {
+    /// Refuse further mutating commands (`ERR durability-failed`) until an
+    /// epoch cut re-establishes a healthy WAL. Nothing is ever acknowledged
+    /// without the durability it promised. The default.
+    #[default]
+    FailStop,
+    /// Drop the WAL and keep scoring: availability over durability. The
+    /// server flags `durability=degraded` in `STATS` and `METRICS`.
+    Degrade,
+}
+
+impl OnError {
+    /// Parse the `[durability] on_error` value.
+    pub fn parse(spec: &str) -> Option<Self> {
+        match spec.trim() {
+            "fail_stop" => Some(OnError::FailStop),
+            "degrade" => Some(OnError::Degrade),
+            _ => None,
+        }
+    }
+
+    /// Canonical spec string (round-trips through [`OnError::parse`]).
+    pub fn spec(&self) -> &'static str {
+        match self {
+            OnError::FailStop => "fail_stop",
+            OnError::Degrade => "degrade",
+        }
+    }
+}
+
 impl FsyncPolicy {
     /// Parse a policy spec: `always`, `every_ms[=N]` or `every_n[=N]`
     /// (`--fsync` on the CLI, `fsync`/`fsync_ms`/`fsync_windows` in the
@@ -114,6 +147,8 @@ pub struct DurabilityConfig {
     /// Cut an epoch snapshot roughly this often while serving (0 disables
     /// the timer; the `EPOCH` wire verb and drain-time cut still work).
     pub snapshot_interval_ms: u64,
+    /// What WAL IO failure does to the service (`fail_stop` | `degrade`).
+    pub on_error: OnError,
 }
 
 impl DurabilityConfig {
@@ -123,6 +158,7 @@ impl DurabilityConfig {
             fsync: FsyncPolicy::default(),
             segment_bytes: 8 * 1024 * 1024,
             snapshot_interval_ms: 0,
+            on_error: OnError::default(),
         }
     }
 
@@ -200,6 +236,16 @@ mod tests {
         assert_eq!(FsyncPolicy::parse("every_n=0"), Some(FsyncPolicy::EveryNWindows(1)));
         assert_eq!(FsyncPolicy::parse("sometimes"), None);
         assert_eq!(FsyncPolicy::parse("every_ms=x"), None);
+    }
+
+    #[test]
+    fn on_error_specs_roundtrip() {
+        for spec in ["fail_stop", "degrade"] {
+            let p = OnError::parse(spec).expect(spec);
+            assert_eq!(OnError::parse(p.spec()), Some(p));
+        }
+        assert_eq!(OnError::default(), OnError::FailStop);
+        assert_eq!(OnError::parse("panic"), None);
     }
 
     #[test]

@@ -10,11 +10,15 @@
 //! the EPOCH markers reproduce the live server's canonicalization points,
 //! the replayed states are bit-identical to the crashed server's.
 //!
-//! The plan is strict about shard topology: WAL streams are ordered *per
-//! shard*, so replaying them under a different shard count would interleave
-//! a session's windows incorrectly. A mismatch is a hard error with a clear
-//! message (restart with the recorded shard count, or move the directory
-//! aside to start fresh).
+//! The plan is explicit about shard topology: WAL streams are ordered *per
+//! disk shard* (the shard count the state was written under), and the plan
+//! keys its segment lists by that count ([`RecoveryPlan::disk_shards`]). A
+//! service restarting with a *different* shard count replays the same
+//! per-disk-shard streams but routes every record's session through
+//! `shard_of(id, new_shards)` — per-session order is preserved because a
+//! session's whole history lives in exactly one disk stream. The service
+//! commits a fresh epoch immediately after a rebound recovery so the
+//! old-layout segments are pruned before any new-layout WAL traffic lands.
 
 use super::snapshot::{self, EpochManifest};
 use super::{wal, DurabilityConfig};
@@ -28,8 +32,14 @@ pub struct RecoveryPlan {
     pub manifest: Option<EpochManifest>,
     /// Directory of per-session checkpoint files for that epoch.
     pub epoch_dir: Option<PathBuf>,
-    /// Per shard (indexed 0..shards): WAL segments to replay, ascending.
+    /// Per **disk** shard (indexed `0..disk_shards`): WAL segments to
+    /// replay, ascending by sequence.
     pub segments: Vec<Vec<(u64, PathBuf)>>,
+    /// The shard count the on-disk state was written under — the manifest's
+    /// count when an epoch committed, otherwise inferred from the highest
+    /// segment shard index (falling back to the restarting service's own
+    /// count for a fresh or in-range directory).
+    pub disk_shards: usize,
 }
 
 impl RecoveryPlan {
@@ -44,41 +54,30 @@ impl RecoveryPlan {
     }
 }
 
-fn bad(msg: String) -> io::Error {
-    io::Error::new(io::ErrorKind::InvalidData, msg)
-}
-
 /// Build the recovery plan for a service configured with `shards` shards.
+/// The plan's segment lists are keyed by *disk* shard; a `disk_shards !=
+/// shards` plan is a rebind and the caller must route replayed records
+/// through `shard_of(id, shards)` itself.
 pub fn plan(cfg: &DurabilityConfig, shards: usize) -> io::Result<RecoveryPlan> {
     let manifest = match snapshot::read_current(cfg)? {
         Some(epoch) => Some(snapshot::load_manifest(&cfg.epoch_dir(epoch))?),
         None => None,
     };
-    if let Some(m) = &manifest {
-        if m.shards != shards {
-            return Err(bad(format!(
-                "durability state at {} was written by a {}-shard service but this one has \
-                 {shards}; restart with shards={} (or move the directory aside to start fresh)",
-                cfg.dir.display(),
-                m.shards,
-                m.shards,
-            )));
-        }
-    }
+    let scanned = wal::scan_segments(&cfg.wal_dir())?;
+    let max_seen = scanned.iter().map(|&(shard, _, _)| shard + 1).max().unwrap_or(0);
+    // Without a manifest the true disk layout is unknown; segments beyond
+    // the restarting count prove a wider one, otherwise assume the counts
+    // match (a narrower old layout with no committed epoch is
+    // indistinguishable from shards that simply saw no traffic).
+    let disk_shards =
+        manifest.as_ref().map_or_else(|| max_seen.max(shards), |m| m.shards).max(1);
 
-    let mut segments: Vec<Vec<(u64, PathBuf)>> = vec![Vec::new(); shards];
-    for (shard, seq, path) in wal::scan_segments(&cfg.wal_dir())? {
+    let mut segments: Vec<Vec<(u64, PathBuf)>> = vec![Vec::new(); disk_shards];
+    for (shard, seq, path) in scanned {
         let Some(slot) = segments.get_mut(shard) else {
-            if manifest.is_some() {
-                // the manifest's shard count matched, so this segment is a
-                // pre-snapshot leftover prune will collect; skip it
-                continue;
-            }
-            return Err(bad(format!(
-                "WAL at {} has segments for shard {shard} but this service has {shards} \
-                 shards; restart with the original shard count (or move the directory aside)",
-                cfg.wal_dir().display(),
-            )));
+            // a segment beyond the manifest's own shard count is a
+            // pre-snapshot leftover prune will collect; skip it
+            continue;
         };
         let covered = manifest
             .as_ref()
@@ -93,7 +92,7 @@ pub fn plan(cfg: &DurabilityConfig, shards: usize) -> io::Result<RecoveryPlan> {
     }
 
     let epoch_dir = manifest.as_ref().map(|m| cfg.epoch_dir(m.epoch));
-    Ok(RecoveryPlan { manifest, epoch_dir, segments })
+    Ok(RecoveryPlan { manifest, epoch_dir, segments, disk_shards })
 }
 
 #[cfg(test)]
@@ -159,8 +158,11 @@ mod tests {
     }
 
     #[test]
-    fn shard_count_mismatch_is_a_hard_error() {
+    fn shard_count_mismatch_plans_a_rebind() {
         let cfg = scratch("mismatch");
+        for (shard, seq) in [(0usize, 2u64), (1, 2), (1, 3)] {
+            fs::write(cfg.wal_dir().join(wal::segment_name(shard, seq)), b"").unwrap();
+        }
         prepare_epoch_tmp(&cfg, 1).unwrap();
         commit_epoch(
             &cfg,
@@ -171,13 +173,20 @@ mod tests {
             ],
         )
         .unwrap();
-        let err = plan(&cfg, 3).unwrap_err();
-        assert!(err.to_string().contains("2-shard"), "{err}");
+        // the 2-shard directory restarts on 3 shards: segment lists stay
+        // keyed by the recorded disk layout, covered segments still skipped
+        let p = plan(&cfg, 3).unwrap();
+        assert_eq!(p.disk_shards, 2);
+        assert_eq!(p.segments.len(), 2);
+        assert_eq!(p.segments[0].iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(p.segments[1].iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![2, 3]);
 
-        // same without a manifest: a stray high-shard segment must refuse too
+        // without a manifest a high-shard segment widens the inferred layout
         let cfg2 = scratch("mismatch2");
         fs::write(cfg2.wal_dir().join(wal::segment_name(5, 1)), b"").unwrap();
-        assert!(plan(&cfg2, 2).is_err());
+        let p2 = plan(&cfg2, 2).unwrap();
+        assert_eq!(p2.disk_shards, 6);
+        assert_eq!(p2.segments[5].len(), 1);
         teardown(&cfg);
         teardown(&cfg2);
     }

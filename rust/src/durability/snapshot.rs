@@ -310,6 +310,9 @@ pub fn commit_epoch(
 
     let tmp = cfg.epoch_tmp_dir(epoch);
     {
+        if crate::fault::fire(crate::fault::Failpoint::SnapWrite) {
+            return Err(crate::fault::injected_err(crate::fault::Failpoint::SnapWrite));
+        }
         let mut f = File::create(tmp.join("MANIFEST"))?;
         write_manifest(&mut f, &manifest)?;
         f.sync_all()?;
@@ -320,6 +323,9 @@ pub fn commit_epoch(
     let final_dir = cfg.epoch_dir(epoch);
     if final_dir.exists() {
         fs::remove_dir_all(&final_dir)?;
+    }
+    if crate::fault::fire(crate::fault::Failpoint::SnapRename) {
+        return Err(crate::fault::injected_err(crate::fault::Failpoint::SnapRename));
     }
     fs::rename(&tmp, &final_dir)?;
 

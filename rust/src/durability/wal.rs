@@ -42,6 +42,7 @@
 //! of the valid prefix; everything before it is intact by CRC.
 
 use super::{crc32, FsyncPolicy};
+use crate::fault::{self, Failpoint};
 use crate::graph::{DeltaGraph, Graph};
 use crate::obs::Counter;
 use std::fs::{self, File, OpenOptions};
@@ -298,6 +299,9 @@ impl WalWriter {
     }
 
     fn open_segment(&mut self) -> io::Result<()> {
+        if fault::fire(Failpoint::WalRotate) {
+            return Err(fault::injected_err(Failpoint::WalRotate));
+        }
         self.seq += 1;
         let path = self.dir.join(segment_name(self.shard, self.seq));
         let file = OpenOptions::new().create_new(true).write(true).open(path)?;
@@ -327,6 +331,10 @@ impl WalWriter {
     /// Frame `self.buf` as a record and append it; applies the fsync policy
     /// and size-based rotation. `is_window` feeds the every-N-windows policy.
     fn commit_frame(&mut self, is_window: bool) {
+        if self.file.is_some() && fault::fire(Failpoint::WalAppend) {
+            self.latch("append", &fault::injected_err(Failpoint::WalAppend));
+            return;
+        }
         let Some(file) = self.file.as_mut() else { return };
         let body_len = self.buf.len() as u32;
         let crc = crc32(&self.buf);
@@ -363,6 +371,10 @@ impl WalWriter {
 
     /// Flush appended records to stable storage now.
     pub fn sync(&mut self) {
+        if self.file.is_some() && fault::fire(Failpoint::WalFsync) {
+            self.latch("fsync", &fault::injected_err(Failpoint::WalFsync));
+            return;
+        }
         let Some(file) = self.file.as_mut() else { return };
         if let Err(e) = file.sync_data() {
             self.latch("fsync", &e);

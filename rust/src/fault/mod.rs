@@ -1,0 +1,350 @@
+//! Deterministic failpoint registry — first-party fault injection.
+//!
+//! A *failpoint* is a named site on a production code path (WAL append, epoch
+//! rename, socket read, shard submit) that can be armed to fail on a
+//! deterministic schedule. The registry is compiled in only under the
+//! `fault-inject` cargo feature; the default build inlines every
+//! [`fire`] call to `false`, so the injection points cost nothing in
+//! production binaries (pinned by the BENCH trajectory).
+//!
+//! ## Schedules
+//!
+//! Every spec is a pure function of the failpoint's hit counter, so a given
+//! `(spec, workload)` pair fails at exactly the same points on every run —
+//! chaos tests are reproducible bit for bit:
+//!
+//! | spec      | fires                                        |
+//! |-----------|----------------------------------------------|
+//! | `off`     | never (and resets the hit counter)           |
+//! | `once`    | on the next hit only                         |
+//! | `at=N`    | on exactly the Nth hit (1-based)             |
+//! | `every=N` | on every Nth hit                             |
+//! | `after=N` | on every hit past the Nth (persistent: disk-full style) |
+//!
+//! ## Arming
+//!
+//! * Config: a `[fault]` section maps failpoint names to specs
+//!   (`wal.fsync = "at=3"`), applied at server start via
+//!   [`arm_from_config`].
+//! * Wire: the `FAULT <name> <spec>` admin verb (both codecs) arms a point
+//!   on a live server, so integration tests can script fault schedules
+//!   mid-load. On a default build the verb answers `ERR` — see
+//!   `docs/PROTOCOL.md`.
+//!
+//! Names use dots (`wal.append`), specs never contain whitespace, and the
+//! catalogue lives in [`Failpoint::ALL`] (documented in
+//! `docs/ROBUSTNESS.md`).
+
+use std::io;
+
+/// Every injection point compiled into the crate. The name is the wire /
+/// config identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Failpoint {
+    /// WAL record append (`WalWriter::commit_frame` write path).
+    WalAppend,
+    /// WAL fsync (`WalWriter::sync`).
+    WalFsync,
+    /// WAL segment rotation / fresh-segment open.
+    WalRotate,
+    /// Epoch snapshot write path (manifest create/write/fsync).
+    SnapWrite,
+    /// Epoch snapshot atomic rename (staging dir → final dir).
+    SnapRename,
+    /// Server-side socket read (fires as a connection reset).
+    NetRead,
+    /// Server-side socket write (fires as a connection reset).
+    NetWrite,
+    /// Shard queue submit (fires as `WouldBlock` backpressure).
+    ShardSubmit,
+}
+
+impl Failpoint {
+    /// The full catalogue, in stable render order.
+    pub const ALL: [Failpoint; 8] = [
+        Failpoint::WalAppend,
+        Failpoint::WalFsync,
+        Failpoint::WalRotate,
+        Failpoint::SnapWrite,
+        Failpoint::SnapRename,
+        Failpoint::NetRead,
+        Failpoint::NetWrite,
+        Failpoint::ShardSubmit,
+    ];
+
+    /// Wire / config name of this failpoint.
+    pub fn name(self) -> &'static str {
+        match self {
+            Failpoint::WalAppend => "wal.append",
+            Failpoint::WalFsync => "wal.fsync",
+            Failpoint::WalRotate => "wal.rotate",
+            Failpoint::SnapWrite => "snap.write",
+            Failpoint::SnapRename => "snap.rename",
+            Failpoint::NetRead => "net.read",
+            Failpoint::NetWrite => "net.write",
+            Failpoint::ShardSubmit => "shard.submit",
+        }
+    }
+
+    /// Look a failpoint up by its wire / config name.
+    pub fn parse(name: &str) -> Option<Failpoint> {
+        Failpoint::ALL.iter().copied().find(|f| f.name() == name)
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Failpoint::WalAppend => 0,
+            Failpoint::WalFsync => 1,
+            Failpoint::WalRotate => 2,
+            Failpoint::SnapWrite => 3,
+            Failpoint::SnapRename => 4,
+            Failpoint::NetRead => 5,
+            Failpoint::NetWrite => 6,
+            Failpoint::ShardSubmit => 7,
+        }
+    }
+}
+
+/// A deterministic fault schedule (see module docs for the grammar).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSpec {
+    Off,
+    Once,
+    At(u64),
+    Every(u64),
+    After(u64),
+}
+
+impl FaultSpec {
+    /// Parse the wire / config spec grammar: `off | once | at=N | every=N |
+    /// after=N` with `N >= 1`.
+    pub fn parse(s: &str) -> Option<FaultSpec> {
+        match s {
+            "off" => return Some(FaultSpec::Off),
+            "once" => return Some(FaultSpec::Once),
+            _ => {}
+        }
+        let (kind, n) = s.split_once('=')?;
+        let n: u64 = n.parse().ok()?;
+        if n == 0 {
+            return None;
+        }
+        match kind {
+            "at" => Some(FaultSpec::At(n)),
+            "every" => Some(FaultSpec::Every(n)),
+            "after" => Some(FaultSpec::After(n)),
+            _ => None,
+        }
+    }
+
+    /// Render back to the spec grammar (inverse of [`FaultSpec::parse`]).
+    pub fn render(self) -> String {
+        match self {
+            FaultSpec::Off => "off".to_string(),
+            FaultSpec::Once => "once".to_string(),
+            FaultSpec::At(n) => format!("at={n}"),
+            FaultSpec::Every(n) => format!("every={n}"),
+            FaultSpec::After(n) => format!("after={n}"),
+        }
+    }
+}
+
+/// `true` when the crate was built with `--features fault-inject` — the
+/// server's `FAULT` verb reports this to callers.
+pub fn compiled_in() -> bool {
+    cfg!(feature = "fault-inject")
+}
+
+/// The injected failure for `fp`, as an `io::Error` (the shape every
+/// instrumented path already propagates).
+pub fn injected_err(fp: Failpoint) -> io::Error {
+    io::Error::other(format!("injected fault: {}", fp.name()))
+}
+
+/// Evaluate `fp` against its armed schedule and bump its hit counter.
+/// Returns `true` when the site must fail now. Feature-off builds inline
+/// this to `false`.
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn fire(_fp: Failpoint) -> bool {
+    false
+}
+
+/// Arm `fp` with `spec`, resetting its hit counter. Feature-off builds
+/// ignore the call (the wire verb reports `ERR` before reaching here).
+#[cfg(not(feature = "fault-inject"))]
+pub fn set(_fp: Failpoint, _spec: FaultSpec) {}
+
+/// Spec currently armed on `fp`. Always `Off` on feature-off builds.
+#[cfg(not(feature = "fault-inject"))]
+pub fn spec_of(_fp: Failpoint) -> FaultSpec {
+    FaultSpec::Off
+}
+
+#[cfg(feature = "fault-inject")]
+mod registry {
+    use super::{FaultSpec, Failpoint};
+    use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+    const KIND_OFF: u8 = 0;
+    const KIND_ONCE: u8 = 1;
+    const KIND_AT: u8 = 2;
+    const KIND_EVERY: u8 = 3;
+    const KIND_AFTER: u8 = 4;
+
+    struct Cell {
+        kind: AtomicU8,
+        param: AtomicU64,
+        hits: AtomicU64,
+    }
+
+    #[allow(clippy::declare_interior_mutable_const)]
+    const CELL_INIT: Cell =
+        Cell { kind: AtomicU8::new(KIND_OFF), param: AtomicU64::new(0), hits: AtomicU64::new(0) };
+    static CELLS: [Cell; 8] = [CELL_INIT; 8];
+
+    pub fn fire(fp: Failpoint) -> bool {
+        let cell = &CELLS[fp.index()];
+        let kind = cell.kind.load(Ordering::Acquire);
+        if kind == KIND_OFF {
+            return false;
+        }
+        let hit = cell.hits.fetch_add(1, Ordering::AcqRel) + 1;
+        let param = cell.param.load(Ordering::Acquire);
+        let fired = match kind {
+            KIND_ONCE => cell
+                .kind
+                .compare_exchange(KIND_ONCE, KIND_OFF, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok(),
+            KIND_AT => hit == param,
+            KIND_EVERY => param > 0 && hit % param == 0,
+            KIND_AFTER => hit > param,
+            _ => false,
+        };
+        if fired {
+            crate::obs::Counter::FaultInjected.inc();
+        }
+        fired
+    }
+
+    pub fn set(fp: Failpoint, spec: FaultSpec) {
+        let cell = &CELLS[fp.index()];
+        let (kind, param) = match spec {
+            FaultSpec::Off => (KIND_OFF, 0),
+            FaultSpec::Once => (KIND_ONCE, 0),
+            FaultSpec::At(n) => (KIND_AT, n),
+            FaultSpec::Every(n) => (KIND_EVERY, n),
+            FaultSpec::After(n) => (KIND_AFTER, n),
+        };
+        cell.param.store(param, Ordering::Release);
+        cell.hits.store(0, Ordering::Release);
+        cell.kind.store(kind, Ordering::Release);
+    }
+
+    pub fn spec_of(fp: Failpoint) -> FaultSpec {
+        let cell = &CELLS[fp.index()];
+        let param = cell.param.load(Ordering::Acquire);
+        match cell.kind.load(Ordering::Acquire) {
+            KIND_ONCE => FaultSpec::Once,
+            KIND_AT => FaultSpec::At(param),
+            KIND_EVERY => FaultSpec::Every(param),
+            KIND_AFTER => FaultSpec::After(param),
+            _ => FaultSpec::Off,
+        }
+    }
+}
+
+#[cfg(feature = "fault-inject")]
+pub use registry::{fire, set, spec_of};
+
+/// Arm every failpoint named in the `[fault]` config section. Returns the
+/// names armed, or an error naming the first bad key / spec. On feature-off
+/// builds a non-empty `[fault]` section is an error — silently ignoring a
+/// chaos schedule would make a green run meaningless.
+pub fn arm_from_config(cfg: &crate::cli::Config) -> Result<Vec<&'static str>, String> {
+    let mut armed = Vec::new();
+    for fp in Failpoint::ALL {
+        let key = format!("fault.{}", fp.name());
+        let Some(raw) = cfg.get(&key) else { continue };
+        let spec = FaultSpec::parse(raw)
+            .ok_or_else(|| format!("[fault] {}: bad spec {raw:?}", fp.name()))?;
+        if !compiled_in() {
+            return Err(format!(
+                "[fault] {} armed but this build lacks the fault-inject feature",
+                fp.name()
+            ));
+        }
+        set(fp, spec);
+        if spec != FaultSpec::Off {
+            armed.push(fp.name());
+        }
+    }
+    Ok(armed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_grammar_roundtrips() {
+        for (s, want) in [
+            ("off", FaultSpec::Off),
+            ("once", FaultSpec::Once),
+            ("at=3", FaultSpec::At(3)),
+            ("every=10", FaultSpec::Every(10)),
+            ("after=7", FaultSpec::After(7)),
+        ] {
+            assert_eq!(FaultSpec::parse(s), Some(want));
+            assert_eq!(want.render(), s);
+        }
+        for bad in ["", "at=0", "every=", "never", "at=x", "once=1"] {
+            assert_eq!(FaultSpec::parse(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn names_roundtrip_and_cover_the_catalogue() {
+        for fp in Failpoint::ALL {
+            assert_eq!(Failpoint::parse(fp.name()), Some(fp));
+            assert!(!fp.name().contains(char::is_whitespace));
+        }
+        assert_eq!(Failpoint::parse("wal.nope"), None);
+    }
+
+    #[cfg(feature = "fault-inject")]
+    #[test]
+    fn schedules_are_deterministic() {
+        // ShardSubmit is unused by other unit tests, so the global cell is
+        // safe to own here
+        let fp = Failpoint::ShardSubmit;
+        set(fp, FaultSpec::At(3));
+        let hits: Vec<bool> = (0..5).map(|_| fire(fp)).collect();
+        assert_eq!(hits, [false, false, true, false, false]);
+
+        set(fp, FaultSpec::Every(2));
+        let hits: Vec<bool> = (0..6).map(|_| fire(fp)).collect();
+        assert_eq!(hits, [false, true, false, true, false, true]);
+
+        set(fp, FaultSpec::After(2));
+        let hits: Vec<bool> = (0..5).map(|_| fire(fp)).collect();
+        assert_eq!(hits, [false, false, true, true, true]);
+
+        set(fp, FaultSpec::Once);
+        let hits: Vec<bool> = (0..3).map(|_| fire(fp)).collect();
+        assert_eq!(hits, [true, false, false]);
+        assert_eq!(spec_of(fp), FaultSpec::Off, "once disarms itself");
+
+        set(fp, FaultSpec::Off);
+        assert!((0..4).all(|_| !fire(fp)));
+    }
+
+    #[cfg(not(feature = "fault-inject"))]
+    #[test]
+    fn feature_off_is_inert() {
+        set(Failpoint::WalAppend, FaultSpec::Once);
+        assert!(!fire(Failpoint::WalAppend));
+        assert_eq!(spec_of(Failpoint::WalAppend), FaultSpec::Off);
+        assert!(!compiled_in());
+    }
+}

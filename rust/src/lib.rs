@@ -46,6 +46,7 @@ pub mod datasets;
 pub mod distance;
 pub mod durability;
 pub mod entropy;
+pub mod fault;
 pub mod generators;
 pub mod graph;
 pub mod linalg;

@@ -1,4 +1,4 @@
-//! The FL001–FL006 rule set, evaluated over a [`FileModel`]'s code-token
+//! The FL001–FL007 rule set, evaluated over a [`FileModel`]'s code-token
 //! view. Each rule is a token-pattern check — deliberately syntactic (no type
 //! inference), tuned to this repo's invariants with waivers/baseline as the
 //! escape hatch for the boundary cases a lexer cannot judge.
@@ -24,6 +24,7 @@ pub const RULES: &[(&str, &str)] = &[
     ("FL004", "no unbounded mpsc::channel() where sync_channel preserves backpressure"),
     ("FL005", "no `.lock().unwrap()`; use `.lock().expect(\"context\")` or a policy helper"),
     ("FL006", "no blocking I/O calls inside `// lint: event-loop` regions"),
+    ("FL007", "no raw `thread::sleep` in service/ or net/ code; route waits through net/backoff"),
 ];
 
 /// Rust keywords that can legally precede `[` without it being an indexing
@@ -81,6 +82,15 @@ fn in_panic_free_zone(path: &str) -> bool {
         || path.starts_with("rust/src/durability/")
 }
 
+/// True when `path` is inside FL007's no-raw-sleep zone: retry cadences and
+/// interval waits in serving code must route through `net/backoff` so every
+/// wall-clock park is enumerable and chaos-deterministic. `backoff.rs`
+/// itself is the one sanctioned seam.
+fn in_sleep_free_zone(path: &str) -> bool {
+    (path.starts_with("rust/src/service/") || path.starts_with("rust/src/net/"))
+        && !path.ends_with("net/backoff.rs")
+}
+
 /// Whole files that are test/bench-only code: integration tests and benches
 /// are fail-fast by design, so the panic- and channel-hygiene rules skip
 /// them (FL003 still applies — score identity is asserted *in* tests).
@@ -94,11 +104,15 @@ pub fn check_file(model: &FileModel) -> Vec<Finding> {
     let v = model.view();
     let test_file = is_test_file(&model.path);
     let panic_zone = in_panic_free_zone(&model.path);
+    let sleep_zone = in_sleep_free_zone(&model.path);
     let mut out = Vec::new();
     for k in 0..v.len() {
         let in_test = test_file || model.is_test.get(k).copied().unwrap_or(false);
         if panic_zone && !in_test {
             fl001(&v, k, &mut out);
+        }
+        if sleep_zone && !in_test {
+            fl007(&v, k, &mut out);
         }
         if model.in_hot.get(k).copied().unwrap_or(false) {
             fl002(&v, k, &mut out);
@@ -338,6 +352,23 @@ fn fl006(v: &CodeView, k: usize, out: &mut Vec<Finding>) {
     }
 }
 
+fn fl007(v: &CodeView, k: usize, out: &mut Vec<Finding>) {
+    // `thread::sleep(` with any path prefix (std::thread, module alias); the
+    // sanctioned wrappers live in net/backoff.rs, which the zone exempts
+    if v.text(k) == "thread"
+        && v.text(k + 1) == "::"
+        && v.text(k + 2) == "sleep"
+        && v.text(k + 3) == "("
+    {
+        out.push(finding(
+            v,
+            k + 2,
+            "FL007",
+            "raw `thread::sleep` hides a wall-clock wait; use `net::backoff` helpers".to_string(),
+        ));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -449,6 +480,22 @@ mod tests {
                    fn drain(r: &mut dyn Read, b: &mut [u8]) { r.read_exact(b).ok(); }\n";
         let got = findings("rust/src/net/server.rs", src);
         assert_eq!(got, vec![("FL006".to_string(), 4)]);
+    }
+
+    #[test]
+    fn fl007_raw_sleep_in_zone_but_not_backoff_or_tests() {
+        let src = "use std::time::Duration;\n\
+                   fn wait() { std::thread::sleep(Duration::from_millis(5)); }\n\
+                   fn ok() { crate::net::backoff::sleep_ms(5); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { std::thread::sleep(std::time::Duration::ZERO); }\n\
+                   }\n";
+        let got = findings("rust/src/net/server.rs", src);
+        assert_eq!(got, vec![("FL007".to_string(), 2)]);
+        assert_eq!(findings("rust/src/service/engine.rs", src).len(), 1);
+        assert!(findings("rust/src/net/backoff.rs", src).is_empty(), "sanctioned seam");
+        assert!(findings("rust/src/util/timer.rs", src).is_empty(), "outside the zone");
     }
 
     #[test]

@@ -89,8 +89,9 @@ fn print_help() {
                        [--metrics-out snap.json] [--metrics-interval MS]\n\
                        [--durability-dir DIR] [--fsync always|every_ms[=N]|every_n[=N]]\n\
                        [--snapshot-interval MS]\n\
-                       (config sections: [service], [net], [obs], [durability] —\n\
-                       see docs/OBSERVABILITY.md and docs/DURABILITY.md)\n\
+                       (config sections: [service], [net], [obs], [durability],\n\
+                       [fault] — see docs/OBSERVABILITY.md, docs/DURABILITY.md\n\
+                       and docs/ROBUSTNESS.md)\n\
            epoch       [--addr 127.0.0.1:7341] [--wire text|binary] [--config run.toml]\n\
                        (cut one online durability epoch on a running serve)\n\
            load        [--addr 127.0.0.1:7341] [--connections 1,2,4,8]\n\
@@ -98,8 +99,10 @@ fn print_help() {
                        [--events E] [--nodes N] [--timeout-ms T]\n\
                        [--presets wiki,dos,hic,synthetic] [--seed S]\n\
                        [--bench-out BENCH_net.json] [--config run.toml] [--shutdown]\n\
-                       [--live-stats] [--check-metrics]\n\
-                       (reports events/s plus p50/p99 request latency)\n\
+                       [--live-stats] [--check-metrics] [--retry]\n\
+                       [--retry-attempts N]\n\
+                       (reports events/s plus p50/p99 request latency; --retry\n\
+                       drives exactly-once clients that survive faults)\n\
            offload     [--artifacts DIR]\n\
            lint        [--root DIR] [--baseline FILE] [--deny] [--write-baseline]\n\
                        [--config run.toml]   (config section: [lint])"
@@ -399,6 +402,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         dur.snapshot_interval_ms =
             args.get_parsed("snapshot-interval", dur.snapshot_interval_ms);
     }
+    // arm any [fault] failpoint schedule before the server touches disk or
+    // sockets, so recovery itself runs under the schedule; a feature-off
+    // build refuses an armed section rather than silently ignoring it
+    let armed = finger::fault::arm_from_config(&config).map_err(|e| anyhow::anyhow!(e))?;
+    if !armed.is_empty() {
+        println!("serve: fault injection armed: {}", armed.join(", "));
+    }
     let wire_mode = net_cfg.wire;
     let event_threads = net_cfg.event_threads;
     let metrics_out = net_cfg.obs.snapshot_path.clone();
@@ -418,9 +428,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     if let Some(dur) = &service_cfg.durability {
         println!(
-            "serve: durability on at {} (fsync {:?}{})",
+            "serve: durability on at {} (fsync {:?}, on_error {}{})",
             dur.dir.display(),
             dur.fsync,
+            dur.on_error.spec(),
             match rec.epoch {
                 Some(e) => format!(", recovered from epoch {e}"),
                 None => String::new(),
@@ -503,6 +514,10 @@ fn cmd_load(args: &Args) -> Result<()> {
     let timeout_ms = args.get_parsed("timeout-ms", net_cfg.client_timeout_ms);
     let client_timeout =
         (timeout_ms > 0).then(|| std::time::Duration::from_millis(timeout_ms));
+    let retry = args.flag("retry").then(|| finger::net::RetryPolicy {
+        max_attempts: args.get_parsed("retry-attempts", 8u32).max(1),
+        ..Default::default()
+    });
     println!(
         "load: {} sessions ({} presets) × {} windows against {} — \
          connection sweep {:?} on {:?} wire(s)",
@@ -531,6 +546,7 @@ fn cmd_load(args: &Args) -> Result<()> {
                 shutdown_after: false,
                 live_stats: args.flag("live-stats"),
                 check_metrics: args.flag("check-metrics"),
+                retry,
             })?;
             total_windows += report.windows;
             println!(
@@ -552,6 +568,35 @@ fn cmd_load(args: &Args) -> Result<()> {
             }
             if let Some(n) = report.metrics_keys {
                 println!("  (METRICS parity OK across wires: {n} keys)");
+            }
+            // per-kind error accounting: silent under a clean fail-fast run,
+            // one line when anything was refused, reset or retried
+            let errs = &report.errors;
+            if errs.total() > 0 || errs.retries > 0 {
+                let server: Vec<String> = errs
+                    .server_err
+                    .iter()
+                    .map(|(code, n)| format!("{code}×{n}"))
+                    .collect();
+                println!(
+                    "  errors: refused={} timeout={} reset={} other={} server=[{}] retries={}",
+                    errs.connect_refused,
+                    errs.read_timeout,
+                    errs.reset,
+                    errs.other_io,
+                    server.join(","),
+                    errs.retries,
+                );
+                records.push(BenchRecord::metric(
+                    format!("net_errors_{}_conns_{conns}", wire.name()),
+                    errs.total() as f64,
+                    "errors",
+                ));
+                records.push(BenchRecord::metric(
+                    format!("net_retries_{}_conns_{conns}", wire.name()),
+                    errs.retries as f64,
+                    "retries",
+                ));
             }
             records.push(BenchRecord::metric(
                 format!("net_throughput_{}_conns_{conns}", wire.name()),

@@ -1,0 +1,117 @@
+//! The crate's one sanctioned blocking-sleep seam (lint rule FL007).
+//!
+//! Every retry, poll-fallback, and interval wait in service/net code routes
+//! through this module instead of calling `std::thread::sleep` directly.
+//! That buys two things: the waits are *visible* (FL007 bans stray sleeps,
+//! so a reviewer can enumerate every place a thread parks on wall-clock
+//! time), and the retry delays are *deterministic* — [`Backoff`] derives its
+//! jitter from a seeded [`Pcg64`], so a chaos run retries at the same
+//! schedule every time.
+
+use crate::util::Pcg64;
+use std::time::Duration;
+
+/// Sleep for `ms` milliseconds. The FL007-sanctioned primitive.
+pub fn sleep_ms(ms: u64) {
+    sleep(Duration::from_millis(ms));
+}
+
+/// Sleep for `d`. The FL007-sanctioned primitive.
+pub fn sleep(d: Duration) {
+    std::thread::sleep(d);
+}
+
+/// Sleep up to `total`, waking every `step` (≤ 100 ms) to re-check `stop`;
+/// returns early — and reports `true` — the moment `stop()` turns true.
+/// The idiom behind the obs-snapshot and epoch-timer interval loops: a
+/// server shutdown never waits out a multi-second interval.
+pub fn sleep_interruptible(total: Duration, stop: &dyn Fn() -> bool) -> bool {
+    let step_cap = Duration::from_millis(100);
+    let mut slept = Duration::ZERO;
+    while slept < total {
+        if stop() {
+            return true;
+        }
+        let step = (total - slept).min(step_cap);
+        sleep(step);
+        slept += step;
+    }
+    stop()
+}
+
+/// Capped exponential backoff with deterministic full jitter.
+///
+/// Attempt `k` waits a uniform duration in `[base·2ᵏ/2, base·2ᵏ]`, capped at
+/// `cap`. The jitter stream is seeded, so two runs with the same seed (and
+/// the same failure schedule) retry at identical times — chaos tests stay
+/// reproducible.
+#[derive(Debug)]
+pub struct Backoff {
+    base_ms: u64,
+    cap_ms: u64,
+    attempt: u32,
+    rng: Pcg64,
+}
+
+impl Backoff {
+    pub fn new(seed: u64, base_ms: u64, cap_ms: u64) -> Self {
+        Self { base_ms: base_ms.max(1), cap_ms: cap_ms.max(1), attempt: 0, rng: Pcg64::new(seed) }
+    }
+
+    /// Attempts taken since the last [`Backoff::reset`].
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+
+    /// The next delay in the schedule (advances the attempt counter).
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = self.attempt.min(20);
+        self.attempt += 1;
+        let ceiling = self.base_ms.saturating_mul(1u64 << exp).min(self.cap_ms).max(1);
+        let floor = (ceiling / 2).max(1);
+        let ms = floor + self.rng.below((ceiling - floor + 1) as usize) as u64;
+        Duration::from_millis(ms)
+    }
+
+    /// Sleep out the next delay in the schedule.
+    pub fn pause(&mut self) {
+        sleep(self.next_delay());
+    }
+
+    /// Success: the next failure starts the schedule over.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_caps_and_is_deterministic() {
+        let mut a = Backoff::new(7, 10, 200);
+        let mut b = Backoff::new(7, 10, 200);
+        let da: Vec<_> = (0..8).map(|_| a.next_delay().as_millis() as u64).collect();
+        let db: Vec<_> = (0..8).map(|_| b.next_delay().as_millis() as u64).collect();
+        assert_eq!(da, db, "same seed, same schedule");
+        for (k, &ms) in da.iter().enumerate() {
+            let ceiling = (10u64 << k.min(20)).min(200);
+            assert!(ms >= (ceiling / 2).max(1) && ms <= ceiling, "attempt {k}: {ms}ms");
+        }
+        assert!(da[7] <= 200, "cap holds");
+        a.reset();
+        assert_eq!(a.attempt(), 0);
+        assert!(a.next_delay().as_millis() as u64 <= 10);
+    }
+
+    #[test]
+    fn interruptible_sleep_honors_stop() {
+        let t0 = std::time::Instant::now();
+        let stopped = sleep_interruptible(Duration::from_secs(30), &|| true);
+        assert!(stopped);
+        assert!(t0.elapsed() < Duration::from_secs(5), "stop short-circuits");
+        let stopped = sleep_interruptible(Duration::from_millis(1), &|| false);
+        assert!(!stopped);
+    }
+}

@@ -119,13 +119,29 @@ impl NetClient {
 
     /// (Re)open `id` with a fresh `nodes`-node empty graph.
     pub fn open(&mut self, id: &str, nodes: usize) -> Result<()> {
-        self.expect_ok(&Command::Open { id: id.to_string(), nodes })?;
+        self.expect_ok(&Command::Open { id: id.to_string(), nodes, epoch: None })?;
         Ok(())
+    }
+
+    /// Reliable open: pass the client's known session `epoch` (0 for a
+    /// fresh session). Returns `(epoch, acked)` from the server — a matching
+    /// epoch resumes the session without resetting it and `acked` is the
+    /// highest applied sequence number to replay from.
+    pub fn open_reliable(&mut self, id: &str, nodes: usize, epoch: u64) -> Result<(u64, u64)> {
+        let resp = self.expect_ok(&Command::Open {
+            id: id.to_string(),
+            nodes,
+            epoch: Some(epoch),
+        })?;
+        Ok((
+            resp.get_parsed("epoch").context("reliable OPEN reply missing epoch")?,
+            resp.get_parsed("acked").context("reliable OPEN reply missing acked")?,
+        ))
     }
 
     /// Submit one event.
     pub fn send_event(&mut self, id: &str, ev: &StreamEvent) -> Result<()> {
-        self.expect_ok(&Command::Event { id: id.to_string(), ev: ev.clone() })?;
+        self.expect_ok(&Command::Event { id: id.to_string(), ev: ev.clone(), seq: None })?;
         Ok(())
     }
 
@@ -144,6 +160,23 @@ impl NetClient {
             Reply::Err(reason) => bail!("server: {reason}"),
             ok => ok.get_parsed("accepted").context("BATCH reply missing accepted count"),
         }
+    }
+
+    /// Reliable batch: one frame carrying the whole batch plus its
+    /// per-session sequence number. Returns the raw reply — the retry layer
+    /// inspects `accepted` / `acked` / `dup` and server `ERR`s itself.
+    pub fn send_batch_seq(
+        &mut self,
+        id: &str,
+        events: &[StreamEvent],
+        seq: u64,
+    ) -> Result<Reply> {
+        self.wbuf.clear();
+        self.codec
+            .write_batch_seq(&mut self.wbuf, id, events, Some(seq))
+            .context("encode batch")?;
+        self.writer.write_all(&self.wbuf).context("send")?;
+        self.read_reply()
     }
 
     /// Point-in-time stats of `id`; `None` if the server knows no such

@@ -21,7 +21,14 @@
 //! Command opcodes: `0x01 OPEN(id, varint nodes)`, `0x02 EV(id, event)`,
 //! `0x03 BATCH(id, varint k, k×event)`, `0x04 QUERY(id)`, `0x05 CLOSE(id)`,
 //! `0x06 STATS`, `0x07 QUIT`, `0x08 SHUTDOWN`, `0x09 METRICS`,
-//! `0x0A EPOCH`.
+//! `0x0A EPOCH`, `0x0B FAULT(string name, string spec)`,
+//! `0x0C OPEN_E(id, varint nodes, varint epoch)`,
+//! `0x0D EV_S(id, event, varint seq)`,
+//! `0x0E BATCH_S(id, varint k, varint seq, k×event)`.
+//! Frames are not length-prefixed as a whole, so the exactly-once fields
+//! (`docs/ROBUSTNESS.md`) ride on *new opcodes* rather than optional
+//! trailers; the encoder picks the reliable opcode only when the field is
+//! present, keeping every v1 frame byte-identical.
 //! Reply opcodes: `0x80 OK`, `0x81 OKKV(varint n, n×(string,string))`,
 //! `0x82 SNAPSHOT(varint windows, varint events, varint nodes, varint
 //! edges, varint anomalies, varint pending, u8 anomalous, f64 htilde, u8
@@ -65,6 +72,10 @@ const OP_QUIT: u8 = 0x07;
 const OP_SHUTDOWN: u8 = 0x08;
 const OP_METRICS: u8 = 0x09;
 const OP_EPOCH: u8 = 0x0A;
+const OP_FAULT: u8 = 0x0B;
+const OP_OPEN_E: u8 = 0x0C;
+const OP_EV_S: u8 = 0x0D;
+const OP_BATCH_S: u8 = 0x0E;
 
 // Reply opcodes.
 const OP_OK: u8 = 0x80;
@@ -131,6 +142,7 @@ struct BinBatch {
     id: String,
     want: usize,
     got: usize,
+    seq: Option<u64>,
     events: Vec<StreamEvent>,
     bad: Option<(usize, &'static str)>,
 }
@@ -143,17 +155,31 @@ impl BinaryCodec {
     /// Encode one command frame into `out` (exposed for tests and sizing).
     pub fn encode_command(out: &mut Vec<u8>, cmd: &Command) {
         match cmd {
-            Command::Open { id, nodes } => {
+            Command::Open { id, nodes, epoch: None } => {
                 out.push(OP_OPEN);
                 put_string(out, id);
                 put_varint(out, *nodes as u64);
             }
-            Command::Event { id, ev } => {
+            Command::Open { id, nodes, epoch: Some(e) } => {
+                out.push(OP_OPEN_E);
+                put_string(out, id);
+                put_varint(out, *nodes as u64);
+                put_varint(out, *e);
+            }
+            Command::Event { id, ev, seq: None } => {
                 out.push(OP_EV);
                 put_string(out, id);
                 put_event(out, ev);
             }
-            Command::Batch { id, events } => Self::encode_batch(out, id, events),
+            Command::Event { id, ev, seq: Some(n) } => {
+                out.push(OP_EV_S);
+                put_string(out, id);
+                put_event(out, ev);
+                put_varint(out, *n);
+            }
+            Command::Batch { id, events, seq } => {
+                Self::encode_batch_seq(out, id, events, *seq)
+            }
             Command::Query { id } => {
                 out.push(OP_QUERY);
                 put_string(out, id);
@@ -167,14 +193,25 @@ impl BinaryCodec {
             Command::Epoch => out.push(OP_EPOCH),
             Command::Quit => out.push(OP_QUIT),
             Command::Shutdown => out.push(OP_SHUTDOWN),
+            Command::Fault { name, spec } => {
+                out.push(OP_FAULT);
+                put_string(out, name);
+                put_string(out, spec);
+            }
         }
     }
 
-    /// Encode a `BATCH` frame from a borrowed event slice.
-    fn encode_batch(out: &mut Vec<u8>, id: &str, events: &[StreamEvent]) {
-        out.push(OP_BATCH);
+    /// Encode a `BATCH` / `BATCH_S` frame from a borrowed event slice.
+    fn encode_batch_seq(out: &mut Vec<u8>, id: &str, events: &[StreamEvent], seq: Option<u64>) {
+        match seq {
+            None => out.push(OP_BATCH),
+            Some(_) => out.push(OP_BATCH_S),
+        }
         put_string(out, id);
         put_varint(out, events.len() as u64);
+        if let Some(n) = seq {
+            put_varint(out, n);
+        }
         for ev in events {
             put_event(out, ev);
         }
@@ -498,7 +535,11 @@ impl Codec for BinaryCodec {
                     Some((at, reason)) => {
                         Decode::Malformed(format!("batch event {at}: {reason}"))
                     }
-                    None => Decode::Cmd(Command::Batch { id: b.id, events: b.events }),
+                    None => Decode::Cmd(Command::Batch {
+                        id: b.id,
+                        events: b.events,
+                        seq: b.seq,
+                    }),
                 });
             }
             if buf.is_empty() {
@@ -507,26 +548,41 @@ impl Codec for BinaryCodec {
             let mut sr = SliceReader::new(buf.bytes());
             let opcode = need!(sr.u8(), eof);
             let out = match opcode {
-                OP_OPEN => {
+                OP_OPEN | OP_OPEN_E => {
                     let id = need!(sr.string()?, eof);
                     let nodes = need!(sr.varint()?, eof);
+                    let epoch = if opcode == OP_OPEN_E {
+                        Some(need!(sr.varint()?, eof))
+                    } else {
+                        None
+                    };
                     if nodes > MAX_OPEN_NODES as u64 {
                         Decode::Malformed(format!("OPEN: n exceeds maximum {MAX_OPEN_NODES}"))
                     } else {
-                        Decode::Cmd(Command::Open { id, nodes: nodes as usize })
+                        Decode::Cmd(Command::Open { id, nodes: nodes as usize, epoch })
                     }
                 }
-                OP_EV => {
+                OP_EV | OP_EV_S => {
                     let id = need!(sr.string()?, eof);
                     let ev = need!(sr.event()?, eof);
+                    let seq = if opcode == OP_EV_S {
+                        Some(need!(sr.varint()?, eof))
+                    } else {
+                        None
+                    };
                     match validate_wire_event(&ev) {
-                        Ok(()) => Decode::Cmd(Command::Event { id, ev }),
+                        Ok(()) => Decode::Cmd(Command::Event { id, ev, seq }),
                         Err(reason) => Decode::Malformed(format!("EV: {reason}")),
                     }
                 }
-                OP_BATCH => {
+                OP_BATCH | OP_BATCH_S => {
                     let id = need!(sr.string()?, eof);
                     let count = need!(sr.usize_bounded(MAX_BATCH, "BATCH count")?, eof);
+                    let seq = if opcode == OP_BATCH_S {
+                        Some(need!(sr.varint()?, eof))
+                    } else {
+                        None
+                    };
                     buf.consume(sr.pos);
                     // cap the prealloc: the header's count is
                     // attacker-controlled, and a bare `BATCH a 1048576`
@@ -535,10 +591,16 @@ impl Codec for BinaryCodec {
                         id,
                         want: count,
                         got: 0,
+                        seq,
                         events: Vec::with_capacity(count.min(4096)),
                         bad: None,
                     });
                     continue;
+                }
+                OP_FAULT => {
+                    let name = need!(sr.string()?, eof);
+                    let spec = need!(sr.string()?, eof);
+                    Decode::Cmd(Command::Fault { name, spec })
                 }
                 OP_QUERY => Decode::Cmd(Command::Query { id: need!(sr.string()?, eof) }),
                 OP_CLOSE => Decode::Cmd(Command::Close { id: need!(sr.string()?, eof) }),
@@ -566,14 +628,15 @@ impl Codec for BinaryCodec {
         w.write_all(&self.buf)
     }
 
-    fn write_batch(
+    fn write_batch_seq(
         &mut self,
         w: &mut dyn Write,
         id: &str,
         events: &[StreamEvent],
+        seq: Option<u64>,
     ) -> Result<()> {
         self.buf.clear();
-        BinaryCodec::encode_batch(&mut self.buf, id, events);
+        BinaryCodec::encode_batch_seq(&mut self.buf, id, events, seq);
         w.write_all(&self.buf)
     }
 
@@ -684,10 +747,22 @@ mod tests {
     #[test]
     fn commands_roundtrip_exactly() {
         for cmd in [
-            Command::Open { id: "raw id / no escaping % needed".into(), nodes: 1 << 20 },
+            Command::Open {
+                id: "raw id / no escaping % needed".into(),
+                nodes: 1 << 20,
+                epoch: None,
+            },
+            Command::Open { id: "r".into(), nodes: 16, epoch: Some(0) },
+            Command::Open { id: "r".into(), nodes: 16, epoch: Some(u64::MAX) },
             Command::Event {
                 id: "a".into(),
                 ev: StreamEvent::EdgeDelta { i: 3, j: 7, dw: -1.25e300 },
+                seq: None,
+            },
+            Command::Event {
+                id: "a".into(),
+                ev: StreamEvent::EdgeDelta { i: 3, j: 7, dw: -1.25e300 },
+                seq: Some(12),
             },
             Command::Batch {
                 id: "b".into(),
@@ -696,7 +771,14 @@ mod tests {
                     StreamEvent::GrowNodes { count: 5 },
                     StreamEvent::Tick,
                 ],
+                seq: None,
             },
+            Command::Batch {
+                id: "b".into(),
+                events: vec![StreamEvent::Tick, StreamEvent::GrowNodes { count: 1 }],
+                seq: Some(1 << 40),
+            },
+            Command::Fault { name: "snap.rename".into(), spec: "after=2".into() },
             Command::Query { id: String::new() },
             Command::Close { id: "tenant/1".into() },
             Command::Stats,
@@ -707,6 +789,28 @@ mod tests {
         ] {
             assert_eq!(roundtrip_command(&cmd), CommandRead::Cmd(cmd));
         }
+    }
+
+    #[test]
+    fn v1_frames_stay_byte_identical_without_reliability_fields() {
+        let mut buf = Vec::new();
+        BinaryCodec::encode_command(
+            &mut buf,
+            &Command::Open { id: "x".into(), nodes: 4, epoch: None },
+        );
+        assert_eq!(buf, vec![OP_OPEN, 1, b'x', 4]);
+        buf.clear();
+        BinaryCodec::encode_command(
+            &mut buf,
+            &Command::Event { id: "x".into(), ev: StreamEvent::Tick, seq: None },
+        );
+        assert_eq!(buf, vec![OP_EV, 1, b'x', EV_TICK]);
+        buf.clear();
+        BinaryCodec::encode_command(
+            &mut buf,
+            &Command::Batch { id: "x".into(), events: vec![StreamEvent::Tick], seq: None },
+        );
+        assert_eq!(buf, vec![OP_BATCH, 1, b'x', 1, EV_TICK]);
     }
 
     #[test]
@@ -768,6 +872,7 @@ mod tests {
             &Command::Event {
                 id: "a".into(),
                 ev: StreamEvent::EdgeDelta { i: 4, j: 4, dw: 1.0 },
+                seq: None,
             },
         );
         BinaryCodec::encode_command(&mut buf, &Command::Stats);
@@ -793,6 +898,7 @@ mod tests {
                     StreamEvent::EdgeDelta { i: 1, j: 2, dw: f64::NAN },
                     StreamEvent::Tick,
                 ],
+                seq: None,
             },
         );
         BinaryCodec::encode_command(&mut buf, &Command::Quit);
@@ -813,7 +919,7 @@ mod tests {
         let mut buf = Vec::new();
         BinaryCodec::encode_command(
             &mut buf,
-            &Command::Open { id: "a".into(), nodes: MAX_OPEN_NODES + 1 },
+            &Command::Open { id: "a".into(), nodes: MAX_OPEN_NODES + 1, epoch: None },
         );
         assert!(matches!(
             BinaryCodec::new()
@@ -869,7 +975,10 @@ mod tests {
             .collect();
         let want = events.len();
         let mut payload = Vec::new();
-        BinaryCodec::encode_command(&mut payload, &Command::Batch { id: "big".into(), events });
+        BinaryCodec::encode_command(
+            &mut payload,
+            &Command::Batch { id: "big".into(), events, seq: None },
+        );
         let mut codec = BinaryCodec::new();
         let mut buf = ReadBuf::new();
         let mut got = None;
@@ -886,9 +995,10 @@ mod tests {
             }
         }
         match got {
-            Some(Command::Batch { id, events }) => {
+            Some(Command::Batch { id, events, seq }) => {
                 assert_eq!(id, "big");
                 assert_eq!(events.len(), want);
+                assert_eq!(seq, None);
             }
             other => panic!("batch did not decode: {other:?}"),
         }

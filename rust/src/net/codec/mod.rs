@@ -328,6 +328,18 @@ pub trait Codec: Send {
         w: &mut dyn Write,
         id: &str,
         events: &[crate::stream::StreamEvent],
+    ) -> std::io::Result<()> {
+        self.write_batch_seq(w, id, events, None)
+    }
+
+    /// Like [`Codec::write_batch`] with an optional exactly-once sequence
+    /// number; `None` produces the v1 frame byte-for-byte.
+    fn write_batch_seq(
+        &mut self,
+        w: &mut dyn Write,
+        id: &str,
+        events: &[crate::stream::StreamEvent],
+        seq: Option<u64>,
     ) -> std::io::Result<()>;
 
     /// Read one reply frame; `None` on clean EOF. Timeouts (a client read
@@ -596,7 +608,8 @@ mod tests {
     #[test]
     fn byte_at_a_time_decode_matches_blocking_read() {
         let cmds = vec![
-            Command::Open { id: "tenant/1".into(), nodes: 16 },
+            Command::Open { id: "tenant/1".into(), nodes: 16, epoch: None },
+            Command::Open { id: "tenant/2".into(), nodes: 16, epoch: Some(7) },
             Command::Batch {
                 id: "b".into(),
                 events: vec![
@@ -604,7 +617,19 @@ mod tests {
                     crate::stream::StreamEvent::GrowNodes { count: 2 },
                     crate::stream::StreamEvent::Tick,
                 ],
+                seq: None,
             },
+            Command::Batch {
+                id: "b".into(),
+                events: vec![crate::stream::StreamEvent::Tick],
+                seq: Some(3),
+            },
+            Command::Event {
+                id: "b".into(),
+                ev: crate::stream::StreamEvent::EdgeDelta { i: 2, j: 3, dw: -0.25 },
+                seq: Some(4),
+            },
+            Command::Fault { name: "wal.fsync".into(), spec: "every=3".into() },
             Command::Query { id: "tenant/1".into() },
             Command::Stats,
             Command::Metrics,

@@ -46,6 +46,7 @@ struct TextBatch {
     id: String,
     want: usize,
     got: usize,
+    seq: Option<u64>,
     events: Vec<StreamEvent>,
     bad: Option<(usize, &'static str)>,
 }
@@ -60,13 +61,26 @@ impl TextCodec {
     /// that want to speak raw bytes.
     pub fn command_lines(cmd: &Command) -> String {
         let mut out = match cmd {
-            Command::Open { id, nodes } => {
-                format!("OPEN {} {nodes}", encode_session_id(id))
+            // The reliability extensions ride as *trailing marker tokens*
+            // (`epoch=E`, `seq=N`): a `None` emits the v1 line byte-for-byte,
+            // so recorded fixtures and `nc`-style clients are untouched.
+            Command::Open { id, nodes, epoch } => {
+                let mut s = format!("OPEN {} {nodes}", encode_session_id(id));
+                if let Some(e) = epoch {
+                    s.push_str(&format!(" epoch={e}"));
+                }
+                s
             }
-            Command::Event { id, ev } => {
-                format!("EV {} {}", encode_session_id(id), ev.to_line())
+            Command::Event { id, ev, seq } => {
+                let mut s = format!("EV {} {}", encode_session_id(id), ev.to_line());
+                if let Some(n) = seq {
+                    s.push_str(&format!(" seq={n}"));
+                }
+                s
             }
-            Command::Batch { id, events } => return Self::batch_lines(id, events),
+            Command::Batch { id, events, seq } => {
+                return Self::batch_lines_seq(id, events, *seq)
+            }
             Command::Query { id } => format!("QUERY {}", encode_session_id(id)),
             Command::Close { id } => format!("CLOSE {}", encode_session_id(id)),
             Command::Stats => "STATS".to_string(),
@@ -74,14 +88,18 @@ impl TextCodec {
             Command::Epoch => "EPOCH".to_string(),
             Command::Quit => "QUIT".to_string(),
             Command::Shutdown => "SHUTDOWN".to_string(),
+            Command::Fault { name, spec } => format!("FAULT {name} {spec}"),
         };
         out.push('\n');
         out
     }
 
     /// The `BATCH` header plus body lines for a borrowed event slice.
-    fn batch_lines(id: &str, events: &[StreamEvent]) -> String {
+    fn batch_lines_seq(id: &str, events: &[StreamEvent], seq: Option<u64>) -> String {
         let mut s = format!("BATCH {} {}", encode_session_id(id), events.len());
+        if let Some(n) = seq {
+            s.push_str(&format!(" seq={n}"));
+        }
         for ev in events {
             s.push('\n');
             s.push_str(&ev.to_line());
@@ -149,27 +167,53 @@ impl TextCodec {
             "OPEN" => {
                 let id = wire_id(it.next(), verb)?;
                 let nodes = wire_usize(it.next(), verb, "n")?;
+                let epoch = opt_marker(&mut it, "epoch", verb)?;
                 no_more(it, verb)?;
                 if nodes > MAX_OPEN_NODES {
                     return Err(format!("OPEN: n exceeds maximum {MAX_OPEN_NODES}"));
                 }
-                Ok(Parsed::Cmd(Command::Open { id, nodes }))
+                Ok(Parsed::Cmd(Command::Open { id, nodes, epoch }))
             }
             "EV" => {
                 let id = wire_id(it.next(), verb)?;
-                let ev_line: Vec<&str> = it.collect();
+                // the event grammar is variable-arity, so the optional seq
+                // rides as an explicit trailing `seq=N` marker token (event
+                // tokens never contain `=`)
+                let mut ev_line: Vec<&str> = it.collect();
+                let seq = match ev_line.last().and_then(|t| t.strip_prefix("seq=")) {
+                    Some(v) => {
+                        let n =
+                            v.parse().map_err(|_| "EV: invalid seq".to_string())?;
+                        ev_line.pop();
+                        Some(n)
+                    }
+                    None => None,
+                };
                 let ev = parse_wire_event(&ev_line.join(" "))
                     .map_err(|e| format!("EV: {e}"))?;
-                Ok(Parsed::Cmd(Command::Event { id, ev }))
+                Ok(Parsed::Cmd(Command::Event { id, ev, seq }))
             }
             "BATCH" => {
                 let id = wire_id(it.next(), verb)?;
                 let count = wire_usize(it.next(), verb, "k")?;
+                let seq = opt_marker(&mut it, "seq", verb)?;
                 no_more(it, verb)?;
                 if count > MAX_BATCH {
                     return Err(format!("BATCH: k exceeds maximum {MAX_BATCH}"));
                 }
-                Ok(Parsed::BatchHeader { id, count })
+                Ok(Parsed::BatchHeader { id, count, seq })
+            }
+            "FAULT" => {
+                let name = it
+                    .next()
+                    .ok_or_else(|| format!("{verb}: missing <name>"))?
+                    .to_string();
+                let spec = it
+                    .next()
+                    .ok_or_else(|| format!("{verb}: missing <spec>"))?
+                    .to_string();
+                no_more(it, verb)?;
+                Ok(Parsed::Cmd(Command::Fault { name, spec }))
             }
             "QUERY" => {
                 let id = wire_id(it.next(), verb)?;
@@ -195,7 +239,7 @@ impl TextCodec {
 /// whose body lines are still on the wire.
 enum Parsed {
     Cmd(Command),
-    BatchHeader { id: String, count: usize },
+    BatchHeader { id: String, count: usize, seq: Option<u64> },
 }
 
 fn wire_id(token: Option<&str>, verb: &str) -> Result<String, String> {
@@ -214,6 +258,26 @@ fn no_more(mut it: std::str::SplitWhitespace<'_>, verb: &str) -> Result<(), Stri
     match it.next() {
         Some(_) => Err(format!("{verb}: unexpected trailing tokens")),
         None => Ok(()),
+    }
+}
+
+/// Consume an optional trailing `<key>=<u64>` marker token. A token that is
+/// not the marker is a trailing-token error (same as `no_more`), so v1
+/// arity stays strict.
+fn opt_marker(
+    it: &mut std::str::SplitWhitespace<'_>,
+    key: &str,
+    verb: &str,
+) -> Result<Option<u64>, String> {
+    match it.next() {
+        None => Ok(None),
+        Some(tok) => match tok.strip_prefix(key).and_then(|r| r.strip_prefix('=')) {
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("{verb}: invalid <{key}>")),
+            None => Err(format!("{verb}: unexpected trailing tokens")),
+        },
     }
 }
 
@@ -355,7 +419,11 @@ impl Codec for TextCodec {
                     Some((at, reason)) => {
                         Decode::Malformed(format!("batch line {at}: {reason}"))
                     }
-                    None => Decode::Cmd(Command::Batch { id: b.id, events: b.events }),
+                    None => Decode::Cmd(Command::Batch {
+                        id: b.id,
+                        events: b.events,
+                        seq: b.seq,
+                    }),
                 });
             }
             match next_line(&mut self.discard, buf, eof) {
@@ -368,7 +436,7 @@ impl Codec for TextCodec {
                     match TextCodec::parse_request_line(&line) {
                         Err(reason) => return Ok(Decode::Malformed(reason)),
                         Ok(Parsed::Cmd(cmd)) => return Ok(Decode::Cmd(cmd)),
-                        Ok(Parsed::BatchHeader { id, count }) => {
+                        Ok(Parsed::BatchHeader { id, count, seq }) => {
                             // Cap the prealloc: the header's count is
                             // attacker-controlled, and a bare
                             // `BATCH a 1048576` must not pin ~24 MB per
@@ -377,6 +445,7 @@ impl Codec for TextCodec {
                                 id,
                                 want: count,
                                 got: 0,
+                                seq,
                                 events: Vec::with_capacity(count.min(4096)),
                                 bad: None,
                             });
@@ -397,13 +466,14 @@ impl Codec for TextCodec {
         w.write_all(TextCodec::command_lines(cmd).as_bytes())
     }
 
-    fn write_batch(
+    fn write_batch_seq(
         &mut self,
         w: &mut dyn Write,
         id: &str,
         events: &[StreamEvent],
+        seq: Option<u64>,
     ) -> std::io::Result<()> {
-        w.write_all(TextCodec::batch_lines(id, events).as_bytes())
+        w.write_all(TextCodec::batch_lines_seq(id, events, seq).as_bytes())
     }
 
     fn read_reply(&mut self, r: &mut dyn BufRead) -> std::io::Result<Option<Reply>> {
@@ -432,12 +502,25 @@ mod tests {
     #[test]
     fn command_roundtrip_through_the_wire_format() {
         for cmd in [
-            Command::Open { id: "tenant/1 x".to_string(), nodes: 64 },
+            Command::Open { id: "tenant/1 x".to_string(), nodes: 64, epoch: None },
+            Command::Open { id: "r".to_string(), nodes: 8, epoch: Some(0) },
+            Command::Open { id: "r".to_string(), nodes: 8, epoch: Some(42) },
             Command::Event {
                 id: "a".to_string(),
                 ev: StreamEvent::EdgeDelta { i: 3, j: 7, dw: -1.25 },
+                seq: None,
             },
-            Command::Event { id: "a".to_string(), ev: StreamEvent::Tick },
+            Command::Event { id: "a".to_string(), ev: StreamEvent::Tick, seq: None },
+            Command::Event {
+                id: "a".to_string(),
+                ev: StreamEvent::EdgeDelta { i: 3, j: 7, dw: -1.25 },
+                seq: Some(9),
+            },
+            Command::Event {
+                id: "a".to_string(),
+                ev: StreamEvent::GrowNodes { count: 3 },
+                seq: Some(1),
+            },
             Command::Batch {
                 id: "b".to_string(),
                 events: vec![
@@ -445,7 +528,14 @@ mod tests {
                     StreamEvent::GrowNodes { count: 2 },
                     StreamEvent::Tick,
                 ],
+                seq: None,
             },
+            Command::Batch {
+                id: "b".to_string(),
+                events: vec![StreamEvent::Tick],
+                seq: Some(17),
+            },
+            Command::Fault { name: "wal.fsync".to_string(), spec: "at=3".to_string() },
             Command::Query { id: "a".to_string() },
             Command::Close { id: "a b/c".to_string() },
             Command::Stats,
@@ -463,7 +553,11 @@ mod tests {
     fn wire_lines_are_byte_identical_to_the_v1_protocol() {
         // the pre-redesign `Request::to_line` outputs, verbatim
         assert_eq!(
-            TextCodec::command_lines(&Command::Open { id: "a".into(), nodes: 4 }),
+            TextCodec::command_lines(&Command::Open {
+                id: "a".into(),
+                nodes: 4,
+                epoch: None
+            }),
             "OPEN a 4\n"
         );
         // finger-lint: allow(FL003): compares encoded text; the float args are literals
@@ -471,6 +565,7 @@ mod tests {
             TextCodec::command_lines(&Command::Event {
                 id: "tenant/1".into(),
                 ev: StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.5 },
+                seq: None,
             }),
             "EV tenant%2F1 e 0 1 1.5\n"
         );
@@ -478,6 +573,7 @@ mod tests {
             TextCodec::command_lines(&Command::Batch {
                 id: "b".into(),
                 events: vec![StreamEvent::Tick],
+                seq: None,
             }),
             "BATCH b 1\nt\n"
         );
@@ -533,6 +629,15 @@ mod tests {
             "QUIT now\n",
             "OPEN bad%zz 4\n", // invalid id escape
             "EV a e 0 4294967295 0.5\n",
+            "OPEN a 4 epoch=x\n",   // marker value must parse
+            "OPEN a 4 extra=1\n",   // wrong marker key is a trailing token
+            "OPEN a 4 epoch=1 x\n", // nothing may follow the marker
+            "BATCH a 1 seq=\n",
+            "BATCH a 1 seq=1 x\n",
+            "EV a e 0 1 0.5 seq=nope\n",
+            "FAULT\n",
+            "FAULT wal.fsync\n",
+            "FAULT wal.fsync once extra\n",
         ] {
             match read_one(bad.as_bytes()) {
                 CommandRead::Malformed(reason) => {
@@ -549,6 +654,37 @@ mod tests {
             read_one(format!("OPEN a {}\n", MAX_OPEN_NODES + 1).as_bytes()),
             CommandRead::Malformed(_)
         ));
+    }
+
+    #[test]
+    fn reliability_markers_parse_on_all_three_verbs() {
+        assert_eq!(
+            read_one(b"OPEN a 4 epoch=7\n"),
+            CommandRead::Cmd(Command::Open { id: "a".into(), nodes: 4, epoch: Some(7) })
+        );
+        assert_eq!(
+            read_one(b"EV a t seq=3\n"),
+            CommandRead::Cmd(Command::Event {
+                id: "a".into(),
+                ev: StreamEvent::Tick,
+                seq: Some(3),
+            })
+        );
+        assert_eq!(
+            read_one(b"BATCH a 1 seq=5\nt\n"),
+            CommandRead::Cmd(Command::Batch {
+                id: "a".into(),
+                events: vec![StreamEvent::Tick],
+                seq: Some(5),
+            })
+        );
+        assert_eq!(
+            read_one(b"FAULT net.read every=2\n"),
+            CommandRead::Cmd(Command::Fault {
+                name: "net.read".into(),
+                spec: "every=2".into(),
+            })
+        );
     }
 
     #[test]

@@ -39,12 +39,19 @@ pub const DEFAULT_ADDR: &str = "127.0.0.1:7341";
 /// codec's job, so the server never sees partial framing state.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Command {
-    /// (Re)open `id` with a fresh `nodes`-node empty graph.
-    Open { id: String, nodes: usize },
-    /// One stream event for `id`.
-    Event { id: String, ev: StreamEvent },
+    /// (Re)open `id` with a fresh `nodes`-node empty graph. A reliable
+    /// client passes its known session `epoch` (`OPEN <id> <n> epoch=E` /
+    /// binary `OPEN_E`): a matching epoch *resumes* the session (no reset,
+    /// reply carries `acked`), a zero or stale epoch opens fresh and the
+    /// reply carries the new epoch. `None` keeps the v1 semantics.
+    Open { id: String, nodes: usize, epoch: Option<u64> },
+    /// One stream event for `id`. A reliable client numbers it with a
+    /// per-session sequence (`seq=N` / binary `EV_S`) so the server can
+    /// discard duplicates after a retry; `None` keeps v1 semantics.
+    Event { id: String, ev: StreamEvent, seq: Option<u64> },
     /// A batch of events for `id`, submitted as one shard message.
-    Batch { id: String, events: Vec<StreamEvent> },
+    /// `seq` numbers the whole batch as one exactly-once unit.
+    Batch { id: String, events: Vec<StreamEvent>, seq: Option<u64> },
     /// Point-in-time stats of a live session.
     Query { id: String },
     /// Retire session `id`: free its shard state and return the final
@@ -63,6 +70,10 @@ pub enum Command {
     /// Gracefully stop the whole server: drain every shard and produce the
     /// final `ServiceReport`.
     Shutdown,
+    /// Arm (or disarm) a named failpoint: `FAULT <name> <spec>` with spec
+    /// `off | once | at=N | every=N | after=N`. `ERR` unless the server was
+    /// built with the `fault-inject` feature. See `docs/ROBUSTNESS.md`.
+    Fault { name: String, spec: String },
 }
 
 impl Command {
@@ -78,7 +89,8 @@ impl Command {
             | Command::Metrics
             | Command::Epoch
             | Command::Quit
-            | Command::Shutdown => None,
+            | Command::Shutdown
+            | Command::Fault { .. } => None,
         }
     }
 }
@@ -340,6 +352,10 @@ mod tests {
         assert_eq!(Command::Close { id: "b".into() }.session_id(), Some("b"));
         assert_eq!(Command::Stats.session_id(), None);
         assert_eq!(Command::Metrics.session_id(), None);
+        assert_eq!(
+            Command::Fault { name: "wal.fsync".into(), spec: "once".into() }.session_id(),
+            None
+        );
     }
 
     #[test]

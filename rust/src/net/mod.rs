@@ -66,10 +66,12 @@
 //!   connections on either wire and reports end-to-end events/s plus
 //!   per-request latency percentiles.
 
+pub mod backoff;
 pub mod client;
 pub mod codec;
 pub mod command;
 pub mod poll;
+pub mod retry;
 pub mod server;
 pub mod traffic;
 
@@ -82,5 +84,6 @@ pub use command::{
     parse_wire_event, validate_wire_event, Command, Reply, DEFAULT_ADDR, MAX_BATCH,
     MAX_LINE, MAX_OPEN_NODES,
 };
+pub use retry::{ErrKind, ErrorCounts, RetryClient, RetryPolicy};
 pub use server::{NetConfig, NetServer, ShutdownHandle};
-pub use traffic::{replay, run_load, TrafficConfig, TrafficReport};
+pub use traffic::{replay, replay_with, run_load, TrafficConfig, TrafficReport};

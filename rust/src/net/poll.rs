@@ -118,7 +118,7 @@ mod sys {
     /// return `WouldBlock` for the fds that were not actually ready.
     pub fn poll_raw(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
         if timeout_ms != 0 {
-            std::thread::sleep(Duration::from_millis(1));
+            crate::net::backoff::sleep(Duration::from_millis(1));
         }
         let mut ready = 0;
         for f in fds.iter_mut() {

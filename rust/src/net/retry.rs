@@ -1,0 +1,629 @@
+//! Exactly-once retrying client: [`NetClient`] plus reconnect, capped
+//! exponential backoff, and replay-from-last-acked.
+//!
+//! The reliability contract rides on three wire extensions
+//! (`docs/PROTOCOL.md`, `docs/ROBUSTNESS.md`):
+//!
+//! * a reliable `OPEN` carries the client's known session *epoch* and the
+//!   server answers with the authoritative epoch plus `acked`, the highest
+//!   applied sequence number;
+//! * every `EV` / `BATCH` carries a per-session sequence number, applied
+//!   exactly once — the server discards `seq <= acked` as duplicates;
+//! * a saturated shard answers `ERR retry-after <ms>` instead of parking the
+//!   connection forever, and the client honors the hint.
+//!
+//! Together those make a retry loop safe: after any connection failure the
+//! client reconnects, re-`OPEN`s with its stored epoch, learns `acked`, and
+//! either skips the in-flight command (already applied — the ack was lost,
+//! not the write) or resends it (never applied). No window is ever scored
+//! twice and none is silently dropped, which the chaos suite checks
+//! bit-for-bit against an unfaulted reference run.
+//!
+//! Every failure is classified and counted ([`ErrorCounts`]) so the load
+//! driver can report *what* went wrong per kind, not just a total.
+
+use super::backoff::{self, Backoff};
+use super::client::NetClient;
+use super::codec::Wire;
+use super::command::{Command, Reply};
+use crate::service::SessionSnapshot;
+use crate::stream::StreamEvent;
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::time::Duration;
+
+/// Reconnect / backoff knobs for [`RetryClient`] (`finger load --retry`).
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Attempts per logical operation before giving up.
+    pub max_attempts: u32,
+    /// First backoff delay in milliseconds; attempt `k` waits roughly
+    /// `base * 2^k` with jitter.
+    pub base_ms: u64,
+    /// Upper bound on any single backoff delay.
+    pub cap_ms: u64,
+    /// Seed for the deterministic jitter stream.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max_attempts: 8, base_ms: 10, cap_ms: 1_000, seed: 0x5EED }
+    }
+}
+
+/// Coarse failure classification for per-kind error accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrKind {
+    /// TCP connect refused (server down or not yet listening).
+    ConnectRefused,
+    /// Reply read hit the configured deadline.
+    ReadTimeout,
+    /// Connection reset / broken pipe / EOF mid-request.
+    Reset,
+    /// Anything else transport-level.
+    Other,
+}
+
+/// Classify a transport failure by walking the error chain for the
+/// underlying [`std::io::Error`]; falls back to message matching for the
+/// client's own synthesized timeout / EOF errors.
+pub fn classify(err: &anyhow::Error) -> ErrKind {
+    for cause in err.chain() {
+        if let Some(io) = cause.downcast_ref::<std::io::Error>() {
+            use std::io::ErrorKind as K;
+            return match io.kind() {
+                K::ConnectionRefused => ErrKind::ConnectRefused,
+                K::TimedOut | K::WouldBlock => ErrKind::ReadTimeout,
+                K::ConnectionReset
+                | K::ConnectionAborted
+                | K::BrokenPipe
+                | K::UnexpectedEof => ErrKind::Reset,
+                _ => ErrKind::Other,
+            };
+        }
+    }
+    let msg = err.to_string();
+    if msg.contains("timed out") {
+        ErrKind::ReadTimeout
+    } else if msg.contains("closed the connection") {
+        ErrKind::Reset
+    } else {
+        ErrKind::Other
+    }
+}
+
+/// The reason string of a server `ERR` reply, if this error is one (the
+/// blocking client surfaces them as `server: <reason>`).
+fn server_reason(err: &anyhow::Error) -> Option<String> {
+    // Only the root context carries the `server:` prefix; io errors never do.
+    err.to_string().strip_prefix("server: ").map(str::to_string)
+}
+
+/// Per-kind failure counts accumulated by a [`RetryClient`] (and merged
+/// across load-driver workers into the `TrafficReport`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ErrorCounts {
+    /// TCP connects refused.
+    pub connect_refused: usize,
+    /// Reply reads that hit the deadline.
+    pub read_timeout: usize,
+    /// Connections reset / broken mid-request.
+    pub reset: usize,
+    /// Other transport-level failures.
+    pub other_io: usize,
+    /// Server `ERR` replies, keyed by the reason's first token (its "code":
+    /// `retry-after`, `durability-failed`, `unknown-session`, ...).
+    pub server_err: BTreeMap<String, usize>,
+    /// Retry attempts performed (reconnects plus shed waits).
+    pub retries: usize,
+}
+
+impl ErrorCounts {
+    /// Total failures observed (retries not included — they are responses
+    /// to failures, not failures themselves).
+    pub fn total(&self) -> usize {
+        self.connect_refused
+            + self.read_timeout
+            + self.reset
+            + self.other_io
+            + self.server_err.values().sum::<usize>()
+    }
+
+    /// Record one classified transport failure.
+    pub fn record_io(&mut self, kind: ErrKind) {
+        match kind {
+            ErrKind::ConnectRefused => self.connect_refused += 1,
+            ErrKind::ReadTimeout => self.read_timeout += 1,
+            ErrKind::Reset => self.reset += 1,
+            ErrKind::Other => self.other_io += 1,
+        }
+    }
+
+    /// Record one server `ERR` by its code (first token of the reason).
+    pub fn record_server(&mut self, reason: &str) {
+        let code = reason.split_whitespace().next().unwrap_or("empty");
+        *self.server_err.entry(code.to_string()).or_default() += 1;
+    }
+
+    /// Fold another worker's counts into this one.
+    pub fn merge(&mut self, other: &ErrorCounts) {
+        self.connect_refused += other.connect_refused;
+        self.read_timeout += other.read_timeout;
+        self.reset += other.reset;
+        self.other_io += other.other_io;
+        self.retries += other.retries;
+        for (code, n) in &other.server_err {
+            *self.server_err.entry(code.clone()).or_default() += n;
+        }
+    }
+}
+
+/// What the client knows about one reliable session.
+#[derive(Debug, Clone)]
+struct SessionState {
+    nodes: usize,
+    /// Server-assigned session epoch from the last reliable `OPEN`.
+    epoch: u64,
+    /// Next sequence number to assign (last applied + 1).
+    next_seq: u64,
+    /// Connection generation this session was last (re-)opened on.
+    generation: u64,
+}
+
+/// Outcome of one delivery attempt, driving the retry loop.
+enum Attempt {
+    /// Applied (or proven already-applied); carries the accepted count.
+    Done(usize),
+    /// Transport failure — reconnect, re-open, resend-or-skip.
+    Transient(anyhow::Error, ErrKind),
+    /// Server shedding load — wait the hinted milliseconds, resend as-is.
+    RetryAfter(u64),
+    /// Non-retryable (server `ERR`, protocol violation).
+    Fatal(anyhow::Error),
+}
+
+/// A reconnecting, exactly-once wrapper around [`NetClient`].
+///
+/// Sessions must be opened through [`RetryClient::open`]; events and batches
+/// then carry sequence numbers automatically. Any transport failure triggers
+/// reconnect + reliable re-`OPEN` + replay-from-last-acked, bounded by the
+/// policy's `max_attempts` with deterministic jittered backoff.
+pub struct RetryClient {
+    addr: String,
+    wire: Wire,
+    timeout: Option<Duration>,
+    policy: RetryPolicy,
+    backoff: Backoff,
+    client: Option<NetClient>,
+    /// Bumped on every successful (re)connect; sessions lazily re-open when
+    /// their recorded generation falls behind.
+    generation: u64,
+    sessions: HashMap<String, SessionState>,
+    counts: ErrorCounts,
+}
+
+impl RetryClient {
+    /// Connect (retrying per `policy`) to `addr` speaking `wire`.
+    pub fn connect(
+        addr: impl Into<String>,
+        wire: Wire,
+        timeout: Option<Duration>,
+        policy: RetryPolicy,
+    ) -> Result<Self> {
+        let mut me = Self {
+            addr: addr.into(),
+            wire,
+            timeout,
+            policy,
+            backoff: Backoff::new(policy.seed, policy.base_ms, policy.cap_ms),
+            client: None,
+            generation: 0,
+            sessions: HashMap::new(),
+            counts: ErrorCounts::default(),
+        };
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            match me.ensure_conn() {
+                Ok(()) => return Ok(me),
+                Err(e) if attempts >= me.policy.max_attempts => {
+                    return Err(e.context(format!("connect: gave up after {attempts} attempts")));
+                }
+                Err(e) => {
+                    me.counts.record_io(classify(&e));
+                    me.counts.retries += 1;
+                    me.backoff.pause();
+                }
+            }
+        }
+    }
+
+    /// The wire this client speaks.
+    pub fn wire(&self) -> Wire {
+        self.wire
+    }
+
+    /// Failure counts accumulated so far.
+    pub fn counts(&self) -> &ErrorCounts {
+        &self.counts
+    }
+
+    /// Consume the client, yielding its failure counts.
+    pub fn into_counts(self) -> ErrorCounts {
+        self.counts
+    }
+
+    fn ensure_conn(&mut self) -> Result<()> {
+        if self.client.is_some() {
+            return Ok(());
+        }
+        let c = NetClient::connect_with(&self.addr, self.wire, self.timeout)?;
+        self.client = Some(c);
+        self.generation += 1;
+        Ok(())
+    }
+
+    fn drop_conn(&mut self) {
+        self.client = None;
+    }
+
+    /// Reliable open: fresh session, epoch assigned by the server.
+    pub fn open(&mut self, id: &str, nodes: usize) -> Result<()> {
+        self.sessions.remove(id);
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            let r = self.try_open(id, nodes, 0);
+            match r {
+                Ok((epoch, acked)) => {
+                    self.backoff.reset();
+                    self.sessions.insert(
+                        id.to_string(),
+                        SessionState {
+                            nodes,
+                            epoch,
+                            next_seq: acked + 1,
+                            generation: self.generation,
+                        },
+                    );
+                    return Ok(());
+                }
+                Err(e) => {
+                    if let Some(reason) = server_reason(&e) {
+                        self.counts.record_server(&reason);
+                        return Err(e);
+                    }
+                    let kind = classify(&e);
+                    self.counts.record_io(kind);
+                    if attempts >= self.policy.max_attempts {
+                        return Err(e.context(format!(
+                            "open {id:?}: gave up after {attempts} attempts"
+                        )));
+                    }
+                    self.counts.retries += 1;
+                    self.drop_conn();
+                    self.backoff.pause();
+                }
+            }
+        }
+    }
+
+    fn try_open(&mut self, id: &str, nodes: usize, epoch: u64) -> Result<(u64, u64)> {
+        self.ensure_conn()?;
+        let Some(c) = self.client.as_mut() else { bail!("not connected") };
+        c.open_reliable(id, nodes, epoch)
+    }
+
+    /// Re-open a known session after a reconnect, resyncing `next_seq` from
+    /// the server's `acked`. No-op when the session is current.
+    fn ensure_open(&mut self, id: &str) -> Result<()> {
+        let generation = self.generation;
+        let (nodes, epoch) = match self.sessions.get(id) {
+            Some(st) if st.generation == generation => return Ok(()),
+            Some(st) => (st.nodes, st.epoch),
+            None => bail!("session {id:?} was never opened through this client"),
+        };
+        let Some(c) = self.client.as_mut() else { bail!("not connected") };
+        let (new_epoch, acked) = c.open_reliable(id, nodes, epoch)?;
+        if let Some(st) = self.sessions.get_mut(id) {
+            st.generation = generation;
+            if new_epoch == st.epoch {
+                // Resumed: the server still holds our reliable state.
+                st.next_seq = st.next_seq.max(acked + 1);
+            } else {
+                // The server lost the reliable map (restart): it opened a
+                // fresh session under a new epoch. Earlier windows survive
+                // only via the server's own WAL; sequencing restarts.
+                st.epoch = new_epoch;
+                st.next_seq = acked + 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Submit one event exactly once.
+    pub fn send_event(&mut self, id: &str, ev: &StreamEvent) -> Result<()> {
+        self.deliver(id, std::slice::from_ref(ev), true).map(|_| ())
+    }
+
+    /// Submit a whole batch exactly once; returns the accepted event count.
+    pub fn send_batch(&mut self, id: &str, events: &[StreamEvent]) -> Result<usize> {
+        if events.is_empty() {
+            return Ok(0);
+        }
+        self.deliver(id, events, false)
+    }
+
+    /// The exactly-once delivery loop shared by `send_event` / `send_batch`.
+    fn deliver(&mut self, id: &str, events: &[StreamEvent], single: bool) -> Result<usize> {
+        // The sequence number is fixed up front: every resend of this
+        // logical command carries the same seq, which is what lets the
+        // server (or the post-reconnect `acked`) deduplicate it.
+        let seq = match self.sessions.get(id) {
+            Some(st) => st.next_seq,
+            None => bail!("session {id:?} was never opened through this client"),
+        };
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            match self.attempt(id, events, single, seq) {
+                Attempt::Done(n) => {
+                    self.backoff.reset();
+                    if let Some(st) = self.sessions.get_mut(id) {
+                        st.next_seq = st.next_seq.max(seq + 1);
+                    }
+                    return Ok(n);
+                }
+                Attempt::Fatal(e) => return Err(e),
+                Attempt::Transient(e, kind) => {
+                    self.counts.record_io(kind);
+                    if attempts >= self.policy.max_attempts {
+                        return Err(e.context(format!(
+                            "deliver seq {seq} to {id:?}: gave up after {attempts} attempts"
+                        )));
+                    }
+                    self.counts.retries += 1;
+                    self.drop_conn();
+                    self.backoff.pause();
+                }
+                Attempt::RetryAfter(ms) => {
+                    self.counts.record_server("retry-after");
+                    if attempts >= self.policy.max_attempts {
+                        bail!(
+                            "server shedding {id:?} (retry-after {ms}ms): \
+                             gave up after {attempts} attempts"
+                        );
+                    }
+                    self.counts.retries += 1;
+                    backoff::sleep_ms(ms);
+                }
+            }
+        }
+    }
+
+    fn attempt(&mut self, id: &str, events: &[StreamEvent], single: bool, seq: u64) -> Attempt {
+        if let Err(e) = self.ensure_conn() {
+            let k = classify(&e);
+            return Attempt::Transient(e, k);
+        }
+        if let Err(e) = self.ensure_open(id) {
+            if let Some(reason) = server_reason(&e) {
+                self.counts.record_server(&reason);
+                return Attempt::Fatal(e);
+            }
+            let k = classify(&e);
+            return Attempt::Transient(e, k);
+        }
+        // The re-open may have proven this seq already applied (ack lost in
+        // the failure, not the write) — skip the resend entirely.
+        if let Some(st) = self.sessions.get(id) {
+            if st.next_seq > seq {
+                return Attempt::Done(events.len());
+            }
+        }
+        let Some(c) = self.client.as_mut() else {
+            return Attempt::Fatal(anyhow::anyhow!("not connected"));
+        };
+        let sent = if single {
+            match events.first() {
+                Some(ev) => c.roundtrip(&Command::Event {
+                    id: id.to_string(),
+                    ev: ev.clone(),
+                    seq: Some(seq),
+                }),
+                None => return Attempt::Done(0),
+            }
+        } else {
+            c.send_batch_seq(id, events, seq)
+        };
+        match sent {
+            Ok(Reply::Err(reason)) => {
+                if let Some(ms) = reason.strip_prefix("retry-after ") {
+                    let ms = ms
+                        .split_whitespace()
+                        .next()
+                        .and_then(|t| t.parse().ok())
+                        .unwrap_or(self.policy.base_ms);
+                    return Attempt::RetryAfter(ms);
+                }
+                self.counts.record_server(&reason);
+                Attempt::Fatal(anyhow::anyhow!("server: {reason}"))
+            }
+            Ok(reply) => {
+                let dup = reply.get_parsed::<u8>("dup").unwrap_or(0) != 0;
+                let accepted =
+                    reply.get_parsed::<usize>("accepted").unwrap_or(events.len());
+                Attempt::Done(if dup { events.len() } else { accepted })
+            }
+            Err(e) => {
+                let k = classify(&e);
+                Attempt::Transient(e, k)
+            }
+        }
+    }
+
+    /// Point-in-time stats of `id` (idempotent — plain reconnect retry).
+    pub fn query(&mut self, id: &str) -> Result<Option<SessionSnapshot>> {
+        let mut attempts = 0u32;
+        loop {
+            attempts += 1;
+            let r = (|| {
+                self.ensure_conn()?;
+                self.ensure_open(id)?;
+                let Some(c) = self.client.as_mut() else { bail!("not connected") };
+                c.query(id)
+            })();
+            match r {
+                Ok(snap) => {
+                    self.backoff.reset();
+                    return Ok(snap);
+                }
+                Err(e) => {
+                    if let Some(reason) = server_reason(&e) {
+                        self.counts.record_server(&reason);
+                        return Err(e);
+                    }
+                    let kind = classify(&e);
+                    self.counts.record_io(kind);
+                    if attempts >= self.policy.max_attempts {
+                        return Err(e.context(format!(
+                            "query {id:?}: gave up after {attempts} attempts"
+                        )));
+                    }
+                    self.counts.retries += 1;
+                    self.drop_conn();
+                    self.backoff.pause();
+                }
+            }
+        }
+    }
+
+    /// Retire `id`, returning its final snapshot. Safe to retry: a resend
+    /// after a successful-but-unacked close reads `unknown-session`, which
+    /// maps to `Ok(None)` exactly like the plain client.
+    pub fn close(&mut self, id: &str) -> Result<Option<SessionSnapshot>> {
+        let mut attempts = 0u32;
+        let mut retried = false;
+        loop {
+            attempts += 1;
+            let r = (|| {
+                self.ensure_conn()?;
+                self.ensure_open(id)?;
+                let Some(c) = self.client.as_mut() else { bail!("not connected") };
+                c.close(id)
+            })();
+            match r {
+                Ok(snap) => {
+                    self.backoff.reset();
+                    self.sessions.remove(id);
+                    if snap.is_none() && retried {
+                        // The first close landed; only its ack was lost.
+                        return Ok(None);
+                    }
+                    return Ok(snap);
+                }
+                Err(e) => {
+                    if let Some(reason) = server_reason(&e) {
+                        self.counts.record_server(&reason);
+                        return Err(e);
+                    }
+                    let kind = classify(&e);
+                    self.counts.record_io(kind);
+                    if attempts >= self.policy.max_attempts {
+                        return Err(e.context(format!(
+                            "close {id:?}: gave up after {attempts} attempts"
+                        )));
+                    }
+                    self.counts.retries += 1;
+                    retried = true;
+                    self.drop_conn();
+                    self.backoff.pause();
+                }
+            }
+        }
+    }
+
+    /// Close the connection politely; connection errors here are moot.
+    pub fn quit(mut self) -> Result<()> {
+        if let Some(c) = self.client.take() {
+            c.quit().ok();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err(kind: std::io::ErrorKind) -> anyhow::Error {
+        anyhow::Error::new(std::io::Error::new(kind, "boom")).context("send")
+    }
+
+    #[test]
+    fn classify_maps_io_kinds_and_messages() {
+        use std::io::ErrorKind as K;
+        assert_eq!(classify(&io_err(K::ConnectionRefused)), ErrKind::ConnectRefused);
+        assert_eq!(classify(&io_err(K::TimedOut)), ErrKind::ReadTimeout);
+        assert_eq!(classify(&io_err(K::WouldBlock)), ErrKind::ReadTimeout);
+        assert_eq!(classify(&io_err(K::ConnectionReset)), ErrKind::Reset);
+        assert_eq!(classify(&io_err(K::BrokenPipe)), ErrKind::Reset);
+        assert_eq!(classify(&io_err(K::UnexpectedEof)), ErrKind::Reset);
+        assert_eq!(classify(&io_err(K::PermissionDenied)), ErrKind::Other);
+        // the blocking client synthesizes these without an io::Error cause
+        assert_eq!(
+            classify(&anyhow::anyhow!("read timed out after 1s: server unresponsive")),
+            ErrKind::ReadTimeout
+        );
+        assert_eq!(
+            classify(&anyhow::anyhow!("server closed the connection")),
+            ErrKind::Reset
+        );
+        assert_eq!(classify(&anyhow::anyhow!("huh")), ErrKind::Other);
+    }
+
+    #[test]
+    fn server_reasons_are_detected_and_coded() {
+        assert_eq!(
+            server_reason(&anyhow::anyhow!("server: durability-failed wal latched")),
+            Some("durability-failed wal latched".to_string())
+        );
+        assert_eq!(server_reason(&io_err(std::io::ErrorKind::TimedOut)), None);
+
+        let mut c = ErrorCounts::default();
+        c.record_server("durability-failed wal latched");
+        c.record_server("durability-failed again");
+        c.record_server("unknown-session");
+        assert_eq!(c.server_err.get("durability-failed"), Some(&2));
+        assert_eq!(c.server_err.get("unknown-session"), Some(&1));
+        assert_eq!(c.total(), 3);
+    }
+
+    #[test]
+    fn error_counts_merge_and_total() {
+        let mut a = ErrorCounts::default();
+        a.record_io(ErrKind::ConnectRefused);
+        a.record_io(ErrKind::Reset);
+        a.retries = 2;
+        let mut b = ErrorCounts::default();
+        b.record_io(ErrKind::Reset);
+        b.record_io(ErrKind::ReadTimeout);
+        b.record_server("retry-after 50");
+        b.retries = 1;
+        a.merge(&b);
+        assert_eq!(a.connect_refused, 1);
+        assert_eq!(a.reset, 2);
+        assert_eq!(a.read_timeout, 1);
+        assert_eq!(a.retries, 3);
+        assert_eq!(a.server_err.get("retry-after"), Some(&1));
+        assert_eq!(a.total(), 5);
+    }
+
+    #[test]
+    fn default_policy_is_sane() {
+        let p = RetryPolicy::default();
+        assert!(p.max_attempts >= 2);
+        assert!(p.base_ms > 0 && p.cap_ms >= p.base_ms);
+    }
+}

@@ -82,6 +82,11 @@ pub struct NetConfig {
     /// wedged server surfaces as a clean per-connection error instead of
     /// blocking `finger load` forever.
     pub client_timeout_ms: u64,
+    /// Load shedding (milliseconds; 0 disables): a command parked on a
+    /// saturated shard for this long is answered `ERR retry-after <ms>`
+    /// instead of holding its connection parked forever; retrying clients
+    /// honor the hint.
+    pub shed_after_ms: u64,
     /// Observability knobs: the periodic JSON snapshot writer and the
     /// slow-request span ring (`[obs]` section, `finger serve
     /// --metrics-interval/--metrics-out`).
@@ -97,6 +102,7 @@ impl Default for NetConfig {
             event_threads: 2,
             write_timeout_ms: 5000,
             client_timeout_ms: 30_000,
+            shed_after_ms: 0,
             obs: crate::obs::ObsConfig::default(),
         }
     }
@@ -106,8 +112,9 @@ impl NetConfig {
     /// Read the `[net]` and `[obs]` sections of a parsed config file;
     /// missing keys fall back to the defaults. Recognized keys: `addr`,
     /// `wire` (`auto` | `text` | `binary`), `backoff_us`, `event_threads`,
-    /// `write_timeout_ms`, `client_timeout_ms`; `obs.snapshot_path`,
-    /// `obs.interval_ms`, `obs.slow_n`, `obs.sample_every`.
+    /// `write_timeout_ms`, `client_timeout_ms`, `shed_after_ms`;
+    /// `obs.snapshot_path`, `obs.interval_ms`, `obs.slow_n`,
+    /// `obs.sample_every`.
     pub fn from_config(c: &Config) -> Self {
         let d = Self::default();
         let od = crate::obs::ObsConfig::default();
@@ -118,6 +125,7 @@ impl NetConfig {
             event_threads: c.get_or("net.event_threads", d.event_threads).clamp(1, 64),
             write_timeout_ms: c.get_or("net.write_timeout_ms", d.write_timeout_ms).max(1),
             client_timeout_ms: c.get_or("net.client_timeout_ms", d.client_timeout_ms),
+            shed_after_ms: c.get_or("net.shed_after_ms", d.shed_after_ms),
             obs: crate::obs::ObsConfig {
                 snapshot_path: c.get("obs.snapshot_path").map(str::to_string),
                 interval_ms: c.get_or("obs.interval_ms", od.interval_ms).max(1),
@@ -306,12 +314,7 @@ impl NetServer {
             let spawned = std::thread::Builder::new()
                 .name("finger-obs".to_string())
                 .spawn(move || loop {
-                    let mut slept = Duration::ZERO;
-                    while slept < interval && !shutdown.is_signaled() {
-                        let step = (interval - slept).min(Duration::from_millis(100));
-                        std::thread::sleep(step);
-                        slept += step;
-                    }
+                    super::backoff::sleep_interruptible(interval, &|| shutdown.is_signaled());
                     let extras = service_extras(&service);
                     if let Err(e) = crate::obs::write_snapshot(&path, &extras) {
                         eprintln!("net: metrics snapshot {}: {e}", path.display());
@@ -338,13 +341,8 @@ impl NetServer {
             let spawned = std::thread::Builder::new()
                 .name("finger-epoch".to_string())
                 .spawn(move || loop {
-                    let mut slept = Duration::ZERO;
-                    while slept < interval && !shutdown.is_signaled() {
-                        let step = (interval - slept).min(Duration::from_millis(100));
-                        std::thread::sleep(step);
-                        slept += step;
-                    }
-                    if shutdown.is_signaled() {
+                    if super::backoff::sleep_interruptible(interval, &|| shutdown.is_signaled())
+                    {
                         return;
                     }
                     if let Err(e) = service.snapshot_epoch() {
@@ -432,6 +430,7 @@ fn stats_reply(service: &ScoringService) -> Reply {
             "connections".to_string(),
             crate::obs::Gauge::NetConnections.get().to_string(),
         ),
+        ("durability".to_string(), service.durability_status().to_string()),
     ])
 }
 
@@ -446,6 +445,14 @@ fn service_extras(service: &ScoringService) -> Vec<(String, u64)> {
             service.events_submitted() as u64,
         ),
         ("uptime_ms".to_string(), service.uptime_ms()),
+        (
+            "durability_degraded".to_string(),
+            u64::from(service.durability_health() == crate::service::DUR_DEGRADED),
+        ),
+        (
+            "durability_failed".to_string(),
+            u64::from(service.durability_health() == crate::service::DUR_FAILED),
+        ),
     ];
     for (i, d) in service.queue_depths().iter().enumerate() {
         extra.push((format!("shard{i}_depth"), *d as u64));
@@ -462,8 +469,12 @@ fn metrics_reply(service: &ScoringService) -> Reply {
 /// connection reads nothing — service backpressure propagates to the
 /// socket, and the attempt re-runs on the `backoff_us` poll cadence.
 enum Pending {
-    Open { id: String, state: Box<FingerState> },
-    Batch { id: String, events: Vec<StreamEvent>, single: bool },
+    /// `reliable` carries the `(epoch, acked)` pair a reliable OPEN must
+    /// answer with once the service accepts the session.
+    Open { id: String, state: Box<FingerState>, reliable: Option<(u64, u64)> },
+    /// `seq` is the client sequence number to acknowledge once the batch is
+    /// accepted (exactly-once writes; `None` for plain fire-and-forget).
+    Batch { id: String, events: Vec<StreamEvent>, single: bool, seq: Option<u64> },
     Query { id: String },
     Close { id: String },
 }
@@ -507,22 +518,36 @@ fn span_src(
 /// or state and the path has no panic site.
 fn attempt(service: &ScoringService, p: Pending) -> Attempt {
     match p {
-        Pending::Open { id, state } => match service.try_open_session_state(&id, *state) {
-            Ok(()) => Attempt::Done(Reply::Ok),
-            Err((back, SubmitError::WouldBlock { .. })) => {
-                Attempt::Blocked(Pending::Open { id, state: Box::new(back) })
-            }
-            Err((_, e)) => Attempt::Done(Reply::Err(e.to_string())),
-        },
-        Pending::Batch { id, events, single } => {
-            match service.try_submit_batch(&id, events) {
-                Ok(n) => Attempt::Done(if single {
-                    Reply::Ok
-                } else {
-                    Reply::kv("accepted", n)
+        Pending::Open { id, state, reliable } => {
+            match service.try_open_session_state(&id, *state) {
+                Ok(()) => Attempt::Done(match reliable {
+                    Some((epoch, acked)) => Reply::OkKv(vec![
+                        ("epoch".to_string(), epoch.to_string()),
+                        ("acked".to_string(), acked.to_string()),
+                    ]),
+                    None => Reply::Ok,
                 }),
                 Err((back, SubmitError::WouldBlock { .. })) => {
-                    Attempt::Blocked(Pending::Batch { id, events: back, single })
+                    Attempt::Blocked(Pending::Open { id, state: Box::new(back), reliable })
+                }
+                Err((_, e)) => Attempt::Done(Reply::Err(e.to_string())),
+            }
+        }
+        Pending::Batch { id, events, single, seq } => {
+            match service.try_submit_batch(&id, events) {
+                Ok(n) => Attempt::Done(match seq {
+                    Some(s) => {
+                        service.reliable_ack(&id, s);
+                        Reply::OkKv(vec![
+                            ("accepted".to_string(), n.to_string()),
+                            ("acked".to_string(), s.to_string()),
+                        ])
+                    }
+                    None if single => Reply::Ok,
+                    None => Reply::kv("accepted", n),
+                }),
+                Err((back, SubmitError::WouldBlock { .. })) => {
+                    Attempt::Blocked(Pending::Batch { id, events: back, single, seq })
                 }
                 Err((_, e)) => Attempt::Done(Reply::Err(e.to_string())),
             }
@@ -621,6 +646,10 @@ impl Conn {
     /// call: leftovers re-report readiness on the next poll, so one greedy
     /// peer cannot starve the rest of the set).
     fn fill(&mut self) {
+        if crate::fault::fire(crate::fault::Failpoint::NetRead) {
+            self.dead = true; // injected connection reset
+            return;
+        }
         let mut r: &TcpStream = &self.stream;
         for _ in 0..4 {
             match self.rbuf.fill_from(&mut r, READ_CHUNK) {
@@ -643,6 +672,10 @@ impl Conn {
     /// stall clock; no progress for `deadline` drops the connection instead
     /// of letting an unread reply wedge a drain.
     fn flush(&mut self, deadline: Duration) {
+        if crate::fault::fire(crate::fault::Failpoint::NetWrite) {
+            self.dead = true; // injected connection reset
+            return;
+        }
         let mut w: &TcpStream = &self.stream;
         while self.wpos < self.wbuf.len() {
             let chunk = self.wbuf.get(self.wpos..).unwrap_or(&[]);
@@ -685,23 +718,49 @@ fn dispatch_cmd(
     cmd: Command,
 ) {
     match cmd {
-        Command::Open { id, nodes } => {
+        Command::Open { id, nodes, epoch } => {
+            if let Some(r) = durability_gate(service) {
+                conn.reply(&r);
+                return;
+            }
+            let reliable = match epoch {
+                None => {
+                    // a plain OPEN resets any reliable-session bookkeeping:
+                    // the client opted out of exactly-once semantics
+                    service.reliable_forget(&id);
+                    None
+                }
+                Some(client_epoch) => {
+                    if let Some((epoch, acked)) = service.reliable_resume(&id, client_epoch) {
+                        // same epoch, session already live: a reconnect, not
+                        // a re-open — answer the resume point immediately
+                        conn.reply(&Reply::OkKv(vec![
+                            ("epoch".to_string(), epoch.to_string()),
+                            ("acked".to_string(), acked.to_string()),
+                        ]));
+                        return;
+                    }
+                    Some((service.reliable_begin(&id), 0))
+                }
+            };
             let state = Box::new(FingerState::with_policy(
                 Graph::new(nodes),
                 service.config().policy,
             ));
-            run_attempt(service, shutdown, conn, Pending::Open { id, state });
+            run_attempt(service, shutdown, conn, Pending::Open { id, state, reliable });
         }
-        Command::Event { id, ev } => {
-            let p = Pending::Batch { id, events: vec![ev], single: true };
-            run_attempt(service, shutdown, conn, p);
+        Command::Event { id, ev, seq } => {
+            reliable_write(service, shutdown, conn, id, vec![ev], true, seq);
         }
-        Command::Batch { id, events } => {
-            let p = Pending::Batch { id, events, single: false };
-            run_attempt(service, shutdown, conn, p);
+        Command::Batch { id, events, seq } => {
+            reliable_write(service, shutdown, conn, id, events, false, seq);
         }
         Command::Query { id } => run_attempt(service, shutdown, conn, Pending::Query { id }),
-        Command::Close { id } => run_attempt(service, shutdown, conn, Pending::Close { id }),
+        Command::Close { id } => {
+            service.reliable_forget(&id);
+            run_attempt(service, shutdown, conn, Pending::Close { id });
+        }
+        Command::Fault { name, spec } => conn.reply(&fault_reply(&name, &spec)),
         Command::Stats => conn.reply(&stats_reply(service)),
         Command::Metrics => conn.reply(&metrics_reply(service)),
         Command::Epoch => {
@@ -727,6 +786,81 @@ fn dispatch_cmd(
             conn.start_drain();
         }
     }
+}
+
+/// Refuse writes while durability is failed (`on_error = fail_stop`): the
+/// WAL cannot record them, so accepting would silently break the
+/// recovers-bit-identically contract. Cleared by the next successful epoch
+/// cut.
+fn durability_gate(service: &ScoringService) -> Option<Reply> {
+    (service.durability_health() == crate::service::DUR_FAILED).then(|| {
+        Reply::Err(
+            "durability-failed write-ahead log unavailable (on_error=fail_stop)".to_string(),
+        )
+    })
+}
+
+/// One write command (EVENT or BATCH), with the exactly-once seq protocol
+/// applied before the service sees it: duplicates answer without
+/// re-applying, gaps refuse, fresh seqs flow to the normal attempt path and
+/// acknowledge on completion.
+fn reliable_write(
+    service: &ScoringService,
+    shutdown: &ShutdownHandle,
+    conn: &mut Conn,
+    id: String,
+    events: Vec<StreamEvent>,
+    single: bool,
+    seq: Option<u64>,
+) {
+    if let Some(r) = durability_gate(service) {
+        conn.reply(&r);
+        return;
+    }
+    if let Some(s) = seq {
+        use crate::service::SeqOutcome;
+        match service.reliable_seq(&id, s) {
+            SeqOutcome::Apply => {}
+            SeqOutcome::Duplicate { acked } => {
+                // already applied before the client's previous reply was
+                // lost: acknowledge again, apply nothing
+                crate::obs::Counter::DupDiscards.inc();
+                conn.reply(&Reply::OkKv(vec![
+                    ("accepted".to_string(), "0".to_string()),
+                    ("acked".to_string(), acked.to_string()),
+                    ("dup".to_string(), "1".to_string()),
+                ]));
+                return;
+            }
+            SeqOutcome::Gap { acked } => {
+                conn.reply(&Reply::Err(format!("seq-gap acked={acked}")));
+                return;
+            }
+        }
+    }
+    run_attempt(service, shutdown, conn, Pending::Batch { id, events, single, seq });
+}
+
+/// Answer the `FAULT <name> <spec>` admin verb: arm (or disarm) one
+/// failpoint on a live server. A build without the `fault-inject` feature
+/// refuses rather than silently ignoring a chaos schedule.
+fn fault_reply(name: &str, spec: &str) -> Reply {
+    if !crate::fault::compiled_in() {
+        return Reply::Err(
+            "fault-injection not compiled in (build with --features fault-inject)".to_string(),
+        );
+    }
+    let Some(fp) = crate::fault::Failpoint::parse(name) else {
+        return Reply::Err(format!("unknown-failpoint {name}"));
+    };
+    let Some(parsed) = crate::fault::FaultSpec::parse(spec) else {
+        return Reply::Err(format!("bad-fault-spec {spec}"));
+    };
+    crate::fault::set(fp, parsed);
+    Reply::OkKv(vec![
+        ("fault".to_string(), name.to_string()),
+        ("spec".to_string(), parsed.render()),
+    ])
 }
 
 /// First attempt of a service command; a full shard queue parks it on the
@@ -805,6 +939,14 @@ fn progress_conn(
     if let Some(parked) = conn.pending.take() {
         if shutdown.is_signaled() {
             conn.reply(&Reply::Err("shutting-down".to_string()));
+        } else if net.shed_after_ms > 0
+            && parked.since.elapsed() >= Duration::from_millis(net.shed_after_ms)
+        {
+            // load shedding: the shard stayed saturated past the budget, so
+            // answer with a retry hint instead of parking indefinitely —
+            // the client backs off and the connection resumes reading
+            crate::obs::Counter::ShedRequests.inc();
+            conn.reply(&Reply::Err(format!("retry-after {}", net.shed_after_ms)));
         } else {
             let since = parked.since;
             let queue_us = since.elapsed().as_micros() as u64;
@@ -1045,7 +1187,7 @@ impl EventLoop {
         let timeout = self.tick_timeout_ms();
         if let Err(e) = poll_fds(&mut self.pollfds, timeout) {
             eprintln!("net: poll failed: {e}");
-            std::thread::sleep(Duration::from_millis(1));
+            super::backoff::sleep_ms(1);
             return;
         }
         crate::obs::Counter::NetWakeups.inc();

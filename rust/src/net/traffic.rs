@@ -22,6 +22,7 @@
 
 use super::client::NetClient;
 use super::codec::Wire;
+use super::retry::{ErrorCounts, RetryClient, RetryPolicy};
 use crate::service::workload::{
     tenant_streams, TenantPreset, TenantStream, TenantWorkloadConfig,
 };
@@ -65,6 +66,11 @@ pub struct TrafficConfig {
     /// After the replay, fetch `METRICS` on *both* wires and fail the run
     /// unless the key lists are identical (codec parity check).
     pub check_metrics: bool,
+    /// Drive every connection through the exactly-once [`RetryClient`]
+    /// (`finger load --retry`): reconnect + replay-from-acked on transport
+    /// faults, honor `retry-after` shedding hints, and report per-kind
+    /// error counts. `None` uses the plain fail-fast client.
+    pub retry: Option<RetryPolicy>,
 }
 
 impl Default for TrafficConfig {
@@ -79,6 +85,7 @@ impl Default for TrafficConfig {
             shutdown_after: false,
             live_stats: false,
             check_metrics: false,
+            retry: None,
         }
     }
 }
@@ -114,6 +121,10 @@ pub struct TrafficReport {
     /// `Some(key count)` when the run verified METRICS key parity across
     /// both wires (`check_metrics`).
     pub metrics_keys: Option<usize>,
+    /// Per-kind failure counts merged across workers — all zero on a clean
+    /// run with the plain client; under `--retry` they tally what the run
+    /// survived (resets, timeouts, shedding, server errors) plus retries.
+    pub errors: ErrorCounts,
 }
 
 /// Replay `cfg.workload` against `cfg.addr`. Builds the tenant streams,
@@ -133,13 +144,14 @@ pub fn run_load(cfg: &TrafficConfig) -> Result<TrafficReport> {
     } else {
         None
     };
-    let outcome = replay(
+    let outcome = replay_with(
         &cfg.addr,
         cfg.connections,
         cfg.query_sessions,
         &streams,
         cfg.wire,
         cfg.client_timeout,
+        cfg.retry,
     );
     stop.store(true, Ordering::SeqCst);
     if let Some(h) = monitor {
@@ -168,12 +180,11 @@ fn monitor_stats(addr: &str, wire: Wire, timeout: Option<Duration>, stop: &Atomi
         }
     };
     loop {
-        for _ in 0..10 {
-            if stop.load(Ordering::SeqCst) {
-                let _ = client.quit();
-                return;
-            }
-            std::thread::sleep(Duration::from_millis(100));
+        if super::backoff::sleep_interruptible(Duration::from_secs(1), &|| {
+            stop.load(Ordering::SeqCst)
+        }) {
+            let _ = client.quit();
+            return;
         }
         match client.stats() {
             Ok(s) => {
@@ -238,6 +249,21 @@ pub fn replay(
     wire: Wire,
     client_timeout: Option<Duration>,
 ) -> Result<TrafficReport> {
+    replay_with(addr, connections, query_sessions, streams, wire, client_timeout, None)
+}
+
+/// [`replay`] with an optional exactly-once retry policy: `Some` drives every
+/// connection through a [`RetryClient`] instead of the fail-fast
+/// [`NetClient`].
+pub fn replay_with(
+    addr: &str,
+    connections: usize,
+    query_sessions: bool,
+    streams: &[TenantStream],
+    wire: Wire,
+    client_timeout: Option<Duration>,
+    retry: Option<RetryPolicy>,
+) -> Result<TrafficReport> {
     let connections = connections.clamp(1, streams.len().max(1));
     let workers = connections.min(MAX_LOAD_WORKERS);
     let start = Instant::now();
@@ -254,6 +280,7 @@ pub fn replay(
                 query: query_sessions,
                 wire,
                 client_timeout,
+                retry,
             };
             handles.push(scope.spawn(move || drive_worker(plan)));
         }
@@ -265,11 +292,13 @@ pub fn replay(
     let mut events_sent = 0;
     let mut snapshots = Vec::new();
     let mut lat = Histogram::new();
+    let mut errors = ErrorCounts::default();
     for outcome in outcomes {
         let o = outcome?;
         events_sent += o.sent;
         snapshots.extend(o.snaps);
         lat.merge(&o.lat);
+        errors.merge(&o.errors);
     }
     let wall_secs = start.elapsed().as_secs_f64();
     snapshots.sort_by(|a, b| a.id.cmp(&b.id));
@@ -286,6 +315,7 @@ pub fn replay(
         p99_us: lat.percentile(99.0),
         snapshots,
         metrics_keys: None,
+        errors,
     })
 }
 
@@ -301,19 +331,78 @@ struct WorkerPlan<'a> {
     query: bool,
     wire: Wire,
     client_timeout: Option<Duration>,
+    retry: Option<RetryPolicy>,
 }
 
 struct WorkerOutcome {
     sent: usize,
     snaps: Vec<SessionSnapshot>,
     lat: Histogram,
+    errors: ErrorCounts,
+}
+
+/// The two client disciplines a load connection can speak: fail-fast
+/// ([`NetClient`]) or exactly-once with reconnect ([`RetryClient`]).
+enum LoadClient {
+    Plain(NetClient),
+    Retry(RetryClient),
+}
+
+impl LoadClient {
+    fn connect(
+        addr: &str,
+        wire: Wire,
+        timeout: Option<Duration>,
+        retry: Option<RetryPolicy>,
+    ) -> Result<Self> {
+        match retry {
+            None => Ok(LoadClient::Plain(NetClient::connect_with(addr, wire, timeout)?)),
+            Some(p) => Ok(LoadClient::Retry(RetryClient::connect(addr, wire, timeout, p)?)),
+        }
+    }
+
+    fn open(&mut self, id: &str, nodes: usize) -> Result<()> {
+        match self {
+            LoadClient::Plain(c) => c.open(id, nodes),
+            LoadClient::Retry(c) => c.open(id, nodes),
+        }
+    }
+
+    fn send_batch(&mut self, id: &str, events: &[StreamEvent]) -> Result<usize> {
+        match self {
+            LoadClient::Plain(c) => c.send_batch(id, events),
+            LoadClient::Retry(c) => c.send_batch(id, events),
+        }
+    }
+
+    fn query(&mut self, id: &str) -> Result<Option<SessionSnapshot>> {
+        match self {
+            LoadClient::Plain(c) => c.query(id),
+            LoadClient::Retry(c) => c.query(id),
+        }
+    }
+
+    /// Close politely, yielding any accumulated error counts.
+    fn quit(self) -> Result<ErrorCounts> {
+        match self {
+            LoadClient::Plain(c) => {
+                c.quit()?;
+                Ok(ErrorCounts::default())
+            }
+            LoadClient::Retry(c) => {
+                let counts = c.counts().clone();
+                c.quit()?;
+                Ok(counts)
+            }
+        }
+    }
 }
 
 /// One open connection and the tenants partitioned onto it.
 struct LoadConn<'a> {
     /// Global connection index (names the link in error contexts).
     index: usize,
-    client: NetClient,
+    client: LoadClient,
     tenants: Vec<&'a TenantStream>,
 }
 
@@ -330,14 +419,23 @@ fn timed<T>(lat: &mut Histogram, f: impl FnOnce() -> Result<T>) -> Result<T> {
 /// run's sockets are open at once), open + seed every tenant, replay
 /// window-major across the worker's links, then query and quit.
 fn drive_worker(plan: WorkerPlan<'_>) -> Result<WorkerOutcome> {
-    let WorkerPlan { addr, streams, connections, worker, workers, query, wire, client_timeout } =
-        plan;
+    let WorkerPlan {
+        addr,
+        streams,
+        connections,
+        worker,
+        workers,
+        query,
+        wire,
+        client_timeout,
+        retry,
+    } = plan;
     let mut lat = Histogram::new();
     let mut sent = 0usize;
     let mut conns: Vec<LoadConn<'_>> = Vec::new();
     let mut c = worker;
     while c < connections {
-        let client = NetClient::connect_with(addr, wire, client_timeout)
+        let client = LoadClient::connect(addr, wire, client_timeout, retry)
             // a connect/timeout failure names its connection, so the load
             // report pinpoints which link wedged
             .with_context(|| format!("connect {c} ({wire} wire)"))?;
@@ -401,10 +499,11 @@ fn drive_worker(plan: WorkerPlan<'_>) -> Result<WorkerOutcome> {
             }
         }
     }
+    let mut errors = ErrorCounts::default();
     for conn in conns {
-        conn.client.quit()?;
+        errors.merge(&conn.client.quit()?);
     }
-    Ok(WorkerOutcome { sent, snaps, lat })
+    Ok(WorkerOutcome { sent, snaps, lat, errors })
 }
 
 /// Human-readable preset mix of a workload (for logs and reports).

@@ -100,6 +100,17 @@ pub enum Counter {
     WalFsyncs,
     /// Epoch snapshots committed (manifest renamed + `CURRENT` repointed).
     SnapshotEpochs,
+    /// Failpoints that actually fired (armed schedule hit — `fault-inject`
+    /// builds only; always 0 in production binaries).
+    FaultInjected,
+    /// Shards that dropped their WAL and entered degraded scoring
+    /// (`[durability] on_error = degrade`).
+    Degraded,
+    /// Requests answered `ERR retry-after` because their shard queue stayed
+    /// saturated past `[net] shed_after_ms`.
+    ShedRequests,
+    /// Reliable writes discarded as duplicates (`seq <= acked`).
+    DupDiscards,
 }
 
 /// Every counter in stable render order.
@@ -121,6 +132,10 @@ pub const COUNTERS: &[Counter] = &[
     Counter::WalBytes,
     Counter::WalFsyncs,
     Counter::SnapshotEpochs,
+    Counter::FaultInjected,
+    Counter::Degraded,
+    Counter::ShedRequests,
+    Counter::DupDiscards,
 ];
 
 /// Live-level gauges (incremented and decremented; rendered as `u64`, never
@@ -169,6 +184,10 @@ impl Counter {
             Counter::WalBytes => cell!(),
             Counter::WalFsyncs => cell!(),
             Counter::SnapshotEpochs => cell!(),
+            Counter::FaultInjected => cell!(),
+            Counter::Degraded => cell!(),
+            Counter::ShedRequests => cell!(),
+            Counter::DupDiscards => cell!(),
         }
     }
 
@@ -209,6 +228,10 @@ impl Counter {
             Counter::WalBytes => "wal_bytes",
             Counter::WalFsyncs => "wal_fsyncs",
             Counter::SnapshotEpochs => "snapshot_epochs",
+            Counter::FaultInjected => "fault_injected",
+            Counter::Degraded => "degraded",
+            Counter::ShedRequests => "shed_requests",
+            Counter::DupDiscards => "dup_discards",
         }
     }
 }
@@ -455,7 +478,7 @@ mod tests {
         Counter::NetAccepted.add(2);
         assert!(Counter::NetAccepted.get() >= before + 3);
         assert_eq!(Counter::NetAccepted.name(), "net_accepted");
-        assert_eq!(COUNTERS.len(), 17);
+        assert_eq!(COUNTERS.len(), 21);
         // names are unique (each variant has its own cell and wire key)
         let mut names: Vec<&str> = COUNTERS.iter().map(|c| c.name()).collect();
         names.sort_unstable();

@@ -2,7 +2,7 @@
 //! `[service]` section of a config file (`cli::Config`).
 
 use crate::cli::Config;
-use crate::durability::{DurabilityConfig, FsyncPolicy};
+use crate::durability::{DurabilityConfig, FsyncPolicy, OnError};
 use crate::entropy::SmaxPolicy;
 use crate::stream::ResyncPolicy;
 use std::path::PathBuf;
@@ -62,7 +62,9 @@ impl ServiceConfig {
     /// (`always` | `every_ms[=N]` | `every_n[=N]`; an unparseable spec falls
     /// back to the default), `fsync_ms`, `fsync_windows` (numeric overrides,
     /// taking precedence over `fsync`), `segment_bytes`,
-    /// `snapshot_interval_ms` (0 disables the periodic snapshot timer).
+    /// `snapshot_interval_ms` (0 disables the periodic snapshot timer),
+    /// `on_error` (`fail_stop` | `degrade` — what WAL IO failure does to the
+    /// service; an unparseable spec falls back to `fail_stop`).
     pub fn from_config(c: &Config) -> Self {
         let d = Self::default();
         Self {
@@ -96,6 +98,9 @@ impl ServiceConfig {
                 dur.segment_bytes = c.get_or("durability.segment_bytes", dur.segment_bytes);
                 dur.snapshot_interval_ms =
                     c.get_or("durability.snapshot_interval_ms", dur.snapshot_interval_ms);
+                if let Some(p) = c.get("durability.on_error").and_then(OnError::parse) {
+                    dur.on_error = p;
+                }
                 dur
             }),
         }
@@ -144,6 +149,11 @@ mod tests {
         assert_eq!(dur.fsync, FsyncPolicy::EveryNWindows(8));
         assert_eq!(dur.segment_bytes, 4096);
         assert_eq!(dur.snapshot_interval_ms, 500);
+        assert_eq!(dur.on_error, OnError::FailStop, "fail_stop is the default");
+
+        let c = Config::parse("[durability]\ndir = \"/d\"\non_error = \"degrade\"\n").unwrap();
+        let dur = ServiceConfig::from_config(&c).durability.unwrap();
+        assert_eq!(dur.on_error, OnError::Degrade);
 
         // numeric overrides beat the spec string; bad specs fall back
         let c = Config::parse("[durability]\ndir = \"/d\"\nfsync = \"bogus\"\nfsync_ms = 7\n")

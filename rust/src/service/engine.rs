@@ -8,16 +8,55 @@ use super::config::ServiceConfig;
 use super::registry::{shard_of, SessionRegistry};
 use super::session::{encode_session_id, SessionReport, SessionSnapshot, SessionState};
 use crate::durability::wal::{WalReader, WalRecord, WalWriter};
-use crate::durability::{recovery, snapshot, EpochCut};
+use crate::durability::{recovery, snapshot, EpochCut, OnError};
 use crate::entropy::FingerState;
 use crate::graph::Graph;
 use crate::stream::{checkpoint, StreamEvent};
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Durability health, shared between the shard workers (who detect WAL
+/// failures) and the network front end (who surfaces / gates on them).
+pub const DUR_OK: u8 = 0;
+/// A WAL failure was absorbed under `on_error = degrade`: the affected
+/// shard(s) dropped their WAL and keep scoring without durability.
+pub const DUR_DEGRADED: u8 = 1;
+/// A WAL failure under `on_error = fail_stop`: mutating commands are
+/// refused until an epoch cut restores a healthy log.
+pub const DUR_FAILED: u8 = 2;
+
+/// Exactly-once bookkeeping for one reliable session (`OPEN ... epoch=`).
+/// Sequence state is in-memory only — a server restart clears it, which the
+/// client observes as a fresh epoch and resyncs from (`docs/ROBUSTNESS.md`).
+struct ReliableEntry {
+    /// Server-assigned session epoch; a reliable `OPEN` carrying it resumes
+    /// instead of resetting.
+    epoch: u64,
+    /// Highest applied sequence number.
+    acked: u64,
+}
+
+/// Cap on tracked reliable sessions: an `OPEN`-churning client must not grow
+/// server memory without bound. Past the cap the insert evicts an arbitrary
+/// entry — that session falls back to fresh-epoch semantics on its next
+/// reliable `OPEN` (safe: reset, never duplicated application).
+const RELIABLE_CAP: usize = 65_536;
+
+/// Verdict on one reliable write's sequence number.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqOutcome {
+    /// `seq == acked + 1`: apply it (and ack on success).
+    Apply,
+    /// `seq <= acked`: already applied — discard, report `dup`.
+    Duplicate { acked: u64 },
+    /// `seq > acked + 1` (or no reliable session): refuse, report the gap.
+    Gap { acked: u64 },
+}
 
 /// Message routed to a shard worker. Per-session ordering is guaranteed by
 /// the single FIFO channel each shard consumes.
@@ -87,6 +126,17 @@ pub struct ScoringService {
     epoch: Mutex<u64>,
     /// What startup recovery rebuilt (all zeroes for a fresh start).
     recovery: RecoveryReport,
+    /// Exactly-once state per reliable session (epoch + highest applied
+    /// seq). In-memory only: cleared by restart, capped at [`RELIABLE_CAP`].
+    reliable: Mutex<HashMap<String, ReliableEntry>>,
+    /// Session-epoch source for reliable `OPEN`s. Seeded from wall-clock
+    /// millis so epochs from before a restart (whose reliable map is gone)
+    /// cannot collide with freshly assigned ones.
+    epoch_source: AtomicU64,
+    /// Durability health ([`DUR_OK`] / [`DUR_DEGRADED`] / [`DUR_FAILED`]),
+    /// written by shard workers, read by `STATS`/`METRICS` and the
+    /// fail-stop gate.
+    dur_health: Arc<AtomicU8>,
 }
 
 /// What startup recovery rebuilt (see [`ScoringService::recover`]).
@@ -144,15 +194,27 @@ impl ScoringService {
     /// replay the WAL tail through the normal scoring path (bit-identical to
     /// the crashed run — see `docs/DURABILITY.md`). Falls back to a plain
     /// [`ScoringService::start`] when durability is not configured.
+    ///
+    /// The restarting shard count need not match the one the directory was
+    /// written under: replayed sessions re-route through `shard_of` with the
+    /// *new* count (per-session order is safe — a session's whole history
+    /// lives in one disk stream), and a rebound recovery commits a fresh
+    /// epoch immediately so the old-layout segments are pruned before any
+    /// new-layout WAL traffic lands.
     pub fn recover(cfg: ServiceConfig) -> anyhow::Result<Self> {
         let Some(dur) = cfg.durability.clone() else {
             return Ok(Self::start(cfg));
         };
         let shards = cfg.shards.max(1);
         let plan = recovery::plan(&dur, shards)?;
+        let rebound = plan.disk_shards != shards;
         let mut report = RecoveryReport::default();
         let mut registries: Vec<SessionRegistry> =
             (0..shards).map(|_| SessionRegistry::new()).collect();
+        // Each session's *disk* stream (the shard whose WAL carries its
+        // records): EPOCH markers canonicalize exactly the sessions of their
+        // own stream, reproducing the live barrier under any rebinding.
+        let mut home: HashMap<String, usize> = HashMap::new();
 
         if let (Some(manifest), Some(dir)) = (&plan.manifest, &plan.epoch_dir) {
             report.epoch = Some(manifest.epoch);
@@ -160,22 +222,36 @@ impl ScoringService {
                 let path = dir.join(format!("{}.ckpt", encode_session_id(&meta.id)));
                 let state = checkpoint::load_with_policy(&path, cfg.policy)
                     .map_err(|e| anyhow::anyhow!("restore session {}: {e:#}", meta.id))?;
+                home.insert(meta.id.clone(), meta.shard);
                 if let Some(registry) = registries.get_mut(shard_of(&meta.id, shards)) {
                     registry.insert(SessionState::from_durable(state, meta, &cfg));
                 }
             }
         }
-        for (shard, segments) in plan.segments.iter().enumerate() {
-            let Some(registry) = registries.get_mut(shard) else { continue };
+        for (disk_shard, segments) in plan.segments.iter().enumerate() {
             for (_seq, path) in segments {
                 for rec in WalReader::open(path)? {
-                    report.replayed_windows += replay_record(registry, rec, &cfg);
+                    report.replayed_windows +=
+                        replay_routed(&mut registries, &mut home, rec, &cfg, disk_shard);
                 }
             }
         }
         report.restored_sessions = registries.iter().map(SessionRegistry::len).sum();
         let next_epoch = plan.manifest.as_ref().map_or(1, |m| m.epoch + 1);
-        Ok(Self::start_with(cfg, registries, report, next_epoch))
+        let svc = Self::start_with(cfg, registries, report, next_epoch);
+        if rebound {
+            // the old-layout segments must never coexist with WAL traffic
+            // written under the new routing (a later recovery would replay
+            // them out of order), so the rebind is only durable once a
+            // new-layout epoch commits and prunes them
+            svc.snapshot_epoch().map_err(|e| {
+                anyhow::anyhow!(
+                    "rebind {} -> {shards} shards: post-rebind epoch commit: {e:#}",
+                    plan.disk_shards
+                )
+            })?;
+        }
+        Ok(svc)
     }
 
     fn start_with(
@@ -186,6 +262,7 @@ impl ScoringService {
     ) -> Self {
         let shards = cfg.shards.max(1);
         crate::obs::note_shards(shards);
+        let dur_health = Arc::new(AtomicU8::new(DUR_OK));
         let mut registries = initial;
         registries.resize_with(shards, SessionRegistry::new);
         let mut senders = Vec::with_capacity(shards);
@@ -196,15 +273,22 @@ impl ScoringService {
             let worker_cfg = cfg.clone();
             let depth = Arc::new(AtomicUsize::new(0));
             let worker_depth = Arc::clone(&depth);
+            let worker_health = Arc::clone(&dur_health);
             let handle = std::thread::Builder::new()
                 .name(format!("finger-shard-{shard}"))
-                .spawn(move || shard_worker(rx, worker_cfg, worker_depth, shard, registry))
+                .spawn(move || {
+                    shard_worker(rx, worker_cfg, worker_depth, worker_health, shard, registry)
+                })
                 // finger-lint: allow(FL001): cold-start — no spawn, no service
                 .expect("spawn shard worker");
             senders.push(tx);
             workers.push(handle);
             depths.push(depth);
         }
+        let epoch_seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map_or(1, |d| d.as_millis() as u64)
+            .max(1);
         Self {
             cfg,
             senders,
@@ -214,6 +298,9 @@ impl ScoringService {
             start: Instant::now(),
             epoch: Mutex::new(next_epoch.max(1)),
             recovery,
+            reliable: Mutex::new(HashMap::new()),
+            epoch_source: AtomicU64::new(epoch_seed),
+            dur_health,
         }
     }
 
@@ -221,6 +308,87 @@ impl ScoringService {
     /// service was started via [`ScoringService::recover`]).
     pub fn recovery(&self) -> &RecoveryReport {
         &self.recovery
+    }
+
+    fn reliable_map(&self) -> std::sync::MutexGuard<'_, HashMap<String, ReliableEntry>> {
+        match self.reliable.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Resume a reliable session: `Some((epoch, acked))` when the client's
+    /// non-zero `epoch` matches the tracked one (the session keeps its
+    /// state; the client replays from `acked`). `None` means the caller
+    /// must open fresh via [`ScoringService::reliable_begin`].
+    pub fn reliable_resume(&self, id: &str, client_epoch: u64) -> Option<(u64, u64)> {
+        if client_epoch == 0 {
+            return None;
+        }
+        let map = self.reliable_map();
+        let entry = map.get(id)?;
+        (entry.epoch == client_epoch).then_some((entry.epoch, entry.acked))
+    }
+
+    /// Begin a fresh reliable session (new epoch, `acked = 0`). The caller
+    /// still opens the session state through the normal open path.
+    pub fn reliable_begin(&self, id: &str) -> u64 {
+        let epoch = self.epoch_source.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.reliable_map();
+        if map.len() >= RELIABLE_CAP && !map.contains_key(id) {
+            // evict one arbitrary session; it degrades to fresh-epoch
+            // semantics on its next reliable OPEN (reset, never duplicated)
+            if let Some(victim) = map.keys().next().cloned() {
+                map.remove(&victim);
+            }
+        }
+        map.insert(id.to_string(), ReliableEntry { epoch, acked: 0 });
+        epoch
+    }
+
+    /// Classify a reliable write's sequence number against the session's
+    /// `acked` high-water mark.
+    pub fn reliable_seq(&self, id: &str, seq: u64) -> SeqOutcome {
+        let map = self.reliable_map();
+        let Some(entry) = map.get(id) else { return SeqOutcome::Gap { acked: 0 } };
+        if seq <= entry.acked {
+            SeqOutcome::Duplicate { acked: entry.acked }
+        } else if seq == entry.acked + 1 {
+            SeqOutcome::Apply
+        } else {
+            SeqOutcome::Gap { acked: entry.acked }
+        }
+    }
+
+    /// Record `seq` as applied (monotone: an older ack never rewinds).
+    pub fn reliable_ack(&self, id: &str, seq: u64) {
+        if let Some(entry) = self.reliable_map().get_mut(id) {
+            entry.acked = entry.acked.max(seq);
+        }
+    }
+
+    /// Drop a session's reliable state (close, or an unreliable re-open).
+    pub fn reliable_forget(&self, id: &str) {
+        self.reliable_map().remove(id);
+    }
+
+    /// Current durability health byte ([`DUR_OK`] / [`DUR_DEGRADED`] /
+    /// [`DUR_FAILED`]).
+    pub fn durability_health(&self) -> u8 {
+        self.dur_health.load(Ordering::Relaxed)
+    }
+
+    /// Durability health as the `STATS` wire word: `off` (not configured),
+    /// `on`, `degraded`, or `failed`.
+    pub fn durability_status(&self) -> &'static str {
+        if self.cfg.durability.is_none() {
+            return "off";
+        }
+        match self.durability_health() {
+            DUR_DEGRADED => "degraded",
+            DUR_FAILED => "failed",
+            _ => "on",
+        }
     }
 
     pub fn shards(&self) -> usize {
@@ -475,6 +643,10 @@ impl ScoringService {
         let manifest = snapshot::commit_epoch(&dur, epoch, &cuts)?;
         *next = epoch + 1;
         crate::obs::Counter::SnapshotEpochs.inc();
+        // every shard rotated onto a fresh, healthy log and the epoch is
+        // durable: a fail-stop latch is cleared (degrade mode never reaches
+        // here — a WAL-less shard fails its cut)
+        self.dur_health.store(DUR_OK, Ordering::Relaxed);
         Ok(EpochSummary { epoch, sessions: manifest.sessions.len() })
     }
 
@@ -508,6 +680,12 @@ impl ScoringService {
 
     fn try_send(&self, msg: ShardMsg) -> Result<usize, (ShardMsg, SubmitError)> {
         let shard = self.shard_of_msg(&msg);
+        if crate::fault::fire(crate::fault::Failpoint::ShardSubmit) {
+            // injected backpressure: indistinguishable from a full queue, so
+            // the whole park/shed/retry machinery above exercises for real
+            crate::obs::shard_would_block(shard);
+            return Err((msg, SubmitError::WouldBlock { shard }));
+        }
         // finger-lint: allow(FL001): shard_of bounds the index by senders.len()
         let (sender, depth) = (&self.senders[shard], &self.depths[shard]);
         depth.fetch_add(1, Ordering::Relaxed);
@@ -526,8 +704,19 @@ impl ScoringService {
     /// Close the ingest side, drain every shard (flushing partial windows,
     /// checkpointing when configured) and aggregate the results.
     pub fn finish(self) -> ServiceReport {
-        let Self { cfg, senders, workers, submitted, start, depths: _, epoch: _, recovery } =
-            self;
+        let Self {
+            cfg,
+            senders,
+            workers,
+            submitted,
+            start,
+            depths: _,
+            epoch: _,
+            recovery,
+            reliable: _,
+            epoch_source: _,
+            dur_health: _,
+        } = self;
         drop(senders); // workers' receive loops end once the queues drain
         let mut sessions = Vec::new();
         let mut dropped_events = 0;
@@ -567,9 +756,11 @@ fn shard_worker(
     rx: Receiver<ShardMsg>,
     cfg: ServiceConfig,
     depth: Arc<AtomicUsize>,
+    health: Arc<AtomicU8>,
     shard: usize,
     initial: SessionRegistry,
 ) -> ShardOutcome {
+    let on_error = cfg.durability.as_ref().map(|d| d.on_error).unwrap_or_default();
     let mut registry = initial;
     for _ in 0..registry.len() {
         crate::obs::Gauge::SvcSessions.inc(); // recovered sessions are live
@@ -668,6 +859,30 @@ fn shard_worker(
                 let _ = reply.send(cut_epoch(&mut registry, &mut wal, &dir, epoch, shard));
             }
         }
+        // a WAL writer that latched on an IO error during this message is
+        // handled per `[durability] on_error` before the next one
+        if wal.as_ref().is_some_and(|w| !w.healthy()) {
+            match on_error {
+                OnError::Degrade => {
+                    // drop the log and keep scoring; the degraded flag rides
+                    // STATS/METRICS until a restart re-opens the WAL
+                    wal = None;
+                    health.store(DUR_DEGRADED, Ordering::Relaxed);
+                    crate::obs::Counter::Degraded.inc();
+                    eprintln!(
+                        "wal[shard {shard}]: write failed; degrading to non-durable scoring"
+                    );
+                }
+                OnError::FailStop => {
+                    if health.swap(DUR_FAILED, Ordering::Relaxed) != DUR_FAILED {
+                        eprintln!(
+                            "wal[shard {shard}]: write failed; refusing new writes \
+                             (on_error=fail_stop) until an epoch cut restores the log"
+                        );
+                    }
+                }
+            }
+        }
         // decrement only after the message is fully processed, so depth
         // really is "queued + being processed": a shard grinding through a
         // huge batch must not look idle to STATS / rebalancing heuristics
@@ -727,6 +942,44 @@ fn cut_epoch(
         sessions.push(session.durable_meta(shard));
     }
     Ok(EpochCut { shard, next_seq, sessions })
+}
+
+/// Apply one record from disk stream `disk_shard`, routing its session to
+/// the registry `shard_of(id, new_shards)` picks — the seam that lets a
+/// directory written under one shard count restart under another. `home`
+/// tracks each session's disk stream (manifest-seeded, then first-touch) so
+/// an `EPOCH` marker canonicalizes exactly the sessions whose records share
+/// its stream, reproducing the live barrier under any rebinding. Returns
+/// windows scored (0 or 1).
+fn replay_routed(
+    registries: &mut [SessionRegistry],
+    home: &mut HashMap<String, usize>,
+    rec: WalRecord,
+    cfg: &ServiceConfig,
+    disk_shard: usize,
+) -> usize {
+    if matches!(rec, WalRecord::Epoch { .. }) {
+        for registry in registries.iter_mut() {
+            for session in registry.sessions_mut() {
+                if home.get(session.id()).copied() == Some(disk_shard) {
+                    session.canonicalize();
+                }
+            }
+        }
+        return 0;
+    }
+    let id = match &rec {
+        WalRecord::Open { id, .. }
+        | WalRecord::Window { id, .. }
+        | WalRecord::Close { id } => id.clone(),
+        WalRecord::Epoch { .. } => return 0, // handled above
+    };
+    home.entry(id.clone()).or_insert(disk_shard);
+    let slot = shard_of(&id, registries.len().max(1));
+    match registries.get_mut(slot) {
+        Some(registry) => replay_record(registry, rec, cfg),
+        None => 0,
+    }
 }
 
 /// Apply one replayed WAL record to a shard's recovered registry, mirroring
@@ -1088,6 +1341,92 @@ mod tests {
     fn snapshot_epoch_requires_durability() {
         let svc = ScoringService::start(ServiceConfig { shards: 1, ..Default::default() });
         assert!(svc.snapshot_epoch().is_err());
+        svc.finish();
+    }
+
+    #[test]
+    fn recover_rebinds_shard_count_bit_identically() {
+        // a 4-shard durability directory (epoch snapshot + WAL tail) must
+        // restart on 2 and on 8 shards with bit-identical session state —
+        // replay routes every session through shard_of with the new count
+        let mut want: Option<Vec<SessionSnapshot>> = None;
+        for &new_shards in &[4usize, 2, 8] {
+            let (mut cfg, root) = durable_cfg(&format!("rebind{new_shards}"));
+            cfg.shards = 4;
+            let svc = ScoringService::recover(cfg.clone()).unwrap();
+            svc.open_session("a", Graph::new(4)).unwrap();
+            svc.open_session("b", Graph::new(4)).unwrap();
+            feed(&svc, 9, 110);
+            svc.snapshot_epoch().unwrap();
+            feed(&svc, 4, 70); // WAL tail past the epoch
+            let live =
+                vec![svc.query("a").unwrap().unwrap(), svc.query("b").unwrap().unwrap()];
+            match &want {
+                None => want = Some(live),
+                Some(w) => {
+                    for (l, r) in live.iter().zip(w) {
+                        assert_snapshots_bit_identical(l, r);
+                    }
+                }
+            }
+            std::mem::forget(svc); // crash: only snapshot + WAL survive
+
+            cfg.shards = new_shards;
+            let svc = ScoringService::recover(cfg).unwrap();
+            assert_eq!(svc.shards(), new_shards);
+            assert_eq!(svc.recovery().restored_sessions, 2);
+            let want_snaps = want.as_ref().unwrap();
+            for want_snap in want_snaps {
+                let got = svc.query(&want_snap.id).unwrap().unwrap();
+                assert_snapshots_bit_identical(&got, want_snap);
+            }
+            // the rebind committed a fresh epoch: a second restart on the
+            // same (new) count must see only new-layout state and agree
+            svc.finish();
+            if new_shards != 4 {
+                let mut dur = DurabilityConfig::new(&root);
+                dur.fsync = FsyncPolicy::Always;
+                let cfg2 = ServiceConfig {
+                    shards: new_shards,
+                    durability: Some(dur),
+                    ..Default::default()
+                };
+                let svc = ScoringService::recover(cfg2).unwrap();
+                for want_snap in want_snaps {
+                    let got = svc.query(&want_snap.id).unwrap().unwrap();
+                    assert_snapshots_bit_identical(&got, want_snap);
+                }
+                svc.finish();
+            }
+            std::fs::remove_dir_all(root).ok();
+        }
+    }
+
+    #[test]
+    fn reliable_seq_tracks_acks_dups_and_gaps() {
+        let svc = ScoringService::start(ServiceConfig { shards: 1, ..Default::default() });
+        // no reliable session yet: everything is a gap at acked=0
+        assert_eq!(svc.reliable_seq("a", 1), SeqOutcome::Gap { acked: 0 });
+        let epoch = svc.reliable_begin("a");
+        assert!(epoch > 0);
+        assert_eq!(svc.reliable_resume("a", epoch), Some((epoch, 0)));
+        assert_eq!(svc.reliable_resume("a", epoch + 1), None, "epoch mismatch");
+        assert_eq!(svc.reliable_resume("a", 0), None, "0 always opens fresh");
+        assert_eq!(svc.reliable_seq("a", 1), SeqOutcome::Apply);
+        svc.reliable_ack("a", 1);
+        assert_eq!(svc.reliable_seq("a", 1), SeqOutcome::Duplicate { acked: 1 });
+        assert_eq!(svc.reliable_seq("a", 2), SeqOutcome::Apply);
+        assert_eq!(svc.reliable_seq("a", 3), SeqOutcome::Gap { acked: 1 });
+        svc.reliable_ack("a", 0); // acks never rewind
+        assert_eq!(svc.reliable_seq("a", 2), SeqOutcome::Apply);
+        // a fresh begin rotates the epoch and resets the ack line
+        let epoch2 = svc.reliable_begin("a");
+        assert_ne!(epoch2, epoch);
+        assert_eq!(svc.reliable_resume("a", epoch), None, "old epoch is dead");
+        assert_eq!(svc.reliable_seq("a", 1), SeqOutcome::Apply);
+        svc.reliable_forget("a");
+        assert_eq!(svc.reliable_seq("a", 1), SeqOutcome::Gap { acked: 0 });
+        assert_eq!(svc.durability_status(), "off");
         svc.finish();
     }
 

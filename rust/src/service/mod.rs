@@ -63,7 +63,8 @@ pub mod workload;
 
 pub use config::ServiceConfig;
 pub use engine::{
-    EpochSummary, RecoveryReport, ScoringService, ServiceReport, SubmitError,
+    EpochSummary, RecoveryReport, ScoringService, SeqOutcome, ServiceReport, SubmitError,
+    DUR_DEGRADED, DUR_FAILED, DUR_OK,
 };
 pub use registry::{shard_of, SessionRegistry};
 pub use session::{

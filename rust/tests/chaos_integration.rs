@@ -1,0 +1,484 @@
+//! Chaos suite: deterministic fault injection against the real stack.
+//!
+//! Every test arms `finger::fault` failpoints (WAL appends, snapshot
+//! renames, socket reads/writes, shard submits) against live services and
+//! asserts the robustness contract from `docs/ROBUSTNESS.md`: `fail_stop`
+//! refuses writes until an epoch cut restores the log, `degrade` keeps
+//! scoring bit-identically while flagging `durability=degraded`, recovery
+//! of a fault-torn WAL always yields a valid prefix, the retry client
+//! delivers exactly once across connection kills, and parked writes shed
+//! with `ERR retry-after`.
+//!
+//! The whole file is gated on the `fault-inject` feature — the default
+//! build compiles it to an empty harness:
+//! `cargo test --features fault-inject --test chaos_integration`.
+
+#![cfg(feature = "fault-inject")]
+
+use finger::durability::{DurabilityConfig, FsyncPolicy, OnError};
+use finger::fault::{self, Failpoint, FaultSpec};
+use finger::graph::Graph;
+use finger::net::{
+    Command, NetClient, NetConfig, NetServer, Reply, RetryClient, RetryPolicy, Wire,
+};
+use finger::service::{ScoringService, ServiceConfig, ServiceReport, SessionSnapshot};
+use finger::stream::StreamEvent;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+const NODES: usize = 16;
+
+/// The failpoint registry is process-global, so chaos tests must not
+/// overlap: each takes this lock and gets a clean (all-off) registry on
+/// entry and on exit, panic included.
+static FAULTS: Mutex<()> = Mutex::new(());
+
+struct FaultGuard {
+    _serial: MutexGuard<'static, ()>,
+}
+
+impl FaultGuard {
+    fn hold() -> Self {
+        let serial = FAULTS.lock().unwrap_or_else(|e| e.into_inner());
+        disarm_all();
+        FaultGuard { _serial: serial }
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        disarm_all();
+    }
+}
+
+fn disarm_all() {
+    for fp in Failpoint::ALL {
+        fault::set(fp, FaultSpec::Off);
+    }
+}
+
+/// Deterministic tick-terminated window `w`: positive weights, no
+/// self-loops, indices well inside `NODES` — identical over the wire and
+/// in process.
+fn window(w: usize) -> Vec<StreamEvent> {
+    let mut evs = Vec::with_capacity(7);
+    for k in 0..6u32 {
+        let i = ((w as u32) * 5 + k * 3) % 10;
+        let j = i + 1 + (k % 4);
+        let dw = 0.2 + f64::from((k + w as u32) % 5) * 0.3;
+        evs.push(StreamEvent::EdgeDelta { i, j, dw });
+    }
+    evs.push(StreamEvent::Tick);
+    evs
+}
+
+fn temp_root(tag: &str) -> PathBuf {
+    let root =
+        std::env::temp_dir().join(format!("finger_chaos_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::create_dir_all(&root).expect("create chaos test root");
+    root
+}
+
+fn durable_cfg(dir: &Path, on_error: OnError) -> ServiceConfig {
+    let mut dur = DurabilityConfig::new(dir);
+    dur.fsync = FsyncPolicy::Always;
+    dur.on_error = on_error;
+    ServiceConfig { shards: 1, durability: Some(dur), ..Default::default() }
+}
+
+fn spawn_server(
+    service_cfg: ServiceConfig,
+) -> (String, std::thread::JoinHandle<anyhow::Result<ServiceReport>>) {
+    let net_cfg = NetConfig { addr: "127.0.0.1:0".to_string(), ..Default::default() };
+    spawn_server_with(service_cfg, net_cfg)
+}
+
+fn spawn_server_with(
+    service_cfg: ServiceConfig,
+    net_cfg: NetConfig,
+) -> (String, std::thread::JoinHandle<anyhow::Result<ServiceReport>>) {
+    let server = NetServer::bind(service_cfg, net_cfg).expect("bind ephemeral port");
+    let addr = server.local_addr().to_string();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+fn assert_bits_equal(got: &SessionSnapshot, want: &SessionSnapshot, label: &str) {
+    assert_eq!(got.windows, want.windows, "{label}: window count");
+    assert_eq!(got.events, want.events, "{label}: event count");
+    assert_eq!(got.pending_events, want.pending_events, "{label}: pending events");
+    assert_eq!(got.nodes, want.nodes, "{label}: nodes");
+    assert_eq!(got.edges, want.edges, "{label}: edges");
+    assert_eq!(got.anomalies, want.anomalies, "{label}: anomaly count");
+    assert_eq!(
+        got.htilde.to_bits(),
+        want.htilde.to_bits(),
+        "{label}: H̃ {} vs {}",
+        got.htilde,
+        want.htilde
+    );
+    match (got.last_jsdist, want.last_jsdist) {
+        (Some(a), Some(b)) => {
+            assert_eq!(a.to_bits(), b.to_bits(), "{label}: jsdist {a} vs {b}")
+        }
+        (None, None) => {}
+        (a, b) => panic!("{label}: jsdist presence mismatch: {a:?} vs {b:?}"),
+    }
+}
+
+#[test]
+fn fault_verb_arms_and_reports_over_the_wire() {
+    let _guard = FaultGuard::hold();
+    assert!(fault::compiled_in(), "this suite only builds with fault-inject");
+
+    let (addr, server) = spawn_server(ServiceConfig { shards: 1, ..Default::default() });
+    let mut client = NetClient::connect(addr.as_str()).expect("connect");
+
+    // arming echoes the failpoint and its normalized spec, and lands in the
+    // process-global registry this test shares with the server
+    let reply = client
+        .roundtrip(&Command::Fault { name: "wal.append".to_string(), spec: "every=3".to_string() })
+        .expect("FAULT round-trip");
+    assert_eq!(reply.get("fault"), Some("wal.append"), "{reply:?}");
+    assert_eq!(reply.get("spec"), Some("every=3"), "{reply:?}");
+    assert_eq!(fault::spec_of(Failpoint::WalAppend), FaultSpec::Every(3));
+
+    // unknown name and malformed spec are distinct, connection-preserving ERRs
+    for (name, spec, want) in [
+        ("wal.nope", "once", "unknown-failpoint"),
+        ("wal.append", "at=0", "bad-fault-spec"),
+        ("wal.append", "sometimes", "bad-fault-spec"),
+    ] {
+        match client
+            .roundtrip(&Command::Fault { name: name.to_string(), spec: spec.to_string() })
+            .expect("connection must survive a bad FAULT")
+        {
+            Reply::Err(reason) => assert!(reason.contains(want), "{name} {spec}: {reason:?}"),
+            ok => panic!("{name} {spec}: should ERR, got {ok:?}"),
+        }
+    }
+    // a bad FAULT must not have disturbed the armed schedule
+    assert_eq!(fault::spec_of(Failpoint::WalAppend), FaultSpec::Every(3));
+
+    // disarming over the wire
+    client
+        .roundtrip(&Command::Fault { name: "wal.append".to_string(), spec: "off".to_string() })
+        .expect("disarm");
+    assert_eq!(fault::spec_of(Failpoint::WalAppend), FaultSpec::Off);
+
+    client.shutdown_server().expect("shutdown");
+    server.join().expect("server thread").expect("server run");
+}
+
+#[test]
+fn wal_fault_under_fail_stop_refuses_writes_until_epoch_cut() {
+    let _guard = FaultGuard::hold();
+    let root = temp_root("failstop");
+    let (addr, server) = spawn_server(durable_cfg(&root, OnError::FailStop));
+    let mut client = NetClient::connect(addr.as_str()).expect("connect");
+
+    client.open("s", NODES).expect("open");
+    client.send_batch("s", &window(0)).expect("healthy batch");
+
+    fault::set(Failpoint::WalAppend, FaultSpec::Once);
+    client.send_batch("s", &window(1)).expect("batch is acked before the WAL latch lands");
+    // QUERY rides the same shard FIFO, so once it answers the faulted append
+    // has been processed and the fail-stop latch is set
+    client.query("s").expect("settle query").expect("live session");
+
+    let stats = client.roundtrip(&Command::Stats).expect("stats");
+    assert_eq!(stats.get("durability"), Some("failed"), "{stats:?}");
+
+    // every mutating verb is refused; reads still work
+    let err = client.send_batch("s", &window(2)).expect_err("write must be refused");
+    assert!(err.to_string().contains("durability-failed"), "{err:#}");
+    let err = client.send_event("s", &StreamEvent::Tick).expect_err("EV refused too");
+    assert!(err.to_string().contains("durability-failed"), "{err:#}");
+    client.query("s").expect("reads pass the gate").expect("live session");
+
+    // an epoch cut rotates every shard onto a fresh log and clears the latch
+    let (epoch, sessions) = client.epoch().expect("EPOCH restores the log");
+    assert_eq!(epoch, 1);
+    assert_eq!(sessions, 1);
+    let stats = client.roundtrip(&Command::Stats).expect("stats after cut");
+    assert_eq!(stats.get("durability"), Some("on"), "{stats:?}");
+    client.send_batch("s", &window(2)).expect("writes resume after the cut");
+
+    client.shutdown_server().expect("shutdown");
+    server.join().expect("server thread").expect("server run");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn degrade_keeps_scoring_bit_identically_and_fails_epoch_cuts() {
+    let _guard = FaultGuard::hold();
+    let root = temp_root("degrade");
+    let svc = ScoringService::start(durable_cfg(&root, OnError::Degrade));
+    let reference = ScoringService::start(ServiceConfig { shards: 1, ..Default::default() });
+    svc.open_session("t", Graph::new(NODES)).expect("open durable");
+    reference.open_session("t", Graph::new(NODES)).expect("open reference");
+    // settle the OPEN so the armed fault cannot land on its WAL record
+    svc.query("t").expect("settle").expect("live session");
+
+    for w in 0..5 {
+        if w == 2 {
+            fault::set(Failpoint::WalAppend, FaultSpec::Once);
+        }
+        svc.submit_batch("t", window(w)).expect("degraded service keeps accepting");
+        reference.submit_batch("t", window(w)).expect("reference batch");
+    }
+    let got = svc.query("t").expect("query").expect("live session");
+    let want = reference.query("t").expect("query").expect("live session");
+    assert_bits_equal(&got, &want, "scores must not notice the dropped WAL");
+    assert_eq!(svc.durability_status(), "degraded");
+
+    // a WAL-less shard cannot take an epoch barrier — the cut must fail
+    // loudly rather than commit a snapshot that promises durability
+    let err = svc.snapshot_epoch().expect_err("degraded cut must fail");
+    assert!(err.to_string().contains("no WAL writer"), "{err:#}");
+
+    svc.finish();
+    reference.finish();
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn degraded_status_surfaces_in_stats_and_metrics_on_the_wire() {
+    let _guard = FaultGuard::hold();
+    let root = temp_root("degrade_wire");
+    let (addr, server) = spawn_server(durable_cfg(&root, OnError::Degrade));
+    let mut client = NetClient::connect(addr.as_str()).expect("connect");
+
+    client.open("s", NODES).expect("open");
+    client.send_batch("s", &window(0)).expect("healthy batch");
+    let stats = client.roundtrip(&Command::Stats).expect("stats");
+    assert_eq!(stats.get("durability"), Some("on"), "{stats:?}");
+
+    // arm through the wire verb — the live-server path the chaos-smoke CI
+    // job scripts — then trip it and settle
+    client
+        .roundtrip(&Command::Fault { name: "wal.append".to_string(), spec: "once".to_string() })
+        .expect("arm over the wire");
+    client.send_batch("s", &window(1)).expect("batch that trips the latch");
+    client.query("s").expect("settle query").expect("live session");
+
+    let stats = client.roundtrip(&Command::Stats).expect("stats");
+    assert_eq!(stats.get("durability"), Some("degraded"), "{stats:?}");
+    let metrics = client.metrics().expect("metrics");
+    let get = |k: &str| -> u64 {
+        metrics.pairs.iter().find(|(key, _)| key == k).map(|(_, v)| *v).expect(k)
+    };
+    assert_eq!(get("durability_degraded"), 1);
+    assert_eq!(get("durability_failed"), 0);
+    assert!(get("fault_injected") >= 1, "the armed failpoint fired");
+
+    client.shutdown_server().expect("shutdown");
+    server.join().expect("server thread").expect("server run");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn injected_wal_faults_always_recover_a_valid_prefix() {
+    let _guard = FaultGuard::hold();
+    const TOTAL: usize = 6;
+    // exhaustive small matrix rather than sampling: every at=N position in
+    // (and past) the run, plus the periodic and persistent shapes
+    let mut schedules = vec![
+        FaultSpec::Once,
+        FaultSpec::Every(2),
+        FaultSpec::Every(3),
+        FaultSpec::After(2),
+    ];
+    schedules.extend((1..=TOTAL as u64 + 2).map(FaultSpec::At));
+    for (k, spec) in schedules.into_iter().enumerate() {
+        let root = temp_root(&format!("prefix{k}"));
+        disarm_all();
+        {
+            let svc = ScoringService::start(durable_cfg(&root, OnError::FailStop));
+            svc.open_session("t", Graph::new(NODES)).expect("open");
+            // settle the OPEN record first: the schedule under test is about
+            // window appends, and a session-less WAL recovers trivially
+            svc.query("t").expect("settle").expect("live session");
+            fault::set(Failpoint::WalAppend, spec);
+            for w in 0..TOTAL {
+                svc.submit_batch("t", window(w)).expect("submit under fault schedule");
+            }
+            svc.finish();
+        }
+        disarm_all();
+
+        let recovered = ScoringService::recover(durable_cfg(&root, OnError::FailStop))
+            .unwrap_or_else(|e| panic!("schedule {spec:?} must recover, got: {e:#}"));
+        let snap = recovered
+            .query("t")
+            .expect("query recovered")
+            .expect("the logged OPEN restores the session");
+        assert!(
+            snap.windows <= TOTAL,
+            "schedule {spec:?} replayed {} windows > {TOTAL} submitted",
+            snap.windows
+        );
+        assert_eq!(snap.pending_events, 0, "windows replay whole or not at all");
+
+        // the recovered prefix must match an unfaulted run of that many
+        // windows bit for bit
+        let reference = ScoringService::start(ServiceConfig { shards: 1, ..Default::default() });
+        reference.open_session("t", Graph::new(NODES)).expect("open reference");
+        for w in 0..snap.windows {
+            reference.submit_batch("t", window(w)).expect("reference batch");
+        }
+        let want = reference.query("t").expect("query").expect("live session");
+        assert_bits_equal(&snap, &want, &format!("prefix under {spec:?}"));
+        reference.finish();
+        recovered.finish();
+        std::fs::remove_dir_all(&root).ok();
+    }
+}
+
+#[test]
+fn retry_client_delivers_exactly_once_across_connection_faults() {
+    let _guard = FaultGuard::hold();
+    const TOTAL: usize = 6;
+
+    // unfaulted reference run, in process
+    let reference = ScoringService::start(ServiceConfig { shards: 1, ..Default::default() });
+    reference.open_session("t", Graph::new(NODES)).expect("open reference");
+    for w in 0..TOTAL {
+        reference.submit_batch("t", window(w)).expect("reference batch");
+    }
+    let want = reference.query("t").expect("query").expect("live session");
+    let want_report = reference.finish();
+
+    let (addr, server) = spawn_server(ServiceConfig { shards: 1, ..Default::default() });
+    let mut wires = 0usize;
+    for wire in [Wire::Text, Wire::Binary] {
+        wires += 1;
+        let mut client = RetryClient::connect(
+            addr.as_str(),
+            wire,
+            Some(Duration::from_secs(10)),
+            RetryPolicy::default(),
+        )
+        .expect("retry connect");
+        client.open("t", NODES).expect("reliable open");
+        for w in 0..TOTAL {
+            match w {
+                // kill the connection before the server reads the request:
+                // the write is lost pre-apply and must be resent
+                2 => fault::set(Failpoint::NetRead, FaultSpec::Once),
+                // kill the connection after apply, before the ack: the
+                // resend must be recognized as a duplicate and discarded
+                4 => fault::set(Failpoint::NetWrite, FaultSpec::Once),
+                _ => {}
+            }
+            let accepted = client.send_batch("t", &window(w)).expect("reliable batch");
+            assert_eq!(accepted, window(w).len(), "{wire}: window {w}");
+        }
+        let got = client.query("t").expect("query").expect("live session");
+        assert_bits_equal(&got, &want, &format!("{wire}: exactly-once replay"));
+        let errs = client.counts().clone();
+        assert!(
+            errs.retries >= 2,
+            "{wire}: two injected kills must surface as retries: {errs:?}"
+        );
+        assert!(errs.total() >= 2, "{wire}: transport errors were recorded: {errs:?}");
+        client.quit().expect("quit");
+    }
+
+    NetClient::connect(addr.as_str()).expect("connect").shutdown_server().expect("shutdown");
+    let report = server.join().expect("server thread").expect("server run");
+    // the exactly-once core: retries and duplicate resends land ZERO extra
+    // events — each wire's run applied exactly the reference event count
+    assert_eq!(
+        report.total_events,
+        want_report.total_events * wires,
+        "duplicate or lost events under connection faults"
+    );
+}
+
+#[test]
+fn parked_writes_shed_with_retry_after_and_retry_client_rides_it_out() {
+    let _guard = FaultGuard::hold();
+    let net_cfg = NetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        event_threads: 1,
+        shed_after_ms: 40,
+        ..Default::default()
+    };
+    let (addr, server) = spawn_server_with(
+        ServiceConfig { shards: 1, channel_capacity: 1, ..Default::default() },
+        net_cfg,
+    );
+    let mut client = NetClient::connect(addr.as_str()).expect("connect");
+    client.open("s", NODES).expect("open");
+    client.query("s").expect("settle open").expect("live session");
+
+    // injected backpressure on every submit: the parked command can never
+    // drain, so the shed budget must fire
+    fault::set(Failpoint::ShardSubmit, FaultSpec::Every(1));
+    let err = client.send_event("s", &StreamEvent::Tick).expect_err("must shed");
+    assert!(err.to_string().contains("retry-after 40"), "{err:#}");
+
+    // the connection survives shedding, and writes resume once the
+    // backpressure clears
+    fault::set(Failpoint::ShardSubmit, FaultSpec::Off);
+    client.send_event("s", &StreamEvent::Tick).expect("send after shed");
+
+    // a RetryClient treats retry-after on a send as wait-and-resend (OPEN is
+    // deliberately fail-fast, so open before arming): re-arm, clear the
+    // fault from another thread a beat later, and the delivery completes
+    let mut retry = RetryClient::connect(
+        addr.as_str(),
+        Wire::Text,
+        Some(Duration::from_secs(10)),
+        RetryPolicy::default(),
+    )
+    .expect("retry connect");
+    retry.open("r", NODES).expect("reliable open");
+    fault::set(Failpoint::ShardSubmit, FaultSpec::Every(1));
+    let clearer = std::thread::spawn(|| {
+        std::thread::sleep(Duration::from_millis(150));
+        fault::set(Failpoint::ShardSubmit, FaultSpec::Off);
+    });
+    retry.send_batch("r", &window(0)).expect("delivery survives the shed window");
+    clearer.join().expect("clearer thread");
+    let errs = retry.counts().clone();
+    assert!(
+        errs.server_err.contains_key("retry-after"),
+        "the shed replies were observed: {errs:?}"
+    );
+    retry.quit().expect("quit");
+
+    client.shutdown_server().expect("shutdown");
+    server.join().expect("server thread").expect("server run");
+}
+
+#[test]
+fn failed_epoch_cut_is_retryable_and_commits_cleanly() {
+    let _guard = FaultGuard::hold();
+    let root = temp_root("epoch_retry");
+    let svc = ScoringService::start(durable_cfg(&root, OnError::FailStop));
+    svc.open_session("t", Graph::new(NODES)).expect("open");
+    svc.submit_batch("t", window(0)).expect("batch");
+    svc.query("t").expect("settle").expect("live session");
+
+    fault::set(Failpoint::SnapRename, FaultSpec::Once);
+    let err = svc.snapshot_epoch().expect_err("injected rename fails the cut");
+    assert!(err.to_string().contains("injected fault: snap.rename"), "{err:#}");
+
+    // same epoch number, clean staging: the retry commits
+    let cut = svc.snapshot_epoch().expect("second cut succeeds");
+    assert_eq!(cut.epoch, 1);
+    assert_eq!(cut.sessions, 1);
+    svc.finish();
+
+    disarm_all();
+    let recovered = ScoringService::recover(durable_cfg(&root, OnError::FailStop))
+        .expect("recover from the retried epoch");
+    let snap = recovered.query("t").expect("query").expect("restored session");
+    assert_eq!(snap.windows, 1);
+    assert_eq!(snap.pending_events, 0);
+    recovered.finish();
+    std::fs::remove_dir_all(&root).ok();
+}

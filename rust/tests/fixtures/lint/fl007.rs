@@ -1,0 +1,27 @@
+//! FL007 fixture: raw `thread::sleep` in service/net code hides a
+//! wall-clock wait from shutdown signaling and fault schedules. Linted
+//! under a virtual `rust/src/net/` path; never compiled.
+
+use std::thread;
+use std::time::Duration;
+
+pub fn wait_for_peer() {
+    thread::sleep(Duration::from_millis(50));
+    std::thread::sleep(Duration::from_millis(5));
+    // finger-lint: allow(FL007): one-shot startup settle before the loop owns the socket
+    thread::sleep(Duration::from_millis(1));
+}
+
+pub fn polite_wait() {
+    crate::net::backoff::sleep(Duration::from_millis(1));
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Duration;
+
+    #[test]
+    fn sleeps_are_fine_in_tests() {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}

@@ -13,6 +13,7 @@ const FL003_SRC: &str = include_str!("fixtures/lint/fl003.rs");
 const FL004_SRC: &str = include_str!("fixtures/lint/fl004.rs");
 const FL005_SRC: &str = include_str!("fixtures/lint/fl005.rs");
 const FL006_SRC: &str = include_str!("fixtures/lint/fl006.rs");
+const FL007_SRC: &str = include_str!("fixtures/lint/fl007.rs");
 
 /// Lint a fixture under a virtual path; returns (diagnostics, waived count).
 fn lint_fixture(virtual_path: &str, src: &str) -> (Vec<lint::Diagnostic>, usize) {
@@ -114,6 +115,27 @@ fn fl006_golden_blocking_io_in_event_loop_region() {
     assert_eq!(rule_lines(&diags), expect);
     assert_eq!(waived, 1, "the teardown read_to_end carries a waiver");
     assert!(message_at(&diags, 14).contains("stalls every connection"));
+}
+
+#[test]
+fn fl007_golden_raw_sleep_in_service_net_code() {
+    let (diags, waived) = lint_fixture("rust/src/net/server.rs", FL007_SRC);
+    let expect = vec![
+        ("FL007", 9),  // thread::sleep(..)
+        ("FL007", 10), // std::thread::sleep(..)
+    ];
+    assert_eq!(rule_lines(&diags), expect);
+    assert_eq!(waived, 1, "the startup-settle sleep carries a waiver");
+    assert!(message_at(&diags, 9).contains("net::backoff"));
+}
+
+#[test]
+fn fl007_backoff_seam_and_out_of_zone_paths_are_quiet() {
+    // the backoff module is the one sanctioned home for the raw call
+    let (d, _) = lint_fixture("rust/src/net/backoff.rs", FL007_SRC);
+    assert!(d.is_empty(), "backoff.rs is the sleep seam: {d:?}");
+    let (d, _) = lint_fixture("rust/src/util/timer.rs", FL007_SRC);
+    assert!(d.is_empty(), "zone rule must not fire outside service//net/: {d:?}");
 }
 
 #[test]

@@ -524,10 +524,11 @@ fn slow_loris_byte_dribble_completes_on_both_wires() {
         let mut bytes = Vec::new();
         codec::write_binary_preamble(&mut bytes).expect("preamble");
         for cmd in [
-            Command::Open { id: "loris-bin".to_string(), nodes: 4 },
+            Command::Open { id: "loris-bin".to_string(), nodes: 4, epoch: None },
             Command::Event {
                 id: "loris-bin".to_string(),
                 ev: StreamEvent::EdgeDelta { i: 0, j: 1, dw: 1.0 },
+                seq: None,
             },
             Command::Query { id: "loris-bin".to_string() },
             Command::Quit,

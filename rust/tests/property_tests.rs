@@ -391,18 +391,37 @@ fn arb_wire_event(rng: &mut Pcg64, _size: usize) -> StreamEvent {
 
 fn arb_command(rng: &mut Pcg64, size: usize) -> Command {
     let id = arb_session_id(rng, size);
-    match rng.below(8) {
-        0 => Command::Open { id, nodes: rng.below((1 << 24) + 1) },
-        1 => Command::Event { id, ev: arb_wire_event(rng, size) },
+    match rng.below(9) {
+        0 => {
+            let nodes = rng.below((1 << 24) + 1);
+            let epoch = rng.bernoulli(0.5).then(|| rng.below(1 << 30) as u64);
+            Command::Open { id, nodes, epoch }
+        }
+        1 => {
+            let ev = arb_wire_event(rng, size);
+            let seq = rng.bernoulli(0.5).then(|| rng.below(1 << 30) as u64);
+            Command::Event { id, ev, seq }
+        }
         2 => {
             let n = rng.below(size.max(1) + 1);
             let events = (0..n).map(|_| arb_wire_event(rng, size)).collect();
-            Command::Batch { id, events }
+            let seq = rng.bernoulli(0.5).then(|| rng.below(1 << 30) as u64);
+            Command::Batch { id, events, seq }
         }
         3 => Command::Query { id },
         4 => Command::Close { id },
         5 => Command::Stats,
         6 => Command::Quit,
+        7 => {
+            // names/specs stay in the wire grammar (no whitespace) so the
+            // encode→decode roundtrip is exact
+            const NAMES: [&str; 4] = ["wal.append", "wal.fsync", "snap.rename", "net.read"];
+            const SPECS: [&str; 5] = ["off", "once", "at=3", "every=7", "after=2"];
+            Command::Fault {
+                name: NAMES[rng.below(NAMES.len())].to_string(),
+                spec: SPECS[rng.below(SPECS.len())].to_string(),
+            }
+        }
         _ => Command::Shutdown,
     }
 }
@@ -523,7 +542,7 @@ fn write_batch_is_byte_identical_to_write_command() {
             StreamEvent::Tick,
         ];
         let id = "tenant/1 %x";
-        let cmd = Command::Batch { id: id.to_string(), events: events.clone() };
+        let cmd = Command::Batch { id: id.to_string(), events: events.clone(), seq: None };
         let mut via_command = Vec::new();
         codec.write_command(&mut via_command, &cmd).unwrap();
         let mut via_batch = Vec::new();
@@ -544,7 +563,7 @@ fn max_size_batch_header_roundtrips_under_both_codecs() {
             StreamEvent::EdgeDelta { i, j: i + 1, dw: (k as f64).mul_add(1e-9, 0.5) }
         })
         .collect();
-    let cmd = Command::Batch { id: "max".to_string(), events };
+    let cmd = Command::Batch { id: "max".to_string(), events, seq: None };
     roundtrip_command(&mut TextCodec::new(), &cmd).expect("text at MAX_BATCH");
     roundtrip_command(&mut BinaryCodec::new(), &cmd).expect("binary at MAX_BATCH");
 
